@@ -1,0 +1,98 @@
+//! ASP-KAN-HAQ walkthrough (paper §3.1, Fig 3-6, Fig 10).
+//!
+//! Shows, for a concrete (G, K, n) point, what each phase of the
+//! quantization buys in hardware: the misalignment problem of conventional
+//! quantization, the shared SH-LUT of Alignment-Symmetry, the bit-field
+//! decode of PowerGap, and the resulting Fig 10 area/energy sweep.
+//!
+//! Needs no artifacts:
+//!
+//! ```sh
+//! cargo run --release --example asp_quant_demo
+//! ```
+
+use kan_edge::circuits::{cost_bx_path, fig10_sweep, BxPathDesign, Tech};
+use kan_edge::quant::{AspSpec, PactSpec, ShLut};
+
+fn main() -> kan_edge::Result<()> {
+    let (g, k, n) = (5u32, 3u32, 8u32);
+    let t = Tech::default();
+
+    // --- the conventional problem -----------------------------------------
+    let pact = PactSpec::new(g, k, n, 0.0, 1.0);
+    println!("== conventional (PACT-style) quantization, G={g} K={k} n={n} ==");
+    println!("  grids aligned: {}", pact.grids_aligned());
+    println!(
+        "  -> every one of the {} basis functions needs its own {}-entry LUT",
+        g + k,
+        pact.per_basis_lut_entries()
+    );
+
+    // --- phase 1: Alignment-Symmetry ---------------------------------------
+    let spec = AspSpec::build(g, k, n, 0.0, 1.0)?;
+    let lut = ShLut::build(&spec, n);
+    println!("\n== ASP phase 1: Alignment-Symmetry ==");
+    println!(
+        "  constrain codes to G*2^LD = {} (LD={}) -> zero grid offset",
+        spec.range(),
+        spec.ld
+    );
+    println!(
+        "  one shared LUT: {} rows x {} cols; hemi storage = {} entries ({}% of full)",
+        lut.full_rows(),
+        k + 1,
+        lut.stored_entries(),
+        100 * lut.stored_entries() / (lut.full_rows() * (k as usize + 1))
+    );
+
+    // --- phase 2: PowerGap --------------------------------------------------
+    println!("\n== ASP phase 2: PowerGap ==");
+    let code = spec.quantize(0.37);
+    let (j, l) = spec.decompose(code);
+    println!(
+        "  x=0.37 -> code {code} = (interval j={j}) << {} | (local l={l})",
+        spec.ld
+    );
+    println!(
+        "  decoders: one {}-bit + one {}-bit instead of one {n}-bit",
+        n - spec.ld,
+        spec.ld
+    );
+
+    // --- hardware cost of the three design points --------------------------
+    println!("\n== B(X) path cost at G={g} (area um2 / energy fJ per lookup) ==");
+    for design in [
+        BxPathDesign::Conventional,
+        BxPathDesign::AlignmentOnly,
+        BxPathDesign::AspFull,
+    ] {
+        let r = cost_bx_path(design, g, k, n, &t)?;
+        println!(
+            "  {:<16} area {:>8.1}  energy {:>7.2}  (lut {:>7.1}, mux {:>6.1}, dec {:>7.1})",
+            format!("{design:?}"),
+            r.total.area_um2,
+            r.total.energy_fj,
+            r.lut.area_um2,
+            r.mux.area_um2,
+            r.decoder.area_um2
+        );
+    }
+
+    // --- Fig 10 sweep --------------------------------------------------------
+    println!("\n== Fig 10 sweep (paper: avg 40.14x area, 5.59x energy) ==");
+    println!("  {:>4} {:>12} {:>14}", "G", "area-red(x)", "energy-red(x)");
+    let rows = fig10_sweep(&[8, 16, 32, 64], k, n, &t)?;
+    for r in &rows {
+        println!(
+            "  {:>4} {:>12.2} {:>14.2}",
+            r.g, r.area_reduction, r.energy_reduction
+        );
+    }
+    let nrows = rows.len() as f64;
+    println!(
+        "  avg: {:.2}x area, {:.2}x energy",
+        rows.iter().map(|r| r.area_reduction).sum::<f64>() / nrows,
+        rows.iter().map(|r| r.energy_reduction).sum::<f64>() / nrows
+    );
+    Ok(())
+}

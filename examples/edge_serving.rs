@@ -1,0 +1,113 @@
+//! End-to-end edge-serving driver (the EXPERIMENTS.md validation run).
+//!
+//! Loads the AOT-compiled KAN graph on the PJRT CPU runtime, stands up the
+//! full serving pipeline (admission → dynamic batcher → worker pool →
+//! backend), fires a closed-loop load of concurrent clients with real test
+//! samples, and reports latency percentiles, throughput, batch occupancy,
+//! and online accuracy. Then repeats the measurement on the rust digital
+//! backend for comparison.
+//!
+//! ```sh
+//! cargo run --release --example edge_serving [artifacts-dir] [num-requests]
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kan_edge::config::AppConfig;
+use kan_edge::coordinator::batcher::BatchPolicy;
+use kan_edge::coordinator::{build_backend, InferenceService, ServeOptions};
+use kan_edge::kan::checkpoint::{Dataset, Manifest};
+
+fn run_load(
+    name: &str,
+    backend: Arc<dyn kan_edge::coordinator::InferBackend>,
+    ds: &Dataset,
+    total_requests: usize,
+    clients: usize,
+) {
+    let opts = ServeOptions {
+        policy: BatchPolicy { max_batch: 32, deadline: Duration::from_micros(60) },
+        queue_depth: 4096,
+        workers: 2,
+    };
+    let svc = InferenceService::start(backend, opts);
+
+    let rows: Vec<(Vec<f32>, u32)> =
+        ds.test_rows().map(|(r, y)| (r.to_vec(), y)).collect();
+    let per_client = total_requests / clients;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let svc = svc.clone();
+        let rows = rows.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut correct = 0usize;
+            for i in 0..per_client {
+                let (x, y) = &rows[(c * per_client + i) % rows.len()];
+                match svc.infer(x.clone()) {
+                    Ok(logits) => {
+                        let pred = kan_edge::kan::argmax(
+                            &logits.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+                        );
+                        if pred == *y as usize {
+                            correct += 1;
+                        }
+                    }
+                    Err(e) => panic!("request failed: {e}"),
+                }
+            }
+            correct
+        }));
+    }
+    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall = t0.elapsed();
+    let r = svc.metrics.report();
+    println!("\n== {name} ==");
+    println!("  requests:     {}", r.requests);
+    println!("  wall time:    {:.2} s", wall.as_secs_f64());
+    println!(
+        "  throughput:   {:.0} req/s",
+        r.requests as f64 / wall.as_secs_f64()
+    );
+    println!("  latency p50:  {} us", r.latency_p50_us);
+    println!("  latency p99:  {} us", r.latency_p99_us);
+    println!("  mean batch:   {:.1}", r.mean_batch);
+    println!(
+        "  online acc:   {:.4}",
+        correct as f64 / (per_client * clients) as f64
+    );
+}
+
+fn main() -> kan_edge::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let dir = args.get(1).cloned().unwrap_or_else(|| "artifacts".into());
+    let total: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2000);
+
+    let mut cfg = AppConfig::default();
+    cfg.artifacts.dir = dir.clone();
+    let manifest = Manifest::load(&dir)?;
+    let ds = Dataset::load(&dir)?;
+    println!(
+        "edge serving driver: {} test samples, {} requests, model kan1",
+        ds.test_y.len(),
+        total
+    );
+
+    // PJRT backend: the AOT-compiled HLO graph (python never runs here)
+    cfg.server.backend = "pjrt".into();
+    let pjrt = build_backend(&cfg, &manifest, "kan1")?;
+    run_load("pjrt (AOT HLO on PJRT CPU)", pjrt, &ds, total, 8);
+
+    // rust digital-reference backend (integer dataflow)
+    cfg.server.backend = "digital".into();
+    let digital = build_backend(&cfg, &manifest, "kan1")?;
+    run_load("digital (rust integer dataflow)", digital, &ds, total, 8);
+
+    // analog ACIM simulator backend (IR-drop + noise + ADC, SAM mapping)
+    cfg.server.backend = "acim".into();
+    let acim = build_backend(&cfg, &manifest, "kan1")?;
+    run_load("acim (analog simulator, KAN-SAM)", acim, &ds, total.min(1000), 4);
+
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! KAN-NeuroSim co-search demo (paper §3.4, Fig 9).
+//!
+//! Evaluates every (G, TM-DV mode) candidate from the training sweep under
+//! three hardware budgets — unconstrained, the paper's "minimal" (KAN1-
+//! class) and "moderate" (KAN2-class) — and prints which design each budget
+//! admits, mirroring how the paper derives its KAN1/KAN2 design points.
+//!
+//! ```sh
+//! cargo run --release --example neurosim_search [artifacts-dir]
+//! ```
+
+use kan_edge::circuits::Tech;
+use kan_edge::kan::checkpoint::Manifest;
+use kan_edge::neurosim::{search, HwConstraints};
+
+fn show(budget_name: &str, constraints: &HwConstraints, manifest: &Manifest) {
+    let tech = Tech::default();
+    let out = search(&[17, 1, 14], &manifest.sweep, &[2, 3, 4], constraints, &tech)
+        .expect("search failed");
+    println!("\n== budget: {budget_name} ==");
+    println!(
+        "  {:>4} {:>4} {:>8} {:>11} {:>11} {:>9} {:>7}",
+        "G", "N", "acc", "area(mm2)", "energy(pJ)", "lat(ns)", "admit"
+    );
+    for c in &out.candidates {
+        println!(
+            "  {:>4} {:>4} {:>8.4} {:>11.4} {:>11.1} {:>9.0} {:>7}",
+            c.g,
+            c.tm_n,
+            c.accuracy,
+            c.report.area_mm2,
+            c.report.energy_pj,
+            c.report.latency_ns,
+            if c.admitted { "yes" } else { "no" }
+        );
+        if !c.admitted {
+            for v in &c.violations {
+                println!("        rejected: {v}");
+            }
+        }
+    }
+    match &out.best {
+        Some(b) => println!(
+            "  -> picks G={} (N={}), accuracy {:.4}, {} params",
+            b.g, b.tm_n, b.accuracy, b.report.num_params
+        ),
+        None => println!("  -> no admissible design point"),
+    }
+}
+
+fn main() -> kan_edge::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let manifest = Manifest::load(&dir)?;
+    println!(
+        "KAN-NeuroSim search over trained sweep: G = {:?}",
+        manifest.sweep.iter().map(|s| s.g).collect::<Vec<_>>()
+    );
+    show("none (accuracy only)", &HwConstraints::default(), &manifest);
+    show("minimal (KAN1-class)", &HwConstraints::minimal(), &manifest);
+    show("moderate (KAN2-class)", &HwConstraints::moderate(), &manifest);
+    Ok(())
+}

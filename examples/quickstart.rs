@@ -1,0 +1,64 @@
+//! Quickstart: load the trained KAN1 artifacts, run quantized inference on
+//! the test set through the rust digital-reference path, and show the
+//! ASP-KAN-HAQ geometry the hardware uses.
+//!
+//! Run after `make artifacts`:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use kan_edge::kan::checkpoint::{Dataset, Manifest};
+use kan_edge::kan::QuantKanModel;
+use kan_edge::quant::{AspSpec, ShLut};
+
+fn main() -> kan_edge::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // 1. What did the build path produce?
+    let manifest = Manifest::load(&dir)?;
+    println!("== artifacts ==");
+    let mut names: Vec<_> = manifest.models.keys().collect();
+    names.sort();
+    for name in &names {
+        let m = &manifest.models[*name];
+        println!(
+            "  {name}: dims {:?}, {} params, quantized test acc {:.4}",
+            m.dims,
+            m.num_params,
+            m.quant_test_acc.or(m.test_acc).unwrap_or(f64::NAN)
+        );
+    }
+
+    // 2. Load KAN1 (the paper's 279-parameter knot-theory model).
+    let model = QuantKanModel::load(format!("{dir}/kan1.weights.json"))?;
+    println!("\n== kan1 ==");
+    println!("  layers: {:?}, G={}, K={}", model.dims, model.g, model.k);
+
+    // 3. The quantization geometry ASP-KAN-HAQ picked for layer 0.
+    let spec: &AspSpec = &model.layers[0].spec;
+    let lut: &ShLut = &model.layers[0].lut;
+    println!(
+        "  layer0: range [{:.3}, {:.3}], LD={}, codes R={}, SH-LUT {} rows x {} cols",
+        spec.lo,
+        spec.hi,
+        spec.ld,
+        spec.range(),
+        lut.hemi.len(),
+        spec.k + 1
+    );
+
+    // 4. One inference, end to end.
+    let ds = Dataset::load(&dir)?;
+    let (row, label) = ds.test_rows().next().expect("non-empty test set");
+    let logits = model.forward(row);
+    println!("\n== single inference ==");
+    println!("  true class: {label}");
+    println!("  predicted:  {}", kan_edge::kan::argmax(&logits));
+
+    // 5. Accuracy over the whole artifact test split.
+    let acc = model.accuracy(&ds);
+    println!("\n== test accuracy (digital reference) ==");
+    println!("  {:.4} over {} samples", acc, ds.test_y.len());
+    Ok(())
+}

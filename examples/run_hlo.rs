@@ -1,0 +1,17 @@
+//! Debug utility: run an HLO text artifact with a ones input and print output.
+use kan_edge::runtime::PjrtEngine;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let (path, b, din, dout) = (
+        args[1].clone(),
+        args[2].parse::<usize>().unwrap(),
+        args[3].parse::<usize>().unwrap(),
+        args[4].parse::<usize>().unwrap(),
+    );
+    let engine = PjrtEngine::cpu().unwrap();
+    let exe = engine.load_hlo(&path, b, din, dout).unwrap();
+    let x: Vec<f32> = (0..b * din).map(|i| (i % 7) as f32 * 0.1 - 0.2).collect();
+    let y = exe.run(&x).unwrap();
+    println!("out: {:?}", &y[..y.len().min(20)]);
+}

@@ -1,0 +1,268 @@
+"""AOT build path: train the paper's models, quantize with ASP-KAN-HAQ,
+export HLO text + quantized weights + dataset into ``artifacts/``.
+
+Run once by ``make artifacts``::
+
+    python python/compile/aot.py --out artifacts
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs:
+  manifest.json               index of everything below + accuracies
+  dataset.json                test split + calibration sample
+  <model>.weights.json        quantized weights for the rust ACIM simulator
+  <model>.b{1,32}.hlo.txt     AOT-lowered inference graphs (PJRT backend)
+  sweep/kan_g{7,15,30,60}.weights.json   Fig 12 models
+  sweep/sweep.json            G-sweep manifest for KAN-NeuroSim (Fig 9/13)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import datasets
+from compile import model as M
+from compile import train as T
+
+BATCH_SIZES = (1, 32)
+SWEEP_GS = (7, 15, 30, 60)  # Fig 12 pairing with array sizes 128..1024
+KAN1 = M.KanConfig(dims=(17, 1, 14), g=5)  # 279 params, paper's KAN1
+KAN2 = M.KanConfig(dims=(17, 2, 14), g=32)  # 2232 params, paper's KAN2
+MLP = M.MlpConfig(dims=(17, 420, 420, 14))  # 190,274 params (paper: 190,214)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for the loader).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides big literals as ``constant({...})``, which the rust-side text
+    parser silently turns into zero tensors -- the whole model evaluates to
+    zeros (EXPERIMENTS.md lessons-learned).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_hlo(fn, batch: int, din: int, path: str) -> None:
+    spec = jax.ShapeDtypeStruct((batch, din), jnp.float32)
+    lowered = jax.jit(lambda x: (fn(x),)).lower(spec)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def kan_weights_payload(name: str, cfg: M.KanConfig, qk: M.QuantizedKan, extra: dict):
+    layers = []
+    for i, spec in enumerate(qk.specs):
+        layers.append(
+            {
+                "din": int(cfg.dims[i]),
+                "dout": int(cfg.dims[i + 1]),
+                "lo": spec.lo,
+                "hi": spec.hi,
+                "ld": spec.ld,
+                "sh_lut": qk.sh_luts[i].tolist(),
+                "coeff_q": np.asarray(qk.coeff_q[i]).astype(int).ravel().tolist(),
+                "coeff_scale": float(qk.coeff_scale[i]),
+                "wb": np.asarray(qk.wb[i]).astype(float).ravel().tolist(),
+            }
+        )
+    return {
+        "name": name,
+        "kind": "kan",
+        "dims": list(cfg.dims),
+        "g": cfg.g,
+        "k": cfg.k,
+        "n_bits": cfg.n_bits,
+        "num_params": cfg.num_params,
+        "layers": layers,
+        **extra,
+    }
+
+
+def mlp_weights_payload(name: str, cfg: M.MlpConfig, params, extra: dict):
+    layers = []
+    for i, p in enumerate(params):
+        layers.append(
+            {
+                "din": int(cfg.dims[i]),
+                "dout": int(cfg.dims[i + 1]),
+                "w": np.asarray(p["w"]).astype(float).ravel().tolist(),
+                "b": np.asarray(p["b"]).astype(float).ravel().tolist(),
+            }
+        )
+    return {
+        "name": name,
+        "kind": "mlp",
+        "dims": list(cfg.dims),
+        "num_params": cfg.num_params,
+        "layers": layers,
+        **extra,
+    }
+
+
+def eval_quantized(qk: M.QuantizedKan, x: np.ndarray, y: np.ndarray) -> float:
+    logits = M.quantized_forward(qk, jnp.asarray(x))
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == jnp.asarray(y)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--fast", action="store_true", help="cut epochs (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    os.makedirs(os.path.join(args.out, "sweep"), exist_ok=True)
+    t0 = time.time()
+
+    ep = 0.25 if args.fast else 1.0
+    data = datasets.generate(seed=args.seed)
+    manifest = {
+        "format": 1,
+        "seed": args.seed,
+        "dataset": {
+            "num_features": datasets.NUM_FEATURES,
+            "num_classes": datasets.NUM_CLASSES,
+            "train": int(data.train_x.shape[0]),
+            "val": int(data.val_x.shape[0]),
+            "test": int(data.test_x.shape[0]),
+        },
+        "models": {},
+        "sweep": [],
+        "batch_sizes": list(BATCH_SIZES),
+    }
+
+    with open(os.path.join(args.out, "dataset.json"), "w") as f:
+        json.dump(
+            {
+                "test_x": data.test_x.ravel().tolist(),
+                "test_y": data.test_y.tolist(),
+                "calib_x": data.train_x[:1000].ravel().tolist(),
+                "calib_y": data.train_y[:1000].tolist(),
+                "num_features": datasets.NUM_FEATURES,
+                "num_classes": datasets.NUM_CLASSES,
+            },
+            f,
+        )
+
+    test_x, test_y = data.test_x, data.test_y
+
+    # ---- KAN models (train float -> ASP-KAN-HAQ PTQ -> export) ----------
+    for name, cfg, epochs in (
+        ("kan1", KAN1, int(400 * ep)),
+        ("kan2", KAN2, int(300 * ep)),
+    ):
+        print(f"[aot] training {name} dims={cfg.dims} G={cfg.g} ...", flush=True)
+        res = T.train_kan(cfg, data, epochs=epochs, seed=args.seed)
+        qk = M.quantize_kan(res.params, res.ranges, cfg)
+        float_logits = M.kan_forward(
+            res.params, jnp.asarray(test_x), res.ranges, cfg
+        )
+        float_acc = T.accuracy(float_logits, jnp.asarray(test_y))
+        quant_acc = eval_quantized(qk, test_x, test_y)
+        print(
+            f"[aot] {name}: val={res.val_acc:.4f} test(float)={float_acc:.4f} "
+            f"test(quant)={quant_acc:.4f}",
+            flush=True,
+        )
+        payload = kan_weights_payload(
+            name, cfg, qk, {"float_test_acc": float_acc, "quant_test_acc": quant_acc}
+        )
+        with open(os.path.join(args.out, f"{name}.weights.json"), "w") as f:
+            json.dump(payload, f)
+        hlo_files = {}
+        for b in BATCH_SIZES:
+            path = os.path.join(args.out, f"{name}.b{b}.hlo.txt")
+            export_hlo(lambda x: M.quantized_forward(qk, x), b, cfg.dims[0], path)
+            hlo_files[str(b)] = os.path.basename(path)
+        manifest["models"][name] = {
+            "kind": "kan",
+            "dims": list(cfg.dims),
+            "g": cfg.g,
+            "k": cfg.k,
+            "num_params": cfg.num_params,
+            "val_acc": res.val_acc,
+            "float_test_acc": float_acc,
+            "quant_test_acc": quant_acc,
+            "weights": f"{name}.weights.json",
+            "hlo": hlo_files,
+        }
+
+    # ---- MLP baseline ----------------------------------------------------
+    print(f"[aot] training mlp dims={MLP.dims} ...", flush=True)
+    mres = T.train_mlp(MLP, data, epochs=int(250 * ep), seed=args.seed)
+    mlp_test_acc = T.accuracy(
+        M.mlp_forward(mres.params, jnp.asarray(test_x)), jnp.asarray(test_y)
+    )
+    print(f"[aot] mlp: val={mres.val_acc:.4f} test={mlp_test_acc:.4f}", flush=True)
+    with open(os.path.join(args.out, "mlp.weights.json"), "w") as f:
+        json.dump(
+            mlp_weights_payload("mlp", MLP, mres.params, {"test_acc": mlp_test_acc}), f
+        )
+    hlo_files = {}
+    for b in BATCH_SIZES:
+        path = os.path.join(args.out, f"mlp.b{b}.hlo.txt")
+        export_hlo(lambda x: M.mlp_forward(mres.params, x), b, MLP.dims[0], path)
+        hlo_files[str(b)] = os.path.basename(path)
+    manifest["models"]["mlp"] = {
+        "kind": "mlp",
+        "dims": list(MLP.dims),
+        "num_params": MLP.num_params,
+        "val_acc": mres.val_acc,
+        "test_acc": mlp_test_acc,
+        "weights": "mlp.weights.json",
+        "hlo": hlo_files,
+    }
+
+    # ---- Fig 12 G-sweep (17x1x14, G = 7/15/30/60 <-> arrays 128..1024) ---
+    for g in SWEEP_GS:
+        cfg = M.KanConfig(dims=(17, 1, 14), g=g)
+        print(f"[aot] sweep: training G={g} ...", flush=True)
+        res = T.train_kan(cfg, data, epochs=int(250 * ep), seed=args.seed)
+        qk = M.quantize_kan(res.params, res.ranges, cfg)
+        quant_acc = eval_quantized(qk, test_x, test_y)
+        payload = kan_weights_payload(
+            f"kan_g{g}", cfg, qk, {"quant_test_acc": quant_acc}
+        )
+        fname = f"sweep/kan_g{g}.weights.json"
+        with open(os.path.join(args.out, fname), "w") as f:
+            json.dump(payload, f)
+        manifest["sweep"].append(
+            {
+                "g": g,
+                "num_params": cfg.num_params,
+                "val_acc": res.val_acc,
+                "quant_test_acc": quant_acc,
+                "weights": fname,
+            }
+        )
+        print(f"[aot] sweep G={g}: val={res.val_acc:.4f} quant={quant_acc:.4f}")
+
+    with open(os.path.join(args.out, "sweep", "sweep.json"), "w") as f:
+        json.dump(manifest["sweep"], f, indent=2)
+
+    manifest["build_seconds"] = round(time.time() - t0, 1)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] done in {manifest['build_seconds']}s -> {args.out}/", flush=True)
+
+
+if __name__ == "__main__":
+    main()

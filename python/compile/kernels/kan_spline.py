@@ -1,0 +1,139 @@
+"""Pallas kernels for the quantized KAN layer (the hot spot, L1).
+
+Hardware adaptation (DESIGN.md section 1): the paper's circuit evaluates
+B(X) with an SH-LUT + decoder/MUX network and does the ci' MAC on an RRAM
+crossbar. On a TPU-shaped target the same decomposition becomes:
+
+* SH-LUT              -> small f32 table resident in VMEM
+* (n-D)-bit decoder   -> vectorized ``x_q >> LD``
+* D-bit decoder       -> vectorized ``x_q & (2**LD - 1)``
+* TG-MUX/DEMUX routing-> one-hot compare + tiny matmul (LUT row gather) and
+                         iota-compare scatter of the K+1 active basis values
+                         into a dense (G+K) activation row
+* RRAM crossbar MAC   -> one [B, Din*(G+K)] @ [Din*(G+K), Dout] matmul that
+                         maps onto the MXU systolic array
+
+Gathers are rewritten as one-hot matmuls on purpose: scatter/gather is
+hostile to the MXU, dense matmul is what it is built for -- the same
+cheap-routing / wide-MAC trade the paper makes in silicon.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT client cannot run
+Mosaic custom-calls, and the interpret path produces plain HLO that the rust
+runtime executes. Correctness vs ``ref.py`` is enforced by pytest+hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.quant import AspQuantSpec
+
+
+def _pick_block(batch: int, want: int = 128) -> int:
+    """Largest divisor of ``batch`` that is <= ``want`` (grid must tile exactly)."""
+    b = min(batch, want)
+    while batch % b != 0:
+        b -= 1
+    return b
+
+
+def _spline_body(xq, lut, coeff, spec: AspQuantSpec):
+    """Shared kernel body: quantized codes -> spline MAC output.
+
+    xq:    i32 [B, Din]            input codes in [0, R-1]
+    lut:   f32 [2**LD, K+1]        shared (full) LUT
+    coeff: f32 [Din*(G+K), Dout]   ci' laid out for a single wide matmul
+    """
+    lvl = spec.levels_per_interval
+    nb = spec.num_basis
+    b, din = xq.shape
+
+    j = jax.lax.shift_right_logical(xq, spec.ld)  # global: interval index
+    l = jax.lax.bitwise_and(xq, lvl - 1)  # local: SH-LUT row
+
+    # LUT row gather as one-hot matmul: [B*Din, lvl] @ [lvl, K+1]
+    onehot = (l.reshape(-1, 1) == jax.lax.iota(jnp.int32, lvl)[None, :]).astype(
+        jnp.float32
+    )
+    vals = onehot @ lut  # [B*Din, K+1]
+    vals = vals.reshape(b, din, spec.k + 1)
+
+    # Scatter the K+1 active basis values into a dense (G+K) activation row:
+    # act[b, i, j+t] = vals[b, i, t]. K is tiny and static, so unroll over t.
+    giota = jax.lax.iota(jnp.int32, nb)[None, None, :]  # [1, 1, G+K]
+    act = jnp.zeros((b, din, nb), jnp.float32)
+    for t in range(spec.k + 1):
+        mask = (giota == (j + t)[..., None]).astype(jnp.float32)
+        act = act + vals[..., t][..., None] * mask
+
+    # The wide MAC: this is the crossbar / MXU part.
+    return act.reshape(b, din * nb) @ coeff
+
+
+def _spline_mac_kernel(xq_ref, lut_ref, coeff_ref, o_ref, *, spec: AspQuantSpec):
+    o_ref[...] = _spline_body(xq_ref[...], lut_ref[...], coeff_ref[...], spec)
+
+
+def spline_mac(xq, lut, coeff, spec: AspQuantSpec, *, block: int = 128):
+    """Quantized spline MAC: y[b,o] = sum_i sum_t LUT[l,t] * ci'[i, j+t, o].
+
+    xq:    i32 [B, Din], lut: f32 [2**LD, K+1],
+    coeff: f32 [Din, G+K, Dout] (reshaped internally). Returns f32 [B, Dout].
+    """
+    batch, din = xq.shape
+    dout = coeff.shape[-1]
+    nb = spec.num_basis
+    coeff2d = coeff.reshape(din * nb, dout)
+    blk = _pick_block(batch, block)
+    grid = (batch // blk,)
+    return pl.pallas_call(
+        functools.partial(_spline_mac_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, din), lambda i: (i, 0)),
+            pl.BlockSpec(lut.shape, lambda i: (0, 0)),
+            pl.BlockSpec(coeff2d.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dout), jnp.float32),
+        interpret=True,
+    )(xq, lut, coeff2d)
+
+
+def _kan_layer_kernel(xq_ref, lut_ref, coeff_ref, wb_ref, o_ref, *, spec: AspQuantSpec):
+    """Fused KAN layer: residual ReLU path + spline MAC in one kernel."""
+    xq = xq_ref[...]
+    spline = _spline_body(xq, lut_ref[...], coeff_ref[...], spec)
+    # Residual b(x) = ReLU(x) on the dequantized value (w_b path of eq. 1).
+    x = spec.lo + xq.astype(jnp.float32) * spec.step
+    o_ref[...] = spline + jnp.maximum(x, 0.0) @ wb_ref[...]
+
+
+def kan_layer(xq, lut, coeff, wb, spec: AspQuantSpec, *, block: int = 128):
+    """Fused quantized KAN layer.
+
+    xq: i32 [B, Din]; lut: f32 [2**LD, K+1]; coeff: f32 [Din, G+K, Dout];
+    wb: f32 [Din, Dout]. Returns f32 [B, Dout] (pre-requantization).
+    """
+    batch, din = xq.shape
+    dout = coeff.shape[-1]
+    coeff2d = coeff.reshape(din * spec.num_basis, dout)
+    blk = _pick_block(batch, block)
+    grid = (batch // blk,)
+    return pl.pallas_call(
+        functools.partial(_kan_layer_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, din), lambda i: (i, 0)),
+            pl.BlockSpec(lut.shape, lambda i: (0, 0)),
+            pl.BlockSpec(coeff2d.shape, lambda i: (0, 0)),
+            pl.BlockSpec(wb.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dout), jnp.float32),
+        interpret=True,
+    )(xq, lut, coeff2d, wb)

@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracle for the KAN spline kernels.
+
+Evaluates the B-spline basis with the textbook Cox-de Boor recursion on a
+*uniform extended* knot grid -- the construction the original KAN paper uses
+and the one that makes every basis function a translate of the cardinal
+B-spline (the property ASP-KAN-HAQ exploits for LUT sharing).
+
+Everything here is the slow-but-obviously-correct path; the Pallas kernel in
+`kan_spline.py` must match it bit-for-bit up to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cardinal_bspline(s, k: int):
+    """Cardinal B-spline C_k(s) of degree ``k`` with support [0, k+1].
+
+    Cox-de Boor on integer knots 0,1,...,k+1. Vectorized over ``s``.
+    """
+    s = jnp.asarray(s, jnp.float32)
+    # degree-0 pieces: N_j^0(s) = 1 on [j, j+1), j = 0..k
+    js = jnp.arange(k + 1, dtype=jnp.float32)
+    n = jnp.where((s[..., None] >= js) & (s[..., None] < js + 1.0), 1.0, 0.0)
+    for d in range(1, k + 1):
+        # N_j^d(s) = (s-j)/d * N_j^{d-1} + (j+d+1-s)/d * N_{j+1}^{d-1}
+        js = jnp.arange(k + 1 - d, dtype=jnp.float32)
+        left = (s[..., None] - js) / d * n[..., : k + 1 - d]
+        right = (js + d + 1.0 - s[..., None]) / d * n[..., 1 : k + 2 - d]
+        n = left + right
+    return n[..., 0]
+
+
+def basis_functions(z, g: int, k: int):
+    """All ``g + k`` basis values at grid coordinate ``z`` in [0, g].
+
+    ``z = (x - lo) / h`` where h is the knot spacing. Basis ``i`` is the
+    cardinal spline translated so its support covers grid intervals
+    ``[i-k, i]``: B_i(z) = C_k(z - i + k).
+
+    Returns shape ``z.shape + (g + k,)``.
+    """
+    z = jnp.asarray(z, jnp.float32)
+    i = jnp.arange(g + k, dtype=jnp.float32)
+    return cardinal_bspline(z[..., None] - i + k, k)
+
+
+def spline_mac_ref(z, coeff, g: int, k: int):
+    """Reference spline MAC: y[b, o] = sum_i sum_j B_j(z[b,i]) * coeff[i,j,o].
+
+    z:     f32 [B, Din]   grid coordinates in [0, g]
+    coeff: f32 [Din, g+k, Dout]
+    """
+    basis = basis_functions(z, g, k)  # [B, Din, g+k]
+    return jnp.einsum("big,igo->bo", basis, coeff)
+
+
+def kan_layer_ref(x, coeff, wb, lo, hi, g: int, k: int):
+    """Reference (float, un-quantized) KAN layer.
+
+    phi_{i->o}(x_i) = wb[i,o] * relu(x_i) + sum_j coeff[i,j,o] * B_j(x_i)
+    y_o = sum_i phi_{i->o}(x_i)
+
+    Inputs outside [lo, hi] are clamped to the grid (hardware behaviour).
+    """
+    h = (hi - lo) / g
+    z = jnp.clip((x - lo) / h, 0.0, float(g))
+    return jnp.maximum(x, 0.0) @ wb + spline_mac_ref(z, coeff, g, k)

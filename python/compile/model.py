@@ -1,0 +1,170 @@
+"""L2: JAX model definitions -- KAN (float training + quantized inference
+graphs) and the traditional-MLP baseline of Fig 13.
+
+The float forward is the differentiable training path (exact Cox-de Boor
+splines from ``kernels/ref.py``). The quantized forward is the *inference*
+graph that gets AOT-lowered to HLO text for the rust runtime: it routes every
+layer through the fused Pallas kernel (``kernels/kan_spline.py``) and
+requantizes activations between layers, mirroring the hardware dataflow of
+DESIGN.md section 6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import quant
+from compile.kernels import kan_spline, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class KanConfig:
+    """Architecture of a KAN: ``dims`` = [in, hidden..., out], grid G, degree K."""
+
+    dims: tuple
+    g: int
+    k: int = 3
+    n_bits: int = 8
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.dims) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return sum(a * b for a, b in zip(self.dims[:-1], self.dims[1:]))
+
+    @property
+    def num_params(self) -> int:
+        """Paper's parameter count: (G + K + 1) per edge (ci' plus w_b)."""
+        return self.num_edges * (self.g + self.k + 1)
+
+
+def init_kan(cfg: KanConfig, key) -> list:
+    """One dict per layer: coeff [Din, G+K, Dout], wb [Din, Dout]."""
+    params = []
+    nb = cfg.g + cfg.k
+    for din, dout in zip(cfg.dims[:-1], cfg.dims[1:]):
+        key, k1, k2 = jax.random.split(key, 3)
+        params.append(
+            {
+                "coeff": 0.1 * jax.random.normal(k1, (din, nb, dout), jnp.float32),
+                "wb": jax.random.normal(k2, (din, dout), jnp.float32)
+                * jnp.sqrt(2.0 / din),
+            }
+        )
+    return params
+
+
+def kan_forward(params: Sequence[dict], x, ranges: Sequence[tuple], cfg: KanConfig):
+    """Float (training) forward. ``ranges[i] = (lo, hi)`` is layer i's grid span."""
+    h = x
+    for p, (lo, hi) in zip(params, ranges):
+        h = ref.kan_layer_ref(h, p["coeff"], p["wb"], lo, hi, cfg.g, cfg.k)
+    return h
+
+
+def calibrate_ranges(params, x, cfg: KanConfig, margin: float = 0.05):
+    """Run the float forward, record each layer's input span (+margin).
+
+    The spans become the knot-grid ranges of the quantized model; the margin
+    absorbs activation drift between calibration and test data.
+    """
+    ranges = []
+    h = x
+    for p in params:
+        lo = float(jnp.min(h))
+        hi = float(jnp.max(h))
+        pad = margin * (hi - lo) + 1e-6
+        ranges.append((lo - pad, hi + pad))
+        h = ref.kan_layer_ref(h, p["coeff"], p["wb"], lo - pad, hi + pad, cfg.g, cfg.k)
+    return ranges
+
+
+@dataclasses.dataclass
+class QuantizedKan:
+    """Post-training-quantized KAN: everything the hardware needs.
+
+    Per layer: an ASP spec (grid geometry), the quantized SH-LUT, int8 ci'
+    with scale, and the float residual weights w_b (the w_b*ReLU path is a
+    standard crossbar MAC; it is quantized separately on the rust side).
+    """
+
+    cfg: KanConfig
+    specs: list  # AspQuantSpec per layer
+    sh_luts: list  # int64 [2**(LD-1)+1, K+1] per layer (8-bit codes)
+    coeff_q: list  # int64 [Din, G+K, Dout] per layer
+    coeff_scale: list  # float per layer
+    wb: list  # f32 [Din, Dout] per layer
+
+    def lut_dequant(self, i: int) -> np.ndarray:
+        full_q = quant.expand_sh_lut(self.specs[i], self.sh_luts[i])
+        return quant.dequantize_lut(full_q, self.cfg.n_bits).astype(np.float32)
+
+
+def quantize_kan(params, ranges, cfg: KanConfig) -> QuantizedKan:
+    """ASP-KAN-HAQ post-training quantization of a trained float KAN."""
+    specs, sh_luts, cqs, scales, wbs = [], [], [], [], []
+    for p, (lo, hi) in zip(params, ranges):
+        spec = quant.AspQuantSpec.build(cfg.g, cfg.k, cfg.n_bits, lo, hi)
+        specs.append(spec)
+        sh_luts.append(quant.quantize_lut(quant.build_sh_lut(spec), cfg.n_bits))
+        cq, sc = quant.quantize_coeff(np.asarray(p["coeff"]), bits=8)
+        cqs.append(cq)
+        scales.append(sc)
+        wbs.append(np.asarray(p["wb"], dtype=np.float32))
+    return QuantizedKan(cfg, specs, sh_luts, cqs, scales, wbs)
+
+
+def quantized_forward(qk: QuantizedKan, x):
+    """Inference graph lowered to HLO: fused Pallas layers + requantization."""
+    h = x
+    for i, spec in enumerate(qk.specs):
+        xq = quant.quantize(spec, h)
+        lut = jnp.asarray(qk.lut_dequant(i))
+        coeff = jnp.asarray(qk.coeff_q[i], jnp.float32) * qk.coeff_scale[i]
+        h = kan_spline.kan_layer(xq, lut, coeff, jnp.asarray(qk.wb[i]), spec)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Traditional MLP baseline (Fig 13): 17 x 420 x 420 x 14 = 190,274 params,
+# matching the paper's 190,214 +-0.03%.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    dims: tuple
+
+    @property
+    def num_params(self) -> int:
+        return sum((a + 1) * b for a, b in zip(self.dims[:-1], self.dims[1:]))
+
+
+def init_mlp(cfg: MlpConfig, key) -> list:
+    params = []
+    for din, dout in zip(cfg.dims[:-1], cfg.dims[1:]):
+        key, k1 = jax.random.split(key)
+        params.append(
+            {
+                "w": jax.random.normal(k1, (din, dout), jnp.float32)
+                * jnp.sqrt(2.0 / din),
+                "b": jnp.zeros((dout,), jnp.float32),
+            }
+        )
+    return params
+
+
+def mlp_forward(params, x):
+    h = x
+    for i, p in enumerate(params):
+        h = h @ p["w"] + p["b"]
+        if i + 1 < len(params):
+            h = jnp.maximum(h, 0.0)
+    return h

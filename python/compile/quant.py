@@ -1,0 +1,239 @@
+"""ASP-KAN-HAQ: Alignment-Symmetry and PowerGap KAN hardware-aware quantization.
+
+Implements the two phases of Section 3.1 of the paper:
+
+* Phase 1 (Alignment-Symmetry): the quantization grid is constrained to an
+  integer multiple of the knot grid, ``G * L <= 2**n`` (eq. 4). With zero
+  offset between the two grids, every B_i(x) sees the *same* set of quantized
+  abscissae inside its support, so one LUT can be shared by all G+K basis
+  functions. Uniform B-splines are symmetric, which halves the shared LUT:
+  the Sharable-Hemi LUT (SH-LUT).
+
+* Phase 2 (PowerGap): restrict ``L = 2**LD`` (eq. 5/6) so that the global
+  interval index and the local offset become bit-field extractions::
+
+      j = x_q >> LD        # which knot interval -> which B(X) are active
+      l = x_q &  (2**LD-1) # position inside the interval -> SH-LUT row
+
+  which is what lets the paper replace one n-bit decoder with an
+  (n-D)-bit + D-bit pair and collapse the TG-MUX tree.
+
+The same math is implemented in ``rust/src/quant`` (the authoritative
+hardware-path implementation); this module is the training/export side and
+the oracle the Pallas kernel is tested against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+
+def solve_ld(g: int, n: int) -> int:
+    """Largest LD with ``G * 2**LD <= 2**n`` (eq. 6). Requires g <= 2**n."""
+    if g < 1:
+        raise ValueError(f"grid size must be >= 1, got {g}")
+    if g > 2**n:
+        raise ValueError(f"G={g} does not fit in {n}-bit input precision")
+    ld = int(math.floor(math.log2((2**n) / g)))
+    # guard against float edge cases: enforce the inequality exactly
+    while g * 2 ** (ld + 1) <= 2**n:
+        ld += 1
+    while g * 2**ld > 2**n:
+        ld -= 1
+    return ld
+
+
+@dataclasses.dataclass(frozen=True)
+class AspQuantSpec:
+    """Quantization geometry for one KAN layer input under ASP-KAN-HAQ."""
+
+    g: int  # knot grid size (number of intervals)
+    k: int  # B-spline degree
+    n_bits: int  # input precision
+    ld: int  # PowerGap exponent, L = 2**ld
+    lo: float  # float value mapped to code 0
+    hi: float  # float value mapped to code R (one past the last code)
+
+    @property
+    def levels_per_interval(self) -> int:
+        return 1 << self.ld
+
+    @property
+    def range(self) -> int:
+        """Number of input codes R = G * 2**LD (codes are 0..R-1)."""
+        return self.g * (1 << self.ld)
+
+    @property
+    def step(self) -> float:
+        """Quantization step delta = (hi - lo) / R."""
+        return (self.hi - self.lo) / self.range
+
+    @property
+    def knot_spacing(self) -> float:
+        return (self.hi - self.lo) / self.g
+
+    @property
+    def num_basis(self) -> int:
+        return self.g + self.k
+
+    @classmethod
+    def build(cls, g: int, k: int, n_bits: int, lo: float, hi: float) -> "AspQuantSpec":
+        if not hi > lo:
+            raise ValueError(f"empty input range [{lo}, {hi}]")
+        return cls(g=g, k=k, n_bits=n_bits, ld=solve_ld(g, n_bits), lo=lo, hi=hi)
+
+
+def quantize(spec: AspQuantSpec, x):
+    """Float -> input code in [0, R-1] (round-to-nearest, saturating)."""
+    q = jnp.round((jnp.asarray(x) - spec.lo) / spec.step)
+    return jnp.clip(q, 0, spec.range - 1).astype(jnp.int32)
+
+
+def dequantize(spec: AspQuantSpec, xq):
+    """Input code -> float on the aligned grid (code k maps to lo + k*step)."""
+    return spec.lo + xq.astype(jnp.float32) * spec.step
+
+
+def grid_coord(spec: AspQuantSpec, xq):
+    """Code -> grid coordinate z in [0, G): exact because of alignment."""
+    return xq.astype(jnp.float32) / float(spec.levels_per_interval)
+
+
+def build_lut(spec: AspQuantSpec) -> np.ndarray:
+    """Full shared LUT, shape [2**LD, K+1].
+
+    Row ``l`` holds the K+1 *active* basis values for any code with local
+    offset ``l``: for a code in interval ``j``, the active bases are
+    ``B_{j+t}, t = 0..K`` and ``B_{j+t}(x) = C_K(K - t + l / 2**LD)``.
+
+    Because of Alignment-Symmetry this one table serves every interval of
+    every B(X) -- the whole point of phase 1.
+    """
+    lvl = spec.levels_per_interval
+    u = np.arange(lvl, dtype=np.float32) / lvl  # local fraction
+    t = np.arange(spec.k + 1, dtype=np.float32)
+    s = spec.k - t[None, :] + u[:, None]  # [lvl, K+1]
+    return np.asarray(ref.cardinal_bspline(jnp.asarray(s), spec.k), dtype=np.float32)
+
+
+def build_sh_lut(spec: AspQuantSpec) -> np.ndarray:
+    """Sharable-Hemi LUT: only rows 0..2**(LD-1), shape [2**(LD-1)+1, K+1].
+
+    The symmetry C_K(s) = C_K(K+1-s) gives
+    ``LUT[l, t] = LUT[(2**LD - l) % 2**LD, K-1-t]`` so the upper half of the
+    full LUT mirrors the lower half -- the paper's 50% LUT size reduction.
+    """
+    full = build_lut(spec)
+    half = spec.levels_per_interval // 2
+    return full[: half + 1].copy()
+
+
+def expand_sh_lut(spec: AspQuantSpec, sh: np.ndarray) -> np.ndarray:
+    """Reconstruct the full LUT from an SH-LUT (what the MUX network does)."""
+    lvl = spec.levels_per_interval
+    full = np.zeros((lvl, spec.k + 1), dtype=sh.dtype)
+    half = lvl // 2
+    full[: half + 1] = sh
+    for l in range(half + 1, lvl):
+        full[l] = sh[lvl - l][::-1]
+    # row 0 of the mirror pairs with itself reversed; consistency is a test
+    return full
+
+
+def quantize_lut(lut: np.ndarray, bits: int = 8) -> np.ndarray:
+    """LUT entries to unsigned fixed point (B values are in [0, 1])."""
+    scale = (1 << bits) - 1
+    return np.clip(np.round(lut * scale), 0, scale).astype(np.int64)
+
+
+def dequantize_lut(lut_q: np.ndarray, bits: int = 8) -> np.ndarray:
+    return lut_q.astype(np.float32) / float((1 << bits) - 1)
+
+
+def decompose(spec: AspQuantSpec, xq):
+    """PowerGap bit-field split: code -> (global interval j, local offset l)."""
+    xq = jnp.asarray(xq)
+    j = jnp.right_shift(xq, spec.ld)
+    l = jnp.bitwise_and(xq, spec.levels_per_interval - 1)
+    return j, l
+
+
+def quantize_coeff(c: np.ndarray, bits: int = 8):
+    """Symmetric per-tensor int quantization of the spline coefficients ci'.
+
+    Returns (int array in [-(2^{b-1}-1), 2^{b-1}-1], scale). ci' is what gets
+    programmed into the RRAM cells; 8-bit per the paper.
+    """
+    qmax = (1 << (bits - 1)) - 1
+    amax = float(np.max(np.abs(c))) if c.size else 0.0
+    scale = amax / qmax if amax > 0 else 1.0
+    cq = np.clip(np.round(c / scale), -qmax, qmax).astype(np.int64)
+    return cq, scale
+
+
+# ---------------------------------------------------------------------------
+# Conventional-quantization baseline (PACT-style), for the Fig 10 comparison.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PactQuantSpec:
+    """PACT-style conventional quantization: clipping range [0, alpha] split
+    into 2**n uniform steps with *no* relationship to the knot grid.
+
+    The quantization step is generally incommensurate with the knot spacing,
+    so the quantized abscissae fall at *different* offsets inside different
+    knot intervals -> every B_i(x) needs its own LUT (the paper's Fig 2/3
+    problem). We model that faithfully: per-basis LUTs over each basis'
+    support.
+    """
+
+    g: int
+    k: int
+    n_bits: int
+    lo: float
+    alpha: float  # PACT clipping parameter (hi)
+
+    @property
+    def range(self) -> int:
+        return 1 << self.n_bits
+
+    @property
+    def step(self) -> float:
+        return (self.alpha - self.lo) / self.range
+
+    def quantize(self, x):
+        q = jnp.round((jnp.asarray(x) - self.lo) / self.step)
+        return jnp.clip(q, 0, self.range - 1).astype(jnp.int32)
+
+    def per_basis_lut_entries(self) -> int:
+        """Quantized points inside one basis' support: (K+1)/G of the range."""
+        return int(math.ceil((self.k + 1) * self.range / self.g))
+
+    def build_per_basis_luts(self) -> np.ndarray:
+        """LUT for each basis i: B_i at every code in its support.
+
+        Shape [G+K, ceil((K+1) * 2**n / G)]. Misalignment means these tables
+        genuinely differ between bases (asserted in tests), which is why the
+        conventional design cannot share them.
+        """
+        entries = self.per_basis_lut_entries()
+        h = (self.alpha - self.lo) / self.g
+        out = np.zeros((self.g + self.k, entries), dtype=np.float32)
+        codes = np.arange(self.range, dtype=np.float32)
+        x = self.lo + codes * self.step
+        z = (x - self.lo) / h  # grid coordinate of every code
+        basis = np.asarray(ref.basis_functions(jnp.asarray(z), self.g, self.k))
+        for i in range(self.g + self.k):
+            # support of basis i in grid coords is [i-k, i+1]
+            zlo, zhi = i - self.k, i + 1
+            mask = (z >= zlo) & (z < zhi)
+            vals = basis[mask, i]
+            out[i, : min(entries, vals.size)] = vals[:entries]
+        return out

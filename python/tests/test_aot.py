@@ -1,0 +1,56 @@
+"""AOT export tests: HLO text integrity and weight payload schema."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model as M, quant
+
+
+def test_hlo_text_has_no_elided_constants(tmp_path):
+    """The HLO printer must not abbreviate weights as `constant({...})` —
+    the rust parser would zero-fill them (the all-zeros-output bug)."""
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)).astype(np.float32))
+    lowered = jax.jit(lambda x: (x @ w,)).lower(
+        jax.ShapeDtypeStruct((1, 64), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "{...}" not in text
+    assert "HloModule" in text
+
+
+def test_export_hlo_writes_parseable_header(tmp_path):
+    path = os.path.join(tmp_path, "m.hlo.txt")
+    aot.export_hlo(lambda x: x * 2.0, batch=4, din=3, path=path)
+    text = open(path).read()
+    assert text.startswith("HloModule")
+    assert "f32[4,3]" in text
+
+
+def test_kan_weights_payload_schema():
+    cfg = M.KanConfig(dims=(4, 2), g=5)
+    params = M.init_kan(cfg, jax.random.PRNGKey(0))
+    qk = M.quantize_kan(params, [(-1.0, 1.0)], cfg)
+    payload = aot.kan_weights_payload("t", cfg, qk, {"quant_test_acc": 0.5})
+    # must round-trip through json (what the rust loader consumes)
+    text = json.dumps(payload)
+    back = json.loads(text)
+    assert back["dims"] == [4, 2]
+    assert back["g"] == 5
+    layer = back["layers"][0]
+    assert len(layer["coeff_q"]) == 4 * (5 + 3) * 2
+    assert len(layer["wb"]) == 8
+    assert len(layer["sh_lut"]) == (1 << layer["ld"]) // 2 + 1
+    assert all(isinstance(v, int) for v in layer["coeff_q"])
+
+
+def test_mlp_weights_payload_schema():
+    cfg = M.MlpConfig(dims=(3, 4, 2))
+    params = M.init_mlp(cfg, jax.random.PRNGKey(1))
+    payload = aot.mlp_weights_payload("m", cfg, params, {"test_acc": 0.1})
+    back = json.loads(json.dumps(payload))
+    assert back["num_params"] == cfg.num_params
+    assert len(back["layers"][0]["w"]) == 12

@@ -1,0 +1,135 @@
+"""Kernel vs oracle: the core L1 correctness signal.
+
+The Pallas kernels (interpret=True) must match the pure-jnp Cox-de Boor
+reference for every (G, K, n_bits, shape) combination; hypothesis sweeps the
+space.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import quant
+from compile.kernels import kan_spline, ref
+
+hypothesis.settings.register_profile(
+    "kan", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kan")
+
+
+def make_inputs(rng, spec, batch, din, dout):
+    x = rng.uniform(spec.lo - 0.3, spec.hi + 0.3, (batch, din)).astype(np.float32)
+    xq = np.asarray(quant.quantize(spec, x))
+    coeff = rng.normal(0.0, 0.5, (din, spec.num_basis, dout)).astype(np.float32)
+    return xq, coeff
+
+
+def test_spline_mac_matches_ref_basic():
+    spec = quant.AspQuantSpec.build(5, 3, 8, -1.0, 1.0)
+    rng = np.random.default_rng(0)
+    xq, coeff = make_inputs(rng, spec, 64, 17, 14)
+    lut = quant.build_lut(spec)
+    got = kan_spline.spline_mac(
+        jnp.asarray(xq), jnp.asarray(lut), jnp.asarray(coeff), spec
+    )
+    want = ref.spline_mac_ref(
+        quant.grid_coord(spec, jnp.asarray(xq)), jnp.asarray(coeff), spec.g, spec.k
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@hypothesis.given(
+    g=st.sampled_from([2, 3, 5, 7, 8, 16, 31, 64]),
+    k=st.integers(min_value=1, max_value=4),
+    n_bits=st.sampled_from([6, 8]),
+    batch=st.sampled_from([1, 3, 32]),
+    din=st.integers(min_value=1, max_value=8),
+    dout=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_spline_mac_matches_ref_sweep(g, k, n_bits, batch, din, dout, seed):
+    hypothesis.assume(g <= 2**n_bits)
+    spec = quant.AspQuantSpec.build(g, k, n_bits, -0.7, 1.3)
+    rng = np.random.default_rng(seed)
+    xq, coeff = make_inputs(rng, spec, batch, din, dout)
+    lut = quant.build_lut(spec)
+    got = kan_spline.spline_mac(
+        jnp.asarray(xq), jnp.asarray(lut), jnp.asarray(coeff), spec
+    )
+    want = ref.spline_mac_ref(
+        quant.grid_coord(spec, jnp.asarray(xq)), jnp.asarray(coeff), spec.g, spec.k
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5)
+
+
+@hypothesis.given(
+    g=st.sampled_from([4, 5, 12, 32]),
+    batch=st.sampled_from([2, 17]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_fused_layer_matches_ref(g, batch, seed):
+    k = 3
+    spec = quant.AspQuantSpec.build(g, k, 8, -1.0, 1.0)
+    rng = np.random.default_rng(seed)
+    din, dout = 5, 4
+    xq, coeff = make_inputs(rng, spec, batch, din, dout)
+    wb = rng.normal(0.0, 1.0, (din, dout)).astype(np.float32)
+    lut = quant.build_lut(spec)
+    got = kan_spline.kan_layer(
+        jnp.asarray(xq), jnp.asarray(lut), jnp.asarray(coeff), jnp.asarray(wb), spec
+    )
+    x_deq = np.asarray(quant.dequantize(spec, jnp.asarray(xq)))
+    want = np.maximum(x_deq, 0.0) @ wb + np.asarray(
+        ref.spline_mac_ref(
+            quant.grid_coord(spec, jnp.asarray(xq)), jnp.asarray(coeff), g, k
+        )
+    )
+    np.testing.assert_allclose(np.asarray(got), want, atol=5e-5, rtol=1e-5)
+
+
+def test_block_tiling_invariance():
+    """Different batch block sizes must give identical results."""
+    spec = quant.AspQuantSpec.build(8, 3, 8, 0.0, 1.0)
+    rng = np.random.default_rng(3)
+    xq, coeff = make_inputs(rng, spec, 96, 4, 3)
+    lut = jnp.asarray(quant.build_lut(spec))
+    outs = [
+        np.asarray(
+            kan_spline.spline_mac(
+                jnp.asarray(xq), lut, jnp.asarray(coeff), spec, block=b
+            )
+        )
+        for b in (8, 32, 96)
+    ]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_ref_partition_of_unity():
+    z = jnp.linspace(0.0, 5.0, 101)[:-1]
+    basis = ref.basis_functions(z, 5, 3)
+    np.testing.assert_allclose(np.asarray(basis.sum(-1)), 1.0, atol=1e-6)
+
+
+def test_ref_cardinal_symmetry():
+    s = jnp.linspace(0.0, 4.0, 200)
+    a = ref.cardinal_bspline(s, 3)
+    b = ref.cardinal_bspline(4.0 - s, 3)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_out_of_range_inputs_saturate():
+    spec = quant.AspQuantSpec.build(5, 3, 8, -1.0, 1.0)
+    xq = np.asarray(quant.quantize(spec, np.array([[-99.0, 99.0]])))
+    assert xq[0, 0] == 0
+    assert xq[0, 1] == spec.range - 1
+    # kernel still produces finite values at the saturated codes
+    coeff = np.ones((2, spec.num_basis, 1), np.float32)
+    lut = quant.build_lut(spec)
+    out = kan_spline.spline_mac(
+        jnp.asarray(xq), jnp.asarray(lut), jnp.asarray(coeff), spec
+    )
+    assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,90 @@
+"""L2 model tests: shapes, quantized forward fidelity, calibration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datasets, model as M, quant
+
+
+def small_kan():
+    cfg = M.KanConfig(dims=(6, 3, 4), g=5)
+    params = M.init_kan(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_param_counts_match_paper():
+    assert M.KanConfig(dims=(17, 1, 14), g=5).num_params == 279
+    assert M.KanConfig(dims=(17, 2, 14), g=32).num_params == 2232
+    assert M.MlpConfig(dims=(17, 420, 420, 14)).num_params == 190_274
+
+
+def test_forward_shapes():
+    cfg, params = small_kan()
+    x = jnp.zeros((9, 6))
+    ranges = [(-1.0, 1.0)] * cfg.num_layers
+    y = M.kan_forward(params, x, ranges, cfg)
+    assert y.shape == (9, 4)
+
+
+def test_calibrate_ranges_covers_activations():
+    cfg, params = small_kan()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(-1, 1, (50, 6)).astype(np.float32))
+    ranges = M.calibrate_ranges(params, x, cfg)
+    assert len(ranges) == cfg.num_layers
+    for lo, hi in ranges:
+        assert hi > lo
+    # layer-0 range covers the input span
+    assert ranges[0][0] <= float(x.min()) and ranges[0][1] >= float(x.max())
+
+
+def test_quantized_forward_close_to_float():
+    cfg, params = small_kan()
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(-1, 1, (40, 6)).astype(np.float32))
+    ranges = M.calibrate_ranges(params, x, cfg)
+    qk = M.quantize_kan(params, ranges, cfg)
+    y_float = np.asarray(M.kan_forward(params, x, ranges, cfg))
+    y_quant = np.asarray(M.quantized_forward(qk, x))
+    # 8-bit weights/LUT/activations: expect small relative error
+    scale = np.abs(y_float).max() + 1e-6
+    assert np.abs(y_quant - y_float).max() / scale < 0.15
+
+
+def test_quantized_predictions_mostly_match_float():
+    cfg, params = small_kan()
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(-1, 1, (200, 6)).astype(np.float32))
+    ranges = M.calibrate_ranges(params, x, cfg)
+    qk = M.quantize_kan(params, ranges, cfg)
+    pf = np.argmax(np.asarray(M.kan_forward(params, x, ranges, cfg)), axis=1)
+    pq = np.argmax(np.asarray(M.quantized_forward(qk, x)), axis=1)
+    assert (pf == pq).mean() > 0.9
+
+
+def test_mlp_forward():
+    cfg = M.MlpConfig(dims=(4, 8, 3))
+    params = M.init_mlp(cfg, jax.random.PRNGKey(0))
+    y = M.mlp_forward(params, jnp.zeros((5, 4)))
+    assert y.shape == (5, 3)
+    # zero input -> logits equal the output bias (zeros at init)
+    np.testing.assert_allclose(np.asarray(y), 0.0, atol=1e-6)
+
+
+def test_dataset_shapes_and_determinism():
+    a = datasets.generate(n=600, seed=11)
+    b = datasets.generate(n=600, seed=11)
+    np.testing.assert_array_equal(a.train_x, b.train_x)
+    np.testing.assert_array_equal(a.test_y, b.test_y)
+    assert a.train_x.shape[1] == datasets.NUM_FEATURES
+    assert set(np.unique(a.train_y)).issubset(set(range(datasets.NUM_CLASSES)))
+    c = datasets.generate(n=600, seed=12)
+    assert not np.array_equal(a.train_y, c.train_y)
+
+
+def test_dataset_class_distribution_is_peaked():
+    d = datasets.generate(n=6000, seed=7)
+    hist = np.bincount(d.train_y, minlength=14) / len(d.train_y)
+    # central classes dominate the extremes (signature-like distribution)
+    assert hist[6] + hist[7] > 5 * (hist[0] + hist[13])

@@ -1,0 +1,110 @@
+"""ASP-KAN-HAQ property tests (python side; the rust side mirrors these)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import quant
+
+
+@hypothesis.given(
+    g=st.integers(min_value=1, max_value=256),
+    n=st.sampled_from([6, 8, 10]),
+)
+def test_solve_ld_is_maximal(g, n):
+    hypothesis.assume(g <= 2**n)
+    ld = quant.solve_ld(g, n)
+    assert g * 2**ld <= 2**n
+    assert g * 2 ** (ld + 1) > 2**n
+
+
+def test_solve_ld_rejects_invalid():
+    with pytest.raises(ValueError):
+        quant.solve_ld(0, 8)
+    with pytest.raises(ValueError):
+        quant.solve_ld(257, 8)
+
+
+@hypothesis.given(
+    g=st.sampled_from([2, 5, 8, 13, 32, 64]),
+    k=st.integers(min_value=1, max_value=4),
+)
+def test_knots_align_with_codes(g, k):
+    """Every knot boundary lands exactly on a code multiple of 2^LD."""
+    spec = quant.AspQuantSpec.build(g, k, 8, -2.0, 3.0)
+    for j in range(g):
+        knot = spec.lo + j * spec.knot_spacing
+        q = int(quant.quantize(spec, knot))
+        assert q % spec.levels_per_interval == 0
+        assert q >> spec.ld == j
+
+
+@hypothesis.given(
+    g=st.sampled_from([3, 5, 8, 16, 60]),
+    k=st.integers(min_value=1, max_value=4),
+)
+def test_lut_partition_of_unity(g, k):
+    spec = quant.AspQuantSpec.build(g, k, 8, 0.0, 1.0)
+    lut = quant.build_lut(spec)
+    np.testing.assert_allclose(lut.sum(axis=1), 1.0, atol=1e-6)
+
+
+@hypothesis.given(
+    g=st.sampled_from([3, 5, 8, 16, 60]),
+    k=st.integers(min_value=1, max_value=4),
+)
+def test_sh_lut_roundtrip(g, k):
+    """Hemi storage + mirror reconstruction == the full table."""
+    spec = quant.AspQuantSpec.build(g, k, 8, 0.0, 1.0)
+    full = quant.build_lut(spec)
+    sh = quant.build_sh_lut(spec)
+    assert sh.shape[0] == spec.levels_per_interval // 2 + 1
+    rebuilt = quant.expand_sh_lut(spec, sh)
+    np.testing.assert_allclose(rebuilt, full, atol=1e-7)
+
+
+def test_quantize_dequantize_error_bound():
+    spec = quant.AspQuantSpec.build(5, 3, 8, -1.0, 1.0)
+    x = np.linspace(-1.0, 1.0 - 1e-6, 1000).astype(np.float32)
+    xq = quant.quantize(spec, x)
+    xd = np.asarray(quant.dequantize(spec, xq))
+    # codes top out at R-1 (value hi - step), so inputs near hi carry up to
+    # one full step of error; everywhere else it is half a step
+    assert np.max(np.abs(xd - x)) <= spec.step + 1e-6
+    interior = x < 1.0 - spec.step
+    assert np.max(np.abs(xd[interior] - x[interior])) <= spec.step * 0.5 + 1e-6
+
+
+def test_quantize_coeff_roundtrip():
+    rng = np.random.default_rng(0)
+    c = rng.normal(0, 0.3, (4, 8, 3))
+    cq, scale = quant.quantize_coeff(c, bits=8)
+    assert cq.max() <= 127 and cq.min() >= -127
+    err = np.abs(cq * scale - c)
+    assert err.max() <= scale * 0.5 + 1e-9
+
+
+def test_quantize_coeff_zero_tensor():
+    cq, scale = quant.quantize_coeff(np.zeros((2, 2)), bits=8)
+    assert (cq == 0).all()
+    assert scale == 1.0
+
+
+def test_pact_misalignment():
+    """Conventional quantization leaves distinct per-basis tables."""
+    spec = quant.PactQuantSpec(g=5, k=3, n_bits=8, lo=0.0, alpha=1.0)
+    luts = spec.build_per_basis_luts()
+    assert luts.shape[0] == 8
+    central_diff = np.abs(luts[3] - luts[4]).max()
+    assert central_diff > 1e-4, "misaligned grids must differentiate the LUTs"
+
+
+def test_lut_quantization_8bit():
+    spec = quant.AspQuantSpec.build(5, 3, 8, 0.0, 1.0)
+    lut_q = quant.quantize_lut(quant.build_lut(spec), bits=8)
+    assert lut_q.max() <= 255 and lut_q.min() >= 0
+    # quantized rows still sum to ~255 (partition of unity in codes)
+    sums = lut_q.sum(axis=1)
+    assert (np.abs(sums - 255) <= 2).all()

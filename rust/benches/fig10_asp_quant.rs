@@ -1,0 +1,89 @@
+//! Fig 10 reproduction: ASP-KAN-HAQ vs conventional (PACT) B(X) path.
+//!
+//! Paper: G = 8→64, average 40.14x area and 5.59x energy reduction.
+//! Prints the same series and times the modelled lookup paths.
+//!
+//! ```sh
+//! cargo bench --bench fig10_asp_quant
+//! ```
+
+use kan_edge::circuits::{cost_bx_path, fig10_sweep, BxPathDesign, Tech};
+use kan_edge::quant::{AspSpec, PactSpec, ShLut};
+use kan_edge::util::bench::{bench, black_box, header, report};
+
+fn main() {
+    let t = Tech::default();
+
+    println!("=== Fig 10: B(X) path cost, ASP-KAN-HAQ vs conventional ===");
+    println!(
+        "{:>4} {:>14} {:>14} {:>12} {:>14} {:>12} {:>14}",
+        "G", "conv area", "asp area", "area-red(x)", "conv energy", "asp energy", "energy-red(x)"
+    );
+    let rows = fig10_sweep(&[8, 16, 32, 64], 3, 8, &t).expect("sweep");
+    for r in &rows {
+        println!(
+            "{:>4} {:>14.1} {:>14.1} {:>12.2} {:>14.2} {:>12.2} {:>14.2}",
+            r.g,
+            r.conventional.total.area_um2,
+            r.asp.total.area_um2,
+            r.area_reduction,
+            r.conventional.total.energy_fj,
+            r.asp.total.energy_fj,
+            r.energy_reduction
+        );
+    }
+    let n = rows.len() as f64;
+    let avg_a = rows.iter().map(|r| r.area_reduction).sum::<f64>() / n;
+    let avg_e = rows.iter().map(|r| r.energy_reduction).sum::<f64>() / n;
+    println!("\npaper:    avg 40.14x area, 5.59x energy");
+    println!("measured: avg {avg_a:.2}x area, {avg_e:.2}x energy");
+
+    // ablation: phase 1 alone vs phase 1+2 (what PowerGap adds)
+    println!("\n=== ablation: Alignment-Symmetry only vs + PowerGap ===");
+    println!("{:>4} {:>14} {:>14} {:>10}", "G", "phase1 area", "phase1+2 area", "gain(x)");
+    for g in [8u32, 16, 32, 64] {
+        let p1 = cost_bx_path(BxPathDesign::AlignmentOnly, g, 3, 8, &t).unwrap();
+        let p2 = cost_bx_path(BxPathDesign::AspFull, g, 3, 8, &t).unwrap();
+        println!(
+            "{:>4} {:>14.1} {:>14.1} {:>10.2}",
+            g,
+            p1.total.area_um2,
+            p2.total.area_um2,
+            p1.total.area_um2 / p2.total.area_um2
+        );
+    }
+
+    // timing: the modelled lookup math itself (runs on the serving path
+    // of the digital reference, so its speed matters)
+    header("lookup-path timing");
+    let spec = AspSpec::build(8, 3, 8, 0.0, 1.0).unwrap();
+    let lut = ShLut::build(&spec, 8);
+    let codes: Vec<u32> = (0..spec.range()).collect();
+    let r = bench("asp decompose+sh-lut lookup (256 codes)", 300, || {
+        let mut acc = 0u64;
+        for &q in &codes {
+            let (j, l) = spec.decompose(q);
+            for t in 0..=3u32 {
+                acc = acc.wrapping_add(u64::from(lut.lookup(l, t)) + u64::from(j));
+            }
+        }
+        black_box(acc);
+    });
+    report(&r);
+    let pact = PactSpec::new(8, 3, 8, 0.0, 1.0);
+    let luts = pact.build_per_basis_luts();
+    let r = bench("conventional per-basis lut eval (256 codes)", 300, || {
+        let mut acc = 0.0f64;
+        for q in 0..256u32 {
+            let x = pact.dequantize(q);
+            let z = x * 8.0;
+            let j = (z as usize).min(7);
+            for tt in 0..=3usize {
+                let idx = ((z - j as f64) * luts[j + tt].len() as f64 / 4.0) as usize;
+                acc += luts[j + tt][idx.min(luts[j + tt].len() - 1)];
+            }
+        }
+        black_box(acc);
+    });
+    report(&r);
+}

@@ -1,0 +1,88 @@
+//! Fig 11 reproduction: WL input generator comparison at 6 bits.
+//!
+//! Paper: pure voltage = 1.96x area / 11.9x power vs TM-DV-IG; pure PWM =
+//! 8x latency / 1.07x area; TM-DV-IG FOM 3x over voltage, 4.1x over PWM.
+//!
+//! ```sh
+//! cargo bench --bench fig11_inputgen
+//! ```
+
+use kan_edge::circuits::inputgen::{InputGenerator, PurePwm, PureVoltage, TmDvIg};
+use kan_edge::circuits::{fig11_comparison, Tech};
+use kan_edge::util::bench::{bench, black_box, header, report};
+
+fn main() {
+    let t = Tech::default();
+    let bits = 6u32;
+
+    println!("=== Fig 11: WL input generators, {bits}-bit ===");
+    println!(
+        "{:<14} {:>11} {:>11} {:>10} {:>12} {:>9}",
+        "generator", "area(um2)", "power(uW)", "lat(ns)", "margin(mV)", "FOM(rel)"
+    );
+    let reports = fig11_comparison(bits, &t);
+    let tm = reports.last().unwrap().clone();
+    for r in &reports {
+        println!(
+            "{:<14} {:>11.1} {:>11.1} {:>10.1} {:>12.1} {:>9.2}",
+            r.name,
+            r.area_um2,
+            r.power_uw,
+            r.latency_ns,
+            r.noise_margin_v * 1e3,
+            r.fom() / tm.fom()
+        );
+    }
+    let v = &reports[0];
+    let pwm = &reports[1];
+    println!("\npaper:    voltage 1.96x area, 11.9x power; pwm 8x latency, 1.07x area");
+    println!(
+        "measured: voltage {:.2}x area, {:.1}x power; pwm {:.0}x latency, {:.2}x area",
+        v.area_um2 / tm.area_um2,
+        v.power_uw / tm.power_uw,
+        pwm.latency_ns / tm.latency_ns,
+        pwm.area_um2 / tm.area_um2
+    );
+    println!(
+        "paper:    TM-DV FOM 3x over voltage, 4.1x over PWM\nmeasured: {:.2}x over voltage, {:.2}x over PWM",
+        tm.fom() / v.fom(),
+        tm.fom() / pwm.fom()
+    );
+
+    // TD-A vs TD-P operating points (the co-design knob of section 3.2)
+    println!("\n=== TM-DV-IG operating modes ===");
+    println!("{:<18} {:>8} {:>10} {:>12}", "mode", "N", "lat(ns)", "margin(mV)");
+    for (name, ig) in [
+        ("TD-A (accuracy)", TmDvIg::high_accuracy()),
+        ("default", TmDvIg::default_6bit()),
+        ("TD-P (performance)", TmDvIg::high_performance()),
+    ] {
+        let r = ig.report(bits, &t);
+        println!(
+            "{:<18} {:>8} {:>10.1} {:>12.1}",
+            name,
+            ig.n_voltage_bits,
+            r.latency_ns,
+            r.noise_margin_v * 1e3
+        );
+    }
+
+    // timing of the encode path (runs per WL per inference in the sim)
+    header("encode timing");
+    let gens: Vec<(&str, Box<dyn InputGenerator>)> = vec![
+        ("pure-voltage encode (64 codes)", Box::new(PureVoltage)),
+        ("pure-pwm encode (64 codes)", Box::new(PurePwm)),
+        ("tm-dv-ig encode (64 codes)", Box::new(TmDvIg::default_6bit())),
+    ];
+    for (name, gen) in &gens {
+        let r = bench(name, 200, || {
+            let mut acc = 0.0f64;
+            for code in 0..64u32 {
+                let (v, p) = gen.encode(code, bits);
+                acc += v * p as f64;
+            }
+            black_box(acc);
+        });
+        report(&r);
+    }
+}

@@ -1,0 +1,130 @@
+//! Fig 13 reproduction: the headline table — traditional MLP accelerator vs
+//! the optimized KAN1/KAN2 accelerators on the knot-theory task.
+//!
+//! Paper:
+//!   metric    MLP        KAN1    KAN2
+//!   area      0.585      0.014   0.063  mm2
+//!   energy    20049.28   257.13  392.76 pJ
+//!   latency   19632      664     832    ns
+//!   #param    190214     279     2232
+//!   accuracy  78%        81.03%  86.74%
+//!
+//! Headline: 41.78x area / 77.97x energy reduction, +3.03% accuracy.
+//! Requires `make artifacts`.
+//!
+//! ```sh
+//! cargo bench --bench fig13_e2e
+//! ```
+
+use kan_edge::baseline::MlpModel;
+use kan_edge::circuits::Tech;
+use kan_edge::kan::checkpoint::{Dataset, Manifest};
+use kan_edge::kan::QuantKanModel;
+use kan_edge::neurosim::{estimate_kan, estimate_mlp, KanArch, MlpArch};
+use kan_edge::util::bench::{bench, black_box, header, report};
+
+fn artifacts_dir() -> String {
+    if let Ok(d) = std::env::var("KAN_EDGE_ARTIFACTS") {
+        return d;
+    }
+    // cargo bench runs with CWD = the package dir (rust/); the artifacts
+    // live at the workspace root
+    for cand in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(cand).join("manifest.json").exists() {
+            return cand.to_string();
+        }
+    }
+    "artifacts".to_string()
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    let t = Tech::default();
+    let (ds, manifest) = match (Dataset::load(&dir), Manifest::load(&dir)) {
+        (Ok(d), Ok(m)) => (d, m),
+        (e1, e2) => {
+            eprintln!("skipping fig13_e2e: {:?} {:?}", e1.err(), e2.err());
+            return;
+        }
+    };
+
+    // measured accuracies (rust digital reference on the artifact test set)
+    let mlp = MlpModel::load(format!("{dir}/mlp.weights.json")).unwrap();
+    let kan1 = QuantKanModel::load(format!("{dir}/kan1.weights.json")).unwrap();
+    let kan2 = QuantKanModel::load(format!("{dir}/kan2.weights.json")).unwrap();
+    let acc_mlp = mlp.accuracy(&ds);
+    let acc_k1 = kan1.accuracy(&ds);
+    let acc_k2 = kan2.accuracy(&ds);
+
+    // hardware cost estimates (KAN-NeuroSim engine)
+    let r_mlp = estimate_mlp(&MlpArch::new(vec![17, 420, 420, 14]), &t).unwrap();
+    let r_k1 = estimate_kan(&KanArch::new(vec![17, 1, 14], 5), &t).unwrap();
+    let r_k2 = estimate_kan(&KanArch::new(vec![17, 2, 14], 32), &t).unwrap();
+
+    println!("=== Fig 13: knot-theory accelerators (paper values in parens) ===");
+    println!(
+        "{:<14} {:>22} {:>22} {:>22}",
+        "metric", "MLP", "KAN1", "KAN2"
+    );
+    println!(
+        "{:<14} {:>14.4} (0.585) {:>14.4} (0.014) {:>14.4} (0.063)",
+        "area (mm2)", r_mlp.area_mm2, r_k1.area_mm2, r_k2.area_mm2
+    );
+    println!(
+        "{:<14} {:>12.1} (20049.3) {:>13.1} (257.1) {:>13.1} (392.8)",
+        "energy (pJ)", r_mlp.energy_pj, r_k1.energy_pj, r_k2.energy_pj
+    );
+    println!(
+        "{:<14} {:>13.0} (19632) {:>15.0} (664) {:>15.0} (832)",
+        "latency (ns)", r_mlp.latency_ns, r_k1.latency_ns, r_k2.latency_ns
+    );
+    println!(
+        "{:<14} {:>13} (190214) {:>15} (279) {:>14} (2232)",
+        "#param", r_mlp.num_params, r_k1.num_params, r_k2.num_params
+    );
+    println!(
+        "{:<14} {:>15.2}% (78%) {:>13.2}% (81.03%) {:>10.2}% (86.74%)",
+        "accuracy",
+        100.0 * acc_mlp,
+        100.0 * acc_k1,
+        100.0 * acc_k2
+    );
+
+    println!("\n=== headline reductions (KAN1 vs MLP) ===");
+    println!(
+        "paper:    41.78x area, 77.97x energy, 29.56x latency, +3.03% accuracy"
+    );
+    println!(
+        "measured: {:.2}x area, {:.2}x energy, {:.2}x latency, {:+.2}% accuracy",
+        r_mlp.area_mm2 / r_k1.area_mm2,
+        r_mlp.energy_pj / r_k1.energy_pj,
+        r_mlp.latency_ns / r_k1.latency_ns,
+        100.0 * (acc_k1 - acc_mlp)
+    );
+    println!("=== KAN2 vs MLP ===");
+    println!("paper:    9.28x area, 51.04x energy, 23.59x latency");
+    println!(
+        "measured: {:.2}x area, {:.2}x energy, {:.2}x latency, {:+.2}% accuracy",
+        r_mlp.area_mm2 / r_k2.area_mm2,
+        r_mlp.energy_pj / r_k2.energy_pj,
+        r_mlp.latency_ns / r_k2.latency_ns,
+        100.0 * (acc_k2 - acc_mlp)
+    );
+    let _ = manifest;
+
+    // end-to-end inference timing on this host (the serving reality check)
+    header("host inference timing");
+    let row: Vec<f32> = ds.test_rows().next().unwrap().0.to_vec();
+    let r = bench("kan1 digital forward (1 sample)", 300, || {
+        black_box(kan1.forward(&row));
+    });
+    report(&r);
+    let r = bench("kan2 digital forward (1 sample)", 300, || {
+        black_box(kan2.forward(&row));
+    });
+    report(&r);
+    let r = bench("mlp float forward (1 sample)", 300, || {
+        black_box(mlp.forward(&row));
+    });
+    report(&r);
+}

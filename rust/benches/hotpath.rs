@@ -1,0 +1,126 @@
+//! Hot-path micro benchmarks: the inner loops profiled and optimized in
+//! EXPERIMENTS.md §Perf.
+//!
+//! * digital KAN layer forward (serving digital backend inner loop)
+//! * IR-drop ladder solve (ACIM simulation inner loop)
+//! * batcher + service round trip (serving overhead floor)
+//! * PJRT executable round trip (AOT graph dispatch cost)
+//!
+//! ```sh
+//! cargo bench --bench hotpath
+//! ```
+
+use std::sync::Arc;
+
+use kan_edge::acim::{mac_with_irdrop, ArrayConfig, Crossbar};
+use kan_edge::coordinator::batcher::BatchPolicy;
+use kan_edge::coordinator::{InferenceService, ServeOptions};
+use kan_edge::data::LoadGen;
+use kan_edge::kan::checkpoint::{Dataset, Manifest};
+use kan_edge::kan::QuantKanModel;
+use kan_edge::util::bench::{bench, black_box, header, report};
+
+struct Echo;
+
+impl kan_edge::coordinator::InferBackend for Echo {
+    fn name(&self) -> &str {
+        "echo"
+    }
+
+    fn output_dim(&self) -> usize {
+        1
+    }
+
+    fn infer_batch(
+        &self,
+        rows: &[Vec<f32>],
+    ) -> kan_edge::Result<Vec<Vec<f32>>> {
+        Ok(rows.iter().map(|r| vec![r[0]]).collect())
+    }
+}
+
+fn artifacts_dir() -> String {
+    if let Ok(d) = std::env::var("KAN_EDGE_ARTIFACTS") {
+        return d;
+    }
+    // cargo bench runs with CWD = the package dir (rust/); the artifacts
+    // live at the workspace root
+    for cand in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(cand).join("manifest.json").exists() {
+            return cand.to_string();
+        }
+    }
+    "artifacts".to_string()
+}
+
+fn main() {
+    let dir = artifacts_dir();
+
+    header("digital KAN forward");
+    if let Ok(model) = QuantKanModel::load(format!("{dir}/kan2.weights.json")) {
+        let mut lg = LoadGen::new(7, model.input_dim());
+        let one = lg.next_vec();
+        let r = bench("kan2 forward (1 sample)", 400, || {
+            black_box(model.forward(&one));
+        });
+        report(&r);
+        let batch: Vec<f32> = lg.batch(64).into_iter().flatten().collect();
+        let r = bench("kan2 forward_batch (64 samples)", 500, || {
+            black_box(model.forward_batch(&batch, 64));
+        });
+        report(&r);
+    } else {
+        println!("  (artifacts missing; run `make artifacts`)");
+    }
+
+    header("IR-drop ladder solve");
+    for rows in [128usize, 512, 1024] {
+        let cfg = ArrayConfig::with_rows(rows);
+        let w: Vec<i32> = (0..rows).map(|i| ((i * 37) % 255) as i32 - 127).collect();
+        let xb = Crossbar::program(cfg, &w, rows, 1, 127.0).unwrap();
+        let drives: Vec<f64> = (0..rows)
+            .map(|i| if i % 5 == 0 { 0.5 } else { 0.0 })
+            .collect();
+        let r = bench(&format!("ladder solve ({rows} rows, 1 col)"), 300, || {
+            black_box(mac_with_irdrop(&xb, &drives));
+        });
+        report(&r);
+    }
+
+    header("serving round trip (echo backend)");
+    let opts = ServeOptions {
+        policy: BatchPolicy {
+            max_batch: 32,
+            deadline: std::time::Duration::from_micros(100),
+        },
+        queue_depth: 1024,
+        workers: 2,
+    };
+    let svc = InferenceService::start(Arc::new(Echo), opts);
+    let r = bench("single blocking infer", 400, || {
+        black_box(svc.infer(vec![1.0]).unwrap());
+    });
+    report(&r);
+
+    header("PJRT dispatch");
+    match Manifest::load(&dir) {
+        Ok(manifest) => {
+            let entry = &manifest.models["kan1"];
+            let file = entry.hlo.get(&32).expect("batch-32 hlo");
+            let engine = kan_edge::runtime::PjrtEngine::cpu().unwrap();
+            let exe = engine
+                .load_hlo(format!("{dir}/{file}"), 32, 17, 14)
+                .unwrap();
+            let ds = Dataset::load(&dir).unwrap();
+            let mut flat = vec![0.0f32; 32 * 17];
+            for (i, (row, _)) in ds.test_rows().take(32).enumerate() {
+                flat[i * 17..(i + 1) * 17].copy_from_slice(row);
+            }
+            let r = bench("kan1 b32 execute (AOT HLO)", 500, || {
+                black_box(exe.run(&flat).unwrap());
+            });
+            report(&r);
+        }
+        Err(e) => println!("  (skipping: {e})"),
+    }
+}

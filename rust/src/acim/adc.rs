@@ -1,0 +1,85 @@
+//! Column ADC / sense amplifier: partial-sum quantization.
+//!
+//! The analog column current is digitized to `bits` by a converter whose
+//! full scale is set per layer (from the largest representable partial
+//! sum). Quantization is the last error source in the analog chain; its
+//! resolution interacts with IR-drop (attenuated currents land in lower
+//! codes) which is why the paper evaluates accuracy with both effects on.
+
+
+/// Partial-sum ADC model.
+#[derive(Debug, Clone, Copy)]
+pub struct Adc {
+    pub bits: u32,
+    /// Full-scale input (µA). Inputs beyond ±full_scale saturate.
+    pub full_scale_ua: f64,
+}
+
+impl Adc {
+    pub fn new(bits: u32, full_scale_ua: f64) -> Self {
+        Self { bits, full_scale_ua }
+    }
+
+    /// Signed levels available on each side of zero.
+    pub fn half_levels(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// Quantize a (differential, signed) current to an ADC code.
+    pub fn convert(&self, i_ua: f64) -> i64 {
+        let lv = self.half_levels() as f64;
+        let code = (i_ua / self.full_scale_ua * lv).round();
+        code.clamp(-lv, lv) as i64
+    }
+
+    /// Code back to current (µA).
+    pub fn dequant(&self, code: i64) -> f64 {
+        code as f64 / self.half_levels() as f64 * self.full_scale_ua
+    }
+
+    /// Convert and dequantize in one go (what the pipeline does).
+    pub fn roundtrip(&self, i_ua: f64) -> f64 {
+        self.dequant(self.convert(i_ua))
+    }
+
+    /// Max quantization error (half an LSB) in µA.
+    pub fn lsb_ua(&self) -> f64 {
+        self.full_scale_ua / self.half_levels() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_within_half_lsb() {
+        let adc = Adc::new(6, 100.0);
+        for i in -100..=100 {
+            let x = i as f64;
+            let err = (adc.roundtrip(x) - x).abs();
+            assert!(err <= adc.lsb_ua() / 2.0 + 1e-12, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn saturates_at_full_scale() {
+        let adc = Adc::new(6, 50.0);
+        assert_eq!(adc.convert(500.0), adc.half_levels());
+        assert_eq!(adc.convert(-500.0), -adc.half_levels());
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let coarse = Adc::new(4, 100.0);
+        let fine = Adc::new(8, 100.0);
+        assert!(fine.lsb_ua() < coarse.lsb_ua() / 8.0);
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let adc = Adc::new(6, 100.0);
+        assert_eq!(adc.convert(0.0), 0);
+        assert_eq!(adc.roundtrip(0.0), 0.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! RRAM crossbar array: conductance programming and ideal MAC.
+//!
+//! Signed int8 weights are stored differentially: each logical column is a
+//! (positive, negative) BL pair, each cell a multi-level conductance between
+//! `g_hrs` and `g_lrs` (the SLC-MLC hybrid of ref [13] reduced to its
+//! behavioural essence). The analog MAC is
+//! `I_col = Σ_rows drive_i · G_i · V_read`, computed ideally here; IR-drop
+//! and variation live in [`super::irdrop`] / [`super::noise`].
+
+
+use crate::error::{Error, Result};
+
+/// Physical configuration of one crossbar array (one "tile").
+#[derive(Debug, Clone, Copy)]
+pub struct ArrayConfig {
+    /// Rows (cells per bit line) — the paper's "array size" axis in Fig 12.
+    pub rows: usize,
+    /// Logical columns (each backed by a differential BL pair).
+    pub cols: usize,
+    /// BL wire resistance between adjacent cells (Ω).
+    pub r_wire_ohm: f64,
+    /// Low-resistance-state conductance (µS) — full-scale weight.
+    pub g_lrs_us: f64,
+    /// High-resistance-state conductance (µS) — zero weight (leakage floor).
+    pub g_hrs_us: f64,
+    /// Programmable conductance levels per cell (MLC).
+    pub levels: u32,
+    /// Read voltage on the WL (V).
+    pub v_read: f64,
+    /// Relative conductance programming error σ (device-to-device).
+    pub sigma_program: f64,
+    /// Relative read-noise σ (cycle-to-cycle).
+    pub sigma_read: f64,
+}
+
+impl Default for ArrayConfig {
+    fn default() -> Self {
+        Self {
+            rows: 256,
+            cols: 64,
+            r_wire_ohm: 1.0,
+            g_lrs_us: 50.0,
+            g_hrs_us: 0.5,
+            levels: 128,
+            v_read: 0.1,
+            sigma_program: 0.015,
+            sigma_read: 0.005,
+        }
+    }
+}
+
+impl ArrayConfig {
+    /// Convenience: the Fig 12 sweep ties array size to G; everything else
+    /// stays at the defaults.
+    pub fn with_rows(rows: usize) -> Self {
+        Self { rows, ..Self::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.rows == 0 || self.cols == 0 {
+            return Err(Error::Config("array must have rows and cols".into()));
+        }
+        if self.g_lrs_us <= self.g_hrs_us {
+            return Err(Error::Config("G_LRS must exceed G_HRS".into()));
+        }
+        if self.levels < 2 {
+            return Err(Error::Config("need >= 2 conductance levels".into()));
+        }
+        Ok(())
+    }
+}
+
+/// A programmed crossbar: conductances in µS, row-major `[rows][col_pairs]`.
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    pub cfg: ArrayConfig,
+    /// Positive-BL conductances, `rows * cols`.
+    pub g_pos: Vec<f64>,
+    /// Negative-BL conductances, `rows * cols`.
+    pub g_neg: Vec<f64>,
+    /// Full-scale weight magnitude a single cell encodes.
+    pub w_max: f64,
+}
+
+impl Crossbar {
+    /// Program signed integer weights `w[row][col]` (flattened row-major)
+    /// with `w_max` = the code magnitude mapped to full-scale conductance.
+    pub fn program(cfg: ArrayConfig, weights: &[i32], rows: usize, cols: usize, w_max: f64) -> Result<Self> {
+        cfg.validate()?;
+        if weights.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "weights len {} != {rows}x{cols}",
+                weights.len()
+            )));
+        }
+        if rows > cfg.rows {
+            return Err(Error::Config(format!(
+                "{rows} rows exceed array size {}",
+                cfg.rows
+            )));
+        }
+        let span = cfg.g_lrs_us - cfg.g_hrs_us;
+        let quant = |mag: f64| -> f64 {
+            // MLC programming quantizes the target conductance to `levels`
+            let lv = (mag * (cfg.levels - 1) as f64).round() / (cfg.levels - 1) as f64;
+            cfg.g_hrs_us + lv * span
+        };
+        let mut g_pos = vec![cfg.g_hrs_us; cfg.rows * cols];
+        let mut g_neg = vec![cfg.g_hrs_us; cfg.rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let w = weights[r * cols + c] as f64 / w_max;
+                let mag = w.abs().min(1.0);
+                if w >= 0.0 {
+                    g_pos[r * cols + c] = quant(mag);
+                } else {
+                    g_neg[r * cols + c] = quant(mag);
+                }
+            }
+        }
+        Ok(Self { cfg, g_pos, g_neg, w_max })
+    }
+
+    pub fn cols(&self) -> usize {
+        self.g_pos.len() / self.cfg.rows
+    }
+
+    /// Ideal differential MAC: `out[c] = Σ_r drive[r] · (G⁺ − G⁻) · V_read`
+    /// in µA. `drives` are WL activations in [0, 1].
+    pub fn mac_ideal(&self, drives: &[f64]) -> Vec<f64> {
+        let cols = self.cols();
+        let mut out = vec![0.0; cols];
+        for (r, &d) in drives.iter().enumerate().take(self.cfg.rows) {
+            if d == 0.0 {
+                continue;
+            }
+            let base = r * cols;
+            for c in 0..cols {
+                out[c] += d * (self.g_pos[base + c] - self.g_neg[base + c]);
+            }
+        }
+        for v in &mut out {
+            *v *= self.cfg.v_read;
+        }
+        out
+    }
+
+    /// Convert a differential column current (µA) back to the weight-domain
+    /// value it represents: `w · drive` summed over rows, in code units.
+    pub fn current_to_code(&self, i_ua: f64) -> f64 {
+        let span = self.cfg.g_lrs_us - self.cfg.g_hrs_us;
+        i_ua / (self.cfg.v_read * span) * self.w_max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_rejects_bad_shapes() {
+        let cfg = ArrayConfig::with_rows(8);
+        assert!(Crossbar::program(cfg, &[0; 7], 4, 2, 127.0).is_err());
+        assert!(Crossbar::program(cfg, &[0; 32], 16, 2, 127.0).is_err()); // rows > array
+    }
+
+    #[test]
+    fn ideal_mac_recovers_integer_dot_product() {
+        let cfg = ArrayConfig { levels: 128, ..ArrayConfig::with_rows(8) };
+        let w = vec![100, -50, 25, 0, -125, 13, 7, -7];
+        let xb = Crossbar::program(cfg, &w, 8, 1, 127.0).unwrap();
+        let drives = vec![1.0, 0.5, 0.25, 1.0, 0.1, 0.0, 1.0, 1.0];
+        let i = xb.mac_ideal(&drives);
+        let got = xb.current_to_code(i[0]);
+        let want: f64 = w
+            .iter()
+            .zip(&drives)
+            .map(|(&w, &d)| w as f64 * d)
+            .sum();
+        // MLC quantization (127 codes -> 127 levels) keeps this nearly exact
+        assert!(
+            (got - want).abs() < want.abs().max(1.0) * 0.02,
+            "{got} vs {want}"
+        );
+    }
+
+    #[test]
+    fn differential_encoding_cancels_leakage() {
+        // zero weights must produce (near) zero current despite G_HRS floor
+        let cfg = ArrayConfig::with_rows(16);
+        let w = vec![0i32; 16];
+        let xb = Crossbar::program(cfg, &w, 16, 1, 127.0).unwrap();
+        let i = xb.mac_ideal(&vec![1.0; 16]);
+        assert!(i[0].abs() < 1e-9, "leakage current {}", i[0]);
+    }
+
+    #[test]
+    fn mlc_quantization_error_bounded() {
+        let cfg = ArrayConfig { levels: 16, ..ArrayConfig::with_rows(4) };
+        let w = vec![37, -90, 5, 127];
+        let xb = Crossbar::program(cfg, &w, 4, 1, 127.0).unwrap();
+        for (r, &wv) in w.iter().enumerate() {
+            let drives: Vec<f64> = (0..4).map(|i| if i == r { 1.0 } else { 0.0 }).collect();
+            let got = xb.current_to_code(xb.mac_ideal(&drives)[0]);
+            // 16 levels over 127 codes -> max error ~ 127/(2*15) ≈ 4.2
+            assert!((got - wv as f64).abs() <= 5.0, "row {r}: {got} vs {wv}");
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Bit-line IR-drop model: the resistive ladder, solved exactly.
+//!
+//! The BL clamp (column amplifier input) holds node 0 at virtual ground;
+//! each cell `r` injects current at node `r` through its programmed
+//! conductance from the driven word line, and the shared BL wire adds
+//! `r_wire` Ω between adjacent nodes. Current from far rows must flow
+//! through more wire, raising the local BL potential and shrinking the
+//! cell's effective V_ds — so far rows contribute *less* than they should.
+//! The error grows with array size and with distance from the clamp:
+//! exactly the trend the paper extracts from TSMC 22 nm measurements [13]
+//! and the lever KAN-SAM pulls.
+//!
+//! The network is linear, so we solve it exactly: KCL gives a tridiagonal
+//! system `(L + diag(g_eff)) v = g_eff · V_read` where `L` is the wire
+//! Laplacian with a grounded end; one Thomas-algorithm sweep (O(rows))
+//! yields the node voltages and the clamp current. (An earlier fixed-point
+//! iteration oscillated for large arrays — see EXPERIMENTS.md §Fig12.)
+
+use super::array::Crossbar;
+
+/// IR-drop-aware MAC for one crossbar. `drives` in [0, 1] per row.
+/// Returns per-column differential current (µA).
+pub fn mac_with_irdrop(xb: &Crossbar, drives: &[f64]) -> Vec<f64> {
+    let cols = xb.cols();
+    let rows = xb.cfg.rows.min(drives.len());
+    let mut out = vec![0.0; cols];
+    let mut geff = vec![0.0f64; rows];
+    let mut scratch = Scratch::new(rows);
+    for c in 0..cols {
+        for (r, g) in geff.iter_mut().enumerate() {
+            *g = drives[r] * xb.g_pos[r * cols + c];
+        }
+        let ip = ladder_current(&geff, xb.cfg.r_wire_ohm, xb.cfg.v_read, &mut scratch);
+        for (r, g) in geff.iter_mut().enumerate() {
+            *g = drives[r] * xb.g_neg[r * cols + c];
+        }
+        let in_ = ladder_current(&geff, xb.cfg.r_wire_ohm, xb.cfg.v_read, &mut scratch);
+        out[c] = ip - in_;
+    }
+    out
+}
+
+/// Reusable buffers for the tridiagonal solve.
+pub(crate) struct Scratch {
+    cp: Vec<f64>,
+    dp: Vec<f64>,
+}
+
+impl Scratch {
+    pub(crate) fn new(rows: usize) -> Self {
+        Self { cp: vec![0.0; rows], dp: vec![0.0; rows] }
+    }
+}
+
+/// Exact clamp current (µA) for one physical BL.
+///
+/// `geff[r]` is the effective source conductance of node `r` in µS (drive
+/// × cell conductance); `r_wire` Ω per segment; clamp at virtual ground.
+/// With zero wire resistance this degenerates to `Σ geff · v_read`.
+pub(crate) fn ladder_current(
+    geff: &[f64],
+    r_wire: f64,
+    v_read: f64,
+    s: &mut Scratch,
+) -> f64 {
+    let rows = geff.len();
+    if rows == 0 {
+        return 0.0;
+    }
+    if r_wire <= 0.0 {
+        return geff.iter().sum::<f64>() * v_read;
+    }
+    // conductances in µS; wire conductance in µS: 1/r [S] = 1e6/r [µS]
+    let gw = 1e6 / r_wire;
+    // Tridiagonal system over node voltages v[0..rows):
+    //   node r: (gw_left + gw_right + geff[r]) v[r]
+    //           - gw v[r-1] - gw v[r+1] = geff[r] * v_read
+    // where gw_left connects node 0 to the clamp (ground) and the last
+    // node has no right neighbour.
+    // Thomas algorithm with constant off-diagonals (-gw).
+    let b0 = gw + if rows > 1 { gw } else { 0.0 } + geff[0];
+    s.cp[0] = -gw / b0;
+    s.dp[0] = geff[0] * v_read / b0;
+    for r in 1..rows {
+        let right = if r + 1 < rows { gw } else { 0.0 };
+        let b = gw + right + geff[r];
+        let m = b + gw * s.cp[r - 1]; // b - a*cp (a = -gw)
+        s.cp[r] = -gw / m;
+        s.dp[r] = (geff[r] * v_read + gw * s.dp[r - 1]) / m;
+    }
+    // back-substitute
+    let mut v_next = s.dp[rows - 1];
+    let mut v0 = v_next;
+    for r in (0..rows.saturating_sub(1)).rev() {
+        v_next = s.dp[r] - s.cp[r] * v_next;
+        v0 = v_next;
+    }
+    // clamp current = gw * (v[0] - 0)
+    gw * v0
+}
+
+/// Relative attenuation profile: drive each decile row alone and compare
+/// against the ideal current — a diagnostic for the stats calibration.
+pub fn attenuation_profile(xb: &Crossbar, active_rows: usize) -> Vec<f64> {
+    let rows = xb.cfg.rows;
+    let n = active_rows.min(rows);
+    let ideal = xb.mac_ideal(&vec![1.0; n]);
+    let real = mac_with_irdrop(xb, &vec![1.0; n]);
+    (0..1)
+        .filter(|&c| ideal[c].abs() > 1e-12)
+        .map(|c| real[c] / ideal[c])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acim::array::{ArrayConfig, Crossbar};
+
+    fn uniform_xb(rows: usize, r_wire: f64) -> Crossbar {
+        let cfg = ArrayConfig {
+            rows,
+            r_wire_ohm: r_wire,
+            ..ArrayConfig::with_rows(rows)
+        };
+        let w = vec![127i32; rows];
+        Crossbar::program(cfg, &w, rows, 1, 127.0).unwrap()
+    }
+
+    #[test]
+    fn zero_wire_resistance_matches_ideal() {
+        let xb = uniform_xb(64, 0.0);
+        let drives = vec![1.0; 64];
+        let ideal = xb.mac_ideal(&drives);
+        let real = mac_with_irdrop(&xb, &drives);
+        assert!((ideal[0] - real[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_cell_analytic_check() {
+        // one cell at distance d: I = g*(v - I*R*d') with d' = d+1 segments
+        // => I = g*v / (1 + g*R*(d+1))
+        let rows = 16;
+        let cfg = ArrayConfig {
+            rows,
+            r_wire_ohm: 100.0, // exaggerated for visibility
+            ..ArrayConfig::with_rows(rows)
+        };
+        let w = vec![127i32; rows];
+        let xb = Crossbar::program(cfg, &w, rows, 1, 127.0).unwrap();
+        for d in [0usize, 7, 15] {
+            let mut drives = vec![0.0; rows];
+            drives[d] = 1.0;
+            let got = mac_with_irdrop(&xb, &drives)[0];
+            let r_tot = 100.0 * (d as f64 + 1.0); // Ω to the clamp
+            // differential: positive BL at G_LRS minus negative BL leakage
+            // at the G_HRS floor, each attenuated by its own ladder
+            let gp = xb.g_pos[d] * 1e-6; // S
+            let gn = xb.g_neg[d] * 1e-6;
+            let want = (gp / (1.0 + gp * r_tot) - gn / (1.0 + gn * r_tot))
+                * xb.cfg.v_read
+                * 1e6; // A -> µA
+            assert!(
+                (got - want).abs() < 1e-6 * want.abs().max(1.0),
+                "d={d}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn irdrop_only_reduces_current() {
+        let xb = uniform_xb(128, 2.0);
+        let drives = vec![1.0; 128];
+        let ideal = xb.mac_ideal(&drives)[0];
+        let real = mac_with_irdrop(&xb, &drives)[0];
+        assert!(real < ideal);
+        assert!(real > 0.0);
+    }
+
+    #[test]
+    fn error_grows_with_array_size() {
+        // the paper's Fig 12 premise: bigger arrays, bigger IR-drop error
+        let mut last_err = 0.0;
+        for rows in [128usize, 256, 512, 1024] {
+            let xb = uniform_xb(rows, 1.0);
+            let drives = vec![1.0; rows];
+            let ideal = xb.mac_ideal(&drives)[0];
+            let real = mac_with_irdrop(&xb, &drives)[0];
+            let err = (ideal - real) / ideal;
+            assert!(err > last_err, "rows={rows}: err {err} not > {last_err}");
+            last_err = err;
+        }
+    }
+
+    #[test]
+    fn near_rows_contribute_more_than_far_rows() {
+        let xb = uniform_xb(512, 2.0);
+        let mut near = vec![0.0; 512];
+        near[0] = 1.0;
+        let mut far = vec![0.0; 512];
+        far[511] = 1.0;
+        let i_near = mac_with_irdrop(&xb, &near)[0];
+        let i_far = mac_with_irdrop(&xb, &far)[0];
+        assert!(
+            i_far < i_near,
+            "far row current {i_far} should be < near row {i_near}"
+        );
+    }
+
+    #[test]
+    fn superposition_does_not_hold_but_total_is_bounded() {
+        // sanity on the exact solve: the all-on current must be less than
+        // the sum of single-row currents (shared wire makes them compete)
+        let rows = 64;
+        let xb = uniform_xb(rows, 5.0);
+        let all = mac_with_irdrop(&xb, &vec![1.0; rows])[0];
+        let sum_singles: f64 = (0..rows)
+            .map(|r| {
+                let mut d = vec![0.0; rows];
+                d[r] = 1.0;
+                mac_with_irdrop(&xb, &d)[0]
+            })
+            .sum();
+        assert!(all < sum_singles);
+        assert!(all > 0.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! RRAM analog compute-in-memory (ACIM) behavioural simulator.
+//!
+//! * [`array`] — crossbar programming + ideal differential MAC.
+//! * [`irdrop`] — the bit-line resistive-ladder model (position-dependent
+//!   attenuation, the physics behind Fig 12).
+//! * [`noise`] — programming variation + read noise (seeded, deterministic).
+//! * [`adc`] — partial-sum quantization.
+//! * [`stats`] — "measured-chip" calibration tables (DESIGN.md §4).
+//! * [`tile`] — executing quantized KAN layers/models through the analog
+//!   pipeline under a pluggable row mapping (KAN-SAM's hook).
+
+pub mod adc;
+pub mod array;
+pub mod irdrop;
+pub mod noise;
+pub mod stats;
+pub mod tile;
+
+pub use adc::Adc;
+pub use array::{ArrayConfig, Crossbar};
+pub use irdrop::mac_with_irdrop;
+pub use noise::NoiseModel;
+pub use stats::{calibrate, measured_table, ArrayStats};
+pub use tile::{identity_mapping, AcimLayer, AcimModel, AcimOptions};

@@ -1,0 +1,326 @@
+//! ACIM tile execution: running quantized KAN layers through the analog
+//! pipeline (crossbar → IR-drop → read noise → ADC), with a pluggable row
+//! mapping — the integration point for KAN-SAM (paper §3.3).
+//!
+//! A layer's spline path occupies `din · (G+K)` crossbar rows (one per
+//! (input, basis) pair, holding that pair's `dout` ci' codes). Rows are
+//! placed onto physical arrays of `cfg.rows` rows by a *mapping*: a
+//! permutation assigning logical rows to physical slots ordered by distance
+//! from the BL clamp. Partial sums from multiple tiles are combined
+//! digitally (ideal adders), as in the paper's architecture.
+
+
+use super::adc::Adc;
+use super::array::{ArrayConfig, Crossbar};
+use super::irdrop::mac_with_irdrop;
+use super::noise::NoiseModel;
+use crate::error::Result;
+use crate::kan::layer::QuantKanLayer;
+use crate::kan::model::QuantKanModel;
+
+/// Non-ideality switches for an ACIM run.
+#[derive(Debug, Clone, Copy)]
+pub struct AcimOptions {
+    pub array: ArrayConfig,
+    /// ADC resolution for partial sums.
+    pub adc_bits: u32,
+    /// ADC full-scale as a fraction of the sum of active-row full-scale
+    /// currents (headroom factor; <1 exploits sign cancellation).
+    pub adc_fs_factor: f64,
+    /// Enable the IR-drop ladder (off = ideal wires).
+    pub irdrop: bool,
+    /// Enable programming variation + read noise.
+    pub noise: bool,
+    /// RNG seed for the noise model.
+    pub seed: u64,
+}
+
+impl Default for AcimOptions {
+    fn default() -> Self {
+        Self {
+            array: ArrayConfig::default(),
+            adc_bits: 8,
+            adc_fs_factor: 0.5,
+            irdrop: true,
+            noise: true,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// One physical array holding a slice of a layer's logical rows.
+struct Tile {
+    xb: Crossbar,
+    /// logical row index for each physical slot (clamp-nearest first).
+    logical_rows: Vec<usize>,
+}
+
+/// A KAN layer programmed onto ACIM tiles under a given row mapping.
+pub struct AcimLayer {
+    pub din: usize,
+    pub dout: usize,
+    tiles: Vec<Tile>,
+    adc: Adc,
+    lut_scale: f64,
+    coeff_scale: f64,
+    wb: Vec<f64>,
+    spec: crate::quant::AspSpec,
+    lut: crate::quant::ShLut,
+}
+
+impl AcimLayer {
+    /// Program `layer` onto tiles. `mapping[k]` = the logical row placed at
+    /// global physical slot `k` (slots are filled tile by tile, each tile's
+    /// slot 0 nearest its clamp). Identity mapping = the uniform baseline.
+    pub fn program(
+        layer: &QuantKanLayer,
+        opts: &AcimOptions,
+        mapping: &[usize],
+        noise: &mut NoiseModel,
+    ) -> Result<Self> {
+        let n_rows = layer.spline_rows();
+        assert_eq!(mapping.len(), n_rows, "mapping must cover all rows");
+        let per_tile = opts.array.rows;
+        let mut tiles = Vec::new();
+        let mut slot = 0usize;
+        while slot < n_rows {
+            let count = per_tile.min(n_rows - slot);
+            let logical_rows: Vec<usize> = mapping[slot..slot + count].to_vec();
+            let mut w = Vec::with_capacity(count * layer.dout);
+            for &lr in &logical_rows {
+                w.extend_from_slice(layer.row_weights(lr));
+            }
+            let mut xb =
+                Crossbar::program(opts.array, &w, count, layer.dout, 127.0)?;
+            if opts.noise {
+                noise.apply_programming_variation(&mut xb);
+            }
+            tiles.push(Tile { xb, logical_rows });
+            slot += count;
+        }
+        // ADC full scale: active rows per input sum to ~1 drive (partition
+        // of unity), so the worst-case current is din * full-scale-cell.
+        let cell_fs = (opts.array.g_lrs_us - opts.array.g_hrs_us) * opts.array.v_read;
+        let fs = (layer.din as f64 * cell_fs * opts.adc_fs_factor).max(cell_fs);
+        Ok(Self {
+            din: layer.din,
+            dout: layer.dout,
+            tiles,
+            adc: Adc::new(opts.adc_bits, fs),
+            lut_scale: 1.0 / ((1u64 << layer.lut.bits) - 1) as f64,
+            coeff_scale: layer.coeff_scale,
+            wb: layer.wb.clone(),
+            spec: layer.spec,
+            lut: layer.lut.clone(),
+        })
+    }
+
+    /// Analog forward for one sample's input codes.
+    pub fn forward(
+        &self,
+        xq: &[u32],
+        opts: &AcimOptions,
+        noise: &mut NoiseModel,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(out.len(), self.dout);
+        // WL drives per logical row, in [0, 1]
+        let nb = self.spec.num_basis();
+        let kk = self.spec.k as usize;
+        let mut drives = vec![0.0f64; self.din * nb];
+        for (i, &q) in xq.iter().enumerate() {
+            let (j, l) = self.spec.decompose(q);
+            for t in 0..=kk {
+                let code = self.lut.lookup(l, t as u32);
+                drives[i * nb + j as usize + t] = code as f64 * self.lut_scale;
+            }
+        }
+        out.fill(0.0);
+        let mut tile_drives: Vec<f64> = Vec::new();
+        for tile in &self.tiles {
+            tile_drives.clear();
+            tile_drives.extend(tile.logical_rows.iter().map(|&lr| drives[lr]));
+            let currents = if opts.irdrop {
+                mac_with_irdrop(&tile.xb, &tile_drives)
+            } else {
+                tile.xb.mac_ideal(&tile_drives)
+            };
+            for (c, &i_ua) in currents.iter().enumerate() {
+                let i_noisy = if opts.noise { noise.read_noise(i_ua) } else { i_ua };
+                let i_q = self.adc.roundtrip(i_noisy);
+                // current -> code units (Σ drive·w) -> value
+                out[c] += tile.xb.current_to_code(i_q) * self.coeff_scale;
+            }
+        }
+        // w_b · ReLU residual path: standard DNN crossbar in the paper;
+        // modelled as digital-exact (it is not what Fig 12 varies).
+        for (i, &q) in xq.iter().enumerate() {
+            let x = self.spec.dequantize(q);
+            if x > 0.0 {
+                for c in 0..self.dout {
+                    out[c] += x * self.wb[i * self.dout + c];
+                }
+            }
+        }
+    }
+}
+
+/// A whole KAN model programmed onto ACIM, with per-layer mappings.
+pub struct AcimModel {
+    pub layers: Vec<AcimLayer>,
+    pub opts: AcimOptions,
+}
+
+impl AcimModel {
+    /// `mappings[i]` = row mapping for layer i (see [`AcimLayer::program`]).
+    pub fn program(
+        model: &QuantKanModel,
+        opts: AcimOptions,
+        mappings: &[Vec<usize>],
+    ) -> Result<Self> {
+        assert_eq!(mappings.len(), model.layers.len());
+        let mut noise = NoiseModel::from_config(opts.seed, &opts.array);
+        let layers = model
+            .layers
+            .iter()
+            .zip(mappings)
+            .map(|(l, m)| AcimLayer::program(l, &opts, m, &mut noise))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { layers, opts })
+    }
+
+    /// Analog forward for one sample.
+    pub fn forward(&self, x: &[f32], noise: &mut NoiseModel) -> Vec<f64> {
+        let mut h: Vec<f32> = x.to_vec();
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            let xq: Vec<u32> = h.iter().map(|&v| layer.spec.quantize(v as f64)).collect();
+            out = vec![0.0; layer.dout];
+            layer.forward(&xq, &self.opts, noise, &mut out);
+            h = out.iter().map(|&v| v as f32).collect();
+        }
+        out
+    }
+
+    /// Top-1 accuracy over the artifact test set.
+    pub fn accuracy(&self, ds: &crate::kan::checkpoint::Dataset) -> f64 {
+        let mut noise = NoiseModel::from_config(self.opts.seed ^ 0xabcd, &self.opts.array);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (row, label) in ds.test_rows() {
+            let out = self.forward(row, &mut noise);
+            if crate::kan::model::argmax(&out) == label as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        correct as f64 / total.max(1) as f64
+    }
+}
+
+/// Identity mapping (the uniform baseline of Fig 12).
+pub fn identity_mapping(rows: usize) -> Vec<usize> {
+    (0..rows).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kan::layer::tests::toy_layer;
+
+    fn ideal_opts(rows: usize) -> AcimOptions {
+        AcimOptions {
+            array: ArrayConfig { r_wire_ohm: 0.0, ..ArrayConfig::with_rows(rows) },
+            adc_bits: 12,
+            adc_fs_factor: 1.0,
+            irdrop: false,
+            noise: false,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn ideal_acim_matches_digital_reference() {
+        let layer = toy_layer(5, 3, 4, 3);
+        let opts = ideal_opts(256);
+        let mut nm = NoiseModel::new(1, 0.0, 0.0);
+        let mapping = identity_mapping(layer.spline_rows());
+        let acim = AcimLayer::program(&layer, &opts, &mapping, &mut nm).unwrap();
+        let xq = layer.quantize_input(&[0.3, -0.7, 0.95, -0.05]);
+        let mut want = vec![0.0; 3];
+        layer.forward_digital(&xq, &mut want);
+        let mut got = vec![0.0; 3];
+        acim.forward(&xq, &opts, &mut nm, &mut got);
+        for o in 0..3 {
+            // MLC (128 levels vs 127 codes) + 12-bit ADC keep this tight
+            assert!(
+                (got[o] - want[o]).abs() < 0.05 * want[o].abs().max(1.0),
+                "o={o}: {} vs {}",
+                got[o],
+                want[o]
+            );
+        }
+    }
+
+    #[test]
+    fn multiple_tiles_when_layer_exceeds_array() {
+        let layer = toy_layer(5, 3, 4, 3); // 4 * 8 = 32 rows
+        let opts = ideal_opts(8); // forces 4 tiles
+        let mut nm = NoiseModel::new(1, 0.0, 0.0);
+        let mapping = identity_mapping(layer.spline_rows());
+        let acim = AcimLayer::program(&layer, &opts, &mapping, &mut nm).unwrap();
+        assert_eq!(acim.tiles.len(), 4);
+        // forward still matches digital
+        let xq = layer.quantize_input(&[0.1, 0.2, -0.3, 0.8]);
+        let mut want = vec![0.0; 3];
+        layer.forward_digital(&xq, &mut want);
+        let mut got = vec![0.0; 3];
+        acim.forward(&xq, &opts, &mut nm, &mut got);
+        for o in 0..3 {
+            assert!((got[o] - want[o]).abs() < 0.05 * want[o].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn permuted_mapping_is_exact_under_ideal_wires() {
+        // with no IR-drop, row order must not matter at all
+        let layer = toy_layer(5, 3, 4, 3);
+        let opts = ideal_opts(256);
+        let mut nm = NoiseModel::new(1, 0.0, 0.0);
+        let rows = layer.spline_rows();
+        let reversed: Vec<usize> = (0..rows).rev().collect();
+        let a = AcimLayer::program(&layer, &opts, &identity_mapping(rows), &mut nm).unwrap();
+        let b = AcimLayer::program(&layer, &opts, &reversed, &mut nm).unwrap();
+        let xq = layer.quantize_input(&[0.5, -0.2, 0.9, -0.9]);
+        let (mut oa, mut ob) = (vec![0.0; 3], vec![0.0; 3]);
+        a.forward(&xq, &opts, &mut nm, &mut oa);
+        b.forward(&xq, &opts, &mut nm, &mut ob);
+        for o in 0..3 {
+            assert!((oa[o] - ob[o]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn irdrop_changes_output() {
+        let layer = toy_layer(5, 3, 8, 2);
+        let mut opts = ideal_opts(64);
+        let mut nm = NoiseModel::new(1, 0.0, 0.0);
+        let mapping = identity_mapping(layer.spline_rows());
+        let ideal_layer = AcimLayer::program(&layer, &opts, &mapping, &mut nm).unwrap();
+        let xq = layer.quantize_input(&[0.4; 8]);
+        let mut ideal_out = vec![0.0; 2];
+        ideal_layer.forward(&xq, &opts, &mut nm, &mut ideal_out);
+
+        opts.irdrop = true;
+        opts.array.r_wire_ohm = 20.0; // exaggerated to make the effect obvious
+        let real_layer = AcimLayer::program(&layer, &opts, &mapping, &mut nm).unwrap();
+        let mut real_out = vec![0.0; 2];
+        real_layer.forward(&xq, &opts, &mut nm, &mut real_out);
+        let diff: f64 = ideal_out
+            .iter()
+            .zip(&real_out)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-6, "IR-drop had no effect");
+    }
+}

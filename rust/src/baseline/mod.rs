@@ -1,0 +1,135 @@
+//! The traditional-MLP baseline of Fig 13: float inference from the
+//! exported checkpoint, plus its accelerator mapping (how many crossbar
+//! tiles / input drivers / ADC columns a conventional RRAM-ACIM DNN
+//! accelerator needs for it — consumed by `neurosim::cost`).
+
+use crate::kan::checkpoint::{Dataset, MlpCheckpoint};
+use crate::kan::model::argmax;
+
+/// An MLP materialized from `mlp.weights.json`.
+#[derive(Debug, Clone)]
+pub struct MlpModel {
+    pub name: String,
+    pub dims: Vec<usize>,
+    /// per layer: weights `[din][dout]` flattened + biases
+    pub layers: Vec<(Vec<f64>, Vec<f64>)>,
+}
+
+impl MlpModel {
+    pub fn from_checkpoint(ckpt: &MlpCheckpoint) -> Self {
+        Self {
+            name: ckpt.name.clone(),
+            dims: ckpt.dims.clone(),
+            layers: ckpt
+                .layers
+                .iter()
+                .map(|l| (l.w.clone(), l.b.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::error::Result<Self> {
+        Ok(Self::from_checkpoint(&MlpCheckpoint::load(path)?))
+    }
+
+    pub fn forward(&self, x: &[f32]) -> Vec<f64> {
+        let mut h: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        for (li, (w, b)) in self.layers.iter().enumerate() {
+            let din = self.dims[li];
+            let dout = self.dims[li + 1];
+            let mut out = b.clone();
+            for i in 0..din {
+                let hi = h[i];
+                if hi == 0.0 {
+                    continue;
+                }
+                let row = &w[i * dout..(i + 1) * dout];
+                for (o, &wv) in row.iter().enumerate() {
+                    out[o] += hi * wv;
+                }
+            }
+            if li + 1 < self.layers.len() {
+                for v in &mut out {
+                    *v = v.max(0.0);
+                }
+            }
+            h = out;
+        }
+        h
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        argmax(&self.forward(x))
+    }
+
+    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (row, label) in ds.test_rows() {
+            if self.predict(row) == label as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        correct as f64 / total.max(1) as f64
+    }
+
+    /// Total MAC count of one inference (the latency/energy driver in the
+    /// conventional accelerator).
+    pub fn macs(&self) -> usize {
+        self.dims.windows(2).map(|w| w[0] * w[1]).sum()
+    }
+
+    /// Weight count (paper's #Param row).
+    pub fn num_params(&self) -> usize {
+        self.dims.windows(2).map(|w| (w[0] + 1) * w[1]).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kan::checkpoint::MlpLayerCheckpoint;
+
+    fn tiny() -> MlpModel {
+        MlpModel::from_checkpoint(&MlpCheckpoint {
+            name: "t".into(),
+            kind: "mlp".into(),
+            dims: vec![2, 3, 2],
+            num_params: 17,
+            layers: vec![
+                MlpLayerCheckpoint {
+                    din: 2,
+                    dout: 3,
+                    w: vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.5],
+                    b: vec![0.0, 0.1, 0.0],
+                },
+                MlpLayerCheckpoint {
+                    din: 3,
+                    dout: 2,
+                    w: vec![1.0, -1.0, 0.0, 1.0, 1.0, 0.0],
+                    b: vec![0.0, 0.0],
+                },
+            ],
+            test_acc: None,
+        })
+    }
+
+    #[test]
+    fn forward_with_relu() {
+        let m = tiny();
+        let out = m.forward(&[1.0, 2.0]);
+        // h1 = relu([1*1+2*0.5, 0+1, -1+1] + [0, .1, 0]) = [2, 1.1, 0]
+        // out = [2*1 + 1.1*0, 2*-1 + 1.1*1] = [2, -0.9]
+        assert!((out[0] - 2.0).abs() < 1e-12);
+        assert!((out[1] + 0.9).abs() < 1e-12);
+        assert_eq!(m.predict(&[1.0, 2.0]), 0);
+    }
+
+    #[test]
+    fn macs_and_params() {
+        let m = tiny();
+        assert_eq!(m.macs(), 2 * 3 + 3 * 2);
+        assert_eq!(m.num_params(), 3 * 3 + 4 * 2);
+    }
+}

@@ -1,0 +1,242 @@
+//! The B(X) retrieval path (input code → LUT → routing → input generator):
+//! the hardware Fig 10 compares between conventional quantization and
+//! ASP-KAN-HAQ.
+//!
+//! Three design points are modelled:
+//!
+//! * [`BxPathDesign::Conventional`] — PACT-style quantization: grids
+//!   misaligned, so each of the `G+K` basis functions carries its own
+//!   programmable LUT (over its support), its own `2L:1` TG-MUX, and its
+//!   own n-bit decoder (paper §2.1: "individual LUTs, MUXs, and decoders
+//!   for each Bi(x)").
+//! * [`BxPathDesign::AlignmentOnly`] — ASP phase 1 only: one shared SH-LUT,
+//!   but routing still needs `K+1` wide `2L:1` TG-MUXes and a full n-bit
+//!   decoder (the "straightforward approach" of §3.1-A).
+//! * [`BxPathDesign::AspFull`] — phase 1 + 2 (PowerGap): SH-LUT plus
+//!   `K+1` `L/2:1` MUXes, `K+1` `1:G` DEMUXes, and an (n−D)-bit + D-bit
+//!   decoder pair (§3.1-B, Fig 5).
+
+
+use super::components::{Decoder, Lut, TgDemux, TgMux};
+use super::tech::{Cost, Tech};
+use crate::error::Result;
+use crate::quant::{solve_ld, AspSpec, PactSpec, ShLut};
+
+/// Which B(X)-path hardware design to cost out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BxPathDesign {
+    Conventional,
+    AlignmentOnly,
+    AspFull,
+}
+
+/// Itemized cost report of one B(X) retrieval path design point.
+#[derive(Debug, Clone)]
+pub struct BxPathReport {
+    pub design: BxPathDesign,
+    pub g: u32,
+    pub k: u32,
+    pub n_bits: u32,
+    pub lut: Cost,
+    pub mux: Cost,
+    pub decoder: Cost,
+    pub total: Cost,
+    /// Stored LUT bits (flexibility metric).
+    pub lut_bits: f64,
+}
+
+/// Cost one lookup (all active basis values for one input X) through the
+/// chosen design.
+pub fn cost_bx_path(
+    design: BxPathDesign,
+    g: u32,
+    k: u32,
+    n_bits: u32,
+    t: &Tech,
+) -> Result<BxPathReport> {
+    let nb = (g + k) as usize;
+    let report = match design {
+        BxPathDesign::Conventional => {
+            let pact = PactSpec::new(g, k, n_bits, 0.0, 1.0);
+            let entries = pact.per_basis_lut_entries();
+            // per basis: its own programmable LUT over its support, a
+            // right-sized (log2 entries)-bit decoder, and an entries:1
+            // TG-MUX; one shared n-bit decoder resolves the segment. Every
+            // LUT precharges each cycle (clocked arrays), but only the K+1
+            // active bases read a word out.
+            let local_bits = (entries as f64).log2().ceil() as u32;
+            let lut_model = Lut::programmable(entries, n_bits);
+            let lut = Cost::new(
+                lut_model.cost(t, 0).area_um2 * nb as f64,
+                // nb precharges + K+1 word reads
+                nb as f64 * entries as f64 * t.lut_precharge_fj_per_entry
+                    + (k + 1) as f64 * n_bits as f64 * t.sram_read_fj_per_bit,
+                0.15,
+            );
+            let mux_one = TgMux::new(entries).cost(t);
+            let mux = Cost::new(
+                mux_one.area_um2 * nb as f64,
+                mux_one.energy_fj * (k + 1) as f64,
+                mux_one.latency_ns,
+            );
+            let dec_one = Decoder::new(local_bits).cost(t);
+            let decoder = dec_one
+                .replicate(nb)
+                .parallel(Decoder::new(n_bits).cost(t));
+            let total = lut.parallel(mux).parallel(decoder);
+            BxPathReport {
+                design,
+                g,
+                k,
+                n_bits,
+                lut,
+                mux,
+                decoder,
+                total,
+                lut_bits: lut_model.bits() * nb as f64,
+            }
+        }
+        BxPathDesign::AlignmentOnly => {
+            let spec = AspSpec::build(g, k, n_bits, 0.0, 1.0)?;
+            let sh = ShLut::build(&spec, n_bits);
+            let l = spec.levels_per_interval() as usize;
+            // one shared hemi LUT, read K+1 words per lookup
+            let lut_c = Lut::programmable(sh.stored_entries(), n_bits).cost(t, k as usize + 1);
+            // K+1 wide 2L:1 TG-MUXes route hemi rows to the active bases
+            let mux = TgMux::new(2 * l).cost(t).replicate(k as usize + 1);
+            let decoder = Decoder::new(n_bits).cost(t);
+            let total = lut_c.parallel(mux).parallel(decoder);
+            BxPathReport {
+                design,
+                g,
+                k,
+                n_bits,
+                lut: lut_c,
+                mux,
+                decoder,
+                total,
+                lut_bits: sh.stored_entries() as f64 * n_bits as f64,
+            }
+        }
+        BxPathDesign::AspFull => {
+            let spec = AspSpec::build(g, k, n_bits, 0.0, 1.0)?;
+            let sh = ShLut::build(&spec, n_bits);
+            let ld = solve_ld(g, n_bits)?;
+            let l = spec.levels_per_interval() as usize;
+            let lut_c = Lut::programmable(sh.stored_entries(), n_bits).cost(t, k as usize + 1);
+            // K+1 of: L/2:1 MUX (hemi row select) + 1:G DEMUX (global route)
+            let mux = TgMux::new((l / 2).max(1))
+                .cost(t)
+                .parallel(TgDemux::new(g as usize).cost(t))
+                .replicate(k as usize + 1);
+            // decoder split: (n-D)-bit global + D-bit local
+            let decoder = Decoder::new(n_bits - ld)
+                .cost(t)
+                .parallel(Decoder::new(ld).cost(t));
+            let total = lut_c.parallel(mux).parallel(decoder);
+            BxPathReport {
+                design,
+                g,
+                k,
+                n_bits,
+                lut: lut_c,
+                mux,
+                decoder,
+                total,
+                lut_bits: sh.stored_entries() as f64 * n_bits as f64,
+            }
+        }
+    };
+    Ok(report)
+}
+
+/// One row of the Fig 10 sweep: conventional vs ASP for a given G.
+#[derive(Debug, Clone)]
+pub struct Fig10Row {
+    pub g: u32,
+    pub conventional: BxPathReport,
+    pub asp: BxPathReport,
+    pub area_reduction: f64,
+    pub energy_reduction: f64,
+}
+
+/// Run the paper's Fig 10 sweep (G = 8..64 by powers of two, K = 3, 8-bit).
+pub fn fig10_sweep(gs: &[u32], k: u32, n_bits: u32, t: &Tech) -> Result<Vec<Fig10Row>> {
+    gs.iter()
+        .map(|&g| {
+            let conv = cost_bx_path(BxPathDesign::Conventional, g, k, n_bits, t)?;
+            let asp = cost_bx_path(BxPathDesign::AspFull, g, k, n_bits, t)?;
+            Ok(Fig10Row {
+                g,
+                area_reduction: conv.total.area_um2 / asp.total.area_um2,
+                energy_reduction: conv.total.energy_fj / asp.total.energy_fj,
+                conventional: conv,
+                asp,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep() -> Vec<Fig10Row> {
+        fig10_sweep(&[8, 16, 32, 64], 3, 8, &Tech::default()).unwrap()
+    }
+
+    #[test]
+    fn asp_always_wins() {
+        for row in sweep() {
+            assert!(row.area_reduction > 1.0, "G={}", row.g);
+            assert!(row.energy_reduction > 1.0, "G={}", row.g);
+        }
+    }
+
+    #[test]
+    fn fig10_average_reductions_in_paper_band() {
+        // paper: average 40.14x area, 5.59x energy over G = 8..64.
+        // behavioural models, so we assert a generous band around those.
+        let rows = sweep();
+        let avg_area: f64 =
+            rows.iter().map(|r| r.area_reduction).sum::<f64>() / rows.len() as f64;
+        let avg_energy: f64 =
+            rows.iter().map(|r| r.energy_reduction).sum::<f64>() / rows.len() as f64;
+        assert!(
+            (20.0..80.0).contains(&avg_area),
+            "avg area reduction {avg_area:.2} outside band (paper 40.14x)"
+        );
+        assert!(
+            (3.0..11.0).contains(&avg_energy),
+            "avg energy reduction {avg_energy:.2} outside band (paper 5.59x)"
+        );
+    }
+
+    #[test]
+    fn phase2_beats_phase1_alone() {
+        let t = Tech::default();
+        for g in [8u32, 16, 32, 64] {
+            let p1 = cost_bx_path(BxPathDesign::AlignmentOnly, g, 3, 8, &t).unwrap();
+            let p2 = cost_bx_path(BxPathDesign::AspFull, g, 3, 8, &t).unwrap();
+            assert!(
+                p2.total.area_um2 < p1.total.area_um2,
+                "G={g}: PowerGap did not reduce area"
+            );
+            // the decoder split is the dominant phase-2 win
+            assert!(p2.decoder.area_um2 < p1.decoder.area_um2 / 2.0);
+        }
+    }
+
+    #[test]
+    fn shared_lut_bits_shrink_vs_conventional() {
+        for row in sweep() {
+            assert!(
+                row.asp.lut_bits < row.conventional.lut_bits / 4.0,
+                "G={}: {} vs {}",
+                row.g,
+                row.asp.lut_bits,
+                row.conventional.lut_bits
+            );
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Analytic 22 nm component models: decoders, LUTs, MUX/DEMUX trees, DACs,
+//! delay chains, control logic, buffers, ADCs.
+//!
+//! Each component reports a [`Cost`] = (area µm², energy fJ *per
+//! operation*, latency ns). The structural scaling laws are the load-bearing
+//! part: decoder area/energy grow exponentially with bit width (the fact
+//! PowerGap exploits), LUT cost scales with stored entries (the fact
+//! Alignment-Symmetry exploits), DAC static power grows steeply with
+//! resolution (the fact TM-DV-IG exploits).
+
+use super::tech::{Cost, Tech};
+
+/// An n-bit one-hot decoder (row decoder style: predecode + 2^n AND gates).
+#[derive(Debug, Clone, Copy)]
+pub struct Decoder {
+    pub bits: u32,
+}
+
+impl Decoder {
+    pub fn new(bits: u32) -> Self {
+        Self { bits }
+    }
+
+    pub fn cost(&self, t: &Tech) -> Cost {
+        if self.bits == 0 {
+            return Cost::default();
+        }
+        let lines = (1u64 << self.bits) as f64;
+        let b = self.bits as f64;
+        // predecoders (~2b gates) + one (b/2)-input AND per output line
+        let area = (2.0 * b + lines * (b / 2.0).max(1.0)) * t.gate_area_um2;
+        // per access: predecode switching + one line toggles + wire load
+        // that grows with the number of lines it crosses
+        let energy = (4.0 * b + 0.05 * lines) * t.gate_energy_fj;
+        let latency = 0.02 * b; // ns, logarithmic depth ~ b levels
+        Cost::new(area, energy, latency)
+    }
+}
+
+/// An SRAM-backed LUT holding `entries` words of `word_bits` bits.
+/// Non-programmable (ROM/hardwired) variants are ~3x denser but lose the
+/// flexibility the paper insists on keeping (§2.1).
+#[derive(Debug, Clone, Copy)]
+pub struct Lut {
+    pub entries: usize,
+    pub word_bits: u32,
+    pub programmable: bool,
+}
+
+impl Lut {
+    pub fn programmable(entries: usize, word_bits: u32) -> Self {
+        Self { entries, word_bits, programmable: true }
+    }
+
+    pub fn fixed(entries: usize, word_bits: u32) -> Self {
+        Self { entries, word_bits, programmable: false }
+    }
+
+    pub fn bits(&self) -> f64 {
+        self.entries as f64 * self.word_bits as f64
+    }
+
+    /// Cost of storing the table and reading `words_per_access` words.
+    /// Every access also precharges the whole array (∝ stored entries) —
+    /// the term that makes many small per-basis LUTs expensive (Fig 10).
+    pub fn cost(&self, t: &Tech, words_per_access: usize) -> Cost {
+        let density = if self.programmable { 1.0 } else { 1.0 / 3.0 };
+        let area = self.bits() * t.sram_bit_area_um2 * density;
+        let energy = words_per_access as f64
+            * self.word_bits as f64
+            * t.sram_read_fj_per_bit
+            + self.entries as f64 * t.lut_precharge_fj_per_entry;
+        Cost::new(area, energy, 0.15)
+    }
+}
+
+/// A `ways`-to-1 transmission-gate MUX (tree of TGs).
+#[derive(Debug, Clone, Copy)]
+pub struct TgMux {
+    pub ways: usize,
+}
+
+impl TgMux {
+    pub fn new(ways: usize) -> Self {
+        Self { ways }
+    }
+
+    pub fn cost(&self, t: &Tech) -> Cost {
+        if self.ways <= 1 {
+            return Cost::default();
+        }
+        let levels = (self.ways as f64).log2().ceil().max(1.0);
+        // a TG tree needs ~ways TGs total; the active path switches `levels`
+        let area = self.ways as f64 * t.tg_area_um2;
+        let energy = levels * t.tg_energy_fj;
+        Cost::new(area, energy, 0.01 * levels)
+    }
+}
+
+/// A 1-to-`ways` TG DEMUX (same tree, driven the other way).
+#[derive(Debug, Clone, Copy)]
+pub struct TgDemux {
+    pub ways: usize,
+}
+
+impl TgDemux {
+    pub fn new(ways: usize) -> Self {
+        Self { ways }
+    }
+
+    pub fn cost(&self, t: &Tech) -> Cost {
+        TgMux { ways: self.ways }.cost(t)
+    }
+}
+
+/// An N-bit resistor-string DAC with output buffer.
+///
+/// Static power is the defining property: the string conducts continuously
+/// in read mode, and higher resolution needs both more taps (2^N) and
+/// tighter settling (∝ N), so `P_static ∝ N·2^N` — the reason the pure
+/// 6-bit voltage input generator burns 11.9x the power of TM-DV-IG (Fig 11).
+#[derive(Debug, Clone, Copy)]
+pub struct Dac {
+    pub bits: u32,
+}
+
+impl Dac {
+    pub fn new(bits: u32) -> Self {
+        Self { bits }
+    }
+
+    pub fn levels(&self) -> usize {
+        1usize << self.bits
+    }
+
+    pub fn area_um2(&self, t: &Tech) -> f64 {
+        self.levels() as f64 * t.dac_unit_area_um2 + t.dac_fixed_area_um2
+    }
+
+    pub fn static_power_uw(&self, t: &Tech) -> f64 {
+        self.levels() as f64 * self.bits as f64 * t.dac_static_uw_per_level_bit
+    }
+
+    /// Cost for one conversion held for `duration_ns`.
+    pub fn cost(&self, t: &Tech, duration_ns: f64) -> Cost {
+        let energy = self.static_power_uw(t) * duration_ns; // µW·ns = fJ
+        Cost::new(self.area_um2(t), energy, 0.2 * self.bits as f64)
+    }
+}
+
+/// A delay chain of `stages` buffered taps (pulse-width generation).
+#[derive(Debug, Clone, Copy)]
+pub struct DelayChain {
+    pub stages: usize,
+}
+
+impl DelayChain {
+    pub fn new(stages: usize) -> Self {
+        Self { stages }
+    }
+
+    pub fn area_um2(&self, t: &Tech) -> f64 {
+        self.stages as f64 * t.delay_stage_area_um2
+    }
+
+    /// Cost of producing one pulse of `pulse_stages` unit widths.
+    pub fn cost(&self, t: &Tech, pulse_stages: usize, unit_ns: f64) -> Cost {
+        let active = pulse_stages.min(self.stages) as f64;
+        // dynamic power of the toggling stages over the pulse duration
+        let energy = active * t.delay_stage_power_uw * unit_ns;
+        Cost::new(self.area_um2(t), energy, active * unit_ns)
+    }
+}
+
+/// Pulse-modulation timing control (PM-TCM of Fig 7).
+#[derive(Debug, Clone, Copy)]
+pub struct PmTcm;
+
+impl PmTcm {
+    pub fn cost(&self, t: &Tech, duration_ns: f64) -> Cost {
+        Cost::new(t.pm_tcm_area_um2, t.pm_tcm_power_uw * duration_ns, 0.05)
+    }
+}
+
+/// WL driver buffer (one per word line; the TM-DV-IG switches its supply).
+#[derive(Debug, Clone, Copy)]
+pub struct WlBuffer;
+
+impl WlBuffer {
+    pub fn cost(&self, t: &Tech, duration_ns: f64) -> Cost {
+        Cost::new(t.buffer_area_um2, t.buffer_power_uw * duration_ns, 0.05)
+    }
+}
+
+/// Column ADC / sense amplifier (shared across `t.adc_share` columns).
+#[derive(Debug, Clone, Copy)]
+pub struct ColumnAdc;
+
+impl ColumnAdc {
+    /// Cost of converting `cols` columns (time-multiplexed by `adc_share`).
+    pub fn cost(&self, t: &Tech, cols: usize) -> Cost {
+        let converters = cols.div_ceil(t.adc_share);
+        let rounds = cols.div_ceil(converters.max(1));
+        Cost::new(
+            converters as f64 * t.adc_area_um2,
+            cols as f64 * t.adc_energy_fj,
+            rounds as f64 * t.adc_time_ns,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Tech {
+        Tech::default()
+    }
+
+    #[test]
+    fn decoder_area_grows_exponentially() {
+        let t = t();
+        let a8 = Decoder::new(8).cost(&t).area_um2;
+        let a5 = Decoder::new(5).cost(&t).area_um2;
+        let a3 = Decoder::new(3).cost(&t).area_um2;
+        // splitting one 8-bit decoder into 5+3 must be much cheaper (PowerGap)
+        assert!(a5 + a3 < a8 / 4.0, "split {} vs mono {}", a5 + a3, a8);
+        assert_eq!(Decoder::new(0).cost(&t).area_um2, 0.0);
+    }
+
+    #[test]
+    fn lut_fixed_is_denser_but_smaller_story() {
+        let t = t();
+        let p = Lut::programmable(128, 8).cost(&t, 1);
+        let f = Lut::fixed(128, 8).cost(&t, 1);
+        assert!(f.area_um2 < p.area_um2 / 2.0);
+        assert_eq!(f.energy_fj, p.energy_fj); // reads cost the same
+    }
+
+    #[test]
+    fn dac_static_power_superlinear_in_bits() {
+        let t = t();
+        let p6 = Dac::new(6).static_power_uw(&t);
+        let p3 = Dac::new(3).static_power_uw(&t);
+        assert!(p6 / p3 > 8.0, "ratio {}", p6 / p3); // 2^3 from taps x2 from N
+    }
+
+    #[test]
+    fn delay_chain_latency_linear_in_pulse() {
+        let t = t();
+        let c = DelayChain::new(64);
+        assert_eq!(c.cost(&t, 64, 1.0).latency_ns, 64.0);
+        assert_eq!(c.cost(&t, 8, 1.0).latency_ns, 8.0);
+        // pulse longer than the chain saturates
+        assert_eq!(c.cost(&t, 100, 1.0).latency_ns, 64.0);
+    }
+
+    #[test]
+    fn adc_sharing_reduces_area_not_energy() {
+        let t = t();
+        let shared = ColumnAdc.cost(&t, 64);
+        assert_eq!(shared.area_um2, (64f64 / 8.0).ceil() * t.adc_area_um2);
+        assert_eq!(shared.energy_fj, 64.0 * t.adc_energy_fj);
+        assert!(shared.latency_ns >= 8.0 * 0.999 * t.adc_time_ns);
+    }
+
+    #[test]
+    fn mux_tree_scales_with_ways() {
+        let t = t();
+        let m64 = TgMux::new(64).cost(&t);
+        let m8 = TgMux::new(8).cost(&t);
+        assert!(m64.area_um2 > 7.0 * m8.area_um2 / 1.01);
+        assert_eq!(TgMux::new(1).cost(&t).area_um2, 0.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Analytic 22 nm circuit models (paper's SPICE substitute; DESIGN.md §4).
+//!
+//! * [`tech`] — process constants and the (area, energy, latency) triple.
+//! * [`components`] — decoders, LUTs, MUXes, DACs, delay chains, ADCs.
+//! * [`bx_path`] — the B(X) retrieval path: ASP-KAN-HAQ vs conventional
+//!   quantization (Fig 10).
+//! * [`inputgen`] — pure-voltage / pure-PWM / TM-DV-IG word-line input
+//!   generators and the FOM comparison (Fig 11).
+
+pub mod bx_path;
+pub mod components;
+pub mod inputgen;
+pub mod tech;
+
+pub use bx_path::{cost_bx_path, fig10_sweep, BxPathDesign, BxPathReport, Fig10Row};
+pub use inputgen::{
+    fig11_comparison, InputGenReport, InputGenerator, PurePwm, PureVoltage, TmDvIg,
+};
+pub use tech::{Cost, Tech};

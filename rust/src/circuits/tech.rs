@@ -1,0 +1,162 @@
+//! 22 nm technology parameters for the analytic component models.
+//!
+//! The paper evaluates its circuits in TSMC 22 nm with SPICE; we replace
+//! SPICE with behavioural models whose constants are set to representative
+//! 22 nm values (std-cell NAND2 ≈ 0.15 µm², 6T SRAM bitcell ≈ 0.1 µm²,
+//! 1T1R RRAM cell ≈ 0.05 µm², V_DD = 0.8 V). The Fig 10/11/13 comparisons
+//! depend on *structure* (what scales exponentially, what is static power,
+//! what stacks in series), which these models capture; the constants set
+//! the absolute scale. See DESIGN.md §4 (substitutions).
+
+
+/// Process/voltage constants shared by every component model.
+#[derive(Debug, Clone, Copy)]
+pub struct Tech {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// NAND2-equivalent gate area (µm²).
+    pub gate_area_um2: f64,
+    /// Energy per gate switching event (fJ).
+    pub gate_energy_fj: f64,
+    /// 6T SRAM bitcell area including periphery share (µm²/bit).
+    pub sram_bit_area_um2: f64,
+    /// SRAM read energy (fJ/bit).
+    pub sram_read_fj_per_bit: f64,
+    /// SRAM/LUT bit-line precharge energy per stored entry per access (fJ).
+    pub lut_precharge_fj_per_entry: f64,
+    /// Transmission gate area (µm², 2 transistors).
+    pub tg_area_um2: f64,
+    /// TG switching energy (fJ).
+    pub tg_energy_fj: f64,
+    /// 1T1R RRAM cell area (µm²).
+    pub rram_cell_area_um2: f64,
+    /// Unit pulse width for WL input generation (ns).
+    pub unit_pulse_ns: f64,
+    /// DAC resistor-string unit cell area (µm² per level).
+    pub dac_unit_area_um2: f64,
+    /// DAC bias/output-buffer fixed area (µm²).
+    pub dac_fixed_area_um2: f64,
+    /// DAC static power coefficient (µW per level·bit) — higher resolution
+    /// needs both more taps (2^N) and tighter settling (∝ N).
+    pub dac_static_uw_per_level_bit: f64,
+    /// Delay-chain stage area (µm²; 2 inverters + tap/select logic).
+    pub delay_stage_area_um2: f64,
+    /// Delay-chain power per stage (µW) — the chain free-runs as the
+    /// timing reference in read mode, so this is a continuous draw.
+    pub delay_stage_power_uw: f64,
+    /// PM-TCM (pulse-modulation timing control) area (µm²).
+    pub pm_tcm_area_um2: f64,
+    /// PM-TCM power (µW).
+    pub pm_tcm_power_uw: f64,
+    /// WL driver buffer area (µm²).
+    pub buffer_area_um2: f64,
+    /// WL driver buffer power while driving (µW).
+    pub buffer_power_uw: f64,
+    /// Sense-amplifier / column ADC area (µm², per converter).
+    pub adc_area_um2: f64,
+    /// ADC energy per conversion (fJ).
+    pub adc_energy_fj: f64,
+    /// ADC conversion time (ns).
+    pub adc_time_ns: f64,
+    /// Column mux sharing ratio (columns per ADC).
+    pub adc_share: usize,
+    /// Routing/interconnect area overhead multiplier on raw cell area.
+    pub routing_factor: f64,
+}
+
+impl Default for Tech {
+    fn default() -> Self {
+        Self {
+            vdd: 0.8,
+            gate_area_um2: 0.15,
+            gate_energy_fj: 0.06,
+            sram_bit_area_um2: 0.10,
+            sram_read_fj_per_bit: 0.5,
+            lut_precharge_fj_per_entry: 0.05,
+            tg_area_um2: 0.06,
+            tg_energy_fj: 0.02,
+            rram_cell_area_um2: 0.05,
+            unit_pulse_ns: 0.5,
+            dac_unit_area_um2: 0.75,
+            dac_fixed_area_um2: 18.0,
+            dac_static_uw_per_level_bit: 0.48,
+            delay_stage_area_um2: 0.46,
+            delay_stage_power_uw: 0.1,
+            pm_tcm_area_um2: 6.5,
+            pm_tcm_power_uw: 0.8,
+            buffer_area_um2: 4.0,
+            buffer_power_uw: 1.5,
+            adc_area_um2: 180.0,
+            adc_energy_fj: 180.0,
+            adc_time_ns: 8.0,
+            adc_share: 8,
+            routing_factor: 1.6,
+        }
+    }
+}
+
+/// Area (µm²), energy per operation (fJ), latency (ns) triple — the unit
+/// every component model reports in.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Cost {
+    pub area_um2: f64,
+    pub energy_fj: f64,
+    pub latency_ns: f64,
+}
+
+impl Cost {
+    pub fn new(area_um2: f64, energy_fj: f64, latency_ns: f64) -> Self {
+        Self { area_um2, energy_fj, latency_ns }
+    }
+
+    /// Sum areas and energies; latency takes the max (parallel composition).
+    pub fn parallel(self, other: Cost) -> Cost {
+        Cost {
+            area_um2: self.area_um2 + other.area_um2,
+            energy_fj: self.energy_fj + other.energy_fj,
+            latency_ns: self.latency_ns.max(other.latency_ns),
+        }
+    }
+
+    /// Sum everything (series composition).
+    pub fn series(self, other: Cost) -> Cost {
+        Cost {
+            area_um2: self.area_um2 + other.area_um2,
+            energy_fj: self.energy_fj + other.energy_fj,
+            latency_ns: self.latency_ns + other.latency_ns,
+        }
+    }
+
+    /// Replicate a component `n` times operating in parallel.
+    pub fn replicate(self, n: usize) -> Cost {
+        Cost {
+            area_um2: self.area_um2 * n as f64,
+            energy_fj: self.energy_fj * n as f64,
+            latency_ns: self.latency_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_composition() {
+        let a = Cost::new(1.0, 2.0, 3.0);
+        let b = Cost::new(10.0, 20.0, 1.0);
+        let s = a.series(b);
+        assert_eq!(s, Cost::new(11.0, 22.0, 4.0));
+        let p = a.parallel(b);
+        assert_eq!(p, Cost::new(11.0, 22.0, 3.0));
+        let r = a.replicate(4);
+        assert_eq!(r, Cost::new(4.0, 8.0, 3.0));
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let t = Tech::default();
+        assert!(t.vdd > 0.0 && t.vdd < 2.0);
+        assert!(t.rram_cell_area_um2 < t.sram_bit_area_um2);
+    }
+}

@@ -1,0 +1,278 @@
+//! JSON configuration system for the `kan-edge` binary.
+//!
+//! A single [`AppConfig`] covers the serving runtime, the hardware model,
+//! and the NeuroSim search budgets; every subcommand takes `--config
+//! <file>` plus CLI overrides. A missing file means all defaults, so the
+//! quickstart works with zero setup. (The offline image carries no TOML
+//! parser, so config files are JSON — parsed by [`crate::util::json`].)
+
+use std::path::Path;
+
+use crate::acim::AcimOptions;
+use crate::circuits::Tech;
+use crate::error::{Error, Result};
+use crate::neurosim::HwConstraints;
+use crate::util::json::Value;
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default)]
+pub struct AppConfig {
+    pub artifacts: ArtifactsConfig,
+    pub server: ServerConfig,
+    pub hardware: HardwareConfig,
+    pub neurosim: NeurosimConfig,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactsConfig {
+    /// Directory holding manifest.json & friends (built by `make artifacts`).
+    pub dir: String,
+    /// Default model to serve.
+    pub model: String,
+}
+
+impl Default for ArtifactsConfig {
+    fn default() -> Self {
+        Self { dir: "artifacts".into(), model: "kan1".into() }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max batch the dynamic batcher will close.
+    pub max_batch: usize,
+    /// Batching deadline in microseconds.
+    pub batch_deadline_us: u64,
+    /// Bound on queued requests before admission control rejects.
+    pub queue_depth: usize,
+    /// Number of backend workers.
+    pub workers: usize,
+    /// Backend: "pjrt" (AOT graph), "digital" (rust reference) or "acim".
+    pub backend: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            batch_deadline_us: 500,
+            queue_depth: 1024,
+            workers: 2,
+            backend: "pjrt".into(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct HardwareConfig {
+    /// 22 nm technology constants.
+    pub tech: Tech,
+    /// ACIM simulation options (array geometry, non-idealities).
+    pub acim: AcimOptions,
+}
+
+#[derive(Debug, Clone)]
+pub struct NeurosimConfig {
+    pub constraints: HwConstraints,
+    /// TM-DV-IG voltage-bit modes to search over.
+    pub tm_modes: Vec<u32>,
+}
+
+impl Default for NeurosimConfig {
+    fn default() -> Self {
+        Self { constraints: HwConstraints::default(), tm_modes: vec![2, 3, 4] }
+    }
+}
+
+fn get_f64(v: &Value, key: &str, dst: &mut f64) {
+    if let Some(x) = v.get(key).and_then(|x| x.as_f64()) {
+        *dst = x;
+    }
+}
+
+fn get_usize(v: &Value, key: &str, dst: &mut usize) {
+    if let Some(x) = v.get(key).and_then(|x| x.as_usize()) {
+        *dst = x;
+    }
+}
+
+fn get_u32(v: &Value, key: &str, dst: &mut u32) {
+    if let Some(x) = v.get(key).and_then(|x| x.as_i64()) {
+        *dst = x as u32;
+    }
+}
+
+fn get_u64(v: &Value, key: &str, dst: &mut u64) {
+    if let Some(x) = v.get(key).and_then(|x| x.as_i64()) {
+        *dst = x as u64;
+    }
+}
+
+fn get_bool(v: &Value, key: &str, dst: &mut bool) {
+    if let Some(x) = v.get(key).and_then(|x| x.as_bool()) {
+        *dst = x;
+    }
+}
+
+fn get_string(v: &Value, key: &str, dst: &mut String) {
+    if let Some(x) = v.get(key).and_then(|x| x.as_str()) {
+        *dst = x.to_string();
+    }
+}
+
+impl AppConfig {
+    /// Load from a JSON file, or defaults when `path` is `None`. Unknown
+    /// keys are ignored; missing keys keep their defaults.
+    pub fn load(path: Option<&Path>) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p).map_err(|e| {
+                Error::Config(format!("cannot read config {}: {e}", p.display()))
+            })?;
+            let v = Value::parse(&text)
+                .map_err(|e| Error::Config(format!("{}: {e}", p.display())))?;
+            cfg.apply(&v);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Overlay a parsed JSON document onto the current config.
+    pub fn apply(&mut self, v: &Value) {
+        if let Some(a) = v.get("artifacts") {
+            get_string(a, "dir", &mut self.artifacts.dir);
+            get_string(a, "model", &mut self.artifacts.model);
+        }
+        if let Some(s) = v.get("server") {
+            get_usize(s, "max_batch", &mut self.server.max_batch);
+            get_u64(s, "batch_deadline_us", &mut self.server.batch_deadline_us);
+            get_usize(s, "queue_depth", &mut self.server.queue_depth);
+            get_usize(s, "workers", &mut self.server.workers);
+            get_string(s, "backend", &mut self.server.backend);
+        }
+        if let Some(h) = v.get("hardware") {
+            if let Some(t) = h.get("tech") {
+                let tech = &mut self.hardware.tech;
+                get_f64(t, "vdd", &mut tech.vdd);
+                get_f64(t, "gate_area_um2", &mut tech.gate_area_um2);
+                get_f64(t, "gate_energy_fj", &mut tech.gate_energy_fj);
+                get_f64(t, "sram_bit_area_um2", &mut tech.sram_bit_area_um2);
+                get_f64(t, "rram_cell_area_um2", &mut tech.rram_cell_area_um2);
+                get_f64(t, "unit_pulse_ns", &mut tech.unit_pulse_ns);
+                get_f64(t, "adc_area_um2", &mut tech.adc_area_um2);
+                get_f64(t, "adc_energy_fj", &mut tech.adc_energy_fj);
+                get_f64(t, "adc_time_ns", &mut tech.adc_time_ns);
+                get_usize(t, "adc_share", &mut tech.adc_share);
+                get_f64(t, "routing_factor", &mut tech.routing_factor);
+            }
+            if let Some(a) = h.get("acim") {
+                let acim = &mut self.hardware.acim;
+                if let Some(arr) = a.get("array") {
+                    get_usize(arr, "rows", &mut acim.array.rows);
+                    get_usize(arr, "cols", &mut acim.array.cols);
+                    get_f64(arr, "r_wire_ohm", &mut acim.array.r_wire_ohm);
+                    get_f64(arr, "g_lrs_us", &mut acim.array.g_lrs_us);
+                    get_f64(arr, "g_hrs_us", &mut acim.array.g_hrs_us);
+                    get_u32(arr, "levels", &mut acim.array.levels);
+                    get_f64(arr, "v_read", &mut acim.array.v_read);
+                    get_f64(arr, "sigma_program", &mut acim.array.sigma_program);
+                    get_f64(arr, "sigma_read", &mut acim.array.sigma_read);
+                }
+                get_u32(a, "adc_bits", &mut acim.adc_bits);
+                get_f64(a, "adc_fs_factor", &mut acim.adc_fs_factor);
+                get_bool(a, "irdrop", &mut acim.irdrop);
+                get_bool(a, "noise", &mut acim.noise);
+                get_u64(a, "seed", &mut acim.seed);
+            }
+        }
+        if let Some(n) = v.get("neurosim") {
+            if let Some(c) = n.get("constraints") {
+                self.neurosim.constraints.max_area_mm2 =
+                    c.get("max_area_mm2").and_then(|x| x.as_f64());
+                self.neurosim.constraints.max_energy_pj =
+                    c.get("max_energy_pj").and_then(|x| x.as_f64());
+                self.neurosim.constraints.max_latency_ns =
+                    c.get("max_latency_ns").and_then(|x| x.as_f64());
+            }
+            if let Some(modes) = n.get("tm_modes").and_then(|m| m.as_array()) {
+                let parsed: Vec<u32> = modes
+                    .iter()
+                    .filter_map(|m| m.as_i64())
+                    .map(|m| m as u32)
+                    .collect();
+                if !parsed.is_empty() {
+                    self.neurosim.tm_modes = parsed;
+                }
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.server.max_batch == 0 {
+            return Err(Error::Config("server.max_batch must be > 0".into()));
+        }
+        if self.server.workers == 0 {
+            return Err(Error::Config("server.workers must be > 0".into()));
+        }
+        if !matches!(self.server.backend.as_str(), "pjrt" | "acim" | "digital") {
+            return Err(Error::Config(format!(
+                "unknown backend '{}' (pjrt | acim | digital)",
+                self.server.backend
+            )));
+        }
+        self.hardware.acim.array.validate()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        AppConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn partial_json_fills_defaults() {
+        let mut cfg = AppConfig::default();
+        cfg.apply(&Value::parse(r#"{"server": {"max_batch": 8}}"#).unwrap());
+        assert_eq!(cfg.server.max_batch, 8);
+        assert_eq!(cfg.server.workers, ServerConfig::default().workers);
+        assert_eq!(cfg.artifacts.model, "kan1");
+    }
+
+    #[test]
+    fn nested_hardware_overrides() {
+        let mut cfg = AppConfig::default();
+        cfg.apply(
+            &Value::parse(
+                r#"{"hardware": {"acim": {"array": {"rows": 512}, "irdrop": false},
+                    "tech": {"vdd": 0.9}}}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(cfg.hardware.acim.array.rows, 512);
+        assert!(!cfg.hardware.acim.irdrop);
+        assert_eq!(cfg.hardware.tech.vdd, 0.9);
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        let mut cfg = AppConfig::default();
+        cfg.server.backend = "gpu".into();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn neurosim_constraints_parse() {
+        let mut cfg = AppConfig::default();
+        cfg.apply(
+            &Value::parse(r#"{"neurosim": {"constraints": {"max_area_mm2": 0.05}, "tm_modes": [3]}}"#)
+                .unwrap(),
+        );
+        assert_eq!(cfg.neurosim.constraints.max_area_mm2, Some(0.05));
+        assert_eq!(cfg.neurosim.tm_modes, vec![3]);
+    }
+}

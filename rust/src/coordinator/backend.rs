@@ -1,0 +1,230 @@
+//! Inference backends the router can dispatch to.
+//!
+//! * [`PjrtBackend`] — the AOT-compiled HLO graph on the PJRT CPU client
+//!   (digital reference, batch-shaped; short batches are padded). The
+//!   `xla` crate's client types are `!Send` (`Rc` + raw pointers), so the
+//!   executable lives on a dedicated actor thread and batches cross a
+//!   channel — the PJRT runtime itself parallelizes the math internally.
+//! * [`DigitalBackend`] — the rust integer-dataflow reference
+//!   ([`QuantKanModel`]), bit-faithful to the hardware pipeline minus
+//!   analog effects. No padding constraints.
+//! * [`AcimBackend`] — the full analog simulator (IR-drop + noise + ADC).
+//! * [`MlpBackend`] — the float MLP baseline.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex};
+
+use crate::acim::{AcimModel, NoiseModel};
+use crate::baseline::MlpModel;
+use crate::error::{Error, Result};
+use crate::kan::QuantKanModel;
+use crate::runtime::PjrtEngine;
+
+/// A synchronous batch-inference backend. Called from blocking worker
+/// tasks; implementations must be `Send + Sync`.
+pub trait InferBackend: Send + Sync {
+    fn name(&self) -> &str;
+    /// Number of output logits per row.
+    fn output_dim(&self) -> usize;
+    /// Run a batch of feature rows; returns one logit vector per row.
+    fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+}
+
+type PjrtJob = (Vec<Vec<f32>>, SyncSender<Result<Vec<Vec<f32>>>>);
+
+/// PJRT executable backend: an actor thread owning the (!Send) client.
+pub struct PjrtBackend {
+    tx: Mutex<SyncSender<PjrtJob>>,
+    model: String,
+    output_dim: usize,
+}
+
+impl PjrtBackend {
+    /// Spawn the actor: it creates the PJRT client, compiles `hlo_path`,
+    /// and then serves batches until the backend is dropped.
+    pub fn spawn(
+        hlo_path: PathBuf,
+        batch: usize,
+        input_dim: usize,
+        output_dim: usize,
+        model: String,
+    ) -> Result<Self> {
+        let (job_tx, job_rx) = sync_channel::<PjrtJob>(16);
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        std::thread::Builder::new()
+            .name("kan-edge-pjrt".into())
+            .spawn(move || {
+                // keep the client (engine) alive for the executable's whole
+                // lifetime — the loaded executable references it internally
+                let (_engine, exe) = match PjrtEngine::cpu().and_then(|e| {
+                    e.load_hlo(&hlo_path, batch, input_dim, output_dim)
+                        .map(|exe| (e, exe))
+                }) {
+                    Ok(pair) => {
+                        let _ = ready_tx.send(Ok(()));
+                        pair
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok((rows, reply)) = job_rx.recv() {
+                    let result = run_batches(&exe, &rows, batch, input_dim, output_dim);
+                    let _ = reply.send(result);
+                }
+            })
+            .map_err(|e| Error::Serving(format!("cannot spawn pjrt actor: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt actor died during startup".into()))??;
+        Ok(Self { tx: Mutex::new(job_tx), model, output_dim })
+    }
+}
+
+fn run_batches(
+    exe: &crate::runtime::PjrtExecutable,
+    rows: &[Vec<f32>],
+    batch: usize,
+    input_dim: usize,
+    output_dim: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut out = Vec::with_capacity(rows.len());
+    for chunk in rows.chunks(batch) {
+        let mut flat = vec![0.0f32; batch * input_dim];
+        for (i, row) in chunk.iter().enumerate() {
+            if row.len() != input_dim {
+                return Err(Error::Shape(format!(
+                    "row has {} features, expected {input_dim}",
+                    row.len()
+                )));
+            }
+            flat[i * input_dim..(i + 1) * input_dim].copy_from_slice(row);
+        }
+        let y = exe.run(&flat)?;
+        for i in 0..chunk.len() {
+            out.push(y[i * output_dim..(i + 1) * output_dim].to_vec());
+        }
+    }
+    Ok(out)
+}
+
+impl InferBackend for PjrtBackend {
+    fn name(&self) -> &str {
+        &self.model
+    }
+
+    fn output_dim(&self) -> usize {
+        self.output_dim
+    }
+
+    fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send((rows.to_vec(), reply_tx))
+                .map_err(|_| Error::Runtime("pjrt actor gone".into()))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt actor dropped reply".into()))?
+    }
+}
+
+/// Rust digital-reference backend.
+pub struct DigitalBackend {
+    pub model: Arc<QuantKanModel>,
+}
+
+impl InferBackend for DigitalBackend {
+    fn name(&self) -> &str {
+        &self.model.name
+    }
+
+    fn output_dim(&self) -> usize {
+        self.model.output_dim()
+    }
+
+    fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        // flatten once and run the batch path: one allocation set per layer
+        // instead of per row (EXPERIMENTS.md §Perf: +9% serving throughput)
+        let din = self.model.input_dim();
+        let dout = self.model.output_dim();
+        let mut flat = Vec::with_capacity(rows.len() * din);
+        for r in rows {
+            if r.len() != din {
+                return Err(crate::error::Error::Shape(format!(
+                    "row has {} features, expected {din}",
+                    r.len()
+                )));
+            }
+            flat.extend_from_slice(r);
+        }
+        let out = self.model.forward_batch(&flat, rows.len());
+        Ok(out
+            .chunks_exact(dout)
+            .map(|c| c.iter().map(|&v| v as f32).collect())
+            .collect())
+    }
+}
+
+/// Analog ACIM-simulator backend (deterministic per-backend noise stream).
+pub struct AcimBackend {
+    pub model: Arc<AcimModel>,
+    pub name: String,
+    noise: Mutex<NoiseModel>,
+}
+
+impl AcimBackend {
+    pub fn new(model: Arc<AcimModel>, name: String) -> Self {
+        let noise = NoiseModel::from_config(model.opts.seed ^ 0x77, &model.opts.array);
+        Self { model, name, noise: Mutex::new(noise) }
+    }
+}
+
+impl InferBackend for AcimBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn output_dim(&self) -> usize {
+        self.model.layers.last().map(|l| l.dout).unwrap_or(0)
+    }
+
+    fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut noise = self.noise.lock().unwrap();
+        Ok(rows
+            .iter()
+            .map(|r| {
+                self.model
+                    .forward(r, &mut noise)
+                    .iter()
+                    .map(|&v| v as f32)
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+/// Float MLP baseline backend.
+pub struct MlpBackend {
+    pub model: Arc<MlpModel>,
+}
+
+impl InferBackend for MlpBackend {
+    fn name(&self) -> &str {
+        &self.model.name
+    }
+
+    fn output_dim(&self) -> usize {
+        *self.model.dims.last().unwrap()
+    }
+
+    fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(rows
+            .iter()
+            .map(|r| self.model.forward(r).iter().map(|&v| v as f32).collect())
+            .collect())
+    }
+}

@@ -1,0 +1,204 @@
+//! Dynamic batching: close a batch when it reaches `max_batch` or when the
+//! oldest queued request has waited `deadline` — the standard
+//! latency/throughput knob of serving systems (vLLM-style), sized here for
+//! edge KAN inference where batches are small and deadlines tight.
+//!
+//! Built on `std::sync::mpsc` (the offline image has no tokio); the
+//! batcher runs on its own thread and `recv_timeout` implements the
+//! deadline.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+/// One queued inference request. `respond` is a rendezvous channel the
+/// worker pushes the result into (a one-shot).
+pub struct Request {
+    pub features: Vec<f32>,
+    pub enqueued: Instant,
+    pub respond: SyncSender<Result<Vec<f32>>>,
+}
+
+/// A closed batch ready for a backend.
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub closed_at: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Oldest queue wait in the batch (admission → close).
+    pub fn max_queue_wait(&self) -> Duration {
+        self.requests
+            .iter()
+            .map(|r| self.closed_at.duration_since(r.enqueued))
+            .max()
+            .unwrap_or_default()
+    }
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub deadline: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 32, deadline: Duration::from_micros(500) }
+    }
+}
+
+/// Pull requests from `rx` and emit closed batches to `tx`.
+///
+/// Runs until the request channel closes; flushes the partial batch on
+/// shutdown. This is the leader loop of the serving pipeline.
+pub fn run_batcher(rx: Receiver<Request>, tx: SyncSender<Batch>, policy: BatchPolicy) {
+    let mut pending: Vec<Request> = Vec::with_capacity(policy.max_batch);
+    'outer: loop {
+        // wait for the first request of the batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let batch_deadline = Instant::now() + policy.deadline;
+        pending.push(first);
+        // fill until size or deadline
+        while pending.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= batch_deadline {
+                break;
+            }
+            match rx.recv_timeout(batch_deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    // flush and stop
+                    let batch = Batch {
+                        requests: std::mem::take(&mut pending),
+                        closed_at: Instant::now(),
+                    };
+                    let _ = tx.send(batch);
+                    break 'outer;
+                }
+            }
+        }
+        let batch = Batch {
+            requests: std::mem::take(&mut pending),
+            closed_at: Instant::now(),
+        };
+        if tx.send(batch).is_err() {
+            break; // executor side gone
+        }
+    }
+}
+
+/// Admit a request or hand it back (admission control on queue depth).
+pub fn try_admit(tx: &SyncSender<Request>, req: Request) -> std::result::Result<(), Request> {
+    match tx.try_send(req) {
+        Ok(()) => Ok(()),
+        Err(TrySendError::Full(r)) => Err(r),
+        Err(TrySendError::Disconnected(r)) => Err(r),
+    }
+}
+
+/// Standard rejection reply for a failed admission.
+pub fn reject(req: Request) {
+    let _ = req
+        .respond
+        .try_send(Err(Error::Serving("queue full: admission rejected".into())));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{sync_channel, Receiver as StdReceiver};
+    use std::thread;
+
+    fn mk_request(v: f32) -> (Request, StdReceiver<Result<Vec<f32>>>) {
+        let (tx, rx) = sync_channel(1);
+        (
+            Request { features: vec![v], enqueued: Instant::now(), respond: tx },
+            rx,
+        )
+    }
+
+    #[test]
+    fn closes_on_max_batch() {
+        let (req_tx, req_rx) = sync_channel(64);
+        let (batch_tx, batch_rx) = sync_channel(8);
+        let policy = BatchPolicy { max_batch: 4, deadline: Duration::from_secs(10) };
+        thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let mut keep = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = mk_request(i as f32);
+            keep.push(rx);
+            req_tx.send(r).unwrap();
+        }
+        let batch = batch_rx.recv().unwrap();
+        assert_eq!(batch.len(), 4);
+    }
+
+    #[test]
+    fn closes_on_deadline() {
+        let (req_tx, req_rx) = sync_channel(64);
+        let (batch_tx, batch_rx) = sync_channel(8);
+        let policy =
+            BatchPolicy { max_batch: 100, deadline: Duration::from_millis(20) };
+        thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let (r, _rx) = mk_request(1.0);
+        let t0 = Instant::now();
+        req_tx.send(r).unwrap();
+        let batch = batch_rx.recv().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn flushes_on_shutdown() {
+        let (req_tx, req_rx) = sync_channel(64);
+        let (batch_tx, batch_rx) = sync_channel(8);
+        let policy = BatchPolicy { max_batch: 100, deadline: Duration::from_secs(10) };
+        let handle = thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let (r, _rx) = mk_request(1.0);
+        req_tx.send(r).unwrap();
+        thread::sleep(Duration::from_millis(20)); // batcher picked it up
+        drop(req_tx); // close channel while batch is filling
+        let batch = batch_rx.recv().unwrap();
+        assert_eq!(batch.len(), 1);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn admission_control_rejects_when_full() {
+        let (req_tx, _req_rx) = sync_channel(1);
+        let (r1, _rx1) = mk_request(1.0);
+        assert!(try_admit(&req_tx, r1).is_ok());
+        let (r2, rx2) = mk_request(2.0);
+        let rejected = try_admit(&req_tx, r2).unwrap_err();
+        reject(rejected);
+        let resp = rx2.recv().unwrap();
+        assert!(resp.is_err());
+    }
+
+    #[test]
+    fn queue_wait_measured_from_enqueue() {
+        let (tx, _rx) = sync_channel(1);
+        let early = Request {
+            features: vec![],
+            enqueued: Instant::now() - Duration::from_millis(50),
+            respond: tx,
+        };
+        let batch = Batch { requests: vec![early], closed_at: Instant::now() };
+        assert!(batch.max_queue_wait() >= Duration::from_millis(50));
+    }
+}

@@ -1,0 +1,133 @@
+//! Serving metrics: latency percentiles, throughput, batch occupancy.
+//!
+//! Lock-free on the hot path is unnecessary at edge request rates; a
+//! mutexed reservoir keeps the code simple and the report exact.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<u64>,
+    queue_waits_us: Vec<u64>,
+    batch_sizes: Vec<usize>,
+    requests: u64,
+    rejected: u64,
+    errors: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// A point-in-time metrics report.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub requests: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub throughput_rps: f64,
+    pub latency_p50_us: u64,
+    pub latency_p99_us: u64,
+    pub queue_wait_p50_us: u64,
+    pub mean_batch: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, latency: Duration, queue_wait: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        g.started.get_or_insert(now);
+        g.finished = Some(now);
+        g.latencies_us.push(latency.as_micros() as u64);
+        g.queue_waits_us.push(queue_wait.as_micros() as u64);
+        g.requests += 1;
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.inner.lock().unwrap().batch_sizes.push(size);
+    }
+
+    pub fn record_rejection(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies_us.clone();
+        lat.sort_unstable();
+        let mut qw = g.queue_waits_us.clone();
+        qw.sort_unstable();
+        let wall = match (g.started, g.finished) {
+            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        MetricsReport {
+            requests: g.requests,
+            rejected: g.rejected,
+            errors: g.errors,
+            throughput_rps: if wall > 0.0 { g.requests as f64 / wall } else { 0.0 },
+            latency_p50_us: percentile(&lat, 0.50),
+            latency_p99_us: percentile(&lat, 0.99),
+            queue_wait_p50_us: percentile(&qw, 0.50),
+            mean_batch: if g.batch_sizes.is_empty() {
+                0.0
+            } else {
+                g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
+            },
+        }
+    }
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).floor() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let m = Metrics::new();
+        for i in 0..10 {
+            m.record_request(
+                Duration::from_micros(100 + i * 10),
+                Duration::from_micros(5),
+            );
+        }
+        m.record_batch(4);
+        m.record_batch(6);
+        m.record_rejection();
+        let r = m.report();
+        assert_eq!(r.requests, 10);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.mean_batch, 5.0);
+        assert!(r.latency_p50_us >= 100);
+        assert!(r.latency_p99_us >= r.latency_p50_us);
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 edge-inference serving runtime.
+//!
+//! Pipeline: admission control → [`batcher`] (size/deadline dynamic
+//! batching) → worker pool → [`backend`] (PJRT digital reference, rust
+//! integer reference, ACIM analog simulator, or MLP baseline), with
+//! [`metrics`] throughout and [`router`] turning config + artifacts into a
+//! running [`server::InferenceService`].
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod tcp;
+
+pub use backend::{AcimBackend, DigitalBackend, InferBackend, MlpBackend, PjrtBackend};
+pub use batcher::{Batch, BatchPolicy, Request};
+pub use metrics::{Metrics, MetricsReport};
+pub use router::{build_acim, build_acim_with_calib, build_backend};
+pub use server::{InferenceService, ServeOptions};
+pub use tcp::TcpServer;

@@ -1,0 +1,106 @@
+//! Backend construction + routing: turn config + artifacts into a running
+//! [`InferenceService`].
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::backend::{AcimBackend, DigitalBackend, InferBackend, MlpBackend, PjrtBackend};
+use crate::acim::{AcimModel, AcimOptions};
+use crate::baseline::MlpModel;
+use crate::config::AppConfig;
+use crate::error::{Error, Result};
+use crate::kan::checkpoint::{Dataset, Manifest};
+use crate::kan::QuantKanModel;
+use crate::mapping::{self, MappingStrategy};
+
+/// Build the backend named by `cfg.server.backend` for `model`.
+pub fn build_backend(
+    cfg: &AppConfig,
+    manifest: &Manifest,
+    model: &str,
+) -> Result<Arc<dyn InferBackend>> {
+    let dir = Path::new(&cfg.artifacts.dir);
+    let entry = manifest
+        .models
+        .get(model)
+        .ok_or_else(|| Error::Artifact(format!("model '{model}' not in manifest")))?;
+
+    match (cfg.server.backend.as_str(), entry.kind.as_str()) {
+        (_, "mlp") => {
+            let mlp = MlpModel::load(dir.join(&entry.weights))?;
+            Ok(Arc::new(MlpBackend { model: Arc::new(mlp) }))
+        }
+        ("pjrt", _) => {
+            let batch = cfg.server.max_batch;
+            // use the largest compiled batch <= configured max
+            let mut sizes: Vec<usize> = entry.hlo.keys().copied().collect();
+            sizes.sort_unstable();
+            let chosen = sizes
+                .iter()
+                .rev()
+                .find(|&&s| s <= batch)
+                .or(sizes.first())
+                .copied()
+                .ok_or_else(|| Error::Artifact(format!("model '{model}' has no HLO")))?;
+            let file = entry.hlo.get(&chosen).expect("chosen batch exists");
+            let backend = PjrtBackend::spawn(
+                dir.join(file),
+                chosen,
+                entry.dims[0],
+                *entry.dims.last().unwrap(),
+                model.to_string(),
+            )?;
+            Ok(Arc::new(backend))
+        }
+        ("digital", _) => {
+            let qk = QuantKanModel::load(dir.join(&entry.weights))?;
+            Ok(Arc::new(DigitalBackend { model: Arc::new(qk) }))
+        }
+        ("acim", _) => {
+            let qk = QuantKanModel::load(dir.join(&entry.weights))?;
+            let acim = build_acim(&qk, cfg.hardware.acim, dir, MappingStrategy::Sam)?;
+            Ok(Arc::new(AcimBackend::new(Arc::new(acim), model.to_string())))
+        }
+        (other, _) => Err(Error::Config(format!("unknown backend '{other}'"))),
+    }
+}
+
+/// Program a quantized KAN onto the ACIM simulator with the given mapping
+/// strategy (probabilities estimated from the artifact calibration set).
+pub fn build_acim(
+    model: &QuantKanModel,
+    opts: AcimOptions,
+    artifacts_dir: &Path,
+    strategy: MappingStrategy,
+) -> Result<AcimModel> {
+    let ds = Dataset::load(artifacts_dir)?;
+    build_acim_with_calib(model, opts, &ds, strategy)
+}
+
+/// Same as [`build_acim`] but with an explicit dataset (used by benches).
+pub fn build_acim_with_calib(
+    model: &QuantKanModel,
+    opts: AcimOptions,
+    ds: &Dataset,
+    strategy: MappingStrategy,
+) -> Result<AcimModel> {
+    let mut mappings = Vec::new();
+    // propagate calibration activations layer by layer to estimate each
+    // layer's input distribution
+    let mut acts: Vec<Vec<f32>> = ds.calib_rows().map(|r| r.to_vec()).collect();
+    for layer in &model.layers {
+        let probs = mapping::empirical(layer, acts.iter().cloned());
+        mappings.push(mapping::build_mapping(&probs, opts.array.rows, strategy));
+        // next layer's calibration inputs = this layer's digital outputs
+        acts = acts
+            .iter()
+            .map(|r| {
+                let xq = layer.quantize_input(r);
+                let mut out = vec![0.0; layer.dout];
+                layer.forward_digital(&xq, &mut out);
+                out.iter().map(|&v| v as f32).collect()
+            })
+            .collect();
+    }
+    AcimModel::program(model, opts, &mappings)
+}

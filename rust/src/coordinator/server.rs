@@ -1,0 +1,185 @@
+//! The serving engine: admission → dynamic batcher → worker pool →
+//! backend, with metrics throughout. The public handle is
+//! [`InferenceService`], a cheap-to-clone client; `infer` blocks the
+//! calling thread (callers that need async fan-out use one thread per
+//! in-flight request, which is plenty at edge rates).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::backend::InferBackend;
+use super::batcher::{reject, run_batcher, try_admit, Batch, BatchPolicy, Request};
+use super::metrics::Metrics;
+use crate::error::{Error, Result};
+
+/// Serving configuration (see `config::ServerConfig` for the file side).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    pub policy: BatchPolicy,
+    pub queue_depth: usize,
+    pub workers: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { policy: BatchPolicy::default(), queue_depth: 1024, workers: 2 }
+    }
+}
+
+/// Cheap-to-clone handle for submitting inference requests.
+#[derive(Clone)]
+pub struct InferenceService {
+    tx: SyncSender<Request>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl InferenceService {
+    /// Spin up the batcher + worker pool over `backend`.
+    pub fn start(backend: Arc<dyn InferBackend>, opts: ServeOptions) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let (req_tx, req_rx) = sync_channel::<Request>(opts.queue_depth);
+        let (batch_tx, batch_rx) = sync_channel::<Batch>(opts.workers.max(1) * 2);
+        std::thread::Builder::new()
+            .name("kan-edge-batcher".into())
+            .spawn(move || run_batcher(req_rx, batch_tx, opts.policy))
+            .expect("spawn batcher");
+
+        let shared_rx = Arc::new(Mutex::new(batch_rx));
+        for i in 0..opts.workers.max(1) {
+            let rx = shared_rx.clone();
+            let be = backend.clone();
+            let m = metrics.clone();
+            std::thread::Builder::new()
+                .name(format!("kan-edge-worker-{i}"))
+                .spawn(move || worker_loop(rx, be, m))
+                .expect("spawn worker");
+        }
+        Self { tx: req_tx, metrics }
+    }
+
+    /// Submit one feature vector and wait for the logits.
+    pub fn infer(&self, features: Vec<f32>) -> Result<Vec<f32>> {
+        let (tx, rx) = sync_channel(1);
+        let req = Request { features, enqueued: Instant::now(), respond: tx };
+        if let Err(r) = try_admit(&self.tx, req) {
+            self.metrics.record_rejection();
+            reject(r);
+            return Err(Error::Serving("queue full: admission rejected".into()));
+        }
+        rx.recv()
+            .map_err(|_| Error::Serving("service shut down".into()))?
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Batch>>>,
+    be: Arc<dyn InferBackend>,
+    m: Arc<Metrics>,
+) {
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => break,
+            }
+        };
+        m.record_batch(batch.len());
+        let queue_wait = batch.max_queue_wait();
+        let rows: Vec<Vec<f32>> =
+            batch.requests.iter().map(|r| r.features.clone()).collect();
+        match be.infer_batch(&rows) {
+            Ok(outputs) => {
+                for (req, out) in batch.requests.into_iter().zip(outputs) {
+                    let latency = req.enqueued.elapsed();
+                    m.record_request(latency, queue_wait);
+                    let _ = req.respond.try_send(Ok(out));
+                }
+            }
+            Err(e) => {
+                m.record_error();
+                let msg = e.to_string();
+                for req in batch.requests {
+                    let _ = req.respond.try_send(Err(Error::Serving(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Backend that doubles its input.
+    struct Doubler;
+
+    impl InferBackend for Doubler {
+        fn name(&self) -> &str {
+            "doubler"
+        }
+
+        fn output_dim(&self) -> usize {
+            1
+        }
+
+        fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Ok(rows.iter().map(|r| vec![r[0] * 2.0]).collect())
+        }
+    }
+
+    struct Exploder;
+
+    impl InferBackend for Exploder {
+        fn name(&self) -> &str {
+            "exploder"
+        }
+
+        fn output_dim(&self) -> usize {
+            1
+        }
+
+        fn infer_batch(&self, _rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Err(Error::Serving("boom".into()))
+        }
+    }
+
+    #[test]
+    fn end_to_end_inference() {
+        let svc = InferenceService::start(Arc::new(Doubler), ServeOptions::default());
+        let out = svc.infer(vec![21.0]).unwrap();
+        assert_eq!(out, vec![42.0]);
+        assert_eq!(svc.metrics.report().requests, 1);
+    }
+
+    #[test]
+    fn concurrent_requests_are_batched() {
+        let opts = ServeOptions {
+            policy: BatchPolicy { max_batch: 16, deadline: Duration::from_millis(5) },
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Arc::new(Doubler), opts);
+        let mut handles = Vec::new();
+        for i in 0..64 {
+            let s = svc.clone();
+            handles.push(std::thread::spawn(move || s.infer(vec![i as f32])));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let out = h.join().unwrap().unwrap();
+            assert_eq!(out[0], 2.0 * i as f32);
+        }
+        let report = svc.metrics.report();
+        assert_eq!(report.requests, 64);
+        assert!(report.mean_batch > 1.0, "no batching happened");
+    }
+
+    #[test]
+    fn backend_errors_propagate() {
+        let svc = InferenceService::start(Arc::new(Exploder), ServeOptions::default());
+        let err = svc.infer(vec![1.0]).unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        assert_eq!(svc.metrics.report().errors, 1);
+    }
+}

@@ -1,0 +1,202 @@
+//! TCP wire protocol: JSON lines over a plain socket.
+//!
+//! Request:  `{"features": [f32; din]}\n`
+//! Response: `{"logits": [...], "class": k}\n` or `{"error": "..."}\n`
+//!
+//! One thread per connection (edge request rates make this the simplest
+//! correct design); the shared [`InferenceService`] behind it batches
+//! across connections.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::server::InferenceService;
+use crate::error::Result;
+use crate::kan::model::argmax;
+use crate::util::json::{obj, Value};
+
+/// A running TCP server; dropping the handle does not stop it (process
+/// lifetime), but `shutdown` flips the accept loop off for tests.
+pub struct TcpServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve `svc`.
+    pub fn spawn(addr: &str, svc: InferenceService) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        std::thread::Builder::new()
+            .name("kan-edge-tcp".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            let svc = svc.clone();
+                            std::thread::spawn(move || handle_conn(s, svc));
+                        }
+                        Err(e) => eprintln!("accept error: {e}"),
+                    }
+                }
+            })
+            .map_err(|e| crate::error::Error::Serving(format!("spawn tcp: {e}")))?;
+        Ok(TcpServer { addr: local, stop })
+    }
+
+    /// Ask the accept loop to exit after the next connection attempt.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // poke the listener so `incoming()` yields once more
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Serve one connection until EOF.
+pub fn handle_conn(stream: TcpStream, svc: InferenceService) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = respond(&line, &svc);
+        let mut text = reply.to_string();
+        text.push('\n');
+        if writer.write_all(text.as_bytes()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Pure request→response mapping (unit-testable without sockets).
+pub fn respond(line: &str, svc: &InferenceService) -> Value {
+    match Value::parse(line).ok().and_then(|v| v.f32_vec("features").ok()) {
+        Some(features) => match svc.infer(features) {
+            Ok(logits) => {
+                let pred =
+                    argmax(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>());
+                let items: Vec<Value> =
+                    logits.iter().map(|&v| Value::Float(v as f64)).collect();
+                obj(vec![
+                    ("logits", Value::Array(items)),
+                    ("class", Value::Int(pred as i64)),
+                ])
+            }
+            Err(e) => obj(vec![("error", Value::Str(e.to_string()))]),
+        },
+        None => obj(vec![(
+            "error",
+            Value::Str("bad request: expected {\"features\": [...]}".into()),
+        )]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::InferBackend;
+    use crate::coordinator::server::ServeOptions;
+    use crate::error::Result;
+
+    struct Sum;
+
+    impl InferBackend for Sum {
+        fn name(&self) -> &str {
+            "sum"
+        }
+
+        fn output_dim(&self) -> usize {
+            2
+        }
+
+        fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Ok(rows
+                .iter()
+                .map(|r| {
+                    let s: f32 = r.iter().sum();
+                    vec![s, -s]
+                })
+                .collect())
+        }
+    }
+
+    fn svc() -> InferenceService {
+        InferenceService::start(std::sync::Arc::new(Sum), ServeOptions::default())
+    }
+
+    #[test]
+    fn respond_happy_path() {
+        let v = respond(r#"{"features": [1.0, 2.0]}"#, &svc());
+        assert_eq!(v.get("class").unwrap().as_i64().unwrap(), 0); // 3 > -3
+        let logits = v.get("logits").unwrap().as_array().unwrap();
+        assert_eq!(logits[0].as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn respond_rejects_garbage() {
+        for bad in ["not json", "{}", r#"{"features": "x"}"#, r#"{"features": [1, "a"]}"#] {
+            let v = respond(bad, &svc());
+            assert!(v.get("error").is_some(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn tcp_roundtrip_over_real_socket() {
+        use std::io::{BufRead, BufReader, Write};
+        let server = TcpServer::spawn("127.0.0.1:0", svc()).unwrap();
+        let mut conn = std::net::TcpStream::connect(server.addr).unwrap();
+        conn.write_all(b"{\"features\": [2.0, 2.0, 1.0]}\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = Value::parse(&line).unwrap();
+        assert_eq!(v.get("class").unwrap().as_i64().unwrap(), 0);
+        // pipelined second request on the same connection
+        conn.write_all(b"{\"features\": [-5.0]}\n").unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        let v2 = Value::parse(&line2).unwrap();
+        assert_eq!(v2.get("class").unwrap().as_i64().unwrap(), 1); // -(-5) wins
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_tcp_clients() {
+        let server = TcpServer::spawn("127.0.0.1:0", svc()).unwrap();
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for i in 0..6 {
+            handles.push(std::thread::spawn(move || {
+                use std::io::{BufRead, BufReader, Write};
+                let mut conn = std::net::TcpStream::connect(addr).unwrap();
+                let req = format!("{{\"features\": [{}.0]}}\n", i);
+                conn.write_all(req.as_bytes()).unwrap();
+                let mut reader = BufReader::new(conn);
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let v = Value::parse(&line).unwrap();
+                let logits = v.get("logits").unwrap().as_array().unwrap();
+                assert_eq!(logits[0].as_f64().unwrap(), i as f64);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.shutdown();
+    }
+}

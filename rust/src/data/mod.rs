@@ -1,0 +1,49 @@
+//! Dataset access and synthetic load generation.
+//!
+//! The evaluation dataset itself is produced by the python build path and
+//! loaded via [`crate::kan::checkpoint::Dataset`]; this module adds a
+//! deterministic feature-vector generator for serving load tests (it does
+//! not need to match the python PRNG — it only has to exercise the same
+//! input domain).
+
+use crate::util::Rng;
+
+/// Deterministic generator of feature vectors in the training domain
+/// (uniform over [-1, 1]^d, matching `datasets.py`).
+#[derive(Debug, Clone)]
+pub struct LoadGen {
+    rng: Rng,
+    pub dim: usize,
+}
+
+impl LoadGen {
+    pub fn new(seed: u64, dim: usize) -> Self {
+        Self { rng: Rng::new(seed), dim }
+    }
+
+    pub fn next_vec(&mut self) -> Vec<f32> {
+        (0..self.dim).map(|_| self.rng.range(-1.0, 1.0) as f32).collect()
+    }
+
+    pub fn batch(&mut self, n: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| self.next_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let mut a = LoadGen::new(9, 17);
+        let mut b = LoadGen::new(9, 17);
+        for _ in 0..10 {
+            let va = a.next_vec();
+            let vb = b.next_vec();
+            assert_eq!(va, vb);
+            assert!(va.iter().all(|&x| (-1.0..1.0).contains(&x)));
+            assert_eq!(va.len(), 17);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for the kan-edge crate.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Invalid configuration or hyperparameters (e.g. `G > 2^n`).
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// Artifact files missing or malformed (run `make artifacts`).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Shape mismatch in tensor plumbing.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Serving-path failure (queue closed, admission rejected, ...).
+    #[error("serving error: {0}")]
+    Serving(String),
+
+    /// JSON parse / schema error.
+    #[error("json error: {0}")]
+    Json(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,451 @@
+//! Loaders for the artifacts produced by `python/compile/aot.py`:
+//! quantized weight checkpoints, the artifact manifest, and the dataset.
+//!
+//! Parsing goes through [`crate::util::json`] (the image has no serde_json);
+//! every loader validates shapes and reports actionable errors ("run `make
+//! artifacts`") instead of panicking downstream.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+fn read_json(path: &Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        Error::Artifact(format!(
+            "cannot read {} ({e}); run `make artifacts`",
+            path.display()
+        ))
+    })?;
+    Value::parse(&text).map_err(|e| Error::Artifact(format!("{}: {e}", path.display())))
+}
+
+/// One quantized KAN layer as exported by the build path.
+#[derive(Debug, Clone)]
+pub struct KanLayerCheckpoint {
+    pub din: usize,
+    pub dout: usize,
+    /// Grid range: code 0 maps to `lo`, knot spacing `(hi-lo)/G`.
+    pub lo: f64,
+    pub hi: f64,
+    /// PowerGap exponent for this layer.
+    pub ld: u32,
+    /// SH-LUT rows (`2^(LD-1)+1` × `K+1`) as 8-bit codes.
+    pub sh_lut: Vec<Vec<u32>>,
+    /// int8 ci' codes, flattened `[din, G+K, dout]`, row-major.
+    pub coeff_q: Vec<i32>,
+    /// Dequantization scale for `coeff_q`.
+    pub coeff_scale: f64,
+    /// Residual-path weights w_b, flattened `[din, dout]`.
+    pub wb: Vec<f64>,
+}
+
+impl KanLayerCheckpoint {
+    fn from_json(v: &Value) -> Result<Self> {
+        let sh_lut = v
+            .req_array("sh_lut")?
+            .iter()
+            .map(|row| {
+                row.as_array()
+                    .ok_or_else(|| Error::Json("sh_lut row is not an array".into()))?
+                    .iter()
+                    .map(|x| {
+                        x.as_i64()
+                            .and_then(|i| u32::try_from(i).ok())
+                            .ok_or_else(|| Error::Json("sh_lut entry not a u32".into()))
+                    })
+                    .collect::<Result<Vec<u32>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            din: v.req_usize("din")?,
+            dout: v.req_usize("dout")?,
+            lo: v.req_f64("lo")?,
+            hi: v.req_f64("hi")?,
+            ld: v.req_usize("ld")? as u32,
+            sh_lut,
+            coeff_q: v
+                .i64_vec("coeff_q")?
+                .into_iter()
+                .map(|i| i as i32)
+                .collect(),
+            coeff_scale: v.req_f64("coeff_scale")?,
+            wb: v.f64_vec("wb")?,
+        })
+    }
+}
+
+/// A quantized KAN checkpoint (`<model>.weights.json`).
+#[derive(Debug, Clone)]
+pub struct KanCheckpoint {
+    pub name: String,
+    pub kind: String,
+    pub dims: Vec<usize>,
+    pub g: u32,
+    pub k: u32,
+    pub n_bits: u32,
+    pub num_params: usize,
+    pub layers: Vec<KanLayerCheckpoint>,
+    pub float_test_acc: Option<f64>,
+    pub quant_test_acc: Option<f64>,
+}
+
+fn usize_vec(v: &Value, key: &str) -> Result<Vec<usize>> {
+    v.i64_vec(key)?
+        .into_iter()
+        .map(|i| {
+            usize::try_from(i).map_err(|_| Error::Json(format!("'{key}': negative value")))
+        })
+        .collect()
+}
+
+impl KanCheckpoint {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let v = read_json(path.as_ref())?;
+        let ckpt = Self {
+            name: v.req_str("name")?.to_string(),
+            kind: v.req_str("kind")?.to_string(),
+            dims: usize_vec(&v, "dims")?,
+            g: v.req_usize("g")? as u32,
+            k: v.req_usize("k")? as u32,
+            n_bits: v.req_usize("n_bits")? as u32,
+            num_params: v.req_usize("num_params")?,
+            layers: v
+                .req_array("layers")?
+                .iter()
+                .map(KanLayerCheckpoint::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            float_test_acc: v.get("float_test_acc").and_then(|x| x.as_f64()),
+            quant_test_acc: v.get("quant_test_acc").and_then(|x| x.as_f64()),
+        };
+        ckpt.validate()?;
+        Ok(ckpt)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.kind != "kan" {
+            return Err(Error::Artifact(format!(
+                "{}: expected kind=kan, got {}",
+                self.name, self.kind
+            )));
+        }
+        if self.layers.len() + 1 != self.dims.len() {
+            return Err(Error::Artifact(format!(
+                "{}: {} layers but {} dims",
+                self.name,
+                self.layers.len(),
+                self.dims.len()
+            )));
+        }
+        let nb = (self.g + self.k) as usize;
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.din != self.dims[i] || l.dout != self.dims[i + 1] {
+                return Err(Error::Shape(format!(
+                    "{} layer {i}: ({}, {}) vs dims ({}, {})",
+                    self.name, l.din, l.dout, self.dims[i], self.dims[i + 1]
+                )));
+            }
+            if l.coeff_q.len() != l.din * nb * l.dout {
+                return Err(Error::Shape(format!(
+                    "{} layer {i}: coeff_q len {} != {}x{}x{}",
+                    self.name,
+                    l.coeff_q.len(),
+                    l.din,
+                    nb,
+                    l.dout
+                )));
+            }
+            if l.wb.len() != l.din * l.dout {
+                return Err(Error::Shape(format!(
+                    "{} layer {i}: wb len {} != {}x{}",
+                    self.name,
+                    l.wb.len(),
+                    l.din,
+                    l.dout
+                )));
+            }
+            let expect_rows = (1usize << l.ld) / 2 + 1;
+            if l.sh_lut.len() != expect_rows {
+                return Err(Error::Shape(format!(
+                    "{} layer {i}: sh_lut has {} rows, expected {expect_rows}",
+                    self.name,
+                    l.sh_lut.len()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// An MLP checkpoint (`mlp.weights.json`).
+#[derive(Debug, Clone)]
+pub struct MlpCheckpoint {
+    pub name: String,
+    pub kind: String,
+    pub dims: Vec<usize>,
+    pub num_params: usize,
+    pub layers: Vec<MlpLayerCheckpoint>,
+    pub test_acc: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MlpLayerCheckpoint {
+    pub din: usize,
+    pub dout: usize,
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+}
+
+impl MlpCheckpoint {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let v = read_json(path.as_ref())?;
+        let layers = v
+            .req_array("layers")?
+            .iter()
+            .map(|l| {
+                Ok(MlpLayerCheckpoint {
+                    din: l.req_usize("din")?,
+                    dout: l.req_usize("dout")?,
+                    w: l.f64_vec("w")?,
+                    b: l.f64_vec("b")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let ckpt = Self {
+            name: v.req_str("name")?.to_string(),
+            kind: v.req_str("kind")?.to_string(),
+            dims: usize_vec(&v, "dims")?,
+            num_params: v.req_usize("num_params")?,
+            layers,
+            test_acc: v.get("test_acc").and_then(|x| x.as_f64()),
+        };
+        for (i, l) in ckpt.layers.iter().enumerate() {
+            if l.w.len() != l.din * l.dout || l.b.len() != l.dout {
+                return Err(Error::Shape(format!("mlp layer {i}: bad shapes")));
+            }
+        }
+        Ok(ckpt)
+    }
+}
+
+/// `manifest.json` — the artifact index.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: u32,
+    pub seed: u64,
+    pub dataset: DatasetMeta,
+    pub models: HashMap<String, ModelEntry>,
+    pub sweep: Vec<SweepEntry>,
+    pub batch_sizes: Vec<usize>,
+    pub build_seconds: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetMeta {
+    pub num_features: usize,
+    pub num_classes: usize,
+    pub train: usize,
+    pub val: usize,
+    pub test: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub kind: String,
+    pub dims: Vec<usize>,
+    pub g: Option<u32>,
+    pub k: Option<u32>,
+    pub num_params: usize,
+    pub val_acc: f64,
+    pub float_test_acc: Option<f64>,
+    pub quant_test_acc: Option<f64>,
+    pub test_acc: Option<f64>,
+    pub weights: String,
+    /// batch size -> hlo file name
+    pub hlo: HashMap<usize, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepEntry {
+    pub g: u32,
+    pub num_params: usize,
+    pub val_acc: f64,
+    pub quant_test_acc: f64,
+    pub weights: String,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let v = read_json(&dir.as_ref().join("manifest.json"))?;
+        let d = v.field("dataset")?;
+        let dataset = DatasetMeta {
+            num_features: d.req_usize("num_features")?,
+            num_classes: d.req_usize("num_classes")?,
+            train: d.req_usize("train")?,
+            val: d.req_usize("val")?,
+            test: d.req_usize("test")?,
+        };
+        let mut models = HashMap::new();
+        for (name, m) in v
+            .field("models")?
+            .as_object()
+            .ok_or_else(|| Error::Json("'models' is not an object".into()))?
+        {
+            let mut hlo = HashMap::new();
+            if let Some(h) = m.get("hlo").and_then(|h| h.as_object()) {
+                for (b, f) in h {
+                    let batch: usize = b
+                        .parse()
+                        .map_err(|_| Error::Json(format!("bad batch key '{b}'")))?;
+                    hlo.insert(
+                        batch,
+                        f.as_str()
+                            .ok_or_else(|| Error::Json("hlo file not a string".into()))?
+                            .to_string(),
+                    );
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    kind: m.req_str("kind")?.to_string(),
+                    dims: usize_vec(m, "dims")?,
+                    g: m.get("g").and_then(|x| x.as_i64()).map(|x| x as u32),
+                    k: m.get("k").and_then(|x| x.as_i64()).map(|x| x as u32),
+                    num_params: m.req_usize("num_params")?,
+                    val_acc: m.req_f64("val_acc")?,
+                    float_test_acc: m.get("float_test_acc").and_then(|x| x.as_f64()),
+                    quant_test_acc: m.get("quant_test_acc").and_then(|x| x.as_f64()),
+                    test_acc: m.get("test_acc").and_then(|x| x.as_f64()),
+                    weights: m.req_str("weights")?.to_string(),
+                    hlo,
+                },
+            );
+        }
+        let sweep = v
+            .req_array("sweep")?
+            .iter()
+            .map(|s| {
+                Ok(SweepEntry {
+                    g: s.req_usize("g")? as u32,
+                    num_params: s.req_usize("num_params")?,
+                    val_acc: s.req_f64("val_acc")?,
+                    quant_test_acc: s.req_f64("quant_test_acc")?,
+                    weights: s.req_str("weights")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            format: v.req_usize("format")? as u32,
+            seed: v.req_usize("seed")? as u64,
+            dataset,
+            models,
+            sweep,
+            batch_sizes: usize_vec(&v, "batch_sizes")?,
+            build_seconds: v.get("build_seconds").and_then(|x| x.as_f64()),
+        })
+    }
+}
+
+/// `dataset.json` — test split + calibration sample.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<u32>,
+    pub calib_x: Vec<f32>,
+    pub calib_y: Vec<u32>,
+    pub num_features: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let v = read_json(&dir.as_ref().join("dataset.json"))?;
+        let ds = Self {
+            test_x: v.f32_vec("test_x")?,
+            test_y: v
+                .i64_vec("test_y")?
+                .into_iter()
+                .map(|i| i as u32)
+                .collect(),
+            calib_x: v.f32_vec("calib_x")?,
+            calib_y: v
+                .i64_vec("calib_y")?
+                .into_iter()
+                .map(|i| i as u32)
+                .collect(),
+            num_features: v.req_usize("num_features")?,
+            num_classes: v.req_usize("num_classes")?,
+        };
+        if ds.test_x.len() != ds.test_y.len() * ds.num_features {
+            return Err(Error::Shape("dataset test arrays inconsistent".into()));
+        }
+        if ds.calib_x.len() != ds.calib_y.len() * ds.num_features {
+            return Err(Error::Shape("dataset calib arrays inconsistent".into()));
+        }
+        Ok(ds)
+    }
+
+    pub fn test_rows(&self) -> impl Iterator<Item = (&[f32], u32)> {
+        self.test_x
+            .chunks_exact(self.num_features)
+            .zip(self.test_y.iter().copied())
+    }
+
+    pub fn calib_rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.calib_x.chunks_exact(self.num_features)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("kan_edge_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, text).unwrap();
+        path
+    }
+
+    #[test]
+    fn kan_checkpoint_roundtrip() {
+        // G=1,K=1 -> nb=2, LD=7 -> sh_lut rows = 65... keep it small: use
+        // ld consistent with validation (2^(ld-1)+1 rows)
+        let sh_rows: Vec<String> = (0..3).map(|_| "[255, 0]".to_string()).collect();
+        let text = format!(
+            r#"{{"name":"t","kind":"kan","dims":[2,1],"g":1,"k":1,"n_bits":8,
+               "num_params":6,
+               "layers":[{{"din":2,"dout":1,"lo":-1.0,"hi":1.0,"ld":2,
+                 "sh_lut":[{}],
+                 "coeff_q":[1,2,3,4],"coeff_scale":0.5,"wb":[0.1,0.2]}}]}}"#,
+            sh_rows.join(",")
+        );
+        let path = write_tmp("kan_ok.json", &text);
+        let ckpt = KanCheckpoint::load(&path).unwrap();
+        assert_eq!(ckpt.dims, vec![2, 1]);
+        assert_eq!(ckpt.layers[0].coeff_q, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn kan_checkpoint_rejects_bad_shapes() {
+        let text = r#"{"name":"t","kind":"kan","dims":[2,1],"g":1,"k":1,
+            "n_bits":8,"num_params":6,
+            "layers":[{"din":2,"dout":1,"lo":-1.0,"hi":1.0,"ld":2,
+              "sh_lut":[[255,0],[200,55],[128,128]],
+              "coeff_q":[1,2,3],"coeff_scale":0.5,"wb":[0.1,0.2]}]}"#;
+        let path = write_tmp("kan_bad.json", text);
+        let err = KanCheckpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("coeff_q"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_mentions_make_artifacts() {
+        let err = KanCheckpoint::load("/no/such/file.json")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,240 @@
+//! KAN layer forward passes on the rust side.
+//!
+//! Two paths exist deliberately:
+//!
+//! * [`QuantKanLayer::forward_digital`] — the *digital reference*: exact
+//!   integer LUT lookups + f64 MAC. Bit-identical to what ideal hardware
+//!   (or the PJRT graph) computes, used as the golden output the ACIM
+//!   simulator is compared against.
+//! * `acim::tile` executes the same layer through the analog pipeline
+//!   (IR-drop, device variation, ADC) — the layer exposes its integer
+//!   dataflow ([`QuantKanLayer::spline_rows`]) so the crossbar can be
+//!   programmed from it.
+
+use crate::kan::checkpoint::KanLayerCheckpoint;
+use crate::quant::{AspSpec, ShLut};
+
+/// A quantized KAN layer materialized from a checkpoint.
+#[derive(Debug, Clone)]
+pub struct QuantKanLayer {
+    pub spec: AspSpec,
+    pub lut: ShLut,
+    pub din: usize,
+    pub dout: usize,
+    /// int8 ci' codes, `[din][G+K][dout]` flattened.
+    pub coeff_q: Vec<i32>,
+    pub coeff_scale: f64,
+    /// Residual weights `[din][dout]` flattened.
+    pub wb: Vec<f64>,
+}
+
+impl QuantKanLayer {
+    pub fn from_checkpoint(l: &KanLayerCheckpoint, g: u32, k: u32, n_bits: u32) -> Self {
+        let spec = AspSpec { g, k, n_bits, ld: l.ld, lo: l.lo, hi: l.hi };
+        // rebuild the SH-LUT from the checkpoint rows (hardware programs the
+        // stored hemi half; `ShLut::lookup` provides the mirror network)
+        let lut = ShLut { k, ld: l.ld, bits: n_bits, hemi: l.sh_lut.clone() };
+        Self {
+            spec,
+            lut,
+            din: l.din,
+            dout: l.dout,
+            coeff_q: l.coeff_q.clone(),
+            coeff_scale: l.coeff_scale,
+            wb: l.wb.clone(),
+        }
+    }
+
+    #[inline]
+    fn coeff(&self, i: usize, gidx: usize, o: usize) -> i32 {
+        let nb = self.spec.num_basis();
+        self.coeff_q[(i * nb + gidx) * self.dout + o]
+    }
+
+    /// Quantize a float input vector to layer codes.
+    pub fn quantize_input(&self, x: &[f32]) -> Vec<u32> {
+        debug_assert_eq!(x.len(), self.din);
+        x.iter().map(|&v| self.spec.quantize(v as f64)).collect()
+    }
+
+    /// Digital-reference forward for one sample: codes → float outputs.
+    ///
+    /// Follows the hardware dataflow exactly (decode → SH-LUT → MAC over
+    /// int8 ci' → scale), with an ideal (error-free) MAC.
+    pub fn forward_digital(&self, xq: &[u32], out: &mut [f64]) {
+        debug_assert_eq!(xq.len(), self.din);
+        debug_assert_eq!(out.len(), self.dout);
+        out.fill(0.0);
+        let kk = self.spec.k as usize;
+        let lut_scale = 1.0 / ((1u64 << self.lut.bits) - 1) as f64;
+        for (i, &q) in xq.iter().enumerate() {
+            let (j, l) = self.spec.decompose(q);
+            // spline path: K+1 active bases via the shared LUT
+            for t in 0..=kk {
+                let b = self.lut.lookup(l, t as u32) as f64 * lut_scale;
+                if b == 0.0 {
+                    continue;
+                }
+                let gidx = j as usize + t;
+                for o in 0..self.dout {
+                    out[o] += b * self.coeff(i, gidx, o) as f64 * self.coeff_scale;
+                }
+            }
+            // residual path: w_b · ReLU(x̂)
+            let x = self.spec.dequantize(q);
+            if x > 0.0 {
+                for o in 0..self.dout {
+                    out[o] += x * self.wb[i * self.dout + o];
+                }
+            }
+        }
+    }
+
+    /// Batch digital forward: `x` is `[batch, din]` row-major floats.
+    pub fn forward_digital_batch(&self, x: &[f32], batch: usize) -> Vec<f64> {
+        let mut out = vec![0.0; batch * self.dout];
+        let mut xq = vec![0u32; self.din];
+        for b in 0..batch {
+            let row = &x[b * self.din..(b + 1) * self.din];
+            for (dst, &v) in xq.iter_mut().zip(row) {
+                *dst = self.spec.quantize(v as f64);
+            }
+            self.forward_digital(&xq, &mut out[b * self.dout..(b + 1) * self.dout]);
+        }
+        out
+    }
+
+    /// The crossbar view of the spline path: one row per `(input i, basis
+    /// g)` pair, each row holding the `dout` ci' codes programmed on that
+    /// word line. Row activation for input `xq`: row `(i, g)` carries the
+    /// LUT value of basis `g` for `xq[i]` (zero when inactive).
+    pub fn spline_rows(&self) -> usize {
+        self.din * self.spec.num_basis()
+    }
+
+    /// int8 codes of crossbar row `(i, gidx)`.
+    pub fn row_weights(&self, row: usize) -> &[i32] {
+        let start = row * self.dout;
+        &self.coeff_q[start..start + self.dout]
+    }
+
+    /// Word-line drive values (LUT codes, 0..2^bits-1) for one quantized
+    /// input vector: the `B(X)` vector the TM-DV-IG turns into pulses.
+    pub fn wordline_drives(&self, xq: &[u32]) -> Vec<u32> {
+        let nb = self.spec.num_basis();
+        let mut drives = vec![0u32; self.din * nb];
+        let kk = self.spec.k as usize;
+        for (i, &q) in xq.iter().enumerate() {
+            let (j, l) = self.spec.decompose(q);
+            for t in 0..=kk {
+                drives[i * nb + j as usize + t] = self.lut.lookup(l, t as u32);
+            }
+        }
+        drives
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::kan::spline;
+    use crate::quant::AspSpec;
+
+    /// Build a small layer directly (not via checkpoint) for unit tests.
+    pub(crate) fn toy_layer(g: u32, k: u32, din: usize, dout: usize) -> QuantKanLayer {
+        let spec = AspSpec::build(g, k, 8, -1.0, 1.0).unwrap();
+        let lut = ShLut::build(&spec, 8);
+        let nb = spec.num_basis();
+        let coeff_q: Vec<i32> = (0..din * nb * dout)
+            .map(|i| ((i as i64 * 37 + 11) % 255 - 127) as i32)
+            .collect();
+        let wb: Vec<f64> = (0..din * dout).map(|i| (i as f64 * 0.1).sin()).collect();
+        QuantKanLayer {
+            spec,
+            lut,
+            din,
+            dout,
+            coeff_q,
+            coeff_scale: 0.01,
+            wb,
+        }
+    }
+
+    use crate::quant::ShLut;
+
+    #[test]
+    fn digital_forward_matches_float_spline_within_lut_quantization() {
+        let layer = toy_layer(5, 3, 4, 3);
+        let x = [0.3f32, -0.7, 0.95, -0.05];
+        let xq = layer.quantize_input(&x);
+        let mut got = vec![0.0; 3];
+        layer.forward_digital(&xq, &mut got);
+
+        // reference: exact float basis at the dequantized abscissae
+        let mut want = vec![0.0f64; 3];
+        let nb = layer.spec.num_basis();
+        for (i, &q) in xq.iter().enumerate() {
+            let z = layer.spec.grid_coord(q);
+            let basis = spline::basis_functions(z, 5, 3);
+            for o in 0..3 {
+                for gidx in 0..nb {
+                    want[o] += basis[gidx]
+                        * layer.coeff(i, gidx, o) as f64
+                        * layer.coeff_scale;
+                }
+            }
+            let xd = layer.spec.dequantize(q);
+            if xd > 0.0 {
+                for o in 0..3 {
+                    want[o] += xd * layer.wb[i * 3 + o];
+                }
+            }
+        }
+        for o in 0..3 {
+            // 8-bit LUT quantization bounds the error: K+1 active bases,
+            // each off by <= 0.5/255, times |ci'|<=127 * scale per input.
+            let tol = 4.0 * (0.5 / 255.0) * 127.0 * 0.01 * 4.0;
+            assert!(
+                (got[o] - want[o]).abs() < tol,
+                "o={o}: {} vs {} (tol {tol})",
+                got[o],
+                want[o]
+            );
+        }
+    }
+
+    #[test]
+    fn wordline_drives_has_k_plus_1_active() {
+        let layer = toy_layer(8, 3, 2, 1);
+        let xq = layer.quantize_input(&[0.12, -0.9]);
+        let drives = layer.wordline_drives(&xq);
+        let nb = layer.spec.num_basis();
+        for i in 0..2 {
+            let active = drives[i * nb..(i + 1) * nb]
+                .iter()
+                .filter(|&&d| d > 0)
+                .count();
+            // at most K+1 active (K+1 minus any zero LUT entries)
+            assert!(active <= 4, "input {i}: {active} active drives");
+            assert!(active >= 1);
+            // quantized partition of unity: active codes sum to ~255
+            let sum: u32 = drives[i * nb..(i + 1) * nb].iter().sum();
+            assert!((250..=260).contains(&sum), "sum={sum}");
+        }
+    }
+
+    #[test]
+    fn batch_forward_matches_single() {
+        let layer = toy_layer(5, 3, 4, 3);
+        let x = [0.3f32, -0.7, 0.95, -0.05, 0.0, 0.5, -0.5, 1.2];
+        let batch_out = layer.forward_digital_batch(&x, 2);
+        for b in 0..2 {
+            let xq = layer.quantize_input(&x[b * 4..(b + 1) * 4]);
+            let mut single = vec![0.0; 3];
+            layer.forward_digital(&xq, &mut single);
+            for o in 0..3 {
+                assert_eq!(batch_out[b * 3 + o], single[o]);
+            }
+        }
+    }
+}

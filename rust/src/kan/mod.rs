@@ -1,0 +1,11 @@
+//! KAN model substrate: B-spline math, quantized layers/models, and the
+//! artifact checkpoint schemas.
+
+pub mod checkpoint;
+pub mod layer;
+pub mod model;
+pub mod spline;
+
+pub use checkpoint::{Dataset, KanCheckpoint, Manifest, MlpCheckpoint};
+pub use layer::QuantKanLayer;
+pub use model::{argmax, QuantKanModel};

@@ -1,0 +1,112 @@
+//! Whole-model quantized KAN inference (digital reference path) and
+//! accuracy evaluation against the artifact dataset.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::kan::checkpoint::{Dataset, KanCheckpoint};
+use crate::kan::layer::QuantKanLayer;
+
+/// A quantized KAN model: a stack of [`QuantKanLayer`]s.
+#[derive(Debug, Clone)]
+pub struct QuantKanModel {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub g: u32,
+    pub k: u32,
+    pub layers: Vec<QuantKanLayer>,
+}
+
+impl QuantKanModel {
+    pub fn from_checkpoint(ckpt: &KanCheckpoint) -> Self {
+        let layers = ckpt
+            .layers
+            .iter()
+            .map(|l| QuantKanLayer::from_checkpoint(l, ckpt.g, ckpt.k, ckpt.n_bits))
+            .collect();
+        Self {
+            name: ckpt.name.clone(),
+            dims: ckpt.dims.clone(),
+            g: ckpt.g,
+            k: ckpt.k,
+            layers,
+        }
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self::from_checkpoint(&KanCheckpoint::load(path)?))
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn output_dim(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// Digital-reference forward for one sample.
+    pub fn forward(&self, x: &[f32]) -> Vec<f64> {
+        let mut h: Vec<f32> = x.to_vec();
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            let xq = layer.quantize_input(&h);
+            out = vec![0.0; layer.dout];
+            layer.forward_digital(&xq, &mut out);
+            h = out.iter().map(|&v| v as f32).collect();
+        }
+        out
+    }
+
+    /// Batch forward, `x` row-major `[batch, din]`.
+    pub fn forward_batch(&self, x: &[f32], batch: usize) -> Vec<f64> {
+        let mut h: Vec<f32> = x.to_vec();
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            out = layer.forward_digital_batch(&h, batch);
+            h = out.iter().map(|&v| v as f32).collect();
+        }
+        out
+    }
+
+    /// Argmax prediction for one sample.
+    pub fn predict(&self, x: &[f32]) -> usize {
+        argmax(&self.forward(x))
+    }
+
+    /// Top-1 accuracy on the artifact test split.
+    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (row, label) in ds.test_rows() {
+            if self.predict(row) == label as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        correct as f64 / total.max(1) as f64
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(v: &[f64]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate().skip(1) {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[1.0, 1.0]), 0);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Uniform B-spline math: the cardinal B-spline and the KAN basis.
+//!
+//! The original KAN paper builds its learnable activations on a *uniform
+//! extended* knot grid, which makes every basis function a shifted copy of
+//! the cardinal B-spline `C_k`. That translation invariance is the property
+//! ASP-KAN-HAQ exploits to share one LUT across all `G + K` basis functions
+//! (paper §2.1 / §3.1); it is also why this module only ever needs `C_k`.
+
+/// Cardinal B-spline `C_k(s)` of degree `k`, support `[0, k+1]`.
+///
+/// Cox–de Boor recursion on integer knots. `O(k^2)` per evaluation; the hot
+/// path never calls this (it reads LUTs), so clarity wins over speed here.
+pub fn cardinal_bspline(s: f64, k: usize) -> f64 {
+    if !(0.0..(k as f64 + 1.0)).contains(&s) {
+        return 0.0;
+    }
+    // degree-0 indicator pieces N_j^0, j = 0..k
+    let mut n: Vec<f64> = (0..=k)
+        .map(|j| {
+            let j = j as f64;
+            if s >= j && s < j + 1.0 {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    for d in 1..=k {
+        for j in 0..=(k - d) {
+            let jf = j as f64;
+            let df = d as f64;
+            n[j] = (s - jf) / df * n[j] + (jf + df + 1.0 - s) / df * n[j + 1];
+        }
+    }
+    n[0]
+}
+
+/// All `g + k` basis values at grid coordinate `z ∈ [0, g]`.
+///
+/// Basis `i` is the cardinal spline translated so its support covers grid
+/// intervals `[i-k, i]`: `B_i(z) = C_k(z - i + k)`.
+pub fn basis_functions(z: f64, g: usize, k: usize) -> Vec<f64> {
+    (0..g + k)
+        .map(|i| cardinal_bspline(z - i as f64 + k as f64, k))
+        .collect()
+}
+
+/// The `k + 1` *active* basis values for a point with local fraction
+/// `u ∈ [0, 1)` inside any knot interval: `active[t] = C_k(k - t + u)`.
+///
+/// By translation invariance these do not depend on which interval — this
+/// is the row the SH-LUT stores.
+pub fn active_basis(u: f64, k: usize) -> Vec<f64> {
+    (0..=k).map(|t| cardinal_bspline((k - t) as f64 + u, k)).collect()
+}
+
+/// Evaluate a full spline `sum_i c_i B_i(z)` directly (reference path).
+pub fn spline_value(z: f64, coeff: &[f64], g: usize, k: usize) -> f64 {
+    debug_assert_eq!(coeff.len(), g + k);
+    // only bases j..j+k are non-zero at z in interval j
+    let j = (z.floor() as isize).clamp(0, g as isize - 1) as usize;
+    let u = z - j as f64;
+    let mut acc = 0.0;
+    for t in 0..=k {
+        let i = j + t;
+        if i < coeff.len() {
+            acc += coeff[i] * cardinal_bspline((k - t) as f64 + u, k);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree0_is_indicator() {
+        assert_eq!(cardinal_bspline(0.5, 0), 1.0);
+        assert_eq!(cardinal_bspline(1.5, 0), 0.0);
+        assert_eq!(cardinal_bspline(-0.1, 0), 0.0);
+    }
+
+    #[test]
+    fn cubic_known_values() {
+        // C_3 peaks at s = 2 with value 2/3; C_3(1) = C_3(3) = 1/6.
+        assert!((cardinal_bspline(2.0, 3) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((cardinal_bspline(1.0, 3) - 1.0 / 6.0).abs() < 1e-12);
+        assert!((cardinal_bspline(3.0, 3) - 1.0 / 6.0).abs() < 1e-12);
+        assert_eq!(cardinal_bspline(4.0, 3), 0.0);
+    }
+
+    #[test]
+    fn symmetry_about_midpoint() {
+        // C_k(s) = C_k(k+1-s): the property behind the Sharable-Hemi LUT.
+        for k in 1..=4usize {
+            for i in 0..100 {
+                let s = (k as f64 + 1.0) * i as f64 / 100.0;
+                let a = cardinal_bspline(s, k);
+                let b = cardinal_bspline(k as f64 + 1.0 - s, k);
+                // mirror point lands exactly on a knot for s=0; half-open
+                // interval makes C(k+1)=0 vs C(0)=0 consistent.
+                assert!((a - b).abs() < 1e-9, "k={k} s={s}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_of_unity() {
+        for k in 0..=4usize {
+            let g = 6;
+            for i in 0..60 {
+                let z = 0.05 + g as f64 * i as f64 / 61.0;
+                let sum: f64 = basis_functions(z, g, k).iter().sum();
+                // interior points only (z in [k.., g] edge effects excluded
+                // by the extended grid construction)
+                assert!((sum - 1.0).abs() < 1e-9, "k={k} z={z} sum={sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn active_basis_matches_full_basis() {
+        let (g, k) = (5usize, 3usize);
+        let z: f64 = 2.37;
+        let j = z.floor() as usize;
+        let u = z - j as f64;
+        let full = basis_functions(z, g, k);
+        let act = active_basis(u, k);
+        for t in 0..=k {
+            assert!((full[j + t] - act[t]).abs() < 1e-12);
+        }
+        // everything outside the active window is zero
+        for (i, v) in full.iter().enumerate() {
+            if i < j || i > j + k {
+                assert_eq!(*v, 0.0, "basis {i} should be inactive at z={z}");
+            }
+        }
+    }
+
+    #[test]
+    fn spline_value_matches_inner_product() {
+        let (g, k) = (7usize, 3usize);
+        let coeff: Vec<f64> = (0..g + k).map(|i| (i as f64 * 0.7).sin()).collect();
+        for i in 0..50 {
+            let z = g as f64 * i as f64 / 50.0;
+            let direct = spline_value(z, &coeff, g, k);
+            let full: f64 = basis_functions(z, g, k)
+                .iter()
+                .zip(&coeff)
+                .map(|(b, c)| b * c)
+                .sum();
+            assert!((direct - full).abs() < 1e-9);
+        }
+    }
+}

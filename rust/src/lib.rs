@@ -1,0 +1,47 @@
+//! # kan-edge
+//!
+//! Production-quality reproduction of *"Hardware Acceleration of
+//! Kolmogorov–Arnold Network (KAN) for Lightweight Edge Inference"*
+//! (Huang et al., 2024) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate contains:
+//!
+//! * [`quant`] — ASP-KAN-HAQ: Alignment-Symmetry + PowerGap hardware-aware
+//!   quantization with the Sharable-Hemi LUT, plus the conventional
+//!   (PACT-style) baseline it is compared against (paper §3.1, Fig 10).
+//! * [`circuits`] — analytic 22 nm component models (LUTs, decoders,
+//!   TG-MUXes, DACs, delay chains) and the three word-line input
+//!   generators: pure-voltage, pure-PWM and the paper's N:1 Time-Modulation
+//!   Dynamic-Voltage generator (§3.2, Fig 11).
+//! * [`acim`] — a behavioural RRAM analog compute-in-memory simulator:
+//!   conductance programming, bit-line IR-drop (resistive-ladder model),
+//!   device variation, ADC partial-sum quantization (§2.2, §3.3).
+//! * [`mapping`] — KAN-SAM sparsity-aware weight mapping (§3.3, Fig 12).
+//! * [`neurosim`] — the KAN-NeuroSim hyperparameter/hardware co-search
+//!   framework: full-accelerator area/energy/latency estimation and the
+//!   constraint-driven G search (§3.4, Fig 9/13).
+//! * [`kan`] — B-spline math, float and quantized-integer KAN inference,
+//!   checkpoint loading for the artifacts produced by `python/compile/`.
+//! * [`baseline`] — the traditional-MLP accelerator baseline of Fig 13.
+//! * [`runtime`] — PJRT execution of the AOT-lowered HLO artifacts.
+//! * [`coordinator`] — the edge-inference serving runtime: dynamic
+//!   batching, routing, backend pool, metrics.
+//!
+//! Python (JAX + Pallas) appears only in the build path (`make artifacts`);
+//! this crate is self-contained at run time.
+
+pub mod acim;
+pub mod baseline;
+pub mod circuits;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod kan;
+pub mod mapping;
+pub mod neurosim;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,446 @@
+//! `kan-edge` CLI: the leader entrypoint.
+//!
+//! Subcommands map onto the paper's artifacts:
+//! * `serve`     — edge inference service (TCP JSON-lines) over any backend
+//! * `eval`      — accuracy of a model on the artifact test set per backend
+//! * `neurosim`  — KAN-NeuroSim constraint search (Fig 9 / Fig 13)
+//! * `quantize`  — inspect ASP-KAN-HAQ geometry for a (G, K, n) point
+//! * `inputgen`  — the Fig 11 WL input generator comparison
+//! * `sam`       — KAN-SAM vs uniform mapping accuracy (Fig 12 single point)
+//! * `fig10`     — the Fig 10 ASP-vs-conventional sweep
+//! * `info`      — artifact manifest summary
+//!
+//! Argument parsing is hand-rolled (the offline image carries no clap):
+//! `--key value` / `--flag` pairs after the subcommand.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use kan_edge::acim::{AcimOptions, ArrayConfig};
+use kan_edge::circuits::{fig10_sweep, fig11_comparison, Tech};
+use kan_edge::config::AppConfig;
+use kan_edge::coordinator::batcher::BatchPolicy;
+use kan_edge::coordinator::{
+    build_acim_with_calib, build_backend, InferenceService, ServeOptions,
+};
+use kan_edge::error::Result;
+use kan_edge::kan::checkpoint::{Dataset, Manifest};
+use kan_edge::kan::QuantKanModel;
+use kan_edge::mapping::MappingStrategy;
+use kan_edge::neurosim::{search, HwConstraints};
+use kan_edge::quant::{AspSpec, ShLut};
+
+const USAGE: &str = "\
+kan-edge — KAN edge-inference accelerator stack
+
+USAGE: kan-edge [--config FILE] [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  serve     --model NAME --addr HOST:PORT      serve over TCP JSON-lines
+  eval      --model NAME --backend B           accuracy on the test set
+  neurosim  --budget minimal|moderate|none     Fig 9/13 constraint search
+  quantize  --g G --k K --n-bits N             ASP-KAN-HAQ geometry
+  inputgen  --bits N                           Fig 11 generator comparison
+  sam       --g G --array ROWS                 Fig 12 mapping comparison
+  fig10                                        Fig 10 quantization sweep
+  cost      --g G --dims a,b,c --tm-n N        accelerator cost estimate
+  stats                                        ACIM calibration statistics
+  info                                         artifact manifest summary
+";
+
+/// Parsed command line: subcommand + `--key value` options.
+struct Args {
+    cmd: String,
+    opts: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> std::result::Result<Args, String> {
+        let mut cmd = None;
+        let mut opts = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                opts.insert(key.to_string(), val);
+            } else if cmd.is_none() {
+                cmd = Some(a.clone());
+            } else {
+                return Err(format!("unexpected argument '{a}'"));
+            }
+            i += 1;
+        }
+        Ok(Args { cmd: cmd.unwrap_or_else(|| "help".into()), opts })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.opts
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.opts
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.cmd == "help" || args.opts.contains_key("help") {
+        println!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg_path = args.opts.get("config").map(Path::new);
+    let mut cfg = AppConfig::load(cfg_path)?;
+    if let Some(dir) = args.opts.get("artifacts") {
+        cfg.artifacts.dir = dir.clone();
+    }
+    match args.cmd.as_str() {
+        "serve" => serve(
+            &cfg,
+            &args.get("model", &cfg.artifacts.model.clone()),
+            &args.get("addr", "127.0.0.1:7777"),
+        ),
+        "eval" => eval(
+            &cfg,
+            &args.get("model", "kan1"),
+            &args.get("backend", "digital"),
+        ),
+        "neurosim" => neurosim_cmd(&cfg, &args.get("budget", "minimal")),
+        "quantize" => quantize_cmd(
+            args.get_u32("g", 5),
+            args.get_u32("k", 3),
+            args.get_u32("n-bits", 8),
+        ),
+        "inputgen" => {
+            print_inputgen(args.get_u32("bits", 6), &cfg.hardware.tech);
+            Ok(())
+        }
+        "sam" => sam_cmd(&cfg, args.get_u32("g", 15), args.get_usize("array", 256)),
+        "fig10" => fig10_cmd(&cfg),
+        "cost" => cost_cmd(&cfg, args),
+        "stats" => stats_cmd(),
+        "info" => info_cmd(&cfg),
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve(cfg: &AppConfig, model: &str, addr: &str) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts.dir)?;
+    let backend = build_backend(cfg, &manifest, model)?;
+    let opts = ServeOptions {
+        policy: BatchPolicy {
+            max_batch: cfg.server.max_batch,
+            deadline: std::time::Duration::from_micros(cfg.server.batch_deadline_us),
+        },
+        queue_depth: cfg.server.queue_depth,
+        workers: cfg.server.workers,
+    };
+    let svc = InferenceService::start(backend, opts);
+    let server = kan_edge::coordinator::TcpServer::spawn(addr, svc)?;
+    println!(
+        "kan-edge serving {model} [{}] on {} (Ctrl-C to stop)",
+        cfg.server.backend, server.addr
+    );
+    // serve until the process is killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn eval(cfg: &AppConfig, model: &str, backend: &str) -> Result<()> {
+    let dir = Path::new(&cfg.artifacts.dir);
+    let manifest = Manifest::load(dir)?;
+    let ds = Dataset::load(dir)?;
+    let entry = manifest.models.get(model).ok_or_else(|| {
+        kan_edge::Error::Artifact(format!("model '{model}' not in manifest"))
+    })?;
+    let acc = match (backend, entry.kind.as_str()) {
+        (_, "mlp") => {
+            kan_edge::baseline::MlpModel::load(dir.join(&entry.weights))?.accuracy(&ds)
+        }
+        ("digital", _) => QuantKanModel::load(dir.join(&entry.weights))?.accuracy(&ds),
+        ("acim", _) => {
+            let qk = QuantKanModel::load(dir.join(&entry.weights))?;
+            build_acim_with_calib(&qk, cfg.hardware.acim, &ds, MappingStrategy::Sam)?
+                .accuracy(&ds)
+        }
+        ("pjrt", _) => {
+            let mut cfg2 = cfg.clone();
+            cfg2.server.backend = "pjrt".into();
+            let be = build_backend(&cfg2, &manifest, model)?;
+            eval_backend(be, &ds)
+        }
+        (other, _) => {
+            return Err(kan_edge::Error::Config(format!("unknown backend '{other}'")))
+        }
+    };
+    println!("{model} [{backend}] accuracy = {acc:.4}");
+    Ok(())
+}
+
+fn eval_backend(be: Arc<dyn kan_edge::coordinator::InferBackend>, ds: &Dataset) -> f64 {
+    let rows: Vec<Vec<f32>> = ds.test_rows().map(|(r, _)| r.to_vec()).collect();
+    let labels: Vec<u32> = ds.test_rows().map(|(_, y)| y).collect();
+    let outs = be.infer_batch(&rows).expect("inference failed");
+    let correct = outs
+        .iter()
+        .zip(&labels)
+        .filter(|(o, &y)| {
+            kan_edge::kan::argmax(&o.iter().map(|&v| v as f64).collect::<Vec<_>>())
+                == y as usize
+        })
+        .count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+fn neurosim_cmd(cfg: &AppConfig, budget: &str) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts.dir)?;
+    let constraints = match budget {
+        "minimal" => HwConstraints::minimal(),
+        "moderate" => HwConstraints::moderate(),
+        "none" => HwConstraints::default(),
+        _ => cfg.neurosim.constraints,
+    };
+    let out = search(
+        &[17, 1, 14],
+        &manifest.sweep,
+        &cfg.neurosim.tm_modes,
+        &constraints,
+        &cfg.hardware.tech,
+    )?;
+    println!(
+        "{:>4} {:>4} {:>9} {:>11} {:>11} {:>11} {:>8}",
+        "G", "N", "acc", "area(mm2)", "energy(pJ)", "lat(ns)", "admit"
+    );
+    for c in &out.candidates {
+        println!(
+            "{:>4} {:>4} {:>9.4} {:>11.4} {:>11.1} {:>11.0} {:>8}",
+            c.g,
+            c.tm_n,
+            c.accuracy,
+            c.report.area_mm2,
+            c.report.energy_pj,
+            c.report.latency_ns,
+            c.admitted
+        );
+    }
+    match out.best {
+        Some(b) => println!(
+            "\nbest: G={} N={} acc={:.4} ({} params)",
+            b.g, b.tm_n, b.accuracy, b.report.num_params
+        ),
+        None => println!("\nno admissible design point under this budget"),
+    }
+    Ok(())
+}
+
+fn quantize_cmd(g: u32, k: u32, n_bits: u32) -> Result<()> {
+    let spec = AspSpec::build(g, k, n_bits, 0.0, 1.0)?;
+    let lut = ShLut::build(&spec, n_bits);
+    println!("ASP-KAN-HAQ geometry for G={g}, K={k}, n={n_bits}:");
+    println!(
+        "  LD = {} (L = {} levels/interval)",
+        spec.ld,
+        spec.levels_per_interval()
+    );
+    println!("  code range R = G*2^LD = {}", spec.range());
+    println!("  basis functions G+K = {}", spec.num_basis());
+    println!(
+        "  SH-LUT: {} rows x {} cols = {} stored entries ({} full)",
+        lut.hemi.len(),
+        k + 1,
+        lut.stored_entries(),
+        lut.full_rows() * (k as usize + 1)
+    );
+    println!(
+        "  decoders: ({}-bit global) + ({}-bit local) instead of one {n_bits}-bit",
+        n_bits - spec.ld,
+        spec.ld
+    );
+    Ok(())
+}
+
+fn print_inputgen(bits: u32, tech: &Tech) {
+    println!(
+        "{:<14} {:>10} {:>10} {:>9} {:>10} {:>8}",
+        "generator", "area(um2)", "power(uW)", "lat(ns)", "margin(mV)", "FOM(x)"
+    );
+    let reports = fig11_comparison(bits, tech);
+    let tm_fom = reports.last().unwrap().fom();
+    for r in &reports {
+        println!(
+            "{:<14} {:>10.1} {:>10.1} {:>9.1} {:>10.1} {:>8.2}",
+            r.name,
+            r.area_um2,
+            r.power_uw,
+            r.latency_ns,
+            r.noise_margin_v * 1e3,
+            r.fom() / tm_fom
+        );
+    }
+}
+
+fn sam_cmd(cfg: &AppConfig, g: u32, array: usize) -> Result<()> {
+    let dir = Path::new(&cfg.artifacts.dir);
+    let ds = Dataset::load(dir)?;
+    let path = dir.join(format!("sweep/kan_g{g}.weights.json"));
+    let qk = QuantKanModel::load(&path)?;
+    let sw_acc = qk.accuracy(&ds);
+    let opts = AcimOptions {
+        array: ArrayConfig { rows: array, ..cfg.hardware.acim.array },
+        ..cfg.hardware.acim
+    };
+    let uni =
+        build_acim_with_calib(&qk, opts, &ds, MappingStrategy::Uniform)?.accuracy(&ds);
+    let sam = build_acim_with_calib(&qk, opts, &ds, MappingStrategy::Sam)?.accuracy(&ds);
+    println!("G={g}, array={array}:");
+    println!("  software (quantized, ideal) accuracy: {sw_acc:.4}");
+    println!(
+        "  ACIM uniform mapping: {uni:.4} (degradation {:.4})",
+        sw_acc - uni
+    );
+    println!(
+        "  ACIM KAN-SAM mapping: {sam:.4} (degradation {:.4})",
+        sw_acc - sam
+    );
+    if sw_acc - sam > 1e-9 {
+        println!(
+            "  degradation reduction: {:.2}x",
+            (sw_acc - uni) / (sw_acc - sam)
+        );
+    }
+    Ok(())
+}
+
+fn fig10_cmd(cfg: &AppConfig) -> Result<()> {
+    let rows = fig10_sweep(&[8, 16, 32, 64], 3, 8, &cfg.hardware.tech)?;
+    println!("{:>4} {:>12} {:>14}", "G", "area-red(x)", "energy-red(x)");
+    for r in &rows {
+        println!(
+            "{:>4} {:>12.2} {:>14.2}",
+            r.g, r.area_reduction, r.energy_reduction
+        );
+    }
+    let n = rows.len() as f64;
+    println!(
+        "avg: area {:.2}x (paper 40.14x), energy {:.2}x (paper 5.59x)",
+        rows.iter().map(|r| r.area_reduction).sum::<f64>() / n,
+        rows.iter().map(|r| r.energy_reduction).sum::<f64>() / n
+    );
+    Ok(())
+}
+
+fn cost_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
+    use kan_edge::neurosim::{estimate_kan, estimate_mlp, KanArch, MlpArch};
+    let dims: Vec<usize> = args
+        .get("dims", "17,1,14")
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let kind = args.get("kind", "kan");
+    let report = match kind.as_str() {
+        "mlp" => estimate_mlp(&MlpArch::new(dims), &cfg.hardware.tech)?,
+        _ => {
+            let mut arch = KanArch::new(dims, args.get_u32("g", 5));
+            arch.tm_n = args.get_u32("tm-n", 3);
+            estimate_kan(&arch, &cfg.hardware.tech)?
+        }
+    };
+    println!("{}", kan_edge::util::json::obj(vec![
+        ("name", kan_edge::util::json::Value::Str(report.name.clone())),
+        ("area_mm2", report.area_mm2.into()),
+        ("energy_pj", report.energy_pj.into()),
+        ("latency_ns", report.latency_ns.into()),
+        ("num_params", report.num_params.into()),
+    ]));
+    Ok(())
+}
+
+fn stats_cmd() -> Result<()> {
+    println!("ACIM calibration statistics (synthetic 'measured-chip' tables,");
+    println!("DESIGN.md section 4; regenerated from the resistive-ladder model):
+");
+    println!(
+        "{:>6} {:>12} {:>12}  {}",
+        "rows", "mean err", "sigma err", "attenuation by distance decile"
+    );
+    for s in kan_edge::acim::measured_table(0xCA11B) {
+        let profile: Vec<String> =
+            s.row_attenuation.iter().map(|a| format!("{a:.3}")).collect();
+        println!(
+            "{:>6} {:>12.5} {:>12.5}  [{}]",
+            s.rows,
+            s.mean_rel_error,
+            s.sigma_rel_error,
+            profile.join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn info_cmd(cfg: &AppConfig) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts.dir)?;
+    println!(
+        "artifacts: {} (build {:.0}s)",
+        cfg.artifacts.dir,
+        manifest.build_seconds.unwrap_or(0.0)
+    );
+    println!(
+        "dataset: {} features, {} classes, {}/{}/{} train/val/test",
+        manifest.dataset.num_features,
+        manifest.dataset.num_classes,
+        manifest.dataset.train,
+        manifest.dataset.val,
+        manifest.dataset.test
+    );
+    let mut names: Vec<_> = manifest.models.keys().collect();
+    names.sort();
+    for name in names {
+        let m = &manifest.models[name];
+        println!(
+            "  {name}: {:?} {} params, val {:.4}, test {:.4}",
+            m.dims,
+            m.num_params,
+            m.val_acc,
+            m.quant_test_acc.or(m.test_acc).unwrap_or(f64::NAN)
+        );
+    }
+    println!(
+        "sweep (Fig 12): G = {:?}",
+        manifest.sweep.iter().map(|s| s.g).collect::<Vec<_>>()
+    );
+    Ok(())
+}

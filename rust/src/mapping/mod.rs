@@ -1,0 +1,12 @@
+//! KAN-SAM sparsity-aware weight mapping (paper §3.3).
+//!
+//! * [`probability`] — B(X) activation-probability estimation (empirical
+//!   over a calibration set, or the analytic Gaussian form of Fig 8).
+//! * [`sam`] — the mapping itself: a permutation placing hot rows near the
+//!   BL clamp, plus the uniform baseline and an adversarial ablation.
+
+pub mod probability;
+pub mod sam;
+
+pub use probability::{empirical, gaussian};
+pub use sam::{build_mapping, is_permutation, MappingStrategy};

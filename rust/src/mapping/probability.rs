@@ -1,0 +1,142 @@
+//! B(X) activation-probability estimation (paper §3.3).
+//!
+//! For degree-K splines only K+1 basis functions fire per input, so each
+//! crossbar row `(input i, basis g)` has an activation probability
+//! determined by the input's distribution over knot intervals. KAN-SAM
+//! ranks rows by this probability. Two estimators are provided:
+//!
+//! * [`empirical`] — count interval occupancy over a calibration sample
+//!   (what a deployment would do);
+//! * [`gaussian`] — the analytic closed form the paper's Fig 8 illustrates,
+//!   for a Gaussian input over the grid range.
+
+use crate::kan::layer::QuantKanLayer;
+
+/// Empirical per-row activation statistics for one layer.
+///
+/// Returns `prob[i * (G+K) + g]` = expected WL drive (mean B value, in
+/// [0, 1]) of row `(i, g)` over the calibration inputs. Using the *expected
+/// drive* rather than the on/off frequency weights frequently-hit, strongly
+/// driven rows highest — those carry the most charge and therefore matter
+/// most under IR-drop.
+pub fn empirical(layer: &QuantKanLayer, calib: impl Iterator<Item = Vec<f32>>) -> Vec<f64> {
+    let nb = layer.spec.num_basis();
+    let mut acc = vec![0.0f64; layer.din * nb];
+    let mut n = 0usize;
+    for row in calib {
+        assert_eq!(row.len(), layer.din);
+        let xq = layer.quantize_input(&row);
+        let drives = layer.wordline_drives(&xq);
+        for (slot, &d) in drives.iter().enumerate() {
+            acc[slot] += d as f64 / 255.0;
+        }
+        n += 1;
+    }
+    if n > 0 {
+        for a in &mut acc {
+            *a /= n as f64;
+        }
+    }
+    acc
+}
+
+/// Analytic activation probability for a Gaussian input `N(mu, sigma²)`
+/// over the layer's grid: probability that basis `g` is active = P(x lands
+/// in one of the K+1 intervals that basis covers).
+pub fn gaussian(layer: &QuantKanLayer, mu: f64, sigma: f64) -> Vec<f64> {
+    let spec = &layer.spec;
+    let nb = spec.num_basis();
+    let h = spec.knot_spacing();
+    let k = spec.k as i64;
+    let mut probs = vec![0.0f64; layer.din * nb];
+    for g in 0..nb as i64 {
+        // basis g is active on grid intervals [g-K, g] ∩ [0, G-1]
+        let lo_iv = (g - k).max(0);
+        let hi_iv = g.min(spec.g as i64 - 1);
+        let mut p = 0.0;
+        for iv in lo_iv..=hi_iv {
+            let a = spec.lo + iv as f64 * h;
+            let b = a + h;
+            p += normal_cdf((b - mu) / sigma) - normal_cdf((a - mu) / sigma);
+        }
+        for i in 0..layer.din {
+            probs[i * nb + g as usize] = p;
+        }
+    }
+    probs
+}
+
+/// Φ(x): standard normal CDF via the erf-like Abramowitz–Stegun 7.1.26
+/// approximation (|error| < 7.5e-8 — plenty for a ranking).
+pub fn normal_cdf(x: f64) -> f64 {
+    let t = 1.0 / (1.0 + 0.2316419 * x.abs());
+    let d = 0.3989422804014327 * (-x * x / 2.0).exp();
+    let poly = t
+        * (0.319381530
+            + t * (-0.356563782 + t * (1.781477937 + t * (-1.821255978 + t * 1.330274429))));
+    let p = 1.0 - d * poly;
+    if x >= 0.0 {
+        p
+    } else {
+        1.0 - p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kan::layer::tests::toy_layer;
+
+    #[test]
+    fn normal_cdf_sanity() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((normal_cdf(-1.96) - 0.025).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gaussian_probs_peak_at_center() {
+        let layer = toy_layer(8, 3, 1, 1);
+        let probs = gaussian(&layer, 0.0, 0.3); // grid spans [-1, 1]
+        let nb = layer.spec.num_basis();
+        let center = nb / 2;
+        let peak = probs[..nb]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(
+            (peak as i64 - center as i64).abs() <= 1,
+            "peak at {peak}, expected near {center}"
+        );
+        // extremes least likely (Fig 8)
+        assert!(probs[0] < probs[center]);
+        assert!(probs[nb - 1] < probs[center]);
+    }
+
+    #[test]
+    fn empirical_matches_structure() {
+        let layer = toy_layer(5, 3, 2, 1);
+        // calibration set concentrated near x = 0 (grid center)
+        let calib: Vec<Vec<f32>> = (0..200)
+            .map(|i| vec![0.05 * ((i % 9) as f32 - 4.0) / 4.0; 2])
+            .collect();
+        let probs = empirical(&layer, calib.into_iter());
+        let nb = layer.spec.num_basis();
+        // central rows should dominate extreme rows for both inputs
+        for i in 0..2 {
+            let row = &probs[i * nb..(i + 1) * nb];
+            let center_mass: f64 = row[2..=5].iter().sum();
+            let edge_mass: f64 = row[0] + row[nb - 1];
+            assert!(center_mass > edge_mass, "input {i}: {row:?}");
+        }
+    }
+
+    #[test]
+    fn empirical_handles_empty_calibration() {
+        let layer = toy_layer(5, 3, 2, 1);
+        let probs = empirical(&layer, std::iter::empty());
+        assert!(probs.iter().all(|&p| p == 0.0));
+    }
+}

@@ -1,0 +1,125 @@
+//! KAN-SAM: sparsity-aware weight mapping (paper §3.3, Fig 8/12).
+//!
+//! Rows with high activation probability (`B_H(X)`) are programmed into
+//! RRAM cells *near the BL clamping circuit*, where IR-drop attenuation is
+//! smallest; low-probability rows (`B_L(X)`) go far from the clamp. No
+//! hardware or algorithm changes — just a permutation chosen at mapping
+//! time, which is the paper's point.
+//!
+//! When a layer spans several tiles, physical slots are ranked by their
+//! in-tile distance to the clamp (slot `s` of any tile is distance `s %
+//! tile_rows`), so every tile gets its hottest rows nearest its own clamp.
+
+
+/// Mapping strategies for placing logical rows onto physical slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MappingStrategy {
+    /// Natural order (the Fig 12 baseline: "uniformly mapped ... without
+    /// considering Bi(X) activation probabilities").
+    Uniform,
+    /// KAN-SAM: highest activation probability nearest the clamp.
+    Sam,
+    /// Adversarial order (highest probability farthest) — used by ablation
+    /// benches to bound the effect size.
+    WorstCase,
+}
+
+/// Build the row mapping for one layer.
+///
+/// `probs[r]` = activation probability / expected drive of logical row `r`;
+/// `tile_rows` = physical array size. Returns `mapping[slot] = logical row`
+/// with slots filled tile-by-tile (slot 0 of each tile nearest its clamp).
+pub fn build_mapping(probs: &[f64], tile_rows: usize, strategy: MappingStrategy) -> Vec<usize> {
+    let n = probs.len();
+    match strategy {
+        MappingStrategy::Uniform => (0..n).collect(),
+        MappingStrategy::Sam | MappingStrategy::WorstCase => {
+            // logical rows by probability (desc for SAM, asc for worst case)
+            let mut rows: Vec<usize> = (0..n).collect();
+            rows.sort_by(|&a, &b| {
+                probs[b]
+                    .partial_cmp(&probs[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b)) // deterministic tie-break
+            });
+            if strategy == MappingStrategy::WorstCase {
+                rows.reverse();
+            }
+            // physical slots by distance from their tile's clamp
+            let mut slots: Vec<usize> = (0..n).collect();
+            slots.sort_by_key(|&s| (s % tile_rows, s / tile_rows));
+            let mut mapping = vec![0usize; n];
+            for (rank, &slot) in slots.iter().enumerate() {
+                mapping[slot] = rows[rank];
+            }
+            mapping
+        }
+    }
+}
+
+/// Validity check: a mapping must be a permutation of `0..n`.
+pub fn is_permutation(mapping: &[usize]) -> bool {
+    let n = mapping.len();
+    let mut seen = vec![false; n];
+    for &m in mapping {
+        if m >= n || seen[m] {
+            return false;
+        }
+        seen[m] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_identity() {
+        let probs = vec![0.5, 0.1, 0.9];
+        assert_eq!(build_mapping(&probs, 8, MappingStrategy::Uniform), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sam_places_hottest_row_at_clamp() {
+        let probs = vec![0.1, 0.9, 0.3, 0.6];
+        let m = build_mapping(&probs, 8, MappingStrategy::Sam);
+        // single tile: slot 0 gets the hottest logical row (1)
+        assert_eq!(m[0], 1);
+        assert_eq!(m[1], 3);
+        assert_eq!(m[2], 2);
+        assert_eq!(m[3], 0);
+        assert!(is_permutation(&m));
+    }
+
+    #[test]
+    fn worst_case_is_reverse_of_sam_ranking() {
+        let probs = vec![0.1, 0.9, 0.3, 0.6];
+        let sam = build_mapping(&probs, 8, MappingStrategy::Sam);
+        let worst = build_mapping(&probs, 8, MappingStrategy::WorstCase);
+        assert_eq!(sam[0], worst[3]);
+        assert_eq!(sam[3], worst[0]);
+    }
+
+    #[test]
+    fn multi_tile_fills_clamp_slots_first() {
+        // 6 rows, tiles of 2: slots 0,2,4 are each tile's clamp-nearest;
+        // the three hottest rows must land there
+        let probs = vec![0.6, 0.1, 0.9, 0.2, 0.8, 0.3];
+        let m = build_mapping(&probs, 2, MappingStrategy::Sam);
+        let clamp_rows: Vec<usize> = vec![m[0], m[2], m[4]];
+        assert!(clamp_rows.contains(&2)); // p=0.9
+        assert!(clamp_rows.contains(&4)); // p=0.8
+        assert!(clamp_rows.contains(&0)); // p=0.6
+        assert!(is_permutation(&m));
+    }
+
+    #[test]
+    fn deterministic_under_ties() {
+        let probs = vec![0.5; 10];
+        let a = build_mapping(&probs, 4, MappingStrategy::Sam);
+        let b = build_mapping(&probs, 4, MappingStrategy::Sam);
+        assert_eq!(a, b);
+        assert!(is_permutation(&a));
+    }
+}

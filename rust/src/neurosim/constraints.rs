@@ -1,0 +1,89 @@
+//! Hardware constraints for the Fig 9 search loop.
+
+
+use super::cost::AccelReport;
+
+/// User-specified hardware budget (any field `None` = unconstrained).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HwConstraints {
+    pub max_area_mm2: Option<f64>,
+    pub max_energy_pj: Option<f64>,
+    pub max_latency_ns: Option<f64>,
+}
+
+impl HwConstraints {
+    /// The paper's "minimal" budget (admits only the smallest designs —
+    /// the KAN1 class). Values are in this crate's cost-model scale, which
+    /// sits ~4x below the paper's absolute numbers (EXPERIMENTS.md §Fig13).
+    pub fn minimal() -> Self {
+        Self {
+            max_area_mm2: Some(0.005),
+            max_energy_pj: Some(50.0),
+            max_latency_ns: Some(200.0),
+        }
+    }
+
+    /// The paper's "moderate" budget (admits KAN2-class designs).
+    pub fn moderate() -> Self {
+        Self {
+            max_area_mm2: Some(0.012),
+            max_energy_pj: Some(55.0),
+            max_latency_ns: Some(250.0),
+        }
+    }
+
+    /// Does a cost report fit the budget?
+    pub fn admits(&self, r: &AccelReport) -> bool {
+        self.max_area_mm2.map_or(true, |m| r.area_mm2 <= m)
+            && self.max_energy_pj.map_or(true, |m| r.energy_pj <= m)
+            && self.max_latency_ns.map_or(true, |m| r.latency_ns <= m)
+    }
+
+    /// Which constraint is violated (for the Fig 9 refinement loop).
+    pub fn violations(&self, r: &AccelReport) -> Vec<String> {
+        let mut v = Vec::new();
+        if let Some(m) = self.max_area_mm2 {
+            if r.area_mm2 > m {
+                v.push(format!("area {:.4} mm2 > {:.4}", r.area_mm2, m));
+            }
+        }
+        if let Some(m) = self.max_energy_pj {
+            if r.energy_pj > m {
+                v.push(format!("energy {:.1} pJ > {:.1}", r.energy_pj, m));
+            }
+        }
+        if let Some(m) = self.max_latency_ns {
+            if r.latency_ns > m {
+                v.push(format!("latency {:.0} ns > {:.0}", r.latency_ns, m));
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::Tech;
+    use crate::neurosim::cost::{estimate_kan, KanArch};
+
+    #[test]
+    fn unconstrained_admits_everything() {
+        let c = HwConstraints::default();
+        let r = estimate_kan(&KanArch::new(vec![17, 1, 14], 64), &Tech::default()).unwrap();
+        assert!(c.admits(&r));
+        assert!(c.violations(&r).is_empty());
+    }
+
+    #[test]
+    fn tight_budget_rejects_with_reasons() {
+        let c = HwConstraints {
+            max_area_mm2: Some(1e-6),
+            max_energy_pj: Some(1e-3),
+            max_latency_ns: None,
+        };
+        let r = estimate_kan(&KanArch::new(vec![17, 1, 14], 8), &Tech::default()).unwrap();
+        assert!(!c.admits(&r));
+        assert_eq!(c.violations(&r).len(), 2);
+    }
+}

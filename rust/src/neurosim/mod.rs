@@ -1,0 +1,18 @@
+//! KAN-NeuroSim: the hyperparameter / hardware co-optimization framework
+//! (paper §3.4, Fig 9).
+//!
+//! * [`cost`] — the NeuroSim-role estimator: accelerator-level area /
+//!   energy / latency for KAN and conventional-MLP designs.
+//! * [`constraints`] — user hardware budgets (energy, area, latency).
+//! * [`search`] — step 1 of Fig 9: find the admissible (G, TM-DV mode)
+//!   design points and pick the best against the training sweep manifest
+//!   produced by the python build path (grid extension = step 2 lives in
+//!   `python/compile/train.py`, which this search consumes the output of).
+
+pub mod constraints;
+pub mod cost;
+pub mod search;
+
+pub use constraints::HwConstraints;
+pub use cost::{estimate_kan, estimate_mlp, AccelReport, KanArch, MlpArch};
+pub use search::{search, CandidateResult, SearchOutcome};

@@ -1,0 +1,148 @@
+//! Fig 9 step 1: constraint-driven design-point search.
+//!
+//! Candidates are (G from the training sweep, TM-DV-IG mode). Each is
+//! costed with [`super::cost::estimate_kan`]; admissible candidates are
+//! ranked by validated accuracy (from the sweep manifest the python build
+//! path produced), ties broken by energy. The grid-extension training
+//! itself (step 2) runs at build time in `python/compile/train.py` — this
+//! module consumes its results, mirroring the paper's split between the
+//! PyTorch environment and the NeuroSim cost engine.
+
+
+use super::constraints::HwConstraints;
+use super::cost::{estimate_kan, AccelReport, KanArch};
+use crate::circuits::Tech;
+use crate::error::Result;
+use crate::kan::checkpoint::SweepEntry;
+
+/// One evaluated candidate design point.
+#[derive(Debug, Clone)]
+pub struct CandidateResult {
+    pub g: u32,
+    pub tm_n: u32,
+    pub accuracy: f64,
+    pub report: AccelReport,
+    pub admitted: bool,
+    pub violations: Vec<String>,
+}
+
+/// Search outcome: all candidates plus the winner (if any).
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub candidates: Vec<CandidateResult>,
+    pub best: Option<CandidateResult>,
+}
+
+/// Evaluate every (sweep G, TM mode) candidate against the constraints.
+///
+/// `dims` is the KAN architecture of the sweep models; `tm_modes` the
+/// TM-DV-IG voltage-bit settings to consider (TD-A=2, default=3, TD-P=4).
+pub fn search(
+    dims: &[usize],
+    sweep: &[SweepEntry],
+    tm_modes: &[u32],
+    constraints: &HwConstraints,
+    tech: &Tech,
+) -> Result<SearchOutcome> {
+    let mut candidates = Vec::new();
+    for entry in sweep {
+        for &tm_n in tm_modes {
+            let arch = KanArch {
+                dims: dims.to_vec(),
+                g: entry.g,
+                k: 3,
+                n_bits: 8,
+                tm_n,
+                array_rows: 256,
+            };
+            let report = estimate_kan(&arch, tech)?;
+            let violations = constraints.violations(&report);
+            candidates.push(CandidateResult {
+                g: entry.g,
+                tm_n,
+                accuracy: entry.quant_test_acc,
+                admitted: violations.is_empty(),
+                violations,
+                report,
+            });
+        }
+    }
+    let best = candidates
+        .iter()
+        .filter(|c| c.admitted)
+        .max_by(|a, b| {
+            a.accuracy
+                .partial_cmp(&b.accuracy)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                // among equal accuracy prefer lower energy
+                .then(
+                    b.report
+                        .energy_pj
+                        .partial_cmp(&a.report.energy_pj)
+                        .unwrap_or(std::cmp::Ordering::Equal),
+                )
+        })
+        .cloned();
+    Ok(SearchOutcome { candidates, best })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep() -> Vec<SweepEntry> {
+        vec![
+            SweepEntry { g: 7, num_params: 341, val_acc: 0.80, quant_test_acc: 0.80, weights: "a".into() },
+            SweepEntry { g: 15, num_params: 589, val_acc: 0.83, quant_test_acc: 0.83, weights: "b".into() },
+            SweepEntry { g: 30, num_params: 1054, val_acc: 0.85, quant_test_acc: 0.85, weights: "c".into() },
+            SweepEntry { g: 60, num_params: 1984, val_acc: 0.86, quant_test_acc: 0.86, weights: "d".into() },
+        ]
+    }
+
+    #[test]
+    fn unconstrained_search_picks_highest_accuracy() {
+        let out = search(
+            &[17, 1, 14],
+            &sweep(),
+            &[3],
+            &HwConstraints::default(),
+            &Tech::default(),
+        )
+        .unwrap();
+        assert_eq!(out.candidates.len(), 4);
+        assert_eq!(out.best.as_ref().unwrap().g, 60);
+    }
+
+    #[test]
+    fn tight_budget_forces_smaller_g() {
+        // find a budget that admits G=7 but not G=60
+        let t = Tech::default();
+        let r7 = estimate_kan(&KanArch::new(vec![17, 1, 14], 7), &t).unwrap();
+        let r60 = estimate_kan(&KanArch::new(vec![17, 1, 14], 60), &t).unwrap();
+        assert!(r60.area_mm2 > r7.area_mm2);
+        let budget = HwConstraints {
+            max_area_mm2: Some((r7.area_mm2 + r60.area_mm2) / 2.0),
+            max_energy_pj: None,
+            max_latency_ns: None,
+        };
+        let out = search(&[17, 1, 14], &sweep(), &[3], &budget, &t).unwrap();
+        let best = out.best.unwrap();
+        assert!(best.g < 60, "budget should exclude G=60, got G={}", best.g);
+        // and the excluded candidate carries its violation reason
+        assert!(out
+            .candidates
+            .iter()
+            .any(|c| c.g == 60 && !c.admitted && !c.violations.is_empty()));
+    }
+
+    #[test]
+    fn impossible_budget_yields_no_winner() {
+        let budget = HwConstraints {
+            max_area_mm2: Some(1e-9),
+            ..Default::default()
+        };
+        let out = search(&[17, 1, 14], &sweep(), &[2, 3, 4], &budget, &Tech::default()).unwrap();
+        assert!(out.best.is_none());
+        assert_eq!(out.candidates.len(), 12);
+    }
+}

@@ -1,0 +1,191 @@
+//! ASP-KAN-HAQ phase 1 + 2: the quantization geometry (paper §3.1).
+//!
+//! *Alignment-Symmetry* (phase 1) constrains the quantization grid to an
+//! integer multiple of the knot grid, `G·L ≤ 2^n` (eq. 4) — zero offset
+//! between the grids, so one LUT serves every basis function.
+//!
+//! *PowerGap* (phase 2) further restricts `L = 2^LD` (eq. 5/6) so global
+//! interval index and local offset become bit-field extractions — the
+//! hardware trick that splits the n-bit decoder into an (n−D)-bit + D-bit
+//! pair and collapses the TG-MUX tree.
+
+use crate::error::{Error, Result};
+
+/// Largest `LD` with `G · 2^LD ≤ 2^n` (eq. 6).
+pub fn solve_ld(g: u32, n_bits: u32) -> Result<u32> {
+    if g == 0 {
+        return Err(Error::Config("grid size G must be >= 1".into()));
+    }
+    if g > (1u32 << n_bits) {
+        return Err(Error::Config(format!(
+            "G={g} does not fit in {n_bits}-bit input precision"
+        )));
+    }
+    let mut ld = 0u32;
+    while u64::from(g) << (ld + 1) <= 1u64 << n_bits {
+        ld += 1;
+    }
+    Ok(ld)
+}
+
+/// Quantization geometry of one KAN layer input under ASP-KAN-HAQ.
+///
+/// Codes are `0 ..= R-1` with `R = G·2^LD`; code `q` maps to the float value
+/// `lo + q·step`. Because `R` divides the knot grid exactly, `q >> LD` is
+/// the knot interval and `q & (2^LD - 1)` the in-interval offset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AspSpec {
+    pub g: u32,
+    pub k: u32,
+    pub n_bits: u32,
+    pub ld: u32,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl AspSpec {
+    /// Build a spec, solving for the optimal `LD`.
+    pub fn build(g: u32, k: u32, n_bits: u32, lo: f64, hi: f64) -> Result<Self> {
+        if hi <= lo {
+            return Err(Error::Config(format!("empty input range [{lo}, {hi}]")));
+        }
+        Ok(Self { g, k, n_bits, ld: solve_ld(g, n_bits)?, lo, hi })
+    }
+
+    /// Levels per knot interval, `L = 2^LD`.
+    #[inline]
+    pub fn levels_per_interval(&self) -> u32 {
+        1 << self.ld
+    }
+
+    /// Number of input codes `R = G·2^LD`.
+    #[inline]
+    pub fn range(&self) -> u32 {
+        self.g * self.levels_per_interval()
+    }
+
+    /// Quantization step `δ = (hi − lo) / R`.
+    #[inline]
+    pub fn step(&self) -> f64 {
+        (self.hi - self.lo) / self.range() as f64
+    }
+
+    /// Knot spacing `h = (hi − lo) / G`.
+    #[inline]
+    pub fn knot_spacing(&self) -> f64 {
+        (self.hi - self.lo) / self.g as f64
+    }
+
+    /// Number of basis functions `G + K`.
+    #[inline]
+    pub fn num_basis(&self) -> usize {
+        (self.g + self.k) as usize
+    }
+
+    /// Float → code (round-to-nearest, saturating at the grid edges).
+    #[inline]
+    pub fn quantize(&self, x: f64) -> u32 {
+        let q = ((x - self.lo) / self.step()).round();
+        (q.max(0.0) as u32).min(self.range() - 1)
+    }
+
+    /// Code → float on the aligned grid.
+    #[inline]
+    pub fn dequantize(&self, q: u32) -> f64 {
+        self.lo + q as f64 * self.step()
+    }
+
+    /// Code → grid coordinate `z ∈ [0, G)`; exact thanks to alignment.
+    #[inline]
+    pub fn grid_coord(&self, q: u32) -> f64 {
+        q as f64 / self.levels_per_interval() as f64
+    }
+
+    /// PowerGap bit-field split: code → (global interval `j`, local `l`).
+    ///
+    /// This *is* the hardware: an (n−D)-bit decoder for `j` and a D-bit
+    /// decoder for `l`, instead of one monolithic n-bit decoder.
+    #[inline]
+    pub fn decompose(&self, q: u32) -> (u32, u32) {
+        (q >> self.ld, q & (self.levels_per_interval() - 1))
+    }
+
+    /// The active basis indices for a code in interval `j`: `j ..= j+K`.
+    #[inline]
+    pub fn active_bases(&self, j: u32) -> std::ops::RangeInclusive<usize> {
+        (j as usize)..=(j + self.k) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_ld_matches_paper_examples() {
+        // 8-bit input: G=5 -> L=2^5=32 (range 160), G=8 -> 32 (256),
+        // G=16 -> 16, G=32 -> 8, G=64 -> 4.
+        assert_eq!(solve_ld(5, 8).unwrap(), 5);
+        assert_eq!(solve_ld(8, 8).unwrap(), 5);
+        assert_eq!(solve_ld(16, 8).unwrap(), 4);
+        assert_eq!(solve_ld(32, 8).unwrap(), 3);
+        assert_eq!(solve_ld(64, 8).unwrap(), 2);
+        // exact fit: G = 2^n
+        assert_eq!(solve_ld(256, 8).unwrap(), 0);
+    }
+
+    #[test]
+    fn solve_ld_rejects_oversized_grid() {
+        assert!(solve_ld(257, 8).is_err());
+        assert!(solve_ld(0, 8).is_err());
+    }
+
+    #[test]
+    fn eq6_holds() {
+        for n in 4..=10u32 {
+            for g in 1..=(1u32 << n) {
+                let ld = solve_ld(g, n).unwrap();
+                assert!(u64::from(g) << ld <= 1u64 << n, "g={g} n={n} ld={ld}");
+                assert!(u64::from(g) << (ld + 1) > 1u64 << n, "ld not maximal");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrip_and_alignment() {
+        let spec = AspSpec::build(5, 3, 8, -1.0, 1.0).unwrap();
+        assert_eq!(spec.range(), 160);
+        // knot boundaries land exactly on codes that are multiples of 2^LD
+        for j in 0..spec.g {
+            let knot = spec.lo + j as f64 * spec.knot_spacing();
+            let q = spec.quantize(knot);
+            assert_eq!(q % spec.levels_per_interval(), 0, "knot {j} misaligned");
+            assert_eq!(q >> spec.ld, j);
+        }
+        // saturation
+        assert_eq!(spec.quantize(-5.0), 0);
+        assert_eq!(spec.quantize(5.0), spec.range() - 1);
+    }
+
+    #[test]
+    fn decompose_reassembles() {
+        let spec = AspSpec::build(7, 3, 8, 0.0, 1.0).unwrap();
+        for q in 0..spec.range() {
+            let (j, l) = spec.decompose(q);
+            assert_eq!(j * spec.levels_per_interval() + l, q);
+            assert!(j < spec.g);
+            assert!(l < spec.levels_per_interval());
+        }
+    }
+
+    #[test]
+    fn grid_coord_is_exact() {
+        let spec = AspSpec::build(5, 3, 8, -2.0, 3.0).unwrap();
+        for q in 0..spec.range() {
+            let z = spec.grid_coord(q);
+            let (j, l) = spec.decompose(q);
+            let expect = j as f64 + l as f64 / spec.levels_per_interval() as f64;
+            assert_eq!(z, expect);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! ASP-KAN-HAQ quantization (paper §3.1) and the conventional baseline.
+//!
+//! * [`asp`] — phase 1 (Alignment-Symmetry) + phase 2 (PowerGap) geometry.
+//! * [`shlut`] — the Sharable-Hemi LUT built on top of an [`asp::AspSpec`].
+//! * [`pact`] — PACT-style conventional quantization, the Fig 10 baseline.
+
+pub mod asp;
+pub mod pact;
+pub mod shlut;
+
+pub use asp::{solve_ld, AspSpec};
+pub use pact::PactSpec;
+pub use shlut::ShLut;

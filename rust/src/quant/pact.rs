@@ -1,0 +1,138 @@
+//! Conventional-quantization baseline (PACT-style) for the Fig 10 comparison.
+//!
+//! PACT [16] learns a clipping range `[0, α]` and quantizes it into `2^n`
+//! uniform steps. Nothing ties the step to the knot spacing, so quantized
+//! abscissae fall at *different* offsets inside different knot intervals:
+//! shifting two intervals onto each other does not superimpose their sample
+//! points (paper Fig 3, left). Consequently each of the `G+K` basis
+//! functions needs its own programmable LUT over its support, its own
+//! `2L:1` TG-MUX, and a full n-bit decoder drives the selection — the
+//! hardware Fig 10 costs out against ASP-KAN-HAQ.
+
+use crate::kan::spline;
+
+/// PACT-style quantizer for a KAN layer input.
+#[derive(Debug, Clone, Copy)]
+pub struct PactSpec {
+    pub g: u32,
+    pub k: u32,
+    pub n_bits: u32,
+    pub lo: f64,
+    /// PACT clipping parameter (the upper end of the quantized range).
+    pub alpha: f64,
+}
+
+impl PactSpec {
+    pub fn new(g: u32, k: u32, n_bits: u32, lo: f64, alpha: f64) -> Self {
+        Self { g, k, n_bits, lo, alpha }
+    }
+
+    /// Number of codes, `2^n` (no relation to `G`).
+    #[inline]
+    pub fn range(&self) -> u32 {
+        1 << self.n_bits
+    }
+
+    #[inline]
+    pub fn step(&self) -> f64 {
+        (self.alpha - self.lo) / self.range() as f64
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f64) -> u32 {
+        let q = ((x - self.lo) / self.step()).round();
+        (q.max(0.0) as u32).min(self.range() - 1)
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: u32) -> f64 {
+        self.lo + q as f64 * self.step()
+    }
+
+    /// Quantized sample points inside one basis' support:
+    /// `(K+1)/G` of the full code range, rounded up.
+    pub fn per_basis_lut_entries(&self) -> usize {
+        (((self.k + 1) as u64 * self.range() as u64 + self.g as u64 - 1)
+            / self.g as u64) as usize
+    }
+
+    /// Whether the quantization grid aligns with the knot grid (it almost
+    /// never does — that is the point of the baseline). Alignment requires
+    /// `2^n` to be an integer multiple of `G`.
+    pub fn grids_aligned(&self) -> bool {
+        self.range() % self.g == 0
+    }
+
+    /// Build the per-basis LUTs: `lut[i][e]` = `B_i` at the e-th code in its
+    /// support. Misalignment makes these tables genuinely differ between
+    /// bases (asserted in tests), which is why they cannot be shared.
+    pub fn build_per_basis_luts(&self) -> Vec<Vec<f64>> {
+        let entries = self.per_basis_lut_entries();
+        let h = (self.alpha - self.lo) / self.g as f64;
+        let mut out = vec![vec![0.0; entries]; (self.g + self.k) as usize];
+        for (i, lut) in out.iter_mut().enumerate() {
+            let zlo = i as f64 - self.k as f64;
+            let zhi = i as f64 + 1.0;
+            let mut e = 0;
+            for q in 0..self.range() {
+                let z = (self.dequantize(q) - self.lo) / h;
+                if z >= zlo && z < zhi && e < entries {
+                    lut[e] = spline::cardinal_bspline(z - i as f64 + self.k as f64, self.k as usize);
+                    e += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn misaligned_grids_for_non_power_of_two_g() {
+        // G in the Fig 10 sweep that don't divide 256
+        for g in [5u32, 7, 12, 60] {
+            let s = PactSpec::new(g, 3, 8, 0.0, 1.0);
+            assert!(!s.grids_aligned(), "G={g} unexpectedly aligned");
+        }
+        // power-of-two G happens to align — but PACT still pays per-basis
+        // LUTs because its *trained* alpha breaks alignment in general.
+        assert!(PactSpec::new(8, 3, 8, 0.0, 1.0).grids_aligned());
+    }
+
+    #[test]
+    fn per_basis_luts_differ_between_bases() {
+        // the central bases' tables must not be identical — the sharing
+        // obstruction of paper Fig 3
+        let s = PactSpec::new(5, 3, 8, 0.0, 1.0);
+        let luts = s.build_per_basis_luts();
+        let a = &luts[3];
+        let b = &luts[4];
+        let max_diff = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_diff > 1e-4,
+            "per-basis LUTs should differ under misalignment (diff={max_diff})"
+        );
+    }
+
+    #[test]
+    fn entry_count_scales_with_support_fraction() {
+        let s = PactSpec::new(8, 3, 8, 0.0, 1.0);
+        assert_eq!(s.per_basis_lut_entries(), 128); // (3+1)*256/8
+        let s = PactSpec::new(64, 3, 8, 0.0, 1.0);
+        assert_eq!(s.per_basis_lut_entries(), 16);
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let s = PactSpec::new(5, 3, 6, -1.0, 1.0);
+        assert_eq!(s.quantize(-9.0), 0);
+        assert_eq!(s.quantize(9.0), 63);
+    }
+}

@@ -1,0 +1,149 @@
+//! The Sharable-Hemi LUT (SH-LUT) — ASP-KAN-HAQ's shared basis table.
+//!
+//! After Alignment-Symmetry, every quantized abscissa inside any knot
+//! interval has local fraction `u = l / 2^LD`, and the `K+1` active basis
+//! values at that abscissa are `C_k(K − t + u)` — independent of the
+//! interval. One `2^LD × (K+1)` table therefore serves all `G+K` basis
+//! functions. The cardinal spline's mirror symmetry `C_k(s) = C_k(K+1−s)`
+//! relates row `l` to row `2^LD − l` with columns reversed, so only rows
+//! `0 ..= 2^(LD−1)` need storing: the *hemi* half of the name and the
+//! paper's 50 % LUT-size reduction.
+
+use super::asp::AspSpec;
+use crate::kan::spline;
+
+/// The shared LUT in both full and hemi (stored) forms, with fixed-point
+/// codes as the hardware would hold them.
+#[derive(Debug, Clone)]
+pub struct ShLut {
+    /// B-spline degree.
+    pub k: u32,
+    /// PowerGap exponent; full table has `2^LD` rows.
+    pub ld: u32,
+    /// LUT entry precision in bits (paper: 8).
+    pub bits: u32,
+    /// Stored rows `0 ..= 2^(LD-1)`, each `K+1` fixed-point codes.
+    pub hemi: Vec<Vec<u32>>,
+}
+
+impl ShLut {
+    /// Build the SH-LUT for a quantization spec (entry precision = `bits`).
+    pub fn build(spec: &AspSpec, bits: u32) -> Self {
+        let lvl = spec.levels_per_interval();
+        let half = (lvl / 2) as usize;
+        let scale = ((1u64 << bits) - 1) as f64;
+        let hemi = (0..=half)
+            .map(|l| {
+                let u = l as f64 / lvl as f64;
+                spline::active_basis(u, spec.k as usize)
+                    .into_iter()
+                    .map(|v| (v * scale).round().clamp(0.0, scale) as u32)
+                    .collect()
+            })
+            .collect();
+        Self { k: spec.k, ld: spec.ld, bits, hemi }
+    }
+
+    /// Rows of the full (logical) table, `2^LD`.
+    #[inline]
+    pub fn full_rows(&self) -> usize {
+        1usize << self.ld
+    }
+
+    /// Stored entries (the hemi half), what the hardware actually holds.
+    #[inline]
+    pub fn stored_entries(&self) -> usize {
+        self.hemi.len() * (self.k as usize + 1)
+    }
+
+    /// Read one logical entry `(l, t)`, resolving the mirror for the upper
+    /// half — this models the MUX/DEMUX routing network of Fig 5/6.
+    #[inline]
+    pub fn lookup(&self, l: u32, t: u32) -> u32 {
+        let lvl = self.full_rows() as u32;
+        debug_assert!(l < lvl && t <= self.k);
+        let half = lvl / 2;
+        if l <= half {
+            self.hemi[l as usize][t as usize]
+        } else {
+            self.hemi[(lvl - l) as usize][(self.k - t) as usize]
+        }
+    }
+
+    /// The `K+1` active basis codes for local offset `l` (one LUT row).
+    pub fn row(&self, l: u32) -> Vec<u32> {
+        (0..=self.k).map(|t| self.lookup(l, t)).collect()
+    }
+
+    /// Dequantize one entry back to `[0, 1]`.
+    #[inline]
+    pub fn dequant(&self, code: u32) -> f64 {
+        code as f64 / ((1u64 << self.bits) - 1) as f64
+    }
+
+    /// Dequantized full table, `2^LD` rows × `K+1` columns.
+    pub fn full_table_f64(&self) -> Vec<Vec<f64>> {
+        (0..self.full_rows() as u32)
+            .map(|l| self.row(l).into_iter().map(|c| self.dequant(c)).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::asp::AspSpec;
+
+    fn spec(g: u32, k: u32) -> AspSpec {
+        AspSpec::build(g, k, 8, -1.0, 1.0).unwrap()
+    }
+
+    #[test]
+    fn hemi_is_half_plus_one() {
+        let s = spec(5, 3);
+        let lut = ShLut::build(&s, 8);
+        assert_eq!(lut.full_rows(), 32);
+        assert_eq!(lut.hemi.len(), 17); // 2^(LD-1) + 1
+    }
+
+    #[test]
+    fn mirror_reconstruction_matches_direct_evaluation() {
+        for (g, k) in [(5u32, 3u32), (8, 3), (16, 2), (32, 3), (64, 1), (7, 4)] {
+            let s = spec(g, k);
+            let lut = ShLut::build(&s, 8);
+            let lvl = lut.full_rows() as u32;
+            let scale = 255.0_f64;
+            for l in 0..lvl {
+                let u = l as f64 / lvl as f64;
+                let direct = crate::kan::spline::active_basis(u, k as usize);
+                for t in 0..=k {
+                    let want = (direct[t as usize] * scale).round() as u32;
+                    assert_eq!(
+                        lut.lookup(l, t),
+                        want,
+                        "g={g} k={k} l={l} t={t}: mirror broke"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_of_unity_in_fixed_point() {
+        // sum of a row's codes must be ~= 255 (quantized partition of unity)
+        let s = spec(5, 3);
+        let lut = ShLut::build(&s, 8);
+        for l in 0..lut.full_rows() as u32 {
+            let sum: u32 = lut.row(l).iter().sum();
+            assert!((253..=257).contains(&sum), "row {l} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn stored_is_about_half_of_full() {
+        let s = spec(8, 3);
+        let lut = ShLut::build(&s, 8);
+        let full_entries = lut.full_rows() * (lut.k as usize + 1);
+        assert!(lut.stored_entries() <= full_entries / 2 + (lut.k as usize + 1));
+    }
+}

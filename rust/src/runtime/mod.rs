@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT-lowered HLO text artifacts and execute them.
+//!
+//! The interchange format is HLO *text* (not serialized `HloModuleProto`):
+//! jax >= 0.5 emits protos with 64-bit instruction ids which the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly. The python side lowers with `return_tuple=True`,
+//! so outputs are unwrapped with `to_tuple1`.
+
+pub mod engine;
+
+pub use engine::{PjrtEngine, PjrtExecutable};

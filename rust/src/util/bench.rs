@@ -1,0 +1,122 @@
+//! Tiny benchmark harness (no criterion in the offline image).
+//!
+//! Warmup + timed iterations with median/mean/p95 reporting, plus a
+//! `black_box` to defeat the optimizer. Used by every target in
+//! `rust/benches/` (all declared `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding the benchmarked computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Time `f` adaptively: warm up, pick an iteration count targeting
+/// ~`target_ms` of total runtime, then report per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = ((target_ms as f64 * 1e6) / once.as_nanos() as f64)
+        .clamp(5.0, 1e6) as usize;
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let sum: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: sum / iters as u32,
+        median: samples[iters / 2],
+        p95: samples[((iters as f64 * 0.95) as usize).min(iters - 1)],
+        min: samples[0],
+    }
+}
+
+/// Pretty-print one result row.
+pub fn report(r: &BenchResult) {
+    println!(
+        "  {:<44} {:>12} {:>12} {:>12}  ({} iters)",
+        r.name,
+        fmt_dur(r.median),
+        fmt_dur(r.mean),
+        fmt_dur(r.p95),
+        r.iters
+    );
+}
+
+/// Print the table header matching [`report`].
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "  {:<44} {:>12} {:>12} {:>12}",
+        "case", "median", "mean", "p95"
+    );
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_plausible_stats() {
+        let r = bench("noop-ish", 5, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.median);
+        assert!(r.median <= r.p95);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50 ms");
+        assert!(fmt_dur(Duration::from_nanos(2_500)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+
+    #[test]
+    fn slow_bodies_get_few_iterations() {
+        let r = bench("slow", 1, || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.iters <= 10, "{} iters", r.iters);
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained utility substrate for the fully-offline build: JSON
+//! parsing/writing, a deterministic PRNG, and a benchmark harness. The
+//! build image vendors only the `xla` crate's dependency closure (plus
+//! `anyhow`/`thiserror`), so serde_json / rand / criterion equivalents are
+//! implemented here (DESIGN.md §4).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Value;
+pub use rng::Rng;

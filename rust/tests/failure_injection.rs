@@ -1,0 +1,157 @@
+//! Failure-injection tests: malformed artifacts and wire inputs must
+//! produce actionable errors, never panics or silent zeros.
+
+use std::io::Write;
+
+use kan_edge::kan::checkpoint::{Dataset, KanCheckpoint, Manifest, MlpCheckpoint};
+use kan_edge::runtime::PjrtEngine;
+use kan_edge::util::json::Value;
+
+fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("kan_edge_failures");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::File::create(&path)
+        .unwrap()
+        .write_all(text.as_bytes())
+        .unwrap();
+    path
+}
+
+#[test]
+fn truncated_json_checkpoint() {
+    let path = write_tmp("trunc.json", r#"{"name": "x", "kind": "kan", "dims": [1"#);
+    let err = KanCheckpoint::load(&path).map(|_| ()).unwrap_err().to_string();
+    assert!(err.contains("trunc.json"), "{err}");
+}
+
+#[test]
+fn wrong_kind_checkpoint() {
+    let path = write_tmp(
+        "kind.json",
+        r#"{"name":"x","kind":"mlp","dims":[2,1],"g":1,"k":1,"n_bits":8,
+            "num_params":1,"layers":[]}"#,
+    );
+    let err = KanCheckpoint::load(&path).map(|_| ()).unwrap_err().to_string();
+    assert!(err.contains("kind"), "{err}");
+}
+
+#[test]
+fn missing_field_names_the_field() {
+    let path = write_tmp("nofield.json", r#"{"name": "x", "kind": "kan"}"#);
+    let err = KanCheckpoint::load(&path).map(|_| ()).unwrap_err().to_string();
+    assert!(err.contains("dims"), "{err}");
+}
+
+#[test]
+fn mlp_shape_mismatch_detected() {
+    let path = write_tmp(
+        "mlpbad.json",
+        r#"{"name":"m","kind":"mlp","dims":[2,2],"num_params":6,
+            "layers":[{"din":2,"dout":2,"w":[1.0,2.0,3.0],"b":[0.0,0.0]}]}"#,
+    );
+    let err = MlpCheckpoint::load(&path).map(|_| ()).unwrap_err().to_string();
+    assert!(err.contains("shape") || err.contains("layer"), "{err}");
+}
+
+#[test]
+fn dataset_inconsistent_lengths() {
+    let dir = std::env::temp_dir().join("kan_edge_failures_ds");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("dataset.json"),
+        r#"{"test_x":[1.0,2.0,3.0],"test_y":[0],"calib_x":[],"calib_y":[],
+            "num_features":2,"num_classes":3}"#,
+    )
+    .unwrap();
+    let err = Dataset::load(&dir).map(|_| ()).unwrap_err().to_string();
+    assert!(err.contains("inconsistent"), "{err}");
+}
+
+#[test]
+fn manifest_missing_dir() {
+    let err = Manifest::load("/no/such/dir").map(|_| ()).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn corrupt_hlo_text_fails_to_compile() {
+    let path = write_tmp("bad.hlo.txt", "HloModule garbage\n\nthis is not hlo\n");
+    let engine = PjrtEngine::cpu().unwrap();
+    assert!(engine.load_hlo(&path, 1, 17, 14).is_err());
+}
+
+#[test]
+fn pjrt_run_rejects_wrong_input_len() {
+    // use a real artifact if available
+    let dir = "../artifacts";
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = PjrtEngine::cpu().unwrap();
+    let exe = engine
+        .load_hlo(format!("{dir}/kan1.b1.hlo.txt"), 1, 17, 14)
+        .unwrap();
+    let err = exe.run(&vec![0.0; 16]).map(|_| ()).unwrap_err().to_string();
+    assert!(err.contains("17"), "{err}");
+}
+
+#[test]
+fn pjrt_padding_of_short_batches_is_correct() {
+    // PjrtBackend pads chunks to the compiled batch; padded rows must not
+    // leak into live outputs
+    let dir = "../artifacts";
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use kan_edge::coordinator::PjrtBackend;
+    use kan_edge::coordinator::InferBackend;
+    let be = PjrtBackend::spawn(
+        format!("{dir}/kan1.b32.hlo.txt").into(),
+        32,
+        17,
+        14,
+        "kan1".into(),
+    )
+    .unwrap();
+    let row: Vec<f32> = (0..17).map(|i| (i as f32) * 0.05 - 0.4).collect();
+    // 1-row batch (31 padded) vs the same row inside a 3-row batch
+    let a = be.infer_batch(&[row.clone()]).unwrap();
+    let b = be
+        .infer_batch(&[vec![0.3; 17], row.clone(), vec![-0.2; 17]])
+        .unwrap();
+    for (x, y) in a[0].iter().zip(&b[1]) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn json_parser_rejects_pathological_inputs() {
+    for bad in [
+        "",
+        "{",
+        "}",
+        "[1,",
+        "\"unterminated",
+        "nul",
+        "+5",
+        "01x",
+        "{\"a\" 1}",
+        "[1 2]",
+        "\"\\u12\"",
+        "\"\\ud800\"", // unpaired surrogate
+    ] {
+        assert!(Value::parse(bad).is_err(), "accepted: {bad:?}");
+    }
+}
+
+#[test]
+fn deep_json_nesting_does_not_overflow() {
+    // 1000 nested arrays: recursive parser must handle it (or error),
+    // never crash the process with a stack overflow at sane depths
+    let text = format!("{}1{}", "[".repeat(1000), "]".repeat(1000));
+    let v = Value::parse(&text);
+    assert!(v.is_ok());
+}

@@ -1,0 +1,216 @@
+//! Property-based tests over coordinator and substrate invariants.
+//!
+//! The offline image carries no proptest; these use the crate's own seeded
+//! PRNG to sweep randomized cases — same spirit (many random inputs, one
+//! invariant per test), fully deterministic.
+
+use kan_edge::acim::{mac_with_irdrop, ArrayConfig, Crossbar};
+use kan_edge::kan::spline;
+use kan_edge::mapping::{build_mapping, is_permutation, MappingStrategy};
+use kan_edge::quant::{solve_ld, AspSpec, ShLut};
+use kan_edge::util::json::Value;
+use kan_edge::util::Rng;
+
+const CASES: usize = 200;
+
+#[test]
+fn prop_quantize_grid_alignment() {
+    // for any (g, k, n, range): knot boundaries align with code boundaries
+    let mut rng = Rng::new(11);
+    for _ in 0..CASES {
+        let n = [6u32, 8, 10][(rng.next_u64() % 3) as usize];
+        let g = rng.int_range(1, (1 << n) as i64) as u32;
+        let k = rng.int_range(1, 4) as u32;
+        let lo = rng.range(-5.0, 2.0);
+        let hi = lo + rng.range(0.1, 8.0);
+        let spec = AspSpec::build(g, k, n, lo, hi).unwrap();
+        for j in 0..g.min(20) {
+            let knot = lo + j as f64 * spec.knot_spacing();
+            let q = spec.quantize(knot);
+            assert_eq!(q >> spec.ld, j, "g={g} n={n} j={j}");
+            assert_eq!(q & (spec.levels_per_interval() - 1), 0);
+        }
+    }
+}
+
+#[test]
+fn prop_decompose_roundtrip() {
+    let mut rng = Rng::new(12);
+    for _ in 0..CASES {
+        let n = 8u32;
+        let g = rng.int_range(1, 256) as u32;
+        let spec = AspSpec::build(g, 3, n, 0.0, 1.0).unwrap();
+        let q = rng.int_range(0, (spec.range() - 1) as i64) as u32;
+        let (j, l) = spec.decompose(q);
+        assert_eq!(j * spec.levels_per_interval() + l, q);
+        assert!(j < spec.g);
+    }
+}
+
+#[test]
+fn prop_sh_lut_mirror_equals_direct() {
+    let mut rng = Rng::new(13);
+    for _ in 0..60 {
+        let g = rng.int_range(2, 64) as u32;
+        let k = rng.int_range(1, 4) as u32;
+        let spec = AspSpec::build(g, k, 8, -1.0, 1.0).unwrap();
+        let lut = ShLut::build(&spec, 8);
+        let lvl = lut.full_rows() as u32;
+        let l = rng.int_range(0, (lvl - 1) as i64) as u32;
+        let t = rng.int_range(0, k as i64) as u32;
+        let direct = spline::active_basis(l as f64 / lvl as f64, k as usize)
+            [t as usize];
+        let want = (direct * 255.0).round() as u32;
+        assert_eq!(lut.lookup(l, t), want, "g={g} k={k} l={l} t={t}");
+    }
+}
+
+#[test]
+fn prop_partition_of_unity_quantized() {
+    // quantized LUT rows sum to 255 +- rounding for any geometry
+    let mut rng = Rng::new(14);
+    for _ in 0..60 {
+        let g = rng.int_range(1, 200) as u32;
+        let k = rng.int_range(1, 4) as u32;
+        let spec = AspSpec::build(g, k, 8, 0.0, 1.0).unwrap();
+        let lut = ShLut::build(&spec, 8);
+        for l in 0..lut.full_rows() as u32 {
+            let sum: u32 = lut.row(l).iter().sum();
+            assert!(
+                (255i64 - sum as i64).abs() <= 1 + k as i64,
+                "g={g} k={k} l={l}: sum {sum}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_solve_ld_maximality() {
+    let mut rng = Rng::new(15);
+    for _ in 0..CASES {
+        let n = rng.int_range(4, 12) as u32;
+        let g = rng.int_range(1, (1 << n) as i64) as u32;
+        let ld = solve_ld(g, n).unwrap();
+        assert!((g as u64) << ld <= 1u64 << n);
+        assert!((g as u64) << (ld + 1) > 1u64 << n);
+    }
+}
+
+#[test]
+fn prop_sam_mapping_is_permutation() {
+    let mut rng = Rng::new(16);
+    for _ in 0..CASES {
+        let rows = rng.int_range(1, 400) as usize;
+        let tile = rng.int_range(1, 300) as usize;
+        let probs: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+        for strat in [
+            MappingStrategy::Uniform,
+            MappingStrategy::Sam,
+            MappingStrategy::WorstCase,
+        ] {
+            let m = build_mapping(&probs, tile, strat);
+            assert!(is_permutation(&m), "{strat:?} rows={rows} tile={tile}");
+        }
+    }
+}
+
+#[test]
+fn prop_sam_clamp_slot_gets_max_probability() {
+    let mut rng = Rng::new(17);
+    for _ in 0..CASES {
+        let rows = rng.int_range(2, 200) as usize;
+        let probs: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+        let m = build_mapping(&probs, rows, MappingStrategy::Sam); // one tile
+        let max = probs.iter().cloned().fold(f64::MIN, f64::max);
+        assert_eq!(probs[m[0]], max);
+    }
+}
+
+#[test]
+fn prop_irdrop_bounded_by_ideal() {
+    // for any programming and drive pattern: 0 <= |I_drop| <= |I_ideal|
+    // column-wise when all weights share a sign
+    let mut rng = Rng::new(18);
+    for _ in 0..40 {
+        let rows = rng.int_range(4, 256) as usize;
+        let cfg = ArrayConfig {
+            r_wire_ohm: rng.range(0.1, 5.0),
+            ..ArrayConfig::with_rows(rows)
+        };
+        let w: Vec<i32> = (0..rows).map(|_| rng.int_range(0, 127) as i32).collect();
+        let xb = Crossbar::program(cfg, &w, rows, 1, 127.0).unwrap();
+        let drives: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+        let ideal = xb.mac_ideal(&drives)[0];
+        let real = mac_with_irdrop(&xb, &drives)[0];
+        assert!(real >= -1e-9, "negative positive-column current");
+        assert!(real <= ideal + 1e-9, "IR-drop increased current");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    // random JSON trees survive write -> parse
+    let mut rng = Rng::new(19);
+    for _ in 0..CASES {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Value::parse(&text).unwrap_or_else(|e| {
+            panic!("reparse failed: {e}\ntext: {text}");
+        });
+        assert_eq!(v, back, "roundtrip mismatch for {text}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Value {
+    match rng.int_range(0, if depth == 0 { 2 } else { 4 }) {
+        0 => Value::Int(rng.int_range(-1_000_000, 1_000_000)),
+        1 => Value::Float((rng.range(-1e6, 1e6) * 1e3).round() / 1e3),
+        2 => {
+            let n = rng.int_range(0, 8) as usize;
+            Value::Str(
+                (0..n)
+                    .map(|_| {
+                        ['a', 'é', '"', '\\', '\n', 'z', '😀']
+                            [(rng.next_u64() % 7) as usize]
+                    })
+                    .collect(),
+            )
+        }
+        3 => Value::Array(
+            (0..rng.int_range(0, 5))
+                .map(|_| random_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => {
+            let mut map = std::collections::BTreeMap::new();
+            for i in 0..rng.int_range(0, 5) {
+                map.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Value::Object(map)
+        }
+    }
+}
+
+#[test]
+fn prop_spline_partition_of_unity_everywhere() {
+    let mut rng = Rng::new(20);
+    for _ in 0..CASES {
+        let g = rng.int_range(1, 64) as usize;
+        let k = rng.int_range(0, 4) as usize;
+        let z = rng.range(0.0, g as f64 - 1e-9);
+        let sum: f64 = spline::basis_functions(z, g, k).iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "g={g} k={k} z={z}: {sum}");
+    }
+}
+
+#[test]
+fn prop_spline_nonnegative_and_bounded() {
+    let mut rng = Rng::new(21);
+    for _ in 0..CASES {
+        let k = rng.int_range(0, 5) as usize;
+        let s = rng.range(-1.0, k as f64 + 2.0);
+        let v = spline::cardinal_bspline(s, k);
+        assert!(v >= 0.0);
+        assert!(v <= 1.0 + 1e-12);
+    }
+}
