@@ -11,6 +11,8 @@
 //! cargo run --release --example edge_serving [artifacts-dir] [num-requests]
 //! ```
 
+#![allow(clippy::field_reassign_with_default)]
+
 use std::sync::Arc;
 use std::time::Duration;
 

@@ -1,0 +1,113 @@
+//! Multi-model serving walkthrough: publish two KAN variants into a
+//! fresh registry, serve them through one TCP endpoint, route requests
+//! per model, then hot-publish a new version and watch traffic switch —
+//! all offline (synthetic checkpoints, digital backend).
+//!
+//! ```sh
+//! cargo run --release --example multi_model
+//! ```
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+use kan_edge::config::AppConfig;
+use kan_edge::coordinator::{Dispatch, TcpServer};
+use kan_edge::registry::{ModelManifest, ModelRegistry};
+use kan_edge::util::json::Value;
+
+/// Tiny valid KAN checkpoint (dims [2,2]); `favor_class` decides which
+/// logit the residual path boosts.
+fn kan_variant_json(name: &str, favor_class: usize) -> String {
+    let wb = if favor_class == 0 {
+        "[1.0, 0.0, 1.0, 0.0]"
+    } else {
+        "[0.0, 1.0, 0.0, 1.0]"
+    };
+    format!(
+        r#"{{"name":"{name}","kind":"kan","dims":[2,2],"g":1,"k":1,"n_bits":8,
+            "num_params":8,"quant_test_acc":0.9,
+            "layers":[{{"din":2,"dout":2,"lo":-1.0,"hi":1.0,"ld":2,
+              "sh_lut":[[255,0],[170,85],[128,128]],
+              "coeff_q":[0,0,0,0,0,0,0,0],"coeff_scale":0.01,
+              "wb":{wb}}}]}}"#
+    )
+}
+
+fn ask(addr: std::net::SocketAddr, body: &str) -> Value {
+    let conn = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut conn = conn;
+    conn.write_all(body.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Value::parse(&line).unwrap()
+}
+
+fn main() -> kan_edge::Result<()> {
+    let dir = std::env::temp_dir().join("kan_edge_multi_model_demo");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    // 1. bootstrap a fresh registry and publish two variants
+    ModelManifest::empty().save(&dir)?;
+    let mut cfg = AppConfig::default();
+    cfg.artifacts.dir = dir.to_string_lossy().into_owned();
+    cfg.artifacts.model = "alpha".into();
+    cfg.server.backend = "digital".into();
+    let registry = ModelRegistry::open(&cfg)?;
+
+    for (name, favor) in [("alpha", 0), ("beta", 1)] {
+        let src = dir.join(format!("{name}.incoming.json"));
+        std::fs::write(&src, kan_variant_json(name, favor))?;
+        let (published, meta) = registry.publish_file(&src, None, None)?;
+        println!(
+            "published {published}@{} (digest {})",
+            meta.version,
+            meta.digest.as_deref().unwrap_or("?")
+        );
+    }
+
+    // 2. one TCP endpoint serves both; requests pick a variant
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target)?;
+    println!("serving on {}", server.addr);
+    for body in [
+        r#"{"features": [0.5, 0.5]}"#,
+        r#"{"model": "alpha", "features": [0.5, 0.5]}"#,
+        r#"{"model": "beta",  "features": [0.5, 0.5]}"#,
+    ] {
+        let v = ask(server.addr, body);
+        println!(
+            "  {body} -> class {} from {}",
+            v.get("class").unwrap().as_i64().unwrap(),
+            v.get("model").unwrap().as_str().unwrap()
+        );
+    }
+
+    // 3. hot-publish alpha v2 with flipped weights: traffic switches,
+    //    no restart, no dropped requests
+    let src = dir.join("alpha.incoming.json");
+    std::fs::write(&src, kan_variant_json("alpha", 1))?;
+    let (_, meta) = registry.publish_file(&src, None, None)?;
+    println!("hot-published alpha@{}", meta.version);
+    let v = ask(server.addr, r#"{"model": "alpha", "features": [0.5, 0.5]}"#);
+    println!(
+        "  alpha now answers class {} from {}",
+        v.get("class").unwrap().as_i64().unwrap(),
+        v.get("model").unwrap().as_str().unwrap()
+    );
+
+    // 4. per-model metrics with an aggregate rollup
+    println!("\nper-model metrics:");
+    for (id, r) in registry.metrics() {
+        println!("  {id:<10} requests={} p50={}us", r.requests, r.latency_p50_us);
+    }
+    let agg = registry.aggregate_metrics();
+    println!("  {:<10} requests={}", "TOTAL", agg.requests);
+
+    server.shutdown();
+    Ok(())
+}

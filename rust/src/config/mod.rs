@@ -19,6 +19,7 @@ use crate::util::json::Value;
 pub struct AppConfig {
     pub artifacts: ArtifactsConfig,
     pub server: ServerConfig,
+    pub registry: RegistryConfig,
     pub hardware: HardwareConfig,
     pub neurosim: NeurosimConfig,
 }
@@ -58,7 +59,33 @@ impl Default for ServerConfig {
             batch_deadline_us: 500,
             queue_depth: 1024,
             workers: 2,
-            backend: "pjrt".into(),
+            // without the pjrt feature the AOT path is a stub, so the
+            // rust integer reference is the sensible default
+            backend: if cfg!(feature = "pjrt") { "pjrt" } else { "digital" }.into(),
+        }
+    }
+}
+
+/// `[registry]` — multi-model serving knobs (see [`crate::registry`]).
+#[derive(Debug, Clone)]
+pub struct RegistryConfig {
+    /// Max live (loaded) model backends before LRU eviction kicks in.
+    pub max_loaded: usize,
+    /// Hot-reload poll interval in milliseconds; 0 disables polling.
+    pub reload_poll_ms: u64,
+    /// Models to load eagerly at `serve` start (default model when empty).
+    pub preload: Vec<String>,
+    /// Content-addressed store directory, relative to the artifacts dir.
+    pub store_dir: String,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        Self {
+            max_loaded: 4,
+            reload_poll_ms: 0,
+            preload: Vec::new(),
+            store_dir: ".store".into(),
         }
     }
 }
@@ -150,6 +177,18 @@ impl AppConfig {
             get_usize(s, "workers", &mut self.server.workers);
             get_string(s, "backend", &mut self.server.backend);
         }
+        if let Some(r) = v.get("registry") {
+            get_usize(r, "max_loaded", &mut self.registry.max_loaded);
+            get_u64(r, "reload_poll_ms", &mut self.registry.reload_poll_ms);
+            get_string(r, "store_dir", &mut self.registry.store_dir);
+            if let Some(p) = r.get("preload").and_then(|x| x.as_array()) {
+                self.registry.preload = p
+                    .iter()
+                    .filter_map(|m| m.as_str())
+                    .map(|m| m.to_string())
+                    .collect();
+            }
+        }
         if let Some(h) = v.get("hardware") {
             if let Some(t) = h.get("tech") {
                 let tech = &mut self.hardware.tech;
@@ -220,6 +259,12 @@ impl AppConfig {
                 self.server.backend
             )));
         }
+        if self.registry.max_loaded == 0 {
+            return Err(Error::Config("registry.max_loaded must be > 0".into()));
+        }
+        if self.registry.store_dir.is_empty() {
+            return Err(Error::Config("registry.store_dir must be non-empty".into()));
+        }
         self.hardware.acim.array.validate()?;
         Ok(())
     }
@@ -266,11 +311,33 @@ mod tests {
     }
 
     #[test]
+    fn registry_section_parses() {
+        let mut cfg = AppConfig::default();
+        cfg.apply(
+            &Value::parse(
+                r#"{"registry": {"max_loaded": 2, "reload_poll_ms": 250,
+                    "preload": ["kan1", "kan2"], "store_dir": "objects-cache"}}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(cfg.registry.max_loaded, 2);
+        assert_eq!(cfg.registry.reload_poll_ms, 250);
+        assert_eq!(cfg.registry.preload, vec!["kan1", "kan2"]);
+        assert_eq!(cfg.registry.store_dir, "objects-cache");
+        cfg.validate().unwrap();
+
+        cfg.registry.max_loaded = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
     fn neurosim_constraints_parse() {
         let mut cfg = AppConfig::default();
         cfg.apply(
-            &Value::parse(r#"{"neurosim": {"constraints": {"max_area_mm2": 0.05}, "tm_modes": [3]}}"#)
-                .unwrap(),
+            &Value::parse(
+                r#"{"neurosim": {"constraints": {"max_area_mm2": 0.05}, "tm_modes": [3]}}"#,
+            )
+            .unwrap(),
         );
         assert_eq!(cfg.neurosim.constraints.max_area_mm2, Some(0.05));
         assert_eq!(cfg.neurosim.tm_modes, vec![3]);

@@ -2,8 +2,16 @@
 //!
 //! Lock-free on the hot path is unnecessary at edge request rates; a
 //! mutexed reservoir keeps the code simple and the report exact.
+//!
+//! With multi-model serving each model's [`crate::coordinator::server::InferenceService`]
+//! owns one [`Metrics`]; a [`MetricsHub`] keys them by model id
+//! (`name@version`) and computes an exact aggregate rollup by merging the
+//! raw reservoirs (percentiles of merged samples, not averages of
+//! percentiles). Retired model versions keep their metrics in the hub so
+//! the rollup stays complete across hot-reloads.
 
-use std::sync::Mutex;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Aggregated serving metrics.
@@ -12,7 +20,7 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 struct Inner {
     latencies_us: Vec<u64>,
     queue_waits_us: Vec<u64>,
@@ -22,6 +30,55 @@ struct Inner {
     errors: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
+}
+
+impl Inner {
+    fn merge(&mut self, other: &Inner) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.queue_waits_us.extend_from_slice(&other.queue_waits_us);
+        self.batch_sizes.extend_from_slice(&other.batch_sizes);
+        self.requests += other.requests;
+        self.rejected += other.rejected;
+        self.errors += other.errors;
+        self.started = match (self.started, other.started) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.finished = match (self.finished, other.finished) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
+    fn report(&self) -> MetricsReport {
+        let mut lat = self.latencies_us.clone();
+        lat.sort_unstable();
+        let mut qw = self.queue_waits_us.clone();
+        qw.sort_unstable();
+        let wall = match (self.started, self.finished) {
+            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        MetricsReport {
+            requests: self.requests,
+            rejected: self.rejected,
+            errors: self.errors,
+            throughput_rps: if wall > 0.0 {
+                self.requests as f64 / wall
+            } else {
+                0.0
+            },
+            latency_p50_us: percentile(&lat, 0.50),
+            latency_p99_us: percentile(&lat, 0.99),
+            queue_wait_p50_us: percentile(&qw, 0.50),
+            mean_batch: if self.batch_sizes.is_empty() {
+                0.0
+            } else {
+                self.batch_sizes.iter().sum::<usize>() as f64
+                    / self.batch_sizes.len() as f64
+            },
+        }
+    }
 }
 
 /// A point-in-time metrics report.
@@ -65,29 +122,60 @@ impl Metrics {
     }
 
     pub fn report(&self) -> MetricsReport {
-        let g = self.inner.lock().unwrap();
-        let mut lat = g.latencies_us.clone();
-        lat.sort_unstable();
-        let mut qw = g.queue_waits_us.clone();
-        qw.sort_unstable();
-        let wall = match (g.started, g.finished) {
-            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
-            _ => 0.0,
-        };
-        MetricsReport {
-            requests: g.requests,
-            rejected: g.rejected,
-            errors: g.errors,
-            throughput_rps: if wall > 0.0 { g.requests as f64 / wall } else { 0.0 },
-            latency_p50_us: percentile(&lat, 0.50),
-            latency_p99_us: percentile(&lat, 0.99),
-            queue_wait_p50_us: percentile(&qw, 0.50),
-            mean_batch: if g.batch_sizes.is_empty() {
-                0.0
-            } else {
-                g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
-            },
+        self.inner.lock().unwrap().report()
+    }
+
+    fn snapshot(&self) -> Inner {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+/// Per-model metrics registry with an exact aggregate rollup.
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    models: Mutex<BTreeMap<String, Arc<Metrics>>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The [`Metrics`] for model `id`, created on first use. Ids persist
+    /// for the hub's lifetime so retired versions still roll up.
+    pub fn for_model(&self, id: &str) -> Arc<Metrics> {
+        self.models
+            .lock()
+            .unwrap()
+            .entry(id.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Per-model reports, sorted by model id.
+    pub fn reports(&self) -> Vec<(String, MetricsReport)> {
+        self.models
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, m)| (id.clone(), m.report()))
+            .collect()
+    }
+
+    /// Exact rollup across every model ever served by this hub.
+    pub fn aggregate(&self) -> MetricsReport {
+        let snapshots: Vec<Inner> = self
+            .models
+            .lock()
+            .unwrap()
+            .values()
+            .map(|m| m.snapshot())
+            .collect();
+        let mut acc = Inner::default();
+        for s in &snapshots {
+            acc.merge(s);
         }
+        acc.report()
     }
 }
 
@@ -129,5 +217,38 @@ mod tests {
         assert_eq!(r.mean_batch, 5.0);
         assert!(r.latency_p50_us >= 100);
         assert!(r.latency_p99_us >= r.latency_p50_us);
+    }
+
+    #[test]
+    fn hub_rolls_up_across_models() {
+        let hub = MetricsHub::new();
+        let a = hub.for_model("kan1@1");
+        let b = hub.for_model("kan2@1");
+        for _ in 0..3 {
+            a.record_request(Duration::from_micros(100), Duration::from_micros(1));
+        }
+        b.record_request(Duration::from_micros(900), Duration::from_micros(1));
+        b.record_error();
+
+        let reports = hub.reports();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].0, "kan1@1");
+        assert_eq!(reports[0].1.requests, 3);
+        assert_eq!(reports[1].1.errors, 1);
+
+        let agg = hub.aggregate();
+        assert_eq!(agg.requests, 4);
+        assert_eq!(agg.errors, 1);
+        // merged reservoir: p50 of [100,100,100,900] is 100, not 500
+        assert_eq!(agg.latency_p50_us, 100);
+    }
+
+    #[test]
+    fn hub_returns_same_instance_per_id() {
+        let hub = MetricsHub::new();
+        let a1 = hub.for_model("m@1");
+        let a2 = hub.for_model("m@1");
+        a1.record_rejection();
+        assert_eq!(a2.report().rejected, 1);
     }
 }

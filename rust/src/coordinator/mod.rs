@@ -5,6 +5,12 @@
 //! integer reference, ACIM analog simulator, or MLP baseline), with
 //! [`metrics`] throughout and [`router`] turning config + artifacts into a
 //! running [`server::InferenceService`].
+//!
+//! Multi-model serving layers on top: [`crate::registry::ModelRegistry`]
+//! owns one such pipeline per live `name@version` variant and implements
+//! [`server::Dispatch`], which the [`tcp`] endpoint routes to via the
+//! request's optional `"model"` field. Metrics are per model
+//! ([`metrics::MetricsHub`]) with an exact aggregate rollup.
 
 pub mod backend;
 pub mod batcher;
@@ -15,7 +21,7 @@ pub mod tcp;
 
 pub use backend::{AcimBackend, DigitalBackend, InferBackend, MlpBackend, PjrtBackend};
 pub use batcher::{Batch, BatchPolicy, Request};
-pub use metrics::{Metrics, MetricsReport};
-pub use router::{build_acim, build_acim_with_calib, build_backend};
-pub use server::{InferenceService, ServeOptions};
+pub use metrics::{Metrics, MetricsHub, MetricsReport};
+pub use router::{build_acim, build_acim_with_calib, build_backend, serve_options};
+pub use server::{Dispatch, InferenceService, ServeOptions};
 pub use tcp::TcpServer;

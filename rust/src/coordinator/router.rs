@@ -1,10 +1,17 @@
 //! Backend construction + routing: turn config + artifacts into a running
-//! [`InferenceService`].
+//! [`InferenceService`](super::server::InferenceService).
+//!
+//! Single-model serving calls [`build_backend`] directly; multi-model
+//! serving goes through [`crate::registry::ModelRegistry`], which calls
+//! back into [`build_backend`] per variant and gives each one its own
+//! dynamic batcher + worker pool.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use super::backend::{AcimBackend, DigitalBackend, InferBackend, MlpBackend, PjrtBackend};
+use super::batcher::BatchPolicy;
+use super::server::ServeOptions;
 use crate::acim::{AcimModel, AcimOptions};
 use crate::baseline::MlpModel;
 use crate::config::AppConfig;
@@ -12,6 +19,18 @@ use crate::error::{Error, Result};
 use crate::kan::checkpoint::{Dataset, Manifest};
 use crate::kan::QuantKanModel;
 use crate::mapping::{self, MappingStrategy};
+
+/// Translate the file-side server config into runtime [`ServeOptions`].
+pub fn serve_options(cfg: &AppConfig) -> ServeOptions {
+    ServeOptions {
+        policy: BatchPolicy {
+            max_batch: cfg.server.max_batch,
+            deadline: std::time::Duration::from_micros(cfg.server.batch_deadline_us),
+        },
+        queue_depth: cfg.server.queue_depth,
+        workers: cfg.server.workers,
+    }
+}
 
 /// Build the backend named by `cfg.server.backend` for `model`.
 pub fn build_backend(

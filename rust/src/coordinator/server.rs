@@ -37,7 +37,18 @@ pub struct InferenceService {
 impl InferenceService {
     /// Spin up the batcher + worker pool over `backend`.
     pub fn start(backend: Arc<dyn InferBackend>, opts: ServeOptions) -> Self {
-        let metrics = Arc::new(Metrics::new());
+        Self::start_with_metrics(backend, opts, Arc::new(Metrics::new()))
+    }
+
+    /// Like [`InferenceService::start`] but recording into an externally
+    /// owned [`Metrics`] — the model registry passes per-model metrics
+    /// from its [`super::metrics::MetricsHub`] so reports survive
+    /// hot-reload swaps.
+    pub fn start_with_metrics(
+        backend: Arc<dyn InferBackend>,
+        opts: ServeOptions,
+        metrics: Arc<Metrics>,
+    ) -> Self {
         let (req_tx, req_rx) = sync_channel::<Request>(opts.queue_depth);
         let (batch_tx, batch_rx) = sync_channel::<Batch>(opts.workers.max(1) * 2);
         std::thread::Builder::new()
@@ -69,6 +80,30 @@ impl InferenceService {
         }
         rx.recv()
             .map_err(|_| Error::Serving("service shut down".into()))?
+    }
+}
+
+/// Request routing surface the TCP layer serves: either a single
+/// [`InferenceService`] or a multi-model
+/// [`crate::registry::ModelRegistry`].
+///
+/// `dispatch` resolves the optional model spec (`None` = default model,
+/// `Some("name")` / `Some("name@version")` otherwise), runs inference,
+/// and returns the resolved model id alongside the logits so clients can
+/// observe which version served them (hot-reload visibility).
+pub trait Dispatch: Send + Sync {
+    fn dispatch(&self, model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)>;
+}
+
+impl Dispatch for InferenceService {
+    fn dispatch(&self, model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+        match model {
+            Some(m) => Err(Error::Serving(format!(
+                "this endpoint serves a single model; cannot route to '{m}' \
+                 (serve with a registry for multi-model routing)"
+            ))),
+            None => Ok(("default".to_string(), self.infer(features)?)),
+        }
     }
 }
 

@@ -1,66 +1,94 @@
 //! TCP wire protocol: JSON lines over a plain socket.
 //!
 //! Request:  `{"features": [f32; din]}\n`
-//! Response: `{"logits": [...], "class": k}\n` or `{"error": "..."}\n`
+//!           `{"model": "name"           , "features": [...]}\n`
+//!           `{"model": "name@version"   , "features": [...]}\n`
+//! Response: `{"logits": [...], "class": k, "model": "name@version"}\n`
+//!           or `{"error": "..."}\n`
+//!
+//! The optional `"model"` field routes to a variant by name (latest
+//! published version) or pinned `name@version`; omitting it hits the
+//! endpoint's default model. The response always echoes the resolved
+//! `name@version` id so clients observe hot-reload version switches.
 //!
 //! One thread per connection (edge request rates make this the simplest
-//! correct design); the shared [`InferenceService`] behind it batches
-//! across connections.
+//! correct design); the shared [`Dispatch`] target behind it batches
+//! across connections — per model, when serving a
+//! [`crate::registry::ModelRegistry`].
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use super::server::InferenceService;
+use super::server::Dispatch;
 use crate::error::Result;
 use crate::kan::model::argmax;
 use crate::util::json::{obj, Value};
 
-/// A running TCP server; dropping the handle does not stop it (process
-/// lifetime), but `shutdown` flips the accept loop off for tests.
+/// A running TCP server; `shutdown` stops the accept loop promptly and
+/// joins it (open connections finish on their own threads).
 pub struct TcpServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl TcpServer {
-    /// Bind `addr` (use port 0 for an ephemeral port) and serve `svc`.
-    pub fn spawn(addr: &str, svc: InferenceService) -> Result<TcpServer> {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve `target`.
+    pub fn spawn(addr: &str, target: Arc<dyn Dispatch>) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        std::thread::Builder::new()
+        let handle = std::thread::Builder::new()
             .name("kan-edge-tcp".into())
             .spawn(move || {
                 for stream in listener.incoming() {
+                    // checked on every wakeup: `shutdown` sets the flag and
+                    // then self-connects, so this observes it immediately
+                    // instead of waiting for the next real client
                     if stop2.load(Ordering::Relaxed) {
                         break;
                     }
                     match stream {
                         Ok(s) => {
-                            let svc = svc.clone();
-                            std::thread::spawn(move || handle_conn(s, svc));
+                            let target = target.clone();
+                            std::thread::spawn(move || handle_conn(s, target));
                         }
                         Err(e) => eprintln!("accept error: {e}"),
                     }
                 }
+                // listener drops here: the port is released by the time
+                // `shutdown` returns
             })
             .map_err(|e| crate::error::Error::Serving(format!("spawn tcp: {e}")))?;
-        Ok(TcpServer { addr: local, stop })
+        Ok(TcpServer { addr: local, stop, accept_thread: Mutex::new(Some(handle)) })
     }
 
-    /// Ask the accept loop to exit after the next connection attempt.
+    /// Stop accepting and wait for the accept loop to exit. The flag is
+    /// set *before* the wake-up self-connection so the loop cannot accept
+    /// a real client in between; without the self-connect the blocking
+    /// `incoming()` would only notice the flag on the next organic
+    /// connection, leaving tests (and process shutdown) hanging.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
-        // poke the listener so `incoming()` yields once more
-        let _ = TcpStream::connect(self.addr);
+        let woke = TcpStream::connect(self.addr).is_ok();
+        if woke {
+            // the loop is guaranteed to observe the flag now, so joining
+            // cannot hang
+            if let Some(handle) = self.accept_thread.lock().unwrap().take() {
+                let _ = handle.join();
+            }
+        }
+        // if the wake-up connect failed (e.g. an unroutable bind address),
+        // leave the thread to exit on the next organic connection instead
+        // of blocking the caller forever
     }
 }
 
 /// Serve one connection until EOF.
-pub fn handle_conn(stream: TcpStream, svc: InferenceService) {
+pub fn handle_conn(stream: TcpStream, target: Arc<dyn Dispatch>) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -74,7 +102,7 @@ pub fn handle_conn(stream: TcpStream, svc: InferenceService) {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = respond(&line, &svc);
+        let reply = respond(&line, target.as_ref());
         let mut text = reply.to_string();
         text.push('\n');
         if writer.write_all(text.as_bytes()).is_err() {
@@ -83,26 +111,39 @@ pub fn handle_conn(stream: TcpStream, svc: InferenceService) {
     }
 }
 
+fn error_reply(msg: impl Into<String>) -> Value {
+    obj(vec![("error", Value::Str(msg.into()))])
+}
+
 /// Pure request→response mapping (unit-testable without sockets).
-pub fn respond(line: &str, svc: &InferenceService) -> Value {
-    match Value::parse(line).ok().and_then(|v| v.f32_vec("features").ok()) {
-        Some(features) => match svc.infer(features) {
-            Ok(logits) => {
-                let pred =
-                    argmax(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>());
-                let items: Vec<Value> =
-                    logits.iter().map(|&v| Value::Float(v as f64)).collect();
-                obj(vec![
-                    ("logits", Value::Array(items)),
-                    ("class", Value::Int(pred as i64)),
-                ])
-            }
-            Err(e) => obj(vec![("error", Value::Str(e.to_string()))]),
-        },
-        None => obj(vec![(
-            "error",
-            Value::Str("bad request: expected {\"features\": [...]}".into()),
-        )]),
+pub fn respond(line: &str, target: &dyn Dispatch) -> Value {
+    let parsed = match Value::parse(line) {
+        Ok(v) => v,
+        Err(_) => return error_reply("bad request: not valid JSON"),
+    };
+    let features = match parsed.f32_vec("features") {
+        Ok(f) => f,
+        Err(_) => {
+            return error_reply("bad request: expected {\"features\": [...]}")
+        }
+    };
+    let model = match parsed.get("model") {
+        None => None,
+        Some(Value::Str(s)) => Some(s.as_str()),
+        Some(_) => return error_reply("bad request: 'model' must be a string"),
+    };
+    match target.dispatch(model, features) {
+        Ok((id, logits)) => {
+            let pred = argmax(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>());
+            let items: Vec<Value> =
+                logits.iter().map(|&v| Value::Float(v as f64)).collect();
+            obj(vec![
+                ("logits", Value::Array(items)),
+                ("class", Value::Int(pred as i64)),
+                ("model", Value::Str(id)),
+            ])
+        }
+        Err(e) => error_reply(e.to_string()),
     }
 }
 
@@ -110,8 +151,8 @@ pub fn respond(line: &str, svc: &InferenceService) -> Value {
 mod tests {
     use super::*;
     use crate::coordinator::backend::InferBackend;
-    use crate::coordinator::server::ServeOptions;
-    use crate::error::Result;
+    use crate::coordinator::server::{InferenceService, ServeOptions};
+    use crate::error::{Error, Result};
 
     struct Sum;
 
@@ -135,24 +176,74 @@ mod tests {
         }
     }
 
-    fn svc() -> InferenceService {
-        InferenceService::start(std::sync::Arc::new(Sum), ServeOptions::default())
+    fn svc() -> Arc<dyn Dispatch> {
+        Arc::new(InferenceService::start(
+            std::sync::Arc::new(Sum),
+            ServeOptions::default(),
+        ))
+    }
+
+    /// Two-model router used to exercise the `"model"` field without a
+    /// full registry.
+    struct TwoModels;
+
+    impl Dispatch for TwoModels {
+        fn dispatch(
+            &self,
+            model: Option<&str>,
+            features: Vec<f32>,
+        ) -> Result<(String, Vec<f32>)> {
+            let s: f32 = features.iter().sum();
+            match model.unwrap_or("pos") {
+                "pos" => Ok(("pos@1".into(), vec![s, -s])),
+                "neg" => Ok(("neg@2".into(), vec![-s, s])),
+                other => Err(Error::Registry(format!("model '{other}' not found"))),
+            }
+        }
     }
 
     #[test]
     fn respond_happy_path() {
-        let v = respond(r#"{"features": [1.0, 2.0]}"#, &svc());
+        let v = respond(r#"{"features": [1.0, 2.0]}"#, svc().as_ref());
         assert_eq!(v.get("class").unwrap().as_i64().unwrap(), 0); // 3 > -3
         let logits = v.get("logits").unwrap().as_array().unwrap();
         assert_eq!(logits[0].as_f64().unwrap(), 3.0);
+        assert_eq!(v.get("model").unwrap().as_str().unwrap(), "default");
     }
 
     #[test]
     fn respond_rejects_garbage() {
-        for bad in ["not json", "{}", r#"{"features": "x"}"#, r#"{"features": [1, "a"]}"#] {
-            let v = respond(bad, &svc());
+        let svc = svc();
+        for bad in [
+            "not json",
+            "{}",
+            r#"{"features": "x"}"#,
+            r#"{"features": [1, "a"]}"#,
+            r#"{"features": [1.0], "model": 7}"#,
+        ] {
+            let v = respond(bad, svc.as_ref());
             assert!(v.get("error").is_some(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn single_model_endpoint_rejects_model_field() {
+        let v = respond(r#"{"features": [1.0], "model": "other"}"#, svc().as_ref());
+        let err = v.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(err.contains("single model"), "{err}");
+    }
+
+    #[test]
+    fn model_field_routes_between_variants() {
+        let router = TwoModels;
+        let a = respond(r#"{"features": [2.0], "model": "pos"}"#, &router);
+        assert_eq!(a.get("class").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(a.get("model").unwrap().as_str().unwrap(), "pos@1");
+        let b = respond(r#"{"features": [2.0], "model": "neg"}"#, &router);
+        assert_eq!(b.get("class").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(b.get("model").unwrap().as_str().unwrap(), "neg@2");
+        let missing = respond(r#"{"features": [2.0], "model": "nope"}"#, &router);
+        assert!(missing.get("error").unwrap().as_str().unwrap().contains("nope"));
     }
 
     #[test]
@@ -198,5 +289,22 @@ mod tests {
             h.join().unwrap();
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_prompt_and_releases_port() {
+        let server = TcpServer::spawn("127.0.0.1:0", svc()).unwrap();
+        let addr = server.addr;
+        let t0 = std::time::Instant::now();
+        server.shutdown(); // joins the accept loop
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "shutdown took {:?}",
+            t0.elapsed()
+        );
+        // accept loop exited -> the listener is closed; rebinding the same
+        // address must succeed (SO_REUSEADDR-free proof the socket is gone)
+        let rebound = std::net::TcpListener::bind(addr);
+        assert!(rebound.is_ok(), "port still held after shutdown");
     }
 }

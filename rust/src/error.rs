@@ -1,38 +1,70 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline build image carries no
+//! thiserror); the variants and messages are part of the crate's public
+//! contract — tests assert on their wording.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for the kan-edge crate.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid configuration or hyperparameters (e.g. `G > 2^n`).
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// Artifact files missing or malformed (run `make artifacts`).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Shape mismatch in tensor plumbing.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Serving-path failure (queue closed, admission rejected, ...).
-    #[error("serving error: {0}")]
     Serving(String),
 
     /// JSON parse / schema error.
-    #[error("json error: {0}")]
     Json(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Model-registry failure (manifest schema, digest mismatch, routing).
+    Registry(String),
+
+    /// Underlying I/O failure.
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "invalid configuration: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Serving(m) => write!(f, "serving error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Registry(m) => write!(f, "registry error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
@@ -41,3 +73,21 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_are_stable() {
+        assert!(Error::Config("x".into()).to_string().starts_with("invalid configuration"));
+        assert!(Error::Registry("x".into()).to_string().starts_with("registry error"));
+        assert!(Error::Json("x".into()).to_string().starts_with("json error"));
+    }
+
+    #[test]
+    fn io_errors_pass_through() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+    }
+}

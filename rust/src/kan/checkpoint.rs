@@ -5,13 +5,13 @@
 //! every loader validates shapes and reports actionable errors ("run `make
 //! artifacts`") instead of panicking downstream.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 
 use crate::error::{Error, Result};
-use crate::util::json::Value;
+use crate::util::json::{obj, Value};
 
-fn read_json(path: &Path) -> Result<Value> {
+pub(crate) fn read_json(path: &Path) -> Result<Value> {
     let text = std::fs::read_to_string(path).map_err(|e| {
         Error::Artifact(format!(
             "cannot read {} ({e}); run `make artifacts`",
@@ -278,6 +278,13 @@ pub struct SweepEntry {
 impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let v = read_json(&dir.as_ref().join("manifest.json"))?;
+        Self::from_value(&v)
+    }
+
+    /// Parse the flat (schema v1) manifest body from an already-parsed
+    /// JSON document. `registry::ModelManifest` reuses this for the base
+    /// part of schema-v2 documents.
+    pub fn from_value(v: &Value) -> Result<Self> {
         let d = v.field("dataset")?;
         let dataset = DatasetMeta {
             num_features: d.req_usize("num_features")?,
@@ -342,9 +349,96 @@ impl Manifest {
             dataset,
             models,
             sweep,
-            batch_sizes: usize_vec(&v, "batch_sizes")?,
+            batch_sizes: usize_vec(v, "batch_sizes")?,
             build_seconds: v.get("build_seconds").and_then(|x| x.as_f64()),
         })
+    }
+
+    /// Serialize back to the flat (schema v1) JSON document. The inverse
+    /// of [`Manifest::from_value`]; `registry` layers schema-v2 metadata
+    /// on top of this when writing manifests (`kan-edge publish`).
+    pub fn to_value(&self) -> Value {
+        let dataset = obj(vec![
+            ("num_features", self.dataset.num_features.into()),
+            ("num_classes", self.dataset.num_classes.into()),
+            ("train", self.dataset.train.into()),
+            ("val", self.dataset.val.into()),
+            ("test", self.dataset.test.into()),
+        ]);
+        // BTreeMap for deterministic output (models is a HashMap)
+        let models: BTreeMap<String, Value> = self
+            .models
+            .iter()
+            .map(|(name, m)| (name.clone(), m.to_value()))
+            .collect();
+        let sweep: Vec<Value> = self
+            .sweep
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("g", (s.g as usize).into()),
+                    ("num_params", s.num_params.into()),
+                    ("val_acc", s.val_acc.into()),
+                    ("quant_test_acc", s.quant_test_acc.into()),
+                    ("weights", s.weights.as_str().into()),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("format", (self.format as usize).into()),
+            ("seed", (self.seed as usize).into()),
+            ("dataset", dataset),
+            ("models", Value::Object(models)),
+            ("sweep", Value::Array(sweep)),
+            (
+                "batch_sizes",
+                Value::Array(self.batch_sizes.iter().map(|&b| b.into()).collect()),
+            ),
+        ];
+        if let Some(b) = self.build_seconds {
+            fields.push(("build_seconds", b.into()));
+        }
+        obj(fields)
+    }
+}
+
+impl ModelEntry {
+    /// Serialize one model entry (inverse of the manifest parser).
+    pub fn to_value(&self) -> Value {
+        let mut fields = vec![
+            ("kind", self.kind.as_str().into()),
+            (
+                "dims",
+                Value::Array(self.dims.iter().map(|&d| d.into()).collect()),
+            ),
+            ("num_params", self.num_params.into()),
+            ("val_acc", self.val_acc.into()),
+            ("weights", self.weights.as_str().into()),
+        ];
+        if let Some(g) = self.g {
+            fields.push(("g", (g as usize).into()));
+        }
+        if let Some(k) = self.k {
+            fields.push(("k", (k as usize).into()));
+        }
+        if let Some(a) = self.float_test_acc {
+            fields.push(("float_test_acc", a.into()));
+        }
+        if let Some(a) = self.quant_test_acc {
+            fields.push(("quant_test_acc", a.into()));
+        }
+        if let Some(a) = self.test_acc {
+            fields.push(("test_acc", a.into()));
+        }
+        if !self.hlo.is_empty() {
+            let hlo: BTreeMap<String, Value> = self
+                .hlo
+                .iter()
+                .map(|(b, f)| (b.to_string(), f.as_str().into()))
+                .collect();
+            fields.push(("hlo", Value::Object(hlo)));
+        }
+        obj(fields)
     }
 }
 

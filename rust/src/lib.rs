@@ -23,12 +23,26 @@
 //! * [`kan`] — B-spline math, float and quantized-integer KAN inference,
 //!   checkpoint loading for the artifacts produced by `python/compile/`.
 //! * [`baseline`] — the traditional-MLP accelerator baseline of Fig 13.
-//! * [`runtime`] — PJRT execution of the AOT-lowered HLO artifacts.
+//! * [`runtime`] — PJRT execution of the AOT-lowered HLO artifacts
+//!   (behind the off-by-default `pjrt` cargo feature; a stub with clear
+//!   errors compiles in otherwise).
 //! * [`coordinator`] — the edge-inference serving runtime: dynamic
-//!   batching, routing, backend pool, metrics.
+//!   batching, routing, backend pool, per-model metrics with an exact
+//!   aggregate rollup.
+//! * [`registry`] — model registry & multi-model serving: the
+//!   schema-tagged manifest (v1 = flat aot.py output, v2 = per-model
+//!   version/digest/quant/hardware-cost metadata), a content-addressed
+//!   artifact store with integrity verification, and the hot-reloadable
+//!   [`registry::ModelRegistry`] serving many `name@version` variants
+//!   behind one TCP endpoint (requests carry an optional `"model"`
+//!   field; see [`coordinator::tcp`] for the wire protocol).
 //!
 //! Python (JAX + Pallas) appears only in the build path (`make artifacts`);
 //! this crate is self-contained at run time.
+
+// config structs are routinely built as default-then-override (tests,
+// examples, callers); the style lint fights that idiom
+#![allow(clippy::field_reassign_with_default)]
 
 pub mod acim;
 pub mod baseline;
@@ -41,6 +55,7 @@ pub mod kan;
 pub mod mapping;
 pub mod neurosim;
 pub mod quant;
+pub mod registry;
 pub mod runtime;
 pub mod util;
 

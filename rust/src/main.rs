@@ -1,7 +1,10 @@
 //! `kan-edge` CLI: the leader entrypoint.
 //!
 //! Subcommands map onto the paper's artifacts:
-//! * `serve`     — edge inference service (TCP JSON-lines) over any backend
+//! * `serve`     — multi-model edge inference (TCP JSON-lines) over the
+//!   model registry; requests pick a variant with `"model"`
+//! * `models`    — list / inspect registered model versions
+//! * `publish`   — publish a weights file as a new model version
 //! * `eval`      — accuracy of a model on the artifact test set per backend
 //! * `neurosim`  — KAN-NeuroSim constraint search (Fig 9 / Fig 13)
 //! * `quantize`  — inspect ASP-KAN-HAQ geometry for a (G, K, n) point
@@ -20,16 +23,14 @@ use std::sync::Arc;
 use kan_edge::acim::{AcimOptions, ArrayConfig};
 use kan_edge::circuits::{fig10_sweep, fig11_comparison, Tech};
 use kan_edge::config::AppConfig;
-use kan_edge::coordinator::batcher::BatchPolicy;
-use kan_edge::coordinator::{
-    build_acim_with_calib, build_backend, InferenceService, ServeOptions,
-};
+use kan_edge::coordinator::{build_acim_with_calib, build_backend, Dispatch};
 use kan_edge::error::Result;
 use kan_edge::kan::checkpoint::{Dataset, Manifest};
 use kan_edge::kan::QuantKanModel;
 use kan_edge::mapping::MappingStrategy;
 use kan_edge::neurosim::{search, HwConstraints};
 use kan_edge::quant::{AspSpec, ShLut};
+use kan_edge::registry::{spawn_reload_thread, ModelRegistry};
 
 const USAGE: &str = "\
 kan-edge — KAN edge-inference accelerator stack
@@ -37,7 +38,10 @@ kan-edge — KAN edge-inference accelerator stack
 USAGE: kan-edge [--config FILE] [--artifacts DIR] <command> [options]
 
 COMMANDS:
-  serve     --model NAME --addr HOST:PORT      serve over TCP JSON-lines
+  serve     --addr HOST:PORT [--model NAME]    multi-model TCP serving
+  models    [--model NAME]                     list / inspect registry
+  publish   --weights FILE [--model N] [--version V]
+                                               publish a new model version
   eval      --model NAME --backend B           accuracy on the test set
   neurosim  --budget minimal|moderate|none     Fig 9/13 constraint search
   quantize  --g G --k K --n-bits N             ASP-KAN-HAQ geometry
@@ -47,6 +51,10 @@ COMMANDS:
   cost      --g G --dims a,b,c --tm-n N        accelerator cost estimate
   stats                                        ACIM calibration statistics
   info                                         artifact manifest summary
+
+Serving requests are JSON lines; the optional \"model\" field routes to a
+variant (\"name\" or pinned \"name@version\"):
+  {\"model\": \"kan2\", \"features\": [...]}
 ";
 
 /// Parsed command line: subcommand + `--key value` options.
@@ -130,6 +138,8 @@ fn run(args: &Args) -> Result<()> {
             &args.get("model", &cfg.artifacts.model.clone()),
             &args.get("addr", "127.0.0.1:7777"),
         ),
+        "models" => models_cmd(&cfg, args.opts.get("model").map(|s| s.as_str())),
+        "publish" => publish_cmd(&cfg, args),
         "eval" => eval(
             &cfg,
             &args.get("model", "kan1"),
@@ -158,26 +168,141 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn serve(cfg: &AppConfig, model: &str, addr: &str) -> Result<()> {
-    let manifest = Manifest::load(&cfg.artifacts.dir)?;
-    let backend = build_backend(cfg, &manifest, model)?;
-    let opts = ServeOptions {
-        policy: BatchPolicy {
-            max_batch: cfg.server.max_batch,
-            deadline: std::time::Duration::from_micros(cfg.server.batch_deadline_us),
-        },
-        queue_depth: cfg.server.queue_depth,
-        workers: cfg.server.workers,
-    };
-    let svc = InferenceService::start(backend, opts);
-    let server = kan_edge::coordinator::TcpServer::spawn(addr, svc)?;
+    // the default model comes from --model / config
+    let mut cfg = cfg.clone();
+    cfg.artifacts.model = model.to_string();
+    let registry = ModelRegistry::open(&cfg)?;
+
+    // eager-load the preload set (default model when unset); the default
+    // must come up or serving is pointless, the rest load lazily on miss
+    let mut preload = cfg.registry.preload.clone();
+    if !preload.contains(&cfg.artifacts.model) {
+        preload.insert(0, cfg.artifacts.model.clone());
+    }
+    for name in &preload {
+        match registry.ensure_loaded(name) {
+            Ok(served) => println!("loaded {} [{}]", served.id, cfg.server.backend),
+            Err(e) if name == &cfg.artifacts.model => return Err(e),
+            Err(e) => eprintln!("warning: preload of '{name}' failed: {e}"),
+        }
+    }
+
+    if cfg.registry.reload_poll_ms > 0 {
+        spawn_reload_thread(
+            &registry,
+            std::time::Duration::from_millis(cfg.registry.reload_poll_ms),
+        );
+    }
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = kan_edge::coordinator::TcpServer::spawn(addr, target)?;
     println!(
-        "kan-edge serving {model} [{}] on {} (Ctrl-C to stop)",
-        cfg.server.backend, server.addr
+        "kan-edge serving {} model(s) on {} (default {model}, hot-reload {}; Ctrl-C to stop)",
+        registry.model_names().len(),
+        server.addr,
+        if cfg.registry.reload_poll_ms > 0 { "on" } else { "off" },
     );
     // serve until the process is killed
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn models_cmd(cfg: &AppConfig, inspect: Option<&str>) -> Result<()> {
+    let registry = ModelRegistry::open(cfg)?;
+    let models = registry.models();
+    match inspect {
+        Some(name) => {
+            let info = models
+                .iter()
+                .find(|m| m.name == name)
+                .ok_or_else(|| {
+                    kan_edge::Error::Registry(format!(
+                        "model '{name}' not in manifest (have: {:?})",
+                        registry.model_names()
+                    ))
+                })?;
+            println!("{}@{} [{}]", info.name, info.meta.version, info.kind);
+            println!("  dims:     {:?} ({} params)", info.dims, info.num_params);
+            println!("  weights:  {}", info.weights);
+            println!(
+                "  digest:   {}",
+                info.meta.digest.as_deref().unwrap_or("(none, schema v1)")
+            );
+            if let Some(q) = &info.meta.quant {
+                println!("  quant:    G={} K={} n_bits={}", q.g, q.k, q.n_bits);
+            }
+            if let Some(a) = info.meta.accuracy {
+                println!("  accuracy: {a:.4}");
+            }
+            if let Some(h) = &info.meta.hw_cost {
+                println!(
+                    "  hw cost:  {:.4} mm2, {:.1} pJ, {:.0} ns",
+                    h.area_mm2, h.energy_pj, h.latency_ns
+                );
+            }
+        }
+        None => {
+            println!(
+                "{:<20} {:>4} {:<6} {:>9} {:>9}  {}",
+                "model", "ver", "kind", "params", "acc", "digest"
+            );
+            for m in &models {
+                println!(
+                    "{:<20} {:>4} {:<6} {:>9} {:>9}  {}",
+                    m.name,
+                    m.meta.version,
+                    m.kind,
+                    m.num_params,
+                    m.meta
+                        .accuracy
+                        .map(|a| format!("{a:.4}"))
+                        .unwrap_or_else(|| "-".into()),
+                    m.meta.digest.as_deref().unwrap_or("-"),
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn publish_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let weights = args.opts.get("weights").ok_or_else(|| {
+        kan_edge::Error::Registry("publish requires --weights FILE".into())
+    })?;
+    let version = match args.opts.get("version") {
+        None => None,
+        Some(v) => Some(v.parse::<u32>().map_err(|_| {
+            kan_edge::Error::Registry(format!(
+                "--version must be an unsigned integer (got '{v}')"
+            ))
+        })?),
+    };
+    // publishing into a fresh directory bootstraps an empty v2 manifest
+    let dir = Path::new(&cfg.artifacts.dir);
+    if !dir.join("manifest.json").exists() {
+        kan_edge::registry::ModelManifest::empty().save(dir)?;
+    }
+    let registry = ModelRegistry::open(cfg)?;
+    let (name, meta) = registry.publish_file(
+        Path::new(weights),
+        args.opts.get("model").map(|s| s.as_str()),
+        version,
+    )?;
+    println!(
+        "published {name}@{} (digest {})",
+        meta.version,
+        meta.digest.as_deref().unwrap_or("?")
+    );
+    if let Some(a) = meta.accuracy {
+        println!("  accuracy: {a:.4}");
+    }
+    if let Some(h) = &meta.hw_cost {
+        println!(
+            "  hw cost:  {:.4} mm2, {:.1} pJ, {:.0} ns",
+            h.area_mm2, h.energy_pj, h.latency_ns
+        );
+    }
+    Ok(())
 }
 
 fn eval(cfg: &AppConfig, model: &str, backend: &str) -> Result<()> {

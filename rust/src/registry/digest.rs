@@ -1,0 +1,100 @@
+//! Content digests for artifact addressing.
+//!
+//! FNV-1a 64 is the digest of record: dependency-free, fast enough for
+//! multi-MB weight files, and collision-safe at registry scale (dozens of
+//! artifacts, not billions). Digest strings are prefixed with the
+//! algorithm (`fnv64:<16 hex>`) so a stronger hash can be added later
+//! without ambiguity.
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Digest-string prefix for the FNV-1a 64 algorithm.
+pub const FNV64_PREFIX: &str = "fnv64:";
+
+/// Raw FNV-1a 64 over a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Digest of an in-memory buffer, e.g. `fnv64:af63dc4c8601ec8c`.
+pub fn digest_bytes(bytes: &[u8]) -> String {
+    format!("{FNV64_PREFIX}{:016x}", fnv64(bytes))
+}
+
+/// Streaming digest of a file on disk.
+pub fn digest_file(path: impl AsRef<Path>) -> Result<String> {
+    let path = path.as_ref();
+    let mut file = std::fs::File::open(path).map_err(|e| {
+        Error::Registry(format!("cannot read artifact {}: {e}", path.display()))
+    })?;
+    let mut h = FNV_OFFSET;
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        let n = file.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        for &b in &buf[..n] {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    Ok(format!("{FNV64_PREFIX}{h:016x}"))
+}
+
+/// Validate a digest string and return its 16-hex-char payload.
+pub fn parse(digest: &str) -> Result<&str> {
+    let hex = digest.strip_prefix(FNV64_PREFIX).ok_or_else(|| {
+        Error::Registry(format!(
+            "unsupported digest '{digest}' (expected '{FNV64_PREFIX}<16 hex>')"
+        ))
+    })?;
+    if hex.len() != 16 || !hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(Error::Registry(format!(
+            "malformed digest '{digest}' (expected 16 hex chars after '{FNV64_PREFIX}')"
+        )));
+    }
+    Ok(hex)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv64_known_answers() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn file_and_bytes_digests_agree() {
+        let dir = std::env::temp_dir().join("kan_edge_digest_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let data: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        assert_eq!(digest_file(&path).unwrap(), digest_bytes(&data));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse("fnv64:0123456789abcdef").is_ok());
+        assert!(parse("sha256:0123456789abcdef").is_err());
+        assert!(parse("fnv64:short").is_err());
+        assert!(parse("fnv64:0123456789abcdeg").is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! A tiny LRU recency list used to bound the number of live (compiled /
+//! loaded) backends. At registry scale (a handful of variants) an O(n)
+//! `Vec` beats a linked-hash-map in both code size and constant factor.
+
+/// LRU recency tracker over keys; front of the list = most recent.
+#[derive(Debug, Clone)]
+pub struct Lru<K: PartialEq + Clone> {
+    cap: usize,
+    order: Vec<K>,
+}
+
+impl<K: PartialEq + Clone> Lru<K> {
+    /// `cap` is the max number of tracked keys; inserting beyond it
+    /// reports the evicted (least-recent) key.
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), order: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn contains(&self, k: &K) -> bool {
+        self.order.contains(k)
+    }
+
+    /// Mark `k` as most recently used (no-op if untracked).
+    pub fn touch(&mut self, k: &K) {
+        if let Some(pos) = self.order.iter().position(|x| x == k) {
+            let key = self.order.remove(pos);
+            self.order.insert(0, key);
+        }
+    }
+
+    /// Insert (or touch) `k`; returns the evicted key when capacity is
+    /// exceeded. The just-inserted key is never the one evicted.
+    pub fn insert(&mut self, k: K) -> Option<K> {
+        if let Some(pos) = self.order.iter().position(|x| x == &k) {
+            let key = self.order.remove(pos);
+            self.order.insert(0, key);
+            return None;
+        }
+        self.order.insert(0, k);
+        if self.order.len() > self.cap {
+            self.order.pop()
+        } else {
+            None
+        }
+    }
+
+    pub fn remove(&mut self, k: &K) {
+        self.order.retain(|x| x != k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recent() {
+        let mut lru = Lru::new(2);
+        assert_eq!(lru.insert("a"), None);
+        assert_eq!(lru.insert("b"), None);
+        lru.touch(&"a"); // order now a, b
+        assert_eq!(lru.insert("c"), Some("b"));
+        assert!(lru.contains(&"a") && lru.contains(&"c"));
+    }
+
+    #[test]
+    fn reinsert_touches_instead_of_evicting() {
+        let mut lru = Lru::new(2);
+        lru.insert(1);
+        lru.insert(2);
+        assert_eq!(lru.insert(1), None); // already tracked
+        assert_eq!(lru.insert(3), Some(2));
+    }
+
+    #[test]
+    fn remove_untracks() {
+        let mut lru = Lru::new(3);
+        lru.insert("x");
+        lru.remove(&"x");
+        assert!(lru.is_empty());
+        assert_eq!(lru.len(), 0);
+    }
+}

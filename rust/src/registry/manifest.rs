@@ -1,0 +1,341 @@
+//! Versioned model-manifest schema.
+//!
+//! Two wire schemas are supported, tagged by a top-level
+//! `schema_version` field (trow-style: the tag selects a strict parser,
+//! unknown tags are hard errors, never best-effort):
+//!
+//! * **v1** — today's flat `manifest.json` written by
+//!   `python/compile/aot.py` (no `schema_version` field, or `1`). Every
+//!   model implicitly has `version: 1` and no digest.
+//! * **v2** — v1 plus a required per-model `meta` object carrying the
+//!   registry metadata: monotonically increasing `version`, the
+//!   content digest of the weights artifact, the quantization spec the
+//!   variant was built with, its accuracy, and the hardware cost from
+//!   the NeuroSim co-search. Written by `kan-edge publish`.
+//!
+//! ```text
+//! {"schema_version": 2, "format": 1, ..., "models": {
+//!    "kan1": {"kind": "kan", ..., "meta": {
+//!       "version": 3, "digest": "fnv64:8a1f...",
+//!       "quant": {"g": 5, "k": 3, "n_bits": 8},
+//!       "accuracy": 0.8612,
+//!       "hw_cost": {"area_mm2": 0.021, "energy_pj": 94.0, "latency_ns": 310.0}}}}}
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::kan::checkpoint::{read_json, Manifest};
+use crate::util::json::{obj, Value};
+
+/// Schema versions this build can parse.
+pub const SUPPORTED_SCHEMAS: &[u32] = &[1, 2];
+
+/// Quantization point a variant was built at (paper §3.1 geometry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantSpec {
+    pub g: u32,
+    pub k: u32,
+    pub n_bits: u32,
+}
+
+/// Hardware cost of a variant, from the NeuroSim co-search (§3.4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HwCost {
+    pub area_mm2: f64,
+    pub energy_pj: f64,
+    pub latency_ns: f64,
+}
+
+/// Per-model registry metadata (schema v2).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// Monotonic publish version; serving ids are `name@version`.
+    pub version: u32,
+    /// Expected content digest of the weights artifact.
+    pub digest: Option<String>,
+    pub quant: Option<QuantSpec>,
+    pub accuracy: Option<f64>,
+    pub hw_cost: Option<HwCost>,
+}
+
+impl Default for ModelMeta {
+    fn default() -> Self {
+        Self { version: 1, digest: None, quant: None, accuracy: None, hw_cost: None }
+    }
+}
+
+impl ModelMeta {
+    fn from_json(model: &str, v: &Value) -> Result<Self> {
+        let version = v.req_usize("version").map_err(|e| {
+            Error::Registry(format!("model '{model}' meta: {e}"))
+        })? as u32;
+        if version == 0 {
+            return Err(Error::Registry(format!(
+                "model '{model}' meta: version must be >= 1"
+            )));
+        }
+        let digest = match v.get("digest") {
+            None => None,
+            Some(d) => Some(
+                d.as_str()
+                    .ok_or_else(|| {
+                        Error::Registry(format!(
+                            "model '{model}' meta: 'digest' is not a string"
+                        ))
+                    })?
+                    .to_string(),
+            ),
+        };
+        let quant = match v.get("quant") {
+            None => None,
+            Some(q) => Some(QuantSpec {
+                g: q.req_usize("g")? as u32,
+                k: q.req_usize("k")? as u32,
+                n_bits: q.req_usize("n_bits")? as u32,
+            }),
+        };
+        let hw_cost = match v.get("hw_cost") {
+            None => None,
+            Some(h) => Some(HwCost {
+                area_mm2: h.req_f64("area_mm2")?,
+                energy_pj: h.req_f64("energy_pj")?,
+                latency_ns: h.req_f64("latency_ns")?,
+            }),
+        };
+        Ok(Self {
+            version,
+            digest,
+            quant,
+            accuracy: v.get("accuracy").and_then(|x| x.as_f64()),
+            hw_cost,
+        })
+    }
+
+    fn to_value(&self) -> Value {
+        let mut fields = vec![("version", (self.version as usize).into())];
+        if let Some(d) = &self.digest {
+            fields.push(("digest", d.as_str().into()));
+        }
+        if let Some(q) = &self.quant {
+            fields.push((
+                "quant",
+                obj(vec![
+                    ("g", (q.g as usize).into()),
+                    ("k", (q.k as usize).into()),
+                    ("n_bits", (q.n_bits as usize).into()),
+                ]),
+            ));
+        }
+        if let Some(a) = self.accuracy {
+            fields.push(("accuracy", a.into()));
+        }
+        if let Some(h) = &self.hw_cost {
+            fields.push((
+                "hw_cost",
+                obj(vec![
+                    ("area_mm2", h.area_mm2.into()),
+                    ("energy_pj", h.energy_pj.into()),
+                    ("latency_ns", h.latency_ns.into()),
+                ]),
+            ));
+        }
+        obj(fields)
+    }
+}
+
+/// A parsed, schema-tagged manifest: the flat v1 base plus (for v2) the
+/// per-model registry metadata.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub schema_version: u32,
+    pub base: Manifest,
+    pub meta: BTreeMap<String, ModelMeta>,
+}
+
+impl ModelManifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let v = read_json(&dir.as_ref().join("manifest.json"))?;
+        Self::from_value(&v)
+    }
+
+    /// Strict schema-tagged parse. Missing `schema_version` means v1
+    /// (backwards compatibility with aot.py output); anything not in
+    /// [`SUPPORTED_SCHEMAS`] is rejected outright.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let schema_version = match v.get("schema_version") {
+            None => 1,
+            Some(tag) => tag.as_usize().ok_or_else(|| {
+                Error::Registry("'schema_version' must be a non-negative integer".into())
+            })? as u32,
+        };
+        if !SUPPORTED_SCHEMAS.contains(&schema_version) {
+            return Err(Error::Registry(format!(
+                "unsupported manifest schema_version {schema_version} \
+                 (this build supports: {SUPPORTED_SCHEMAS:?})"
+            )));
+        }
+        let base = Manifest::from_value(v)?;
+        let mut meta = BTreeMap::new();
+        if schema_version >= 2 {
+            let models = v
+                .field("models")?
+                .as_object()
+                .ok_or_else(|| Error::Json("'models' is not an object".into()))?;
+            for (name, m) in models {
+                let mv = m.get("meta").ok_or_else(|| {
+                    Error::Registry(format!(
+                        "schema v2 requires a 'meta' object on model '{name}'"
+                    ))
+                })?;
+                meta.insert(name.clone(), ModelMeta::from_json(name, mv)?);
+            }
+        } else {
+            for name in base.models.keys() {
+                meta.insert(name.clone(), ModelMeta::default());
+            }
+        }
+        Ok(Self { schema_version, base, meta })
+    }
+
+    /// Serialize; v2 documents carry `schema_version` + per-model `meta`.
+    pub fn to_value(&self) -> Value {
+        let mut v = self.base.to_value();
+        if self.schema_version < 2 {
+            return v;
+        }
+        if let Value::Object(top) = &mut v {
+            top.insert("schema_version".into(), (self.schema_version as usize).into());
+            if let Some(Value::Object(models)) = top.get_mut("models") {
+                for (name, entry) in models.iter_mut() {
+                    let meta = self.meta.get(name).cloned().unwrap_or_default();
+                    if let Value::Object(e) = entry {
+                        e.insert("meta".into(), meta.to_value());
+                    }
+                }
+            }
+        }
+        v
+    }
+
+    /// Write `manifest.json` atomically (tmp file + rename) so a serving
+    /// registry polling the file never observes a half-written document.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let tmp = dir.join("manifest.json.tmp");
+        let dst = dir.join("manifest.json");
+        std::fs::write(&tmp, self.to_value().to_string())?;
+        std::fs::rename(&tmp, &dst)?;
+        Ok(())
+    }
+
+    /// Metadata for `name` (default v1 meta when absent).
+    pub fn meta_for(&self, name: &str) -> ModelMeta {
+        self.meta.get(name).cloned().unwrap_or_default()
+    }
+
+    /// A minimal empty v2 manifest, used by `kan-edge publish` when
+    /// starting a registry in a fresh directory.
+    pub fn empty() -> Self {
+        use crate::kan::checkpoint::DatasetMeta;
+        Self {
+            schema_version: 2,
+            base: Manifest {
+                format: 1,
+                seed: 0,
+                dataset: DatasetMeta {
+                    num_features: 0,
+                    num_classes: 0,
+                    train: 0,
+                    val: 0,
+                    test: 0,
+                },
+                models: std::collections::HashMap::new(),
+                sweep: Vec::new(),
+                batch_sizes: Vec::new(),
+                build_seconds: None,
+            },
+            meta: BTreeMap::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v1_doc() -> String {
+        r#"{"format":1,"seed":7,
+            "dataset":{"num_features":2,"num_classes":2,"train":10,"val":5,"test":5},
+            "models":{"a":{"kind":"kan","dims":[2,2],"g":1,"k":1,"num_params":8,
+                           "val_acc":0.9,"weights":"a.weights.json"}},
+            "sweep":[],"batch_sizes":[1,8]}"#
+            .to_string()
+    }
+
+    #[test]
+    fn v1_parses_with_default_meta() {
+        let m = ModelManifest::from_value(&Value::parse(&v1_doc()).unwrap()).unwrap();
+        assert_eq!(m.schema_version, 1);
+        assert_eq!(m.meta_for("a").version, 1);
+        assert!(m.meta_for("a").digest.is_none());
+    }
+
+    #[test]
+    fn v2_roundtrips() {
+        let mut m = ModelManifest::from_value(&Value::parse(&v1_doc()).unwrap()).unwrap();
+        m.schema_version = 2;
+        m.meta.insert(
+            "a".into(),
+            ModelMeta {
+                version: 3,
+                digest: Some("fnv64:0123456789abcdef".into()),
+                quant: Some(QuantSpec { g: 1, k: 1, n_bits: 8 }),
+                accuracy: Some(0.91),
+                hw_cost: Some(HwCost {
+                    area_mm2: 0.02,
+                    energy_pj: 100.0,
+                    latency_ns: 300.0,
+                }),
+            },
+        );
+        let text = m.to_value().to_string();
+        let re = ModelManifest::from_value(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(re.schema_version, 2);
+        let meta = re.meta_for("a");
+        assert_eq!(meta.version, 3);
+        assert_eq!(meta.digest.as_deref(), Some("fnv64:0123456789abcdef"));
+        assert_eq!(meta.quant, Some(QuantSpec { g: 1, k: 1, n_bits: 8 }));
+        assert_eq!(meta.hw_cost.unwrap().energy_pj, 100.0);
+        assert_eq!(re.base.models["a"].dims, vec![2, 2]);
+    }
+
+    #[test]
+    fn unknown_schema_version_rejected() {
+        let doc = v1_doc().replacen("{", r#"{"schema_version":99,"#, 1);
+        let err = ModelManifest::from_value(&Value::parse(&doc).unwrap())
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("99") && err.contains("supports"), "{err}");
+    }
+
+    #[test]
+    fn v2_without_meta_rejected() {
+        let doc = v1_doc().replacen("{", r#"{"schema_version":2,"#, 1);
+        let err = ModelManifest::from_value(&Value::parse(&doc).unwrap())
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("meta"), "{err}");
+    }
+
+    #[test]
+    fn non_integer_schema_version_rejected() {
+        let doc = v1_doc().replacen("{", r#"{"schema_version":"two","#, 1);
+        assert!(ModelManifest::from_value(&Value::parse(&doc).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! Model registry & multi-model serving.
+//!
+//! The paper's co-search (§3.4) emits a *family* of KAN variants with
+//! different G/K/LD points and area/energy/accuracy trade-offs; this
+//! subsystem turns the serving stack from one-model-per-process into a
+//! versioned, hot-reloadable registry:
+//!
+//! * [`manifest`] — the schema-tagged manifest (`schema_version` 1 = the
+//!   flat aot.py output, 2 = per-model registry metadata: version,
+//!   digest, quant spec, accuracy, NeuroSim hardware cost), with strict
+//!   unknown-version rejection.
+//! * [`store`] — a content-addressed [`ArtifactStore`]
+//!   (`objects/<fnv64 digest>`): idempotent publish, integrity
+//!   verification on load.
+//! * [`digest`] — FNV-1a 64 content digests (`fnv64:<16 hex>`).
+//! * [`lru`] — the recency tracker bounding live backends.
+//! * [`registry`] — [`ModelRegistry`]: per-variant serving pipelines
+//!   keyed `name@version`, lazy load + LRU eviction, atomic publish and
+//!   mtime/digest-polled hot reload that never drops in-flight requests.
+//! * [`publish`] — checkpoint validation + manifest mutation backing
+//!   `kan-edge publish`.
+//!
+//! The TCP wire protocol reaches it through
+//! [`Dispatch`](crate::coordinator::server::Dispatch): requests carry an
+//! optional `"model"` field, responses echo the resolved `name@version`.
+
+pub mod digest;
+pub mod lru;
+pub mod manifest;
+pub mod publish;
+#[allow(clippy::module_inception)]
+pub mod registry;
+pub mod store;
+
+pub use digest::{digest_bytes, digest_file};
+pub use manifest::{HwCost, ModelManifest, ModelMeta, QuantSpec};
+pub use registry::{parse_model_spec, spawn_reload_thread, ModelInfo, ModelRegistry, ServedModel};
+pub use store::{ArtifactStore, StoredArtifact};

@@ -1,0 +1,148 @@
+//! Publishing: weights file → content-addressed store + manifest update.
+//!
+//! `publish_into` is the pure core shared by `kan-edge publish` and
+//! [`super::ModelRegistry::publish_file`]: it validates the checkpoint,
+//! ingests it into the [`ArtifactStore`], derives the v2 metadata
+//! (version bump, digest, quant spec, accuracy, NeuroSim hardware cost)
+//! and mutates the in-memory manifest. The caller decides when to
+//! `save()` — the registry does it under its lock so a concurrent
+//! hot-reload poll never sees a half-published state.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::manifest::{HwCost, ModelManifest, ModelMeta, QuantSpec};
+use super::store::ArtifactStore;
+use crate::circuits::Tech;
+use crate::error::{Error, Result};
+use crate::kan::checkpoint::{KanCheckpoint, MlpCheckpoint, ModelEntry};
+use crate::neurosim::{estimate_kan, KanArch};
+use crate::util::json::Value;
+
+/// Validate + ingest `weights`, then record it in `manifest` as a new
+/// version of the model. Returns the published (name, meta).
+pub fn publish_into(
+    manifest: &mut ModelManifest,
+    store: &ArtifactStore,
+    artifacts_dir: &Path,
+    weights: &Path,
+    name_override: Option<&str>,
+    version_override: Option<u32>,
+) -> Result<(String, ModelMeta)> {
+    let text = std::fs::read_to_string(weights).map_err(|e| {
+        Error::Registry(format!("cannot read {}: {e}", weights.display()))
+    })?;
+    let kind = Value::parse(&text)
+        .map_err(|e| Error::Registry(format!("{}: {e}", weights.display())))?
+        .req_str("kind")?
+        .to_string();
+
+    // strict checkpoint validation + metadata extraction per kind
+    let (ckpt_name, dims, num_params, quant, accuracy, entry_accs) = match kind.as_str() {
+        "kan" => {
+            let c = KanCheckpoint::load(weights)?;
+            let quant = QuantSpec { g: c.g, k: c.k, n_bits: c.n_bits };
+            let acc = c.quant_test_acc.or(c.float_test_acc);
+            (
+                c.name.clone(),
+                c.dims.clone(),
+                c.num_params,
+                Some(quant),
+                acc,
+                (c.float_test_acc, c.quant_test_acc, None),
+            )
+        }
+        "mlp" => {
+            let c = MlpCheckpoint::load(weights)?;
+            (
+                c.name.clone(),
+                c.dims.clone(),
+                c.num_params,
+                None,
+                c.test_acc,
+                (None, None, c.test_acc),
+            )
+        }
+        other => {
+            return Err(Error::Registry(format!(
+                "cannot publish {}: unknown checkpoint kind '{other}' (kan | mlp)",
+                weights.display()
+            )))
+        }
+    };
+    let name = name_override.unwrap_or(&ckpt_name).to_string();
+    if name.is_empty() || name.contains('@') {
+        return Err(Error::Registry(format!(
+            "invalid model name '{name}': must be non-empty and free of '@'"
+        )));
+    }
+
+    let stored = store.put_file(weights)?;
+    let rel_weights = store.rel_path_of(&stored.digest, artifacts_dir)?;
+
+    let prev_version = manifest
+        .base
+        .models
+        .contains_key(&name)
+        .then(|| manifest.meta_for(&name).version);
+    let version = match version_override {
+        Some(0) => {
+            // version 0 would be rejected by the manifest parser on the
+            // next load, bricking the registry file
+            return Err(Error::Registry(format!(
+                "model '{name}': version must be >= 1"
+            )));
+        }
+        Some(v) => {
+            if let Some(prev) = prev_version {
+                if v <= prev {
+                    return Err(Error::Registry(format!(
+                        "model '{name}' is already at version {prev}; \
+                         new version must be greater (got {v})"
+                    )));
+                }
+            }
+            v
+        }
+        None => prev_version.map(|v| v + 1).unwrap_or(1),
+    };
+
+    // hardware cost from the NeuroSim analytic model (KAN variants only);
+    // 22 nm default technology, same as `kan-edge cost`
+    let hw_cost = quant.and_then(|q| {
+        estimate_kan(&KanArch::new(dims.clone(), q.g), &Tech::default())
+            .ok()
+            .map(|r| HwCost {
+                area_mm2: r.area_mm2,
+                energy_pj: r.energy_pj,
+                latency_ns: r.latency_ns,
+            })
+    });
+
+    let (float_test_acc, quant_test_acc, test_acc) = entry_accs;
+    let entry = ModelEntry {
+        kind,
+        dims,
+        g: quant.map(|q| q.g),
+        k: quant.map(|q| q.k),
+        num_params,
+        val_acc: accuracy.unwrap_or(0.0),
+        float_test_acc,
+        quant_test_acc,
+        test_acc,
+        weights: rel_weights,
+        hlo: HashMap::new(),
+    };
+    let meta = ModelMeta {
+        version,
+        digest: Some(stored.digest),
+        quant,
+        accuracy,
+        hw_cost,
+    };
+
+    manifest.schema_version = 2;
+    manifest.base.models.insert(name.clone(), entry);
+    manifest.meta.insert(name.clone(), meta.clone());
+    Ok((name, meta))
+}

@@ -1,0 +1,402 @@
+//! The live model registry: versioned variants → running backends.
+//!
+//! [`ModelRegistry`] owns one serving pipeline (dynamic batcher + worker
+//! pool + metrics, i.e. an
+//! [`InferenceService`](crate::coordinator::server::InferenceService)) per
+//! live model, keyed by name with serving ids `name@version`. It
+//! implements [`Dispatch`], so a single TCP endpoint routes per-request
+//! (`{"model": "kan2", ...}`) across every published variant.
+//!
+//! Lifecycle guarantees:
+//!
+//! * **Lazy load + LRU** — backends are built on first request and
+//!   bounded by `registry.max_loaded`; the least-recently-used variant
+//!   is evicted (its worker pool drains and exits once in-flight
+//!   requests complete — channel teardown, no force-kill).
+//! * **Atomic publish / hot reload** — [`ModelRegistry::poll_reload`]
+//!   re-stats `manifest.json` and each live variant's weights digest;
+//!   a changed variant is rebuilt *outside* the registry lock and then
+//!   swapped in with a single map write. Requests already admitted to
+//!   the old pipeline finish against the old weights; new requests see
+//!   the new version. Nothing is dropped.
+//! * **Integrity** — when the manifest declares a digest (schema v2),
+//!   the weights file is re-hashed before a backend is built; mismatch
+//!   is a hard [`Error::Registry`].
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use super::digest;
+use super::lru::Lru;
+use super::manifest::{ModelManifest, ModelMeta};
+use super::store::{verify_file, ArtifactStore};
+use crate::config::AppConfig;
+use crate::coordinator::metrics::{MetricsHub, MetricsReport};
+use crate::coordinator::router::{build_backend, serve_options};
+use crate::coordinator::server::{Dispatch, InferenceService};
+use crate::error::{Error, Result};
+
+/// One live (servable) model version.
+pub struct ServedModel {
+    /// `name@version` serving id.
+    pub id: String,
+    pub name: String,
+    pub version: u32,
+    /// Content digest of the weights the backend was built from.
+    pub digest: String,
+    /// This variant's private batcher + worker pool.
+    pub svc: InferenceService,
+}
+
+/// CLI-facing summary of one registered model.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub meta: ModelMeta,
+    pub kind: String,
+    pub dims: Vec<usize>,
+    pub num_params: usize,
+    pub weights: String,
+    pub live: bool,
+}
+
+struct Inner {
+    manifest: ModelManifest,
+    live: BTreeMap<String, Arc<ServedModel>>,
+}
+
+/// Multi-model serving registry (see module docs).
+pub struct ModelRegistry {
+    cfg: AppConfig,
+    dir: PathBuf,
+    store: ArtifactStore,
+    hub: MetricsHub,
+    inner: RwLock<Inner>,
+    lru: Mutex<Lru<String>>,
+}
+
+/// Split `"name@version"` into its parts; plain `"name"` pins nothing.
+pub fn parse_model_spec(spec: &str) -> Result<(&str, Option<u32>)> {
+    match spec.split_once('@') {
+        None => Ok((spec, None)),
+        Some((name, ver)) => {
+            let v: u32 = ver.parse().map_err(|_| {
+                Error::Registry(format!(
+                    "bad model spec '{spec}': version after '@' must be an integer"
+                ))
+            })?;
+            Ok((name, Some(v)))
+        }
+    }
+}
+
+impl ModelRegistry {
+    /// Open the registry over `cfg.artifacts.dir` (manifest parsed, no
+    /// backends built yet).
+    pub fn open(cfg: &AppConfig) -> Result<Arc<Self>> {
+        let dir = PathBuf::from(&cfg.artifacts.dir);
+        let manifest = ModelManifest::load(&dir)?;
+        let store = ArtifactStore::open(dir.join(&cfg.registry.store_dir))?;
+        Ok(Arc::new(Self {
+            cfg: cfg.clone(),
+            dir,
+            store,
+            hub: MetricsHub::new(),
+            inner: RwLock::new(Inner { manifest, live: BTreeMap::new() }),
+            lru: Mutex::new(Lru::new(cfg.registry.max_loaded)),
+        }))
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// Names registered in the manifest (not necessarily live).
+    pub fn model_names(&self) -> Vec<String> {
+        let g = self.inner.read().unwrap();
+        let mut names: Vec<String> = g.manifest.base.models.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Summaries for `kan-edge models`.
+    pub fn models(&self) -> Vec<ModelInfo> {
+        let g = self.inner.read().unwrap();
+        let mut out: Vec<ModelInfo> = g
+            .manifest
+            .base
+            .models
+            .iter()
+            .map(|(name, e)| ModelInfo {
+                name: name.clone(),
+                meta: g.manifest.meta_for(name),
+                kind: e.kind.clone(),
+                dims: e.dims.clone(),
+                num_params: e.num_params,
+                weights: e.weights.clone(),
+                live: g.live.contains_key(name),
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Per-model metrics reports (includes retired versions).
+    pub fn metrics(&self) -> Vec<(String, MetricsReport)> {
+        self.hub.reports()
+    }
+
+    /// Exact rollup across all models and versions.
+    pub fn aggregate_metrics(&self) -> MetricsReport {
+        self.hub.aggregate()
+    }
+
+    /// Build a serving pipeline for `name` from the current manifest.
+    /// Slow (reads weights, may compile); called with no locks held.
+    fn build_served(&self, name: &str) -> Result<Arc<ServedModel>> {
+        let (manifest, meta) = {
+            let g = self.inner.read().unwrap();
+            if !g.manifest.base.models.contains_key(name) {
+                // (names computed inline: taking the lock again here
+                // would be a re-entrant read on this RwLock)
+                let mut names: Vec<&String> = g.manifest.base.models.keys().collect();
+                names.sort();
+                return Err(Error::Registry(format!(
+                    "model '{name}' not in manifest (have: {names:?})"
+                )));
+            }
+            (g.manifest.base.clone(), g.manifest.meta_for(name))
+        };
+        let entry = &manifest.models[name];
+        let weights_path = self.dir.join(&entry.weights);
+        // integrity: verify the manifest-declared digest, else record the
+        // current content digest for hot-reload change detection
+        let file_digest = match &meta.digest {
+            Some(expected) => {
+                verify_file(&weights_path, expected)?;
+                expected.clone()
+            }
+            None => digest::digest_file(&weights_path)?,
+        };
+        let backend = build_backend(&self.cfg, &manifest, name)?;
+        // cross-check backend output shape against the manifest entry
+        let declared_out = *entry.dims.last().unwrap_or(&0);
+        if backend.output_dim() != declared_out {
+            return Err(Error::Shape(format!(
+                "model '{name}': weights produce {} outputs but manifest dims \
+                 end in {declared_out}",
+                backend.output_dim()
+            )));
+        }
+        let id = format!("{name}@{}", meta.version);
+        let svc = InferenceService::start_with_metrics(
+            backend,
+            serve_options(&self.cfg),
+            self.hub.for_model(&id),
+        );
+        Ok(Arc::new(ServedModel {
+            id,
+            name: name.to_string(),
+            version: meta.version,
+            digest: file_digest,
+            svc,
+        }))
+    }
+
+    /// The live pipeline for `name`, loading it on first use (LRU-bounded).
+    pub fn ensure_loaded(&self, name: &str) -> Result<Arc<ServedModel>> {
+        if let Some(served) = self.inner.read().unwrap().live.get(name) {
+            self.lru.lock().unwrap().touch(&name.to_string());
+            return Ok(served.clone());
+        }
+        let built = self.build_served(name)?;
+        let mut g = self.inner.write().unwrap();
+        // lost the race? serve whichever version won
+        if let Some(existing) = g.live.get(name) {
+            return Ok(existing.clone());
+        }
+        g.live.insert(name.to_string(), built.clone());
+        let evicted = self.lru.lock().unwrap().insert(name.to_string());
+        if let Some(old) = evicted {
+            // dropping the ServedModel closes its request channel; the
+            // batcher flushes and the workers drain in-flight batches
+            g.live.remove(&old);
+        }
+        Ok(built)
+    }
+
+    /// Unload `name` (manifest entry stays; next request reloads).
+    /// Returns whether it was live.
+    pub fn retire(&self, name: &str) -> bool {
+        let mut g = self.inner.write().unwrap();
+        self.lru.lock().unwrap().remove(&name.to_string());
+        g.live.remove(name).is_some()
+    }
+
+    /// Route one request. `spec` is `None` (default model), `"name"`, or
+    /// `"name@version"`; a pinned version must match the published one.
+    pub fn infer(&self, spec: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+        let spec = spec.unwrap_or(self.cfg.artifacts.model.as_str());
+        let (name, pinned) = parse_model_spec(spec)?;
+        if let Some(v) = pinned {
+            // reject a stale pin against the manifest *before* loading:
+            // a doomed request must not build a backend (and potentially
+            // LRU-evict a serving model) only to be refused afterwards
+            let current = {
+                let g = self.inner.read().unwrap();
+                g.manifest
+                    .base
+                    .models
+                    .contains_key(name)
+                    .then(|| g.manifest.meta_for(name).version)
+            };
+            if let Some(current) = current {
+                if v != current {
+                    return Err(Error::Registry(format!(
+                        "model '{name}' is at version {current}, request pinned @{v}"
+                    )));
+                }
+            }
+            // unknown names fall through to ensure_loaded's error
+        }
+        let served = self.ensure_loaded(name)?;
+        if let Some(v) = pinned {
+            if v != served.version {
+                return Err(Error::Registry(format!(
+                    "model '{name}' is live at version {}, request pinned @{v}",
+                    served.version
+                )));
+            }
+        }
+        let logits = served.svc.infer(features)?;
+        Ok((served.id.clone(), logits))
+    }
+
+    /// Rebuild `name` from the on-disk manifest/weights and atomically
+    /// swap it in. In-flight requests on the old pipeline complete.
+    pub fn reload_model(&self, name: &str) -> Result<Arc<ServedModel>> {
+        let built = self.build_served(name)?;
+        let mut g = self.inner.write().unwrap();
+        g.live.insert(name.to_string(), built.clone());
+        // keep live and the LRU in sync: reloading a model that was not
+        // tracked (non-live reload, or a racing eviction) can push another
+        // entry past capacity
+        if let Some(old) = self.lru.lock().unwrap().insert(name.to_string()) {
+            g.live.remove(&old);
+        }
+        Ok(built)
+    }
+
+    /// Hot-reload poll: re-read the manifest (it is small, and `save` is
+    /// an atomic rename, so this never observes a torn write), then
+    /// rebuild any live model whose version or weights digest differs.
+    /// Returns the ids of swapped-in versions.
+    pub fn poll_reload(&self) -> Result<Vec<String>> {
+        let fresh = ModelManifest::load(&self.dir)?;
+        {
+            let mut g = self.inner.write().unwrap();
+            g.manifest = fresh;
+        }
+        // snapshot live state, then compare digests without locks
+        let live: Vec<(String, u32, String)> = {
+            let g = self.inner.read().unwrap();
+            g.live
+                .values()
+                .map(|s| (s.name.clone(), s.version, s.digest.clone()))
+                .collect()
+        };
+        let mut swapped = Vec::new();
+        for (name, version, old_digest) in live {
+            let lookup = {
+                let g = self.inner.read().unwrap();
+                g.manifest
+                    .base
+                    .models
+                    .get(&name)
+                    .map(|e| (g.manifest.meta_for(&name), self.dir.join(&e.weights)))
+            };
+            let (meta, weights_path) = match lookup {
+                Some(found) => found,
+                None => {
+                    // model removed from the manifest: retire it
+                    self.retire(&name);
+                    continue;
+                }
+            };
+            let changed = meta.version != version
+                || match digest::digest_file(&weights_path) {
+                    Ok(d) => d != old_digest,
+                    Err(_) => false, // weights temporarily unreadable: keep serving
+                };
+            if changed {
+                // a model that fails to rebuild (corrupt weights, digest
+                // mismatch) keeps serving its old version and must not
+                // block reloads of the models after it in the loop
+                match self.reload_model(&name) {
+                    Ok(served) => swapped.push(served.id.clone()),
+                    Err(e) => eprintln!("hot-reload of '{name}' failed: {e}"),
+                }
+            }
+        }
+        Ok(swapped)
+    }
+
+    /// Publish a weights file as a new (or updated) model: ingest it into
+    /// the content-addressed store, bump the version, record digest +
+    /// quant/accuracy metadata, and atomically rewrite `manifest.json`
+    /// (upgrading it to schema v2). If the model is currently live it is
+    /// hot-swapped immediately.
+    pub fn publish_file(
+        &self,
+        weights: &std::path::Path,
+        name_override: Option<&str>,
+        version_override: Option<u32>,
+    ) -> Result<(String, ModelMeta)> {
+        let published = {
+            let mut g = self.inner.write().unwrap();
+            let published = super::publish::publish_into(
+                &mut g.manifest,
+                &self.store,
+                &self.dir,
+                weights,
+                name_override,
+                version_override,
+            )?;
+            g.manifest.save(&self.dir)?;
+            published
+        };
+        let (name, meta) = &published;
+        let was_live = self.inner.read().unwrap().live.contains_key(name);
+        if was_live {
+            self.reload_model(name)?;
+        }
+        Ok((name.clone(), meta.clone()))
+    }
+}
+
+impl Dispatch for ModelRegistry {
+    fn dispatch(&self, model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+        self.infer(model, features)
+    }
+}
+
+/// Spawn the hot-reload poller; it stops on its own once the registry is
+/// dropped (holds only a `Weak`).
+pub fn spawn_reload_thread(registry: &Arc<ModelRegistry>, interval: Duration) {
+    let weak = Arc::downgrade(registry);
+    let _ = std::thread::Builder::new()
+        .name("kan-edge-reload".into())
+        .spawn(move || loop {
+            std::thread::sleep(interval);
+            match weak.upgrade() {
+                Some(reg) => {
+                    if let Err(e) = reg.poll_reload() {
+                        eprintln!("hot-reload poll failed: {e}");
+                    }
+                }
+                None => break,
+            }
+        });
+}

@@ -1,0 +1,173 @@
+//! Content-addressed artifact store.
+//!
+//! Weights / HLO blobs live under `<root>/objects/<digest-hex>`, keyed by
+//! their FNV-1a 64 content digest (see [`super::digest`]). Properties the
+//! registry relies on:
+//!
+//! * **Idempotent publish** — re-publishing identical bytes lands on the
+//!   same object; nothing is duplicated or overwritten mid-read (writes
+//!   go to a tmp file then `rename`, which is atomic on POSIX).
+//! * **Integrity on load** — [`ArtifactStore::open_verified`] re-hashes
+//!   the object and fails loudly on digest mismatch (bit-rot, truncated
+//!   copy, manual tampering) instead of serving a corrupt model.
+
+use std::path::{Path, PathBuf};
+
+use super::digest;
+use crate::error::{Error, Result};
+
+/// Handle to one stored object.
+#[derive(Debug, Clone)]
+pub struct StoredArtifact {
+    pub digest: String,
+    pub path: PathBuf,
+}
+
+/// A directory of content-addressed artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    root: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(root.join("objects"))?;
+        Ok(Self { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn object_path(&self, hex: &str) -> PathBuf {
+        self.root.join("objects").join(hex)
+    }
+
+    /// Absolute path an object with `digest` would live at (validated,
+    /// not checked for existence).
+    pub fn path_of(&self, digest_str: &str) -> Result<PathBuf> {
+        Ok(self.object_path(digest::parse(digest_str)?))
+    }
+
+    /// Store path relative to `base` (what gets written into manifests).
+    pub fn rel_path_of(&self, digest_str: &str, base: &Path) -> Result<String> {
+        let abs = self.path_of(digest_str)?;
+        let rel = abs.strip_prefix(base).unwrap_or(&abs);
+        Ok(rel.to_string_lossy().into_owned())
+    }
+
+    pub fn contains(&self, digest_str: &str) -> bool {
+        self.path_of(digest_str).map(|p| p.exists()).unwrap_or(false)
+    }
+
+    /// Ingest a byte buffer; no-op (returning the existing object) when
+    /// the content is already stored.
+    pub fn put_bytes(&self, bytes: &[u8]) -> Result<StoredArtifact> {
+        let digest_str = digest::digest_bytes(bytes);
+        let path = self.path_of(&digest_str)?;
+        if !path.exists() {
+            let tmp = path.with_extension("tmp");
+            std::fs::write(&tmp, bytes)?;
+            std::fs::rename(&tmp, &path)?;
+        }
+        Ok(StoredArtifact { digest: digest_str, path })
+    }
+
+    /// Ingest a file from anywhere on disk.
+    pub fn put_file(&self, src: impl AsRef<Path>) -> Result<StoredArtifact> {
+        let src = src.as_ref();
+        let bytes = std::fs::read(src).map_err(|e| {
+            Error::Registry(format!("cannot read {}: {e}", src.display()))
+        })?;
+        self.put_bytes(&bytes)
+    }
+
+    /// Resolve an object and verify its content still matches the digest.
+    pub fn open_verified(&self, digest_str: &str) -> Result<PathBuf> {
+        let path = self.path_of(digest_str)?;
+        if !path.exists() {
+            return Err(Error::Registry(format!(
+                "artifact {digest_str} not in store at {}",
+                self.root.display()
+            )));
+        }
+        verify_file(&path, digest_str)?;
+        Ok(path)
+    }
+
+    /// All digests currently stored.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(self.root.join("objects"))? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.len() == 16 && name.bytes().all(|b| b.is_ascii_hexdigit()) {
+                out.push(format!("{}{name}", digest::FNV64_PREFIX));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+/// Check that `path`'s content hashes to `expected` (used both by the
+/// store and by the registry when validating manifest-declared digests
+/// against weights files living outside the store).
+pub fn verify_file(path: &Path, expected: &str) -> Result<()> {
+    digest::parse(expected)?;
+    let actual = digest::digest_file(path)?;
+    if actual != expected {
+        return Err(Error::Registry(format!(
+            "digest mismatch for {}: manifest says {expected}, file is {actual} \
+             (artifact corrupted or overwritten?)",
+            path.display()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(name: &str) -> ArtifactStore {
+        let dir = std::env::temp_dir().join("kan_edge_store_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        ArtifactStore::open(&dir).unwrap()
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let store = tmp_store("roundtrip");
+        let a = store.put_bytes(b"weights-v1").unwrap();
+        assert!(store.contains(&a.digest));
+        let path = store.open_verified(&a.digest).unwrap();
+        assert_eq!(std::fs::read(path).unwrap(), b"weights-v1");
+        // idempotent re-put
+        let b = store.put_bytes(b"weights-v1").unwrap();
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(store.list().unwrap(), vec![a.digest]);
+    }
+
+    #[test]
+    fn corruption_detected_on_load() {
+        let store = tmp_store("corrupt");
+        let a = store.put_bytes(b"good bytes").unwrap();
+        std::fs::write(&a.path, b"evil bytes").unwrap();
+        let err = store.open_verified(&a.digest).map(|_| ()).unwrap_err().to_string();
+        assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn missing_object_is_clear_error() {
+        let store = tmp_store("missing");
+        let err = store
+            .open_verified("fnv64:00000000000000aa")
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not in store"), "{err}");
+    }
+}

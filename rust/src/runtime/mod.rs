@@ -5,6 +5,12 @@
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids and
 //! round-trips cleanly. The python side lowers with `return_tuple=True`,
 //! so outputs are unwrapped with `to_tuple1`.
+//!
+//! The XLA dependency is optional: build with `--features pjrt` for the
+//! real execution path. Without it, [`PjrtEngine`] is a stub whose entry
+//! points fail with an actionable runtime error, keeping the offline
+//! `cargo build`/`cargo test` green (the `digital` and `acim` backends
+//! are unaffected).
 
 pub mod engine;
 

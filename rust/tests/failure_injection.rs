@@ -4,6 +4,7 @@
 use std::io::Write;
 
 use kan_edge::kan::checkpoint::{Dataset, KanCheckpoint, Manifest, MlpCheckpoint};
+#[cfg(feature = "pjrt")]
 use kan_edge::runtime::PjrtEngine;
 use kan_edge::util::json::Value;
 
@@ -74,6 +75,7 @@ fn manifest_missing_dir() {
     assert!(err.contains("make artifacts"), "{err}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn corrupt_hlo_text_fails_to_compile() {
     let path = write_tmp("bad.hlo.txt", "HloModule garbage\n\nthis is not hlo\n");
@@ -81,6 +83,19 @@ fn corrupt_hlo_text_fails_to_compile() {
     assert!(engine.load_hlo(&path, 1, 17, 14).is_err());
 }
 
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_stub_errors_mention_the_feature() {
+    // built without the xla dependency: the stub engine must fail loudly
+    // and actionably, never pretend to run
+    let err = kan_edge::runtime::PjrtEngine::cpu()
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("pjrt"), "{err}");
+}
+
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_run_rejects_wrong_input_len() {
     // use a real artifact if available
@@ -97,6 +112,7 @@ fn pjrt_run_rejects_wrong_input_len() {
     assert!(err.contains("17"), "{err}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_padding_of_short_batches_is_correct() {
     // PjrtBackend pads chunks to the compiled batch; padded rows must not

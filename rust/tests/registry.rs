@@ -1,0 +1,364 @@
+//! Registry & multi-model serving integration tests.
+//!
+//! These run fully offline: they synthesize tiny-but-valid KAN
+//! checkpoints (G=1, K=1, LD=2; residual-path weights chosen so each
+//! variant prefers a different class) and drive the whole stack — v1/v2
+//! manifests, content digests, the registry's lazy load + LRU, per-model
+//! metrics, the TCP `"model"` routing field, and hot reload.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use kan_edge::config::AppConfig;
+use kan_edge::coordinator::{Dispatch, TcpServer};
+use kan_edge::registry::{digest_file, ModelManifest, ModelRegistry};
+use kan_edge::util::json::Value;
+
+/// A tiny valid KAN checkpoint (dims [2,2]) whose residual weights make
+/// every positive input land on `favor_class`.
+fn kan_variant_json(name: &str, favor_class: usize) -> String {
+    let wb = if favor_class == 0 {
+        "[1.0, 0.0, 1.0, 0.0]"
+    } else {
+        "[0.0, 1.0, 0.0, 1.0]"
+    };
+    format!(
+        r#"{{"name":"{name}","kind":"kan","dims":[2,2],"g":1,"k":1,"n_bits":8,
+            "num_params":8,"quant_test_acc":0.9,
+            "layers":[{{"din":2,"dout":2,"lo":-1.0,"hi":1.0,"ld":2,
+              "sh_lut":[[255,0],[170,85],[128,128]],
+              "coeff_q":[0,0,0,0,0,0,0,0],"coeff_scale":0.01,
+              "wb":{wb}}}]}}"#
+    )
+}
+
+fn tmp_dir(test: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("kan_edge_registry_tests").join(test);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a schema-v2 manifest over models `(name, weights-file, version)`,
+/// with correct digests computed from the files on disk.
+fn write_manifest_v2(dir: &Path, models: &[(&str, &str, u32)]) {
+    write_manifest_v2_with(dir, models, |_name, file| {
+        digest_file(dir.join(file)).unwrap()
+    })
+}
+
+fn write_manifest_v2_with(
+    dir: &Path,
+    models: &[(&str, &str, u32)],
+    digest_of: impl Fn(&str, &str) -> String,
+) {
+    let entries: Vec<String> = models
+        .iter()
+        .map(|(name, file, version)| {
+            let digest = digest_of(name, file);
+            format!(
+                r#""{name}":{{"kind":"kan","dims":[2,2],"g":1,"k":1,"num_params":8,
+                    "val_acc":0.9,"weights":"{file}",
+                    "meta":{{"version":{version},"digest":"{digest}",
+                            "quant":{{"g":1,"k":1,"n_bits":8}},"accuracy":0.9}}}}"#
+            )
+        })
+        .collect();
+    let text = format!(
+        r#"{{"schema_version":2,"format":1,"seed":0,
+            "dataset":{{"num_features":2,"num_classes":2,"train":0,"val":0,"test":0}},
+            "models":{{{}}},"sweep":[],"batch_sizes":[]}}"#,
+        entries.join(",")
+    );
+    std::fs::write(dir.join("manifest.json"), text).unwrap();
+}
+
+fn test_config(dir: &Path, default_model: &str) -> AppConfig {
+    let mut cfg = AppConfig::default();
+    cfg.artifacts.dir = dir.to_string_lossy().into_owned();
+    cfg.artifacts.model = default_model.to_string();
+    cfg.server.backend = "digital".into();
+    cfg
+}
+
+/// Two-variant artifacts dir: model "a" favors class 0, "b" favors 1.
+fn two_variant_dir(test: &str) -> PathBuf {
+    let dir = tmp_dir(test);
+    std::fs::write(dir.join("a.weights.json"), kan_variant_json("a", 0)).unwrap();
+    std::fs::write(dir.join("b.weights.json"), kan_variant_json("b", 1)).unwrap();
+    write_manifest_v2(&dir, &[("a", "a.weights.json", 1), ("b", "b.weights.json", 1)]);
+    dir
+}
+
+/// One JSON-lines request over an open connection.
+fn request(
+    conn: &mut std::net::TcpStream,
+    reader: &mut BufReader<std::net::TcpStream>,
+    body: &str,
+) -> Value {
+    conn.write_all(body.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Value::parse(&line).unwrap()
+}
+
+#[test]
+fn two_variants_served_concurrently_over_one_socket() {
+    let dir = two_variant_dir("two_variants");
+    let registry = ModelRegistry::open(&test_config(&dir, "a")).unwrap();
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+    let addr = server.addr;
+
+    let per_client: u64 = 10;
+    let mut handles = Vec::new();
+    for (model, expect_class) in [("a", 0i64), ("b", 1i64)] {
+        handles.push(std::thread::spawn(move || {
+            let conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut conn = conn;
+            for _ in 0..per_client {
+                let v = request(
+                    &mut conn,
+                    &mut reader,
+                    &format!(r#"{{"model": "{model}", "features": [0.5, 0.5]}}"#),
+                );
+                assert_eq!(
+                    v.get("class").unwrap().as_i64().unwrap(),
+                    expect_class,
+                    "model {model}"
+                );
+                assert_eq!(
+                    v.get("model").unwrap().as_str().unwrap(),
+                    format!("{model}@1")
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // per-model metrics: one report per variant, correct counts
+    let reports = registry.metrics();
+    let get = |id: &str| {
+        reports
+            .iter()
+            .find(|(rid, _)| rid == id)
+            .unwrap_or_else(|| panic!("no metrics for {id}: {reports:?}"))
+            .1
+            .clone()
+    };
+    assert_eq!(get("a@1").requests, per_client);
+    assert_eq!(get("b@1").requests, per_client);
+    // exact aggregate rollup across both models
+    assert_eq!(registry.aggregate_metrics().requests, 2 * per_client);
+
+    // default model (no "model" field) routes to "a"
+    let conn = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut conn = conn;
+    let v = request(&mut conn, &mut reader, r#"{"features": [0.5, 0.5]}"#);
+    assert_eq!(v.get("model").unwrap().as_str().unwrap(), "a@1");
+    server.shutdown();
+}
+
+#[test]
+fn hot_reload_switches_traffic_without_dropping_requests() {
+    let dir = two_variant_dir("hot_reload");
+    let registry = ModelRegistry::open(&test_config(&dir, "a")).unwrap();
+
+    // v1 of "a" favors class 0
+    let (id, logits) = registry.infer(Some("a"), vec![0.5, 0.5]).unwrap();
+    assert_eq!(id, "a@1");
+    assert!(logits[0] > logits[1]);
+
+    // publish v2: flipped weights, bumped version, new digest
+    std::fs::write(dir.join("a.weights.json"), kan_variant_json("a", 1)).unwrap();
+    write_manifest_v2(&dir, &[("a", "a.weights.json", 2), ("b", "b.weights.json", 1)]);
+
+    // fire a background burst while the swap happens: every request must
+    // complete (old or new version — never an error, never dropped)
+    let reg2 = registry.clone();
+    let burst = std::thread::spawn(move || {
+        for _ in 0..50 {
+            let (_, l) = reg2.infer(Some("a"), vec![0.5, 0.5]).unwrap();
+            assert_eq!(l.len(), 2);
+        }
+    });
+    let swapped = registry.poll_reload().unwrap();
+    burst.join().unwrap();
+    assert_eq!(swapped, vec!["a@2".to_string()]);
+
+    // traffic now hits v2 (class flipped), and the id says so
+    let (id, logits) = registry.infer(Some("a"), vec![0.5, 0.5]).unwrap();
+    assert_eq!(id, "a@2");
+    assert!(logits[1] > logits[0]);
+
+    // version pinning: the retired version is refused with a clear error
+    let err = registry.infer(Some("a@1"), vec![0.5, 0.5]).unwrap_err().to_string();
+    assert!(err.contains("version 2"), "{err}");
+    // both versions kept their metrics for the rollup
+    let ids: Vec<String> = registry.metrics().into_iter().map(|(id, _)| id).collect();
+    assert!(ids.contains(&"a@1".to_string()) && ids.contains(&"a@2".to_string()));
+
+    // a second poll with nothing changed is a no-op
+    assert!(registry.poll_reload().unwrap().is_empty());
+}
+
+#[test]
+fn digest_mismatch_refuses_to_serve() {
+    let dir = tmp_dir("digest_mismatch");
+    std::fs::write(dir.join("a.weights.json"), kan_variant_json("a", 0)).unwrap();
+    write_manifest_v2_with(&dir, &[("a", "a.weights.json", 1)], |_, _| {
+        "fnv64:00000000000000ff".to_string()
+    });
+    let registry = ModelRegistry::open(&test_config(&dir, "a")).unwrap();
+    let err = registry.infer(None, vec![0.5, 0.5]).unwrap_err().to_string();
+    assert!(err.contains("digest mismatch"), "{err}");
+}
+
+#[test]
+fn manifest_weights_shape_mismatch_detected() {
+    let dir = tmp_dir("shape_mismatch");
+    std::fs::write(dir.join("a.weights.json"), kan_variant_json("a", 0)).unwrap();
+    let digest = digest_file(dir.join("a.weights.json")).unwrap();
+    // manifest claims 3 outputs; the checkpoint produces 2
+    let text = format!(
+        r#"{{"schema_version":2,"format":1,"seed":0,
+            "dataset":{{"num_features":2,"num_classes":3,"train":0,"val":0,"test":0}},
+            "models":{{"a":{{"kind":"kan","dims":[2,3],"g":1,"k":1,"num_params":8,
+               "val_acc":0.9,"weights":"a.weights.json",
+               "meta":{{"version":1,"digest":"{digest}"}}}}}},
+            "sweep":[],"batch_sizes":[]}}"#
+    );
+    std::fs::write(dir.join("manifest.json"), text).unwrap();
+    let registry = ModelRegistry::open(&test_config(&dir, "a")).unwrap();
+    let err = registry.infer(None, vec![0.5, 0.5]).unwrap_err().to_string();
+    assert!(err.contains("outputs") || err.contains("shape"), "{err}");
+}
+
+#[test]
+fn unknown_schema_version_rejected_at_open() {
+    let dir = tmp_dir("unknown_schema");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"schema_version":42,"format":1,"seed":0,
+            "dataset":{"num_features":1,"num_classes":1,"train":0,"val":0,"test":0},
+            "models":{},"sweep":[],"batch_sizes":[]}"#,
+    )
+    .unwrap();
+    let err = ModelRegistry::open(&test_config(&dir, "a"))
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("42") && err.contains("supports"), "{err}");
+}
+
+#[test]
+fn corrupt_manifest_is_clear_error() {
+    let dir = tmp_dir("corrupt_manifest");
+    std::fs::write(dir.join("manifest.json"), "{\"schema_version\": 2,").unwrap();
+    let err = ModelRegistry::open(&test_config(&dir, "a"))
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("manifest.json"), "{err}");
+}
+
+#[test]
+fn unknown_model_and_bad_spec_are_clear_errors() {
+    let dir = two_variant_dir("unknown_model");
+    let registry = ModelRegistry::open(&test_config(&dir, "a")).unwrap();
+    let err = registry.infer(Some("zzz"), vec![0.5, 0.5]).unwrap_err().to_string();
+    assert!(err.contains("zzz") && err.contains("not in manifest"), "{err}");
+    let err = registry.infer(Some("a@x"), vec![0.5, 0.5]).unwrap_err().to_string();
+    assert!(err.contains("integer"), "{err}");
+}
+
+#[test]
+fn lru_evicts_least_recent_backend() {
+    let dir = two_variant_dir("lru_evict");
+    let mut cfg = test_config(&dir, "a");
+    cfg.registry.max_loaded = 1;
+    let registry = ModelRegistry::open(&cfg).unwrap();
+
+    registry.infer(Some("a"), vec![0.5, 0.5]).unwrap();
+    let live_a: Vec<bool> = registry.models().iter().map(|m| m.live).collect();
+    assert_eq!(live_a, vec![true, false]); // sorted: a, b
+
+    // loading "b" evicts "a" (cap 1)
+    registry.infer(Some("b"), vec![0.5, 0.5]).unwrap();
+    let live_b: Vec<bool> = registry.models().iter().map(|m| m.live).collect();
+    assert_eq!(live_b, vec![false, true]);
+
+    // evicted model reloads transparently on the next request
+    let (id, _) = registry.infer(Some("a"), vec![0.5, 0.5]).unwrap();
+    assert_eq!(id, "a@1");
+}
+
+#[test]
+fn publish_bootstraps_fresh_registry_and_bumps_versions() {
+    let dir = tmp_dir("publish");
+    ModelManifest::empty().save(&dir).unwrap();
+    let registry = ModelRegistry::open(&test_config(&dir, "a")).unwrap();
+
+    // first publish: version 1, weights land in the content store
+    let src = dir.join("incoming.weights.json");
+    std::fs::write(&src, kan_variant_json("a", 0)).unwrap();
+    let (name, meta) = registry.publish_file(&src, None, None).unwrap();
+    assert_eq!((name.as_str(), meta.version), ("a", 1));
+    let digest1 = meta.digest.clone().unwrap();
+    assert!(registry.store().contains(&digest1));
+    assert_eq!(meta.quant.unwrap().g, 1);
+    assert_eq!(meta.accuracy, Some(0.9));
+
+    // serving works straight out of the store (content-addressed path)
+    let (id, logits) = registry.infer(Some("a"), vec![0.5, 0.5]).unwrap();
+    assert_eq!(id, "a@1");
+    assert!(logits[0] > logits[1]);
+
+    // second publish with different content: version bumps, digest changes,
+    // and the live pipeline is hot-swapped
+    std::fs::write(&src, kan_variant_json("a", 1)).unwrap();
+    let (_, meta2) = registry.publish_file(&src, None, None).unwrap();
+    assert_eq!(meta2.version, 2);
+    assert_ne!(meta2.digest.as_ref().unwrap(), &digest1);
+    let (id, logits) = registry.infer(Some("a"), vec![0.5, 0.5]).unwrap();
+    assert_eq!(id, "a@2");
+    assert!(logits[1] > logits[0]);
+
+    // the on-disk manifest is now schema v2 and a fresh registry agrees
+    let reloaded = ModelManifest::load(&dir).unwrap();
+    assert_eq!(reloaded.schema_version, 2);
+    assert_eq!(reloaded.meta_for("a").version, 2);
+
+    // stale version numbers are refused
+    let err = registry.publish_file(&src, None, Some(2)).unwrap_err().to_string();
+    assert!(err.contains("must be greater"), "{err}");
+}
+
+#[test]
+fn v1_manifest_still_serves() {
+    // backwards compatibility: a flat aot.py-style manifest (no
+    // schema_version, no meta) serves with implicit version 1
+    let dir = tmp_dir("v1_compat");
+    std::fs::write(dir.join("a.weights.json"), kan_variant_json("a", 0)).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format":1,"seed":0,
+            "dataset":{"num_features":2,"num_classes":2,"train":0,"val":0,"test":0},
+            "models":{"a":{"kind":"kan","dims":[2,2],"g":1,"k":1,"num_params":8,
+               "val_acc":0.9,"weights":"a.weights.json"}},
+            "sweep":[],"batch_sizes":[]}"#,
+    )
+    .unwrap();
+    let registry = ModelRegistry::open(&test_config(&dir, "a")).unwrap();
+    let (id, logits) = registry.infer(None, vec![0.5, 0.5]).unwrap();
+    assert_eq!(id, "a@1");
+    assert_eq!(logits.len(), 2);
+}
