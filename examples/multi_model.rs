@@ -14,26 +14,9 @@ use std::sync::Arc;
 
 use kan_edge::config::AppConfig;
 use kan_edge::coordinator::{Dispatch, TcpServer};
+use kan_edge::kan::checkpoint::synthetic_checkpoint_json as kan_variant_json;
 use kan_edge::registry::{ModelManifest, ModelRegistry};
 use kan_edge::util::json::Value;
-
-/// Tiny valid KAN checkpoint (dims [2,2]); `favor_class` decides which
-/// logit the residual path boosts.
-fn kan_variant_json(name: &str, favor_class: usize) -> String {
-    let wb = if favor_class == 0 {
-        "[1.0, 0.0, 1.0, 0.0]"
-    } else {
-        "[0.0, 1.0, 0.0, 1.0]"
-    };
-    format!(
-        r#"{{"name":"{name}","kind":"kan","dims":[2,2],"g":1,"k":1,"n_bits":8,
-            "num_params":8,"quant_test_acc":0.9,
-            "layers":[{{"din":2,"dout":2,"lo":-1.0,"hi":1.0,"ld":2,
-              "sh_lut":[[255,0],[170,85],[128,128]],
-              "coeff_q":[0,0,0,0,0,0,0,0],"coeff_scale":0.01,
-              "wb":{wb}}}]}}"#
-    )
-}
 
 fn ask(addr: std::net::SocketAddr, body: &str) -> Value {
     let conn = std::net::TcpStream::connect(addr).unwrap();

@@ -1,0 +1,113 @@
+//! Protocol v2 walkthrough with the typed client: publish two KAN
+//! variants into a fresh registry, serve them on one endpoint, then
+//! drive it with [`kan_edge::client::KanClient`] — negotiation, control
+//! plane, routed inference, whole-batch submit, and pipelined
+//! submit/poll with out-of-order completion — while a legacy v1
+//! JSON-lines request on the same port still works (auto-detection).
+//!
+//! ```sh
+//! cargo run --release --example v2_client
+//! ```
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+use kan_edge::client::KanClient;
+use kan_edge::config::AppConfig;
+use kan_edge::coordinator::{Dispatch, TcpServer};
+use kan_edge::kan::checkpoint::synthetic_checkpoint_json;
+use kan_edge::registry::{ModelManifest, ModelRegistry};
+use kan_edge::util::json::Value;
+
+fn main() -> kan_edge::Result<()> {
+    // 1. fresh registry with two variants, served on an ephemeral port
+    let dir = std::env::temp_dir().join("kan_edge_v2_client_demo");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    ModelManifest::empty().save(&dir)?;
+    let mut cfg = AppConfig::default();
+    cfg.artifacts.dir = dir.to_string_lossy().into_owned();
+    cfg.artifacts.model = "alpha".into();
+    cfg.server.backend = "digital".into();
+    let registry = ModelRegistry::open(&cfg)?;
+    for (name, favor) in [("alpha", 0), ("beta", 1)] {
+        let src = dir.join(format!("{name}.incoming.json"));
+        std::fs::write(&src, synthetic_checkpoint_json(name, favor))?;
+        registry.publish_file(&src, None, None)?;
+    }
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target)?;
+    println!("serving on {}", server.addr);
+
+    // 2. connect + negotiate
+    let mut client = KanClient::connect(server.addr)?;
+    let info = client.server_info();
+    println!(
+        "negotiated protocol v{} with {} (max_in_flight {})",
+        info.protocol, info.server, info.max_in_flight
+    );
+
+    // 3. control plane: list, inspect, health
+    for m in client.list_models()? {
+        println!("  model {}@{} [{}] live={}", m.name, m.version, m.kind, m.live);
+    }
+    let alpha = client.model_info("alpha")?;
+    println!("  alpha digest: {}", alpha.digest.as_deref().unwrap_or("-"));
+    let (status, live) = client.health()?;
+    println!("  health: {status} ({live} live)");
+
+    // 4. routed inference + whole-batch submit
+    let a = client.infer_model(Some("alpha"), &[0.5, 0.5])?;
+    let b = client.infer_model(Some("beta"), &[0.5, 0.5])?;
+    println!("alpha -> class {} from {}", a.class, a.model);
+    println!("beta  -> class {} from {}", b.class, b.model);
+    let rows: Vec<Vec<f32>> = (0..32).map(|_| vec![0.5, 0.5]).collect();
+    let (model, results) = client.infer_batch(Some("alpha"), rows)?;
+    println!("batch of {} rows served by {model}", results.len());
+
+    // 5. pipelined submit/poll: responses come back in completion order
+    let mut ids = Vec::new();
+    for i in 0..16 {
+        ids.push(client.submit(Some("beta"), &[i as f32 * 0.05, 0.1])?);
+    }
+    let mut completed = 0;
+    while completed < ids.len() {
+        let (id, outcome) = client.poll()?;
+        outcome?;
+        completed += 1;
+        if completed <= 3 {
+            println!("  completion #{completed}: request id {id}");
+        }
+    }
+    println!("pipelined {} requests on one connection", ids.len());
+
+    // 6. the same port still speaks v1 JSON lines (auto-detected)
+    let conn = std::net::TcpStream::connect(server.addr)?;
+    let mut w = conn.try_clone()?;
+    let mut r = BufReader::new(conn);
+    w.write_all(b"{\"model\": \"alpha\", \"features\": [0.5, 0.5]}\n")?;
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    let v = Value::parse(line.trim())?;
+    println!(
+        "v1 line on the same port -> class {} from {}",
+        v.get("class").unwrap().as_i64().unwrap(),
+        v.get("model").unwrap().as_str().unwrap()
+    );
+
+    // 7. metrics: per-model serving reports + wire counters
+    let metrics = client.metrics()?;
+    let wire = metrics.field("wire")?;
+    println!(
+        "wire: v1={} v2={} rows={} in-flight hwm={}",
+        wire.get("v1_requests").unwrap(),
+        wire.get("v2_requests").unwrap(),
+        wire.get("v2_rows").unwrap(),
+        wire.get("in_flight_hwm").unwrap()
+    );
+
+    server.shutdown();
+    Ok(())
+}

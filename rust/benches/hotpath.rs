@@ -33,7 +33,7 @@ impl kan_edge::coordinator::InferBackend for Echo {
 
     fn infer_batch(
         &self,
-        rows: &[Vec<f32>],
+        rows: Vec<Vec<f32>>,
     ) -> kan_edge::Result<Vec<Vec<f32>>> {
         Ok(rows.iter().map(|r| vec![r[0]]).collect())
     }

@@ -1,0 +1,360 @@
+//! Typed Rust client for the kan-edge serving protocol.
+//!
+//! [`KanClient`] speaks protocol v2 (framed JSON with request ids; see
+//! `docs/PROTOCOL.md` and [`crate::coordinator::protocol`]): it sends
+//! the magic preamble, negotiates capabilities with `hello`, and then
+//! offers three usage styles over one connection:
+//!
+//! * **Synchronous calls** — [`KanClient::infer`],
+//!   [`KanClient::infer_batch`], and the control-plane queries
+//!   ([`KanClient::list_models`], [`KanClient::model_info`],
+//!   [`KanClient::metrics`], [`KanClient::health`], [`KanClient::ping`]).
+//! * **Pipelining** — [`KanClient::submit`] fires a request and returns
+//!   its id immediately; [`KanClient::poll`] yields completions in
+//!   whatever order the server finishes them. Keeping several requests
+//!   in flight is what lets the server's dynamic batcher see multi-row
+//!   batches from a single connection.
+//! * **Batch submit** — [`KanClient::infer_batch`] ships whole
+//!   `rows: [[...], ...]` batches in one frame.
+//!
+//! ```no_run
+//! use kan_edge::client::KanClient;
+//!
+//! let mut client = KanClient::connect("127.0.0.1:7777")?;
+//! let out = client.infer(&[0.5, 0.5])?;
+//! println!("class {} from {}", out.class, out.model);
+//! # kan_edge::Result::Ok(())
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::coordinator::protocol::{
+    read_frame, write_frame, FrameRead, ModelSummary, Request, Response, MAGIC,
+};
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Client-side sanity cap on response frames (guards against a corrupt
+/// length header, not against legitimate large results).
+const MAX_RESPONSE_BYTES: usize = 64 << 20;
+
+/// Result of one inference: the resolved `name@version` that served it,
+/// the logits, and the argmax class.
+#[derive(Debug, Clone)]
+pub struct Inference {
+    pub model: String,
+    pub logits: Vec<f32>,
+    pub class: usize,
+}
+
+/// Capabilities the server announced in its `hello` response.
+#[derive(Debug, Clone)]
+pub struct ServerInfo {
+    pub protocol: u32,
+    pub server: String,
+    /// Largest frame payload the server accepts.
+    pub max_frame: usize,
+    /// Pipelining depth per connection before the server applies
+    /// backpressure.
+    pub max_in_flight: usize,
+}
+
+/// A connected v2 client (one TCP connection; not `Sync` — use one per
+/// thread, the server batches across connections).
+pub struct KanClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    info: ServerInfo,
+    next_id: i64,
+    /// Responses read while waiting for a different id (pipelining).
+    completed: BTreeMap<i64, Response>,
+    /// Ids submitted via [`KanClient::submit`] and not yet returned by
+    /// [`KanClient::poll`] — lets a surplus poll fail fast instead of
+    /// blocking forever on a response the server will never send.
+    outstanding: BTreeSet<i64>,
+}
+
+impl KanClient {
+    /// Connect, send the v2 preamble, and negotiate with `hello`.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<KanClient> {
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// Like [`KanClient::connect`] over an already-open stream.
+    pub fn from_stream(stream: TcpStream) -> Result<KanClient> {
+        let writer = stream.try_clone()?;
+        let mut client = KanClient {
+            writer,
+            reader: BufReader::new(stream),
+            info: ServerInfo {
+                protocol: 0,
+                server: String::new(),
+                max_frame: 1 << 20,
+                max_in_flight: 1,
+            },
+            next_id: 1,
+            completed: BTreeMap::new(),
+            outstanding: BTreeSet::new(),
+        };
+        client.writer.write_all(&MAGIC)?;
+        let id = client.fresh_id();
+        let resp =
+            client.call(Request::Hello { id, client: Some("kan-edge-client".into()) })?;
+        match resp {
+            Response::Hello { protocol, server, max_frame, max_in_flight, .. } => {
+                client.info =
+                    ServerInfo { protocol, server, max_frame, max_in_flight };
+                Ok(client)
+            }
+            Response::Error { message, .. } => {
+                Err(Error::Serving(format!("hello rejected: {message}")))
+            }
+            _ => Err(Error::Serving("unexpected hello response".into())),
+        }
+    }
+
+    /// What the server announced during negotiation.
+    pub fn server_info(&self) -> &ServerInfo {
+        &self.info
+    }
+
+    /// Liveness round-trip.
+    pub fn ping(&mut self) -> Result<()> {
+        let id = self.fresh_id();
+        match self.call(Request::Ping { id })? {
+            Response::Pong { .. } => Ok(()),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Infer against the endpoint's default model.
+    pub fn infer(&mut self, features: &[f32]) -> Result<Inference> {
+        self.infer_model(None, features)
+    }
+
+    /// Infer against `model` (`"name"` or pinned `"name@version"`).
+    pub fn infer_model(
+        &mut self,
+        model: Option<&str>,
+        features: &[f32],
+    ) -> Result<Inference> {
+        let id = self.fresh_id();
+        let resp = self.call(Request::Infer {
+            id,
+            model: model.map(str::to_string),
+            features: features.to_vec(),
+        })?;
+        into_inference(resp)
+    }
+
+    /// Submit a whole batch in one frame; returns the resolved model id
+    /// and one `(logits, class)` pair per row, in row order. The server
+    /// feeds the rows to the model's dynamic batcher back-to-back.
+    /// Takes the rows by value — batches can be large and are only
+    /// serialized, never kept.
+    pub fn infer_batch(
+        &mut self,
+        model: Option<&str>,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<(Vec<f32>, usize)>)> {
+        let id = self.fresh_id();
+        let resp = self.call(Request::InferBatch {
+            id,
+            model: model.map(str::to_string),
+            rows,
+        })?;
+        match resp {
+            Response::InferBatch { model, results, .. } => Ok((model, results)),
+            Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Pipelined submit: send an `infer` request and return its id
+    /// without waiting. Pair with [`KanClient::poll`]; respect
+    /// [`ServerInfo::max_in_flight`] or the server will backpressure
+    /// the connection.
+    pub fn submit(&mut self, model: Option<&str>, features: &[f32]) -> Result<i64> {
+        let id = self.fresh_id();
+        self.send(&Request::Infer {
+            id,
+            model: model.map(str::to_string),
+            features: features.to_vec(),
+        })?;
+        self.outstanding.insert(id);
+        Ok(id)
+    }
+
+    /// Next completed inference (not submission order). Returns the
+    /// request id and its outcome. Responses are yielded as they are
+    /// read off the wire — i.e. in server completion order — except
+    /// that completions stashed while an interleaved synchronous call
+    /// waited for its own id drain first, in ascending-id order.
+    /// Polling with no submissions outstanding is an error (the server
+    /// owes nothing; blocking would hang forever).
+    pub fn poll(&mut self) -> Result<(i64, Result<Inference>)> {
+        let stashed = self.completed.keys().next().copied();
+        if let Some(id) = stashed {
+            let resp = self.completed.remove(&id).expect("key just observed");
+            self.outstanding.remove(&id);
+            return Ok((id, into_inference(resp)));
+        }
+        if self.outstanding.is_empty() {
+            // every submitted id has been returned: the server owes no
+            // response, so a socket read would block forever
+            return Err(Error::Serving("poll() with no requests in flight".into()));
+        }
+        let resp = self.read_response()?;
+        match resp.id() {
+            Some(id) => {
+                self.outstanding.remove(&id);
+                Ok((id, into_inference(resp)))
+            }
+            None => match resp {
+                Response::Error { code, message, .. } => Err(Error::Serving(format!(
+                    "connection error [{}]: {message}",
+                    code.as_str()
+                ))),
+                other => Err(unexpected(other)),
+            },
+        }
+    }
+
+    /// Registered models behind the endpoint (control plane).
+    pub fn list_models(&mut self) -> Result<Vec<ModelSummary>> {
+        let id = self.fresh_id();
+        match self.call(Request::ListModels { id })? {
+            Response::ModelList { models, .. } => Ok(models),
+            Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Detail for one registered model.
+    pub fn model_info(&mut self, name: &str) -> Result<ModelSummary> {
+        let id = self.fresh_id();
+        match self.call(Request::ModelInfo { id, model: name.to_string() })? {
+            Response::ModelInfo { model, .. } => Ok(model),
+            Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Serving + wire metrics snapshot (free-form JSON report: a
+    /// `"models"` object keyed by serving id and a `"wire"` section).
+    pub fn metrics(&mut self) -> Result<Value> {
+        let id = self.fresh_id();
+        match self.call(Request::Metrics { id })? {
+            Response::Metrics { body, .. } => Ok(body),
+            Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Endpoint health: `(status, live model count)`.
+    pub fn health(&mut self) -> Result<(String, usize)> {
+        let id = self.fresh_id();
+        match self.call(Request::Health { id })? {
+            Response::Health { status, models_live, .. } => Ok((status, models_live)),
+            Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    // ---- plumbing --------------------------------------------------------
+
+    fn fresh_id(&mut self) -> i64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn send(&mut self, req: &Request) -> Result<()> {
+        let payload = req.to_value().to_string();
+        // fail oversized requests client-side: the server would answer
+        // too_large and drop the connection, losing every other request
+        // pipelined on it
+        if payload.len() > self.info.max_frame {
+            return Err(Error::Serving(format!(
+                "request of {} bytes exceeds the server's max_frame of {} bytes \
+                 (split the batch)",
+                payload.len(),
+                self.info.max_frame
+            )));
+        }
+        write_frame(&mut self.writer, payload.as_bytes())?;
+        Ok(())
+    }
+
+    fn read_response(&mut self) -> Result<Response> {
+        // the server's max_frame bounds *requests*; responses (e.g. a
+        // large batch result) are not limited by it, so the client reads
+        // with its own generous sanity cap against corrupt headers
+        let cap = self.info.max_frame.max(MAX_RESPONSE_BYTES);
+        match read_frame(&mut self.reader, cap)? {
+            FrameRead::Frame(p) => Response::from_bytes(&p),
+            FrameRead::Eof => Err(Error::Serving("connection closed by server".into())),
+            FrameRead::TooLarge(n) => {
+                // the payload was not consumed, so the frame stream can
+                // never be resynced — poison the connection so later
+                // calls fail fast instead of reading payload bytes as
+                // frame headers
+                let _ = self.writer.shutdown(std::net::Shutdown::Both);
+                Err(Error::Serving(format!(
+                    "server frame of {n} bytes exceeds the client cap; \
+                     connection closed (stream cannot resync)"
+                )))
+            }
+        }
+    }
+
+    /// Send and wait for the response with the same id, stashing any
+    /// other completions for [`KanClient::poll`].
+    fn call(&mut self, req: Request) -> Result<Response> {
+        let id = req.id();
+        self.send(&req)?;
+        if let Some(resp) = self.completed.remove(&id) {
+            return Ok(resp);
+        }
+        loop {
+            let resp = self.read_response()?;
+            match resp.id() {
+                Some(rid) if rid == id => return Ok(resp),
+                Some(rid) => {
+                    self.completed.insert(rid, resp);
+                }
+                None => match resp {
+                    Response::Error { code, message, .. } => {
+                        return Err(Error::Serving(format!(
+                            "connection error [{}]: {message}",
+                            code.as_str()
+                        )))
+                    }
+                    other => return Err(unexpected(other)),
+                },
+            }
+        }
+    }
+}
+
+fn into_inference(resp: Response) -> Result<Inference> {
+    match resp {
+        Response::Infer { model, logits, class, .. } => {
+            Ok(Inference { model, logits, class })
+        }
+        Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+        other => Err(unexpected(other)),
+    }
+}
+
+/// Uniform client-side rendering of a wire error: every method keeps
+/// the machine-readable code in the message as `[code] ...`.
+fn wire_error(code: crate::coordinator::protocol::ErrorCode, message: &str) -> Error {
+    Error::Serving(format!("[{}] {message}", code.as_str()))
+}
+
+fn unexpected(resp: Response) -> Error {
+    Error::Serving(format!("unexpected response: {}", resp.to_value()))
+}

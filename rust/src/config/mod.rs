@@ -50,10 +50,20 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Backend: "pjrt" (AOT graph), "digital" (rust reference) or "acim".
     pub backend: String,
+    /// Max bytes in one wire request (v1 line or v2 frame payload); an
+    /// oversized request gets a structured `too_large` error and only
+    /// that connection is dropped.
+    pub max_request_bytes: usize,
+    /// Max concurrently dispatched v2 requests per connection
+    /// (pipelining depth); the connection reader blocks once reached.
+    pub max_in_flight: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
+        // wire limits share one source of truth with servers spawned
+        // without a config (TcpServer::spawn uses TcpLimits::default)
+        let wire = crate::coordinator::tcp::TcpLimits::default();
         Self {
             max_batch: 32,
             batch_deadline_us: 500,
@@ -62,6 +72,8 @@ impl Default for ServerConfig {
             // without the pjrt feature the AOT path is a stub, so the
             // rust integer reference is the sensible default
             backend: if cfg!(feature = "pjrt") { "pjrt" } else { "digital" }.into(),
+            max_request_bytes: wire.max_request_bytes,
+            max_in_flight: wire.max_in_flight,
         }
     }
 }
@@ -176,6 +188,8 @@ impl AppConfig {
             get_usize(s, "queue_depth", &mut self.server.queue_depth);
             get_usize(s, "workers", &mut self.server.workers);
             get_string(s, "backend", &mut self.server.backend);
+            get_usize(s, "max_request_bytes", &mut self.server.max_request_bytes);
+            get_usize(s, "max_in_flight", &mut self.server.max_in_flight);
         }
         if let Some(r) = v.get("registry") {
             get_usize(r, "max_loaded", &mut self.registry.max_loaded);
@@ -259,6 +273,12 @@ impl AppConfig {
                 self.server.backend
             )));
         }
+        if self.server.max_request_bytes == 0 {
+            return Err(Error::Config("server.max_request_bytes must be > 0".into()));
+        }
+        if self.server.max_in_flight == 0 {
+            return Err(Error::Config("server.max_in_flight must be > 0".into()));
+        }
         if self.registry.max_loaded == 0 {
             return Err(Error::Config("registry.max_loaded must be > 0".into()));
         }
@@ -301,6 +321,26 @@ mod tests {
         assert_eq!(cfg.hardware.acim.array.rows, 512);
         assert!(!cfg.hardware.acim.irdrop);
         assert_eq!(cfg.hardware.tech.vdd, 0.9);
+    }
+
+    #[test]
+    fn server_wire_limits_parse_and_validate() {
+        let mut cfg = AppConfig::default();
+        cfg.apply(
+            &Value::parse(
+                r#"{"server": {"max_request_bytes": 4096, "max_in_flight": 8}}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(cfg.server.max_request_bytes, 4096);
+        assert_eq!(cfg.server.max_in_flight, 8);
+        cfg.validate().unwrap();
+
+        cfg.server.max_request_bytes = 0;
+        assert!(cfg.validate().is_err());
+        cfg.server.max_request_bytes = 4096;
+        cfg.server.max_in_flight = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -27,8 +27,17 @@ pub trait InferBackend: Send + Sync {
     fn name(&self) -> &str;
     /// Number of output logits per row.
     fn output_dim(&self) -> usize;
+    /// Expected features per row, when the backend knows it. Used for
+    /// admission-time validation: one malformed row must be rejected at
+    /// submit, before it can poison a shared dynamic batch that also
+    /// carries other clients' requests.
+    fn input_dim(&self) -> Option<usize> {
+        None
+    }
     /// Run a batch of feature rows; returns one logit vector per row.
-    fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+    /// Takes ownership of the rows so actor-style backends (PJRT) can
+    /// move them across their thread boundary without copying.
+    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>>;
 }
 
 type PjrtJob = (Vec<Vec<f32>>, SyncSender<Result<Vec<Vec<f32>>>>);
@@ -37,6 +46,7 @@ type PjrtJob = (Vec<Vec<f32>>, SyncSender<Result<Vec<Vec<f32>>>>);
 pub struct PjrtBackend {
     tx: Mutex<SyncSender<PjrtJob>>,
     model: String,
+    input_dim: usize,
     output_dim: usize,
 }
 
@@ -79,7 +89,7 @@ impl PjrtBackend {
         ready_rx
             .recv()
             .map_err(|_| Error::Runtime("pjrt actor died during startup".into()))??;
-        Ok(Self { tx: Mutex::new(job_tx), model, output_dim })
+        Ok(Self { tx: Mutex::new(job_tx), model, input_dim, output_dim })
     }
 }
 
@@ -119,11 +129,16 @@ impl InferBackend for PjrtBackend {
         self.output_dim
     }
 
-    fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    fn input_dim(&self) -> Option<usize> {
+        Some(self.input_dim)
+    }
+
+    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
         let (reply_tx, reply_rx) = sync_channel(1);
         {
+            // ownership of the rows moves through the channel; no copy
             let tx = self.tx.lock().unwrap();
-            tx.send((rows.to_vec(), reply_tx))
+            tx.send((rows, reply_tx))
                 .map_err(|_| Error::Runtime("pjrt actor gone".into()))?;
         }
         reply_rx
@@ -146,13 +161,17 @@ impl InferBackend for DigitalBackend {
         self.model.output_dim()
     }
 
-    fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    fn input_dim(&self) -> Option<usize> {
+        Some(self.model.input_dim())
+    }
+
+    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
         // flatten once and run the batch path: one allocation set per layer
         // instead of per row (EXPERIMENTS.md §Perf: +9% serving throughput)
         let din = self.model.input_dim();
         let dout = self.model.output_dim();
         let mut flat = Vec::with_capacity(rows.len() * din);
-        for r in rows {
+        for r in &rows {
             if r.len() != din {
                 return Err(crate::error::Error::Shape(format!(
                     "row has {} features, expected {din}",
@@ -192,7 +211,11 @@ impl InferBackend for AcimBackend {
         self.model.layers.last().map(|l| l.dout).unwrap_or(0)
     }
 
-    fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    fn input_dim(&self) -> Option<usize> {
+        self.model.layers.first().map(|l| l.din)
+    }
+
+    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
         let mut noise = self.noise.lock().unwrap();
         Ok(rows
             .iter()
@@ -221,7 +244,11 @@ impl InferBackend for MlpBackend {
         *self.model.dims.last().unwrap()
     }
 
-    fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    fn input_dim(&self) -> Option<usize> {
+        self.model.dims.first().copied()
+    }
+
+    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
         Ok(rows
             .iter()
             .map(|r| self.model.forward(r).iter().map(|&v| v as f32).collect())

@@ -102,13 +102,14 @@ pub fn run_batcher(rx: Receiver<Request>, tx: SyncSender<Batch>, policy: BatchPo
     }
 }
 
-/// Admit a request or hand it back (admission control on queue depth).
-pub fn try_admit(tx: &SyncSender<Request>, req: Request) -> std::result::Result<(), Request> {
-    match tx.try_send(req) {
-        Ok(()) => Ok(()),
-        Err(TrySendError::Full(r)) => Err(r),
-        Err(TrySendError::Disconnected(r)) => Err(r),
-    }
+/// Admit a request or hand it back. The error distinguishes a full
+/// queue (admission control — retryable) from a disconnected channel
+/// (service shut down — not), so callers report the right condition.
+pub fn try_admit(
+    tx: &SyncSender<Request>,
+    req: Request,
+) -> std::result::Result<(), TrySendError<Request>> {
+    tx.try_send(req)
 }
 
 /// Standard rejection reply for a failed admission.
@@ -184,10 +185,24 @@ mod tests {
         let (r1, _rx1) = mk_request(1.0);
         assert!(try_admit(&req_tx, r1).is_ok());
         let (r2, rx2) = mk_request(2.0);
-        let rejected = try_admit(&req_tx, r2).unwrap_err();
+        let rejected = match try_admit(&req_tx, r2) {
+            Err(TrySendError::Full(r)) => r,
+            other => panic!("expected Full, got {:?}", other.is_ok()),
+        };
         reject(rejected);
         let resp = rx2.recv().unwrap();
         assert!(resp.is_err());
+    }
+
+    #[test]
+    fn admission_distinguishes_shutdown_from_full() {
+        let (req_tx, req_rx) = sync_channel(1);
+        drop(req_rx);
+        let (r, _rx) = mk_request(1.0);
+        assert!(matches!(
+            try_admit(&req_tx, r),
+            Err(TrySendError::Disconnected(_))
+        ));
     }
 
     #[test]

@@ -11,8 +11,11 @@
 //! the rollup stays complete across hot-reloads.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Value};
 
 /// Aggregated serving metrics.
 #[derive(Debug, Default)]
@@ -50,17 +53,18 @@ impl Inner {
         };
     }
 
-    fn report(&self) -> MetricsReport {
-        let mut lat = self.latencies_us.clone();
-        lat.sort_unstable();
-        let mut qw = self.queue_waits_us.clone();
-        qw.sort_unstable();
+    /// Consumes the snapshot so the reservoirs sort in place (no second
+    /// copy on top of the one `snapshot()` took under the lock).
+    fn report(mut self) -> MetricsReport {
+        self.latencies_us.sort_unstable();
+        self.queue_waits_us.sort_unstable();
         let wall = match (self.started, self.finished) {
             (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
             _ => 0.0,
         };
         MetricsReport {
             requests: self.requests,
+            batches: self.batch_sizes.len() as u64,
             rejected: self.rejected,
             errors: self.errors,
             throughput_rps: if wall > 0.0 {
@@ -68,9 +72,9 @@ impl Inner {
             } else {
                 0.0
             },
-            latency_p50_us: percentile(&lat, 0.50),
-            latency_p99_us: percentile(&lat, 0.99),
-            queue_wait_p50_us: percentile(&qw, 0.50),
+            latency_p50_us: percentile(&self.latencies_us, 0.50),
+            latency_p99_us: percentile(&self.latencies_us, 0.99),
+            queue_wait_p50_us: percentile(&self.queue_waits_us, 0.50),
             mean_batch: if self.batch_sizes.is_empty() {
                 0.0
             } else {
@@ -85,6 +89,9 @@ impl Inner {
 #[derive(Debug, Clone)]
 pub struct MetricsReport {
     pub requests: u64,
+    /// Number of closed batches executed (requests / batches = exact
+    /// mean occupancy over any interval, via deltas).
+    pub batches: u64,
     pub rejected: u64,
     pub errors: u64,
     pub throughput_rps: f64,
@@ -92,6 +99,23 @@ pub struct MetricsReport {
     pub latency_p99_us: u64,
     pub queue_wait_p50_us: u64,
     pub mean_batch: f64,
+}
+
+impl MetricsReport {
+    /// JSON shape served by the v2 `metrics` verb.
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("requests", Value::Int(self.requests as i64)),
+            ("batches", Value::Int(self.batches as i64)),
+            ("rejected", Value::Int(self.rejected as i64)),
+            ("errors", Value::Int(self.errors as i64)),
+            ("throughput_rps", Value::Float(self.throughput_rps)),
+            ("latency_p50_us", Value::Int(self.latency_p50_us as i64)),
+            ("latency_p99_us", Value::Int(self.latency_p99_us as i64)),
+            ("queue_wait_p50_us", Value::Int(self.queue_wait_p50_us as i64)),
+            ("mean_batch", Value::Float(self.mean_batch)),
+        ])
+    }
 }
 
 impl Metrics {
@@ -122,7 +146,10 @@ impl Metrics {
     }
 
     pub fn report(&self) -> MetricsReport {
-        self.inner.lock().unwrap().report()
+        // snapshot under the lock, sort outside it: the v2 `metrics`
+        // verb makes reports remotely triggerable, and sorting a large
+        // reservoir must not stall `record_request` on the serving path
+        self.snapshot().report()
     }
 
     fn snapshot(&self) -> Inner {
@@ -152,13 +179,21 @@ impl MetricsHub {
             .clone()
     }
 
-    /// Per-model reports, sorted by model id.
+    /// Per-model reports, sorted by model id. The hub lock is held only
+    /// to clone the `Arc`s — the per-model snapshot/sort (O(reservoir))
+    /// runs after it is released, so a remote `metrics` request cannot
+    /// stall `for_model` (lazy loads, hot reloads).
     pub fn reports(&self) -> Vec<(String, MetricsReport)> {
-        self.models
+        let handles: Vec<(String, Arc<Metrics>)> = self
+            .models
             .lock()
             .unwrap()
             .iter()
-            .map(|(id, m)| (id.clone(), m.report()))
+            .map(|(id, m)| (id.clone(), m.clone()))
+            .collect();
+        handles
+            .into_iter()
+            .map(|(id, m)| (id, m.report()))
             .collect()
     }
 
@@ -176,6 +211,88 @@ impl MetricsHub {
             acc.merge(s);
         }
         acc.report()
+    }
+}
+
+/// Transport-level counters for the TCP endpoint: per-protocol-version
+/// request counts, connection lifecycle, and the per-connection
+/// pipelining high-water mark. One instance per
+/// [`TcpServer`](super::tcp::TcpServer); surfaced over the wire by the
+/// v2 `metrics` verb (the `"wire"` section).
+#[derive(Debug, Default)]
+pub struct WireMetrics {
+    v1_requests: AtomicU64,
+    v2_requests: AtomicU64,
+    v2_rows: AtomicU64,
+    v2_control: AtomicU64,
+    connections_opened: AtomicU64,
+    connections_closed: AtomicU64,
+    in_flight_hwm: AtomicU64,
+    oversized: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+impl WireMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_v1_request(&self) {
+        self.v1_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One v2 inference request carrying `rows` feature rows (1 for
+    /// `infer`, the batch size for `infer_batch`).
+    pub fn record_v2_infer(&self, rows: u64) {
+        self.v2_requests.fetch_add(1, Ordering::Relaxed);
+        self.v2_rows.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    pub fn record_v2_control(&self) {
+        self.v2_control.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn connection_opened(&self) {
+        self.connections_opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn connection_closed(&self) {
+        self.connections_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an observed per-connection in-flight depth; keeps the max.
+    pub fn observe_in_flight(&self, depth: u64) {
+        self.in_flight_hwm.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn record_oversized(&self) {
+        self.oversized.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_protocol_error(&self) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn active_connections(&self) -> u64 {
+        let opened = self.connections_opened.load(Ordering::Relaxed);
+        let closed = self.connections_closed.load(Ordering::Relaxed);
+        opened.saturating_sub(closed)
+    }
+
+    /// JSON shape of the `"wire"` section of the `metrics` verb.
+    pub fn to_value(&self) -> Value {
+        let int = |a: &AtomicU64| Value::Int(a.load(Ordering::Relaxed) as i64);
+        obj(vec![
+            ("v1_requests", int(&self.v1_requests)),
+            ("v2_requests", int(&self.v2_requests)),
+            ("v2_rows", int(&self.v2_rows)),
+            ("v2_control", int(&self.v2_control)),
+            ("connections_total", int(&self.connections_opened)),
+            ("connections_active", Value::Int(self.active_connections() as i64)),
+            ("in_flight_hwm", int(&self.in_flight_hwm)),
+            ("oversized", int(&self.oversized)),
+            ("protocol_errors", int(&self.protocol_errors)),
+        ])
     }
 }
 
@@ -241,6 +358,43 @@ mod tests {
         assert_eq!(agg.errors, 1);
         // merged reservoir: p50 of [100,100,100,900] is 100, not 500
         assert_eq!(agg.latency_p50_us, 100);
+    }
+
+    #[test]
+    fn report_counts_batches() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(6);
+        let r = m.report();
+        assert_eq!(r.batches, 2);
+        let v = r.to_value();
+        assert_eq!(v.get("batches").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(v.get("mean_batch").unwrap().as_f64().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn wire_metrics_counters() {
+        let w = WireMetrics::new();
+        w.connection_opened();
+        w.connection_opened();
+        w.connection_closed();
+        w.record_v1_request();
+        w.record_v2_infer(1);
+        w.record_v2_infer(16);
+        w.record_v2_control();
+        w.observe_in_flight(3);
+        w.observe_in_flight(9);
+        w.observe_in_flight(5);
+        w.record_oversized();
+        let v = w.to_value();
+        assert_eq!(v.get("v1_requests").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(v.get("v2_requests").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(v.get("v2_rows").unwrap().as_i64().unwrap(), 17);
+        assert_eq!(v.get("v2_control").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(v.get("connections_total").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(v.get("connections_active").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(v.get("in_flight_hwm").unwrap().as_i64().unwrap(), 9);
+        assert_eq!(v.get("oversized").unwrap().as_i64().unwrap(), 1);
     }
 
     #[test]

@@ -6,22 +6,32 @@
 //! [`metrics`] throughout and [`router`] turning config + artifacts into a
 //! running [`server::InferenceService`].
 //!
+//! The wire surface is split in two layers: [`protocol`] defines the
+//! typed v2 requests/responses and the frame codec, and [`tcp`] is the
+//! transport — one port auto-detecting legacy v1 JSON lines and framed,
+//! pipelined v2 per connection (`docs/PROTOCOL.md` is the spec). The
+//! matching typed client lives in [`crate::client`].
+//!
 //! Multi-model serving layers on top: [`crate::registry::ModelRegistry`]
 //! owns one such pipeline per live `name@version` variant and implements
 //! [`server::Dispatch`], which the [`tcp`] endpoint routes to via the
-//! request's optional `"model"` field. Metrics are per model
-//! ([`metrics::MetricsHub`]) with an exact aggregate rollup.
+//! request's optional `"model"` field — plus the v2 control plane
+//! (`list_models`, `model_info`, `metrics`, `health`). Metrics are per
+//! model ([`metrics::MetricsHub`]) with an exact aggregate rollup, and
+//! per transport ([`metrics::WireMetrics`]).
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod protocol;
 pub mod router;
 pub mod server;
 pub mod tcp;
 
 pub use backend::{AcimBackend, DigitalBackend, InferBackend, MlpBackend, PjrtBackend};
 pub use batcher::{Batch, BatchPolicy, Request};
-pub use metrics::{Metrics, MetricsHub, MetricsReport};
-pub use router::{build_acim, build_acim_with_calib, build_backend, serve_options};
+pub use metrics::{Metrics, MetricsHub, MetricsReport, WireMetrics};
+pub use protocol::{ErrorCode, ModelSummary};
+pub use router::{build_acim, build_acim_with_calib, build_backend, serve_options, tcp_limits};
 pub use server::{Dispatch, InferenceService, ServeOptions};
-pub use tcp::TcpServer;
+pub use tcp::{TcpLimits, TcpServer};

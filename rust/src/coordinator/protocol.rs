@@ -1,0 +1,825 @@
+//! Protocol v2: the framed, pipelined serving wire format.
+//!
+//! A v2 connection opens with the 4-byte [`MAGIC`] preamble (`KAN2`);
+//! everything after it, in both directions, is a stream of frames: a
+//! 4-byte big-endian payload length followed by that many bytes of UTF-8
+//! JSON. Every request carries a client-chosen integer `id` and an `op`
+//! verb; every response echoes the `id`, so responses may arrive out of
+//! order relative to submission (the server dispatches inference
+//! concurrently per connection). The full wire specification — v1
+//! JSON-lines included — lives in `docs/PROTOCOL.md`.
+//!
+//! This module is the *typed* layer: the frame codec ([`read_frame`] /
+//! [`write_frame`]) plus [`Request`] / [`Response`] enums with exact
+//! JSON mappings, shared by the server ([`super::tcp`]) and the client
+//! ([`crate::client::KanClient`]).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use crate::error::Error;
+use crate::util::json::{arr, obj, Value};
+
+/// Connection preamble selecting protocol v2 (v1 lines start with `{`).
+pub const MAGIC: [u8; 4] = *b"KAN2";
+
+/// Protocol version announced in the `hello` response.
+pub const PROTOCOL_VERSION: u32 = 2;
+
+// ---- frame codec ----------------------------------------------------------
+
+/// Outcome of reading one frame off the wire.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete frame payload.
+    Frame(Vec<u8>),
+    /// Clean end of stream (EOF before any header byte).
+    Eof,
+    /// Header declared a payload larger than the limit; the payload was
+    /// *not* consumed, so the stream cannot be resynchronized — the
+    /// caller must drop the connection after reporting the error.
+    TooLarge(usize),
+}
+
+/// Read one length-prefixed frame. EOF mid-header or mid-payload is an
+/// `UnexpectedEof` error (a truncated frame), unlike the clean
+/// [`FrameRead::Eof`] before any byte.
+pub fn read_frame(r: &mut impl Read, max_frame: usize) -> std::io::Result<FrameRead> {
+    let mut header = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        // retry EINTR like read_exact does for the payload below; a
+        // signal must not tear down a healthy connection mid-header
+        let n = match r.read(&mut header[got..]) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if n == 0 {
+            if got == 0 {
+                return Ok(FrameRead::Eof);
+            }
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "truncated frame header",
+            ));
+        }
+        got += n;
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > max_frame {
+        return Ok(FrameRead::TooLarge(len));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(FrameRead::Frame(payload))
+}
+
+/// Write one length-prefixed frame and flush. Header and payload are
+/// assembled into a single buffer so each frame is one write syscall
+/// (TcpStreams here are unbuffered, and a separate 4-byte header write
+/// interacts badly with Nagle + delayed ACKs).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    let len = u32::try_from(payload.len()).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, "frame payload too large")
+    })?;
+    let mut frame = Vec::with_capacity(payload.len() + 4);
+    frame.extend_from_slice(&len.to_be_bytes());
+    frame.extend_from_slice(payload);
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+// ---- error codes ----------------------------------------------------------
+
+/// Machine-readable wire error codes (the `code` field of an error
+/// response).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed request (bad JSON, missing fields, wrong types).
+    BadRequest,
+    /// Unknown model / verb target.
+    NotFound,
+    /// Line or frame exceeded `server.max_request_bytes`.
+    TooLarge,
+    /// Admission control rejected the request (queue full).
+    Overloaded,
+    /// Unknown `op`.
+    Unsupported,
+    /// Anything else server-side.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::TooLarge => "too_large",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Unsupported => "unsupported",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> ErrorCode {
+        match s {
+            "bad_request" => ErrorCode::BadRequest,
+            "not_found" => ErrorCode::NotFound,
+            "too_large" => ErrorCode::TooLarge,
+            "overloaded" => ErrorCode::Overloaded,
+            "unsupported" => ErrorCode::Unsupported,
+            _ => ErrorCode::Internal,
+        }
+    }
+}
+
+/// Map a crate error onto a wire error code. Heuristic on the stable
+/// message wording (asserted by the error-type tests), since the crate
+/// error keeps transport-agnostic variants.
+pub fn code_for(e: &Error) -> ErrorCode {
+    match e {
+        Error::Serving(m) if m.contains("queue full") => ErrorCode::Overloaded,
+        Error::Serving(m) if m.contains("single model") => ErrorCode::NotFound,
+        // the worker pool re-wraps backend errors as Serving with the
+        // original message; a shape mismatch is the client's fault
+        Error::Serving(m) if m.contains("shape mismatch") => ErrorCode::BadRequest,
+        Error::Registry(m) if m.contains("digest mismatch") => ErrorCode::Internal,
+        Error::Registry(_) => ErrorCode::NotFound,
+        Error::Json(_) | Error::Shape(_) | Error::Config(_) => ErrorCode::BadRequest,
+        _ => ErrorCode::Internal,
+    }
+}
+
+/// A request that could not be turned into a [`Request`]: carries the id
+/// when one was extractable so the error response still correlates.
+#[derive(Debug)]
+pub struct WireError {
+    pub id: Option<i64>,
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    fn bad(id: Option<i64>, message: impl Into<String>) -> Self {
+        Self { id, code: ErrorCode::BadRequest, message: message.into() }
+    }
+
+    pub fn into_response(self) -> Response {
+        Response::Error { id: self.id, code: self.code, message: self.message }
+    }
+}
+
+// ---- model summaries ------------------------------------------------------
+
+/// Control-plane summary of one registered model, as exposed by the
+/// `list_models` / `model_info` verbs (and
+/// [`Dispatch::model_summaries`](super::server::Dispatch::model_summaries)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSummary {
+    pub name: String,
+    pub version: u32,
+    pub kind: String,
+    pub dims: Vec<usize>,
+    pub num_params: usize,
+    /// Whether a serving pipeline is currently loaded for it.
+    pub live: bool,
+    pub accuracy: Option<f64>,
+    pub digest: Option<String>,
+}
+
+impl ModelSummary {
+    pub fn to_value(&self) -> Value {
+        let mut fields = vec![
+            ("name", Value::Str(self.name.clone())),
+            ("version", Value::Int(self.version as i64)),
+            ("kind", Value::Str(self.kind.clone())),
+            ("dims", arr(self.dims.iter().map(|&d| Value::Int(d as i64)).collect())),
+            ("num_params", Value::Int(self.num_params as i64)),
+            ("live", Value::Bool(self.live)),
+        ];
+        if let Some(a) = self.accuracy {
+            fields.push(("accuracy", Value::Float(a)));
+        }
+        if let Some(d) = &self.digest {
+            fields.push(("digest", Value::Str(d.clone())));
+        }
+        obj(fields)
+    }
+
+    pub fn from_value(v: &Value) -> crate::error::Result<ModelSummary> {
+        let dims = v
+            .req_array("dims")?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| Error::Json("'dims': non-integer element".into()))
+            })
+            .collect::<crate::error::Result<Vec<usize>>>()?;
+        Ok(ModelSummary {
+            name: v.req_str("name")?.to_string(),
+            version: v.req_usize("version")? as u32,
+            kind: v.req_str("kind")?.to_string(),
+            dims,
+            num_params: v.req_usize("num_params")?,
+            live: v.get("live").and_then(|b| b.as_bool()).unwrap_or(false),
+            accuracy: v.get("accuracy").and_then(|a| a.as_f64()),
+            digest: v.get("digest").and_then(|d| d.as_str()).map(str::to_string),
+        })
+    }
+}
+
+// ---- requests -------------------------------------------------------------
+
+/// A typed v2 request. Every variant carries the client-chosen `id` the
+/// response must echo.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Capability / version negotiation (optional but recommended first
+    /// request on a connection).
+    Hello { id: i64, client: Option<String> },
+    /// Liveness round-trip.
+    Ping { id: i64 },
+    /// One feature vector; `model` routes like v1's `"model"` field.
+    Infer { id: i64, model: Option<String>, features: Vec<f32> },
+    /// A whole batch of rows, resolved once and fed to the model's
+    /// dynamic batcher back-to-back.
+    InferBatch { id: i64, model: Option<String>, rows: Vec<Vec<f32>> },
+    /// Registered models (control plane).
+    ListModels { id: i64 },
+    /// Detail for one registered model.
+    ModelInfo { id: i64, model: String },
+    /// Serving + wire metrics snapshot.
+    Metrics { id: i64 },
+    /// Endpoint health.
+    Health { id: i64 },
+}
+
+impl Request {
+    pub fn id(&self) -> i64 {
+        match self {
+            Request::Hello { id, .. }
+            | Request::Ping { id }
+            | Request::Infer { id, .. }
+            | Request::InferBatch { id, .. }
+            | Request::ListModels { id }
+            | Request::ModelInfo { id, .. }
+            | Request::Metrics { id }
+            | Request::Health { id } => *id,
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        fn base(id: i64, op: &str) -> Vec<(&str, Value)> {
+            vec![("id", Value::Int(id)), ("op", Value::Str(op.to_string()))]
+        }
+        fn floats(xs: &[f32]) -> Value {
+            arr(xs.iter().map(|&v| Value::Float(v as f64)).collect())
+        }
+        match self {
+            Request::Hello { id, client } => {
+                let mut fields = base(*id, "hello");
+                if let Some(c) = client {
+                    fields.push(("client", Value::Str(c.clone())));
+                }
+                obj(fields)
+            }
+            Request::Ping { id } => obj(base(*id, "ping")),
+            Request::Infer { id, model, features } => {
+                let mut fields = base(*id, "infer");
+                if let Some(m) = model {
+                    fields.push(("model", Value::Str(m.clone())));
+                }
+                fields.push(("features", floats(features)));
+                obj(fields)
+            }
+            Request::InferBatch { id, model, rows } => {
+                let mut fields = base(*id, "infer_batch");
+                if let Some(m) = model {
+                    fields.push(("model", Value::Str(m.clone())));
+                }
+                fields.push(("rows", arr(rows.iter().map(|r| floats(r)).collect())));
+                obj(fields)
+            }
+            Request::ListModels { id } => obj(base(*id, "list_models")),
+            Request::ModelInfo { id, model } => {
+                let mut fields = base(*id, "model_info");
+                fields.push(("model", Value::Str(model.clone())));
+                obj(fields)
+            }
+            Request::Metrics { id } => obj(base(*id, "metrics")),
+            Request::Health { id } => obj(base(*id, "health")),
+        }
+    }
+
+    /// Parse a frame payload (UTF-8 JSON) into a typed request.
+    pub fn from_bytes(payload: &[u8]) -> std::result::Result<Request, WireError> {
+        let text = std::str::from_utf8(payload)
+            .map_err(|_| WireError::bad(None, "frame payload is not UTF-8"))?;
+        let v = Value::parse(text)
+            .map_err(|e| WireError::bad(None, format!("bad request: {e}")))?;
+        Request::from_value(&v)
+    }
+
+    pub fn from_value(v: &Value) -> std::result::Result<Request, WireError> {
+        let id = v.get("id").and_then(|x| x.as_i64());
+        let op = match v.get("op").and_then(|x| x.as_str()) {
+            Some(o) => o,
+            None => return Err(WireError::bad(id, "missing string 'op'")),
+        };
+        let id = match id {
+            Some(i) => i,
+            None => {
+                return Err(WireError::bad(
+                    None,
+                    format!("missing integer 'id' for op '{op}'"),
+                ))
+            }
+        };
+        let model = match v.get("model") {
+            None | Some(Value::Null) => None,
+            Some(Value::Str(s)) => Some(s.clone()),
+            Some(_) => return Err(WireError::bad(Some(id), "'model' must be a string")),
+        };
+        match op {
+            "hello" => Ok(Request::Hello {
+                id,
+                client: v.get("client").and_then(|c| c.as_str()).map(str::to_string),
+            }),
+            "ping" => Ok(Request::Ping { id }),
+            "infer" => {
+                let features = v
+                    .f32_vec("features")
+                    .map_err(|e| WireError::bad(Some(id), e.to_string()))?;
+                Ok(Request::Infer { id, model, features })
+            }
+            "infer_batch" => {
+                let rows = parse_rows(v, id)?;
+                Ok(Request::InferBatch { id, model, rows })
+            }
+            "list_models" => Ok(Request::ListModels { id }),
+            "model_info" => match model {
+                Some(m) => Ok(Request::ModelInfo { id, model: m }),
+                None => Err(WireError::bad(Some(id), "'model_info' requires 'model'")),
+            },
+            "metrics" => Ok(Request::Metrics { id }),
+            "health" => Ok(Request::Health { id }),
+            other => Err(WireError {
+                id: Some(id),
+                code: ErrorCode::Unsupported,
+                message: format!("unknown op '{other}'"),
+            }),
+        }
+    }
+}
+
+fn parse_rows(v: &Value, id: i64) -> std::result::Result<Vec<Vec<f32>>, WireError> {
+    let rows_v = v
+        .req_array("rows")
+        .map_err(|e| WireError::bad(Some(id), e.to_string()))?;
+    if rows_v.is_empty() {
+        return Err(WireError::bad(Some(id), "'rows' must be non-empty"));
+    }
+    let mut rows = Vec::with_capacity(rows_v.len());
+    for (i, rv) in rows_v.iter().enumerate() {
+        let items = rv.as_array().ok_or_else(|| {
+            WireError::bad(Some(id), format!("'rows[{i}]' is not an array"))
+        })?;
+        let mut row = Vec::with_capacity(items.len());
+        for x in items {
+            let f = x.as_f64().ok_or_else(|| {
+                WireError::bad(Some(id), format!("'rows[{i}]' has a non-number element"))
+            })?;
+            row.push(f as f32);
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+// ---- responses ------------------------------------------------------------
+
+/// A typed v2 response. `op` on the wire mirrors the request verb
+/// (`"pong"` for ping, `"error"` for failures).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Hello {
+        id: i64,
+        protocol: u32,
+        server: String,
+        max_frame: usize,
+        max_in_flight: usize,
+    },
+    Pong { id: i64 },
+    Infer { id: i64, model: String, logits: Vec<f32>, class: usize },
+    /// One `(logits, class)` pair per submitted row, in row order.
+    InferBatch { id: i64, model: String, results: Vec<(Vec<f32>, usize)> },
+    ModelList { id: i64, models: Vec<ModelSummary> },
+    ModelInfo { id: i64, model: ModelSummary },
+    /// Free-form report object (per-model serving metrics + wire
+    /// counters); kept as JSON because its shape evolves with the
+    /// metrics, not with the protocol.
+    Metrics { id: i64, body: Value },
+    Health { id: i64, status: String, models_live: usize },
+    /// `id` is `None` for connection-level errors (unparseable frame,
+    /// oversized payload) that cannot be correlated.
+    Error { id: Option<i64>, code: ErrorCode, message: String },
+}
+
+impl Response {
+    pub fn id(&self) -> Option<i64> {
+        match self {
+            Response::Hello { id, .. }
+            | Response::Pong { id }
+            | Response::Infer { id, .. }
+            | Response::InferBatch { id, .. }
+            | Response::ModelList { id, .. }
+            | Response::ModelInfo { id, .. }
+            | Response::Metrics { id, .. }
+            | Response::Health { id, .. } => Some(*id),
+            Response::Error { id, .. } => *id,
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        fn base(id: i64, op: &str) -> Vec<(&str, Value)> {
+            vec![("id", Value::Int(id)), ("op", Value::Str(op.to_string()))]
+        }
+        fn floats(xs: &[f32]) -> Value {
+            arr(xs.iter().map(|&v| Value::Float(v as f64)).collect())
+        }
+        match self {
+            Response::Hello { id, protocol, server, max_frame, max_in_flight } => {
+                let mut fields = base(*id, "hello");
+                fields.push(("protocol", Value::Int(*protocol as i64)));
+                fields.push(("server", Value::Str(server.clone())));
+                fields.push(("max_frame", Value::Int(*max_frame as i64)));
+                fields.push(("max_in_flight", Value::Int(*max_in_flight as i64)));
+                obj(fields)
+            }
+            Response::Pong { id } => obj(base(*id, "pong")),
+            Response::Infer { id, model, logits, class } => {
+                let mut fields = base(*id, "infer");
+                fields.push(("model", Value::Str(model.clone())));
+                fields.push(("logits", floats(logits)));
+                fields.push(("class", Value::Int(*class as i64)));
+                obj(fields)
+            }
+            Response::InferBatch { id, model, results } => {
+                let items: Vec<Value> = results
+                    .iter()
+                    .map(|(logits, class)| {
+                        obj(vec![
+                            ("logits", floats(logits)),
+                            ("class", Value::Int(*class as i64)),
+                        ])
+                    })
+                    .collect();
+                let mut fields = base(*id, "infer_batch");
+                fields.push(("model", Value::Str(model.clone())));
+                fields.push(("results", arr(items)));
+                obj(fields)
+            }
+            Response::ModelList { id, models } => {
+                let mut fields = base(*id, "list_models");
+                fields.push(("models", arr(models.iter().map(|m| m.to_value()).collect())));
+                obj(fields)
+            }
+            Response::ModelInfo { id, model } => {
+                let mut fields = base(*id, "model_info");
+                fields.push(("model", model.to_value()));
+                obj(fields)
+            }
+            Response::Metrics { id, body } => {
+                let mut map = match body {
+                    Value::Object(m) => m.clone(),
+                    other => {
+                        let mut m = BTreeMap::new();
+                        m.insert("body".to_string(), other.clone());
+                        m
+                    }
+                };
+                map.insert("id".to_string(), Value::Int(*id));
+                map.insert("op".to_string(), Value::Str("metrics".to_string()));
+                Value::Object(map)
+            }
+            Response::Health { id, status, models_live } => {
+                let mut fields = base(*id, "health");
+                fields.push(("status", Value::Str(status.clone())));
+                fields.push(("models_live", Value::Int(*models_live as i64)));
+                obj(fields)
+            }
+            Response::Error { id, code, message } => obj(vec![
+                (
+                    "id",
+                    match id {
+                        Some(i) => Value::Int(*i),
+                        None => Value::Null,
+                    },
+                ),
+                ("op", Value::Str("error".to_string())),
+                ("code", Value::Str(code.as_str().to_string())),
+                ("error", Value::Str(message.clone())),
+            ]),
+        }
+    }
+
+    /// Parse a frame payload into a typed response (client side).
+    pub fn from_bytes(payload: &[u8]) -> crate::error::Result<Response> {
+        let text = std::str::from_utf8(payload)
+            .map_err(|_| Error::Json("response payload is not UTF-8".into()))?;
+        Response::from_value(&Value::parse(text)?)
+    }
+
+    pub fn from_value(v: &Value) -> crate::error::Result<Response> {
+        let op = v.req_str("op")?;
+        if op == "error" {
+            return Ok(Response::Error {
+                id: v.get("id").and_then(|x| x.as_i64()),
+                code: ErrorCode::parse(
+                    v.get("code").and_then(|c| c.as_str()).unwrap_or("internal"),
+                ),
+                message: v
+                    .get("error")
+                    .and_then(|e| e.as_str())
+                    .unwrap_or("unknown error")
+                    .to_string(),
+            });
+        }
+        let id = v
+            .field("id")?
+            .as_i64()
+            .ok_or_else(|| Error::Json("response 'id' is not an integer".into()))?;
+        match op {
+            "hello" => Ok(Response::Hello {
+                id,
+                protocol: v.req_usize("protocol")? as u32,
+                server: v.req_str("server")?.to_string(),
+                max_frame: v.req_usize("max_frame")?,
+                max_in_flight: v.req_usize("max_in_flight")?,
+            }),
+            "pong" => Ok(Response::Pong { id }),
+            "infer" => Ok(Response::Infer {
+                id,
+                model: v.req_str("model")?.to_string(),
+                logits: v.f32_vec("logits")?,
+                class: v.req_usize("class")?,
+            }),
+            "infer_batch" => {
+                let mut results = Vec::new();
+                for item in v.req_array("results")? {
+                    results.push((item.f32_vec("logits")?, item.req_usize("class")?));
+                }
+                Ok(Response::InferBatch {
+                    id,
+                    model: v.req_str("model")?.to_string(),
+                    results,
+                })
+            }
+            "list_models" => {
+                let models = v
+                    .req_array("models")?
+                    .iter()
+                    .map(ModelSummary::from_value)
+                    .collect::<crate::error::Result<Vec<_>>>()?;
+                Ok(Response::ModelList { id, models })
+            }
+            "model_info" => Ok(Response::ModelInfo {
+                id,
+                model: ModelSummary::from_value(v.field("model")?)?,
+            }),
+            "metrics" => {
+                // strip the transport framing `to_value` merged in, so
+                // the body is the report alone and the variant
+                // round-trips symmetrically (`v` is an object — `op`
+                // was just read from it)
+                let mut map = match v {
+                    Value::Object(m) => m.clone(),
+                    _ => BTreeMap::new(),
+                };
+                map.remove("id");
+                map.remove("op");
+                Ok(Response::Metrics { id, body: Value::Object(map) })
+            }
+            "health" => Ok(Response::Health {
+                id,
+                status: v.req_str("status")?.to_string(),
+                models_live: v.req_usize("models_live")?,
+            }),
+            other => Err(Error::Json(format!("unknown response op '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"{\"id\":1}").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cur = Cursor::new(buf);
+        match read_frame(&mut cur, 1024).unwrap() {
+            FrameRead::Frame(p) => assert_eq!(p, b"{\"id\":1}"),
+            other => panic!("{other:?}"),
+        }
+        match read_frame(&mut cur, 1024).unwrap() {
+            FrameRead::Frame(p) => assert!(p.is_empty()),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(read_frame(&mut cur, 1024).unwrap(), FrameRead::Eof));
+    }
+
+    #[test]
+    fn truncated_frames_are_errors() {
+        // header cut short
+        let mut cur = Cursor::new(vec![0u8, 0, 0]);
+        assert!(read_frame(&mut cur, 1024).is_err());
+        // payload cut short
+        let mut buf = vec![0u8, 0, 0, 10];
+        buf.extend_from_slice(b"abc");
+        let mut cur = Cursor::new(buf);
+        assert!(read_frame(&mut cur, 1024).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_reported_not_consumed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[b'x'; 100]).unwrap();
+        let mut cur = Cursor::new(buf);
+        match read_frame(&mut cur, 50).unwrap() {
+            FrameRead::TooLarge(n) => assert_eq!(n, 100),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    fn roundtrip_request(req: Request) {
+        let bytes = req.to_value().to_string().into_bytes();
+        let back = Request::from_bytes(&bytes).unwrap();
+        assert_eq!(req, back);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_request(Request::Hello { id: 1, client: Some("t".into()) });
+        roundtrip_request(Request::Hello { id: 2, client: None });
+        roundtrip_request(Request::Ping { id: 3 });
+        roundtrip_request(Request::Infer {
+            id: 4,
+            model: Some("kan1@2".into()),
+            features: vec![0.5, -1.25],
+        });
+        roundtrip_request(Request::Infer { id: 5, model: None, features: vec![1.0] });
+        roundtrip_request(Request::InferBatch {
+            id: 6,
+            model: None,
+            rows: vec![vec![0.5, 0.5], vec![-1.0, 2.0]],
+        });
+        roundtrip_request(Request::ListModels { id: 7 });
+        roundtrip_request(Request::ModelInfo { id: 8, model: "kan2".into() });
+        roundtrip_request(Request::Metrics { id: 9 });
+        roundtrip_request(Request::Health { id: 10 });
+    }
+
+    fn roundtrip_response(resp: Response) {
+        let bytes = resp.to_value().to_string().into_bytes();
+        let back = Response::from_bytes(&bytes).unwrap();
+        assert_eq!(resp, back);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_response(Response::Hello {
+            id: 1,
+            protocol: 2,
+            server: "kan-edge/0.1.0".into(),
+            max_frame: 1 << 20,
+            max_in_flight: 64,
+        });
+        roundtrip_response(Response::Pong { id: 2 });
+        roundtrip_response(Response::Infer {
+            id: 3,
+            model: "a@1".into(),
+            logits: vec![1.5, -1.5],
+            class: 0,
+        });
+        roundtrip_response(Response::InferBatch {
+            id: 4,
+            model: "a@1".into(),
+            results: vec![(vec![1.0, 0.0], 0), (vec![0.0, 1.0], 1)],
+        });
+        roundtrip_response(Response::ModelList {
+            id: 5,
+            models: vec![ModelSummary {
+                name: "a".into(),
+                version: 3,
+                kind: "kan".into(),
+                dims: vec![2, 2],
+                num_params: 8,
+                live: true,
+                accuracy: Some(0.9),
+                digest: Some("fnv1a:abc".into()),
+            }],
+        });
+        roundtrip_response(Response::ModelInfo {
+            id: 6,
+            model: ModelSummary {
+                name: "b".into(),
+                version: 1,
+                kind: "mlp".into(),
+                dims: vec![],
+                num_params: 0,
+                live: false,
+                accuracy: None,
+                digest: None,
+            },
+        });
+        roundtrip_response(Response::Health { id: 7, status: "ok".into(), models_live: 2 });
+        roundtrip_response(Response::Error {
+            id: Some(8),
+            code: ErrorCode::NotFound,
+            message: "model 'x' not found".into(),
+        });
+        roundtrip_response(Response::Error {
+            id: None,
+            code: ErrorCode::TooLarge,
+            message: "frame too big".into(),
+        });
+    }
+
+    #[test]
+    fn metrics_response_carries_body() {
+        let body = Value::parse(r#"{"models":{"a@1":{"requests":3}},"wire":{"v1_requests":1}}"#)
+            .unwrap();
+        let resp = Response::Metrics { id: 11, body };
+        let v = resp.to_value();
+        assert_eq!(v.get("id").unwrap().as_i64().unwrap(), 11);
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "metrics");
+        assert!(v.get("models").is_some());
+        match Response::from_bytes(v.to_string().as_bytes()).unwrap() {
+            Response::Metrics { id, body } => {
+                assert_eq!(id, 11);
+                assert!(body.get("wire").is_some());
+                // transport framing is stripped back out of the body
+                assert!(body.get("id").is_none());
+                assert!(body.get("op").is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_typed_errors() {
+        for (payload, expect_id) in [
+            (&b"\xff\xfe"[..], None),
+            (&b"not json"[..], None),
+            (&b"{\"op\":\"infer\"}"[..], None), // no id
+            (&b"{\"id\":7}"[..], Some(7)),      // no op
+            (&b"{\"id\":7,\"op\":\"infer\"}"[..], Some(7)), // no features
+            (&b"{\"id\":7,\"op\":\"infer\",\"features\":\"x\"}"[..], Some(7)),
+            (&b"{\"id\":7,\"op\":\"infer_batch\",\"rows\":[]}"[..], Some(7)),
+            (&b"{\"id\":7,\"op\":\"infer_batch\",\"rows\":[[1],\"x\"]}"[..], Some(7)),
+            (&b"{\"id\":7,\"op\":\"model_info\"}"[..], Some(7)),
+            (&b"{\"id\":7,\"op\":\"infer\",\"model\":3,\"features\":[1]}"[..], Some(7)),
+        ] {
+            let err = Request::from_bytes(payload).unwrap_err();
+            assert_eq!(err.id, expect_id, "payload {payload:?}");
+            assert_eq!(err.code, ErrorCode::BadRequest, "payload {payload:?}");
+        }
+        let err = Request::from_bytes(b"{\"id\":7,\"op\":\"frobnicate\"}").unwrap_err();
+        assert_eq!(err.code, ErrorCode::Unsupported);
+        assert_eq!(err.id, Some(7));
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::NotFound,
+            ErrorCode::TooLarge,
+            ErrorCode::Overloaded,
+            ErrorCode::Unsupported,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), code);
+        }
+        assert_eq!(ErrorCode::parse("???"), ErrorCode::Internal);
+    }
+
+    #[test]
+    fn code_for_maps_crate_errors() {
+        assert_eq!(
+            code_for(&Error::Serving("queue full: admission rejected".into())),
+            ErrorCode::Overloaded
+        );
+        assert_eq!(
+            code_for(&Error::Registry("model 'x' not in manifest".into())),
+            ErrorCode::NotFound
+        );
+        assert_eq!(code_for(&Error::Json("bad".into())), ErrorCode::BadRequest);
+        assert_eq!(code_for(&Error::Runtime("pjrt".into())), ErrorCode::Internal);
+    }
+}

@@ -12,6 +12,7 @@ use std::sync::Arc;
 use super::backend::{AcimBackend, DigitalBackend, InferBackend, MlpBackend, PjrtBackend};
 use super::batcher::BatchPolicy;
 use super::server::ServeOptions;
+use super::tcp::TcpLimits;
 use crate::acim::{AcimModel, AcimOptions};
 use crate::baseline::MlpModel;
 use crate::config::AppConfig;
@@ -29,6 +30,14 @@ pub fn serve_options(cfg: &AppConfig) -> ServeOptions {
         },
         queue_depth: cfg.server.queue_depth,
         workers: cfg.server.workers,
+    }
+}
+
+/// Translate the file-side server config into transport [`TcpLimits`].
+pub fn tcp_limits(cfg: &AppConfig) -> TcpLimits {
+    TcpLimits {
+        max_request_bytes: cfg.server.max_request_bytes,
+        max_in_flight: cfg.server.max_in_flight,
     }
 }
 

@@ -4,13 +4,14 @@
 //! calling thread (callers that need async fan-out use one thread per
 //! in-flight request, which is plenty at edge rates).
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::backend::InferBackend;
 use super::batcher::{reject, run_batcher, try_admit, Batch, BatchPolicy, Request};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, MetricsReport};
+use super::protocol::ModelSummary;
 use crate::error::{Error, Result};
 
 /// Serving configuration (see `config::ServerConfig` for the file side).
@@ -31,6 +32,10 @@ impl Default for ServeOptions {
 #[derive(Clone)]
 pub struct InferenceService {
     tx: SyncSender<Request>,
+    /// Expected row width when the backend declares one; rows are
+    /// validated at submit so one malformed request cannot poison a
+    /// shared dynamic batch carrying other clients' rows.
+    input_dim: Option<usize>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -49,6 +54,7 @@ impl InferenceService {
         opts: ServeOptions,
         metrics: Arc<Metrics>,
     ) -> Self {
+        let input_dim = backend.input_dim();
         let (req_tx, req_rx) = sync_channel::<Request>(opts.queue_depth);
         let (batch_tx, batch_rx) = sync_channel::<Batch>(opts.workers.max(1) * 2);
         std::thread::Builder::new()
@@ -66,20 +72,97 @@ impl InferenceService {
                 .spawn(move || worker_loop(rx, be, m))
                 .expect("spawn worker");
         }
-        Self { tx: req_tx, metrics }
+        Self { tx: req_tx, input_dim, metrics }
+    }
+
+    fn check_shape(&self, features: &[f32]) -> Result<()> {
+        if let Some(din) = self.input_dim {
+            if features.len() != din {
+                return Err(Error::Shape(format!(
+                    "row has {} features, expected {din}",
+                    features.len()
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// Submit one feature vector and wait for the logits.
     pub fn infer(&self, features: Vec<f32>) -> Result<Vec<f32>> {
+        self.check_shape(&features)?;
         let (tx, rx) = sync_channel(1);
         let req = Request { features, enqueued: Instant::now(), respond: tx };
-        if let Err(r) = try_admit(&self.tx, req) {
-            self.metrics.record_rejection();
-            reject(r);
-            return Err(Error::Serving("queue full: admission rejected".into()));
+        match try_admit(&self.tx, req) {
+            Ok(()) => {}
+            Err(TrySendError::Full(r)) => {
+                self.metrics.record_rejection();
+                reject(r);
+                return Err(Error::Serving("queue full: admission rejected".into()));
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(Error::Serving("service shut down".into()));
+            }
         }
         rx.recv()
             .map_err(|_| Error::Serving("service shut down".into()))?
+    }
+
+    /// Submit many feature vectors back-to-back and wait for all logits
+    /// (row order preserved). The rows hit the dynamic batcher as one
+    /// burst, so a single caller produces multi-row batches — this is
+    /// the engine behind the v2 `infer_batch` verb.
+    ///
+    /// Admission control applies to the batch head only: if the queue
+    /// cannot take the first row the whole batch is rejected up front.
+    /// Once admitted, the remaining rows use a blocking send — the
+    /// deadline-based batcher always drains, so a batch larger than the
+    /// queue depth backpressures the caller instead of failing
+    /// spuriously halfway through. The flip side is that a batch larger
+    /// than the queue can hold the queue near capacity while it drains,
+    /// so concurrent `infer` calls from other clients may see
+    /// `overloaded` rejections for that window (fair cross-client
+    /// scheduling is a ROADMAP item; the wire layer already bounds a
+    /// single batch by `server.max_request_bytes`).
+    pub fn infer_many(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        if rows.is_empty() {
+            return Err(Error::Serving("empty batch".into()));
+        }
+        // validate every row before admitting any: a malformed row must
+        // fail the call, not a shared batch
+        for row in &rows {
+            self.check_shape(row)?;
+        }
+        let mut waiters = Vec::with_capacity(rows.len());
+        let mut admitted_head = false;
+        for features in rows {
+            let (tx, rx) = sync_channel(1);
+            let req = Request { features, enqueued: Instant::now(), respond: tx };
+            if !admitted_head {
+                match try_admit(&self.tx, req) {
+                    Ok(()) => admitted_head = true,
+                    Err(TrySendError::Full(r)) => {
+                        self.metrics.record_rejection();
+                        reject(r);
+                        return Err(Error::Serving(
+                            "queue full: batch admission rejected".into(),
+                        ));
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        return Err(Error::Serving("service shut down".into()));
+                    }
+                }
+            } else if self.tx.send(req).is_err() {
+                return Err(Error::Serving("service shut down".into()));
+            }
+            waiters.push(rx);
+        }
+        waiters
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .map_err(|_| Error::Serving("service shut down".into()))?
+            })
+            .collect()
     }
 }
 
@@ -91,20 +174,93 @@ impl InferenceService {
 /// `Some("name")` / `Some("name@version")` otherwise), runs inference,
 /// and returns the resolved model id alongside the logits so clients can
 /// observe which version served them (hot-reload visibility).
+///
+/// The remaining methods back the v2 control plane (`infer_batch`,
+/// `list_models`, `model_info`, `metrics`, `health` verbs); the defaults
+/// make any `dispatch`-only implementation a valid, if minimal, target.
 pub trait Dispatch: Send + Sync {
     fn dispatch(&self, model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)>;
+
+    /// Batch dispatch: resolve the model once, run every row, return the
+    /// resolved id with one logit vector per row (row order preserved).
+    /// Implementations with a dynamic batcher override this to feed it
+    /// the whole batch back-to-back.
+    fn dispatch_batch(
+        &self,
+        model: Option<&str>,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<Vec<f32>>)> {
+        if rows.is_empty() {
+            return Err(Error::Serving("empty batch".into()));
+        }
+        let mut id = String::new();
+        let mut out = Vec::with_capacity(rows.len());
+        for row in rows {
+            let (mid, logits) = self.dispatch(model, row)?;
+            id = mid;
+            out.push(logits);
+        }
+        Ok((id, out))
+    }
+
+    /// Control-plane summaries of the models behind this endpoint.
+    fn model_summaries(&self) -> Vec<ModelSummary> {
+        Vec::new()
+    }
+
+    /// Per-model serving metrics, keyed by serving id.
+    fn metrics_reports(&self) -> Vec<(String, MetricsReport)> {
+        Vec::new()
+    }
+
+    /// Number of models with a live serving pipeline.
+    fn live_model_count(&self) -> usize {
+        self.model_summaries().iter().filter(|m| m.live).count()
+    }
 }
 
 impl Dispatch for InferenceService {
     fn dispatch(&self, model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
         match model {
-            Some(m) => Err(Error::Serving(format!(
-                "this endpoint serves a single model; cannot route to '{m}' \
-                 (serve with a registry for multi-model routing)"
-            ))),
+            Some(m) => Err(single_model_error(m)),
             None => Ok(("default".to_string(), self.infer(features)?)),
         }
     }
+
+    fn dispatch_batch(
+        &self,
+        model: Option<&str>,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<Vec<f32>>)> {
+        match model {
+            Some(m) => Err(single_model_error(m)),
+            None => Ok(("default".to_string(), self.infer_many(rows)?)),
+        }
+    }
+
+    fn model_summaries(&self) -> Vec<ModelSummary> {
+        vec![ModelSummary {
+            name: "default".to_string(),
+            version: 0,
+            kind: "single".to_string(),
+            dims: Vec::new(),
+            num_params: 0,
+            live: true,
+            accuracy: None,
+            digest: None,
+        }]
+    }
+
+    fn metrics_reports(&self) -> Vec<(String, MetricsReport)> {
+        vec![("default".to_string(), self.metrics.report())]
+    }
+}
+
+fn single_model_error(model: &str) -> Error {
+    Error::Serving(format!(
+        "this endpoint serves a single model; cannot route to '{model}' \
+         (serve with a registry for multi-model routing)"
+    ))
 }
 
 fn worker_loop(
@@ -122,21 +278,28 @@ fn worker_loop(
         };
         m.record_batch(batch.len());
         let queue_wait = batch.max_queue_wait();
-        let rows: Vec<Vec<f32>> =
-            batch.requests.iter().map(|r| r.features.clone()).collect();
-        match be.infer_batch(&rows) {
+        // move the feature rows out of the requests: the backend takes
+        // ownership (no per-dispatch copy), the waiters keep only the
+        // response channel and the enqueue timestamp
+        let mut rows = Vec::with_capacity(batch.requests.len());
+        let mut waiters = Vec::with_capacity(batch.requests.len());
+        for req in batch.requests {
+            rows.push(req.features);
+            waiters.push((req.enqueued, req.respond));
+        }
+        match be.infer_batch(rows) {
             Ok(outputs) => {
-                for (req, out) in batch.requests.into_iter().zip(outputs) {
-                    let latency = req.enqueued.elapsed();
+                for ((enqueued, respond), out) in waiters.into_iter().zip(outputs) {
+                    let latency = enqueued.elapsed();
                     m.record_request(latency, queue_wait);
-                    let _ = req.respond.try_send(Ok(out));
+                    let _ = respond.try_send(Ok(out));
                 }
             }
             Err(e) => {
                 m.record_error();
                 let msg = e.to_string();
-                for req in batch.requests {
-                    let _ = req.respond.try_send(Err(Error::Serving(msg.clone())));
+                for (_, respond) in waiters {
+                    let _ = respond.try_send(Err(Error::Serving(msg.clone())));
                 }
             }
         }
@@ -160,7 +323,7 @@ mod tests {
             1
         }
 
-        fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
             Ok(rows.iter().map(|r| vec![r[0] * 2.0]).collect())
         }
     }
@@ -176,7 +339,7 @@ mod tests {
             1
         }
 
-        fn infer_batch(&self, _rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        fn infer_batch(&self, _rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
             Err(Error::Serving("boom".into()))
         }
     }
@@ -208,6 +371,60 @@ mod tests {
         let report = svc.metrics.report();
         assert_eq!(report.requests, 64);
         assert!(report.mean_batch > 1.0, "no batching happened");
+    }
+
+    #[test]
+    fn shape_checked_at_admission() {
+        struct Fixed;
+
+        impl InferBackend for Fixed {
+            fn name(&self) -> &str {
+                "fixed"
+            }
+
+            fn output_dim(&self) -> usize {
+                1
+            }
+
+            fn input_dim(&self) -> Option<usize> {
+                Some(2)
+            }
+
+            fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+                Ok(rows.iter().map(|r| vec![r[0] + r[1]]).collect())
+            }
+        }
+
+        let svc = InferenceService::start(Arc::new(Fixed), ServeOptions::default());
+        let err = svc.infer(vec![1.0]).unwrap_err();
+        assert!(err.to_string().contains("shape mismatch"), "{err}");
+        let err = svc.infer_many(vec![vec![1.0, 2.0], vec![3.0]]).unwrap_err();
+        assert!(err.to_string().contains("shape mismatch"), "{err}");
+        // valid traffic is unaffected and no batch was poisoned
+        assert_eq!(svc.infer(vec![1.0, 2.0]).unwrap(), vec![3.0]);
+        assert_eq!(svc.metrics.report().errors, 0);
+    }
+
+    #[test]
+    fn infer_many_feeds_multi_row_batches() {
+        let opts = ServeOptions {
+            policy: BatchPolicy { max_batch: 16, deadline: Duration::from_millis(5) },
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Arc::new(Doubler), opts);
+        let rows: Vec<Vec<f32>> = (0..48).map(|i| vec![i as f32]).collect();
+        let outs = svc.infer_many(rows).unwrap();
+        assert_eq!(outs.len(), 48);
+        for (i, out) in outs.iter().enumerate() {
+            assert_eq!(out[0], 2.0 * i as f32);
+        }
+        let report = svc.metrics.report();
+        assert_eq!(report.requests, 48);
+        assert!(
+            report.mean_batch > 1.5,
+            "batch submit produced singletons (mean {})",
+            report.mean_batch
+        );
     }
 
     #[test]

@@ -1,46 +1,91 @@
-//! TCP wire protocol: JSON lines over a plain socket.
+//! TCP transport + connection lifecycle for the serving endpoint.
 //!
-//! Request:  `{"features": [f32; din]}\n`
-//!           `{"model": "name"           , "features": [...]}\n`
-//!           `{"model": "name@version"   , "features": [...]}\n`
-//! Response: `{"logits": [...], "class": k, "model": "name@version"}\n`
-//!           or `{"error": "..."}\n`
+//! Two wire protocols share one port, auto-detected from the first
+//! bytes of each connection (see `docs/PROTOCOL.md` for the full
+//! specification):
 //!
-//! The optional `"model"` field routes to a variant by name (latest
-//! published version) or pinned `name@version`; omitting it hits the
-//! endpoint's default model. The response always echoes the resolved
-//! `name@version` id so clients observe hot-reload version switches.
+//! * **v1 — JSON lines** (legacy): one `{"features": [...]}` request
+//!   per line, one reply per line, strictly in order. Kept
+//!   byte-compatible so pre-v2 client scripts work unchanged.
+//! * **v2 — framed** : the connection opens with the 4-byte
+//!   [`protocol::MAGIC`] preamble; after it every request/response is a
+//!   length-prefixed JSON frame carrying a client-chosen `id`.
+//!   Inference dispatches concurrently (up to
+//!   [`TcpLimits::max_in_flight`] per connection) and responses are
+//!   written as they complete — out of order — by a per-connection
+//!   writer decoupled from the reader. Control verbs (`hello`, `ping`,
+//!   `list_models`, `model_info`, `metrics`, `health`) are answered
+//!   inline.
 //!
-//! One thread per connection (edge request rates make this the simplest
-//! correct design); the shared [`Dispatch`] target behind it batches
-//! across connections — per model, when serving a
-//! [`crate::registry::ModelRegistry`].
+//! Both protocols bound request size by [`TcpLimits::max_request_bytes`]
+//! (`server.max_request_bytes` in config): an oversized line or frame
+//! gets a structured `too_large` error and only that connection is
+//! dropped. Parsing and dispatch live in [`super::protocol`]; this
+//! module is transport only. One thread per connection plus one per
+//! in-flight v2 dispatch (edge request rates make this the simplest
+//! correct design); the shared [`Dispatch`] target batches across
+//! connections.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
+use super::metrics::WireMetrics;
+use super::protocol::{
+    self, code_for, read_frame, write_frame, ErrorCode, FrameRead, Request, Response,
+};
 use super::server::Dispatch;
 use crate::error::Result;
-use crate::kan::model::argmax;
 use crate::util::json::{obj, Value};
+
+/// Per-connection transport limits (file side: the `[server]` config
+/// section, translated by [`super::router::tcp_limits`]).
+#[derive(Debug, Clone, Copy)]
+pub struct TcpLimits {
+    /// Max bytes in one v1 line or one v2 frame payload.
+    pub max_request_bytes: usize,
+    /// Max concurrently dispatched v2 requests per connection; the
+    /// reader blocks (backpressure) once reached.
+    pub max_in_flight: usize,
+}
+
+impl Default for TcpLimits {
+    fn default() -> Self {
+        Self { max_request_bytes: 1 << 20, max_in_flight: 64 }
+    }
+}
 
 /// A running TCP server; `shutdown` stops the accept loop promptly and
 /// joins it (open connections finish on their own threads).
 pub struct TcpServer {
     pub addr: std::net::SocketAddr,
+    /// Transport counters (v1/v2 split, connections, in-flight HWM);
+    /// also served by the v2 `metrics` verb.
+    pub wire: Arc<WireMetrics>,
     stop: Arc<AtomicBool>,
     accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl TcpServer {
-    /// Bind `addr` (use port 0 for an ephemeral port) and serve `target`.
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve `target`
+    /// with default [`TcpLimits`].
     pub fn spawn(addr: &str, target: Arc<dyn Dispatch>) -> Result<TcpServer> {
+        Self::spawn_with_limits(addr, target, TcpLimits::default())
+    }
+
+    /// Like [`TcpServer::spawn`] with explicit transport limits.
+    pub fn spawn_with_limits(
+        addr: &str,
+        target: Arc<dyn Dispatch>,
+        limits: TcpLimits,
+    ) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let wire = Arc::new(WireMetrics::new());
+        let wire2 = wire.clone();
         let handle = std::thread::Builder::new()
             .name("kan-edge-tcp".into())
             .spawn(move || {
@@ -54,7 +99,10 @@ impl TcpServer {
                     match stream {
                         Ok(s) => {
                             let target = target.clone();
-                            std::thread::spawn(move || handle_conn(s, target));
+                            let wire = wire2.clone();
+                            std::thread::spawn(move || {
+                                handle_conn(s, target, limits, wire)
+                            });
                         }
                         Err(e) => eprintln!("accept error: {e}"),
                     }
@@ -63,7 +111,12 @@ impl TcpServer {
                 // `shutdown` returns
             })
             .map_err(|e| crate::error::Error::Serving(format!("spawn tcp: {e}")))?;
-        Ok(TcpServer { addr: local, stop, accept_thread: Mutex::new(Some(handle)) })
+        Ok(TcpServer {
+            addr: local,
+            wire,
+            stop,
+            accept_thread: Mutex::new(Some(handle)),
+        })
     }
 
     /// Stop accepting and wait for the accept loop to exit. The flag is
@@ -87,35 +140,184 @@ impl TcpServer {
     }
 }
 
-/// Serve one connection until EOF.
-pub fn handle_conn(stream: TcpStream, target: Arc<dyn Dispatch>) {
+/// Serve one connection until EOF (protocol auto-detected).
+pub fn handle_conn(
+    stream: TcpStream,
+    target: Arc<dyn Dispatch>,
+    limits: TcpLimits,
+    wire: Arc<WireMetrics>,
+) {
+    wire.connection_opened();
+    serve_conn(stream, target, limits, &wire);
+    wire.connection_closed();
+}
+
+fn serve_conn(
+    mut stream: TcpStream,
+    target: Arc<dyn Dispatch>,
+    limits: TcpLimits,
+    wire: &Arc<WireMetrics>,
+) {
+    // protocol sniff: a v2 connection opens with the 4-byte magic; the
+    // first byte of a v1 JSON line can never be 'K'
+    let mut first = [0u8; 1];
+    let n = match stream.read(&mut first) {
+        Ok(n) => n,
+        Err(_) => return,
+    };
+    if n == 0 {
+        return;
+    }
+    if first[0] == protocol::MAGIC[0] {
+        // read the candidate magic byte-by-byte and bail to v1 on the
+        // first divergent byte: a short garbage line like "K\n" must get
+        // its structured v1 error reply, not block in a read_exact(3)
+        // that waits for bytes the client will never send
+        let mut prefix = vec![first[0]];
+        loop {
+            let mut b = [0u8; 1];
+            match stream.read(&mut b) {
+                Ok(0) => {
+                    // EOF mid-prefix: let v1 report the partial line
+                    serve_v1(prefix, stream, target, limits, wire);
+                    return;
+                }
+                Ok(_) => {}
+                Err(_) => return,
+            }
+            prefix.push(b[0]);
+            if b[0] != protocol::MAGIC[prefix.len() - 1] {
+                serve_v1(prefix, stream, target, limits, wire);
+                return;
+            }
+            if prefix.len() == protocol::MAGIC.len() {
+                serve_v2(stream, target, limits, wire);
+                return;
+            }
+        }
+    } else {
+        serve_v1(vec![first[0]], stream, target, limits, wire);
+    }
+}
+
+// ---- v1: JSON lines -------------------------------------------------------
+
+enum LineRead {
+    Line(String),
+    Eof,
+    TooLong,
+}
+
+/// Read one newline-terminated line into/through `pending`, bounded by
+/// `max` bytes. `pending` may already hold sniffed bytes and keeps any
+/// bytes read past the newline for the next call. A final line without
+/// a trailing newline is still returned (matching `BufRead::lines`).
+fn read_line_bounded(
+    reader: &mut impl BufRead,
+    pending: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    // bytes of `pending` already scanned for '\n' in this call: each
+    // fill_buf round only searches the newly appended tail, keeping the
+    // per-line cost linear even when a large line trickles in tiny
+    // segments
+    let mut scanned = 0;
+    loop {
+        if let Some(rel) = pending[scanned..].iter().position(|&b| b == b'\n') {
+            let pos = scanned + rel;
+            if pos > max {
+                return Ok(LineRead::TooLong);
+            }
+            let rest = pending.split_off(pos + 1);
+            let mut line = std::mem::replace(pending, rest);
+            line.pop(); // the '\n'
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return Ok(LineRead::Line(String::from_utf8_lossy(&line).into_owned()));
+        }
+        scanned = pending.len();
+        if pending.len() > max {
+            return Ok(LineRead::TooLong);
+        }
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            if pending.is_empty() {
+                return Ok(LineRead::Eof);
+            }
+            let line = std::mem::take(pending);
+            return Ok(LineRead::Line(String::from_utf8_lossy(&line).into_owned()));
+        }
+        let n = chunk.len();
+        pending.extend_from_slice(chunk);
+        reader.consume(n);
+    }
+}
+
+fn serve_v1(
+    prefix: Vec<u8>,
+    stream: TcpStream,
+    target: Arc<dyn Dispatch>,
+    limits: TcpLimits,
+    wire: &WireMetrics,
+) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
-        };
+    let mut reader = BufReader::new(stream);
+    let mut pending = prefix;
+    loop {
+        let line =
+            match read_line_bounded(&mut reader, &mut pending, limits.max_request_bytes) {
+                Ok(LineRead::Line(l)) => l,
+                Ok(LineRead::Eof) => break,
+                Ok(LineRead::TooLong) => {
+                    // structured error, then drop only this connection:
+                    // the rest of the oversized line cannot be resynced
+                    wire.record_oversized();
+                    let v = obj(vec![
+                        (
+                            "error",
+                            Value::Str(format!(
+                                "request too large: line exceeds {} bytes",
+                                limits.max_request_bytes
+                            )),
+                        ),
+                        ("code", Value::Str(ErrorCode::TooLarge.as_str().into())),
+                    ]);
+                    let _ = write_line(&mut writer, &v);
+                    // generous byte budget: leaving the line's remainder
+                    // unread turns the close into an RST that can destroy
+                    // the reply just written; the wall-clock deadline in
+                    // drain_before_close bounds a firehose client instead
+                    drain_before_close(&writer, 64 << 20);
+                    break;
+                }
+                Err(_) => break,
+            };
         if line.trim().is_empty() {
             continue;
         }
+        wire.record_v1_request();
         let reply = respond(&line, target.as_ref());
-        let mut text = reply.to_string();
-        text.push('\n');
-        if writer.write_all(text.as_bytes()).is_err() {
+        if write_line(&mut writer, &reply).is_err() {
             break;
         }
     }
+}
+
+fn write_line(w: &mut impl Write, v: &Value) -> std::io::Result<()> {
+    let mut text = v.to_string();
+    text.push('\n');
+    w.write_all(text.as_bytes())
 }
 
 fn error_reply(msg: impl Into<String>) -> Value {
     obj(vec![("error", Value::Str(msg.into()))])
 }
 
-/// Pure request→response mapping (unit-testable without sockets).
+/// Pure v1 request→response mapping (unit-testable without sockets).
 pub fn respond(line: &str, target: &dyn Dispatch) -> Value {
     let parsed = match Value::parse(line) {
         Ok(v) => v,
@@ -134,7 +336,7 @@ pub fn respond(line: &str, target: &dyn Dispatch) -> Value {
     };
     match target.dispatch(model, features) {
         Ok((id, logits)) => {
-            let pred = argmax(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>());
+            let pred = argmax_f32(&logits);
             let items: Vec<Value> =
                 logits.iter().map(|&v| Value::Float(v as f64)).collect();
             obj(vec![
@@ -144,6 +346,340 @@ pub fn respond(line: &str, target: &dyn Dispatch) -> Value {
             ])
         }
         Err(e) => error_reply(e.to_string()),
+    }
+}
+
+/// Index of the maximum logit (first on ties) without the per-row
+/// `Vec<f64>` widening a round-trip through [`crate::kan::model::argmax`]
+/// would cost — this runs once per row of every batch response.
+fn argmax_f32(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate().skip(1) {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Best-effort discard of whatever the peer is still sending before an
+/// error-close, bounded in bytes and wall time. Closing a socket with
+/// unread data queued makes the kernel send RST, which would destroy
+/// the structured `too_large` error we just wrote; draining first turns
+/// the close into a clean FIN in the common case.
+fn drain_before_close(stream: &TcpStream, mut budget: usize) {
+    let mut s = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = s.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(1);
+    let mut buf = [0u8; 8192];
+    while budget > 0 && std::time::Instant::now() < deadline {
+        match s.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => budget = budget.saturating_sub(n),
+            Err(_) => break, // timeout or socket error: good enough
+        }
+    }
+}
+
+// ---- v2: framed, pipelined ------------------------------------------------
+
+/// Per-connection in-flight dispatch counter with blocking acquisition.
+struct InFlight {
+    max: usize,
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl InFlight {
+    fn new(max: usize) -> Self {
+        Self { max: max.max(1), count: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Block until a slot frees, take it, and return the new depth.
+    fn acquire(&self) -> usize {
+        let mut g = self.count.lock().unwrap();
+        while *g >= self.max {
+            g = self.cv.wait(g).unwrap();
+        }
+        *g += 1;
+        *g
+    }
+
+    fn release(&self) {
+        let mut g = self.count.lock().unwrap();
+        *g -= 1;
+        self.cv.notify_one();
+    }
+}
+
+/// RAII slot holder: releases on drop, so a panicking dispatch (or a
+/// failed thread spawn, which drops the un-run closure) can never leak
+/// its in-flight slot and wedge the connection at the cap.
+struct InFlightPermit(Arc<InFlight>);
+
+impl Drop for InFlightPermit {
+    fn drop(&mut self) {
+        self.0.release();
+    }
+}
+
+/// Inference work units dispatched off the reader thread.
+enum Work {
+    One { features: Vec<f32> },
+    Batch { rows: Vec<Vec<f32>> },
+}
+
+/// Shared state of one v2 connection.
+struct V2Conn {
+    target: Arc<dyn Dispatch>,
+    writer: Arc<Mutex<TcpStream>>,
+    in_flight: Arc<InFlight>,
+    wire: Arc<WireMetrics>,
+    limits: TcpLimits,
+}
+
+fn serve_v2(
+    stream: TcpStream,
+    target: Arc<dyn Dispatch>,
+    limits: TcpLimits,
+    wire: &Arc<WireMetrics>,
+) {
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let conn = V2Conn {
+        target,
+        writer,
+        in_flight: Arc::new(InFlight::new(limits.max_in_flight)),
+        wire: wire.clone(),
+        limits,
+    };
+    loop {
+        let payload = match read_frame(&mut reader, limits.max_request_bytes) {
+            Ok(FrameRead::Frame(p)) => p,
+            Ok(FrameRead::Eof) => break,
+            Ok(FrameRead::TooLarge(n)) => {
+                // the oversized payload was never consumed, so the frame
+                // stream cannot be resynced: report and drop the
+                // connection (only this one; the server keeps serving)
+                conn.wire.record_oversized();
+                let _ = conn.send(&Response::Error {
+                    id: None,
+                    code: ErrorCode::TooLarge,
+                    message: format!(
+                        "frame of {n} bytes exceeds limit of {} bytes",
+                        limits.max_request_bytes
+                    ),
+                });
+                drain_before_close(reader.get_ref(), n.min(64 << 20));
+                break;
+            }
+            Err(_) => break, // truncated frame or socket error
+        };
+        let req = match Request::from_bytes(&payload) {
+            Ok(r) => r,
+            Err(we) => {
+                // framing is intact, so only this frame is garbage: send
+                // a structured error and keep the connection alive
+                conn.wire.record_protocol_error();
+                if conn.send(&we.into_response()).is_err() {
+                    break;
+                }
+                continue;
+            }
+        };
+        if !conn.handle(req) {
+            break;
+        }
+    }
+    // dispatch threads still in flight hold their own Arc clones of the
+    // writer and finish on their own; dropping the reader here is safe
+}
+
+/// Serialize one response and write it as a frame under the shared
+/// per-connection writer lock — the single encode path for both inline
+/// control replies and async dispatch completions.
+fn send_response(writer: &Mutex<TcpStream>, resp: &Response) -> std::io::Result<()> {
+    let payload = resp.to_value().to_string();
+    let mut w = writer.lock().unwrap();
+    write_frame(&mut *w, payload.as_bytes())
+}
+
+impl V2Conn {
+    fn send(&self, resp: &Response) -> std::io::Result<()> {
+        send_response(&self.writer, resp)
+    }
+
+    /// Handle one parsed request; returns `false` when the connection
+    /// should close (write failure).
+    fn handle(&self, req: Request) -> bool {
+        match req {
+            Request::Hello { id, .. } => {
+                self.wire.record_v2_control();
+                self.send(&Response::Hello {
+                    id,
+                    protocol: protocol::PROTOCOL_VERSION,
+                    server: concat!("kan-edge/", env!("CARGO_PKG_VERSION")).to_string(),
+                    max_frame: self.limits.max_request_bytes,
+                    max_in_flight: self.limits.max_in_flight,
+                })
+                .is_ok()
+            }
+            Request::Ping { id } => {
+                self.wire.record_v2_control();
+                self.send(&Response::Pong { id }).is_ok()
+            }
+            Request::ListModels { id } => {
+                self.wire.record_v2_control();
+                self.send(&Response::ModelList {
+                    id,
+                    models: self.target.model_summaries(),
+                })
+                .is_ok()
+            }
+            Request::ModelInfo { id, model } => {
+                self.wire.record_v2_control();
+                // the exact spec grammar inference routing uses: bare
+                // "name" or pinned "name@version"
+                let resp = match crate::registry::parse_model_spec(&model) {
+                    Err(e) => Response::Error {
+                        id: Some(id),
+                        code: ErrorCode::BadRequest,
+                        message: e.to_string(),
+                    },
+                    Ok((name, pinned)) => {
+                        let found = self
+                            .target
+                            .model_summaries()
+                            .into_iter()
+                            .find(|m| {
+                                m.name == name
+                                    && pinned.map_or(true, |v| v == m.version)
+                            });
+                        match found {
+                            Some(m) => Response::ModelInfo { id, model: m },
+                            None => Response::Error {
+                                id: Some(id),
+                                code: ErrorCode::NotFound,
+                                message: format!("model '{model}' not found"),
+                            },
+                        }
+                    }
+                };
+                self.send(&resp).is_ok()
+            }
+            Request::Metrics { id } => {
+                self.wire.record_v2_control();
+                let models = self
+                    .target
+                    .metrics_reports()
+                    .into_iter()
+                    .map(|(mid, r)| (mid, r.to_value()))
+                    .collect::<Vec<_>>();
+                let models_obj = Value::Object(models.into_iter().collect());
+                let body = obj(vec![
+                    ("models", models_obj),
+                    ("wire", self.wire.to_value()),
+                ]);
+                self.send(&Response::Metrics { id, body }).is_ok()
+            }
+            Request::Health { id } => {
+                self.wire.record_v2_control();
+                self.send(&Response::Health {
+                    id,
+                    status: "ok".to_string(),
+                    models_live: self.target.live_model_count(),
+                })
+                .is_ok()
+            }
+            Request::Infer { id, model, features } => {
+                self.wire.record_v2_infer(1);
+                self.dispatch_async(id, model, Work::One { features });
+                true
+            }
+            Request::InferBatch { id, model, rows } => {
+                self.wire.record_v2_infer(rows.len() as u64);
+                self.dispatch_async(id, model, Work::Batch { rows });
+                true
+            }
+        }
+    }
+
+    /// Dispatch inference on its own thread so the reader keeps pulling
+    /// frames (pipelining); responses are written as they complete, out
+    /// of order. Blocks for backpressure once `max_in_flight` dispatches
+    /// are outstanding on this connection.
+    fn dispatch_async(&self, id: i64, model: Option<String>, work: Work) {
+        let depth = self.in_flight.acquire();
+        self.wire.observe_in_flight(depth as u64);
+        let permit = InFlightPermit(self.in_flight.clone());
+        let target = self.target.clone();
+        let writer = self.writer.clone();
+        let spawned = std::thread::Builder::new()
+            .name("kan-edge-v2-dispatch".into())
+            .spawn(move || {
+                let _permit = permit; // released on drop, even on panic
+                // a panicking dispatch must still answer: the connection
+                // stays healthy, so without a frame the client would wait
+                // on this id forever
+                let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || run_work(id, model, work, target.as_ref()),
+                ))
+                .unwrap_or_else(|_| Response::Error {
+                    id: Some(id),
+                    code: ErrorCode::Internal,
+                    message: "dispatch panicked".to_string(),
+                });
+                let _ = send_response(&writer, &resp);
+            });
+        if spawned.is_err() {
+            // thread exhaustion: the un-run closure was dropped (slot
+            // released by the permit) — fail this request, never the
+            // handler
+            let _ = self.send(&Response::Error {
+                id: Some(id),
+                code: ErrorCode::Internal,
+                message: "cannot spawn dispatch thread".to_string(),
+            });
+        }
+    }
+}
+
+fn run_work(id: i64, model: Option<String>, work: Work, target: &dyn Dispatch) -> Response {
+    match work {
+        Work::One { features } => match target.dispatch(model.as_deref(), features) {
+            Ok((mid, logits)) => {
+                let class = argmax_f32(&logits);
+                Response::Infer { id, model: mid, logits, class }
+            }
+            Err(e) => Response::Error {
+                id: Some(id),
+                code: code_for(&e),
+                message: e.to_string(),
+            },
+        },
+        Work::Batch { rows } => match target.dispatch_batch(model.as_deref(), rows) {
+            Ok((mid, outs)) => {
+                let results = outs
+                    .into_iter()
+                    .map(|logits| {
+                        let class = argmax_f32(&logits);
+                        (logits, class)
+                    })
+                    .collect();
+                Response::InferBatch { id, model: mid, results }
+            }
+            Err(e) => Response::Error {
+                id: Some(id),
+                code: code_for(&e),
+                message: e.to_string(),
+            },
+        },
     }
 }
 
@@ -165,7 +701,7 @@ mod tests {
             2
         }
 
-        fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
             Ok(rows
                 .iter()
                 .map(|r| {
@@ -244,6 +780,39 @@ mod tests {
         assert_eq!(b.get("model").unwrap().as_str().unwrap(), "neg@2");
         let missing = respond(r#"{"features": [2.0], "model": "nope"}"#, &router);
         assert!(missing.get("error").unwrap().as_str().unwrap().contains("nope"));
+    }
+
+    #[test]
+    fn bounded_line_reader_handles_prefix_splits_and_caps() {
+        use std::io::Cursor;
+        // prefix carried over from the protocol sniff + two lines in one
+        // buffer + a final line without a trailing newline
+        let mut reader = Cursor::new(&b"irst\nsecond\nlast"[..]);
+        let mut pending = b"f".to_vec();
+        match read_line_bounded(&mut reader, &mut pending, 64).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "first"),
+            _ => panic!("expected line"),
+        }
+        match read_line_bounded(&mut reader, &mut pending, 64).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "second"),
+            _ => panic!("expected line"),
+        }
+        match read_line_bounded(&mut reader, &mut pending, 64).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "last"),
+            _ => panic!("expected line"),
+        }
+        assert!(matches!(
+            read_line_bounded(&mut reader, &mut pending, 64).unwrap(),
+            LineRead::Eof
+        ));
+        // oversized line is reported, not buffered forever
+        let long = vec![b'x'; 100];
+        let mut reader = Cursor::new(long);
+        let mut pending = Vec::new();
+        assert!(matches!(
+            read_line_bounded(&mut reader, &mut pending, 10).unwrap(),
+            LineRead::TooLong
+        ));
     }
 
     #[test]

@@ -442,6 +442,27 @@ impl ModelEntry {
     }
 }
 
+/// A tiny valid KAN checkpoint (dims [2,2], G=1, K=1) whose residual
+/// weights make every positive input land on `favor_class` (0 or 1).
+/// The one canonical synthetic fixture behind `kan-edge bench-net`, the
+/// offline examples, and the protocol tests — keeping the
+/// format-sensitive layer JSON in a single place.
+pub fn synthetic_checkpoint_json(name: &str, favor_class: usize) -> String {
+    let wb = if favor_class == 0 {
+        "[1.0, 0.0, 1.0, 0.0]"
+    } else {
+        "[0.0, 1.0, 0.0, 1.0]"
+    };
+    format!(
+        r#"{{"name":"{name}","kind":"kan","dims":[2,2],"g":1,"k":1,"n_bits":8,
+            "num_params":8,"quant_test_acc":0.9,
+            "layers":[{{"din":2,"dout":2,"lo":-1.0,"hi":1.0,"ld":2,
+              "sh_lut":[[255,0],[170,85],[128,128]],
+              "coeff_q":[0,0,0,0,0,0,0,0],"coeff_scale":0.01,
+              "wb":{wb}}}]}}"#
+    )
+}
+
 /// `dataset.json` — test split + calibration sample.
 #[derive(Debug, Clone)]
 pub struct Dataset {

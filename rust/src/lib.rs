@@ -28,7 +28,14 @@
 //!   errors compiles in otherwise).
 //! * [`coordinator`] — the edge-inference serving runtime: dynamic
 //!   batching, routing, backend pool, per-model metrics with an exact
-//!   aggregate rollup.
+//!   aggregate rollup, and the wire surface — the typed
+//!   [`coordinator::protocol`] (framed, pipelined v2 with control-plane
+//!   verbs) over the [`coordinator::tcp`] transport, which auto-detects
+//!   legacy v1 JSON-lines clients per connection. `docs/PROTOCOL.md`
+//!   specifies both formats.
+//! * [`client`] — the typed Rust client ([`client::KanClient`]):
+//!   connect/negotiate, `infer`, batch submit, pipelined
+//!   `submit`/`poll`, and registry/metrics/health queries.
 //! * [`registry`] — model registry & multi-model serving: the
 //!   schema-tagged manifest (v1 = flat aot.py output, v2 = per-model
 //!   version/digest/quant/hardware-cost metadata), a content-addressed
@@ -47,6 +54,7 @@
 pub mod acim;
 pub mod baseline;
 pub mod circuits;
+pub mod client;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -22,8 +22,9 @@ use std::sync::Arc;
 
 use kan_edge::acim::{AcimOptions, ArrayConfig};
 use kan_edge::circuits::{fig10_sweep, fig11_comparison, Tech};
+use kan_edge::client::KanClient;
 use kan_edge::config::AppConfig;
-use kan_edge::coordinator::{build_acim_with_calib, build_backend, Dispatch};
+use kan_edge::coordinator::{build_acim_with_calib, build_backend, tcp_limits, Dispatch};
 use kan_edge::error::Result;
 use kan_edge::kan::checkpoint::{Dataset, Manifest};
 use kan_edge::kan::QuantKanModel;
@@ -42,6 +43,8 @@ COMMANDS:
   models    [--model NAME]                     list / inspect registry
   publish   --weights FILE [--model N] [--version V]
                                                publish a new model version
+  bench-net [--requests N] [--batch B] [--window W]
+                                               served throughput: v1 vs v2
   eval      --model NAME --backend B           accuracy on the test set
   neurosim  --budget minimal|moderate|none     Fig 9/13 constraint search
   quantize  --g G --k K --n-bits N             ASP-KAN-HAQ geometry
@@ -52,9 +55,13 @@ COMMANDS:
   stats                                        ACIM calibration statistics
   info                                         artifact manifest summary
 
-Serving requests are JSON lines; the optional \"model\" field routes to a
-variant (\"name\" or pinned \"name@version\"):
+The endpoint speaks two protocols, auto-detected per connection (see
+docs/PROTOCOL.md): v1 JSON lines, where the optional \"model\" field
+routes to a variant (\"name\" or pinned \"name@version\"):
   {\"model\": \"kan2\", \"features\": [...]}
+and framed v2 (magic \"KAN2\") with request ids, pipelining, batch
+submit and control verbs (hello/list_models/model_info/metrics/health),
+spoken by kan_edge::client::KanClient.
 ";
 
 /// Parsed command line: subcommand + `--key value` options.
@@ -140,6 +147,7 @@ fn run(args: &Args) -> Result<()> {
         ),
         "models" => models_cmd(&cfg, args.opts.get("model").map(|s| s.as_str())),
         "publish" => publish_cmd(&cfg, args),
+        "bench-net" => bench_net_cmd(&cfg, args),
         "eval" => eval(
             &cfg,
             &args.get("model", "kan1"),
@@ -194,9 +202,14 @@ fn serve(cfg: &AppConfig, model: &str, addr: &str) -> Result<()> {
         );
     }
     let target: Arc<dyn Dispatch> = registry.clone();
-    let server = kan_edge::coordinator::TcpServer::spawn(addr, target)?;
+    let server = kan_edge::coordinator::TcpServer::spawn_with_limits(
+        addr,
+        target,
+        tcp_limits(&cfg),
+    )?;
     println!(
-        "kan-edge serving {} model(s) on {} (default {model}, hot-reload {}; Ctrl-C to stop)",
+        "kan-edge serving {} model(s) on {} (default {model}, protocols v1+v2, \
+         hot-reload {}; Ctrl-C to stop)",
         registry.model_names().len(),
         server.addr,
         if cfg.registry.reload_poll_ms > 0 { "on" } else { "off" },
@@ -305,6 +318,157 @@ fn publish_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `(requests, batches)` served so far by the (single) bench model;
+/// `(0, 0)` before its pipeline first loads.
+fn served_counts(client: &mut KanClient) -> Result<(i64, i64)> {
+    let body = client.metrics()?;
+    let report = body
+        .field("models")?
+        .as_object()
+        .and_then(|m| m.values().next())
+        .cloned();
+    Ok(match report {
+        Some(r) => (
+            r.get("requests").and_then(|v| v.as_i64()).unwrap_or(0),
+            r.get("batches").and_then(|v| v.as_i64()).unwrap_or(0),
+        ),
+        None => (0, 0),
+    })
+}
+
+fn mean_batch_delta(prev: (i64, i64), now: (i64, i64)) -> f64 {
+    let dreq = (now.0 - prev.0) as f64;
+    let dbatch = (now.1 - prev.1) as f64;
+    if dbatch > 0.0 {
+        dreq / dbatch
+    } else {
+        0.0
+    }
+}
+
+/// Self-contained network benchmark: publish a tiny synthetic KAN into
+/// a temp registry, serve it on an ephemeral port (digital backend),
+/// and measure served throughput over one connection in three modes —
+/// v1 JSON lines (one request in flight), v2 pipelined submit/poll,
+/// and v2 whole-batch submit. The per-phase "mean batch" column is the
+/// batch occupancy the *server* saw, showing that v2 lets a single
+/// connection feed the dynamic batcher multi-row batches.
+fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::time::Instant;
+
+    let requests = args.get_usize("requests", 2000).max(1);
+    let batch = args.get_usize("batch", 16).max(1);
+    let window = args.get_usize("window", 32).max(1);
+
+    // per-process dir: concurrent bench-net runs must not wipe each
+    // other's live registry mid-benchmark
+    let dir = std::env::temp_dir().join(format!("kan_edge_bench_net_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    kan_edge::registry::ModelManifest::empty().save(&dir)?;
+    let mut cfg = cfg.clone();
+    cfg.artifacts.dir = dir.to_string_lossy().into_owned();
+    cfg.artifacts.model = "bench".into();
+    cfg.server.backend = "digital".into();
+    let registry = ModelRegistry::open(&cfg)?;
+    let src = dir.join("bench.incoming.json");
+    std::fs::write(&src, kan_edge::kan::checkpoint::synthetic_checkpoint_json("bench", 0))?;
+    registry.publish_file(&src, None, None)?;
+
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = kan_edge::coordinator::TcpServer::spawn_with_limits(
+        "127.0.0.1:0",
+        target,
+        tcp_limits(&cfg),
+    )?;
+    println!(
+        "bench-net: {requests} requests per mode, digital backend, {}",
+        server.addr
+    );
+    let features = vec![0.5f32, 0.5];
+    // separate control connection: reads (requests, batches) deltas
+    // between phases for the exact per-phase batch occupancy
+    let mut probe = KanClient::connect(server.addr)?;
+    let mut last = served_counts(&mut probe)?;
+
+    // v1: JSON lines, the connection blocks until each reply arrives
+    let t0 = Instant::now();
+    {
+        let conn = std::net::TcpStream::connect(server.addr)?;
+        let mut w = conn.try_clone()?;
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+        for _ in 0..requests {
+            w.write_all(b"{\"features\":[0.5,0.5]}\n")?;
+            line.clear();
+            r.read_line(&mut line)?;
+        }
+    }
+    let v1_secs = t0.elapsed().as_secs_f64();
+    let now = served_counts(&mut probe)?;
+    let v1_mean = mean_batch_delta(last, now);
+    last = now;
+
+    // v2 pipelined: keep `window` requests in flight on one connection.
+    // Clamp to the negotiated cap: beyond it the server reader stops
+    // pulling frames, and submitting without polling past that point
+    // would deadlock both directions once the socket buffers fill.
+    let mut client = KanClient::connect(server.addr)?;
+    let window = window.min(client.server_info().max_in_flight);
+    let t0 = Instant::now();
+    let (mut submitted, mut done) = (0usize, 0usize);
+    while done < requests {
+        while submitted < requests && submitted - done < window {
+            client.submit(None, &features)?;
+            submitted += 1;
+        }
+        let (_id, outcome) = client.poll()?;
+        outcome?;
+        done += 1;
+    }
+    let v2p_secs = t0.elapsed().as_secs_f64();
+    let now = served_counts(&mut probe)?;
+    let v2p_mean = mean_batch_delta(last, now);
+    last = now;
+
+    // v2 batch submit: whole `rows` batches in one frame
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < requests {
+        let n = batch.min(requests - done);
+        let rows: Vec<Vec<f32>> = vec![features.clone(); n];
+        client.infer_batch(None, rows)?;
+        done += n;
+    }
+    let v2b_secs = t0.elapsed().as_secs_f64();
+    let now = served_counts(&mut probe)?;
+    let v2b_mean = mean_batch_delta(last, now);
+
+    println!(
+        "{:<24} {:>9} {:>9} {:>11} {:>11}",
+        "mode", "requests", "wall(s)", "req/s", "mean batch"
+    );
+    let table = [
+        ("v1 single-request".to_string(), v1_secs, v1_mean),
+        (format!("v2 pipelined (w={window})"), v2p_secs, v2p_mean),
+        (format!("v2 batch (b={batch})"), v2b_secs, v2b_mean),
+    ];
+    for (name, secs, mean) in table {
+        println!(
+            "{:<24} {:>9} {:>9.2} {:>11.0} {:>11.2}",
+            name,
+            requests,
+            secs,
+            requests as f64 / secs.max(1e-9),
+            mean
+        );
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
 fn eval(cfg: &AppConfig, model: &str, backend: &str) -> Result<()> {
     let dir = Path::new(&cfg.artifacts.dir);
     let manifest = Manifest::load(dir)?;
@@ -339,7 +503,7 @@ fn eval(cfg: &AppConfig, model: &str, backend: &str) -> Result<()> {
 fn eval_backend(be: Arc<dyn kan_edge::coordinator::InferBackend>, ds: &Dataset) -> f64 {
     let rows: Vec<Vec<f32>> = ds.test_rows().map(|(r, _)| r.to_vec()).collect();
     let labels: Vec<u32> = ds.test_rows().map(|(_, y)| y).collect();
-    let outs = be.infer_batch(&rows).expect("inference failed");
+    let outs = be.infer_batch(rows).expect("inference failed");
     let correct = outs
         .iter()
         .zip(&labels)

@@ -34,6 +34,7 @@ use super::manifest::{ModelManifest, ModelMeta};
 use super::store::{verify_file, ArtifactStore};
 use crate::config::AppConfig;
 use crate::coordinator::metrics::{MetricsHub, MetricsReport};
+use crate::coordinator::protocol::ModelSummary;
 use crate::coordinator::router::{build_backend, serve_options};
 use crate::coordinator::server::{Dispatch, InferenceService};
 use crate::error::{Error, Result};
@@ -235,9 +236,10 @@ impl ModelRegistry {
         g.live.remove(name).is_some()
     }
 
-    /// Route one request. `spec` is `None` (default model), `"name"`, or
+    /// Resolve a model spec to its live pipeline, loading it on first
+    /// use. `spec` is `None` (default model), `"name"`, or
     /// `"name@version"`; a pinned version must match the published one.
-    pub fn infer(&self, spec: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+    fn resolve(&self, spec: Option<&str>) -> Result<Arc<ServedModel>> {
         let spec = spec.unwrap_or(self.cfg.artifacts.model.as_str());
         let (name, pinned) = parse_model_spec(spec)?;
         if let Some(v) = pinned {
@@ -270,8 +272,28 @@ impl ModelRegistry {
                 )));
             }
         }
+        Ok(served)
+    }
+
+    /// Route one request (see [`ModelRegistry::resolve`] for the spec
+    /// grammar).
+    pub fn infer(&self, spec: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+        let served = self.resolve(spec)?;
         let logits = served.svc.infer(features)?;
         Ok((served.id.clone(), logits))
+    }
+
+    /// Route one whole batch: the variant is resolved once and every row
+    /// hits its dynamic batcher back-to-back, so a single call produces
+    /// multi-row batches (the v2 `infer_batch` verb lands here).
+    pub fn infer_batch(
+        &self,
+        spec: Option<&str>,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<Vec<f32>>)> {
+        let served = self.resolve(spec)?;
+        let outs = served.svc.infer_many(rows)?;
+        Ok((served.id.clone(), outs))
     }
 
     /// Rebuild `name` from the on-disk manifest/weights and atomically
@@ -379,6 +401,43 @@ impl ModelRegistry {
 impl Dispatch for ModelRegistry {
     fn dispatch(&self, model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
         self.infer(model, features)
+    }
+
+    fn dispatch_batch(
+        &self,
+        model: Option<&str>,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<Vec<f32>>)> {
+        // `infer_many` also rejects empty batches, but guarding before
+        // `resolve` avoids lazily loading a pipeline for a no-op call
+        if rows.is_empty() {
+            return Err(Error::Serving("empty batch".into()));
+        }
+        self.infer_batch(model, rows)
+    }
+
+    fn model_summaries(&self) -> Vec<ModelSummary> {
+        self.models()
+            .into_iter()
+            .map(|m| ModelSummary {
+                name: m.name,
+                version: m.meta.version,
+                kind: m.kind,
+                dims: m.dims,
+                num_params: m.num_params,
+                live: m.live,
+                accuracy: m.meta.accuracy,
+                digest: m.meta.digest,
+            })
+            .collect()
+    }
+
+    fn metrics_reports(&self) -> Vec<(String, MetricsReport)> {
+        self.metrics()
+    }
+
+    fn live_model_count(&self) -> usize {
+        self.inner.read().unwrap().live.len()
     }
 }
 

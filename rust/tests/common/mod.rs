@@ -1,0 +1,68 @@
+//! Fixtures shared by the integration-test suites (`mod common;` in
+//! each test file): temp artifact dirs, the schema-v2 test manifest
+//! over synthetic KAN variants, and a digital-backend config. The
+//! checkpoint JSON itself comes from
+//! `kan_edge::kan::checkpoint::synthetic_checkpoint_json` so the
+//! format-sensitive layer shape lives in exactly one place.
+
+// each test binary compiles its own copy and uses a different subset
+#![allow(dead_code)]
+#![allow(clippy::field_reassign_with_default)]
+
+use std::path::{Path, PathBuf};
+
+use kan_edge::config::AppConfig;
+use kan_edge::registry::digest_file;
+
+/// Fresh per-test directory under `suite` (wiped if it already exists).
+pub fn tmp_dir(suite: &str, test: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(suite).join(test);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a schema-v2 manifest over models `(name, weights-file, version)`,
+/// with correct digests computed from the files on disk.
+pub fn write_manifest_v2(dir: &Path, models: &[(&str, &str, u32)]) {
+    write_manifest_v2_with(dir, models, |_name, file| {
+        digest_file(dir.join(file)).unwrap()
+    })
+}
+
+/// Like [`write_manifest_v2`] with an arbitrary digest per model —
+/// lets failure-injection tests record a wrong one.
+pub fn write_manifest_v2_with(
+    dir: &Path,
+    models: &[(&str, &str, u32)],
+    digest_of: impl Fn(&str, &str) -> String,
+) {
+    let entries: Vec<String> = models
+        .iter()
+        .map(|(name, file, version)| {
+            let digest = digest_of(name, file);
+            format!(
+                r#""{name}":{{"kind":"kan","dims":[2,2],"g":1,"k":1,"num_params":8,
+                    "val_acc":0.9,"weights":"{file}",
+                    "meta":{{"version":{version},"digest":"{digest}",
+                            "quant":{{"g":1,"k":1,"n_bits":8}},"accuracy":0.9}}}}"#
+            )
+        })
+        .collect();
+    let text = format!(
+        r#"{{"schema_version":2,"format":1,"seed":0,
+            "dataset":{{"num_features":2,"num_classes":2,"train":0,"val":0,"test":0}},
+            "models":{{{}}},"sweep":[],"batch_sizes":[]}}"#,
+        entries.join(",")
+    );
+    std::fs::write(dir.join("manifest.json"), text).unwrap();
+}
+
+/// Config pointing at `dir` with the digital backend and `default_model`.
+pub fn test_config(dir: &Path, default_model: &str) -> AppConfig {
+    let mut cfg = AppConfig::default();
+    cfg.artifacts.dir = dir.to_string_lossy().into_owned();
+    cfg.artifacts.model = default_model.to_string();
+    cfg.server.backend = "digital".into();
+    cfg
+}

@@ -134,9 +134,9 @@ fn pjrt_padding_of_short_batches_is_correct() {
     .unwrap();
     let row: Vec<f32> = (0..17).map(|i| (i as f32) * 0.05 - 0.4).collect();
     // 1-row batch (31 padded) vs the same row inside a 3-row batch
-    let a = be.infer_batch(&[row.clone()]).unwrap();
+    let a = be.infer_batch(vec![row.clone()]).unwrap();
     let b = be
-        .infer_batch(&[vec![0.3; 17], row.clone(), vec![-0.2; 17]])
+        .infer_batch(vec![vec![0.3; 17], row.clone(), vec![-0.2; 17]])
         .unwrap();
     for (x, y) in a[0].iter().zip(&b[1]) {
         assert!((x - y).abs() < 1e-5, "{x} vs {y}");

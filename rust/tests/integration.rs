@@ -103,7 +103,7 @@ fn pjrt_matches_digital_reference() {
 
     let rows: Vec<Vec<f32>> =
         ds.test_rows().take(128).map(|(r, _)| r.to_vec()).collect();
-    let outs = pjrt.infer_batch(&rows).unwrap();
+    let outs = pjrt.infer_batch(rows.clone()).unwrap();
     let mut agree = 0;
     for (row, out) in rows.iter().zip(&outs) {
         let p_pjrt = kan_edge::kan::argmax(
@@ -230,7 +230,7 @@ fn backend_output_dims_consistent() {
         cfg.server.backend = backend_name.into();
         let be = build_backend(&cfg, &manifest, "kan1").unwrap();
         assert_eq!(be.output_dim(), 14, "{backend_name}");
-        let out = be.infer_batch(&[vec![0.0; 17]]).unwrap();
+        let out = be.infer_batch(vec![vec![0.0; 17]]).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].len(), 14);
         assert!(out[0].iter().all(|v| v.is_finite()));

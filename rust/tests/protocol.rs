@@ -1,0 +1,435 @@
+//! Serving-protocol integration tests: v1 backward compatibility,
+//! v1/v2 auto-detection on one port, framed v2 with pipelined
+//! out-of-order completion, batch submit feeding the dynamic batcher,
+//! the control plane over a live registry, request-size bounds, and
+//! the typed `KanClient` end-to-end. Fully offline (synthetic KAN
+//! checkpoints, digital backend).
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use kan_edge::client::KanClient;
+use kan_edge::coordinator::protocol::{read_frame, write_frame, FrameRead, MAGIC};
+use kan_edge::coordinator::{Dispatch, TcpLimits, TcpServer};
+use kan_edge::error::Result;
+use kan_edge::kan::checkpoint::synthetic_checkpoint_json as kan_variant_json;
+use kan_edge::registry::ModelRegistry;
+use kan_edge::util::json::Value;
+
+// ---- fixtures (shared with tests/registry.rs via tests/common) ------------
+
+mod common;
+use common::{test_config, write_manifest_v2};
+
+fn tmp_dir(test: &str) -> PathBuf {
+    common::tmp_dir("kan_edge_protocol_tests", test)
+}
+
+/// Registry server over two variants: "a" favors class 0, "b" class 1.
+fn registry_server(test: &str) -> (Arc<ModelRegistry>, TcpServer) {
+    let dir = tmp_dir(test);
+    std::fs::write(dir.join("a.weights.json"), kan_variant_json("a", 0)).unwrap();
+    std::fs::write(dir.join("b.weights.json"), kan_variant_json("b", 1)).unwrap();
+    write_manifest_v2(&dir, &[("a", "a.weights.json", 1), ("b", "b.weights.json", 1)]);
+    let registry = ModelRegistry::open(&test_config(&dir, "a")).unwrap();
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+    (registry, server)
+}
+
+/// One v1 JSON-lines request over an open connection.
+fn v1_request(
+    conn: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    body: &str,
+) -> Value {
+    conn.write_all(body.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Value::parse(line.trim()).unwrap()
+}
+
+/// Raw v2 helpers for tests that drive frames by hand.
+fn v2_connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(&MAGIC).unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    (conn, reader)
+}
+
+fn v2_send(conn: &mut TcpStream, json: &str) {
+    write_frame(conn, json.as_bytes()).unwrap();
+}
+
+fn v2_recv(reader: &mut BufReader<TcpStream>) -> Value {
+    match read_frame(reader, 1 << 20).unwrap() {
+        FrameRead::Frame(p) => Value::parse(std::str::from_utf8(&p).unwrap()).unwrap(),
+        other => panic!("expected frame, got {other:?}"),
+    }
+}
+
+// ---- v1 backward compatibility --------------------------------------------
+
+#[test]
+fn v1_clients_work_unchanged_against_the_new_server() {
+    let (_registry, server) = registry_server("v1_compat");
+    // exactly what a pre-v2 client script does: JSON lines, in-order
+    // replies, optional "model" routing, error replies for garbage
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    let v = v1_request(&mut conn, &mut reader, r#"{"features": [0.5, 0.5]}"#);
+    assert_eq!(v.get("class").unwrap().as_i64().unwrap(), 0);
+    assert_eq!(v.get("model").unwrap().as_str().unwrap(), "a@1");
+
+    let v = v1_request(
+        &mut conn,
+        &mut reader,
+        r#"{"model": "b", "features": [0.5, 0.5]}"#,
+    );
+    assert_eq!(v.get("class").unwrap().as_i64().unwrap(), 1);
+    assert_eq!(v.get("model").unwrap().as_str().unwrap(), "b@1");
+
+    // garbage gets a structured error and the connection stays usable
+    let v = v1_request(&mut conn, &mut reader, "not json at all");
+    assert!(v.get("error").is_some());
+    let v = v1_request(&mut conn, &mut reader, r#"{"features": [0.5, 0.5]}"#);
+    assert_eq!(v.get("class").unwrap().as_i64().unwrap(), 0);
+
+    server.shutdown();
+}
+
+#[test]
+fn v1_oversized_line_gets_error_then_connection_drops() {
+    let (_registry, server) = {
+        let dir = tmp_dir("v1_oversized");
+        std::fs::write(dir.join("a.weights.json"), kan_variant_json("a", 0)).unwrap();
+        write_manifest_v2(&dir, &[("a", "a.weights.json", 1)]);
+        let registry = ModelRegistry::open(&test_config(&dir, "a")).unwrap();
+        let target: Arc<dyn Dispatch> = registry.clone();
+        let limits = TcpLimits { max_request_bytes: 256, max_in_flight: 4 };
+        let server = TcpServer::spawn_with_limits("127.0.0.1:0", target, limits).unwrap();
+        (registry, server)
+    };
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    // a 4 KiB line against a 256-byte limit
+    let mut big = String::from("{\"features\": [");
+    big.push_str(&vec!["0.5"; 1024].join(","));
+    big.push_str("]}\n");
+    conn.write_all(big.as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Value::parse(line.trim()).unwrap();
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("too large"));
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "too_large");
+    // only this connection dropped (clean EOF, or RST if the server
+    // closed with part of the oversized line still unread)...
+    let mut end = String::new();
+    assert_eq!(reader.read_line(&mut end).unwrap_or(0), 0, "connection not closed");
+    // ...the server keeps serving new ones
+    let mut conn2 = TcpStream::connect(server.addr).unwrap();
+    let mut reader2 = BufReader::new(conn2.try_clone().unwrap());
+    let v = v1_request(&mut conn2, &mut reader2, r#"{"features": [0.5, 0.5]}"#);
+    assert_eq!(v.get("class").unwrap().as_i64().unwrap(), 0);
+    server.shutdown();
+}
+
+// ---- v2 framing and control plane -----------------------------------------
+
+#[test]
+fn v2_raw_hello_garbage_frame_and_ping() {
+    let (_registry, server) = registry_server("v2_raw");
+    let (mut conn, mut reader) = v2_connect(server.addr);
+
+    v2_send(&mut conn, r#"{"id": 1, "op": "hello", "client": "raw"}"#);
+    let v = v2_recv(&mut reader);
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "hello");
+    assert_eq!(v.get("protocol").unwrap().as_i64().unwrap(), 2);
+    assert!(v.get("max_frame").unwrap().as_i64().unwrap() > 0);
+
+    // a garbage frame gets a structured error; framing stays intact
+    v2_send(&mut conn, "this is not json");
+    let v = v2_recv(&mut reader);
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "error");
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "bad_request");
+
+    // ...so the connection is still usable
+    v2_send(&mut conn, r#"{"id": 2, "op": "ping"}"#);
+    let v = v2_recv(&mut reader);
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "pong");
+    assert_eq!(v.get("id").unwrap().as_i64().unwrap(), 2);
+
+    // unknown op is typed unsupported
+    v2_send(&mut conn, r#"{"id": 3, "op": "frobnicate"}"#);
+    let v = v2_recv(&mut reader);
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "unsupported");
+    assert_eq!(v.get("id").unwrap().as_i64().unwrap(), 3);
+
+    server.shutdown();
+}
+
+#[test]
+fn v2_oversized_frame_gets_error_then_connection_drops() {
+    let dir = tmp_dir("v2_oversized");
+    std::fs::write(dir.join("a.weights.json"), kan_variant_json("a", 0)).unwrap();
+    write_manifest_v2(&dir, &[("a", "a.weights.json", 1)]);
+    let registry = ModelRegistry::open(&test_config(&dir, "a")).unwrap();
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let limits = TcpLimits { max_request_bytes: 256, max_in_flight: 4 };
+    let server = TcpServer::spawn_with_limits("127.0.0.1:0", target, limits).unwrap();
+
+    let (mut conn, mut reader) = v2_connect(server.addr);
+    // header declaring a 1 MiB payload against a 256-byte limit
+    conn.write_all(&(1u32 << 20).to_be_bytes()).unwrap();
+    let v = v2_recv(&mut reader);
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "error");
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "too_large");
+    assert!(v.get("id").unwrap() == &Value::Null);
+    let mut rest = Vec::new();
+    assert_eq!(conn.try_clone().unwrap().read_to_end(&mut rest).unwrap_or(0), 0);
+    server.shutdown();
+}
+
+#[test]
+fn v2_control_plane_exposes_registry() {
+    let (_registry, server) = registry_server("v2_control");
+    let mut client = KanClient::connect(server.addr).unwrap();
+    assert_eq!(client.server_info().protocol, 2);
+    assert!(client.server_info().server.starts_with("kan-edge/"));
+    client.ping().unwrap();
+
+    let models = client.list_models().unwrap();
+    let names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+    assert_eq!(names, ["a", "b"]);
+    assert!(models.iter().all(|m| !m.live), "nothing loaded yet");
+
+    let info = client.model_info("a").unwrap();
+    assert_eq!(info.version, 1);
+    assert_eq!(info.dims, vec![2, 2]);
+    assert!(info.digest.is_some());
+    // the same spec grammar as inference routing: pinned version works,
+    // a stale pin does not
+    assert_eq!(client.model_info("a@1").unwrap().version, 1);
+    assert!(client.model_info("a@9").is_err());
+    let err = client.model_info("nope").unwrap_err();
+    assert!(err.to_string().contains("not found"), "{err}");
+
+    let (status, live) = client.health().unwrap();
+    assert_eq!(status, "ok");
+    assert_eq!(live, 0);
+
+    // first inference loads the pipeline; control plane reflects it
+    let out = client.infer_model(Some("a"), &[0.5, 0.5]).unwrap();
+    assert_eq!(out.class, 0);
+    assert_eq!(out.model, "a@1");
+    let (_, live) = client.health().unwrap();
+    assert_eq!(live, 1);
+    let models = client.list_models().unwrap();
+    assert!(models.iter().any(|m| m.name == "a" && m.live));
+
+    server.shutdown();
+}
+
+// ---- pipelining ------------------------------------------------------------
+
+/// Dispatch whose per-request latency is controlled by the second
+/// feature (milliseconds); the first feature is echoed back in the
+/// logits so responses correlate to requests.
+struct SleepyEcho;
+
+impl Dispatch for SleepyEcho {
+    fn dispatch(&self, _model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+        let delay_ms = features.get(1).copied().unwrap_or(0.0);
+        if delay_ms > 0.0 {
+            std::thread::sleep(Duration::from_millis(delay_ms as u64));
+        }
+        let x = features.first().copied().unwrap_or(0.0);
+        Ok(("echo@1".into(), vec![x, -x]))
+    }
+}
+
+#[test]
+fn v2_pipelines_32_requests_out_of_order_on_one_connection() {
+    let server = TcpServer::spawn("127.0.0.1:0", Arc::new(SleepyEcho)).unwrap();
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    // 40 pipelined requests on one connection: the first is slow
+    // (300 ms), the rest are instant — completion order must not be
+    // submission order, and every response must correlate by id
+    const N: usize = 40;
+    let mut expect = std::collections::BTreeMap::new();
+    for i in 0..N {
+        let delay = if i == 0 { 300.0f32 } else { 0.0 };
+        let id = client.submit(None, &[i as f32, delay]).unwrap();
+        expect.insert(id, i as f32);
+    }
+    let slow_id = *expect.keys().next().unwrap();
+    let mut arrival_of_slow = None;
+    for arrival in 0..N {
+        let (id, outcome) = client.poll().unwrap();
+        let out = outcome.unwrap();
+        let want = expect.remove(&id).expect("unknown or duplicate id");
+        assert_eq!(out.logits[0], want, "id {id} correlated to wrong payload");
+        assert_eq!(out.model, "echo@1");
+        if id == slow_id {
+            arrival_of_slow = Some(arrival);
+        }
+    }
+    assert!(expect.is_empty(), "missing responses: {expect:?}");
+    let pos = arrival_of_slow.expect("slow request never completed");
+    assert!(
+        pos >= N / 2,
+        "expected the slow request to finish after the fast ones, \
+         but it arrived at position {pos}/{N}"
+    );
+
+    // the transport saw real pipelining depth
+    let hwm = server.wire.to_value();
+    assert!(
+        hwm.get("in_flight_hwm").unwrap().as_i64().unwrap() > 1,
+        "no pipelining observed: {hwm}"
+    );
+    server.shutdown();
+}
+
+/// Dispatch that panics on a negative first feature, echoes otherwise.
+struct PanicOnNegative;
+
+impl Dispatch for PanicOnNegative {
+    fn dispatch(&self, _model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+        let x = features.first().copied().unwrap_or(0.0);
+        assert!(x >= 0.0, "injected dispatch panic");
+        Ok(("echo@1".into(), vec![x, -x]))
+    }
+}
+
+#[test]
+fn v2_panicking_dispatch_answers_internal_error_not_silence() {
+    let server = TcpServer::spawn("127.0.0.1:0", Arc::new(PanicOnNegative)).unwrap();
+    let mut client = KanClient::connect(server.addr).unwrap();
+    let bad = client.submit(None, &[-1.0, 0.0]).unwrap();
+    let good = client.submit(None, &[2.0, 0.0]).unwrap();
+    let mut seen = std::collections::BTreeMap::new();
+    for _ in 0..2 {
+        let (id, outcome) = client.poll().unwrap();
+        seen.insert(id, outcome);
+    }
+    // the panicking dispatch still answered (typed internal error), and
+    // the connection survived to serve the other request
+    let err = seen.remove(&bad).unwrap().unwrap_err();
+    assert!(err.to_string().contains("internal"), "{err}");
+    assert_eq!(seen.remove(&good).unwrap().unwrap().logits[0], 2.0);
+    client.ping().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn v2_in_flight_cap_backpressures_without_breaking_correctness() {
+    let limits = TcpLimits { max_request_bytes: 1 << 20, max_in_flight: 4 };
+    let server =
+        TcpServer::spawn_with_limits("127.0.0.1:0", Arc::new(SleepyEcho), limits)
+            .unwrap();
+    let mut client = KanClient::connect(server.addr).unwrap();
+    assert_eq!(client.server_info().max_in_flight, 4);
+    // submit more than the cap; the server reader blocks as needed and
+    // everything still completes exactly once
+    let mut pending = std::collections::BTreeSet::new();
+    for i in 0..12 {
+        pending.insert(client.submit(None, &[i as f32, 5.0]).unwrap());
+    }
+    for _ in 0..12 {
+        let (id, outcome) = client.poll().unwrap();
+        outcome.unwrap();
+        assert!(pending.remove(&id), "duplicate completion for {id}");
+    }
+    assert!(pending.is_empty());
+    // a surplus poll fails fast instead of blocking on a response the
+    // server will never send
+    let err = client.poll().unwrap_err();
+    assert!(err.to_string().contains("no requests in flight"), "{err}");
+    let hwm = server.wire.to_value();
+    let observed = hwm.get("in_flight_hwm").unwrap().as_i64().unwrap();
+    assert!(observed <= 4, "cap violated: {observed}");
+    server.shutdown();
+}
+
+// ---- batch submit -----------------------------------------------------------
+
+#[test]
+fn v2_batch_submit_feeds_the_batcher_whole() {
+    let (_registry, server) = registry_server("v2_batch");
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    let rows: Vec<Vec<f32>> = (0..64).map(|_| vec![0.5, 0.5]).collect();
+    let (model, results) = client.infer_batch(Some("a"), rows.clone()).unwrap();
+    assert_eq!(model, "a@1");
+    assert_eq!(results.len(), 64);
+    assert!(results.iter().all(|(_, class)| *class == 0));
+
+    // the server-side batcher must have seen multi-row batches from
+    // this single connection (the whole point of the verb)
+    let metrics = client.metrics().unwrap();
+    let report = metrics.field("models").unwrap().get("a@1").unwrap();
+    assert_eq!(report.get("requests").unwrap().as_i64().unwrap(), 64);
+    let mean_batch = report.get("mean_batch").unwrap().as_f64().unwrap();
+    assert!(
+        mean_batch > 1.5,
+        "batch submit degenerated to singletons (mean {mean_batch})"
+    );
+    let wire = metrics.field("wire").unwrap();
+    assert!(wire.get("v2_requests").unwrap().as_i64().unwrap() >= 1);
+    assert!(wire.get("v2_rows").unwrap().as_i64().unwrap() >= 64);
+
+    // batch errors are typed: unknown model
+    let err = client.infer_batch(Some("nope"), rows).unwrap_err();
+    assert!(err.to_string().contains("not_found"), "{err}");
+    server.shutdown();
+}
+
+// ---- typed client round-trips ----------------------------------------------
+
+#[test]
+fn kan_client_roundtrips_against_live_server() {
+    let (_registry, server) = registry_server("client_roundtrip");
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    // default model (config default "a")
+    let out = client.infer(&[0.5, 0.5]).unwrap();
+    assert_eq!((out.class, out.model.as_str()), (0, "a@1"));
+    // routed + pinned
+    let out = client.infer_model(Some("b"), &[0.5, 0.5]).unwrap();
+    assert_eq!((out.class, out.model.as_str()), (1, "b@1"));
+    let out = client.infer_model(Some("b@1"), &[0.5, 0.5]).unwrap();
+    assert_eq!(out.model, "b@1");
+    // stale pin is a typed error
+    let err = client.infer_model(Some("b@9"), &[0.5, 0.5]).unwrap_err();
+    assert!(err.to_string().contains("not_found"), "{err}");
+    // shape errors from the backend surface as bad_request
+    let err = client.infer_model(Some("a"), &[0.5]).unwrap_err();
+    assert!(err.to_string().contains("bad_request"), "{err}");
+    // mixed traffic on the same connection still correlates
+    client.ping().unwrap();
+    let out = client.infer(&[0.5, 0.5]).unwrap();
+    assert_eq!(out.class, 0);
+
+    // v1 and v2 clients coexist on the port
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let v = v1_request(&mut conn, &mut reader, r#"{"features": [0.5, 0.5]}"#);
+    assert_eq!(v.get("model").unwrap().as_str().unwrap(), "a@1");
+
+    let metrics = client.metrics().unwrap();
+    let wire = metrics.field("wire").unwrap();
+    assert!(wire.get("v1_requests").unwrap().as_i64().unwrap() >= 1);
+    assert!(wire.get("v2_requests").unwrap().as_i64().unwrap() >= 4);
+    assert!(wire.get("connections_active").unwrap().as_i64().unwrap() >= 2);
+
+    server.shutdown();
+}

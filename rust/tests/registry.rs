@@ -9,79 +9,19 @@
 #![allow(clippy::field_reassign_with_default)]
 
 use std::io::{BufRead, BufReader, Write};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::sync::Arc;
 
-use kan_edge::config::AppConfig;
 use kan_edge::coordinator::{Dispatch, TcpServer};
+use kan_edge::kan::checkpoint::synthetic_checkpoint_json as kan_variant_json;
 use kan_edge::registry::{digest_file, ModelManifest, ModelRegistry};
 use kan_edge::util::json::Value;
 
-/// A tiny valid KAN checkpoint (dims [2,2]) whose residual weights make
-/// every positive input land on `favor_class`.
-fn kan_variant_json(name: &str, favor_class: usize) -> String {
-    let wb = if favor_class == 0 {
-        "[1.0, 0.0, 1.0, 0.0]"
-    } else {
-        "[0.0, 1.0, 0.0, 1.0]"
-    };
-    format!(
-        r#"{{"name":"{name}","kind":"kan","dims":[2,2],"g":1,"k":1,"n_bits":8,
-            "num_params":8,"quant_test_acc":0.9,
-            "layers":[{{"din":2,"dout":2,"lo":-1.0,"hi":1.0,"ld":2,
-              "sh_lut":[[255,0],[170,85],[128,128]],
-              "coeff_q":[0,0,0,0,0,0,0,0],"coeff_scale":0.01,
-              "wb":{wb}}}]}}"#
-    )
-}
+mod common;
+use common::{test_config, write_manifest_v2, write_manifest_v2_with};
 
 fn tmp_dir(test: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join("kan_edge_registry_tests").join(test);
-    let _ = std::fs::remove_dir_all(&dir);
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
-}
-
-/// Write a schema-v2 manifest over models `(name, weights-file, version)`,
-/// with correct digests computed from the files on disk.
-fn write_manifest_v2(dir: &Path, models: &[(&str, &str, u32)]) {
-    write_manifest_v2_with(dir, models, |_name, file| {
-        digest_file(dir.join(file)).unwrap()
-    })
-}
-
-fn write_manifest_v2_with(
-    dir: &Path,
-    models: &[(&str, &str, u32)],
-    digest_of: impl Fn(&str, &str) -> String,
-) {
-    let entries: Vec<String> = models
-        .iter()
-        .map(|(name, file, version)| {
-            let digest = digest_of(name, file);
-            format!(
-                r#""{name}":{{"kind":"kan","dims":[2,2],"g":1,"k":1,"num_params":8,
-                    "val_acc":0.9,"weights":"{file}",
-                    "meta":{{"version":{version},"digest":"{digest}",
-                            "quant":{{"g":1,"k":1,"n_bits":8}},"accuracy":0.9}}}}"#
-            )
-        })
-        .collect();
-    let text = format!(
-        r#"{{"schema_version":2,"format":1,"seed":0,
-            "dataset":{{"num_features":2,"num_classes":2,"train":0,"val":0,"test":0}},
-            "models":{{{}}},"sweep":[],"batch_sizes":[]}}"#,
-        entries.join(",")
-    );
-    std::fs::write(dir.join("manifest.json"), text).unwrap();
-}
-
-fn test_config(dir: &Path, default_model: &str) -> AppConfig {
-    let mut cfg = AppConfig::default();
-    cfg.artifacts.dir = dir.to_string_lossy().into_owned();
-    cfg.artifacts.model = default_model.to_string();
-    cfg.server.backend = "digital".into();
-    cfg
+    common::tmp_dir("kan_edge_registry_tests", test)
 }
 
 /// Two-variant artifacts dir: model "a" favors class 0, "b" favors 1.
