@@ -32,6 +32,7 @@ fn run_load(
         policy: BatchPolicy { max_batch: 32, deadline: Duration::from_micros(60) },
         queue_depth: 4096,
         workers: 2,
+        ..ServeOptions::default()
     };
     let svc = InferenceService::start(backend, opts);
 

@@ -95,6 +95,7 @@ fn main() {
         },
         queue_depth: 1024,
         workers: 2,
+        ..ServeOptions::default()
     };
     let svc = InferenceService::start(Arc::new(Echo), opts);
     let r = bench("single blocking infer", 400, || {

@@ -167,7 +167,9 @@ impl KanClient {
         })?;
         match resp {
             Response::InferBatch { model, results, .. } => Ok((model, results)),
-            Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+            Response::Error { code, message, retry_after_ms, .. } => {
+                Err(wire_error(code, &message, retry_after_ms))
+            }
             other => Err(unexpected(other)),
         }
     }
@@ -227,7 +229,9 @@ impl KanClient {
         let id = self.fresh_id();
         match self.call(Request::ListModels { id })? {
             Response::ModelList { models, .. } => Ok(models),
-            Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+            Response::Error { code, message, retry_after_ms, .. } => {
+                Err(wire_error(code, &message, retry_after_ms))
+            }
             other => Err(unexpected(other)),
         }
     }
@@ -237,7 +241,9 @@ impl KanClient {
         let id = self.fresh_id();
         match self.call(Request::ModelInfo { id, model: name.to_string() })? {
             Response::ModelInfo { model, .. } => Ok(model),
-            Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+            Response::Error { code, message, retry_after_ms, .. } => {
+                Err(wire_error(code, &message, retry_after_ms))
+            }
             other => Err(unexpected(other)),
         }
     }
@@ -248,7 +254,9 @@ impl KanClient {
         let id = self.fresh_id();
         match self.call(Request::Metrics { id })? {
             Response::Metrics { body, .. } => Ok(body),
-            Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+            Response::Error { code, message, retry_after_ms, .. } => {
+                Err(wire_error(code, &message, retry_after_ms))
+            }
             other => Err(unexpected(other)),
         }
     }
@@ -258,7 +266,9 @@ impl KanClient {
         let id = self.fresh_id();
         match self.call(Request::Health { id })? {
             Response::Health { status, models_live, .. } => Ok((status, models_live)),
-            Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+            Response::Error { code, message, retry_after_ms, .. } => {
+                Err(wire_error(code, &message, retry_after_ms))
+            }
             other => Err(unexpected(other)),
         }
     }
@@ -344,14 +354,28 @@ fn into_inference(resp: Response) -> Result<Inference> {
         Response::Infer { model, logits, class, .. } => {
             Ok(Inference { model, logits, class })
         }
-        Response::Error { code, message, .. } => Err(wire_error(code, &message)),
+        Response::Error { code, message, retry_after_ms, .. } => {
+            Err(wire_error(code, &message, retry_after_ms))
+        }
         other => Err(unexpected(other)),
     }
 }
 
-/// Uniform client-side rendering of a wire error: every method keeps
-/// the machine-readable code in the message as `[code] ...`.
-fn wire_error(code: crate::coordinator::protocol::ErrorCode, message: &str) -> Error {
+/// Uniform client-side rendering of a wire error. Admission rejections
+/// come back as the typed [`Error::Overloaded`] so callers can match on
+/// it and honor the server's `retry_after_ms` backoff hint; everything
+/// else keeps the machine-readable code in the message as `[code] ...`.
+fn wire_error(
+    code: crate::coordinator::protocol::ErrorCode,
+    message: &str,
+    retry_after_ms: Option<u64>,
+) -> Error {
+    if code == crate::coordinator::protocol::ErrorCode::Overloaded {
+        return Error::Overloaded {
+            message: message.to_string(),
+            retry_after_ms: retry_after_ms.unwrap_or(0),
+        };
+    }
     Error::Serving(format!("[{}] {message}", code.as_str()))
 }
 

@@ -19,6 +19,7 @@ use crate::util::json::Value;
 pub struct AppConfig {
     pub artifacts: ArtifactsConfig,
     pub server: ServerConfig,
+    pub scheduler: SchedulerConfig,
     pub registry: RegistryConfig,
     pub hardware: HardwareConfig,
     pub neurosim: NeurosimConfig,
@@ -71,10 +72,37 @@ impl Default for ServerConfig {
             workers: 2,
             // without the pjrt feature the AOT path is a stub, so the
             // rust integer reference is the sensible default
-            backend: if cfg!(feature = "pjrt") { "pjrt" } else { "digital" }.into(),
+            backend: if cfg!(all(feature = "pjrt", feature = "xla")) {
+                "pjrt"
+            } else {
+                "digital"
+            }
+            .into(),
             max_request_bytes: wire.max_request_bytes,
             max_in_flight: wire.max_in_flight,
         }
+    }
+}
+
+/// `[scheduler]` — fair-admission knobs (see
+/// [`crate::coordinator::scheduler`] and `docs/SCHEDULING.md`).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Admission policy: `"fifo"` (seed behavior: one global bounded
+    /// queue) or `"drr"` (deficit-round-robin across clients with
+    /// per-client quotas).
+    pub policy: String,
+    /// Max in-queue rows per client before admission rejects with a
+    /// structured `overloaded` + `retry_after_ms` (`drr` only).
+    pub quota: usize,
+    /// Rows drained from one client before rotating to the next (`drr`
+    /// quantum).
+    pub fairness_window: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { policy: "fifo".into(), quota: 64, fairness_window: 8 }
     }
 }
 
@@ -191,6 +219,11 @@ impl AppConfig {
             get_usize(s, "max_request_bytes", &mut self.server.max_request_bytes);
             get_usize(s, "max_in_flight", &mut self.server.max_in_flight);
         }
+        if let Some(s) = v.get("scheduler") {
+            get_string(s, "policy", &mut self.scheduler.policy);
+            get_usize(s, "quota", &mut self.scheduler.quota);
+            get_usize(s, "fairness_window", &mut self.scheduler.fairness_window);
+        }
         if let Some(r) = v.get("registry") {
             get_usize(r, "max_loaded", &mut self.registry.max_loaded);
             get_u64(r, "reload_poll_ms", &mut self.registry.reload_poll_ms);
@@ -279,6 +312,18 @@ impl AppConfig {
         if self.server.max_in_flight == 0 {
             return Err(Error::Config("server.max_in_flight must be > 0".into()));
         }
+        if !matches!(self.scheduler.policy.as_str(), "fifo" | "drr") {
+            return Err(Error::Config(format!(
+                "unknown scheduler.policy '{}' (fifo | drr)",
+                self.scheduler.policy
+            )));
+        }
+        if self.scheduler.quota == 0 {
+            return Err(Error::Config("scheduler.quota must be > 0".into()));
+        }
+        if self.scheduler.fairness_window == 0 {
+            return Err(Error::Config("scheduler.fairness_window must be > 0".into()));
+        }
         if self.registry.max_loaded == 0 {
             return Err(Error::Config("registry.max_loaded must be > 0".into()));
         }
@@ -340,6 +385,31 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.server.max_request_bytes = 4096;
         cfg.server.max_in_flight = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn scheduler_section_parses_and_validates() {
+        let mut cfg = AppConfig::default();
+        assert_eq!(cfg.scheduler.policy, "fifo"); // seed behavior by default
+        cfg.apply(
+            &Value::parse(
+                r#"{"scheduler": {"policy": "drr", "quota": 16, "fairness_window": 4}}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(cfg.scheduler.policy, "drr");
+        assert_eq!(cfg.scheduler.quota, 16);
+        assert_eq!(cfg.scheduler.fairness_window, 4);
+        cfg.validate().unwrap();
+
+        cfg.scheduler.policy = "wfq".into();
+        assert!(cfg.validate().is_err());
+        cfg.scheduler.policy = "drr".into();
+        cfg.scheduler.quota = 0;
+        assert!(cfg.validate().is_err());
+        cfg.scheduler.quota = 16;
+        cfg.scheduler.fairness_window = 0;
         assert!(cfg.validate().is_err());
     }
 

@@ -3,13 +3,17 @@
 //! latency/throughput knob of serving systems (vLLM-style), sized here for
 //! edge KAN inference where batches are small and deadlines tight.
 //!
-//! Built on `std::sync::mpsc` (the offline image has no tokio); the
-//! batcher runs on its own thread and `recv_timeout` implements the
-//! deadline.
+//! Requests arrive through the admission [`Scheduler`](super::scheduler)
+//! (FIFO or deficit-round-robin — see `docs/SCHEDULING.md`); the batcher
+//! runs on its own thread, pulling in the scheduler's fair order, and
+//! emits closed batches to the worker pool over `std::sync::mpsc` (the
+//! offline image has no tokio).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::scheduler::{Recv, Scheduler};
 use crate::error::{Error, Result};
 
 /// One queued inference request. `respond` is a rendezvous channel the
@@ -58,38 +62,27 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Pull requests from `rx` and emit closed batches to `tx`.
-///
-/// Runs until the request channel closes; flushes the partial batch on
-/// shutdown. This is the leader loop of the serving pipeline.
-pub fn run_batcher(rx: Receiver<Request>, tx: SyncSender<Batch>, policy: BatchPolicy) {
+/// Pull requests from the admission scheduler and emit closed batches to
+/// `tx`. Runs until the scheduler closes *and* drains; the partial batch
+/// in flight at shutdown is flushed, never dropped. This is the leader
+/// loop of the serving pipeline.
+pub fn run_batcher(sched: Arc<Scheduler>, tx: SyncSender<Batch>, policy: BatchPolicy) {
     let mut pending: Vec<Request> = Vec::with_capacity(policy.max_batch);
-    'outer: loop {
+    loop {
         // wait for the first request of the batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break,
+        let first = match sched.recv() {
+            Some(r) => r,
+            None => break, // closed and drained
         };
         let batch_deadline = Instant::now() + policy.deadline;
         pending.push(first);
         // fill until size or deadline
         while pending.len() < policy.max_batch {
-            let now = Instant::now();
-            if now >= batch_deadline {
-                break;
-            }
-            match rx.recv_timeout(batch_deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    // flush and stop
-                    let batch = Batch {
-                        requests: std::mem::take(&mut pending),
-                        closed_at: Instant::now(),
-                    };
-                    let _ = tx.send(batch);
-                    break 'outer;
-                }
+            match sched.recv_deadline(batch_deadline) {
+                Recv::Req(r) => pending.push(r),
+                Recv::Timeout => break,
+                // closed and drained: flush below, exit on the next recv
+                Recv::Closed => break,
             }
         }
         let batch = Batch {
@@ -102,26 +95,16 @@ pub fn run_batcher(rx: Receiver<Request>, tx: SyncSender<Batch>, policy: BatchPo
     }
 }
 
-/// Admit a request or hand it back. The error distinguishes a full
-/// queue (admission control — retryable) from a disconnected channel
-/// (service shut down — not), so callers report the right condition.
-pub fn try_admit(
-    tx: &SyncSender<Request>,
-    req: Request,
-) -> std::result::Result<(), TrySendError<Request>> {
-    tx.try_send(req)
-}
-
-/// Standard rejection reply for a failed admission.
-pub fn reject(req: Request) {
-    let _ = req
-        .respond
-        .try_send(Err(Error::Serving("queue full: admission rejected".into())));
+/// Answer a request that was refused admission (or failed before
+/// reaching a worker) with `err`.
+pub fn reject(req: Request, err: Error) {
+    let _ = req.respond.try_send(Err(err));
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::scheduler::{ClientId, SchedulerOptions, Submit};
     use std::sync::mpsc::{sync_channel, Receiver as StdReceiver};
     use std::thread;
 
@@ -133,76 +116,71 @@ mod tests {
         )
     }
 
+    fn sched(capacity: usize) -> Arc<Scheduler> {
+        Arc::new(Scheduler::new(capacity, SchedulerOptions::default()))
+    }
+
+    fn admit(s: &Scheduler, v: f32) -> StdReceiver<Result<Vec<f32>>> {
+        let (req, rx) = mk_request(v);
+        match s.try_submit(ClientId::fresh(), req) {
+            Submit::Admitted => rx,
+            _ => panic!("admission failed"),
+        }
+    }
+
     #[test]
     fn closes_on_max_batch() {
-        let (req_tx, req_rx) = sync_channel(64);
+        let s = sched(64);
         let (batch_tx, batch_rx) = sync_channel(8);
         let policy = BatchPolicy { max_batch: 4, deadline: Duration::from_secs(10) };
-        thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let s2 = s.clone();
+        thread::spawn(move || run_batcher(s2, batch_tx, policy));
         let mut keep = Vec::new();
         for i in 0..4 {
-            let (r, rx) = mk_request(i as f32);
-            keep.push(rx);
-            req_tx.send(r).unwrap();
+            keep.push(admit(&s, i as f32));
         }
         let batch = batch_rx.recv().unwrap();
         assert_eq!(batch.len(), 4);
+        s.close();
     }
 
     #[test]
     fn closes_on_deadline() {
-        let (req_tx, req_rx) = sync_channel(64);
+        let s = sched(64);
         let (batch_tx, batch_rx) = sync_channel(8);
         let policy =
             BatchPolicy { max_batch: 100, deadline: Duration::from_millis(20) };
-        thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
-        let (r, _rx) = mk_request(1.0);
+        let s2 = s.clone();
+        thread::spawn(move || run_batcher(s2, batch_tx, policy));
         let t0 = Instant::now();
-        req_tx.send(r).unwrap();
+        let _rx = admit(&s, 1.0);
         let batch = batch_rx.recv().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(15));
+        s.close();
     }
 
     #[test]
     fn flushes_on_shutdown() {
-        let (req_tx, req_rx) = sync_channel(64);
+        let s = sched(64);
         let (batch_tx, batch_rx) = sync_channel(8);
         let policy = BatchPolicy { max_batch: 100, deadline: Duration::from_secs(10) };
-        let handle = thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
-        let (r, _rx) = mk_request(1.0);
-        req_tx.send(r).unwrap();
+        let s2 = s.clone();
+        let handle = thread::spawn(move || run_batcher(s2, batch_tx, policy));
+        let _rx = admit(&s, 1.0);
         thread::sleep(Duration::from_millis(20)); // batcher picked it up
-        drop(req_tx); // close channel while batch is filling
+        s.close(); // close while the batch is filling
         let batch = batch_rx.recv().unwrap();
         assert_eq!(batch.len(), 1);
         handle.join().unwrap();
     }
 
     #[test]
-    fn admission_control_rejects_when_full() {
-        let (req_tx, _req_rx) = sync_channel(1);
-        let (r1, _rx1) = mk_request(1.0);
-        assert!(try_admit(&req_tx, r1).is_ok());
-        let (r2, rx2) = mk_request(2.0);
-        let rejected = match try_admit(&req_tx, r2) {
-            Err(TrySendError::Full(r)) => r,
-            other => panic!("expected Full, got {:?}", other.is_ok()),
-        };
-        reject(rejected);
-        let resp = rx2.recv().unwrap();
-        assert!(resp.is_err());
-    }
-
-    #[test]
-    fn admission_distinguishes_shutdown_from_full() {
-        let (req_tx, req_rx) = sync_channel(1);
-        drop(req_rx);
-        let (r, _rx) = mk_request(1.0);
-        assert!(matches!(
-            try_admit(&req_tx, r),
-            Err(TrySendError::Disconnected(_))
-        ));
+    fn rejection_reply_reaches_the_waiter() {
+        let (req, rx) = mk_request(2.0);
+        reject(req, Error::Serving("queue full: admission rejected".into()));
+        let resp = rx.recv().unwrap();
+        assert!(resp.unwrap_err().to_string().contains("queue full"));
     }
 
     #[test]

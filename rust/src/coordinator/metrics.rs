@@ -1,14 +1,37 @@
-//! Serving metrics: latency percentiles, throughput, batch occupancy.
+//! Serving metrics: latency percentiles, throughput, batch occupancy —
+//! in **bounded** memory.
 //!
-//! Lock-free on the hot path is unnecessary at edge request rates; a
-//! mutexed reservoir keeps the code simple and the report exact.
+//! ## Exact vs sampled (the contract)
 //!
-//! With multi-model serving each model's [`crate::coordinator::server::InferenceService`]
-//! owns one [`Metrics`]; a [`MetricsHub`] keys them by model id
-//! (`name@version`) and computes an exact aggregate rollup by merging the
-//! raw reservoirs (percentiles of merged samples, not averages of
-//! percentiles). Retired model versions keep their metrics in the hub so
-//! the rollup stays complete across hot-reloads.
+//! * **Counters are exact**: `requests`, `batches`, `rejected`,
+//!   `errors`, the batch-occupancy mean (`requests-summed-per-batch /
+//!   batches`), and the wall-clock throughput are monotonic integers or
+//!   ratios of them — never sampled, never reset.
+//! * **Percentiles are sampled**: latency and queue-wait distributions
+//!   are kept as fixed-size reservoirs (Vitter's Algorithm R over the
+//!   crate's deterministic [`crate::util::rng::Rng`]). Up to
+//!   [`DEFAULT_RESERVOIR_SIZE`] observations per series the percentiles
+//!   are exact; beyond that each retained sample is a uniform draw from
+//!   the full history, so a reported percentile is an unbiased estimate
+//!   with error O(1/√size) in rank. Memory and snapshot cost are
+//!   O(reservoir) **regardless of uptime** — the v2 `metrics`/`health`
+//!   verbs make snapshots remotely triggerable per connection, so they
+//!   must not grow with request count.
+//!
+//! With multi-model serving each model's
+//! [`crate::coordinator::server::InferenceService`] owns one [`Metrics`];
+//! a [`MetricsHub`] keys them by model id (`name@version`). The hub
+//! rollup merges reservoirs *weighted by how many observations each
+//! sample represents* (percentiles of the merged sample population, not
+//! averages of percentiles); counters roll up exactly. Retired model
+//! versions keep their metrics in the hub so the rollup stays complete
+//! across hot-reloads.
+//!
+//! Lock discipline: every public read path snapshots under the lock and
+//! sorts/serializes after releasing it, and the hub clones its per-model
+//! `Arc`s before snapshotting, so a slow remote `metrics` client can
+//! never stall `record_request` on the serving path or `for_model` on
+//! the load path.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -16,19 +39,59 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::util::json::{obj, Value};
+use crate::util::rng::Rng;
 
-/// Aggregated serving metrics.
-#[derive(Debug, Default)]
-pub struct Metrics {
-    inner: Mutex<Inner>,
+/// Retained samples per series (latency, queue wait). 2 × 8 KiB per
+/// model at u64 samples — edge-friendly.
+pub const DEFAULT_RESERVOIR_SIZE: usize = 1024;
+
+/// Fixed-size uniform sample of an unbounded observation stream
+/// (Vitter's Algorithm R). Deterministic given the seed; the modulo on
+/// the raw 64-bit draw has negligible bias at these ranges.
+#[derive(Debug, Clone)]
+struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<u64>,
+    rng: Rng,
 }
 
-#[derive(Debug, Default, Clone)]
+impl Reservoir {
+    fn new(cap: usize, seed: u64) -> Self {
+        Self { cap: cap.max(1), seen: 0, samples: Vec::new(), rng: Rng::new(seed) }
+    }
+
+    fn record(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.next_u64() % self.seen;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    /// Observations each retained sample stands for (≥ 1.0).
+    fn weight(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.seen as f64 / self.samples.len() as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
 struct Inner {
-    latencies_us: Vec<u64>,
-    queue_waits_us: Vec<u64>,
-    batch_sizes: Vec<usize>,
+    latencies_us: Reservoir,
+    queue_waits_us: Reservoir,
     requests: u64,
+    batches: u64,
+    /// Σ batch size — `batched_rows / batches` is the exact mean
+    /// occupancy over any interval (via deltas), with no per-batch state.
+    batched_rows: u64,
     rejected: u64,
     errors: u64,
     started: Option<Instant>,
@@ -36,35 +99,39 @@ struct Inner {
 }
 
 impl Inner {
-    fn merge(&mut self, other: &Inner) {
-        self.latencies_us.extend_from_slice(&other.latencies_us);
-        self.queue_waits_us.extend_from_slice(&other.queue_waits_us);
-        self.batch_sizes.extend_from_slice(&other.batch_sizes);
-        self.requests += other.requests;
-        self.rejected += other.rejected;
-        self.errors += other.errors;
-        self.started = match (self.started, other.started) {
-            (Some(a), Some(b)) => Some(a.min(b)),
-            (a, b) => a.or(b),
-        };
-        self.finished = match (self.finished, other.finished) {
-            (Some(a), Some(b)) => Some(a.max(b)),
-            (a, b) => a.or(b),
-        };
+    fn new(reservoir: usize) -> Self {
+        // fixed distinct seeds: determinism is a feature (reproducible
+        // reports in tests), independence between the two series is not
+        // statistically needed — they are never compared sample-wise
+        Self {
+            latencies_us: Reservoir::new(reservoir, 0x1A7E_11C1),
+            queue_waits_us: Reservoir::new(reservoir, 0x9E_0F_ABCD),
+            requests: 0,
+            batches: 0,
+            batched_rows: 0,
+            rejected: 0,
+            errors: 0,
+            started: None,
+            finished: None,
+        }
+    }
+
+    fn wall_secs(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
+            _ => 0.0,
+        }
     }
 
     /// Consumes the snapshot so the reservoirs sort in place (no second
     /// copy on top of the one `snapshot()` took under the lock).
     fn report(mut self) -> MetricsReport {
-        self.latencies_us.sort_unstable();
-        self.queue_waits_us.sort_unstable();
-        let wall = match (self.started, self.finished) {
-            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
-            _ => 0.0,
-        };
+        self.latencies_us.samples.sort_unstable();
+        self.queue_waits_us.samples.sort_unstable();
+        let wall = self.wall_secs();
         MetricsReport {
             requests: self.requests,
-            batches: self.batch_sizes.len() as u64,
+            batches: self.batches,
             rejected: self.rejected,
             errors: self.errors,
             throughput_rps: if wall > 0.0 {
@@ -72,16 +139,28 @@ impl Inner {
             } else {
                 0.0
             },
-            latency_p50_us: percentile(&self.latencies_us, 0.50),
-            latency_p99_us: percentile(&self.latencies_us, 0.99),
-            queue_wait_p50_us: percentile(&self.queue_waits_us, 0.50),
-            mean_batch: if self.batch_sizes.is_empty() {
+            latency_p50_us: percentile(&self.latencies_us.samples, 0.50),
+            latency_p99_us: percentile(&self.latencies_us.samples, 0.99),
+            queue_wait_p50_us: percentile(&self.queue_waits_us.samples, 0.50),
+            mean_batch: if self.batches == 0 {
                 0.0
             } else {
-                self.batch_sizes.iter().sum::<usize>() as f64
-                    / self.batch_sizes.len() as f64
+                self.batched_rows as f64 / self.batches as f64
             },
         }
+    }
+}
+
+/// Aggregated serving metrics (one per model pipeline; see module docs
+/// for the exact-vs-sampled contract).
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -120,7 +199,12 @@ impl MetricsReport {
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_reservoir(DEFAULT_RESERVOIR_SIZE)
+    }
+
+    /// Explicit reservoir size (tests; production uses the default).
+    pub fn with_reservoir(size: usize) -> Self {
+        Self { inner: Mutex::new(Inner::new(size)) }
     }
 
     pub fn record_request(&self, latency: Duration, queue_wait: Duration) {
@@ -128,13 +212,15 @@ impl Metrics {
         let now = Instant::now();
         g.started.get_or_insert(now);
         g.finished = Some(now);
-        g.latencies_us.push(latency.as_micros() as u64);
-        g.queue_waits_us.push(queue_wait.as_micros() as u64);
+        g.latencies_us.record(latency.as_micros() as u64);
+        g.queue_waits_us.record(queue_wait.as_micros() as u64);
         g.requests += 1;
     }
 
     pub fn record_batch(&self, size: usize) {
-        self.inner.lock().unwrap().batch_sizes.push(size);
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_rows += size as u64;
     }
 
     pub fn record_rejection(&self) {
@@ -147,9 +233,16 @@ impl Metrics {
 
     pub fn report(&self) -> MetricsReport {
         // snapshot under the lock, sort outside it: the v2 `metrics`
-        // verb makes reports remotely triggerable, and sorting a large
-        // reservoir must not stall `record_request` on the serving path
+        // verb makes reports remotely triggerable, and post-processing
+        // must not stall `record_request` on the serving path
         self.snapshot().report()
+    }
+
+    /// `(retained, observed)` for the latency series — the test hook for
+    /// the boundedness contract (retained ≤ reservoir size always).
+    pub fn latency_sample_state(&self) -> (usize, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.latencies_us.samples.len(), g.latencies_us.seen)
     }
 
     fn snapshot(&self) -> Inner {
@@ -157,7 +250,7 @@ impl Metrics {
     }
 }
 
-/// Per-model metrics registry with an exact aggregate rollup.
+/// Per-model metrics registry with a weighted aggregate rollup.
 #[derive(Debug, Default)]
 pub struct MetricsHub {
     models: Mutex<BTreeMap<String, Arc<Metrics>>>,
@@ -179,38 +272,88 @@ impl MetricsHub {
             .clone()
     }
 
-    /// Per-model reports, sorted by model id. The hub lock is held only
-    /// to clone the `Arc`s — the per-model snapshot/sort (O(reservoir))
-    /// runs after it is released, so a remote `metrics` request cannot
-    /// stall `for_model` (lazy loads, hot reloads).
-    pub fn reports(&self) -> Vec<(String, MetricsReport)> {
-        let handles: Vec<(String, Arc<Metrics>)> = self
-            .models
+    /// Clone the per-model handles under the hub lock and release it
+    /// before touching any per-model state — the snapshot/sort/serialize
+    /// work (O(reservoir) each) must never run under the hub lock, or a
+    /// slow remote `metrics` client would stall `for_model` (lazy loads,
+    /// hot reloads) and recording.
+    fn handles(&self) -> Vec<(String, Arc<Metrics>)> {
+        self.models
             .lock()
             .unwrap()
             .iter()
             .map(|(id, m)| (id.clone(), m.clone()))
-            .collect();
-        handles
+            .collect()
+    }
+
+    /// Per-model reports, sorted by model id.
+    pub fn reports(&self) -> Vec<(String, MetricsReport)> {
+        self.handles()
             .into_iter()
             .map(|(id, m)| (id, m.report()))
             .collect()
     }
 
-    /// Exact rollup across every model ever served by this hub.
+    /// Rollup across every model ever served by this hub: exact counter
+    /// sums; percentiles over the union of the reservoirs with each
+    /// sample weighted by the observations it represents.
     pub fn aggregate(&self) -> MetricsReport {
         let snapshots: Vec<Inner> = self
-            .models
-            .lock()
-            .unwrap()
-            .values()
-            .map(|m| m.snapshot())
+            .handles()
+            .into_iter()
+            .map(|(_, m)| m.snapshot())
             .collect();
-        let mut acc = Inner::default();
+        let mut requests = 0u64;
+        let mut batches = 0u64;
+        let mut batched_rows = 0u64;
+        let mut rejected = 0u64;
+        let mut errors = 0u64;
+        let mut started: Option<Instant> = None;
+        let mut finished: Option<Instant> = None;
+        let mut latencies: Vec<(u64, f64)> = Vec::new();
+        let mut queue_waits: Vec<(u64, f64)> = Vec::new();
         for s in &snapshots {
-            acc.merge(s);
+            requests += s.requests;
+            batches += s.batches;
+            batched_rows += s.batched_rows;
+            rejected += s.rejected;
+            errors += s.errors;
+            started = match (started, s.started) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            finished = match (finished, s.finished) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                (a, b) => a.or(b),
+            };
+            let lw = s.latencies_us.weight();
+            latencies.extend(s.latencies_us.samples.iter().map(|&v| (v, lw)));
+            let qw = s.queue_waits_us.weight();
+            queue_waits.extend(s.queue_waits_us.samples.iter().map(|&v| (v, qw)));
         }
-        acc.report()
+        let wall = match (started, finished) {
+            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        // sort once per series; both percentile walks reuse the order
+        // (this runs on the remotely-triggerable v2 `metrics` path)
+        latencies.sort_unstable_by_key(|&(v, _)| v);
+        queue_waits.sort_unstable_by_key(|&(v, _)| v);
+        MetricsReport {
+            requests,
+            batches,
+            rejected,
+            errors,
+            throughput_rps: if wall > 0.0 { requests as f64 / wall } else { 0.0 },
+            latency_p50_us: percentile_weighted(&latencies, 0.50),
+            latency_p99_us: percentile_weighted(&latencies, 0.99),
+            queue_wait_p50_us: percentile_weighted(&queue_waits, 0.50),
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                batched_rows as f64 / batches as f64
+            },
+        }
     }
 }
 
@@ -296,12 +439,36 @@ impl WireMetrics {
     }
 }
 
-fn percentile(sorted: &[u64], p: f64) -> u64 {
+/// Index-based percentile over a sorted series (`0` when empty). Public
+/// so out-of-crate consumers (e.g. `kan-edge bench-net`) report
+/// percentiles with exactly the serving core's index contract.
+pub fn percentile(sorted: &[u64], p: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
     }
     let idx = ((sorted.len() as f64 - 1.0) * p).floor() as usize;
     sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Percentile over weighted samples **already sorted by value**: walk
+/// the cumulative weight to `p × total`. Used for the hub rollup, where
+/// reservoirs of different coverage merge (a sample from a busy model
+/// stands for more observations than one from an idle model).
+fn percentile_weighted(sorted: &[(u64, f64)], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    debug_assert!(sorted.windows(2).all(|w| w[0].0 <= w[1].0));
+    let total: f64 = sorted.iter().map(|&(_, w)| w).sum();
+    let target = p * total;
+    let mut cum = 0.0;
+    for &(v, w) in sorted.iter() {
+        cum += w;
+        if cum >= target {
+            return v;
+        }
+    }
+    sorted.last().map(|&(v, _)| v).unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -314,6 +481,16 @@ mod tests {
         assert_eq!(percentile(&v, 0.50), 50);
         assert_eq!(percentile(&v, 0.99), 99);
         assert_eq!(percentile(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn weighted_percentiles() {
+        // one heavy sample (stands for 9 observations) vs one light,
+        // pre-sorted by value as the contract requires
+        let s = vec![(100u64, 9.0), (900u64, 1.0)];
+        assert_eq!(percentile_weighted(&s, 0.50), 100);
+        assert_eq!(percentile_weighted(&s, 0.95), 900);
+        assert_eq!(percentile_weighted(&[], 0.5), 0);
     }
 
     #[test]
@@ -337,6 +514,37 @@ mod tests {
     }
 
     #[test]
+    fn reservoir_is_bounded_and_uniform() {
+        let m = Metrics::with_reservoir(64);
+        for i in 0..10_000u64 {
+            m.record_request(Duration::from_micros(i), Duration::from_micros(1));
+        }
+        let (retained, seen) = m.latency_sample_state();
+        assert_eq!(retained, 64, "reservoir must stay at capacity");
+        assert_eq!(seen, 10_000);
+        // counters stay exact while percentiles are sampled
+        let r = m.report();
+        assert_eq!(r.requests, 10_000);
+        // p50 of uniform 0..10000 ≈ 5000; 64 samples → σ ≈ 6.2% of the
+        // range, so ±25% is > 4σ — deterministic anyway (fixed rng seed)
+        let p50 = r.latency_p50_us as f64;
+        assert!((2_500.0..=7_500.0).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn small_streams_report_exact_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_request(Duration::from_micros(i), Duration::from_micros(i));
+        }
+        let r = m.report();
+        // fewer observations than the reservoir: everything retained
+        assert_eq!(r.latency_p50_us, 50);
+        assert_eq!(r.latency_p99_us, 99);
+        assert_eq!(r.queue_wait_p50_us, 50);
+    }
+
+    #[test]
     fn hub_rolls_up_across_models() {
         let hub = MetricsHub::new();
         let a = hub.for_model("kan1@1");
@@ -356,8 +564,32 @@ mod tests {
         let agg = hub.aggregate();
         assert_eq!(agg.requests, 4);
         assert_eq!(agg.errors, 1);
-        // merged reservoir: p50 of [100,100,100,900] is 100, not 500
+        // merged population: p50 of {100,100,100,900} is 100, not 500
         assert_eq!(agg.latency_p50_us, 100);
+    }
+
+    #[test]
+    fn hub_rollup_weights_unequal_coverage() {
+        // model a saw 4096 fast requests through a tiny reservoir; model
+        // b saw 2 slow ones fully retained — the rollup must not let b's
+        // 2 observations outvote a's thousands
+        let hub = MetricsHub::new();
+        let a = Arc::new(Metrics::with_reservoir(8));
+        hub.models.lock().unwrap().insert("a@1".into(), a.clone());
+        let b = hub.for_model("b@1");
+        for _ in 0..4096 {
+            a.record_request(Duration::from_micros(10), Duration::from_micros(1));
+        }
+        for _ in 0..2 {
+            b.record_request(Duration::from_micros(9_000), Duration::from_micros(1));
+        }
+        let agg = hub.aggregate();
+        assert_eq!(agg.requests, 4098);
+        assert_eq!(agg.latency_p50_us, 10);
+        // b's 2 observations are < 0.05% of the merged population, so
+        // they must NOT surface at p99 — an unweighted concat of the
+        // reservoirs (8 + 2 samples) would wrongly report 9000 here
+        assert_eq!(agg.latency_p99_us, 10);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! L3 edge-inference serving runtime.
 //!
-//! Pipeline: admission control → [`batcher`] (size/deadline dynamic
+//! Pipeline: fair admission ([`scheduler`]: FIFO or deficit-round-robin
+//! with per-client quotas) → [`batcher`] (size/deadline dynamic
 //! batching) → worker pool → [`backend`] (PJRT digital reference, rust
 //! integer reference, ACIM analog simulator, or MLP baseline), with
 //! [`metrics`] throughout and [`router`] turning config + artifacts into a
@@ -25,6 +26,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod protocol;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 pub mod tcp;
 
@@ -33,5 +35,6 @@ pub use batcher::{Batch, BatchPolicy, Request};
 pub use metrics::{Metrics, MetricsHub, MetricsReport, WireMetrics};
 pub use protocol::{ErrorCode, ModelSummary};
 pub use router::{build_acim, build_acim_with_calib, build_backend, serve_options, tcp_limits};
+pub use scheduler::{ClientId, SchedMode, Scheduler, SchedulerOptions};
 pub use server::{Dispatch, InferenceService, ServeOptions};
 pub use tcp::{TcpLimits, TcpServer};

@@ -139,6 +139,7 @@ impl ErrorCode {
 /// error keeps transport-agnostic variants.
 pub fn code_for(e: &Error) -> ErrorCode {
     match e {
+        Error::Overloaded { .. } => ErrorCode::Overloaded,
         Error::Serving(m) if m.contains("queue full") => ErrorCode::Overloaded,
         Error::Serving(m) if m.contains("single model") => ErrorCode::NotFound,
         // the worker pool re-wraps backend errors as Serving with the
@@ -148,6 +149,28 @@ pub fn code_for(e: &Error) -> ErrorCode {
         Error::Registry(_) => ErrorCode::NotFound,
         Error::Json(_) | Error::Shape(_) | Error::Config(_) => ErrorCode::BadRequest,
         _ => ErrorCode::Internal,
+    }
+}
+
+/// Build the error response for a crate error: maps the code and, for
+/// admission rejections, surfaces the structured `retry_after_ms` hint.
+/// Overloaded errors ship the *bare* message — the `code` and
+/// `retry_after_ms` fields carry the rest, and a client reconstructing
+/// a typed error from the frame must not end up double-prefixed.
+pub fn error_response(id: Option<i64>, e: &Error) -> Response {
+    match e {
+        Error::Overloaded { message, retry_after_ms } => Response::Error {
+            id,
+            code: ErrorCode::Overloaded,
+            message: message.clone(),
+            retry_after_ms: Some(*retry_after_ms),
+        },
+        _ => Response::Error {
+            id,
+            code: code_for(e),
+            message: e.to_string(),
+            retry_after_ms: None,
+        },
     }
 }
 
@@ -166,7 +189,12 @@ impl WireError {
     }
 
     pub fn into_response(self) -> Response {
-        Response::Error { id: self.id, code: self.code, message: self.message }
+        Response::Error {
+            id: self.id,
+            code: self.code,
+            message: self.message,
+            retry_after_ms: None,
+        }
     }
 }
 
@@ -422,8 +450,15 @@ pub enum Response {
     Metrics { id: i64, body: Value },
     Health { id: i64, status: String, models_live: usize },
     /// `id` is `None` for connection-level errors (unparseable frame,
-    /// oversized payload) that cannot be correlated.
-    Error { id: Option<i64>, code: ErrorCode, message: String },
+    /// oversized payload) that cannot be correlated. `retry_after_ms` is
+    /// present on `overloaded` admission rejections: a best-effort
+    /// backoff hint derived from the observed queue-drain rate.
+    Error {
+        id: Option<i64>,
+        code: ErrorCode,
+        message: String,
+        retry_after_ms: Option<u64>,
+    },
 }
 
 impl Response {
@@ -509,18 +544,24 @@ impl Response {
                 fields.push(("models_live", Value::Int(*models_live as i64)));
                 obj(fields)
             }
-            Response::Error { id, code, message } => obj(vec![
-                (
-                    "id",
-                    match id {
-                        Some(i) => Value::Int(*i),
-                        None => Value::Null,
-                    },
-                ),
-                ("op", Value::Str("error".to_string())),
-                ("code", Value::Str(code.as_str().to_string())),
-                ("error", Value::Str(message.clone())),
-            ]),
+            Response::Error { id, code, message, retry_after_ms } => {
+                let mut fields = vec![
+                    (
+                        "id",
+                        match id {
+                            Some(i) => Value::Int(*i),
+                            None => Value::Null,
+                        },
+                    ),
+                    ("op", Value::Str("error".to_string())),
+                    ("code", Value::Str(code.as_str().to_string())),
+                    ("error", Value::Str(message.clone())),
+                ];
+                if let Some(ms) = retry_after_ms {
+                    fields.push(("retry_after_ms", Value::Int(*ms as i64)));
+                }
+                obj(fields)
+            }
         }
     }
 
@@ -544,6 +585,10 @@ impl Response {
                     .and_then(|e| e.as_str())
                     .unwrap_or("unknown error")
                     .to_string(),
+                retry_after_ms: v
+                    .get("retry_after_ms")
+                    .and_then(|x| x.as_i64())
+                    .map(|x| x.max(0) as u64),
             });
         }
         let id = v
@@ -742,12 +787,35 @@ mod tests {
             id: Some(8),
             code: ErrorCode::NotFound,
             message: "model 'x' not found".into(),
+            retry_after_ms: None,
         });
         roundtrip_response(Response::Error {
             id: None,
             code: ErrorCode::TooLarge,
             message: "frame too big".into(),
+            retry_after_ms: None,
         });
+        roundtrip_response(Response::Error {
+            id: Some(9),
+            code: ErrorCode::Overloaded,
+            message: "client quota exceeded (4/4 rows in queue)".into(),
+            retry_after_ms: Some(12),
+        });
+    }
+
+    #[test]
+    fn overloaded_error_response_carries_retry_hint() {
+        let e = Error::Overloaded {
+            message: "client quota exceeded (2/2 rows in queue)".into(),
+            retry_after_ms: 7,
+        };
+        let resp = error_response(Some(4), &e);
+        let v = resp.to_value();
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(v.get("retry_after_ms").unwrap().as_i64().unwrap(), 7);
+        // non-admission errors carry no hint field at all
+        let v = error_response(Some(5), &Error::Json("bad".into())).to_value();
+        assert!(v.get("retry_after_ms").is_none());
     }
 
     #[test]
@@ -813,6 +881,10 @@ mod tests {
     fn code_for_maps_crate_errors() {
         assert_eq!(
             code_for(&Error::Serving("queue full: admission rejected".into())),
+            ErrorCode::Overloaded
+        );
+        assert_eq!(
+            code_for(&Error::Overloaded { message: "quota".into(), retry_after_ms: 3 }),
             ErrorCode::Overloaded
         );
         assert_eq!(

@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use super::backend::{AcimBackend, DigitalBackend, InferBackend, MlpBackend, PjrtBackend};
 use super::batcher::BatchPolicy;
+use super::scheduler::{SchedMode, SchedulerOptions};
 use super::server::ServeOptions;
 use super::tcp::TcpLimits;
 use crate::acim::{AcimModel, AcimOptions};
@@ -30,6 +31,16 @@ pub fn serve_options(cfg: &AppConfig) -> ServeOptions {
         },
         queue_depth: cfg.server.queue_depth,
         workers: cfg.server.workers,
+        scheduler: SchedulerOptions {
+            // config validation rejects anything but fifo | drr
+            mode: if cfg.scheduler.policy == "drr" {
+                SchedMode::Drr
+            } else {
+                SchedMode::Fifo
+            },
+            client_quota: cfg.scheduler.quota,
+            fairness_window: cfg.scheduler.fairness_window,
+        },
     }
 }
 

@@ -1,0 +1,539 @@
+//! Fair admission scheduling in front of the dynamic batcher.
+//!
+//! The seed design admitted requests through one bounded FIFO channel, so
+//! a large `infer_batch` burst could hold the queue at capacity while it
+//! drained and every concurrent single-row client saw `overloaded` for
+//! that whole window (head-of-line starvation across clients). The
+//! [`Scheduler`] replaces that channel with per-client queues and two
+//! admission policies:
+//!
+//! * **`fifo`** — one global bounded queue, byte-for-byte the seed
+//!   behavior: admission fails only when the whole queue is full, and
+//!   the batcher drains in arrival order.
+//! * **`drr`** — deficit-round-robin: each submitting client (a TCP
+//!   connection, or one direct API call) owns a private queue bounded by
+//!   [`SchedulerOptions::client_quota`]; the batcher drains the active
+//!   clients in a round-robin ring, taking at most
+//!   [`SchedulerOptions::fairness_window`] rows from one client before
+//!   moving to the next. A 64-row batch therefore occupies at most
+//!   `client_quota` slots (the rest of the burst backpressures its own
+//!   submitter) and its rows *interleave* with other clients' singletons
+//!   instead of fencing them out.
+//!
+//! Every row is the same size here, so the classic DRR deficit counter
+//! degenerates to a per-round row budget — `fairness_window` is that
+//! quantum.
+//!
+//! Rejections carry a `retry_after_ms` hint derived from an EWMA of the
+//! observed drain rate (time between batcher pops), so clients can back
+//! off for roughly one queue-drain instead of hammering the endpoint.
+//! The hint is best-effort: it assumes the recent drain rate holds.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::batcher::Request;
+
+/// Identity of a submitting client for fairness accounting. TCP
+/// connections hold one for their lifetime; direct API callers get a
+/// fresh one per call (each call is then its own fairness class).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClientId(u64);
+
+impl ClientId {
+    /// A process-unique id. Never reused, so a finished client's quota
+    /// accounting can never leak onto a new one.
+    pub fn fresh() -> ClientId {
+        static NEXT: AtomicU64 = AtomicU64::new(1);
+        ClientId(NEXT.fetch_add(1, Ordering::Relaxed))
+    }
+
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+/// Admission policy selector (`scheduler.policy` in config).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Single global FIFO queue — the seed behavior.
+    Fifo,
+    /// Per-client queues drained deficit-round-robin.
+    Drr,
+}
+
+/// Scheduler knobs (file side: the `[scheduler]` config section).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerOptions {
+    pub mode: SchedMode,
+    /// Max in-queue rows per client before admission rejects (`drr`).
+    pub client_quota: usize,
+    /// Rows drained from one client before rotating to the next (`drr`
+    /// quantum).
+    pub fairness_window: usize,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        Self { mode: SchedMode::Fifo, client_quota: 64, fairness_window: 8 }
+    }
+}
+
+/// Why an admission was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Total queued rows reached the scheduler capacity (`queue_depth`).
+    QueueFull,
+    /// This client's in-queue rows reached its quota (`drr` only).
+    ClientQuota { queued: usize, quota: usize },
+}
+
+/// A rejected admission: hands the request back so the caller can answer
+/// its response channel, with a drain-rate-based retry hint.
+pub struct Rejection {
+    pub req: Request,
+    pub reason: RejectReason,
+    pub retry_after_ms: u64,
+}
+
+/// Outcome of a non-blocking admission attempt.
+pub enum Submit {
+    Admitted,
+    Rejected(Rejection),
+    /// The service shut down; the request is handed back.
+    Closed(Request),
+}
+
+/// Outcome of a deadline-bounded dequeue (the batcher side).
+pub enum Recv {
+    Req(Request),
+    Timeout,
+    /// Closed *and* drained — nothing will ever arrive again.
+    Closed,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// `fifo` storage: one global arrival-order queue.
+    fifo: VecDeque<Request>,
+    /// `drr` storage: per-client queues. Invariant: a client key exists
+    /// iff its queue is non-empty, and then it is in `ring` exactly once.
+    queues: BTreeMap<u64, VecDeque<Request>>,
+    /// Round-robin ring of clients with queued rows; front is current.
+    ring: VecDeque<u64>,
+    /// Rows the front client may still dequeue this round.
+    window_left: usize,
+    total: usize,
+    closed: bool,
+    /// EWMA of microseconds between consecutive pops (drain rate).
+    ewma_pop_us: f64,
+    last_pop: Option<Instant>,
+}
+
+/// Bounded, policy-driven admission queue between submitters and the
+/// batcher (see module docs).
+pub struct Scheduler {
+    opts: SchedulerOptions,
+    capacity: usize,
+    inner: Mutex<Inner>,
+    /// Signalled when a request is queued or the scheduler closes.
+    readable: Condvar,
+    /// Signalled when a slot frees (pop) or the scheduler closes.
+    writable: Condvar,
+}
+
+impl Scheduler {
+    pub fn new(capacity: usize, opts: SchedulerOptions) -> Scheduler {
+        let opts = SchedulerOptions {
+            mode: opts.mode,
+            client_quota: opts.client_quota.max(1),
+            fairness_window: opts.fairness_window.max(1),
+        };
+        Scheduler {
+            opts,
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner::default()),
+            readable: Condvar::new(),
+            writable: Condvar::new(),
+        }
+    }
+
+    pub fn options(&self) -> SchedulerOptions {
+        self.opts
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Rows currently queued across all clients.
+    pub fn queued(&self) -> usize {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Non-blocking admission: reject over capacity, and in `drr` mode
+    /// over the per-client quota.
+    pub fn try_submit(&self, client: ClientId, req: Request) -> Submit {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Submit::Closed(req);
+        }
+        if g.total >= self.capacity {
+            let retry_after_ms = retry_hint(&g, g.total);
+            return Submit::Rejected(Rejection {
+                req,
+                reason: RejectReason::QueueFull,
+                retry_after_ms,
+            });
+        }
+        if self.opts.mode == SchedMode::Drr {
+            let queued = g.queues.get(&client.0).map_or(0, VecDeque::len);
+            if queued >= self.opts.client_quota {
+                // under round robin this client's rows drain only every
+                // ~Nth pop (N = active clients), so scale the global
+                // drain estimate by the ring size or the hint would be
+                // ~N× too optimistic
+                let active = g.ring.len().max(1);
+                let retry_after_ms = retry_hint(&g, queued * active);
+                return Submit::Rejected(Rejection {
+                    req,
+                    reason: RejectReason::ClientQuota {
+                        queued,
+                        quota: self.opts.client_quota,
+                    },
+                    retry_after_ms,
+                });
+            }
+        }
+        self.push_locked(&mut g, client, req);
+        self.readable.notify_one();
+        Submit::Admitted
+    }
+
+    /// Blocking admission: wait for capacity (and quota, in `drr`) instead
+    /// of rejecting — the backpressure path for the tail of an admitted
+    /// batch. Returns the request if the scheduler closed while waiting.
+    pub fn submit_blocking(&self, client: ClientId, req: Request) -> Result<(), Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(req);
+            }
+            let over_capacity = g.total >= self.capacity;
+            let over_quota = self.opts.mode == SchedMode::Drr
+                && g.queues.get(&client.0).map_or(0, VecDeque::len)
+                    >= self.opts.client_quota;
+            if !over_capacity && !over_quota {
+                self.push_locked(&mut g, client, req);
+                self.readable.notify_one();
+                return Ok(());
+            }
+            g = self.writable.wait(g).unwrap();
+        }
+    }
+
+    /// Dequeue the next request per policy, blocking until one arrives.
+    /// `None` once the scheduler is closed *and* drained (every queued
+    /// request is still delivered first, so shutdown flushes).
+    pub fn recv(&self) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(req) = self.pop_locked(&mut g) {
+                return Some(req);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.readable.wait(g).unwrap();
+        }
+    }
+
+    /// [`Scheduler::recv_deadline`] with a relative timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Recv {
+        self.recv_deadline(Instant::now() + timeout)
+    }
+
+    /// Like [`Scheduler::recv`] with a deadline (the batcher's
+    /// batch-close timer).
+    pub fn recv_deadline(&self, deadline: Instant) -> Recv {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(req) = self.pop_locked(&mut g) {
+                return Recv::Req(req);
+            }
+            if g.closed {
+                return Recv::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Recv::Timeout;
+            }
+            let (guard, timeout) =
+                self.readable.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if timeout.timed_out() {
+                // one last look: a submit may have raced the wakeup
+                if let Some(req) = self.pop_locked(&mut g) {
+                    return Recv::Req(req);
+                }
+                if g.closed {
+                    return Recv::Closed;
+                }
+                return Recv::Timeout;
+            }
+        }
+    }
+
+    /// Close the scheduler: all waiting submitters fail, the batcher
+    /// drains what is queued and then sees end-of-stream.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.readable.notify_all();
+        self.writable.notify_all();
+    }
+
+    fn push_locked(&self, g: &mut Inner, client: ClientId, req: Request) {
+        match self.opts.mode {
+            SchedMode::Fifo => g.fifo.push_back(req),
+            SchedMode::Drr => {
+                let q = g.queues.entry(client.0).or_default();
+                if q.is_empty() {
+                    // (re)activate: join the ring at the back; a fresh
+                    // ring front starts with a full window
+                    if g.ring.is_empty() {
+                        g.window_left = self.opts.fairness_window;
+                    }
+                    g.ring.push_back(client.0);
+                }
+                q.push_back(req);
+            }
+        }
+        g.total += 1;
+    }
+
+    fn pop_locked(&self, g: &mut Inner) -> Option<Request> {
+        let req = match self.opts.mode {
+            SchedMode::Fifo => g.fifo.pop_front()?,
+            SchedMode::Drr => {
+                let front = *g.ring.front()?;
+                let q = g.queues.get_mut(&front).expect("ring client has a queue");
+                let req = q.pop_front().expect("ring queues are non-empty");
+                if q.is_empty() {
+                    g.queues.remove(&front);
+                    g.ring.pop_front();
+                    g.window_left = self.opts.fairness_window;
+                } else {
+                    g.window_left = g.window_left.saturating_sub(1);
+                    if g.window_left == 0 {
+                        // quantum spent: rotate to the next client
+                        let id = g.ring.pop_front().expect("ring non-empty");
+                        g.ring.push_back(id);
+                        g.window_left = self.opts.fairness_window;
+                    }
+                }
+                req
+            }
+        };
+        g.total -= 1;
+        let now = Instant::now();
+        if let Some(last) = g.last_pop {
+            let dt_us = now.duration_since(last).as_secs_f64() * 1e6;
+            // idle gaps (> 1 s) are not drain time; don't poison the EWMA
+            if dt_us < 1e6 {
+                g.ewma_pop_us = if g.ewma_pop_us > 0.0 {
+                    0.9 * g.ewma_pop_us + 0.1 * dt_us
+                } else {
+                    dt_us
+                };
+            }
+        }
+        g.last_pop = Some(now);
+        // a freed slot may satisfy any waiting client: wake them all
+        self.writable.notify_all();
+        Some(req)
+    }
+}
+
+/// Best-effort "when might a slot free" estimate: `rows_ahead` pops at
+/// the recent drain rate, clamped to a sane wire range. 1 ms/row when no
+/// drain has been observed yet.
+fn retry_hint(g: &Inner, rows_ahead: usize) -> u64 {
+    let per_row_us = if g.ewma_pop_us > 0.0 { g.ewma_pop_us } else { 1000.0 };
+    let ms = (rows_ahead as f64 * per_row_us / 1000.0).ceil() as u64;
+    ms.clamp(1, 10_000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Result;
+    use std::sync::mpsc::{sync_channel, Receiver};
+
+    fn opts(mode: SchedMode, quota: usize, window: usize) -> SchedulerOptions {
+        SchedulerOptions { mode, client_quota: quota, fairness_window: window }
+    }
+
+    fn mk_request(v: f32) -> (Request, Receiver<Result<Vec<f32>>>) {
+        let (tx, rx) = sync_channel(1);
+        (
+            Request { features: vec![v], enqueued: Instant::now(), respond: tx },
+            rx,
+        )
+    }
+
+    fn admit(s: &Scheduler, client: ClientId, v: f32) {
+        let (req, _rx) = mk_request(v);
+        match s.try_submit(client, req) {
+            Submit::Admitted => {}
+            _ => panic!("expected admission for {v}"),
+        }
+    }
+
+    #[test]
+    fn fifo_preserves_arrival_order() {
+        let s = Scheduler::new(16, opts(SchedMode::Fifo, 4, 2));
+        let a = ClientId::fresh();
+        let b = ClientId::fresh();
+        admit(&s, a, 1.0);
+        admit(&s, b, 2.0);
+        admit(&s, a, 3.0);
+        for want in [1.0, 2.0, 3.0] {
+            let req = s.recv().unwrap();
+            assert_eq!(req.features[0], want);
+        }
+    }
+
+    #[test]
+    fn drr_interleaves_clients_by_window() {
+        let s = Scheduler::new(64, opts(SchedMode::Drr, 64, 1));
+        let a = ClientId::fresh();
+        let b = ClientId::fresh();
+        for i in 0..6 {
+            admit(&s, a, 10.0 + i as f32);
+        }
+        for i in 0..2 {
+            admit(&s, b, 20.0 + i as f32);
+        }
+        let order: Vec<f32> = (0..8).map(|_| s.recv().unwrap().features[0]).collect();
+        // window 1: strict alternation until b drains, then a alone
+        assert_eq!(order, vec![10.0, 20.0, 11.0, 21.0, 12.0, 13.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn drr_window_takes_runs_before_rotating() {
+        let s = Scheduler::new(64, opts(SchedMode::Drr, 64, 2));
+        let a = ClientId::fresh();
+        let b = ClientId::fresh();
+        for i in 0..4 {
+            admit(&s, a, 10.0 + i as f32);
+        }
+        for i in 0..4 {
+            admit(&s, b, 20.0 + i as f32);
+        }
+        let order: Vec<f32> = (0..8).map(|_| s.recv().unwrap().features[0]).collect();
+        assert_eq!(
+            order,
+            vec![10.0, 11.0, 20.0, 21.0, 12.0, 13.0, 22.0, 23.0]
+        );
+    }
+
+    #[test]
+    fn drr_rejects_over_client_quota_but_admits_other_clients() {
+        let s = Scheduler::new(16, opts(SchedMode::Drr, 2, 2));
+        let a = ClientId::fresh();
+        let b = ClientId::fresh();
+        admit(&s, a, 1.0);
+        admit(&s, a, 2.0);
+        let (req, _rx) = mk_request(3.0);
+        match s.try_submit(a, req) {
+            Submit::Rejected(r) => {
+                assert_eq!(
+                    r.reason,
+                    RejectReason::ClientQuota { queued: 2, quota: 2 }
+                );
+                assert!(r.retry_after_ms >= 1);
+            }
+            _ => panic!("expected quota rejection"),
+        }
+        // an unrelated client is unaffected
+        admit(&s, b, 4.0);
+        assert_eq!(s.queued(), 3);
+    }
+
+    #[test]
+    fn capacity_bound_rejects_in_both_modes() {
+        for mode in [SchedMode::Fifo, SchedMode::Drr] {
+            let s = Scheduler::new(2, opts(mode, 64, 2));
+            let a = ClientId::fresh();
+            admit(&s, a, 1.0);
+            admit(&s, a, 2.0);
+            let (req, _rx) = mk_request(3.0);
+            match s.try_submit(ClientId::fresh(), req) {
+                Submit::Rejected(r) => {
+                    assert_eq!(r.reason, RejectReason::QueueFull)
+                }
+                _ => panic!("expected capacity rejection ({mode:?})"),
+            }
+        }
+    }
+
+    #[test]
+    fn blocking_submit_waits_for_a_pop() {
+        let s = std::sync::Arc::new(Scheduler::new(1, opts(SchedMode::Fifo, 1, 1)));
+        let a = ClientId::fresh();
+        admit(&s, a, 1.0);
+        let s2 = s.clone();
+        let handle = std::thread::spawn(move || {
+            let (req, _rx) = mk_request(2.0);
+            s2.submit_blocking(ClientId::fresh(), req).is_ok()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(s.queued(), 1, "blocked submit must not enqueue early");
+        assert_eq!(s.recv().unwrap().features[0], 1.0);
+        assert!(handle.join().unwrap());
+        assert_eq!(s.recv().unwrap().features[0], 2.0);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let s = Scheduler::new(8, opts(SchedMode::Drr, 4, 2));
+        let a = ClientId::fresh();
+        admit(&s, a, 1.0);
+        admit(&s, a, 2.0);
+        s.close();
+        // closed to new work...
+        let (req, _rx) = mk_request(9.0);
+        assert!(matches!(s.try_submit(a, req), Submit::Closed(_)));
+        // ...but the queued rows still flush, then end-of-stream
+        assert_eq!(s.recv().unwrap().features[0], 1.0);
+        assert_eq!(s.recv().unwrap().features[0], 2.0);
+        assert!(s.recv().is_none());
+        assert!(matches!(
+            s.recv_timeout(Duration::from_millis(1)),
+            Recv::Closed
+        ));
+    }
+
+    #[test]
+    fn recv_deadline_times_out_when_idle() {
+        let s = Scheduler::new(8, SchedulerOptions::default());
+        let t0 = Instant::now();
+        assert!(matches!(
+            s.recv_timeout(Duration::from_millis(15)),
+            Recv::Timeout
+        ));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn fresh_client_ids_are_unique() {
+        let a = ClientId::fresh();
+        let b = ClientId::fresh();
+        assert_ne!(a, b);
+        assert!(b.raw() > a.raw());
+    }
+}

@@ -1,37 +1,66 @@
-//! The serving engine: admission → dynamic batcher → worker pool →
-//! backend, with metrics throughout. The public handle is
-//! [`InferenceService`], a cheap-to-clone client; `infer` blocks the
-//! calling thread (callers that need async fan-out use one thread per
-//! in-flight request, which is plenty at edge rates).
+//! The serving engine: admission ([`super::scheduler`]) → dynamic
+//! batcher → worker pool → backend, with metrics throughout. The public
+//! handle is [`InferenceService`], a cheap-to-clone client; `infer`
+//! blocks the calling thread (callers that need async fan-out use one
+//! thread per in-flight request, which is plenty at edge rates).
+//!
+//! Fairness: every submission is attributed to a [`ClientId`]. The TCP
+//! layer passes a per-connection id so one connection's burst cannot
+//! starve another's singletons under the `drr` admission policy; direct
+//! API callers that use the id-less convenience wrappers get a fresh id
+//! per call (each call is its own fairness class).
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::backend::InferBackend;
-use super::batcher::{reject, run_batcher, try_admit, Batch, BatchPolicy, Request};
+use super::batcher::{run_batcher, Batch, BatchPolicy, Request};
 use super::metrics::{Metrics, MetricsReport};
 use super::protocol::ModelSummary;
+use super::scheduler::{
+    ClientId, RejectReason, Rejection, SchedMode, Scheduler, SchedulerOptions, Submit,
+};
 use crate::error::{Error, Result};
 
-/// Serving configuration (see `config::ServerConfig` for the file side).
+/// Serving configuration (see `config::ServerConfig` and
+/// `config::SchedulerConfig` for the file side).
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
     pub policy: BatchPolicy,
     pub queue_depth: usize,
     pub workers: usize,
+    /// Admission policy (FIFO vs deficit-round-robin + quotas).
+    pub scheduler: SchedulerOptions,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { policy: BatchPolicy::default(), queue_depth: 1024, workers: 2 }
+        Self {
+            policy: BatchPolicy::default(),
+            queue_depth: 1024,
+            workers: 2,
+            scheduler: SchedulerOptions::default(),
+        }
+    }
+}
+
+/// Closes the admission scheduler when the last [`InferenceService`]
+/// clone drops: the batcher drains what is queued, sees end-of-stream,
+/// exits, and the worker pool follows — channel teardown, no force-kill.
+struct SchedulerCloser(Arc<Scheduler>);
+
+impl Drop for SchedulerCloser {
+    fn drop(&mut self) {
+        self.0.close();
     }
 }
 
 /// Cheap-to-clone handle for submitting inference requests.
 #[derive(Clone)]
 pub struct InferenceService {
-    tx: SyncSender<Request>,
+    sched: Arc<Scheduler>,
+    _closer: Arc<SchedulerCloser>,
     /// Expected row width when the backend declares one; rows are
     /// validated at submit so one malformed request cannot poison a
     /// shared dynamic batch carrying other clients' rows.
@@ -55,11 +84,12 @@ impl InferenceService {
         metrics: Arc<Metrics>,
     ) -> Self {
         let input_dim = backend.input_dim();
-        let (req_tx, req_rx) = sync_channel::<Request>(opts.queue_depth);
+        let sched = Arc::new(Scheduler::new(opts.queue_depth, opts.scheduler));
         let (batch_tx, batch_rx) = sync_channel::<Batch>(opts.workers.max(1) * 2);
+        let batcher_sched = sched.clone();
         std::thread::Builder::new()
             .name("kan-edge-batcher".into())
-            .spawn(move || run_batcher(req_rx, batch_tx, opts.policy))
+            .spawn(move || run_batcher(batcher_sched, batch_tx, opts.policy))
             .expect("spawn batcher");
 
         let shared_rx = Arc::new(Mutex::new(batch_rx));
@@ -72,7 +102,8 @@ impl InferenceService {
                 .spawn(move || worker_loop(rx, be, m))
                 .expect("spawn worker");
         }
-        Self { tx: req_tx, input_dim, metrics }
+        let closer = Arc::new(SchedulerCloser(sched.clone()));
+        Self { sched, _closer: closer, input_dim, metrics }
     }
 
     fn check_shape(&self, features: &[f32]) -> Result<()> {
@@ -87,19 +118,30 @@ impl InferenceService {
         Ok(())
     }
 
-    /// Submit one feature vector and wait for the logits.
+    /// Submit one feature vector and wait for the logits (fresh
+    /// [`ClientId`]: this call is its own fairness class).
     pub fn infer(&self, features: Vec<f32>) -> Result<Vec<f32>> {
+        self.infer_from(ClientId::fresh(), features)
+    }
+
+    /// Submit one feature vector on behalf of `client` and wait for the
+    /// logits. Admission is subject to the scheduler policy: `fifo`
+    /// rejects only on a full queue (seed behavior), `drr` also enforces
+    /// the per-client quota and rejects with a retry hint.
+    pub fn infer_from(&self, client: ClientId, features: Vec<f32>) -> Result<Vec<f32>> {
         self.check_shape(&features)?;
         let (tx, rx) = sync_channel(1);
         let req = Request { features, enqueued: Instant::now(), respond: tx };
-        match try_admit(&self.tx, req) {
-            Ok(()) => {}
-            Err(TrySendError::Full(r)) => {
+        match self.sched.try_submit(client, req) {
+            Submit::Admitted => {}
+            Submit::Rejected(r) => {
+                // the rejected request's respond channel pairs with `rx`
+                // below, which we are about to drop — the error goes to
+                // the caller directly, nobody else is listening
                 self.metrics.record_rejection();
-                reject(r);
-                return Err(Error::Serving("queue full: admission rejected".into()));
+                return Err(self.admission_error(&r, false));
             }
-            Err(TrySendError::Disconnected(_)) => {
+            Submit::Closed(_) => {
                 return Err(Error::Serving("service shut down".into()));
             }
         }
@@ -108,22 +150,30 @@ impl InferenceService {
     }
 
     /// Submit many feature vectors back-to-back and wait for all logits
-    /// (row order preserved). The rows hit the dynamic batcher as one
-    /// burst, so a single caller produces multi-row batches — this is
+    /// (fresh [`ClientId`] — see [`InferenceService::infer_many_from`]).
+    pub fn infer_many(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        self.infer_many_from(ClientId::fresh(), rows)
+    }
+
+    /// Submit many feature vectors on behalf of `client` and wait for all
+    /// logits (row order preserved). The rows hit the dynamic batcher as
+    /// one burst, so a single caller produces multi-row batches — this is
     /// the engine behind the v2 `infer_batch` verb.
     ///
-    /// Admission control applies to the batch head only: if the queue
+    /// Admission control applies to the batch head only: if the scheduler
     /// cannot take the first row the whole batch is rejected up front.
-    /// Once admitted, the remaining rows use a blocking send — the
+    /// Once admitted, the remaining rows use a blocking submit — the
     /// deadline-based batcher always drains, so a batch larger than the
-    /// queue depth backpressures the caller instead of failing
-    /// spuriously halfway through. The flip side is that a batch larger
-    /// than the queue can hold the queue near capacity while it drains,
-    /// so concurrent `infer` calls from other clients may see
-    /// `overloaded` rejections for that window (fair cross-client
-    /// scheduling is a ROADMAP item; the wire layer already bounds a
-    /// single batch by `server.max_request_bytes`).
-    pub fn infer_many(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+    /// queue (or, under `drr`, than the client quota) backpressures the
+    /// caller instead of failing spuriously halfway through. Under `drr`
+    /// the quota caps how many of this batch's rows can ever sit in the
+    /// queue, so concurrent clients keep being admitted and the
+    /// round-robin drain interleaves their rows with this batch.
+    pub fn infer_many_from(
+        &self,
+        client: ClientId,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<Vec<Vec<f32>>> {
         if rows.is_empty() {
             return Err(Error::Serving("empty batch".into()));
         }
@@ -138,20 +188,17 @@ impl InferenceService {
             let (tx, rx) = sync_channel(1);
             let req = Request { features, enqueued: Instant::now(), respond: tx };
             if !admitted_head {
-                match try_admit(&self.tx, req) {
-                    Ok(()) => admitted_head = true,
-                    Err(TrySendError::Full(r)) => {
+                match self.sched.try_submit(client, req) {
+                    Submit::Admitted => admitted_head = true,
+                    Submit::Rejected(r) => {
                         self.metrics.record_rejection();
-                        reject(r);
-                        return Err(Error::Serving(
-                            "queue full: batch admission rejected".into(),
-                        ));
+                        return Err(self.admission_error(&r, true));
                     }
-                    Err(TrySendError::Disconnected(_)) => {
+                    Submit::Closed(_) => {
                         return Err(Error::Serving("service shut down".into()));
                     }
                 }
-            } else if self.tx.send(req).is_err() {
+            } else if self.sched.submit_blocking(client, req).is_err() {
                 return Err(Error::Serving("service shut down".into()));
             }
             waiters.push(rx);
@@ -164,6 +211,36 @@ impl InferenceService {
             })
             .collect()
     }
+
+    /// Map a scheduler rejection onto the crate error contract: `fifo`
+    /// keeps the seed wording exactly (pre-scheduler clients match on
+    /// it); `drr` rejections are structured [`Error::Overloaded`] with
+    /// the retry hint.
+    fn admission_error(&self, r: &Rejection, batch: bool) -> Error {
+        let seed_msg = if batch {
+            "queue full: batch admission rejected"
+        } else {
+            "queue full: admission rejected"
+        };
+        match (self.sched.options().mode, r.reason) {
+            (SchedMode::Fifo, _) => Error::Serving(seed_msg.into()),
+            (SchedMode::Drr, RejectReason::QueueFull) => Error::Overloaded {
+                message: format!(
+                    "queue full ({} rows queued across all clients)",
+                    self.sched.capacity()
+                ),
+                retry_after_ms: r.retry_after_ms,
+            },
+            (SchedMode::Drr, RejectReason::ClientQuota { queued, quota }) => {
+                Error::Overloaded {
+                    message: format!(
+                        "client quota exceeded ({queued}/{quota} rows in queue)"
+                    ),
+                    retry_after_ms: r.retry_after_ms,
+                }
+            }
+        }
+    }
 }
 
 /// Request routing surface the TCP layer serves: either a single
@@ -173,13 +250,20 @@ impl InferenceService {
 /// `dispatch` resolves the optional model spec (`None` = default model,
 /// `Some("name")` / `Some("name@version")` otherwise), runs inference,
 /// and returns the resolved model id alongside the logits so clients can
-/// observe which version served them (hot-reload visibility).
+/// observe which version served them (hot-reload visibility). `client`
+/// attributes the submission for fair admission (the TCP layer passes a
+/// per-connection id).
 ///
 /// The remaining methods back the v2 control plane (`infer_batch`,
 /// `list_models`, `model_info`, `metrics`, `health` verbs); the defaults
 /// make any `dispatch`-only implementation a valid, if minimal, target.
 pub trait Dispatch: Send + Sync {
-    fn dispatch(&self, model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)>;
+    fn dispatch(
+        &self,
+        client: ClientId,
+        model: Option<&str>,
+        features: Vec<f32>,
+    ) -> Result<(String, Vec<f32>)>;
 
     /// Batch dispatch: resolve the model once, run every row, return the
     /// resolved id with one logit vector per row (row order preserved).
@@ -187,6 +271,7 @@ pub trait Dispatch: Send + Sync {
     /// the whole batch back-to-back.
     fn dispatch_batch(
         &self,
+        client: ClientId,
         model: Option<&str>,
         rows: Vec<Vec<f32>>,
     ) -> Result<(String, Vec<Vec<f32>>)> {
@@ -196,7 +281,7 @@ pub trait Dispatch: Send + Sync {
         let mut id = String::new();
         let mut out = Vec::with_capacity(rows.len());
         for row in rows {
-            let (mid, logits) = self.dispatch(model, row)?;
+            let (mid, logits) = self.dispatch(client, model, row)?;
             id = mid;
             out.push(logits);
         }
@@ -220,21 +305,29 @@ pub trait Dispatch: Send + Sync {
 }
 
 impl Dispatch for InferenceService {
-    fn dispatch(&self, model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+    fn dispatch(
+        &self,
+        client: ClientId,
+        model: Option<&str>,
+        features: Vec<f32>,
+    ) -> Result<(String, Vec<f32>)> {
         match model {
             Some(m) => Err(single_model_error(m)),
-            None => Ok(("default".to_string(), self.infer(features)?)),
+            None => Ok(("default".to_string(), self.infer_from(client, features)?)),
         }
     }
 
     fn dispatch_batch(
         &self,
+        client: ClientId,
         model: Option<&str>,
         rows: Vec<Vec<f32>>,
     ) -> Result<(String, Vec<Vec<f32>>)> {
         match model {
             Some(m) => Err(single_model_error(m)),
-            None => Ok(("default".to_string(), self.infer_many(rows)?)),
+            None => {
+                Ok(("default".to_string(), self.infer_many_from(client, rows)?))
+            }
         }
     }
 
@@ -344,6 +437,24 @@ mod tests {
         }
     }
 
+    /// Backend that sleeps per batch so queues stay occupied.
+    struct Sleepy(Duration);
+
+    impl InferBackend for Sleepy {
+        fn name(&self) -> &str {
+            "sleepy"
+        }
+
+        fn output_dim(&self) -> usize {
+            1
+        }
+
+        fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+            std::thread::sleep(self.0);
+            Ok(rows.iter().map(|r| vec![r[0]]).collect())
+        }
+    }
+
     #[test]
     fn end_to_end_inference() {
         let svc = InferenceService::start(Arc::new(Doubler), ServeOptions::default());
@@ -425,6 +536,69 @@ mod tests {
             "batch submit produced singletons (mean {})",
             report.mean_batch
         );
+    }
+
+    #[test]
+    fn infer_many_preserves_row_order_under_drr() {
+        let opts = ServeOptions {
+            policy: BatchPolicy { max_batch: 8, deadline: Duration::from_millis(2) },
+            queue_depth: 16,
+            scheduler: SchedulerOptions {
+                mode: SchedMode::Drr,
+                client_quota: 4,
+                fairness_window: 2,
+            },
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Arc::new(Doubler), opts);
+        // larger than the quota: the tail backpressures through
+        // submit_blocking, results still come back in row order
+        let rows: Vec<Vec<f32>> = (0..32).map(|i| vec![i as f32]).collect();
+        let outs = svc.infer_many(rows).unwrap();
+        for (i, out) in outs.iter().enumerate() {
+            assert_eq!(out[0], 2.0 * i as f32);
+        }
+    }
+
+    #[test]
+    fn drr_quota_rejection_is_structured() {
+        let opts = ServeOptions {
+            policy: BatchPolicy { max_batch: 4, deadline: Duration::from_millis(1) },
+            queue_depth: 64,
+            workers: 1,
+            scheduler: SchedulerOptions {
+                mode: SchedMode::Drr,
+                client_quota: 2,
+                fairness_window: 2,
+            },
+        };
+        // slow backend keeps the client's queue at quota long enough to
+        // observe the rejection deterministically
+        let svc =
+            InferenceService::start(Arc::new(Sleepy(Duration::from_millis(50))), opts);
+        let client = ClientId::fresh();
+        let s2 = svc.clone();
+        let batch = std::thread::spawn(move || {
+            s2.infer_many_from(client, (0..12).map(|i| vec![i as f32]).collect())
+        });
+        // let the burst saturate its quota
+        std::thread::sleep(Duration::from_millis(20));
+        let mut saw_overloaded = false;
+        for _ in 0..10 {
+            match svc.infer_from(client, vec![99.0]) {
+                Err(Error::Overloaded { message, retry_after_ms }) => {
+                    assert!(message.contains("quota"), "{message}");
+                    assert!(retry_after_ms >= 1);
+                    saw_overloaded = true;
+                    break;
+                }
+                Ok(_) | Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        assert!(saw_overloaded, "quota rejection never observed");
+        assert!(svc.metrics.report().rejected >= 1);
+        let outs = batch.join().unwrap().unwrap();
+        assert_eq!(outs.len(), 12);
     }
 
     #[test]

@@ -33,10 +33,12 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use super::metrics::WireMetrics;
 use super::protocol::{
-    self, code_for, read_frame, write_frame, ErrorCode, FrameRead, Request, Response,
+    self, error_response, read_frame, write_frame, ErrorCode, FrameRead, Request,
+    Response,
 };
+use super::scheduler::ClientId;
 use super::server::Dispatch;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::util::json::{obj, Value};
 
 /// Per-connection transport limits (file side: the `[server]` config
@@ -140,7 +142,10 @@ impl TcpServer {
     }
 }
 
-/// Serve one connection until EOF (protocol auto-detected).
+/// Serve one connection until EOF (protocol auto-detected). Each
+/// connection gets one [`ClientId`] for its lifetime: under the `drr`
+/// admission policy that is the fairness unit, so one connection's
+/// burst cannot starve another connection's singletons.
 pub fn handle_conn(
     stream: TcpStream,
     target: Arc<dyn Dispatch>,
@@ -158,6 +163,7 @@ fn serve_conn(
     limits: TcpLimits,
     wire: &Arc<WireMetrics>,
 ) {
+    let client = ClientId::fresh();
     // protocol sniff: a v2 connection opens with the 4-byte magic; the
     // first byte of a v1 JSON line can never be 'K'
     let mut first = [0u8; 1];
@@ -179,7 +185,7 @@ fn serve_conn(
             match stream.read(&mut b) {
                 Ok(0) => {
                     // EOF mid-prefix: let v1 report the partial line
-                    serve_v1(prefix, stream, target, limits, wire);
+                    serve_v1(prefix, stream, client, target, limits, wire);
                     return;
                 }
                 Ok(_) => {}
@@ -187,16 +193,16 @@ fn serve_conn(
             }
             prefix.push(b[0]);
             if b[0] != protocol::MAGIC[prefix.len() - 1] {
-                serve_v1(prefix, stream, target, limits, wire);
+                serve_v1(prefix, stream, client, target, limits, wire);
                 return;
             }
             if prefix.len() == protocol::MAGIC.len() {
-                serve_v2(stream, target, limits, wire);
+                serve_v2(stream, client, target, limits, wire);
                 return;
             }
         }
     } else {
-        serve_v1(vec![first[0]], stream, target, limits, wire);
+        serve_v1(vec![first[0]], stream, client, target, limits, wire);
     }
 }
 
@@ -257,6 +263,7 @@ fn read_line_bounded(
 fn serve_v1(
     prefix: Vec<u8>,
     stream: TcpStream,
+    client: ClientId,
     target: Arc<dyn Dispatch>,
     limits: TcpLimits,
     wire: &WireMetrics,
@@ -300,7 +307,7 @@ fn serve_v1(
             continue;
         }
         wire.record_v1_request();
-        let reply = respond(&line, target.as_ref());
+        let reply = respond(&line, client, target.as_ref());
         if write_line(&mut writer, &reply).is_err() {
             break;
         }
@@ -318,7 +325,7 @@ fn error_reply(msg: impl Into<String>) -> Value {
 }
 
 /// Pure v1 request→response mapping (unit-testable without sockets).
-pub fn respond(line: &str, target: &dyn Dispatch) -> Value {
+pub fn respond(line: &str, client: ClientId, target: &dyn Dispatch) -> Value {
     let parsed = match Value::parse(line) {
         Ok(v) => v,
         Err(_) => return error_reply("bad request: not valid JSON"),
@@ -334,7 +341,7 @@ pub fn respond(line: &str, target: &dyn Dispatch) -> Value {
         Some(Value::Str(s)) => Some(s.as_str()),
         Some(_) => return error_reply("bad request: 'model' must be a string"),
     };
-    match target.dispatch(model, features) {
+    match target.dispatch(client, model, features) {
         Ok((id, logits)) => {
             let pred = argmax_f32(&logits);
             let items: Vec<Value> =
@@ -345,6 +352,14 @@ pub fn respond(line: &str, target: &dyn Dispatch) -> Value {
                 ("model", Value::Str(id)),
             ])
         }
+        // structured admission rejection: v1 stays one-line JSON, but the
+        // error object gains the machine-readable code + backoff hint
+        // (plain seed-era errors keep their exact `{"error": ...}` shape)
+        Err(e @ Error::Overloaded { retry_after_ms, .. }) => obj(vec![
+            ("error", Value::Str(e.to_string())),
+            ("code", Value::Str(ErrorCode::Overloaded.as_str().into())),
+            ("retry_after_ms", Value::Int(retry_after_ms as i64)),
+        ]),
         Err(e) => error_reply(e.to_string()),
     }
 }
@@ -434,6 +449,8 @@ enum Work {
 
 /// Shared state of one v2 connection.
 struct V2Conn {
+    /// Fairness identity of this connection for admission scheduling.
+    client: ClientId,
     target: Arc<dyn Dispatch>,
     writer: Arc<Mutex<TcpStream>>,
     in_flight: Arc<InFlight>,
@@ -443,6 +460,7 @@ struct V2Conn {
 
 fn serve_v2(
     stream: TcpStream,
+    client: ClientId,
     target: Arc<dyn Dispatch>,
     limits: TcpLimits,
     wire: &Arc<WireMetrics>,
@@ -453,6 +471,7 @@ fn serve_v2(
     };
     let mut reader = BufReader::new(stream);
     let conn = V2Conn {
+        client,
         target,
         writer,
         in_flight: Arc::new(InFlight::new(limits.max_in_flight)),
@@ -475,6 +494,7 @@ fn serve_v2(
                         "frame of {n} bytes exceeds limit of {} bytes",
                         limits.max_request_bytes
                     ),
+                    retry_after_ms: None,
                 });
                 drain_before_close(reader.get_ref(), n.min(64 << 20));
                 break;
@@ -551,6 +571,7 @@ impl V2Conn {
                         id: Some(id),
                         code: ErrorCode::BadRequest,
                         message: e.to_string(),
+                        retry_after_ms: None,
                     },
                     Ok((name, pinned)) => {
                         let found = self
@@ -567,6 +588,7 @@ impl V2Conn {
                                 id: Some(id),
                                 code: ErrorCode::NotFound,
                                 message: format!("model '{model}' not found"),
+                                retry_after_ms: None,
                             },
                         }
                     }
@@ -618,6 +640,7 @@ impl V2Conn {
         let depth = self.in_flight.acquire();
         self.wire.observe_in_flight(depth as u64);
         let permit = InFlightPermit(self.in_flight.clone());
+        let client = self.client;
         let target = self.target.clone();
         let writer = self.writer.clone();
         let spawned = std::thread::Builder::new()
@@ -628,12 +651,13 @@ impl V2Conn {
                 // stays healthy, so without a frame the client would wait
                 // on this id forever
                 let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                    || run_work(id, model, work, target.as_ref()),
+                    || run_work(id, client, model, work, target.as_ref()),
                 ))
                 .unwrap_or_else(|_| Response::Error {
                     id: Some(id),
                     code: ErrorCode::Internal,
                     message: "dispatch panicked".to_string(),
+                    retry_after_ms: None,
                 });
                 let _ = send_response(&writer, &resp);
             });
@@ -645,41 +669,44 @@ impl V2Conn {
                 id: Some(id),
                 code: ErrorCode::Internal,
                 message: "cannot spawn dispatch thread".to_string(),
+                retry_after_ms: None,
             });
         }
     }
 }
 
-fn run_work(id: i64, model: Option<String>, work: Work, target: &dyn Dispatch) -> Response {
+fn run_work(
+    id: i64,
+    client: ClientId,
+    model: Option<String>,
+    work: Work,
+    target: &dyn Dispatch,
+) -> Response {
     match work {
-        Work::One { features } => match target.dispatch(model.as_deref(), features) {
-            Ok((mid, logits)) => {
-                let class = argmax_f32(&logits);
-                Response::Infer { id, model: mid, logits, class }
+        Work::One { features } => {
+            match target.dispatch(client, model.as_deref(), features) {
+                Ok((mid, logits)) => {
+                    let class = argmax_f32(&logits);
+                    Response::Infer { id, model: mid, logits, class }
+                }
+                Err(e) => error_response(Some(id), &e),
             }
-            Err(e) => Response::Error {
-                id: Some(id),
-                code: code_for(&e),
-                message: e.to_string(),
-            },
-        },
-        Work::Batch { rows } => match target.dispatch_batch(model.as_deref(), rows) {
-            Ok((mid, outs)) => {
-                let results = outs
-                    .into_iter()
-                    .map(|logits| {
-                        let class = argmax_f32(&logits);
-                        (logits, class)
-                    })
-                    .collect();
-                Response::InferBatch { id, model: mid, results }
+        }
+        Work::Batch { rows } => {
+            match target.dispatch_batch(client, model.as_deref(), rows) {
+                Ok((mid, outs)) => {
+                    let results = outs
+                        .into_iter()
+                        .map(|logits| {
+                            let class = argmax_f32(&logits);
+                            (logits, class)
+                        })
+                        .collect();
+                    Response::InferBatch { id, model: mid, results }
+                }
+                Err(e) => error_response(Some(id), &e),
             }
-            Err(e) => Response::Error {
-                id: Some(id),
-                code: code_for(&e),
-                message: e.to_string(),
-            },
-        },
+        }
     }
 }
 
@@ -726,6 +753,7 @@ mod tests {
     impl Dispatch for TwoModels {
         fn dispatch(
             &self,
+            _client: ClientId,
             model: Option<&str>,
             features: Vec<f32>,
         ) -> Result<(String, Vec<f32>)> {
@@ -740,7 +768,11 @@ mod tests {
 
     #[test]
     fn respond_happy_path() {
-        let v = respond(r#"{"features": [1.0, 2.0]}"#, svc().as_ref());
+        let v = respond(
+            r#"{"features": [1.0, 2.0]}"#,
+            ClientId::fresh(),
+            svc().as_ref(),
+        );
         assert_eq!(v.get("class").unwrap().as_i64().unwrap(), 0); // 3 > -3
         let logits = v.get("logits").unwrap().as_array().unwrap();
         assert_eq!(logits[0].as_f64().unwrap(), 3.0);
@@ -757,14 +789,18 @@ mod tests {
             r#"{"features": [1, "a"]}"#,
             r#"{"features": [1.0], "model": 7}"#,
         ] {
-            let v = respond(bad, svc.as_ref());
+            let v = respond(bad, ClientId::fresh(), svc.as_ref());
             assert!(v.get("error").is_some(), "accepted {bad}");
         }
     }
 
     #[test]
     fn single_model_endpoint_rejects_model_field() {
-        let v = respond(r#"{"features": [1.0], "model": "other"}"#, svc().as_ref());
+        let v = respond(
+            r#"{"features": [1.0], "model": "other"}"#,
+            ClientId::fresh(),
+            svc().as_ref(),
+        );
         let err = v.get("error").unwrap().as_str().unwrap().to_string();
         assert!(err.contains("single model"), "{err}");
     }
@@ -772,14 +808,40 @@ mod tests {
     #[test]
     fn model_field_routes_between_variants() {
         let router = TwoModels;
-        let a = respond(r#"{"features": [2.0], "model": "pos"}"#, &router);
+        let c = ClientId::fresh();
+        let a = respond(r#"{"features": [2.0], "model": "pos"}"#, c, &router);
         assert_eq!(a.get("class").unwrap().as_i64().unwrap(), 0);
         assert_eq!(a.get("model").unwrap().as_str().unwrap(), "pos@1");
-        let b = respond(r#"{"features": [2.0], "model": "neg"}"#, &router);
+        let b = respond(r#"{"features": [2.0], "model": "neg"}"#, c, &router);
         assert_eq!(b.get("class").unwrap().as_i64().unwrap(), 1);
         assert_eq!(b.get("model").unwrap().as_str().unwrap(), "neg@2");
-        let missing = respond(r#"{"features": [2.0], "model": "nope"}"#, &router);
+        let missing = respond(r#"{"features": [2.0], "model": "nope"}"#, c, &router);
         assert!(missing.get("error").unwrap().as_str().unwrap().contains("nope"));
+    }
+
+    #[test]
+    fn v1_overloaded_reply_is_structured() {
+        /// Always-overloaded target.
+        struct Full;
+
+        impl Dispatch for Full {
+            fn dispatch(
+                &self,
+                _client: ClientId,
+                _model: Option<&str>,
+                _features: Vec<f32>,
+            ) -> Result<(String, Vec<f32>)> {
+                Err(Error::Overloaded {
+                    message: "client quota exceeded (4/4 rows in queue)".into(),
+                    retry_after_ms: 9,
+                })
+            }
+        }
+
+        let v = respond(r#"{"features": [1.0]}"#, ClientId::fresh(), &Full);
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(v.get("retry_after_ms").unwrap().as_i64().unwrap(), 9);
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("quota"));
     }
 
     #[test]

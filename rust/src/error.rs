@@ -21,8 +21,13 @@ pub enum Error {
     /// PJRT / XLA runtime failure.
     Runtime(String),
 
-    /// Serving-path failure (queue closed, admission rejected, ...).
+    /// Serving-path failure (queue closed, backend failure, ...).
     Serving(String),
+
+    /// Admission control rejected the request (queue or per-client quota
+    /// full). Carries a best-effort client backoff hint so the wire
+    /// layers can surface a structured `retry_after_ms` field.
+    Overloaded { message: String, retry_after_ms: u64 },
 
     /// JSON parse / schema error.
     Json(String),
@@ -42,6 +47,9 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape mismatch: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Serving(m) => write!(f, "serving error: {m}"),
+            Error::Overloaded { message, retry_after_ms } => {
+                write!(f, "overloaded: {message} (retry after ~{retry_after_ms} ms)")
+            }
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Registry(m) => write!(f, "registry error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
@@ -64,7 +72,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
@@ -83,6 +91,17 @@ mod tests {
         assert!(Error::Config("x".into()).to_string().starts_with("invalid configuration"));
         assert!(Error::Registry("x".into()).to_string().starts_with("registry error"));
         assert!(Error::Json("x".into()).to_string().starts_with("json error"));
+    }
+
+    #[test]
+    fn overloaded_carries_retry_hint() {
+        let e = Error::Overloaded {
+            message: "client quota exceeded (4/4 rows in queue)".into(),
+            retry_after_ms: 7,
+        };
+        let s = e.to_string();
+        assert!(s.starts_with("overloaded:"), "{s}");
+        assert!(s.contains("~7 ms"), "{s}");
     }
 
     #[test]

@@ -44,7 +44,11 @@ COMMANDS:
   publish   --weights FILE [--model N] [--version V]
                                                publish a new model version
   bench-net [--requests N] [--batch B] [--window W]
-                                               served throughput: v1 vs v2
+            [--tenants T] [--mix-requests M] [--mix-batch R]
+            [--mix-queue Q] [--json FILE] [--skip-mixed] [--mixed-only]
+                                               served throughput: v1 vs v2,
+                                               plus the mixed-tenant fifo-vs-drr
+                                               fairness comparison
   eval      --model NAME --backend B           accuracy on the test set
   neurosim  --budget minimal|moderate|none     Fig 9/13 constraint search
   quantize  --g G --k K --n-bits N             ASP-KAN-HAQ geometry
@@ -346,24 +350,16 @@ fn mean_batch_delta(prev: (i64, i64), now: (i64, i64)) -> f64 {
     }
 }
 
-/// Self-contained network benchmark: publish a tiny synthetic KAN into
-/// a temp registry, serve it on an ephemeral port (digital backend),
-/// and measure served throughput over one connection in three modes —
-/// v1 JSON lines (one request in flight), v2 pipelined submit/poll,
-/// and v2 whole-batch submit. The per-phase "mean batch" column is the
-/// batch occupancy the *server* saw, showing that v2 lets a single
-/// connection feed the dynamic batcher multi-row batches.
-fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
-    use std::io::{BufRead, BufReader, Write};
-    use std::time::Instant;
-
-    let requests = args.get_usize("requests", 2000).max(1);
-    let batch = args.get_usize("batch", 16).max(1);
-    let window = args.get_usize("window", 32).max(1);
-
-    // per-process dir: concurrent bench-net runs must not wipe each
-    // other's live registry mid-benchmark
-    let dir = std::env::temp_dir().join(format!("kan_edge_bench_net_{}", std::process::id()));
+/// Fresh temp registry serving one synthetic "bench" model over an
+/// ephemeral TCP port with `cfg`'s server/scheduler knobs.
+fn spawn_bench_server(
+    cfg: &AppConfig,
+    tag: &str,
+) -> Result<(std::path::PathBuf, kan_edge::coordinator::TcpServer)> {
+    // per-process, per-phase dir: concurrent bench-net runs must not
+    // wipe each other's live registry mid-benchmark
+    let dir = std::env::temp_dir()
+        .join(format!("kan_edge_bench_net_{}_{tag}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir)?;
     kan_edge::registry::ModelManifest::empty().save(&dir)?;
@@ -375,97 +371,380 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
     let src = dir.join("bench.incoming.json");
     std::fs::write(&src, kan_edge::kan::checkpoint::synthetic_checkpoint_json("bench", 0))?;
     registry.publish_file(&src, None, None)?;
-
-    let target: Arc<dyn Dispatch> = registry.clone();
+    let target: Arc<dyn Dispatch> = registry;
     let server = kan_edge::coordinator::TcpServer::spawn_with_limits(
         "127.0.0.1:0",
         target,
         tcp_limits(&cfg),
     )?;
-    println!(
-        "bench-net: {requests} requests per mode, digital backend, {}",
-        server.addr
-    );
-    let features = vec![0.5f32, 0.5];
-    // separate control connection: reads (requests, batches) deltas
-    // between phases for the exact per-phase batch occupancy
-    let mut probe = KanClient::connect(server.addr)?;
-    let mut last = served_counts(&mut probe)?;
+    Ok((dir, server))
+}
 
-    // v1: JSON lines, the connection blocks until each reply arrives
-    let t0 = Instant::now();
-    {
-        let conn = std::net::TcpStream::connect(server.addr)?;
-        let mut w = conn.try_clone()?;
-        let mut r = BufReader::new(conn);
-        let mut line = String::new();
-        for _ in 0..requests {
-            w.write_all(b"{\"features\":[0.5,0.5]}\n")?;
-            line.clear();
-            r.read_line(&mut line)?;
+/// One policy's mixed-tenant measurements.
+struct MixedPolicyReport {
+    policy: String,
+    singleton_ops: usize,
+    /// Client-observed `overloaded` rejections across all singleton
+    /// tenants (each is one failed admission + backoff + retry).
+    rejections: u64,
+    /// Singleton latency from *first* attempt to success — retries and
+    /// backoff sleeps count, because that is what the tenant experiences.
+    p50_us: u64,
+    p99_us: u64,
+    /// Longest gap between consecutive singleton completions on any one
+    /// tenant: the starvation window.
+    max_starvation_us: u64,
+    /// Rows the batch tenant pushed through while the singletons ran.
+    batch_rows: u64,
+    wall_secs: f64,
+}
+
+impl MixedPolicyReport {
+    fn to_value(&self) -> kan_edge::util::json::Value {
+        use kan_edge::util::json::Value;
+        kan_edge::util::json::obj(vec![
+            ("policy", Value::Str(self.policy.clone())),
+            ("singleton_ops", Value::Int(self.singleton_ops as i64)),
+            ("rejections", Value::Int(self.rejections as i64)),
+            ("p50_us", Value::Int(self.p50_us as i64)),
+            ("p99_us", Value::Int(self.p99_us as i64)),
+            ("max_starvation_us", Value::Int(self.max_starvation_us as i64)),
+            ("batch_rows", Value::Int(self.batch_rows as i64)),
+            ("wall_s", Value::Float(self.wall_secs)),
+        ])
+    }
+}
+
+/// Mixed-tenant phase: one batch tenant loops whole-batch submits while
+/// `tenants` single-row tenants each run `ops` requests on their own
+/// connections, retrying with the server's `retry_after_ms` hint on
+/// `overloaded`. Under `fifo` the batch holds the queue at capacity and
+/// starves the singletons; under `drr` the per-connection quota caps the
+/// batch's queue share and round-robin admission interleaves, so the
+/// singletons see zero rejections. This is the end-to-end proof of the
+/// fairness win.
+fn run_mixed_policy(
+    cfg: &AppConfig,
+    policy: &str,
+    tenants: usize,
+    ops: usize,
+    batch_rows: usize,
+    queue: usize,
+) -> Result<MixedPolicyReport> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::{Duration, Instant};
+
+    let mut cfg = cfg.clone();
+    cfg.server.queue_depth = queue;
+    cfg.scheduler.policy = policy.to_string();
+    // the batch tenant may hold at most a quarter of the queue
+    cfg.scheduler.quota = (queue / 4).max(1);
+    cfg.scheduler.fairness_window = 8;
+    let (dir, server) = spawn_bench_server(&cfg, &format!("mixed_{policy}"))?;
+    let addr = server.addr;
+
+    // warm up: load the pipeline before contention starts
+    KanClient::connect(addr)?.infer(&[0.5, 0.5])?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let batch_tenant = std::thread::spawn(move || -> Result<u64> {
+        let mut client = KanClient::connect(addr)?;
+        let mut total = 0u64;
+        while !stop2.load(Ordering::Relaxed) {
+            let rows: Vec<Vec<f32>> = vec![vec![0.5, 0.5]; batch_rows];
+            match client.infer_batch(None, rows) {
+                Ok(_) => total += batch_rows as u64,
+                Err(kan_edge::Error::Overloaded { retry_after_ms, .. }) => {
+                    std::thread::sleep(Duration::from_millis(
+                        retry_after_ms.clamp(1, 20),
+                    ));
+                }
+                Err(e) => return Err(e),
+            }
         }
-    }
-    let v1_secs = t0.elapsed().as_secs_f64();
-    let now = served_counts(&mut probe)?;
-    let v1_mean = mean_batch_delta(last, now);
-    last = now;
+        Ok(total)
+    });
 
-    // v2 pipelined: keep `window` requests in flight on one connection.
-    // Clamp to the negotiated cap: beyond it the server reader stops
-    // pulling frames, and submitting without polling past that point
-    // would deadlock both directions once the socket buffers fill.
-    let mut client = KanClient::connect(server.addr)?;
-    let window = window.min(client.server_info().max_in_flight);
     let t0 = Instant::now();
-    let (mut submitted, mut done) = (0usize, 0usize);
-    while done < requests {
-        while submitted < requests && submitted - done < window {
-            client.submit(None, &features)?;
-            submitted += 1;
-        }
-        let (_id, outcome) = client.poll()?;
-        outcome?;
-        done += 1;
+    let mut singles = Vec::new();
+    for _ in 0..tenants {
+        singles.push(std::thread::spawn(
+            move || -> Result<(Vec<u64>, u64, u64)> {
+                let mut client = KanClient::connect(addr)?;
+                let mut latencies = Vec::with_capacity(ops);
+                let mut rejections = 0u64;
+                let mut max_gap_us = 0u64;
+                let mut last_done = Instant::now();
+                for _ in 0..ops {
+                    let start = Instant::now();
+                    loop {
+                        match client.infer(&[0.5, 0.5]) {
+                            Ok(_) => break,
+                            Err(kan_edge::Error::Overloaded {
+                                retry_after_ms, ..
+                            }) => {
+                                rejections += 1;
+                                std::thread::sleep(Duration::from_millis(
+                                    retry_after_ms.clamp(1, 20),
+                                ));
+                            }
+                            Err(e) => return Err(e),
+                        }
+                        if start.elapsed() > Duration::from_secs(10) {
+                            return Err(kan_edge::Error::Serving(
+                                "singleton starved for >10s".into(),
+                            ));
+                        }
+                    }
+                    latencies.push(start.elapsed().as_micros() as u64);
+                    max_gap_us =
+                        max_gap_us.max(last_done.elapsed().as_micros() as u64);
+                    last_done = Instant::now();
+                }
+                Ok((latencies, rejections, max_gap_us))
+            },
+        ));
     }
-    let v2p_secs = t0.elapsed().as_secs_f64();
-    let now = served_counts(&mut probe)?;
-    let v2p_mean = mean_batch_delta(last, now);
-    last = now;
 
-    // v2 batch submit: whole `rows` batches in one frame
-    let t0 = Instant::now();
-    let mut done = 0usize;
-    while done < requests {
-        let n = batch.min(requests - done);
-        let rows: Vec<Vec<f32>> = vec![features.clone(); n];
-        client.infer_batch(None, rows)?;
-        done += n;
-    }
-    let v2b_secs = t0.elapsed().as_secs_f64();
-    let now = served_counts(&mut probe)?;
-    let v2b_mean = mean_batch_delta(last, now);
-
-    println!(
-        "{:<24} {:>9} {:>9} {:>11} {:>11}",
-        "mode", "requests", "wall(s)", "req/s", "mean batch"
-    );
-    let table = [
-        ("v1 single-request".to_string(), v1_secs, v1_mean),
-        (format!("v2 pipelined (w={window})"), v2p_secs, v2p_mean),
-        (format!("v2 batch (b={batch})"), v2b_secs, v2b_mean),
-    ];
-    for (name, secs, mean) in table {
-        println!(
-            "{:<24} {:>9} {:>9.2} {:>11.0} {:>11.2}",
-            name,
-            requests,
-            secs,
-            requests as f64 / secs.max(1e-9),
-            mean
-        );
-    }
+    // join everything and tear the server down BEFORE propagating any
+    // tenant error: an early `?` here would leak the batch tenant as a
+    // busy-loop against a server that never shuts down
+    let singleton_results: Vec<Result<(Vec<u64>, u64, u64)>> = singles
+        .into_iter()
+        .map(|h| h.join().expect("singleton tenant panicked"))
+        .collect();
+    let wall_secs = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    let batch_result = batch_tenant.join().expect("batch tenant panicked");
     server.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
+
+    let mut latencies = Vec::with_capacity(tenants * ops);
+    let mut rejections = 0u64;
+    let mut max_starvation_us = 0u64;
+    for r in singleton_results {
+        let (lat, rej, gap) = r?;
+        latencies.extend(lat);
+        rejections += rej;
+        max_starvation_us = max_starvation_us.max(gap);
+    }
+    let batch_rows_done = batch_result?;
+
+    latencies.sort_unstable();
+    Ok(MixedPolicyReport {
+        policy: policy.to_string(),
+        singleton_ops: latencies.len(),
+        rejections,
+        p50_us: kan_edge::coordinator::metrics::percentile(&latencies, 0.50),
+        p99_us: kan_edge::coordinator::metrics::percentile(&latencies, 0.99),
+        max_starvation_us,
+        batch_rows: batch_rows_done,
+        wall_secs,
+    })
+}
+
+/// Self-contained network benchmark: publish a tiny synthetic KAN into
+/// a temp registry, serve it on an ephemeral port (digital backend),
+/// and measure served throughput over one connection in three modes —
+/// v1 JSON lines (one request in flight), v2 pipelined submit/poll,
+/// and v2 whole-batch submit. The per-phase "mean batch" column is the
+/// batch occupancy the *server* saw, showing that v2 lets a single
+/// connection feed the dynamic batcher multi-row batches.
+///
+/// A fourth, mixed-tenant phase (skip with `--skip-mixed`; run alone
+/// with `--mixed-only`) pits one whole-batch tenant against `--tenants`
+/// single-row tenants under `fifo` vs `drr` admission and reports
+/// singleton rejections, p50/p99, and the worst starvation window —
+/// the end-to-end fairness comparison. `--json FILE` writes the full
+/// machine-readable report (CI archives it for the perf trajectory).
+fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::time::Instant;
+
+    use kan_edge::util::json::{arr, obj, Value};
+
+    let requests = args.get_usize("requests", 2000).max(1);
+    let batch = args.get_usize("batch", 16).max(1);
+    let mut window = args.get_usize("window", 32).max(1);
+    let tenants = args.get_usize("tenants", 4).max(1);
+    let mix_requests = args.get_usize("mix-requests", 200).max(1);
+    let mix_batch = args.get_usize("mix-batch", 256).max(1);
+    let mix_queue = args.get_usize("mix-queue", 64).max(4);
+    let mixed_only = args.opts.contains_key("mixed-only");
+    let skip_mixed = args.opts.contains_key("skip-mixed");
+
+    let mut phases: Vec<(String, f64, f64)> = Vec::new();
+    if !mixed_only {
+        let (dir, server) = spawn_bench_server(cfg, "modes")?;
+        println!(
+            "bench-net: {requests} requests per mode, digital backend, {}",
+            server.addr
+        );
+        let features = vec![0.5f32, 0.5];
+        // separate control connection: reads (requests, batches) deltas
+        // between phases for the exact per-phase batch occupancy
+        let mut probe = KanClient::connect(server.addr)?;
+        let mut last = served_counts(&mut probe)?;
+
+        // v1: JSON lines, the connection blocks until each reply arrives
+        let t0 = Instant::now();
+        {
+            let conn = std::net::TcpStream::connect(server.addr)?;
+            let mut w = conn.try_clone()?;
+            let mut r = BufReader::new(conn);
+            let mut line = String::new();
+            for _ in 0..requests {
+                w.write_all(b"{\"features\":[0.5,0.5]}\n")?;
+                line.clear();
+                r.read_line(&mut line)?;
+            }
+        }
+        let v1_secs = t0.elapsed().as_secs_f64();
+        let now = served_counts(&mut probe)?;
+        phases.push(("v1 single-request".into(), v1_secs, mean_batch_delta(last, now)));
+        last = now;
+
+        // v2 pipelined: keep `window` requests in flight on one
+        // connection. Clamp to the negotiated cap: beyond it the server
+        // reader stops pulling frames, and submitting without polling
+        // past that point would deadlock both directions once the socket
+        // buffers fill.
+        let mut client = KanClient::connect(server.addr)?;
+        window = window.min(client.server_info().max_in_flight);
+        let t0 = Instant::now();
+        let (mut submitted, mut done) = (0usize, 0usize);
+        while done < requests {
+            while submitted < requests && submitted - done < window {
+                client.submit(None, &features)?;
+                submitted += 1;
+            }
+            let (_id, outcome) = client.poll()?;
+            outcome?;
+            done += 1;
+        }
+        let v2p_secs = t0.elapsed().as_secs_f64();
+        let now = served_counts(&mut probe)?;
+        phases.push((
+            format!("v2 pipelined (w={window})"),
+            v2p_secs,
+            mean_batch_delta(last, now),
+        ));
+        last = now;
+
+        // v2 batch submit: whole `rows` batches in one frame
+        let t0 = Instant::now();
+        let mut done = 0usize;
+        while done < requests {
+            let n = batch.min(requests - done);
+            let rows: Vec<Vec<f32>> = vec![features.clone(); n];
+            client.infer_batch(None, rows)?;
+            done += n;
+        }
+        let v2b_secs = t0.elapsed().as_secs_f64();
+        let now = served_counts(&mut probe)?;
+        phases.push((
+            format!("v2 batch (b={batch})"),
+            v2b_secs,
+            mean_batch_delta(last, now),
+        ));
+
+        println!(
+            "{:<24} {:>9} {:>9} {:>11} {:>11}",
+            "mode", "requests", "wall(s)", "req/s", "mean batch"
+        );
+        for (name, secs, mean) in &phases {
+            println!(
+                "{:<24} {:>9} {:>9.2} {:>11.0} {:>11.2}",
+                name,
+                requests,
+                secs,
+                requests as f64 / secs.max(1e-9),
+                mean
+            );
+        }
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    let mut mixed: Vec<MixedPolicyReport> = Vec::new();
+    if !skip_mixed {
+        println!(
+            "\nmixed-tenant: 1 batch tenant ({mix_batch} rows/submit) + \
+             {tenants} singleton tenants x {mix_requests} requests, \
+             queue_depth {mix_queue}"
+        );
+        for policy in ["fifo", "drr"] {
+            mixed.push(run_mixed_policy(
+                cfg,
+                policy,
+                tenants,
+                mix_requests,
+                mix_batch,
+                mix_queue,
+            )?);
+        }
+        println!(
+            "{:<8} {:>9} {:>10} {:>10} {:>15} {:>13}",
+            "policy", "rejects", "p50(us)", "p99(us)", "max-starve(us)", "batch rows/s"
+        );
+        for r in &mixed {
+            println!(
+                "{:<8} {:>9} {:>10} {:>10} {:>15} {:>13.0}",
+                r.policy,
+                r.rejections,
+                r.p50_us,
+                r.p99_us,
+                r.max_starvation_us,
+                r.batch_rows as f64 / r.wall_secs.max(1e-9),
+            );
+        }
+        if let (Some(fifo), Some(drr)) =
+            (mixed.first(), mixed.get(1))
+        {
+            if drr.rejections == 0 && fifo.rejections > 0 {
+                println!(
+                    "drr admitted every singleton (fifo rejected {}); \
+                     singleton p99 {:.1}x lower under drr",
+                    fifo.rejections,
+                    fifo.p99_us as f64 / (drr.p99_us as f64).max(1.0),
+                );
+            }
+        }
+    }
+
+    if let Some(path) = args.opts.get("json") {
+        let phase_values: Vec<Value> = phases
+            .iter()
+            .map(|(name, secs, mean)| {
+                obj(vec![
+                    ("mode", Value::Str(name.clone())),
+                    ("requests", Value::Int(requests as i64)),
+                    ("wall_s", Value::Float(*secs)),
+                    ("rps", Value::Float(requests as f64 / secs.max(1e-9))),
+                    ("mean_batch", Value::Float(*mean)),
+                ])
+            })
+            .collect();
+        let report = obj(vec![
+            ("phases", arr(phase_values)),
+            (
+                "mixed",
+                obj(vec![
+                    ("tenants", Value::Int(tenants as i64)),
+                    ("ops_per_tenant", Value::Int(mix_requests as i64)),
+                    ("batch_rows_per_submit", Value::Int(mix_batch as i64)),
+                    ("queue_depth", Value::Int(mix_queue as i64)),
+                    (
+                        "policies",
+                        arr(mixed.iter().map(|r| r.to_value()).collect()),
+                    ),
+                ]),
+            ),
+        ]);
+        std::fs::write(path, report.to_string())?;
+        println!("\nwrote JSON report to {path}");
+    }
     Ok(())
 }
 

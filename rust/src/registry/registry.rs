@@ -36,6 +36,7 @@ use crate::config::AppConfig;
 use crate::coordinator::metrics::{MetricsHub, MetricsReport};
 use crate::coordinator::protocol::ModelSummary;
 use crate::coordinator::router::{build_backend, serve_options};
+use crate::coordinator::scheduler::ClientId;
 use crate::coordinator::server::{Dispatch, InferenceService};
 use crate::error::{Error, Result};
 
@@ -276,23 +277,47 @@ impl ModelRegistry {
     }
 
     /// Route one request (see [`ModelRegistry::resolve`] for the spec
-    /// grammar).
+    /// grammar). Fresh [`ClientId`]: this call is its own fairness class.
     pub fn infer(&self, spec: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+        self.infer_from(ClientId::fresh(), spec, features)
+    }
+
+    /// Like [`ModelRegistry::infer`] attributed to `client` for fair
+    /// admission (the TCP layer passes its per-connection id).
+    pub fn infer_from(
+        &self,
+        client: ClientId,
+        spec: Option<&str>,
+        features: Vec<f32>,
+    ) -> Result<(String, Vec<f32>)> {
         let served = self.resolve(spec)?;
-        let logits = served.svc.infer(features)?;
+        let logits = served.svc.infer_from(client, features)?;
         Ok((served.id.clone(), logits))
     }
 
     /// Route one whole batch: the variant is resolved once and every row
     /// hits its dynamic batcher back-to-back, so a single call produces
-    /// multi-row batches (the v2 `infer_batch` verb lands here).
+    /// multi-row batches (the v2 `infer_batch` verb lands here). Fresh
+    /// [`ClientId`] per call.
     pub fn infer_batch(
         &self,
         spec: Option<&str>,
         rows: Vec<Vec<f32>>,
     ) -> Result<(String, Vec<Vec<f32>>)> {
+        self.infer_batch_from(ClientId::fresh(), spec, rows)
+    }
+
+    /// Like [`ModelRegistry::infer_batch`] attributed to `client`: under
+    /// the `drr` admission policy the batch occupies at most the client
+    /// quota of the target model's queue while it drains.
+    pub fn infer_batch_from(
+        &self,
+        client: ClientId,
+        spec: Option<&str>,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<Vec<f32>>)> {
         let served = self.resolve(spec)?;
-        let outs = served.svc.infer_many(rows)?;
+        let outs = served.svc.infer_many_from(client, rows)?;
         Ok((served.id.clone(), outs))
     }
 
@@ -399,12 +424,18 @@ impl ModelRegistry {
 }
 
 impl Dispatch for ModelRegistry {
-    fn dispatch(&self, model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
-        self.infer(model, features)
+    fn dispatch(
+        &self,
+        client: ClientId,
+        model: Option<&str>,
+        features: Vec<f32>,
+    ) -> Result<(String, Vec<f32>)> {
+        self.infer_from(client, model, features)
     }
 
     fn dispatch_batch(
         &self,
+        client: ClientId,
         model: Option<&str>,
         rows: Vec<Vec<f32>>,
     ) -> Result<(String, Vec<Vec<f32>>)> {
@@ -413,7 +444,7 @@ impl Dispatch for ModelRegistry {
         if rows.is_empty() {
             return Err(Error::Serving("empty batch".into()));
         }
-        self.infer_batch(model, rows)
+        self.infer_batch_from(client, model, rows)
     }
 
     fn model_summaries(&self) -> Vec<ModelSummary> {

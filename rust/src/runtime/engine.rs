@@ -6,13 +6,13 @@
 //! returns a clear [`Error::Runtime`] telling the caller to rebuild with
 //! `--features pjrt`.
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 pub use real::{PjrtEngine, PjrtExecutable};
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla")))]
 pub use stub::{PjrtEngine, PjrtExecutable};
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 mod real {
     use std::collections::HashMap;
     use std::path::{Path, PathBuf};
@@ -123,7 +123,7 @@ mod real {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla")))]
 mod stub {
     use std::path::Path;
     use std::sync::Arc;
@@ -190,7 +190,7 @@ mod stub {
 mod tests {
     use super::*;
 
-    #[cfg(feature = "pjrt")]
+    #[cfg(all(feature = "pjrt", feature = "xla"))]
     #[test]
     fn missing_artifact_is_a_clear_error() {
         let engine = PjrtEngine::cpu().unwrap();
@@ -202,14 +202,14 @@ mod tests {
         assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
     }
 
-    #[cfg(feature = "pjrt")]
+    #[cfg(all(feature = "pjrt", feature = "xla"))]
     #[test]
     fn cpu_platform_reports_cpu() {
         let engine = PjrtEngine::cpu().unwrap();
         assert!(engine.platform().to_lowercase().contains("cpu"));
     }
 
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(all(feature = "pjrt", feature = "xla")))]
     #[test]
     fn stub_reports_missing_feature() {
         let err = PjrtEngine::cpu().map(|_| ()).unwrap_err().to_string();

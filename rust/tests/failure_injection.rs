@@ -75,7 +75,7 @@ fn manifest_missing_dir() {
     assert!(err.contains("make artifacts"), "{err}");
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 #[test]
 fn corrupt_hlo_text_fails_to_compile() {
     let path = write_tmp("bad.hlo.txt", "HloModule garbage\n\nthis is not hlo\n");
@@ -83,7 +83,7 @@ fn corrupt_hlo_text_fails_to_compile() {
     assert!(engine.load_hlo(&path, 1, 17, 14).is_err());
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla")))]
 #[test]
 fn pjrt_stub_errors_mention_the_feature() {
     // built without the xla dependency: the stub engine must fail loudly
@@ -95,7 +95,7 @@ fn pjrt_stub_errors_mention_the_feature() {
     assert!(err.contains("pjrt"), "{err}");
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 #[test]
 fn pjrt_run_rejects_wrong_input_len() {
     // use a real artifact if available
@@ -112,7 +112,7 @@ fn pjrt_run_rejects_wrong_input_len() {
     assert!(err.contains("17"), "{err}");
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 #[test]
 fn pjrt_padding_of_short_batches_is_correct() {
     // PjrtBackend pads chunks to the compiled batch; padded rows must not

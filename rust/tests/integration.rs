@@ -87,7 +87,7 @@ fn mlp_accuracy_matches_python_export() {
     );
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 #[test]
 fn pjrt_matches_digital_reference() {
     // the AOT HLO graph and the rust integer dataflow implement the same
@@ -143,6 +143,7 @@ fn serving_pipeline_end_to_end_digital() {
             },
             queue_depth: 256,
             workers: 2,
+            ..ServeOptions::default()
         },
     );
     let mut correct = 0;
@@ -225,7 +226,11 @@ fn backend_output_dims_consistent() {
     let mut cfg = AppConfig::default();
     cfg.artifacts.dir = dir.to_string();
     let backends: &[&str] =
-        if cfg!(feature = "pjrt") { &["digital", "pjrt"] } else { &["digital"] };
+        if cfg!(all(feature = "pjrt", feature = "xla")) {
+            &["digital", "pjrt"]
+        } else {
+            &["digital"]
+        };
     for backend_name in backends.iter().copied() {
         cfg.server.backend = backend_name.into();
         let be = build_backend(&cfg, &manifest, "kan1").unwrap();
@@ -267,6 +272,7 @@ fn concurrent_serving_under_load() {
             },
             queue_depth: 2048,
             workers: 4,
+            ..ServeOptions::default()
         },
     );
     let svc = Arc::new(svc);

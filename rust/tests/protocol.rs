@@ -15,7 +15,7 @@ use std::time::Duration;
 
 use kan_edge::client::KanClient;
 use kan_edge::coordinator::protocol::{read_frame, write_frame, FrameRead, MAGIC};
-use kan_edge::coordinator::{Dispatch, TcpLimits, TcpServer};
+use kan_edge::coordinator::{ClientId, Dispatch, TcpLimits, TcpServer};
 use kan_edge::error::Result;
 use kan_edge::kan::checkpoint::synthetic_checkpoint_json as kan_variant_json;
 use kan_edge::registry::ModelRegistry;
@@ -245,7 +245,12 @@ fn v2_control_plane_exposes_registry() {
 struct SleepyEcho;
 
 impl Dispatch for SleepyEcho {
-    fn dispatch(&self, _model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+    fn dispatch(
+        &self,
+        _client: ClientId,
+        _model: Option<&str>,
+        features: Vec<f32>,
+    ) -> Result<(String, Vec<f32>)> {
         let delay_ms = features.get(1).copied().unwrap_or(0.0);
         if delay_ms > 0.0 {
             std::thread::sleep(Duration::from_millis(delay_ms as u64));
@@ -303,7 +308,12 @@ fn v2_pipelines_32_requests_out_of_order_on_one_connection() {
 struct PanicOnNegative;
 
 impl Dispatch for PanicOnNegative {
-    fn dispatch(&self, _model: Option<&str>, features: Vec<f32>) -> Result<(String, Vec<f32>)> {
+    fn dispatch(
+        &self,
+        _client: ClientId,
+        _model: Option<&str>,
+        features: Vec<f32>,
+    ) -> Result<(String, Vec<f32>)> {
         let x = features.first().copied().unwrap_or(0.0);
         assert!(x >= 0.0, "injected dispatch panic");
         Ok(("echo@1".into(), vec![x, -x]))
