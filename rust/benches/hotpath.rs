@@ -1,10 +1,19 @@
 //! Hot-path micro benchmarks: the inner loops profiled and optimized in
 //! EXPERIMENTS.md §Perf.
 //!
-//! * digital KAN layer forward (serving digital backend inner loop)
+//! * digital KAN forward — the scalar golden reference vs the planned
+//!   execution engine (`docs/ENGINE.md`), single-sample and batch-64
 //! * IR-drop ladder solve (ACIM simulation inner loop)
 //! * batcher + service round trip (serving overhead floor)
 //! * PJRT executable round trip (AOT graph dispatch cost)
+//!
+//! When the artifacts are missing, a deterministic synthetic
+//! kan2-shaped checkpoint (dims [17, 8, 14], G=5, K=3) stands in so the
+//! bench trajectory never goes empty. Alongside the human-readable
+//! table the run emits `BENCH_hotpath.json` (override the path with
+//! `KAN_EDGE_BENCH_JSON`) holding per-bench ns/op and the
+//! reference-vs-engine batch-64 speedup — CI archives it next to the
+//! bench-net report.
 //!
 //! ```sh
 //! cargo bench --bench hotpath
@@ -16,9 +25,10 @@ use kan_edge::acim::{mac_with_irdrop, ArrayConfig, Crossbar};
 use kan_edge::coordinator::batcher::BatchPolicy;
 use kan_edge::coordinator::{InferenceService, ServeOptions};
 use kan_edge::data::LoadGen;
-use kan_edge::kan::checkpoint::{Dataset, Manifest};
-use kan_edge::kan::QuantKanModel;
-use kan_edge::util::bench::{bench, black_box, header, report};
+use kan_edge::kan::checkpoint::{synthetic_kan_checkpoint, Dataset, Manifest};
+use kan_edge::kan::{argmax, EngineOptions, EngineScratch, KanEngine, QuantKanModel};
+use kan_edge::util::bench::{bench, black_box, header, report, BenchResult};
+use kan_edge::util::json::{arr, obj, Value};
 
 struct Echo;
 
@@ -53,25 +63,84 @@ fn artifacts_dir() -> String {
     "artifacts".to_string()
 }
 
+/// Run one case, print the human row, and collect it for the JSON report.
+fn run<F: FnMut()>(
+    results: &mut Vec<BenchResult>,
+    name: &str,
+    target_ms: u64,
+    f: F,
+) {
+    let r = bench(name, target_ms, f);
+    report(&r);
+    results.push(r);
+}
+
+fn ns_of(results: &[BenchResult], name: &str) -> Option<f64> {
+    results.iter().find(|r| r.name == name).map(|r| r.per_iter_ns())
+}
+
 fn main() {
     let dir = artifacts_dir();
+    let mut results: Vec<BenchResult> = Vec::new();
 
     header("digital KAN forward");
-    if let Ok(model) = QuantKanModel::load(format!("{dir}/kan2.weights.json")) {
-        let mut lg = LoadGen::new(7, model.input_dim());
-        let one = lg.next_vec();
-        let r = bench("kan2 forward (1 sample)", 400, || {
-            black_box(model.forward(&one));
-        });
-        report(&r);
-        let batch: Vec<f32> = lg.batch(64).into_iter().flatten().collect();
-        let r = bench("kan2 forward_batch (64 samples)", 500, || {
-            black_box(model.forward_batch(&batch, 64));
-        });
-        report(&r);
-    } else {
-        println!("  (artifacts missing; run `make artifacts`)");
-    }
+    let (model, model_source) =
+        match QuantKanModel::load(format!("{dir}/kan2.weights.json")) {
+            Ok(m) => (m, "artifact"),
+            Err(_) => {
+                println!("  (artifacts missing; using a synthetic kan2-shaped checkpoint)");
+                let ckpt = synthetic_kan_checkpoint("kan2", &[17, 8, 14], 5, 3, 0xCAFE);
+                (QuantKanModel::from_checkpoint(&ckpt), "synthetic")
+            }
+        };
+    let mut lg = LoadGen::new(7, model.input_dim());
+    let one = lg.next_vec();
+    // the pre-PR scalar reference numbers, measured in the same run the
+    // engine is (CI compares the two for the perf trajectory)
+    run(&mut results, "kan2 forward (1 sample)", 400, || {
+        black_box(model.forward(&one));
+    });
+    let batch: Vec<f32> = lg.batch(64).into_iter().flatten().collect();
+    run(&mut results, "kan2 forward_batch (64 samples)", 500, || {
+        black_box(model.forward_batch(&batch, 64));
+    });
+
+    let engine = KanEngine::compile(&model, EngineOptions::default())
+        .expect("engine compile");
+    let mut scratch = engine.new_scratch();
+    let mut out1 = vec![0.0f64; engine.output_dim()];
+    run(&mut results, "kan2 engine forward (1 sample)", 400, || {
+        engine.forward_into(&one, &mut out1, &mut scratch);
+        black_box(&out1);
+    });
+    let mut out64 = vec![0.0f64; 64 * engine.output_dim()];
+    let mut s1 = vec![engine.new_scratch()];
+    run(&mut results, "kan2 engine forward_batch (64 samples)", 500, || {
+        engine.forward_batch_with(&batch, 64, &mut out64, &mut s1);
+        black_box(&out64);
+    });
+    let mut s4: Vec<EngineScratch> = (0..4).map(|_| engine.new_scratch()).collect();
+    run(
+        &mut results,
+        "kan2 engine forward_batch (64 samples, 4 workers)",
+        500,
+        || {
+            engine.forward_batch_with(&batch, 64, &mut out64, &mut s4);
+            black_box(&out64);
+        },
+    );
+
+    // argmax parity engine vs reference on random inputs (the test suite
+    // enforces this; the bench just surfaces it next to the numbers)
+    let mut lg2 = LoadGen::new(99, model.input_dim());
+    let samples = 256usize;
+    let agree = (0..samples)
+        .filter(|_| {
+            let x = lg2.next_vec();
+            argmax(&model.forward(&x)) == engine.predict(&x)
+        })
+        .count();
+    println!("  engine/reference argmax agreement: {agree}/{samples}");
 
     header("IR-drop ladder solve");
     for rows in [128usize, 512, 1024] {
@@ -81,10 +150,14 @@ fn main() {
         let drives: Vec<f64> = (0..rows)
             .map(|i| if i % 5 == 0 { 0.5 } else { 0.0 })
             .collect();
-        let r = bench(&format!("ladder solve ({rows} rows, 1 col)"), 300, || {
-            black_box(mac_with_irdrop(&xb, &drives));
-        });
-        report(&r);
+        run(
+            &mut results,
+            &format!("ladder solve ({rows} rows, 1 col)"),
+            300,
+            || {
+                black_box(mac_with_irdrop(&xb, &drives));
+            },
+        );
     }
 
     header("serving round trip (echo backend)");
@@ -98,10 +171,9 @@ fn main() {
         ..ServeOptions::default()
     };
     let svc = InferenceService::start(Arc::new(Echo), opts);
-    let r = bench("single blocking infer", 400, || {
+    run(&mut results, "single blocking infer", 400, || {
         black_box(svc.infer(vec![1.0]).unwrap());
     });
-    report(&r);
 
     header("PJRT dispatch");
     match Manifest::load(&dir) {
@@ -117,11 +189,56 @@ fn main() {
             for (i, (row, _)) in ds.test_rows().take(32).enumerate() {
                 flat[i * 17..(i + 1) * 17].copy_from_slice(row);
             }
-            let r = bench("kan1 b32 execute (AOT HLO)", 500, || {
+            run(&mut results, "kan1 b32 execute (AOT HLO)", 500, || {
                 black_box(exe.run(&flat).unwrap());
             });
-            report(&r);
         }
         Err(e) => println!("  (skipping: {e})"),
+    }
+
+    // machine-readable report: per-bench ns/op plus the headline
+    // reference-vs-engine speedup on the batch-64 case
+    let json_path = std::env::var("KAN_EDGE_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let bench_values: Vec<Value> = results
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("name", Value::Str(r.name.clone())),
+                ("ns_per_op", Value::Float(r.per_iter_ns())),
+                ("mean_ns", Value::Float(r.mean.as_nanos() as f64)),
+                ("iters", Value::Int(r.iters as i64)),
+            ])
+        })
+        .collect();
+    // one speedup computation feeds both the JSON field and the console
+    // line, so they can never drift apart
+    let speedup = match (
+        ns_of(&results, "kan2 forward_batch (64 samples)"),
+        ns_of(&results, "kan2 engine forward_batch (64 samples)"),
+    ) {
+        (Some(r), Some(e)) if e > 0.0 => Some((r, e, r / e)),
+        _ => None,
+    };
+    let mut fields = vec![
+        ("schema", Value::Int(1)),
+        ("model_source", Value::Str(model_source.to_string())),
+        (
+            "argmax_agreement",
+            Value::Float(agree as f64 / samples as f64),
+        ),
+        ("benches", arr(bench_values)),
+    ];
+    if let Some((_, _, s)) = speedup {
+        fields.push(("speedup_forward_batch_64", Value::Float(s)));
+    }
+    match std::fs::write(&json_path, obj(fields).to_string()) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => println!("\nfailed to write {json_path}: {e}"),
+    }
+    if let Some((r, e, s)) = speedup {
+        println!(
+            "engine speedup on forward_batch(64): {s:.2}x ({r:.0} ns -> {e:.0} ns)"
+        );
     }
 }

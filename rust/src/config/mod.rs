@@ -51,6 +51,11 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Backend: "pjrt" (AOT graph), "digital" (rust reference) or "acim".
     pub backend: String,
+    /// Digital backend execution path: `true` (default) compiles the
+    /// checkpoint into the planned [`crate::kan::KanEngine`]
+    /// (integer-exact hot path, `docs/ENGINE.md`); `false` serves the
+    /// scalar golden reference (`QuantKanModel::forward_batch`).
+    pub engine: bool,
     /// Max bytes in one wire request (v1 line or v2 frame payload); an
     /// oversized request gets a structured `too_large` error and only
     /// that connection is dropped.
@@ -78,6 +83,7 @@ impl Default for ServerConfig {
                 "digital"
             }
             .into(),
+            engine: true,
             max_request_bytes: wire.max_request_bytes,
             max_in_flight: wire.max_in_flight,
         }
@@ -216,6 +222,7 @@ impl AppConfig {
             get_usize(s, "queue_depth", &mut self.server.queue_depth);
             get_usize(s, "workers", &mut self.server.workers);
             get_string(s, "backend", &mut self.server.backend);
+            get_bool(s, "engine", &mut self.server.engine);
             get_usize(s, "max_request_bytes", &mut self.server.max_request_bytes);
             get_usize(s, "max_in_flight", &mut self.server.max_in_flight);
         }

@@ -18,7 +18,7 @@ use std::sync::{Arc, Mutex};
 use crate::acim::{AcimModel, NoiseModel};
 use crate::baseline::MlpModel;
 use crate::error::{Error, Result};
-use crate::kan::QuantKanModel;
+use crate::kan::{EngineOptions, EngineScratch, KanEngine, QuantKanModel};
 use crate::runtime::PjrtEngine;
 
 /// A synchronous batch-inference backend. Called from blocking worker
@@ -147,9 +147,54 @@ impl InferBackend for PjrtBackend {
     }
 }
 
-/// Rust digital-reference backend.
+/// Rust digital backend. By default it executes through the compiled
+/// [`KanEngine`] plan (integer-exact hot path, zero steady-state
+/// allocations inside the engine; see `docs/ENGINE.md`); the scalar
+/// golden reference (`QuantKanModel::forward_batch`) remains available
+/// via [`DigitalBackend::with_engine`]`(.., false)` / the
+/// `server.engine = false` config knob.
 pub struct DigitalBackend {
     pub model: Arc<QuantKanModel>,
+    engine: Option<Arc<KanEngine>>,
+    /// Reusable scratch arenas, one per concurrent in-flight batch:
+    /// popped for the duration of an `infer_batch`, pushed back after —
+    /// steady state allocates no new arenas.
+    scratch: Mutex<Vec<EngineScratch>>,
+}
+
+impl DigitalBackend {
+    /// Engine-backed digital backend (the default serving path).
+    pub fn new(model: Arc<QuantKanModel>) -> Self {
+        Self::with_engine(model, true)
+    }
+
+    /// Choose the execution path explicitly. A failed engine compile
+    /// (exotic checkpoint outside the int8/int16 contract) degrades to
+    /// the scalar reference with a warning rather than refusing to
+    /// serve.
+    pub fn with_engine(model: Arc<QuantKanModel>, use_engine: bool) -> Self {
+        let engine = if use_engine {
+            match KanEngine::compile(&model, EngineOptions::default()) {
+                Ok(e) => Some(Arc::new(e)),
+                Err(e) => {
+                    eprintln!(
+                        "warning: engine compile failed for '{}' ({e}); \
+                         serving the scalar reference path",
+                        model.name
+                    );
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        Self { model, engine, scratch: Mutex::new(Vec::new()) }
+    }
+
+    /// Whether the planned engine is the active execution path.
+    pub fn engine_enabled(&self) -> bool {
+        self.engine.is_some()
+    }
 }
 
 impl InferBackend for DigitalBackend {
@@ -180,7 +225,23 @@ impl InferBackend for DigitalBackend {
             }
             flat.extend_from_slice(r);
         }
-        let out = self.model.forward_batch(&flat, rows.len());
+        let batch = rows.len();
+        let out = if let Some(engine) = &self.engine {
+            // one scratch per call: the service's worker pool provides
+            // the multi-core, each worker reuses an arena from the pool
+            let mut s = self
+                .scratch
+                .lock()
+                .unwrap()
+                .pop()
+                .unwrap_or_else(|| engine.new_scratch());
+            let mut out = vec![0.0f64; batch * dout];
+            engine.forward_batch_with(&flat, batch, &mut out, std::slice::from_mut(&mut s));
+            self.scratch.lock().unwrap().push(s);
+            out
+        } else {
+            self.model.forward_batch(&flat, batch)
+        };
         Ok(out
             .chunks_exact(dout)
             .map(|c| c.iter().map(|&v| v as f32).collect())

@@ -93,7 +93,10 @@ pub fn build_backend(
         }
         ("digital", _) => {
             let qk = QuantKanModel::load(dir.join(&entry.weights))?;
-            Ok(Arc::new(DigitalBackend { model: Arc::new(qk) }))
+            Ok(Arc::new(DigitalBackend::with_engine(
+                Arc::new(qk),
+                cfg.server.engine,
+            )))
         }
         ("acim", _) => {
             let qk = QuantKanModel::load(dir.join(&entry.weights))?;

@@ -106,12 +106,23 @@ impl InferenceService {
         Self { sched, _closer: closer, input_dim, metrics }
     }
 
+    /// Admission-time row validation: shape (when the backend declares
+    /// one) and finiteness. A NaN/∞ feature must be rejected here with a
+    /// structured shape error — past admission it would quantize to an
+    /// arbitrary-but-valid code and yield a confident prediction.
     fn check_shape(&self, features: &[f32]) -> Result<()> {
         if let Some(din) = self.input_dim {
             if features.len() != din {
                 return Err(Error::Shape(format!(
                     "row has {} features, expected {din}",
                     features.len()
+                )));
+            }
+        }
+        for (i, v) in features.iter().enumerate() {
+            if !v.is_finite() {
+                return Err(Error::Shape(format!(
+                    "non-finite feature {v} at index {i}"
                 )));
             }
         }
@@ -513,6 +524,26 @@ mod tests {
         assert!(err.to_string().contains("shape mismatch"), "{err}");
         // valid traffic is unaffected and no batch was poisoned
         assert_eq!(svc.infer(vec![1.0, 2.0]).unwrap(), vec![3.0]);
+        assert_eq!(svc.metrics.report().errors, 0);
+    }
+
+    #[test]
+    fn non_finite_features_rejected_at_admission() {
+        let svc = InferenceService::start(Arc::new(Doubler), ServeOptions::default());
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let err = svc.infer(vec![bad]).unwrap_err();
+            assert!(
+                err.to_string().contains("non-finite feature"),
+                "{bad}: {err}"
+            );
+        }
+        // batch submit validates every row before admitting any
+        let err = svc
+            .infer_many(vec![vec![1.0], vec![f32::NAN]])
+            .unwrap_err();
+        assert!(err.to_string().contains("non-finite feature"), "{err}");
+        // valid traffic unaffected, nothing reached the backend as an error
+        assert_eq!(svc.infer(vec![21.0]).unwrap(), vec![42.0]);
         assert_eq!(svc.metrics.report().errors, 0);
     }
 

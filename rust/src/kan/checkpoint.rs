@@ -442,6 +442,119 @@ impl ModelEntry {
     }
 }
 
+impl KanCheckpoint {
+    /// Serialize back to the artifact JSON document (inverse of
+    /// [`KanCheckpoint::load`]) — lets benches and tests publish
+    /// synthetic checkpoints through the same path as real artifacts.
+    pub fn to_value(&self) -> Value {
+        let layers: Vec<Value> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let sh: Vec<Value> = l
+                    .sh_lut
+                    .iter()
+                    .map(|row| {
+                        Value::Array(row.iter().map(|&c| (c as usize).into()).collect())
+                    })
+                    .collect();
+                obj(vec![
+                    ("din", l.din.into()),
+                    ("dout", l.dout.into()),
+                    ("lo", l.lo.into()),
+                    ("hi", l.hi.into()),
+                    ("ld", (l.ld as usize).into()),
+                    ("sh_lut", Value::Array(sh)),
+                    (
+                        "coeff_q",
+                        Value::Array(
+                            l.coeff_q.iter().map(|&c| Value::Int(c as i64)).collect(),
+                        ),
+                    ),
+                    ("coeff_scale", l.coeff_scale.into()),
+                    ("wb", Value::Array(l.wb.iter().map(|&w| w.into()).collect())),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("name", self.name.as_str().into()),
+            ("kind", self.kind.as_str().into()),
+            (
+                "dims",
+                Value::Array(self.dims.iter().map(|&d| d.into()).collect()),
+            ),
+            ("g", (self.g as usize).into()),
+            ("k", (self.k as usize).into()),
+            ("n_bits", (self.n_bits as usize).into()),
+            ("num_params", self.num_params.into()),
+            ("layers", Value::Array(layers)),
+        ];
+        if let Some(a) = self.float_test_acc {
+            fields.push(("float_test_acc", a.into()));
+        }
+        if let Some(a) = self.quant_test_acc {
+            fields.push(("quant_test_acc", a.into()));
+        }
+        obj(fields)
+    }
+}
+
+/// Deterministic synthetic KAN checkpoint with a real quantization
+/// geometry: valid shapes, int8 ci' codes, SH-LUT built from the actual
+/// `(G, K)` spec over `[-1, 1]`. The fixture behind the hotpath bench's
+/// artifact fallback and the engine test suite — not a trained model
+/// (predictions are arbitrary but stable for a given seed).
+pub fn synthetic_kan_checkpoint(
+    name: &str,
+    dims: &[usize],
+    g: u32,
+    k: u32,
+    seed: u64,
+) -> KanCheckpoint {
+    use crate::quant::{AspSpec, ShLut};
+    use crate::util::Rng;
+
+    assert!(dims.len() >= 2, "need at least one layer");
+    let n_bits = 8;
+    let mut rng = Rng::new(seed);
+    let nb = (g + k) as usize;
+    let spec = AspSpec::build(g, k, n_bits, -1.0, 1.0).expect("valid (G, K, n)");
+    let lut = ShLut::build(&spec, n_bits);
+    let mut layers = Vec::new();
+    let mut num_params = 0usize;
+    for w in dims.windows(2) {
+        let (din, dout) = (w[0], w[1]);
+        let coeff_q: Vec<i32> =
+            (0..din * nb * dout).map(|_| rng.int_range(-127, 127) as i32).collect();
+        let wb: Vec<f64> = (0..din * dout).map(|_| rng.range(-0.5, 0.5)).collect();
+        num_params += coeff_q.len() + wb.len();
+        layers.push(KanLayerCheckpoint {
+            din,
+            dout,
+            lo: -1.0,
+            hi: 1.0,
+            ld: spec.ld,
+            sh_lut: lut.hemi.clone(),
+            coeff_q,
+            // keep layer outputs roughly inside the next layer's grid
+            coeff_scale: 2.0 / (127.0 * nb as f64),
+            wb,
+        });
+    }
+    KanCheckpoint {
+        name: name.to_string(),
+        kind: "kan".into(),
+        dims: dims.to_vec(),
+        g,
+        k,
+        n_bits,
+        num_params,
+        layers,
+        float_test_acc: None,
+        quant_test_acc: None,
+    }
+}
+
 /// A tiny valid KAN checkpoint (dims [2,2], G=1, K=1) whose residual
 /// weights make every positive input land on `favor_class` (0 or 1).
 /// The one canonical synthetic fixture behind `kan-edge bench-net`, the
@@ -554,6 +667,22 @@ mod tests {
         let path = write_tmp("kan_bad.json", text);
         let err = KanCheckpoint::load(&path).unwrap_err().to_string();
         assert!(err.contains("coeff_q"), "{err}");
+    }
+
+    #[test]
+    fn synthetic_checkpoint_roundtrips_through_json() {
+        let ckpt = synthetic_kan_checkpoint("syn", &[3, 4, 2], 5, 3, 0xAB);
+        ckpt.validate().unwrap();
+        let path = write_tmp("syn.json", &ckpt.to_value().to_string());
+        let back = KanCheckpoint::load(&path).unwrap();
+        assert_eq!(back.dims, vec![3, 4, 2]);
+        assert_eq!(back.layers.len(), 2);
+        assert_eq!(back.layers[0].coeff_q, ckpt.layers[0].coeff_q);
+        assert_eq!(back.layers[1].sh_lut, ckpt.layers[1].sh_lut);
+        assert_eq!(back.layers[0].coeff_scale, ckpt.layers[0].coeff_scale);
+        // deterministic: same seed, same checkpoint
+        let again = synthetic_kan_checkpoint("syn", &[3, 4, 2], 5, 3, 0xAB);
+        assert_eq!(again.layers[0].coeff_q, ckpt.layers[0].coeff_q);
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! Planned execution engine for the digital KAN hot path.
+//!
+//! [`KanEngine`] executes a compiled [`KanPlan`]: integer-exact spline
+//! partial sums (`i64` accumulation of `lut_code · ci'`, one final
+//! `lut_scale · coeff_scale` conversion), hidden activations kept in
+//! `f64` end-to-end, preallocated [`EngineScratch`] arenas so the
+//! steady-state per-sample loop performs **zero heap allocations**, and
+//! chunked multi-worker batch execution that is bit-identical regardless
+//! of the worker count (rows are independent; each worker owns a
+//! disjoint output slice).
+//!
+//! The scalar reference (`QuantKanLayer::forward_digital`) stays the
+//! golden path; the engine agrees with it within float-summation-order
+//! tolerance and exactly in argmax on the artifact dataset (enforced by
+//! `rust/tests/engine.rs`). Contract details: `docs/ENGINE.md`.
+
+use crate::error::Result;
+use crate::kan::checkpoint::Dataset;
+use crate::kan::model::{argmax, QuantKanModel};
+use crate::kan::plan::{KanPlan, PlanOptions};
+use crate::mapping::MappingStrategy;
+
+/// Engine construction knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Coefficient-tile placement order (see [`PlanOptions::mapping`]).
+    pub mapping: MappingStrategy,
+    /// Per-code fusion budget (see [`PlanOptions::fused_budget`]).
+    pub fused_budget: usize,
+    /// Default worker count for the allocating
+    /// [`KanEngine::forward_batch`] convenience path. `1` is right when
+    /// an outer pool (the serving workers) already provides parallelism;
+    /// benches and offline eval raise it.
+    pub workers: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        let plan = PlanOptions::default();
+        Self {
+            mapping: plan.mapping,
+            fused_budget: plan.fused_budget,
+            workers: 1,
+        }
+    }
+}
+
+/// Preallocated per-worker arenas: one scratch serves any number of
+/// sequential samples without touching the allocator.
+#[derive(Debug, Clone)]
+pub struct EngineScratch {
+    /// Quantized codes of the current layer input.
+    codes: Vec<u32>,
+    /// i64 spline accumulator.
+    acc: Vec<i64>,
+    /// Current / next activation vectors (f64 end-to-end), swapped
+    /// between layers.
+    h: Vec<f64>,
+    h2: Vec<f64>,
+}
+
+/// The compiled, executable form of a [`QuantKanModel`].
+#[derive(Debug, Clone)]
+pub struct KanEngine {
+    plan: KanPlan,
+    workers: usize,
+}
+
+impl KanEngine {
+    /// Compile `model` with a distribution prior for tile ranking (no
+    /// calibration data needed).
+    pub fn compile(model: &QuantKanModel, opts: EngineOptions) -> Result<Self> {
+        Self::compile_inner(model, opts, None)
+    }
+
+    /// Compile with calibration rows for empirical tile ranking.
+    pub fn compile_with_calib(
+        model: &QuantKanModel,
+        opts: EngineOptions,
+        calib: &[Vec<f32>],
+    ) -> Result<Self> {
+        Self::compile_inner(model, opts, Some(calib))
+    }
+
+    fn compile_inner(
+        model: &QuantKanModel,
+        opts: EngineOptions,
+        calib: Option<&[Vec<f32>]>,
+    ) -> Result<Self> {
+        let plan_opts = PlanOptions {
+            mapping: opts.mapping,
+            fused_budget: opts.fused_budget,
+        };
+        Ok(Self {
+            plan: KanPlan::compile(model, &plan_opts, calib)?,
+            workers: opts.workers.max(1),
+        })
+    }
+
+    pub fn plan(&self) -> &KanPlan {
+        &self.plan
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.plan.input_dim
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.plan.output_dim
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Allocate one worker's scratch arenas, sized for this plan.
+    pub fn new_scratch(&self) -> EngineScratch {
+        let w = self.plan.max_width;
+        EngineScratch {
+            codes: vec![0u32; w],
+            acc: vec![0i64; w],
+            h: vec![0.0f64; w],
+            h2: vec![0.0f64; w],
+        }
+    }
+
+    /// Forward one sample into `out` using `s` — the zero-allocation
+    /// steady-state path.
+    pub fn forward_into(&self, x: &[f32], out: &mut [f64], s: &mut EngineScratch) {
+        assert_eq!(x.len(), self.plan.input_dim, "engine input width");
+        assert_eq!(out.len(), self.plan.output_dim, "engine output width");
+        // widen the input once; hidden activations stay f64 end-to-end
+        for (dst, &v) in s.h.iter_mut().zip(x.iter()) {
+            *dst = v as f64;
+        }
+        let mut width = x.len();
+        let last = self.plan.layers.len() - 1;
+        for (li, layer) in self.plan.layers.iter().enumerate() {
+            debug_assert_eq!(width, layer.din);
+            for (c, v) in s.codes.iter_mut().zip(&s.h[..width]) {
+                *c = layer.spec.quantize(*v);
+            }
+            let acc = &mut s.acc[..layer.dout];
+            if li == last {
+                layer.forward_codes(&s.codes[..width], acc, out);
+            } else {
+                layer.forward_codes(&s.codes[..width], acc, &mut s.h2[..layer.dout]);
+                std::mem::swap(&mut s.h, &mut s.h2);
+            }
+            width = layer.dout;
+        }
+    }
+
+    /// Forward one sample (allocating convenience wrapper).
+    pub fn forward(&self, x: &[f32]) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.plan.output_dim];
+        let mut s = self.new_scratch();
+        self.forward_into(x, &mut out, &mut s);
+        out
+    }
+
+    /// Batch forward over caller-owned arenas: `x` is `[batch, din]`
+    /// row-major, `out` is `[batch, dout]`, and `scratches.len()` is the
+    /// worker count. With one scratch the batch runs inline on the
+    /// calling thread; with more, rows are chunked across scoped worker
+    /// threads, each writing its disjoint output slice — outputs are
+    /// bit-identical for any worker count.
+    pub fn forward_batch_with(
+        &self,
+        x: &[f32],
+        batch: usize,
+        out: &mut [f64],
+        scratches: &mut [EngineScratch],
+    ) {
+        let din = self.plan.input_dim;
+        let dout = self.plan.output_dim;
+        assert_eq!(x.len(), batch * din, "engine batch input size");
+        assert_eq!(out.len(), batch * dout, "engine batch output size");
+        assert!(!scratches.is_empty(), "need at least one scratch");
+        let workers = scratches.len().min(batch.max(1));
+        if workers <= 1 {
+            let s = &mut scratches[0];
+            for b in 0..batch {
+                self.forward_into(
+                    &x[b * din..(b + 1) * din],
+                    &mut out[b * dout..(b + 1) * dout],
+                    s,
+                );
+            }
+            return;
+        }
+        let chunk = batch.div_ceil(workers);
+        std::thread::scope(|scope| {
+            let mut rest_x = x;
+            let mut rest_out = &mut *out;
+            for s in scratches.iter_mut().take(workers) {
+                if rest_x.is_empty() {
+                    break;
+                }
+                let rows = chunk.min(rest_x.len() / din);
+                let (cx, rx) = rest_x.split_at(rows * din);
+                // move the &mut slice out before splitting so the chunk
+                // keeps the outer lifetime (a plain reborrow could not be
+                // sent into the scoped thread and reassigned)
+                let (co, ro) =
+                    std::mem::take(&mut rest_out).split_at_mut(rows * dout);
+                rest_x = rx;
+                rest_out = ro;
+                scope.spawn(move || {
+                    for b in 0..rows {
+                        self.forward_into(
+                            &cx[b * din..(b + 1) * din],
+                            &mut co[b * dout..(b + 1) * dout],
+                            s,
+                        );
+                    }
+                });
+            }
+        });
+    }
+
+    /// Batch forward (allocating convenience wrapper; uses
+    /// [`EngineOptions::workers`] scratches).
+    pub fn forward_batch(&self, x: &[f32], batch: usize) -> Vec<f64> {
+        let mut out = vec![0.0f64; batch * self.plan.output_dim];
+        let mut scratches: Vec<EngineScratch> = (0..self.workers.min(batch.max(1)))
+            .map(|_| self.new_scratch())
+            .collect();
+        self.forward_batch_with(x, batch, &mut out, &mut scratches);
+        out
+    }
+
+    /// Argmax prediction for one sample.
+    pub fn predict(&self, x: &[f32]) -> usize {
+        argmax(&self.forward(x))
+    }
+
+    /// Top-1 accuracy on the artifact test split (single scratch, no
+    /// per-row allocation).
+    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+        let mut s = self.new_scratch();
+        let mut out = vec![0.0f64; self.plan.output_dim];
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (row, label) in ds.test_rows() {
+            self.forward_into(row, &mut out, &mut s);
+            if argmax(&out) == label as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        correct as f64 / total.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kan::layer::tests::toy_layer;
+
+    fn toy_model(g: u32, k: u32, dims: &[usize]) -> QuantKanModel {
+        let layers = dims
+            .windows(2)
+            .map(|w| toy_layer(g, k, w[0], w[1]))
+            .collect();
+        QuantKanModel {
+            name: "toy".into(),
+            dims: dims.to_vec(),
+            g,
+            k,
+            layers,
+        }
+    }
+
+    #[test]
+    fn engine_matches_reference_forward() {
+        let model = toy_model(5, 3, &[4, 3, 2]);
+        let engine = KanEngine::compile(&model, EngineOptions::default()).unwrap();
+        let x = [0.3f32, -0.7, 0.95, -0.05];
+        let want = model.forward(&x);
+        let got = engine.forward(&x);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert!(
+                (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs())),
+                "{a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_and_tile_paths_are_bit_identical() {
+        let model = toy_model(5, 3, &[3, 4, 2]);
+        let fused = KanEngine::compile(&model, EngineOptions::default()).unwrap();
+        let tiled = KanEngine::compile(
+            &model,
+            EngineOptions { fused_budget: 0, ..Default::default() },
+        )
+        .unwrap();
+        assert!(fused.plan().layers[0].uses_fused());
+        assert!(!tiled.plan().layers[0].uses_fused());
+        let mut lg = crate::data::LoadGen::new(11, 3);
+        for _ in 0..50 {
+            let x = lg.next_vec();
+            let a = fused.forward(&x);
+            let b = tiled.forward(&x);
+            for (va, vb) in a.iter().zip(&b) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn mapping_order_does_not_change_outputs() {
+        let model = toy_model(8, 3, &[2, 3]);
+        let sam = KanEngine::compile(&model, EngineOptions::default()).unwrap();
+        let uni = KanEngine::compile(
+            &model,
+            EngineOptions {
+                mapping: MappingStrategy::Uniform,
+                fused_budget: 0,
+                workers: 1,
+            },
+        )
+        .unwrap();
+        let mut lg = crate::data::LoadGen::new(3, 2);
+        for _ in 0..25 {
+            let x = lg.next_vec();
+            let a = sam.forward(&x);
+            let b = uni.forward(&x);
+            for (va, vb) in a.iter().zip(&b) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single_for_any_worker_count() {
+        let model = toy_model(5, 3, &[4, 5, 3]);
+        let engine = KanEngine::compile(&model, EngineOptions::default()).unwrap();
+        let mut lg = crate::data::LoadGen::new(7, 4);
+        let batch = 23usize;
+        let flat: Vec<f32> = lg.batch(batch).into_iter().flatten().collect();
+        let mut want = vec![0.0f64; batch * 3];
+        let mut one = vec![engine.new_scratch()];
+        engine.forward_batch_with(&flat, batch, &mut want, &mut one);
+        for workers in [2usize, 3, 8, 64] {
+            let mut out = vec![0.0f64; batch * 3];
+            let mut scratches: Vec<EngineScratch> =
+                (0..workers).map(|_| engine.new_scratch()).collect();
+            engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+            for (a, b) in out.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn compile_with_calib_ranks_and_still_matches() {
+        let model = toy_model(5, 3, &[2, 2]);
+        let mut lg = crate::data::LoadGen::new(21, 2);
+        let calib = lg.batch(64);
+        let engine =
+            KanEngine::compile_with_calib(&model, EngineOptions::default(), &calib)
+                .unwrap();
+        for row in calib.iter().take(10) {
+            let want = model.forward(row);
+            let got = engine.forward(row);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        }
+    }
+}

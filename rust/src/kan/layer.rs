@@ -90,20 +90,6 @@ impl QuantKanLayer {
         }
     }
 
-    /// Batch digital forward: `x` is `[batch, din]` row-major floats.
-    pub fn forward_digital_batch(&self, x: &[f32], batch: usize) -> Vec<f64> {
-        let mut out = vec![0.0; batch * self.dout];
-        let mut xq = vec![0u32; self.din];
-        for b in 0..batch {
-            let row = &x[b * self.din..(b + 1) * self.din];
-            for (dst, &v) in xq.iter_mut().zip(row) {
-                *dst = self.spec.quantize(v as f64);
-            }
-            self.forward_digital(&xq, &mut out[b * self.dout..(b + 1) * self.dout]);
-        }
-        out
-    }
-
     /// The crossbar view of the spline path: one row per `(input i, basis
     /// g)` pair, each row holding the `dout` ci' codes programmed on that
     /// word line. Row activation for input `xq`: row `(i, g)` carries the
@@ -223,18 +209,4 @@ pub(crate) mod tests {
         }
     }
 
-    #[test]
-    fn batch_forward_matches_single() {
-        let layer = toy_layer(5, 3, 4, 3);
-        let x = [0.3f32, -0.7, 0.95, -0.05, 0.0, 0.5, -0.5, 1.2];
-        let batch_out = layer.forward_digital_batch(&x, 2);
-        for b in 0..2 {
-            let xq = layer.quantize_input(&x[b * 4..(b + 1) * 4]);
-            let mut single = vec![0.0; 3];
-            layer.forward_digital(&xq, &mut single);
-            for o in 0..3 {
-                assert_eq!(batch_out[b * 3 + o], single[o]);
-            }
-        }
-    }
 }

@@ -2,10 +2,14 @@
 //! artifact checkpoint schemas.
 
 pub mod checkpoint;
+pub mod engine;
 pub mod layer;
 pub mod model;
+pub mod plan;
 pub mod spline;
 
 pub use checkpoint::{Dataset, KanCheckpoint, Manifest, MlpCheckpoint};
+pub use engine::{EngineOptions, EngineScratch, KanEngine};
 pub use layer::QuantKanLayer;
 pub use model::{argmax, QuantKanModel};
+pub use plan::{KanPlan, LayerPlan, PlanOptions};

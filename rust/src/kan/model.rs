@@ -5,6 +5,7 @@ use std::path::Path;
 
 use crate::error::Result;
 use crate::kan::checkpoint::{Dataset, KanCheckpoint};
+use crate::kan::engine::{EngineOptions, KanEngine};
 use crate::kan::layer::QuantKanLayer;
 
 /// A quantized KAN model: a stack of [`QuantKanLayer`]s.
@@ -45,28 +46,44 @@ impl QuantKanModel {
         *self.dims.last().unwrap()
     }
 
-    /// Digital-reference forward for one sample.
-    pub fn forward(&self, x: &[f32]) -> Vec<f64> {
-        let mut h: Vec<f32> = x.to_vec();
-        let mut out = Vec::new();
-        for layer in &self.layers {
-            let xq = layer.quantize_input(&h);
-            out = vec![0.0; layer.dout];
-            layer.forward_digital(&xq, &mut out);
-            h = out.iter().map(|&v| v as f32).collect();
-        }
-        out
+    /// Compile this model into the planned execution engine
+    /// ([`KanEngine`], the serving hot path; see `docs/ENGINE.md`).
+    pub fn compile(&self, opts: EngineOptions) -> Result<KanEngine> {
+        KanEngine::compile(self, opts)
     }
 
-    /// Batch forward, `x` row-major `[batch, din]`.
+    /// Digital-reference forward for one sample.
+    ///
+    /// Hidden activations stay `f64` end-to-end: truncating them through
+    /// `f32` between layers is a double rounding that can flip a
+    /// quantization code right at a level boundary (regression test
+    /// below).
+    pub fn forward(&self, x: &[f32]) -> Vec<f64> {
+        // one sample is a batch of one: a single per-layer loop to keep
+        // the two paths from ever drifting numerically
+        self.forward_batch(x, 1)
+    }
+
+    /// Batch forward, `x` row-major `[batch, din]`. Hidden activations
+    /// stay `f64` between layers (see [`QuantKanModel::forward`]).
     pub fn forward_batch(&self, x: &[f32], batch: usize) -> Vec<f64> {
-        let mut h: Vec<f32> = x.to_vec();
-        let mut out = Vec::new();
-        for layer in &self.layers {
-            out = layer.forward_digital_batch(&h, batch);
-            h = out.iter().map(|&v| v as f32).collect();
+        if self.layers.is_empty() {
+            return Vec::new();
         }
-        out
+        let mut h: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        for layer in &self.layers {
+            let mut out = vec![0.0; batch * layer.dout];
+            let mut xq = vec![0u32; layer.din];
+            for b in 0..batch {
+                let row = &h[b * layer.din..(b + 1) * layer.din];
+                for (dst, &v) in xq.iter_mut().zip(row) {
+                    *dst = layer.spec.quantize(v);
+                }
+                layer.forward_digital(&xq, &mut out[b * layer.dout..(b + 1) * layer.dout]);
+            }
+            h = out;
+        }
+        h
     }
 
     /// Argmax prediction for one sample.
@@ -102,11 +119,96 @@ pub fn argmax(v: &[f64]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kan::layer::tests::toy_layer;
 
     #[test]
     fn argmax_basics() {
         assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[1.0, 1.0]), 0);
         assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn model_batch_matches_single() {
+        let model = QuantKanModel {
+            name: "toy".into(),
+            dims: vec![3, 4, 2],
+            g: 5,
+            k: 3,
+            layers: vec![toy_layer(5, 3, 3, 4), toy_layer(5, 3, 4, 2)],
+        };
+        let x = [0.3f32, -0.7, 0.95, -0.05, 0.0, 0.5];
+        let batch = model.forward_batch(&x, 2);
+        for b in 0..2 {
+            let single = model.forward(&x[b * 3..(b + 1) * 3]);
+            for o in 0..2 {
+                assert_eq!(batch[b * 2 + o].to_bits(), single[o].to_bits());
+            }
+        }
+    }
+
+    /// Find an f64 activation near a quantization-level boundary of
+    /// `spec` whose truncation through f32 lands on the other side —
+    /// the double rounding the pre-fix inter-layer path performed.
+    fn double_rounding_victim(spec: &crate::quant::AspSpec) -> Option<f64> {
+        let step = spec.step();
+        for q in 1..spec.range() - 2 {
+            // boundary midpoint between codes q and q+1; keep it well
+            // positive so the residual (ReLU) path can reproduce it
+            let m = spec.lo + (q as f64 + 0.5) * step;
+            if m <= 0.05 {
+                continue;
+            }
+            let m32 = (m as f32) as f64;
+            if m32 == m {
+                continue;
+            }
+            // nudge across the boundary from the f32 image: v quantizes
+            // differently from (v as f32) as f64
+            let eps = step * 1e-9;
+            let v = if m32 > m { m - eps } else { m + eps };
+            if spec.quantize(v) != spec.quantize((v as f32) as f64) {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn hidden_activations_stay_f64_across_layers() {
+        // layer 0: spline path zeroed, residual weight chosen so its
+        // output is exactly a boundary-straddling value for layer 1
+        let mut l0 = toy_layer(5, 3, 1, 1);
+        for c in &mut l0.coeff_q {
+            *c = 0;
+        }
+        let l1 = toy_layer(5, 3, 1, 1);
+        let v = double_rounding_victim(&l1.spec).expect("no boundary victim exists");
+        let x = 0.5f32;
+        let xhat = l0.spec.dequantize(l0.spec.quantize(x as f64));
+        assert!(xhat > 0.0);
+        l0.wb[0] = v / xhat;
+        // what layer 0 actually emits (1 ulp of v at most — still inside
+        // the straddling window, re-checked here)
+        let h = xhat * l0.wb[0];
+        let q_f64 = l1.spec.quantize(h);
+        let q_f32 = l1.spec.quantize((h as f32) as f64);
+        assert_ne!(q_f64, q_f32, "victim did not survive the wb round trip");
+
+        let model = QuantKanModel {
+            name: "boundary".into(),
+            dims: vec![1, 1, 1],
+            g: 5,
+            k: 3,
+            layers: vec![l0, l1.clone()],
+        };
+        let got = model.forward(&[x]);
+        let mut want = vec![0.0f64; 1];
+        l1.forward_digital(&[q_f64], &mut want);
+        assert_eq!(got[0].to_bits(), want[0].to_bits(), "f64 path regressed");
+        // the old f32-truncating path lands on the flipped code
+        let mut old = vec![0.0f64; 1];
+        l1.forward_digital(&[q_f32], &mut old);
+        assert_ne!(got[0].to_bits(), old[0].to_bits());
     }
 }

@@ -1,0 +1,456 @@
+//! Plan compilation for the digital KAN hot path (`docs/ENGINE.md`).
+//!
+//! A [`KanPlan`] is a [`super::model::QuantKanModel`] reorganized for
+//! execution speed while staying *integer-exact* with respect to the
+//! hardware dataflow: the spline path of every layer is a pure integer
+//! sum `Σ lut_code · ci'` accumulated in `i64`, converted to float once
+//! per output with a single `lut_scale · coeff_scale` multiply — the
+//! same partial sums the ACIM crossbar produces, instead of the per-term
+//! f64 multiply chain of the scalar reference
+//! (`QuantKanLayer::forward_digital`).
+//!
+//! Per layer the plan holds:
+//!
+//! * the mirror-resolved **full LUT table** (`2^LD × (K+1)` codes) so the
+//!   hot loop never branches through the hemi MUX model;
+//! * **fused coefficient tiles**: for every `(input, interval)` pair the
+//!   `(K+1) × dout` block of ci' codes a lookup touches, stored
+//!   contiguously as `i16` and placed hot-first by a SAM-style
+//!   activation-probability ranking (reusing [`crate::mapping::sam`]),
+//!   so the K+1 active rows of hot intervals share cache lines;
+//! * optionally (small layers) **per-code fused rows**:
+//!   `fused[i][q][o] = Σ_t lut(l,t) · ci'(i, j+t, o)` precomputed as
+//!   `i32` — the same integer sum, cached per input code, turning the
+//!   inner loop into a gather-add;
+//! * the dequantized abscissa per code for the residual `w_b · ReLU(x̂)`
+//!   path (f64, exactly as the reference computes it).
+
+use crate::error::{Error, Result};
+use crate::kan::layer::QuantKanLayer;
+use crate::kan::model::QuantKanModel;
+use crate::mapping::{build_mapping, MappingStrategy};
+use crate::quant::AspSpec;
+
+/// Plan-compilation knobs (see [`super::engine::EngineOptions`] for the
+/// execution-side knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOptions {
+    /// Tile placement order: [`MappingStrategy::Sam`] packs tiles
+    /// hot-first (default), `Uniform` keeps checkpoint order,
+    /// `WorstCase` is the ablation order.
+    pub mapping: MappingStrategy,
+    /// Per-layer budget (in `i32` entries, `din · R · dout`) under which
+    /// the per-code fused rows are precomputed. `0` disables fusion and
+    /// always executes from the tiles.
+    pub fused_budget: usize,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        Self {
+            mapping: MappingStrategy::Sam,
+            // 4M i32 entries = 16 MiB per layer: generous for edge-sized
+            // models, a guard for pathological ones
+            fused_budget: 1 << 22,
+        }
+    }
+}
+
+/// One layer of a compiled plan.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub spec: AspSpec,
+    pub din: usize,
+    pub dout: usize,
+    /// `K + 1` active taps per lookup.
+    taps: usize,
+    /// Knot intervals per input (`G`).
+    g: usize,
+    /// `2^LD` (mask for the local-offset bit field is `levels - 1`).
+    levels: usize,
+    /// Mirror-resolved full LUT, `[2^LD][K+1]`, row-major.
+    lut_rows: Vec<i32>,
+    /// Fused coefficient tiles: for each `(input, interval)` a contiguous
+    /// `(K+1) · dout` block, placed by `tile_off`.
+    tiles: Vec<i16>,
+    /// Tile start for `(input i, interval j)` at `tile_off[i * g + j]`.
+    tile_off: Vec<u32>,
+    /// Per-code fused partial rows `[din][R][dout]` when within budget.
+    fused: Option<Vec<i32>>,
+    /// Residual weights `[din][dout]` (checkpoint order).
+    wb: Vec<f64>,
+    /// Dequantized abscissa per code, `deq[q] = lo + q·δ`.
+    deq: Vec<f64>,
+    /// The single integer→float conversion: `lut_scale · coeff_scale`.
+    out_scale: f64,
+}
+
+impl LayerPlan {
+    fn compile(layer: &QuantKanLayer, opts: &PlanOptions, probs: &[f64]) -> Result<Self> {
+        let spec = layer.spec;
+        let taps = spec.k as usize + 1;
+        let g = spec.g as usize;
+        let levels = spec.levels_per_interval() as usize;
+        let range = spec.range() as usize;
+        let (din, dout) = (layer.din, layer.dout);
+
+        if layer.lut.bits > 30 {
+            return Err(Error::Config(format!(
+                "LUT precision {} bits too wide for the integer engine",
+                layer.lut.bits
+            )));
+        }
+
+        // mirror-resolve the stored hemi half into the full logical table
+        let mut lut_rows = vec![0i32; levels * taps];
+        for l in 0..levels {
+            for t in 0..taps {
+                lut_rows[l * taps + t] = layer.lut.lookup(l as u32, t as u32) as i32;
+            }
+        }
+
+        // fused tiles: tile (i, j) = ci' rows j ..= j+K for input i,
+        // (K+1) x dout, narrowed to i16 (ci' are int8 codes by contract)
+        let n_tiles = din * g;
+        let tile_size = taps * dout;
+        debug_assert_eq!(probs.len(), n_tiles);
+        // mapping[slot] = logical tile stored at that slot; SAM ranks
+        // hot tiles into the low slots so they pack at the front of the
+        // arena and share cache lines
+        let perm = build_mapping(probs, n_tiles.max(1), opts.mapping);
+        let mut tiles = vec![0i16; n_tiles * tile_size];
+        let mut tile_off = vec![0u32; n_tiles];
+        for (slot, &logical) in perm.iter().enumerate() {
+            let base = slot * tile_size;
+            let i = logical / g;
+            let j = logical % g;
+            for t in 0..taps {
+                for o in 0..dout {
+                    let c = layer.coeff_q[(i * spec.num_basis() + j + t) * dout + o];
+                    if c < i16::MIN as i32 || c > i16::MAX as i32 {
+                        return Err(Error::Config(format!(
+                            "coefficient {c} at (input {i}, basis {}, out {o}) \
+                             exceeds the engine's int16 range",
+                            j + t
+                        )));
+                    }
+                    tiles[base + t * dout + o] = c as i16;
+                }
+            }
+            tile_off[logical] = u32::try_from(base).map_err(|_| {
+                Error::Config("coefficient arena exceeds u32 addressing".into())
+            })?;
+        }
+
+        // per-code fused rows when the layer is small enough; the i32
+        // row entries must be able to hold Σ_t lut·ci' (fine for the
+        // paper's 8-bit LUTs, skipped for exotic precisions)
+        let fused_entries = din * range * dout;
+        let fused_fits_i32 =
+            ((1u64 << layer.lut.bits) - 1) * (i16::MAX as u64 + 1) * taps as u64
+                <= i32::MAX as u64;
+        let fused = if opts.fused_budget > 0
+            && fused_entries <= opts.fused_budget
+            && fused_fits_i32
+        {
+            let mut f = vec![0i32; fused_entries];
+            for i in 0..din {
+                for q in 0..range as u32 {
+                    let (j, l) = spec.decompose(q);
+                    let base = (i * range + q as usize) * dout;
+                    for t in 0..taps {
+                        let b = lut_rows[l as usize * taps + t] as i64;
+                        if b == 0 {
+                            continue;
+                        }
+                        for o in 0..dout {
+                            let c = layer.coeff_q
+                                [(i * spec.num_basis() + j as usize + t) * dout + o]
+                                as i64;
+                            // |b·c| <= (2^bits-1)·2^15 and Σ_t b <= 2^bits,
+                            // so the per-code row fits i32 comfortably
+                            f[base + o] += (b * c) as i32;
+                        }
+                    }
+                }
+            }
+            Some(f)
+        } else {
+            None
+        };
+
+        let deq = (0..range as u32).map(|q| spec.dequantize(q)).collect();
+        let lut_scale = 1.0 / ((1u64 << layer.lut.bits) - 1) as f64;
+
+        Ok(Self {
+            spec,
+            din,
+            dout,
+            taps,
+            g,
+            levels,
+            lut_rows,
+            tiles,
+            tile_off,
+            fused,
+            wb: layer.wb.clone(),
+            deq,
+            out_scale: lut_scale * layer.coeff_scale,
+        })
+    }
+
+    /// Whether this layer executes from the per-code fused rows.
+    pub fn uses_fused(&self) -> bool {
+        self.fused.is_some()
+    }
+
+    /// Integer-exact forward for pre-quantized codes.
+    ///
+    /// `acc` is the i64 spline accumulator (len `dout`), `out` receives
+    /// the float outputs (len `dout`). The spline partial sum is exact
+    /// integer arithmetic; f64 enters only at the final `out_scale`
+    /// conversion and in the residual path.
+    pub fn forward_codes(&self, codes: &[u32], acc: &mut [i64], out: &mut [f64]) {
+        debug_assert_eq!(codes.len(), self.din);
+        debug_assert_eq!(acc.len(), self.dout);
+        debug_assert_eq!(out.len(), self.dout);
+        let dout = self.dout;
+        let taps = self.taps;
+        acc.fill(0);
+        if let Some(fused) = &self.fused {
+            let rdout = self.deq.len() * dout;
+            for (i, &q) in codes.iter().enumerate() {
+                let row = &fused[i * rdout + q as usize * dout..][..dout];
+                for (a, &f) in acc.iter_mut().zip(row) {
+                    *a += f as i64;
+                }
+            }
+        } else {
+            for (i, &q) in codes.iter().enumerate() {
+                let j = (q >> self.spec.ld) as usize;
+                let l = q as usize & (self.levels - 1);
+                let lut = &self.lut_rows[l * taps..][..taps];
+                let tile =
+                    &self.tiles[self.tile_off[i * self.g + j] as usize..][..taps * dout];
+                for (t, &b) in lut.iter().enumerate() {
+                    if b == 0 {
+                        continue;
+                    }
+                    let b = b as i64;
+                    let row = &tile[t * dout..][..dout];
+                    for (a, &c) in acc.iter_mut().zip(row) {
+                        *a += b * c as i64;
+                    }
+                }
+            }
+        }
+        for (o, &a) in out.iter_mut().zip(acc.iter()) {
+            *o = a as f64 * self.out_scale;
+        }
+        // residual path: w_b · ReLU(x̂), float exactly like the reference
+        for (i, &q) in codes.iter().enumerate() {
+            let x = self.deq[q as usize];
+            if x > 0.0 {
+                let w = &self.wb[i * dout..][..dout];
+                for (o, &wv) in out.iter_mut().zip(w) {
+                    *o += x * wv;
+                }
+            }
+        }
+    }
+}
+
+/// A compiled model: per-layer plans plus the scratch geometry.
+#[derive(Debug, Clone)]
+pub struct KanPlan {
+    pub layers: Vec<LayerPlan>,
+    /// Widest activation vector across the stack (scratch size).
+    pub max_width: usize,
+    pub input_dim: usize,
+    pub output_dim: usize,
+}
+
+impl KanPlan {
+    /// Compile a model. `calib` (when given) supplies rows for empirical
+    /// interval-occupancy estimation; otherwise a centered-Gaussian prior
+    /// over each layer's grid ranks the tiles (Fig 8 shape).
+    pub fn compile(
+        model: &QuantKanModel,
+        opts: &PlanOptions,
+        calib: Option<&[Vec<f32>]>,
+    ) -> Result<Self> {
+        if model.layers.is_empty() {
+            return Err(Error::Config(format!(
+                "model '{}' has no layers to compile",
+                model.name
+            )));
+        }
+        let probs = interval_probabilities(model, calib);
+        let layers = model
+            .layers
+            .iter()
+            .zip(&probs)
+            .map(|(l, p)| LayerPlan::compile(l, opts, p))
+            .collect::<Result<Vec<_>>>()?;
+        let max_width = model.dims.iter().copied().max().unwrap_or(1).max(1);
+        Ok(Self {
+            layers,
+            max_width,
+            input_dim: model.input_dim(),
+            output_dim: model.output_dim(),
+        })
+    }
+}
+
+/// Cap on calibration rows used for tile ranking: compile-time cost only,
+/// and occupancy estimates saturate long before this.
+const MAX_CALIB_ROWS: usize = 512;
+
+/// Per-layer `din · G` interval-activation probabilities for tile ranking.
+///
+/// With calibration rows: empirical interval occupancy, propagated layer
+/// to layer through the golden reference forward (hidden activations kept
+/// in f64). Without: the analytic probability of a centered Gaussian
+/// (`μ = grid center`, `σ = span/4`) landing in each interval — same for
+/// every input of the layer, which still ranks central intervals hot.
+fn interval_probabilities(
+    model: &QuantKanModel,
+    calib: Option<&[Vec<f32>]>,
+) -> Vec<Vec<f64>> {
+    match calib {
+        Some(rows)
+            if rows.iter().any(|r| r.len() == model.input_dim()) =>
+        {
+            let mut acts: Vec<Vec<f64>> = rows
+                .iter()
+                .filter(|r| r.len() == model.input_dim())
+                .take(MAX_CALIB_ROWS)
+                .map(|r| r.iter().map(|&v| v as f64).collect())
+                .collect();
+            let mut all = Vec::with_capacity(model.layers.len());
+            for layer in &model.layers {
+                let g = layer.spec.g as usize;
+                let mut counts = vec![0.0f64; layer.din * g];
+                let mut next = Vec::with_capacity(acts.len());
+                for row in &acts {
+                    let xq: Vec<u32> =
+                        row.iter().map(|&v| layer.spec.quantize(v)).collect();
+                    for (i, &q) in xq.iter().enumerate() {
+                        counts[i * g + (q >> layer.spec.ld) as usize] += 1.0;
+                    }
+                    let mut out = vec![0.0f64; layer.dout];
+                    layer.forward_digital(&xq, &mut out);
+                    next.push(out);
+                }
+                let n = acts.len().max(1) as f64;
+                for c in &mut counts {
+                    *c /= n;
+                }
+                all.push(counts);
+                acts = next;
+            }
+            all
+        }
+        _ => model
+            .layers
+            .iter()
+            .map(|layer| {
+                let spec = &layer.spec;
+                let g = spec.g as usize;
+                let h = spec.knot_spacing();
+                let mu = (spec.lo + spec.hi) / 2.0;
+                let sigma = (spec.hi - spec.lo) / 4.0;
+                let per_interval: Vec<f64> = (0..g)
+                    .map(|j| {
+                        let a = spec.lo + j as f64 * h;
+                        let cdf = crate::mapping::probability::normal_cdf;
+                        cdf((a + h - mu) / sigma) - cdf((a - mu) / sigma)
+                    })
+                    .collect();
+                let mut probs = Vec::with_capacity(layer.din * g);
+                for _ in 0..layer.din {
+                    probs.extend_from_slice(&per_interval);
+                }
+                probs
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kan::layer::tests::toy_layer;
+
+    fn toy_model(g: u32, k: u32, dims: &[usize]) -> QuantKanModel {
+        let layers = dims
+            .windows(2)
+            .map(|w| toy_layer(g, k, w[0], w[1]))
+            .collect();
+        QuantKanModel {
+            name: "toy".into(),
+            dims: dims.to_vec(),
+            g,
+            k,
+            layers,
+        }
+    }
+
+    #[test]
+    fn compile_shapes() {
+        let model = toy_model(5, 3, &[4, 3, 2]);
+        let plan = KanPlan::compile(&model, &PlanOptions::default(), None).unwrap();
+        assert_eq!(plan.layers.len(), 2);
+        assert_eq!(plan.input_dim, 4);
+        assert_eq!(plan.output_dim, 2);
+        assert_eq!(plan.max_width, 4);
+        let l0 = &plan.layers[0];
+        assert_eq!(l0.lut_rows.len(), 32 * 4); // 2^LD=32, K+1=4
+        assert_eq!(l0.tile_off.len(), 4 * 5); // din * G
+        assert!(l0.uses_fused());
+    }
+
+    #[test]
+    fn tile_offsets_are_disjoint_and_in_bounds() {
+        let model = toy_model(8, 3, &[3, 2]);
+        let plan = KanPlan::compile(&model, &PlanOptions::default(), None).unwrap();
+        let l = &plan.layers[0];
+        let tile_size = l.taps * l.dout;
+        let mut offs: Vec<u32> = l.tile_off.clone();
+        offs.sort_unstable();
+        for (rank, &o) in offs.iter().enumerate() {
+            assert_eq!(o as usize, rank * tile_size);
+        }
+        assert_eq!(l.tiles.len(), l.tile_off.len() * tile_size);
+    }
+
+    #[test]
+    fn fused_budget_zero_disables_fusion() {
+        let model = toy_model(5, 3, &[2, 2]);
+        let opts = PlanOptions { fused_budget: 0, ..Default::default() };
+        let plan = KanPlan::compile(&model, &opts, None).unwrap();
+        assert!(!plan.layers[0].uses_fused());
+    }
+
+    #[test]
+    fn empty_model_rejected() {
+        let model = QuantKanModel {
+            name: "empty".into(),
+            dims: vec![3],
+            g: 5,
+            k: 3,
+            layers: Vec::new(),
+        };
+        assert!(KanPlan::compile(&model, &PlanOptions::default(), None).is_err());
+    }
+
+    #[test]
+    fn gaussian_prior_ranks_central_tiles_hot() {
+        let model = toy_model(8, 3, &[1, 1]);
+        let probs = interval_probabilities(&model, None);
+        let p = &probs[0];
+        assert_eq!(p.len(), 8);
+        // central intervals more probable than the edges
+        assert!(p[3] > p[0] && p[4] > p[7]);
+    }
+}

@@ -46,10 +46,16 @@ COMMANDS:
   bench-net [--requests N] [--batch B] [--window W]
             [--tenants T] [--mix-requests M] [--mix-batch R]
             [--mix-queue Q] [--json FILE] [--skip-mixed] [--mixed-only]
+            [--skip-hotpath]
                                                served throughput: v1 vs v2,
-                                               plus the mixed-tenant fifo-vs-drr
+                                               the digital engine-off-vs-on
+                                               hot-path phase, plus the
+                                               mixed-tenant fifo-vs-drr
                                                fairness comparison
   eval      --model NAME --backend B           accuracy on the test set
+                                               (B: digital = planned engine,
+                                               digital-ref = scalar golden
+                                               reference, acim, pjrt)
   neurosim  --budget minimal|moderate|none     Fig 9/13 constraint search
   quantize  --g G --k K --n-bits N             ASP-KAN-HAQ geometry
   inputgen  --bits N                           Fig 11 generator comparison
@@ -356,6 +362,20 @@ fn spawn_bench_server(
     cfg: &AppConfig,
     tag: &str,
 ) -> Result<(std::path::PathBuf, kan_edge::coordinator::TcpServer)> {
+    spawn_bench_server_with(
+        cfg,
+        tag,
+        &kan_edge::kan::checkpoint::synthetic_checkpoint_json("bench", 0),
+    )
+}
+
+/// Like [`spawn_bench_server`] with an explicit checkpoint JSON (must
+/// name its model "bench" — the registry's default model).
+fn spawn_bench_server_with(
+    cfg: &AppConfig,
+    tag: &str,
+    ckpt_json: &str,
+) -> Result<(std::path::PathBuf, kan_edge::coordinator::TcpServer)> {
     // per-process, per-phase dir: concurrent bench-net runs must not
     // wipe each other's live registry mid-benchmark
     let dir = std::env::temp_dir()
@@ -369,7 +389,7 @@ fn spawn_bench_server(
     cfg.server.backend = "digital".into();
     let registry = ModelRegistry::open(&cfg)?;
     let src = dir.join("bench.incoming.json");
-    std::fs::write(&src, kan_edge::kan::checkpoint::synthetic_checkpoint_json("bench", 0))?;
+    std::fs::write(&src, ckpt_json)?;
     registry.publish_file(&src, None, None)?;
     let target: Arc<dyn Dispatch> = registry;
     let server = kan_edge::coordinator::TcpServer::spawn_with_limits(
@@ -378,6 +398,50 @@ fn spawn_bench_server(
         tcp_limits(&cfg),
     )?;
     Ok((dir, server))
+}
+
+/// Digital hot-path phase: serve a realistically sized synthetic KAN
+/// (dims [17, 8, 14], G=5, K=3) with the planned engine disabled vs
+/// enabled and measure served v2 whole-batch throughput — the
+/// end-to-end before/after of the planned execution engine
+/// (`docs/ENGINE.md`; the isolated kernel numbers live in
+/// `cargo bench --bench hotpath`).
+fn run_hotpath_mode(
+    cfg: &AppConfig,
+    engine: bool,
+    requests: usize,
+    batch: usize,
+) -> Result<f64> {
+    use std::time::Instant;
+
+    let mut cfg = cfg.clone();
+    cfg.server.engine = engine;
+    let ckpt = kan_edge::kan::checkpoint::synthetic_kan_checkpoint(
+        "bench",
+        &[17, 8, 14],
+        5,
+        3,
+        0xB16,
+    );
+    let tag = if engine { "hot_on" } else { "hot_off" };
+    let (dir, server) =
+        spawn_bench_server_with(&cfg, tag, &ckpt.to_value().to_string())?;
+    let mut client = KanClient::connect(server.addr)?;
+    // deterministic *varied* rows (same stream for both modes): a constant
+    // row would keep one LUT code hot and flatter the engine's caches
+    let mut lg = kan_edge::data::LoadGen::new(0x40B, 17);
+    client.infer(&lg.next_vec())?; // warm the pipeline
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < requests {
+        let n = batch.min(requests - done);
+        client.infer_batch(None, lg.batch(n))?;
+        done += n;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(requests as f64 / secs.max(1e-9))
 }
 
 /// One policy's mixed-tenant measurements.
@@ -573,6 +637,7 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
     let mix_queue = args.get_usize("mix-queue", 64).max(4);
     let mixed_only = args.opts.contains_key("mixed-only");
     let skip_mixed = args.opts.contains_key("skip-mixed");
+    let skip_hotpath = args.opts.contains_key("skip-hotpath");
 
     let mut phases: Vec<(String, f64, f64)> = Vec::new();
     if !mixed_only {
@@ -667,6 +732,29 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // digital hot path: scalar reference vs planned engine, end to end
+    let mut hotpath: Vec<(String, f64)> = Vec::new();
+    if !mixed_only && !skip_hotpath {
+        println!(
+            "\ndigital hot path: scalar reference vs planned engine \
+             ({requests} requests, batch {batch}, dims [17, 8, 14])"
+        );
+        for engine in [false, true] {
+            let rps = run_hotpath_mode(cfg, engine, requests, batch)?;
+            let name = if engine { "engine" } else { "reference" };
+            println!("  {name:<10} {rps:>11.0} req/s");
+            hotpath.push((name.to_string(), rps));
+        }
+        if let (Some(rf), Some(en)) = (hotpath.first(), hotpath.get(1)) {
+            if rf.1 > 0.0 {
+                println!(
+                    "  engine speedup: {:.2}x (served; wire + batching included)",
+                    en.1 / rf.1
+                );
+            }
+        }
+    }
+
     let mut mixed: Vec<MixedPolicyReport> = Vec::new();
     if !skip_mixed {
         println!(
@@ -726,8 +814,18 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
                 ])
             })
             .collect();
+        let hotpath_values: Vec<Value> = hotpath
+            .iter()
+            .map(|(mode, rps)| {
+                obj(vec![
+                    ("mode", Value::Str(mode.clone())),
+                    ("rps", Value::Float(*rps)),
+                ])
+            })
+            .collect();
         let report = obj(vec![
             ("phases", arr(phase_values)),
+            ("hotpath", arr(hotpath_values)),
             (
                 "mixed",
                 obj(vec![
@@ -759,7 +857,21 @@ fn eval(cfg: &AppConfig, model: &str, backend: &str) -> Result<()> {
         (_, "mlp") => {
             kan_edge::baseline::MlpModel::load(dir.join(&entry.weights))?.accuracy(&ds)
         }
-        ("digital", _) => QuantKanModel::load(dir.join(&entry.weights))?.accuracy(&ds),
+        ("digital", _) => {
+            // the planned engine is the default digital path; it must be
+            // argmax-identical to the scalar reference (`digital-ref`)
+            let qk = QuantKanModel::load(dir.join(&entry.weights))?;
+            match qk.compile(kan_edge::kan::EngineOptions::default()) {
+                Ok(engine) => engine.accuracy(&ds),
+                Err(e) => {
+                    eprintln!("warning: engine compile failed ({e}); using reference");
+                    qk.accuracy(&ds)
+                }
+            }
+        }
+        ("digital-ref", _) => {
+            QuantKanModel::load(dir.join(&entry.weights))?.accuracy(&ds)
+        }
         ("acim", _) => {
             let qk = QuantKanModel::load(dir.join(&entry.weights))?;
             build_acim_with_calib(&qk, cfg.hardware.acim, &ds, MappingStrategy::Sam)?

@@ -83,8 +83,18 @@ impl AspSpec {
     }
 
     /// Float → code (round-to-nearest, saturating at the grid edges).
+    ///
+    /// Non-finite inputs quantize deterministically: `+∞` saturates to
+    /// the top code, `-∞` and `NaN` to code 0. (Previously `NaN` fell
+    /// into code 0 only by accident of `f64::max` — serving admission
+    /// additionally rejects non-finite feature rows outright, see
+    /// `coordinator::server`; this is the defense-in-depth layer for
+    /// direct callers.)
     #[inline]
     pub fn quantize(&self, x: f64) -> u32 {
+        if !x.is_finite() {
+            return if x == f64::INFINITY { self.range() - 1 } else { 0 };
+        }
         let q = ((x - self.lo) / self.step()).round();
         (q.max(0.0) as u32).min(self.range() - 1)
     }
@@ -165,6 +175,15 @@ mod tests {
         // saturation
         assert_eq!(spec.quantize(-5.0), 0);
         assert_eq!(spec.quantize(5.0), spec.range() - 1);
+    }
+
+    #[test]
+    fn quantize_non_finite_is_deterministic() {
+        let spec = AspSpec::build(5, 3, 8, -1.0, 1.0).unwrap();
+        assert_eq!(spec.quantize(f64::NAN), 0);
+        assert_eq!(spec.quantize(-f64::NAN), 0);
+        assert_eq!(spec.quantize(f64::NEG_INFINITY), 0);
+        assert_eq!(spec.quantize(f64::INFINITY), spec.range() - 1);
     }
 
     #[test]

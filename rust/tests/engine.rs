@@ -1,0 +1,187 @@
+//! Planned-engine parity suite (`docs/ENGINE.md`): the engine must agree
+//! with the scalar golden reference (`forward_digital`) within the
+//! documented LUT tolerance on *every* input code, be bit-identical
+//! across its own execution variants (fused vs tiled, any worker
+//! count, any tile order), and be argmax-identical on the artifact
+//! dataset when the artifacts are present.
+
+use std::sync::Arc;
+
+use kan_edge::coordinator::{DigitalBackend, InferBackend};
+use kan_edge::data::LoadGen;
+use kan_edge::kan::checkpoint::{synthetic_kan_checkpoint, Dataset};
+use kan_edge::kan::{
+    argmax, EngineOptions, EngineScratch, KanEngine, Manifest, QuantKanModel,
+};
+use kan_edge::mapping::MappingStrategy;
+
+fn model(dims: &[usize], g: u32, k: u32, seed: u64) -> QuantKanModel {
+    QuantKanModel::from_checkpoint(&synthetic_kan_checkpoint("t", dims, g, k, seed))
+}
+
+/// Engine vs reference differ only in float summation order: the engine
+/// sums the spline path exactly in i64 and converts once, the reference
+/// rounds per term. Bound that with a tight relative tolerance.
+fn assert_close(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (x, y) in got.iter().zip(want) {
+        let tol = 1e-9 * (1.0 + x.abs().max(y.abs()));
+        assert!((x - y).abs() <= tol, "{ctx}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn exhaustive_parity_over_every_input_code() {
+    // single-input layers driven at every code 0..R, across several
+    // (G, K) geometries, on both execution paths (fused and tiled)
+    for &(g, k) in &[(5u32, 3u32), (8, 3), (16, 2), (64, 1), (7, 4)] {
+        let m = model(&[1, 3], g, k, 0x5EED ^ ((g as u64) << 8) ^ k as u64);
+        let spec = m.layers[0].spec;
+        for budget in [0usize, 1 << 22] {
+            let engine = KanEngine::compile(
+                &m,
+                EngineOptions { fused_budget: budget, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(engine.plan().layers[0].uses_fused(), budget > 0);
+            for q in 0..spec.range() {
+                let x = [spec.dequantize(q) as f32];
+                // a code's abscissa quantizes back to that code
+                assert_eq!(spec.quantize(x[0] as f64), q, "g={g} k={k} q={q}");
+                let want = m.forward(&x);
+                let got = engine.forward(&x);
+                assert_close(&got, &want, &format!("g={g} k={k} q={q} budget={budget}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn exhaustive_parity_over_all_code_pairs() {
+    // two inputs, every (q0, q1) pair: cross-input accumulation order
+    let m = model(&[2, 3], 5, 3, 0xD00D);
+    let spec = m.layers[0].spec;
+    let engine = KanEngine::compile(&m, EngineOptions::default()).unwrap();
+    let mut s = engine.new_scratch();
+    let mut out = vec![0.0f64; 3];
+    for q0 in 0..spec.range() {
+        for q1 in 0..spec.range() {
+            let x = [spec.dequantize(q0) as f32, spec.dequantize(q1) as f32];
+            engine.forward_into(&x, &mut out, &mut s);
+            let want = m.forward(&x);
+            assert_close(&out, &want, &format!("q0={q0} q1={q1}"));
+        }
+    }
+}
+
+#[test]
+fn argmax_invariant_on_random_inputs() {
+    let m = model(&[17, 8, 14], 5, 3, 0xACE);
+    let engine = KanEngine::compile(&m, EngineOptions::default()).unwrap();
+    let mut lg = LoadGen::new(42, 17);
+    for _ in 0..500 {
+        let x = lg.next_vec();
+        assert_eq!(argmax(&m.forward(&x)), engine.predict(&x));
+    }
+}
+
+#[test]
+fn execution_variants_are_bit_identical() {
+    // fused vs tiled vs tile order vs worker count: all compute the
+    // same integer partial sums, so outputs must match to the bit
+    let m = model(&[9, 6, 4], 8, 3, 0xF1F1);
+    let base = KanEngine::compile(&m, EngineOptions::default()).unwrap();
+    let variants = [
+        EngineOptions { fused_budget: 0, ..Default::default() },
+        EngineOptions { mapping: MappingStrategy::Uniform, ..Default::default() },
+        EngineOptions {
+            mapping: MappingStrategy::WorstCase,
+            fused_budget: 0,
+            workers: 1,
+        },
+    ];
+    let mut lg = LoadGen::new(17, 9);
+    let rows = lg.batch(40);
+    for (vi, opts) in variants.iter().enumerate() {
+        let other = KanEngine::compile(&m, *opts).unwrap();
+        for row in &rows {
+            let a = base.forward(row);
+            let b = other.forward(row);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "variant {vi}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_outputs_bit_identical_for_any_worker_count() {
+    let m = model(&[17, 8, 14], 5, 3, 0xBEE);
+    let engine = KanEngine::compile(&m, EngineOptions::default()).unwrap();
+    let mut lg = LoadGen::new(5, 17);
+    let batch = 37usize;
+    let flat: Vec<f32> = lg.batch(batch).into_iter().flatten().collect();
+    let mut base = vec![0.0f64; batch * 14];
+    engine.forward_batch_with(&flat, batch, &mut base, &mut [engine.new_scratch()]);
+    for workers in [2usize, 4, 7, 64] {
+        let mut scratches: Vec<EngineScratch> =
+            (0..workers).map(|_| engine.new_scratch()).collect();
+        let mut out = vec![0.0f64; batch * 14];
+        engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+        for (a, b) in out.iter().zip(&base) {
+            assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn digital_backend_engine_matches_reference_path() {
+    let m = Arc::new(model(&[17, 8, 14], 5, 3, 0xF00));
+    let eng = DigitalBackend::new(m.clone());
+    assert!(eng.engine_enabled());
+    let refp = DigitalBackend::with_engine(m, false);
+    assert!(!refp.engine_enabled());
+    let mut lg = LoadGen::new(8, 17);
+    let rows = lg.batch(20);
+    let a = eng.infer_batch(rows.clone()).unwrap();
+    let b = refp.infer_batch(rows).unwrap();
+    for (ra, rb) in a.iter().zip(&b) {
+        let fa: Vec<f64> = ra.iter().map(|&v| v as f64).collect();
+        let fb: Vec<f64> = rb.iter().map(|&v| v as f64).collect();
+        assert_eq!(argmax(&fa), argmax(&fb));
+        for (x, y) in fa.iter().zip(&fb) {
+            assert!((x - y).abs() <= 1e-5 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn argmax_and_accuracy_identical_on_artifact_dataset() {
+    let dir = ["artifacts", "../artifacts"]
+        .iter()
+        .map(std::path::PathBuf::from)
+        .find(|d| d.join("manifest.json").exists() && d.join("dataset.json").exists());
+    let dir = match dir {
+        Some(d) => d,
+        None => {
+            eprintln!("artifacts missing; skipping artifact parity check");
+            return;
+        }
+    };
+    let ds = Dataset::load(&dir).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut checked = 0usize;
+    for (name, entry) in &manifest.models {
+        if entry.kind != "kan" {
+            continue;
+        }
+        let m = QuantKanModel::load(dir.join(&entry.weights)).unwrap();
+        let engine = KanEngine::compile(&m, EngineOptions::default()).unwrap();
+        for (row, _) in ds.test_rows() {
+            assert_eq!(m.predict(row), engine.predict(row), "model {name}");
+        }
+        assert_eq!(m.accuracy(&ds), engine.accuracy(&ds), "model {name}");
+        checked += 1;
+    }
+    assert!(checked > 0, "no kan models in the artifact manifest");
+}

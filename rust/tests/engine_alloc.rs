@@ -1,0 +1,70 @@
+//! Zero-allocation steady-state assertion for the planned engine
+//! (`docs/ENGINE.md`): once a scratch arena exists, per-sample forwards
+//! must never touch the allocator.
+//!
+//! Lives in its own test binary so the counting global allocator cannot
+//! observe allocations from unrelated tests running on sibling threads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_forward_allocates_nothing() {
+    let ckpt = kan_edge::kan::checkpoint::synthetic_kan_checkpoint(
+        "alloc",
+        &[17, 8, 14],
+        5,
+        3,
+        0xA110C,
+    );
+    let model = kan_edge::kan::QuantKanModel::from_checkpoint(&ckpt);
+    let engine = kan_edge::kan::KanEngine::compile(
+        &model,
+        kan_edge::kan::EngineOptions::default(),
+    )
+    .unwrap();
+    let mut scratch = engine.new_scratch();
+    let mut out = vec![0.0f64; engine.output_dim()];
+    let mut lg = kan_edge::data::LoadGen::new(3, 17);
+    let rows = lg.batch(128);
+
+    // prime once (the contract covers steady state; the first call is
+    // also alloc-free, but the measurement should not depend on that)
+    engine.forward_into(&rows[0], &mut out, &mut scratch);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for row in &rows {
+        engine.forward_into(row, &mut out, &mut scratch);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "engine steady state hit the allocator {} times over {} samples",
+        after - before,
+        rows.len()
+    );
+}
