@@ -18,12 +18,14 @@ use std::time::Duration;
 
 use kan_edge::config::AppConfig;
 use kan_edge::coordinator::batcher::BatchPolicy;
-use kan_edge::coordinator::{build_backend, InferenceService, ServeOptions};
+use kan_edge::coordinator::{
+    build_session, BackendKind, InferenceService, ServeOptions,
+};
 use kan_edge::kan::checkpoint::{Dataset, Manifest};
 
 fn run_load(
     name: &str,
-    backend: Arc<dyn kan_edge::coordinator::InferBackend>,
+    backend: Arc<dyn kan_edge::coordinator::ExecutionSession>,
     ds: &Dataset,
     total_requests: usize,
     clients: usize,
@@ -98,18 +100,18 @@ fn main() -> kan_edge::Result<()> {
     );
 
     // PJRT backend: the AOT-compiled HLO graph (python never runs here)
-    cfg.server.backend = "pjrt".into();
-    let pjrt = build_backend(&cfg, &manifest, "kan1")?;
+    cfg.server.backend = BackendKind::Pjrt;
+    let pjrt = build_session(&cfg, &manifest, "kan1")?;
     run_load("pjrt (AOT HLO on PJRT CPU)", pjrt, &ds, total, 8);
 
     // rust digital-reference backend (integer dataflow)
-    cfg.server.backend = "digital".into();
-    let digital = build_backend(&cfg, &manifest, "kan1")?;
+    cfg.server.backend = BackendKind::Digital;
+    let digital = build_session(&cfg, &manifest, "kan1")?;
     run_load("digital (rust integer dataflow)", digital, &ds, total, 8);
 
     // analog ACIM simulator backend (IR-drop + noise + ADC, SAM mapping)
-    cfg.server.backend = "acim".into();
-    let acim = build_backend(&cfg, &manifest, "kan1")?;
+    cfg.server.backend = BackendKind::Acim;
+    let acim = build_session(&cfg, &manifest, "kan1")?;
     run_load("acim (analog simulator, KAN-SAM)", acim, &ds, total.min(1000), 4);
 
     Ok(())

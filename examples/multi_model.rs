@@ -13,7 +13,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::sync::Arc;
 
 use kan_edge::config::AppConfig;
-use kan_edge::coordinator::{Dispatch, TcpServer};
+use kan_edge::coordinator::{BackendKind, Dispatch, TcpServer};
 use kan_edge::kan::checkpoint::synthetic_checkpoint_json as kan_variant_json;
 use kan_edge::registry::{ModelManifest, ModelRegistry};
 use kan_edge::util::json::Value;
@@ -39,7 +39,7 @@ fn main() -> kan_edge::Result<()> {
     let mut cfg = AppConfig::default();
     cfg.artifacts.dir = dir.to_string_lossy().into_owned();
     cfg.artifacts.model = "alpha".into();
-    cfg.server.backend = "digital".into();
+    cfg.server.backend = BackendKind::Digital;
     let registry = ModelRegistry::open(&cfg)?;
 
     for (name, favor) in [("alpha", 0), ("beta", 1)] {

@@ -32,20 +32,21 @@ use kan_edge::util::json::{arr, obj, Value};
 
 struct Echo;
 
-impl kan_edge::coordinator::InferBackend for Echo {
+impl kan_edge::coordinator::ExecutionSession for Echo {
     fn name(&self) -> &str {
         "echo"
     }
 
-    fn output_dim(&self) -> usize {
-        1
+    fn spec(&self) -> kan_edge::coordinator::BackendSpec {
+        kan_edge::coordinator::BackendSpec::synthetic(1)
     }
 
-    fn infer_batch(
+    fn run(
         &self,
         rows: Vec<Vec<f32>>,
-    ) -> kan_edge::Result<Vec<Vec<f32>>> {
-        Ok(rows.iter().map(|r| vec![r[0]]).collect())
+        _opts: &[kan_edge::coordinator::ExecOptions],
+    ) -> kan_edge::Result<Vec<kan_edge::coordinator::RowOutput>> {
+        Ok(rows.iter().map(|r| vec![r[0]].into()).collect())
     }
 }
 

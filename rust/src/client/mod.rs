@@ -30,8 +30,9 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 
+use crate::coordinator::backend::{BackendKind, ExecOptions};
 use crate::coordinator::protocol::{
-    read_frame, write_frame, FrameRead, ModelSummary, Request, Response, MAGIC,
+    read_frame, write_frame, FrameRead, ModelSummary, Request, Response, WireRow, MAGIC,
 };
 use crate::error::{Error, Result};
 use crate::util::json::Value;
@@ -41,12 +42,44 @@ use crate::util::json::Value;
 const MAX_RESPONSE_BYTES: usize = 64 << 20;
 
 /// Result of one inference: the resolved `name@version` that served it,
-/// the logits, and the argmax class.
+/// the logits, the argmax class, and — when the request asked a
+/// stochastic backend for `trials > 1` — the per-logit standard
+/// deviation across trials.
 #[derive(Debug, Clone)]
 pub struct Inference {
     pub model: String,
     pub logits: Vec<f32>,
     pub class: usize,
+    pub std: Option<Vec<f32>>,
+}
+
+/// Per-call execution options: backend selection plus the ACIM
+/// `seed`/`trials` fields (see `docs/BACKENDS.md`). `Default` is "the
+/// model's primary backend, one unseeded trial" — identical to not
+/// passing options at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CallOptions {
+    /// Execute on this backend instead of the model's primary one.
+    pub backend: Option<BackendKind>,
+    /// Noise-stream seed for stochastic backends: a fixed `(row, seed)`
+    /// is bit-identical across connections, concurrency, and server
+    /// worker counts.
+    pub seed: Option<u64>,
+    /// Noisy trials to aggregate (server cap applies); `> 1` yields the
+    /// per-logit trial spread in [`Inference::std`].
+    pub trials: u32,
+}
+
+impl Default for CallOptions {
+    fn default() -> Self {
+        Self { backend: None, seed: None, trials: 1 }
+    }
+}
+
+impl CallOptions {
+    fn exec(&self) -> ExecOptions {
+        ExecOptions { seed: self.seed, trials: self.trials.max(1) }
+    }
 }
 
 /// Capabilities the server announced in its `hello` response.
@@ -140,29 +173,56 @@ impl KanClient {
         model: Option<&str>,
         features: &[f32],
     ) -> Result<Inference> {
+        self.infer_opts(model, features, &CallOptions::default())
+    }
+
+    /// Infer with explicit per-request execution options: backend
+    /// selection and/or ACIM `seed`/`trials`.
+    pub fn infer_opts(
+        &mut self,
+        model: Option<&str>,
+        features: &[f32],
+        opts: &CallOptions,
+    ) -> Result<Inference> {
         let id = self.fresh_id();
         let resp = self.call(Request::Infer {
             id,
             model: model.map(str::to_string),
+            backend: opts.backend,
+            exec: opts.exec(),
             features: features.to_vec(),
         })?;
         into_inference(resp)
     }
 
     /// Submit a whole batch in one frame; returns the resolved model id
-    /// and one `(logits, class)` pair per row, in row order. The server
-    /// feeds the rows to the model's dynamic batcher back-to-back.
-    /// Takes the rows by value — batches can be large and are only
+    /// and one result per row, in row order. The server feeds the rows
+    /// to the selected backend's dynamic batcher back-to-back. Takes
+    /// the rows by value — batches can be large and are only
     /// serialized, never kept.
     pub fn infer_batch(
         &mut self,
         model: Option<&str>,
         rows: Vec<Vec<f32>>,
-    ) -> Result<(String, Vec<(Vec<f32>, usize)>)> {
+    ) -> Result<(String, Vec<WireRow>)> {
+        self.infer_batch_opts(model, rows, &CallOptions::default())
+    }
+
+    /// Batch submit with explicit per-request execution options. Row
+    /// `i` derives its noise stream as `mix(seed, i)` server-side, so a
+    /// seeded batch reproduces bit-identically row by row.
+    pub fn infer_batch_opts(
+        &mut self,
+        model: Option<&str>,
+        rows: Vec<Vec<f32>>,
+        opts: &CallOptions,
+    ) -> Result<(String, Vec<WireRow>)> {
         let id = self.fresh_id();
         let resp = self.call(Request::InferBatch {
             id,
             model: model.map(str::to_string),
+            backend: opts.backend,
+            exec: opts.exec(),
             rows,
         })?;
         match resp {
@@ -179,10 +239,22 @@ impl KanClient {
     /// [`ServerInfo::max_in_flight`] or the server will backpressure
     /// the connection.
     pub fn submit(&mut self, model: Option<&str>, features: &[f32]) -> Result<i64> {
+        self.submit_opts(model, features, &CallOptions::default())
+    }
+
+    /// Pipelined submit with explicit per-request execution options.
+    pub fn submit_opts(
+        &mut self,
+        model: Option<&str>,
+        features: &[f32],
+        opts: &CallOptions,
+    ) -> Result<i64> {
         let id = self.fresh_id();
         self.send(&Request::Infer {
             id,
             model: model.map(str::to_string),
+            backend: opts.backend,
+            exec: opts.exec(),
             features: features.to_vec(),
         })?;
         self.outstanding.insert(id);
@@ -351,9 +423,12 @@ impl KanClient {
 
 fn into_inference(resp: Response) -> Result<Inference> {
     match resp {
-        Response::Infer { model, logits, class, .. } => {
-            Ok(Inference { model, logits, class })
-        }
+        Response::Infer { model, row, .. } => Ok(Inference {
+            model,
+            logits: row.logits,
+            class: row.class,
+            std: row.std,
+        }),
         Response::Error { code, message, retry_after_ms, .. } => {
             Err(wire_error(code, &message, retry_after_ms))
         }

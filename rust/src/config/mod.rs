@@ -10,6 +10,7 @@ use std::path::Path;
 
 use crate::acim::AcimOptions;
 use crate::circuits::Tech;
+use crate::coordinator::backend::BackendKind;
 use crate::error::{Error, Result};
 use crate::neurosim::HwConstraints;
 use crate::util::json::Value;
@@ -49,8 +50,10 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Number of backend workers.
     pub workers: usize,
-    /// Backend: "pjrt" (AOT graph), "digital" (rust reference) or "acim".
-    pub backend: String,
+    /// Primary execution backend, parsed from the file's `"backend"`
+    /// string exactly once at config load ("pjrt" | "digital" | "acim";
+    /// mlp artifacts always execute the mlp path).
+    pub backend: BackendKind,
     /// Digital backend execution path: `true` (default) compiles the
     /// checkpoint into the planned [`crate::kan::KanEngine`]
     /// (integer-exact hot path, `docs/ENGINE.md`); `false` serves the
@@ -63,6 +66,28 @@ pub struct ServerConfig {
     /// Max concurrently dispatched v2 requests per connection
     /// (pipelining depth); the connection reader blocks once reached.
     pub max_in_flight: usize,
+    /// Shadow execution (`"shadow"` object in the `server` section):
+    /// mirror a sampled fraction of served traffic onto a second
+    /// backend off the response path, recording divergence metrics.
+    pub shadow: ShadowConfig,
+}
+
+/// `server.shadow` — shadow-mirror knobs (see `docs/BACKENDS.md`).
+#[derive(Debug, Clone)]
+pub struct ShadowConfig {
+    /// Mirror backend; `None` disables shadow execution.
+    pub backend: Option<BackendKind>,
+    /// Fraction of primary rows mirrored, in (0, 1].
+    pub fraction: f64,
+    /// Bound on queued mirror jobs; overflow drops (never blocks the
+    /// primary response path).
+    pub queue: usize,
+}
+
+impl Default for ShadowConfig {
+    fn default() -> Self {
+        Self { backend: None, fraction: 0.1, queue: 256 }
+    }
 }
 
 impl Default for ServerConfig {
@@ -78,14 +103,14 @@ impl Default for ServerConfig {
             // without the pjrt feature the AOT path is a stub, so the
             // rust integer reference is the sensible default
             backend: if cfg!(all(feature = "pjrt", feature = "xla")) {
-                "pjrt"
+                BackendKind::Pjrt
             } else {
-                "digital"
-            }
-            .into(),
+                BackendKind::Digital
+            },
             engine: true,
             max_request_bytes: wire.max_request_bytes,
             max_in_flight: wire.max_in_flight,
+            shadow: ShadowConfig::default(),
         }
     }
 }
@@ -204,14 +229,17 @@ impl AppConfig {
             })?;
             let v = Value::parse(&text)
                 .map_err(|e| Error::Config(format!("{}: {e}", p.display())))?;
-            cfg.apply(&v);
+            cfg.apply(&v)?;
         }
         cfg.validate()?;
         Ok(cfg)
     }
 
-    /// Overlay a parsed JSON document onto the current config.
-    pub fn apply(&mut self, v: &Value) {
+    /// Overlay a parsed JSON document onto the current config. Backend
+    /// names are parsed to [`BackendKind`] here — the one place a
+    /// backend string exists — so an unknown name fails the load with
+    /// an actionable error instead of surviving to dispatch time.
+    pub fn apply(&mut self, v: &Value) -> Result<()> {
         if let Some(a) = v.get("artifacts") {
             get_string(a, "dir", &mut self.artifacts.dir);
             get_string(a, "model", &mut self.artifacts.model);
@@ -221,10 +249,19 @@ impl AppConfig {
             get_u64(s, "batch_deadline_us", &mut self.server.batch_deadline_us);
             get_usize(s, "queue_depth", &mut self.server.queue_depth);
             get_usize(s, "workers", &mut self.server.workers);
-            get_string(s, "backend", &mut self.server.backend);
+            if let Some(b) = s.get("backend").and_then(|x| x.as_str()) {
+                self.server.backend = BackendKind::parse(b)?;
+            }
             get_bool(s, "engine", &mut self.server.engine);
             get_usize(s, "max_request_bytes", &mut self.server.max_request_bytes);
             get_usize(s, "max_in_flight", &mut self.server.max_in_flight);
+            if let Some(sh) = s.get("shadow") {
+                if let Some(b) = sh.get("backend").and_then(|x| x.as_str()) {
+                    self.server.shadow.backend = Some(BackendKind::parse(b)?);
+                }
+                get_f64(sh, "fraction", &mut self.server.shadow.fraction);
+                get_usize(sh, "queue", &mut self.server.shadow.queue);
+            }
         }
         if let Some(s) = v.get("scheduler") {
             get_string(s, "policy", &mut self.scheduler.policy);
@@ -298,6 +335,7 @@ impl AppConfig {
                 }
             }
         }
+        Ok(())
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -307,11 +345,22 @@ impl AppConfig {
         if self.server.workers == 0 {
             return Err(Error::Config("server.workers must be > 0".into()));
         }
-        if !matches!(self.server.backend.as_str(), "pjrt" | "acim" | "digital") {
-            return Err(Error::Config(format!(
-                "unknown backend '{}' (pjrt | acim | digital)",
-                self.server.backend
-            )));
+        if let Some(shadow) = self.server.shadow.backend {
+            if shadow == self.server.backend {
+                return Err(Error::Config(format!(
+                    "server.shadow.backend '{shadow}' mirrors the primary backend \
+                     — a shadow must differ to measure divergence"
+                )));
+            }
+            if !(self.server.shadow.fraction > 0.0 && self.server.shadow.fraction <= 1.0)
+            {
+                return Err(Error::Config(
+                    "server.shadow.fraction must be in (0, 1]".into(),
+                ));
+            }
+            if self.server.shadow.queue == 0 {
+                return Err(Error::Config("server.shadow.queue must be > 0".into()));
+            }
         }
         if self.server.max_request_bytes == 0 {
             return Err(Error::Config("server.max_request_bytes must be > 0".into()));
@@ -354,7 +403,8 @@ mod tests {
     #[test]
     fn partial_json_fills_defaults() {
         let mut cfg = AppConfig::default();
-        cfg.apply(&Value::parse(r#"{"server": {"max_batch": 8}}"#).unwrap());
+        cfg.apply(&Value::parse(r#"{"server": {"max_batch": 8}}"#).unwrap())
+            .unwrap();
         assert_eq!(cfg.server.max_batch, 8);
         assert_eq!(cfg.server.workers, ServerConfig::default().workers);
         assert_eq!(cfg.artifacts.model, "kan1");
@@ -369,7 +419,8 @@ mod tests {
                     "tech": {"vdd": 0.9}}}"#,
             )
             .unwrap(),
-        );
+        )
+        .unwrap();
         assert_eq!(cfg.hardware.acim.array.rows, 512);
         assert!(!cfg.hardware.acim.irdrop);
         assert_eq!(cfg.hardware.tech.vdd, 0.9);
@@ -383,7 +434,8 @@ mod tests {
                 r#"{"server": {"max_request_bytes": 4096, "max_in_flight": 8}}"#,
             )
             .unwrap(),
-        );
+        )
+        .unwrap();
         assert_eq!(cfg.server.max_request_bytes, 4096);
         assert_eq!(cfg.server.max_in_flight, 8);
         cfg.validate().unwrap();
@@ -404,7 +456,8 @@ mod tests {
                 r#"{"scheduler": {"policy": "drr", "quota": 16, "fairness_window": 4}}"#,
             )
             .unwrap(),
-        );
+        )
+        .unwrap();
         assert_eq!(cfg.scheduler.policy, "drr");
         assert_eq!(cfg.scheduler.quota, 16);
         assert_eq!(cfg.scheduler.fairness_window, 4);
@@ -421,10 +474,53 @@ mod tests {
     }
 
     #[test]
-    fn bad_backend_rejected() {
+    fn bad_backend_rejected_at_parse() {
         let mut cfg = AppConfig::default();
-        cfg.server.backend = "gpu".into();
+        let err = cfg
+            .apply(&Value::parse(r#"{"server": {"backend": "gpu"}}"#).unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown backend 'gpu'"), "{err}");
+        // a valid name parses into the typed kind
+        cfg.apply(&Value::parse(r#"{"server": {"backend": "acim"}}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.server.backend, BackendKind::Acim);
+    }
+
+    #[test]
+    fn shadow_section_parses_and_validates() {
+        let mut cfg = AppConfig::default();
+        assert!(cfg.server.shadow.backend.is_none(), "shadow off by default");
+        cfg.apply(
+            &Value::parse(
+                r#"{"server": {"shadow": {"backend": "acim", "fraction": 0.25,
+                    "queue": 32}}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.server.shadow.backend, Some(BackendKind::Acim));
+        assert_eq!(cfg.server.shadow.fraction, 0.25);
+        assert_eq!(cfg.server.shadow.queue, 32);
+        cfg.validate().unwrap();
+
+        // mirroring the primary backend is a config error
+        cfg.server.shadow.backend = Some(cfg.server.backend);
         assert!(cfg.validate().is_err());
+        cfg.server.shadow.backend = Some(BackendKind::Acim);
+        cfg.server.shadow.fraction = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.server.shadow.fraction = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.server.shadow.fraction = 1.0;
+        cfg.server.shadow.queue = 0;
+        assert!(cfg.validate().is_err());
+        // an unknown shadow backend fails the load
+        let mut cfg = AppConfig::default();
+        assert!(cfg
+            .apply(
+                &Value::parse(r#"{"server": {"shadow": {"backend": "tpu"}}}"#).unwrap()
+            )
+            .is_err());
     }
 
     #[test]
@@ -436,7 +532,8 @@ mod tests {
                     "preload": ["kan1", "kan2"], "store_dir": "objects-cache"}}"#,
             )
             .unwrap(),
-        );
+        )
+        .unwrap();
         assert_eq!(cfg.registry.max_loaded, 2);
         assert_eq!(cfg.registry.reload_poll_ms, 250);
         assert_eq!(cfg.registry.preload, vec!["kan1", "kan2"]);
@@ -455,7 +552,8 @@ mod tests {
                 r#"{"neurosim": {"constraints": {"max_area_mm2": 0.05}, "tm_modes": [3]}}"#,
             )
             .unwrap(),
-        );
+        )
+        .unwrap();
         assert_eq!(cfg.neurosim.constraints.max_area_mm2, Some(0.05));
         assert_eq!(cfg.neurosim.tm_modes, vec![3]);
     }

@@ -1,16 +1,34 @@
-//! Inference backends the router can dispatch to.
+//! The typed backend surface: execution sessions the serving pipeline
+//! dispatches to.
 //!
-//! * [`PjrtBackend`] — the AOT-compiled HLO graph on the PJRT CPU client
-//!   (digital reference, batch-shaped; short batches are padded). The
-//!   `xla` crate's client types are `!Send` (`Rc` + raw pointers), so the
-//!   executable lives on a dedicated actor thread and batches cross a
-//!   channel — the PJRT runtime itself parallelizes the math internally.
-//! * [`DigitalBackend`] — the rust integer-dataflow reference
-//!   ([`QuantKanModel`]), bit-faithful to the hardware pipeline minus
-//!   analog effects. No padding constraints.
-//! * [`AcimBackend`] — the full analog simulator (IR-drop + noise + ADC).
-//! * [`MlpBackend`] — the float MLP baseline.
+//! The surface is a two-stage API (see `docs/BACKENDS.md`):
+//!
+//! 1. A [`BackendKind`] names an execution strategy and is parsed
+//!    exactly once — at config load or at the protocol boundary. No
+//!    string comparison survives past those edges.
+//! 2. A factory ([`super::router::BackendFactory`]) compiles a
+//!    checkpoint into an [`ExecutionSession`]: a running, `Send + Sync`
+//!    executor carrying a [`BackendSpec`] capability descriptor
+//!    (dims, deterministic vs stochastic, reference-exact vs
+//!    approximate, batch constraints).
+//!
+//! Sessions:
+//!
+//! * [`PjrtSession`] — the AOT-compiled HLO graph on the PJRT CPU client
+//!   (batch-shaped; short batches are padded). The `xla` crate's client
+//!   types are `!Send`, so the executable lives on a dedicated actor
+//!   thread and batches cross a channel.
+//! * [`DigitalSession`] — the rust integer-dataflow path
+//!   ([`QuantKanModel`] / the planned [`KanEngine`]), bit-faithful to
+//!   the hardware pipeline minus analog effects.
+//! * [`AcimSession`] — the full analog simulator (IR-drop + noise +
+//!   ADC). Stateless across requests: every row derives its own noise
+//!   stream from its [`ExecOptions`] seed, so results are reproducible
+//!   per request and parallelizable across workers (no shared noise
+//!   mutex, no arrival-order dependence).
+//! * [`MlpSession`] — the float MLP baseline.
 
+use std::fmt;
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -20,39 +38,237 @@ use crate::baseline::MlpModel;
 use crate::error::{Error, Result};
 use crate::kan::{EngineOptions, EngineScratch, KanEngine, QuantKanModel};
 use crate::runtime::PjrtEngine;
+use crate::util::rng::mix;
 
-/// A synchronous batch-inference backend. Called from blocking worker
-/// tasks; implementations must be `Send + Sync`.
-pub trait InferBackend: Send + Sync {
-    fn name(&self) -> &str;
-    /// Number of output logits per row.
-    fn output_dim(&self) -> usize;
-    /// Expected features per row, when the backend knows it. Used for
-    /// admission-time validation: one malformed row must be rejected at
-    /// submit, before it can poison a shared dynamic batch that also
-    /// carries other clients' requests.
-    fn input_dim(&self) -> Option<usize> {
-        None
-    }
-    /// Run a batch of feature rows; returns one logit vector per row.
-    /// Takes ownership of the rows so actor-style backends (PJRT) can
-    /// move them across their thread boundary without copying.
-    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>>;
+// ---- backend identity ------------------------------------------------------
+
+/// Typed backend identity. Parsed once — at config load
+/// (`server.backend`) or at the wire boundary (the v2 `backend` request
+/// field) — and passed around as an enum from there on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum BackendKind {
+    /// AOT-compiled HLO on the PJRT CPU runtime.
+    Pjrt,
+    /// Rust integer dataflow (planned engine or scalar reference).
+    Digital,
+    /// Analog compute-in-memory simulator (IR-drop + noise + ADC).
+    Acim,
+    /// Float MLP baseline.
+    Mlp,
 }
+
+impl BackendKind {
+    /// Every kind a request can name, in display order.
+    pub const ALL: [BackendKind; 4] = [
+        BackendKind::Pjrt,
+        BackendKind::Digital,
+        BackendKind::Acim,
+        BackendKind::Mlp,
+    ];
+
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "digital" => Ok(BackendKind::Digital),
+            "acim" => Ok(BackendKind::Acim),
+            "mlp" => Ok(BackendKind::Mlp),
+            other => Err(Error::Config(format!(
+                "unknown backend '{other}' (pjrt | digital | acim | mlp)"
+            ))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Digital => "digital",
+            BackendKind::Acim => "acim",
+            BackendKind::Mlp => "mlp",
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+// ---- capability descriptor -------------------------------------------------
+
+/// What a compiled session can do — surfaced through the control plane
+/// (`model_info`) so clients can discover capabilities instead of
+/// guessing from names.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackendSpec {
+    pub kind: BackendKind,
+    /// Expected features per row, when the session knows it (admission
+    /// validates rows against this before they can poison a shared
+    /// dynamic batch).
+    pub input_dim: Option<usize>,
+    /// Logits per row.
+    pub output_dim: usize,
+    /// Same `(row, options)` always yields the same output. A session
+    /// with noise enabled is still *reproducible* for a fixed seed, but
+    /// not deterministic across differently-seeded requests.
+    pub deterministic: bool,
+    /// Bit-faithful to the digital golden reference
+    /// (`forward_digital`); `false` for approximate paths (analog
+    /// simulation, padded f32 graphs).
+    pub reference_exact: bool,
+    /// Compiled batch-size constraint, when the executor has one
+    /// (larger submitted batches are chunked to it).
+    pub max_batch: Option<usize>,
+}
+
+impl BackendSpec {
+    /// Deterministic, reference-exact spec — the common case for test
+    /// doubles and digital paths.
+    pub fn exact(kind: BackendKind, input_dim: Option<usize>, output_dim: usize) -> Self {
+        Self {
+            kind,
+            input_dim,
+            output_dim,
+            deterministic: true,
+            reference_exact: true,
+            max_batch: None,
+        }
+    }
+
+    /// Minimal synthetic spec for test backends: digital kind, no input
+    /// constraint, `output_dim` logits.
+    pub fn synthetic(output_dim: usize) -> Self {
+        Self::exact(BackendKind::Digital, None, output_dim)
+    }
+}
+
+// ---- per-request execution options -----------------------------------------
+
+/// Per-request execution options, carried on the wire (`seed`/`trials`
+/// v2 request fields) and down to the session with each row.
+///
+/// `seed` is the noise-stream base for stochastic sessions: a fixed
+/// `(row, seed)` pair is bit-identical regardless of batching, arrival
+/// order, or worker count. `None` means "no reproducibility asked":
+/// the wire layers resolve a fresh server-side draw per request (shared
+/// with the shadow mirror of that row), and a stochastic session draws
+/// its own per-row stream for `None` rows that reach it directly — so
+/// unseeded traffic always samples the noise *distribution*, never one
+/// frozen realization. Batch submits derive per-row seeds as
+/// `mix(seed, row_index)` ([`ExecOptions::for_row`]) so rows get
+/// independent streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecOptions {
+    pub seed: Option<u64>,
+    /// Noisy trials to run and aggregate (stochastic sessions): the
+    /// served logits are the per-logit mean, and `trials > 1` also
+    /// yields a per-logit standard deviation — the paper's partial-sum
+    /// error statistics as a served uncertainty estimate.
+    pub trials: u32,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        Self { seed: None, trials: 1 }
+    }
+}
+
+impl ExecOptions {
+    /// The options batch row `i` executes with: same trials, seed
+    /// derived as `mix(seed, i)` from the *submitted* row order. This is
+    /// THE per-row derivation — the batching service, the default
+    /// [`Dispatch`](super::server::Dispatch) batch loop, and the shadow
+    /// mirror must all use it, or seeded batches stop reproducing.
+    pub fn for_row(self, i: usize) -> ExecOptions {
+        ExecOptions { seed: self.seed.map(|s| mix(s, i as u64)), trials: self.trials }
+    }
+}
+
+/// Upper bound on `trials` accepted from the wire (an ACIM forward is
+/// ~10^3 ideal MACs per row; unbounded trials would be a trivial DoS).
+pub const MAX_TRIALS: u32 = 64;
+
+/// One row's execution result: the served logits plus, for stochastic
+/// sessions run with `trials > 1`, the per-logit standard deviation
+/// across trials.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowOutput {
+    pub logits: Vec<f32>,
+    pub trial_std: Option<Vec<f32>>,
+}
+
+impl From<Vec<f32>> for RowOutput {
+    fn from(logits: Vec<f32>) -> Self {
+        Self { logits, trial_std: None }
+    }
+}
+
+/// Derive the noise seed for trial `t` of a row whose base seed is
+/// `base` (stable across batching and worker counts by construction —
+/// it depends on nothing but the request's own options).
+pub fn trial_seed(base: u64, trial: u32) -> u64 {
+    mix(base, 0x7214_15ED ^ trial as u64)
+}
+
+/// Index of the maximum logit (first on ties). The single argmax used
+/// for served classes *and* shadow flip detection — one tie-breaking
+/// semantics, so a mirror can never manufacture a phantom flip by
+/// breaking ties differently from the response path.
+pub fn argmax_f32(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate().skip(1) {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---- the session trait -----------------------------------------------------
+
+/// A compiled, running execution backend. Called from blocking worker
+/// tasks; implementations must be `Send + Sync` and **stateless across
+/// calls** — any per-request randomness must derive from the row's
+/// [`ExecOptions`], never from shared mutable state, so outputs cannot
+/// depend on request arrival order.
+pub trait ExecutionSession: Send + Sync {
+    /// Serving name (model name for model-backed sessions).
+    fn name(&self) -> &str;
+
+    /// Capability descriptor (cheap; called at pipeline start and on
+    /// the control plane).
+    fn spec(&self) -> BackendSpec;
+
+    /// Run a batch of feature rows; `opts[i]` are row `i`'s execution
+    /// options (`opts.len() == rows.len()`). Takes ownership of the
+    /// rows so actor-style sessions (PJRT) can move them across their
+    /// thread boundary without copying.
+    fn run(&self, rows: Vec<Vec<f32>>, opts: &[ExecOptions]) -> Result<Vec<RowOutput>>;
+
+    /// Convenience: run with default options and return bare logits
+    /// (evaluation helpers, tests).
+    fn infer_logits(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let opts = vec![ExecOptions::default(); rows.len()];
+        Ok(self.run(rows, &opts)?.into_iter().map(|o| o.logits).collect())
+    }
+}
+
+// ---- PJRT ------------------------------------------------------------------
 
 type PjrtJob = (Vec<Vec<f32>>, SyncSender<Result<Vec<Vec<f32>>>>);
 
-/// PJRT executable backend: an actor thread owning the (!Send) client.
-pub struct PjrtBackend {
+/// PJRT executable session: an actor thread owning the (!Send) client.
+pub struct PjrtSession {
     tx: Mutex<SyncSender<PjrtJob>>,
     model: String,
     input_dim: usize,
     output_dim: usize,
+    batch: usize,
 }
 
-impl PjrtBackend {
+impl PjrtSession {
     /// Spawn the actor: it creates the PJRT client, compiles `hlo_path`,
-    /// and then serves batches until the backend is dropped.
+    /// and then serves batches until the session is dropped.
     pub fn spawn(
         hlo_path: PathBuf,
         batch: usize,
@@ -89,7 +305,7 @@ impl PjrtBackend {
         ready_rx
             .recv()
             .map_err(|_| Error::Runtime("pjrt actor died during startup".into()))??;
-        Ok(Self { tx: Mutex::new(job_tx), model, input_dim, output_dim })
+        Ok(Self { tx: Mutex::new(job_tx), model, input_dim, output_dim, batch })
     }
 }
 
@@ -120,20 +336,25 @@ fn run_batches(
     Ok(out)
 }
 
-impl InferBackend for PjrtBackend {
+impl ExecutionSession for PjrtSession {
     fn name(&self) -> &str {
         &self.model
     }
 
-    fn output_dim(&self) -> usize {
-        self.output_dim
+    fn spec(&self) -> BackendSpec {
+        BackendSpec {
+            kind: BackendKind::Pjrt,
+            input_dim: Some(self.input_dim),
+            output_dim: self.output_dim,
+            deterministic: true,
+            // f32 graph accumulation + batch padding: numerically close
+            // to, but not bit-identical with, the integer reference
+            reference_exact: false,
+            max_batch: Some(self.batch),
+        }
     }
 
-    fn input_dim(&self) -> Option<usize> {
-        Some(self.input_dim)
-    }
-
-    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+    fn run(&self, rows: Vec<Vec<f32>>, _opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
         let (reply_tx, reply_rx) = sync_channel(1);
         {
             // ownership of the rows moves through the channel; no copy
@@ -141,29 +362,32 @@ impl InferBackend for PjrtBackend {
             tx.send((rows, reply_tx))
                 .map_err(|_| Error::Runtime("pjrt actor gone".into()))?;
         }
-        reply_rx
+        let outs = reply_rx
             .recv()
-            .map_err(|_| Error::Runtime("pjrt actor dropped reply".into()))?
+            .map_err(|_| Error::Runtime("pjrt actor dropped reply".into()))??;
+        Ok(outs.into_iter().map(RowOutput::from).collect())
     }
 }
 
-/// Rust digital backend. By default it executes through the compiled
+// ---- digital ---------------------------------------------------------------
+
+/// Rust digital session. By default it executes through the compiled
 /// [`KanEngine`] plan (integer-exact hot path, zero steady-state
 /// allocations inside the engine; see `docs/ENGINE.md`); the scalar
 /// golden reference (`QuantKanModel::forward_batch`) remains available
-/// via [`DigitalBackend::with_engine`]`(.., false)` / the
+/// via [`DigitalSession::with_engine`]`(.., false)` / the
 /// `server.engine = false` config knob.
-pub struct DigitalBackend {
+pub struct DigitalSession {
     pub model: Arc<QuantKanModel>,
     engine: Option<Arc<KanEngine>>,
     /// Reusable scratch arenas, one per concurrent in-flight batch:
-    /// popped for the duration of an `infer_batch`, pushed back after —
+    /// popped for the duration of a `run`, pushed back after —
     /// steady state allocates no new arenas.
     scratch: Mutex<Vec<EngineScratch>>,
 }
 
-impl DigitalBackend {
-    /// Engine-backed digital backend (the default serving path).
+impl DigitalSession {
+    /// Engine-backed digital session (the default serving path).
     pub fn new(model: Arc<QuantKanModel>) -> Self {
         Self::with_engine(model, true)
     }
@@ -197,20 +421,20 @@ impl DigitalBackend {
     }
 }
 
-impl InferBackend for DigitalBackend {
+impl ExecutionSession for DigitalSession {
     fn name(&self) -> &str {
         &self.model.name
     }
 
-    fn output_dim(&self) -> usize {
-        self.model.output_dim()
+    fn spec(&self) -> BackendSpec {
+        BackendSpec::exact(
+            BackendKind::Digital,
+            Some(self.model.input_dim()),
+            self.model.output_dim(),
+        )
     }
 
-    fn input_dim(&self) -> Option<usize> {
-        Some(self.model.input_dim())
-    }
-
-    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+    fn run(&self, rows: Vec<Vec<f32>>, _opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
         // flatten once and run the batch path: one allocation set per layer
         // instead of per row (EXPERIMENTS.md §Perf: +9% serving throughput)
         let din = self.model.input_dim();
@@ -218,7 +442,7 @@ impl InferBackend for DigitalBackend {
         let mut flat = Vec::with_capacity(rows.len() * din);
         for r in &rows {
             if r.len() != din {
-                return Err(crate::error::Error::Shape(format!(
+                return Err(Error::Shape(format!(
                     "row has {} features, expected {din}",
                     r.len()
                 )));
@@ -244,75 +468,281 @@ impl InferBackend for DigitalBackend {
         };
         Ok(out
             .chunks_exact(dout)
-            .map(|c| c.iter().map(|&v| v as f32).collect())
+            .map(|c| RowOutput::from(c.iter().map(|&v| v as f32).collect::<Vec<f32>>()))
             .collect())
     }
 }
 
-/// Analog ACIM-simulator backend (deterministic per-backend noise stream).
-pub struct AcimBackend {
+// ---- ACIM ------------------------------------------------------------------
+
+/// Analog ACIM-simulator session with per-request noise derivation.
+///
+/// The pre-v2 design held one `Mutex<NoiseModel>` whose stream advanced
+/// across requests: every batch serialized on the lock and outputs
+/// depended on arrival order. Here each row builds its own
+/// [`NoiseModel`] from [`trial_seed`]`(row seed, trial)`, so a fixed
+/// `(row, seed)` is bit-identical for any worker count, batch
+/// composition, or concurrency, and rows execute without shared state.
+pub struct AcimSession {
     pub model: Arc<AcimModel>,
-    pub name: String,
-    noise: Mutex<NoiseModel>,
+    name: String,
+    /// Noise base for rows that carry no seed.
+    default_seed: u64,
+    /// Draw counter for unseeded rows: each gets `mix(default, n)` so
+    /// unseeded traffic samples the noise *distribution* instead of
+    /// replaying one fixed realization (the wire layers resolve a seed
+    /// per request, so this only triggers for direct API callers; such
+    /// draws are explicitly outside the reproducibility contract).
+    unseeded: std::sync::atomic::AtomicU64,
 }
 
-impl AcimBackend {
+impl AcimSession {
     pub fn new(model: Arc<AcimModel>, name: String) -> Self {
-        let noise = NoiseModel::from_config(model.opts.seed ^ 0x77, &model.opts.array);
-        Self { model, name, noise: Mutex::new(noise) }
+        let default_seed = model.opts.seed ^ 0x77;
+        Self {
+            model,
+            name,
+            default_seed,
+            unseeded: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Run one row under `opts`: mean logits over `trials` noisy
+    /// forwards plus the per-logit standard deviation when `trials > 1`.
+    fn run_row(&self, row: &[f32], opts: &ExecOptions) -> RowOutput {
+        let base = opts.seed.unwrap_or_else(|| {
+            let n = self
+                .unseeded
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            mix(self.default_seed, n)
+        });
+        let trials = opts.trials.max(1);
+        let dout = self.model.layers.last().map(|l| l.dout).unwrap_or(0);
+        let mut sum = vec![0.0f64; dout];
+        let mut sumsq = vec![0.0f64; dout];
+        for t in 0..trials {
+            let mut noise = NoiseModel::from_config(
+                trial_seed(base, t),
+                &self.model.opts.array,
+            );
+            let y = self.model.forward(row, &mut noise);
+            for (o, &v) in y.iter().enumerate() {
+                sum[o] += v;
+                sumsq[o] += v * v;
+            }
+        }
+        let n = trials as f64;
+        let logits: Vec<f32> = sum.iter().map(|&s| (s / n) as f32).collect();
+        let trial_std = (trials > 1).then(|| {
+            sumsq
+                .iter()
+                .zip(&sum)
+                .map(|(&sq, &s)| {
+                    let mean = s / n;
+                    ((sq / n - mean * mean).max(0.0)).sqrt() as f32
+                })
+                .collect()
+        });
+        RowOutput { logits, trial_std }
     }
 }
 
-impl InferBackend for AcimBackend {
+impl ExecutionSession for AcimSession {
     fn name(&self) -> &str {
         &self.name
     }
 
-    fn output_dim(&self) -> usize {
-        self.model.layers.last().map(|l| l.dout).unwrap_or(0)
+    fn spec(&self) -> BackendSpec {
+        BackendSpec {
+            kind: BackendKind::Acim,
+            input_dim: self.model.layers.first().map(|l| l.din),
+            output_dim: self.model.layers.last().map(|l| l.dout).unwrap_or(0),
+            // with noise off the simulator is a pure function of the row
+            deterministic: !self.model.opts.noise,
+            reference_exact: false,
+            max_batch: None,
+        }
     }
 
-    fn input_dim(&self) -> Option<usize> {
-        self.model.layers.first().map(|l| l.din)
+    fn run(&self, rows: Vec<Vec<f32>>, opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
+        debug_assert_eq!(rows.len(), opts.len());
+        Ok(rows
+            .iter()
+            .zip(opts)
+            .map(|(row, opt)| self.run_row(row, opt))
+            .collect())
+    }
+}
+
+// ---- MLP -------------------------------------------------------------------
+
+/// Float MLP baseline session.
+pub struct MlpSession {
+    pub model: Arc<MlpModel>,
+}
+
+impl ExecutionSession for MlpSession {
+    fn name(&self) -> &str {
+        &self.model.name
     }
 
-    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
-        let mut noise = self.noise.lock().unwrap();
+    fn spec(&self) -> BackendSpec {
+        BackendSpec::exact(
+            BackendKind::Mlp,
+            self.model.dims.first().copied(),
+            *self.model.dims.last().unwrap(),
+        )
+    }
+
+    fn run(&self, rows: Vec<Vec<f32>>, _opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
         Ok(rows
             .iter()
             .map(|r| {
-                self.model
-                    .forward(r, &mut noise)
-                    .iter()
-                    .map(|&v| v as f32)
-                    .collect()
+                RowOutput::from(
+                    self.model
+                        .forward(r)
+                        .iter()
+                        .map(|&v| v as f32)
+                        .collect::<Vec<f32>>(),
+                )
             })
             .collect())
     }
 }
 
-/// Float MLP baseline backend.
-pub struct MlpBackend {
-    pub model: Arc<MlpModel>,
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-impl InferBackend for MlpBackend {
-    fn name(&self) -> &str {
-        &self.model.name
+    #[test]
+    fn backend_kind_parses_and_roundtrips() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        let err = BackendKind::parse("gpu").unwrap_err().to_string();
+        assert!(err.contains("unknown backend 'gpu'"), "{err}");
+        assert!(err.contains("pjrt | digital | acim | mlp"), "{err}");
     }
 
-    fn output_dim(&self) -> usize {
-        *self.model.dims.last().unwrap()
+    #[test]
+    fn exec_options_default_is_one_unseeded_trial() {
+        let o = ExecOptions::default();
+        assert_eq!(o.seed, None);
+        assert_eq!(o.trials, 1);
     }
 
-    fn input_dim(&self) -> Option<usize> {
-        self.model.dims.first().copied()
+    #[test]
+    fn trial_seed_is_stable_and_spreads() {
+        assert_eq!(trial_seed(42, 0), trial_seed(42, 0));
+        assert_ne!(trial_seed(42, 0), trial_seed(42, 1));
+        assert_ne!(trial_seed(42, 0), trial_seed(43, 0));
     }
 
-    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
-        Ok(rows
+    #[test]
+    fn acim_session_is_reproducible_per_seed_and_parallel_safe() {
+        use crate::kan::checkpoint::synthetic_kan_checkpoint;
+        use crate::mapping::{self, MappingStrategy};
+
+        let qk = Arc::new(QuantKanModel::from_checkpoint(&synthetic_kan_checkpoint(
+            "t",
+            &[3, 4, 2],
+            5,
+            3,
+            0xA11,
+        )));
+        // read noise well above the ADC LSB, so distinct seeds provably
+        // draw distinct outputs (sub-LSB noise would quantize away)
+        let mut opts = crate::acim::AcimOptions::default();
+        opts.array.sigma_read = 0.5;
+        let mappings: Vec<Vec<usize>> = qk
+            .layers
             .iter()
-            .map(|r| self.model.forward(r).iter().map(|&v| v as f32).collect())
-            .collect())
+            .map(|l| {
+                let probs = mapping::gaussian(l, 0.0, 0.5);
+                mapping::build_mapping(&probs, opts.array.rows, MappingStrategy::Sam)
+            })
+            .collect();
+        let acim = Arc::new(AcimModel::program(&qk, opts, &mappings).unwrap());
+        let session = Arc::new(AcimSession::new(acim, "t".into()));
+        assert!(!session.spec().deterministic);
+
+        let row = vec![0.25f32, -0.5, 0.75];
+        let seeded = ExecOptions { seed: Some(99), trials: 1 };
+        let a = session.run(vec![row.clone()], &[seeded]).unwrap();
+        // same (row, seed) inside a different batch composition, and
+        // concurrently from many threads: bit-identical
+        let b = session
+            .run(
+                vec![vec![0.9, 0.9, 0.9], row.clone(), vec![-0.9, 0.0, 0.9]],
+                &[ExecOptions { seed: Some(7), trials: 1 }, seeded, seeded],
+            )
+            .unwrap();
+        assert_eq!(a[0].logits, b[1].logits);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = session.clone();
+            let row = row.clone();
+            handles.push(std::thread::spawn(move || {
+                s.run(vec![row], &[ExecOptions { seed: Some(99), trials: 1 }])
+                    .unwrap()[0]
+                    .logits
+                    .clone()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), a[0].logits);
+        }
+        // a different seed gives a different draw (noise is on)
+        let c = session
+            .run(vec![row], &[ExecOptions { seed: Some(100), trials: 1 }])
+            .unwrap();
+        assert_ne!(a[0].logits, c[0].logits);
+    }
+
+    #[test]
+    fn acim_trials_yield_mean_and_std() {
+        use crate::kan::checkpoint::synthetic_kan_checkpoint;
+        use crate::mapping::{self, MappingStrategy};
+
+        let qk = Arc::new(QuantKanModel::from_checkpoint(&synthetic_kan_checkpoint(
+            "t",
+            &[2, 3, 2],
+            5,
+            3,
+            0xB22,
+        )));
+        let opts = crate::acim::AcimOptions::default();
+        let mappings: Vec<Vec<usize>> = qk
+            .layers
+            .iter()
+            .map(|l| {
+                let probs = mapping::gaussian(l, 0.0, 0.5);
+                mapping::build_mapping(&probs, opts.array.rows, MappingStrategy::Uniform)
+            })
+            .collect();
+        let acim = Arc::new(AcimModel::program(&qk, opts, &mappings).unwrap());
+        let session = AcimSession::new(acim, "t".into());
+        let out = session
+            .run(
+                vec![vec![0.3, -0.3]],
+                &[ExecOptions { seed: Some(5), trials: 8 }],
+            )
+            .unwrap();
+        let std = out[0].trial_std.as_ref().expect("trials > 1 must yield std");
+        assert_eq!(std.len(), out[0].logits.len());
+        assert!(std.iter().all(|s| s.is_finite() && *s >= 0.0));
+        // single-trial runs carry no std
+        let single = session
+            .run(vec![vec![0.3, -0.3]], &[ExecOptions { seed: Some(5), trials: 1 }])
+            .unwrap();
+        assert!(single[0].trial_std.is_none());
+        // trials are reproducible too
+        let again = session
+            .run(
+                vec![vec![0.3, -0.3]],
+                &[ExecOptions { seed: Some(5), trials: 8 }],
+            )
+            .unwrap();
+        assert_eq!(out, again);
     }
 }

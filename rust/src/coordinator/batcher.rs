@@ -13,15 +13,20 @@ use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::backend::{ExecOptions, RowOutput};
 use super::scheduler::{Recv, Scheduler};
 use crate::error::{Error, Result};
 
 /// One queued inference request. `respond` is a rendezvous channel the
-/// worker pushes the result into (a one-shot).
+/// worker pushes the result into (a one-shot). `opts` rides with the
+/// row into the executed batch: per-request seeds/trials are resolved
+/// at submission, so a dynamic batch can mix differently-seeded rows
+/// without their outputs depending on batch composition.
 pub struct Request {
     pub features: Vec<f32>,
+    pub opts: ExecOptions,
     pub enqueued: Instant,
-    pub respond: SyncSender<Result<Vec<f32>>>,
+    pub respond: SyncSender<Result<RowOutput>>,
 }
 
 /// A closed batch ready for a backend.
@@ -108,10 +113,15 @@ mod tests {
     use std::sync::mpsc::{sync_channel, Receiver as StdReceiver};
     use std::thread;
 
-    fn mk_request(v: f32) -> (Request, StdReceiver<Result<Vec<f32>>>) {
+    fn mk_request(v: f32) -> (Request, StdReceiver<Result<RowOutput>>) {
         let (tx, rx) = sync_channel(1);
         (
-            Request { features: vec![v], enqueued: Instant::now(), respond: tx },
+            Request {
+                features: vec![v],
+                opts: ExecOptions::default(),
+                enqueued: Instant::now(),
+                respond: tx,
+            },
             rx,
         )
     }
@@ -188,6 +198,7 @@ mod tests {
         let (tx, _rx) = sync_channel(1);
         let early = Request {
             features: vec![],
+            opts: ExecOptions::default(),
             enqueued: Instant::now() - Duration::from_millis(50),
             respond: tx,
         };

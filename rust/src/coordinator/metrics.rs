@@ -47,21 +47,23 @@ pub const DEFAULT_RESERVOIR_SIZE: usize = 1024;
 
 /// Fixed-size uniform sample of an unbounded observation stream
 /// (Vitter's Algorithm R). Deterministic given the seed; the modulo on
-/// the raw 64-bit draw has negligible bias at these ranges.
+/// the raw 64-bit draw has negligible bias at these ranges. Generic
+/// over the sample type: `u64` for the microsecond series, `f64` for
+/// the shadow divergence errors.
 #[derive(Debug, Clone)]
-struct Reservoir {
+struct Reservoir<T> {
     cap: usize,
     seen: u64,
-    samples: Vec<u64>,
+    samples: Vec<T>,
     rng: Rng,
 }
 
-impl Reservoir {
+impl<T: Copy> Reservoir<T> {
     fn new(cap: usize, seed: u64) -> Self {
         Self { cap: cap.max(1), seen: 0, samples: Vec::new(), rng: Rng::new(seed) }
     }
 
-    fn record(&mut self, v: u64) {
+    fn record(&mut self, v: T) {
         self.seen += 1;
         if self.samples.len() < self.cap {
             self.samples.push(v);
@@ -85,8 +87,8 @@ impl Reservoir {
 
 #[derive(Debug, Clone)]
 struct Inner {
-    latencies_us: Reservoir,
-    queue_waits_us: Reservoir,
+    latencies_us: Reservoir<u64>,
+    queue_waits_us: Reservoir<u64>,
     requests: u64,
     batches: u64,
     /// Σ batch size — `batched_rows / batches` is the exact mean
@@ -147,6 +149,7 @@ impl Inner {
             } else {
                 self.batched_rows as f64 / self.batches as f64
             },
+            shadow: None,
         }
     }
 }
@@ -178,12 +181,15 @@ pub struct MetricsReport {
     pub latency_p99_us: u64,
     pub queue_wait_p50_us: u64,
     pub mean_batch: f64,
+    /// Shadow-execution divergence, when the model runs with a mirror
+    /// backend (attached by the registry; `None` for plain pipelines).
+    pub shadow: Option<ShadowReport>,
 }
 
 impl MetricsReport {
     /// JSON shape served by the v2 `metrics` verb.
     pub fn to_value(&self) -> Value {
-        obj(vec![
+        let mut fields = vec![
             ("requests", Value::Int(self.requests as i64)),
             ("batches", Value::Int(self.batches as i64)),
             ("rejected", Value::Int(self.rejected as i64)),
@@ -193,7 +199,11 @@ impl MetricsReport {
             ("latency_p99_us", Value::Int(self.latency_p99_us as i64)),
             ("queue_wait_p50_us", Value::Int(self.queue_wait_p50_us as i64)),
             ("mean_batch", Value::Float(self.mean_batch)),
-        ])
+        ];
+        if let Some(s) = &self.shadow {
+            fields.push(("shadow", s.to_value()));
+        }
+        obj(fields)
     }
 }
 
@@ -353,9 +363,175 @@ impl MetricsHub {
             } else {
                 batched_rows as f64 / batches as f64
             },
+            shadow: None,
         }
     }
 }
+
+// ---- shadow divergence -----------------------------------------------------
+
+/// Online digital-vs-analog divergence statistics for one shadow mirror
+/// (see [`super::shadow`]): exact counters plus bounded reservoirs for
+/// the error distributions — the paper's non-ideal-effect statistics,
+/// measured from live traffic. Same exact-vs-sampled contract as
+/// [`Metrics`].
+#[derive(Debug)]
+pub struct ShadowMetrics {
+    sampled: AtomicU64,
+    mirrored: AtomicU64,
+    dropped: AtomicU64,
+    errors: AtomicU64,
+    argmax_flips: AtomicU64,
+    inner: Mutex<ShadowInner>,
+}
+
+#[derive(Debug)]
+struct ShadowInner {
+    mae_sum: f64,
+    /// Mean-absolute-logit-error distribution over mirrored rows.
+    mae: Reservoir<f64>,
+    /// Per-layer mean absolute partial-sum error distributions, lazily
+    /// sized on the first observation.
+    layer_err: Vec<Reservoir<f64>>,
+}
+
+/// Point-in-time shadow divergence report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShadowReport {
+    /// Rows the sampler selected for mirroring.
+    pub sampled: u64,
+    /// Rows the mirror actually executed and compared.
+    pub mirrored: u64,
+    /// Sampled rows dropped because the (bounded, non-blocking) mirror
+    /// queue was full — the price of never delaying a primary response.
+    pub dropped: u64,
+    /// Mirror executions that failed.
+    pub errors: u64,
+    /// Mirrored rows whose analog argmax differed from the served one.
+    pub argmax_flips: u64,
+    /// `argmax_flips / mirrored` (0 when nothing mirrored).
+    pub flip_rate: f64,
+    /// Mean of the per-row mean-absolute-logit-error (exact).
+    pub logit_mae_mean: f64,
+    /// p50/p99 of the per-row MAE distribution (sampled).
+    pub logit_mae_p50: f64,
+    pub logit_mae_p99: f64,
+    /// Per-layer `(p50, p99)` of the mean absolute partial-sum error —
+    /// where in the stack the analog path diverges.
+    pub layer_err_quantiles: Vec<(f64, f64)>,
+}
+
+impl ShadowMetrics {
+    pub fn new() -> Self {
+        Self {
+            sampled: AtomicU64::new(0),
+            mirrored: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            argmax_flips: AtomicU64::new(0),
+            inner: Mutex::new(ShadowInner {
+                mae_sum: 0.0,
+                mae: Reservoir::new(DEFAULT_RESERVOIR_SIZE, 0x5AD0_11AE),
+                layer_err: Vec::new(),
+            }),
+        }
+    }
+
+    pub fn record_sampled(&self) {
+        self.sampled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_dropped(&self) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one completed mirror comparison.
+    pub fn record_mirror(&self, flip: bool, mae: f64, layer_err: &[f64]) {
+        self.mirrored.fetch_add(1, Ordering::Relaxed);
+        if flip {
+            self.argmax_flips.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.mae_sum += mae;
+        g.mae.record(mae);
+        while g.layer_err.len() < layer_err.len() {
+            let salt = 0xE8_A0 + g.layer_err.len() as u64;
+            g.layer_err.push(Reservoir::new(DEFAULT_RESERVOIR_SIZE, salt));
+        }
+        for (r, &e) in g.layer_err.iter_mut().zip(layer_err) {
+            r.record(e);
+        }
+    }
+
+    pub fn report(&self) -> ShadowReport {
+        let (mae_sum, mut mae, layer) = {
+            let g = self.inner.lock().unwrap();
+            (g.mae_sum, g.mae.samples.clone(), g.layer_err.clone())
+        };
+        mae.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let mirrored = self.mirrored.load(Ordering::Relaxed);
+        let layer_err_quantiles = layer
+            .into_iter()
+            .map(|r| {
+                let mut s = r.samples;
+                s.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                (percentile(&s, 0.50), percentile(&s, 0.99))
+            })
+            .collect();
+        ShadowReport {
+            sampled: self.sampled.load(Ordering::Relaxed),
+            mirrored,
+            dropped: self.dropped.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            argmax_flips: self.argmax_flips.load(Ordering::Relaxed),
+            flip_rate: if mirrored > 0 {
+                self.argmax_flips.load(Ordering::Relaxed) as f64 / mirrored as f64
+            } else {
+                0.0
+            },
+            logit_mae_mean: if mirrored > 0 { mae_sum / mirrored as f64 } else { 0.0 },
+            logit_mae_p50: percentile(&mae, 0.50),
+            logit_mae_p99: percentile(&mae, 0.99),
+            layer_err_quantiles,
+        }
+    }
+}
+
+impl Default for ShadowMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShadowReport {
+    /// The `"shadow"` section of a per-model metrics report.
+    pub fn to_value(&self) -> Value {
+        let layers: Vec<Value> = self
+            .layer_err_quantiles
+            .iter()
+            .map(|&(p50, p99)| {
+                obj(vec![("p50", Value::Float(p50)), ("p99", Value::Float(p99))])
+            })
+            .collect();
+        obj(vec![
+            ("sampled", Value::Int(self.sampled as i64)),
+            ("mirrored", Value::Int(self.mirrored as i64)),
+            ("dropped", Value::Int(self.dropped as i64)),
+            ("errors", Value::Int(self.errors as i64)),
+            ("argmax_flips", Value::Int(self.argmax_flips as i64)),
+            ("flip_rate", Value::Float(self.flip_rate)),
+            ("logit_mae_mean", Value::Float(self.logit_mae_mean)),
+            ("logit_mae_p50", Value::Float(self.logit_mae_p50)),
+            ("logit_mae_p99", Value::Float(self.logit_mae_p99)),
+            ("layer_err", Value::Array(layers)),
+        ])
+    }
+}
+
 
 /// Transport-level counters for the TCP endpoint: per-protocol-version
 /// request counts, connection lifecycle, and the per-connection
@@ -439,12 +615,15 @@ impl WireMetrics {
     }
 }
 
-/// Index-based percentile over a sorted series (`0` when empty). Public
-/// so out-of-crate consumers (e.g. `kan-edge bench-net`) report
-/// percentiles with exactly the serving core's index contract.
-pub fn percentile(sorted: &[u64], p: f64) -> u64 {
+/// Index-based percentile over a sorted series (`T::default()`, i.e.
+/// zero, when empty). Generic over the sample type — the `u64`
+/// microsecond series and the `f64` shadow divergence series share one
+/// index contract. Public so out-of-crate consumers (e.g. `kan-edge
+/// bench-net`) report percentiles with exactly the serving core's
+/// formula.
+pub fn percentile<T: Copy + Default>(sorted: &[T], p: f64) -> T {
     if sorted.is_empty() {
-        return 0;
+        return T::default();
     }
     let idx = ((sorted.len() as f64 - 1.0) * p).floor() as usize;
     sorted[idx.min(sorted.len() - 1)]
@@ -627,6 +806,39 @@ mod tests {
         assert_eq!(v.get("connections_active").unwrap().as_i64().unwrap(), 1);
         assert_eq!(v.get("in_flight_hwm").unwrap().as_i64().unwrap(), 9);
         assert_eq!(v.get("oversized").unwrap().as_i64().unwrap(), 1);
+    }
+
+    #[test]
+    fn shadow_metrics_report_counts_and_quantiles() {
+        let s = ShadowMetrics::new();
+        for _ in 0..10 {
+            s.record_sampled();
+        }
+        s.record_dropped();
+        for i in 0..8 {
+            let flip = i % 4 == 0;
+            s.record_mirror(flip, 0.1 * (i + 1) as f64, &[0.01, 0.02 * (i + 1) as f64]);
+        }
+        let r = s.report();
+        assert_eq!(r.sampled, 10);
+        assert_eq!(r.mirrored, 8);
+        assert_eq!(r.dropped, 1);
+        assert_eq!(r.argmax_flips, 2);
+        assert!((r.flip_rate - 0.25).abs() < 1e-12);
+        assert!((r.logit_mae_mean - 0.45).abs() < 1e-9, "{}", r.logit_mae_mean);
+        assert!(r.logit_mae_p50 > 0.0 && r.logit_mae_p99 >= r.logit_mae_p50);
+        assert_eq!(r.layer_err_quantiles.len(), 2);
+        assert!(r.layer_err_quantiles[1].1 >= r.layer_err_quantiles[1].0);
+        // serialization carries the section
+        let v = r.to_value();
+        assert_eq!(v.get("mirrored").unwrap().as_i64().unwrap(), 8);
+        assert_eq!(v.get("argmax_flips").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(v.get("layer_err").unwrap().as_array().unwrap().len(), 2);
+        // a report with shadow attached serializes it under "shadow"
+        let mut mr = Metrics::new().report();
+        assert!(mr.to_value().get("shadow").is_none());
+        mr.shadow = Some(r);
+        assert!(mr.to_value().get("shadow").unwrap().get("flip_rate").is_some());
     }
 
     #[test]

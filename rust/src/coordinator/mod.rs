@@ -28,13 +28,23 @@ pub mod protocol;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod shadow;
 pub mod tcp;
 
-pub use backend::{AcimBackend, DigitalBackend, InferBackend, MlpBackend, PjrtBackend};
+pub use backend::{
+    AcimSession, BackendKind, BackendSpec, DigitalSession, ExecOptions,
+    ExecutionSession, MlpSession, PjrtSession, RowOutput,
+};
 pub use batcher::{Batch, BatchPolicy, Request};
-pub use metrics::{Metrics, MetricsHub, MetricsReport, WireMetrics};
-pub use protocol::{ErrorCode, ModelSummary};
-pub use router::{build_acim, build_acim_with_calib, build_backend, serve_options, tcp_limits};
+pub use metrics::{
+    Metrics, MetricsHub, MetricsReport, ShadowMetrics, ShadowReport, WireMetrics,
+};
+pub use protocol::{BackendInfo, ErrorCode, ModelSummary, WireRow};
+pub use router::{
+    build_acim, build_acim_with_calib, build_session, serve_options, tcp_limits,
+    BackendFactory,
+};
 pub use scheduler::{ClientId, SchedMode, Scheduler, SchedulerOptions};
-pub use server::{Dispatch, InferenceService, ServeOptions};
+pub use server::{Dispatch, InferenceService, RouteSpec, ServeOptions};
+pub use shadow::{ShadowExec, ShadowJob, ShadowObservation, ShadowState};
 pub use tcp::{TcpLimits, TcpServer};

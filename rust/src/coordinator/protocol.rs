@@ -17,6 +17,7 @@
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 
+use super::backend::{BackendKind, BackendSpec, ExecOptions, MAX_TRIALS};
 use crate::error::Error;
 use crate::util::json::{arr, obj, Value};
 
@@ -142,6 +143,9 @@ pub fn code_for(e: &Error) -> ErrorCode {
         Error::Overloaded { .. } => ErrorCode::Overloaded,
         Error::Serving(m) if m.contains("queue full") => ErrorCode::Overloaded,
         Error::Serving(m) if m.contains("single model") => ErrorCode::NotFound,
+        // backend-selection routing: the requested kind exists but this
+        // endpoint/model cannot execute it
+        Error::Serving(m) if m.contains("not served here") => ErrorCode::NotFound,
         // the worker pool re-wraps backend errors as Serving with the
         // original message; a shape mismatch is the client's fault
         Error::Serving(m) if m.contains("shape mismatch") => ErrorCode::BadRequest,
@@ -200,6 +204,80 @@ impl WireError {
 
 // ---- model summaries ------------------------------------------------------
 
+/// Served-backend capabilities of a live model, as surfaced by the
+/// control plane: the [`BackendSpec`] of the primary session plus the
+/// shadow-mirror status. Clients discover what a model can do (is it
+/// deterministic? reference-exact? what dims?) instead of inferring it
+/// from the backend name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendInfo {
+    pub kind: String,
+    pub deterministic: bool,
+    pub reference_exact: bool,
+    pub input_dim: Option<usize>,
+    pub output_dim: usize,
+    /// Mirrored backend kind + sampled traffic fraction, when a shadow
+    /// runs alongside the primary.
+    pub shadow: Option<(String, f64)>,
+}
+
+impl BackendInfo {
+    /// Build from a session's capability descriptor and the optional
+    /// shadow `(kind, fraction)`.
+    pub fn from_spec(spec: &BackendSpec, shadow: Option<(BackendKind, f64)>) -> Self {
+        Self {
+            kind: spec.kind.as_str().to_string(),
+            deterministic: spec.deterministic,
+            reference_exact: spec.reference_exact,
+            input_dim: spec.input_dim,
+            output_dim: spec.output_dim,
+            shadow: shadow.map(|(k, f)| (k.as_str().to_string(), f)),
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut fields = vec![
+            ("kind", Value::Str(self.kind.clone())),
+            ("deterministic", Value::Bool(self.deterministic)),
+            ("reference_exact", Value::Bool(self.reference_exact)),
+            ("output_dim", Value::Int(self.output_dim as i64)),
+        ];
+        if let Some(d) = self.input_dim {
+            fields.push(("input_dim", Value::Int(d as i64)));
+        }
+        if let Some((kind, fraction)) = &self.shadow {
+            fields.push((
+                "shadow",
+                obj(vec![
+                    ("backend", Value::Str(kind.clone())),
+                    ("fraction", Value::Float(*fraction)),
+                ]),
+            ));
+        }
+        obj(fields)
+    }
+
+    pub fn from_value(v: &Value) -> crate::error::Result<BackendInfo> {
+        Ok(BackendInfo {
+            kind: v.req_str("kind")?.to_string(),
+            deterministic: v.get("deterministic").and_then(|b| b.as_bool()).unwrap_or(true),
+            reference_exact: v
+                .get("reference_exact")
+                .and_then(|b| b.as_bool())
+                .unwrap_or(false),
+            input_dim: v.get("input_dim").and_then(|d| d.as_usize()),
+            output_dim: v.req_usize("output_dim")?,
+            shadow: match v.get("shadow") {
+                None => None,
+                Some(s) => Some((
+                    s.req_str("backend")?.to_string(),
+                    s.get("fraction").and_then(|f| f.as_f64()).unwrap_or(0.0),
+                )),
+            },
+        })
+    }
+}
+
 /// Control-plane summary of one registered model, as exposed by the
 /// `list_models` / `model_info` verbs (and
 /// [`Dispatch::model_summaries`](super::server::Dispatch::model_summaries)).
@@ -214,6 +292,9 @@ pub struct ModelSummary {
     pub live: bool,
     pub accuracy: Option<f64>,
     pub digest: Option<String>,
+    /// Served-backend capabilities; present only while a pipeline is
+    /// live (a non-live model has no compiled session to describe).
+    pub backend: Option<BackendInfo>,
 }
 
 impl ModelSummary {
@@ -231,6 +312,9 @@ impl ModelSummary {
         }
         if let Some(d) = &self.digest {
             fields.push(("digest", Value::Str(d.clone())));
+        }
+        if let Some(b) = &self.backend {
+            fields.push(("backend", b.to_value()));
         }
         obj(fields)
     }
@@ -253,6 +337,10 @@ impl ModelSummary {
             live: v.get("live").and_then(|b| b.as_bool()).unwrap_or(false),
             accuracy: v.get("accuracy").and_then(|a| a.as_f64()),
             digest: v.get("digest").and_then(|d| d.as_str()).map(str::to_string),
+            backend: match v.get("backend") {
+                None => None,
+                Some(b) => Some(BackendInfo::from_value(b)?),
+            },
         })
     }
 }
@@ -268,11 +356,27 @@ pub enum Request {
     Hello { id: i64, client: Option<String> },
     /// Liveness round-trip.
     Ping { id: i64 },
-    /// One feature vector; `model` routes like v1's `"model"` field.
-    Infer { id: i64, model: Option<String>, features: Vec<f32> },
+    /// One feature vector; `model` routes like v1's `"model"` field,
+    /// `backend` selects an execution backend for this request only,
+    /// and `exec` carries the ACIM `seed`/`trials` options.
+    Infer {
+        id: i64,
+        model: Option<String>,
+        backend: Option<BackendKind>,
+        exec: ExecOptions,
+        features: Vec<f32>,
+    },
     /// A whole batch of rows, resolved once and fed to the model's
-    /// dynamic batcher back-to-back.
-    InferBatch { id: i64, model: Option<String>, rows: Vec<Vec<f32>> },
+    /// dynamic batcher back-to-back. Batches are keyed by
+    /// `(model, backend, options)` — mixed traffic batches correctly
+    /// because each row carries its own derived options.
+    InferBatch {
+        id: i64,
+        model: Option<String>,
+        backend: Option<BackendKind>,
+        exec: ExecOptions,
+        rows: Vec<Vec<f32>>,
+    },
     /// Registered models (control plane).
     ListModels { id: i64 },
     /// Detail for one registered model.
@@ -313,19 +417,21 @@ impl Request {
                 obj(fields)
             }
             Request::Ping { id } => obj(base(*id, "ping")),
-            Request::Infer { id, model, features } => {
+            Request::Infer { id, model, backend, exec, features } => {
                 let mut fields = base(*id, "infer");
                 if let Some(m) = model {
                     fields.push(("model", Value::Str(m.clone())));
                 }
+                push_exec_fields(&mut fields, *backend, exec);
                 fields.push(("features", floats(features)));
                 obj(fields)
             }
-            Request::InferBatch { id, model, rows } => {
+            Request::InferBatch { id, model, backend, exec, rows } => {
                 let mut fields = base(*id, "infer_batch");
                 if let Some(m) = model {
                     fields.push(("model", Value::Str(m.clone())));
                 }
+                push_exec_fields(&mut fields, *backend, exec);
                 fields.push(("rows", arr(rows.iter().map(|r| floats(r)).collect())));
                 obj(fields)
             }
@@ -376,14 +482,16 @@ impl Request {
             }),
             "ping" => Ok(Request::Ping { id }),
             "infer" => {
+                let (backend, exec) = parse_exec_fields(v, id)?;
                 let features = v
                     .f32_vec("features")
                     .map_err(|e| WireError::bad(Some(id), e.to_string()))?;
-                Ok(Request::Infer { id, model, features })
+                Ok(Request::Infer { id, model, backend, exec, features })
             }
             "infer_batch" => {
+                let (backend, exec) = parse_exec_fields(v, id)?;
                 let rows = parse_rows(v, id)?;
-                Ok(Request::InferBatch { id, model, rows })
+                Ok(Request::InferBatch { id, model, backend, exec, rows })
             }
             "list_models" => Ok(Request::ListModels { id }),
             "model_info" => match model {
@@ -425,7 +533,102 @@ fn parse_rows(v: &Value, id: i64) -> std::result::Result<Vec<Vec<f32>>, WireErro
     Ok(rows)
 }
 
+/// Serialize the per-request execution fields, omitting defaults so
+/// pre-existing clients' frames stay byte-identical.
+fn push_exec_fields(
+    fields: &mut Vec<(&str, Value)>,
+    backend: Option<BackendKind>,
+    exec: &ExecOptions,
+) {
+    if let Some(b) = backend {
+        fields.push(("backend", Value::Str(b.as_str().to_string())));
+    }
+    if let Some(s) = exec.seed {
+        fields.push(("seed", Value::Int(s as i64)));
+    }
+    if exec.trials != 1 {
+        fields.push(("trials", Value::Int(exec.trials as i64)));
+    }
+}
+
+/// Parse (and validate) the optional `backend` / `seed` / `trials`
+/// request fields. An unknown backend name or an out-of-range trial
+/// count is a typed `bad_request` — validated once here, at the wire
+/// boundary, so nothing stringly-typed reaches the dispatch path.
+fn parse_exec_fields(
+    v: &Value,
+    id: i64,
+) -> std::result::Result<(Option<BackendKind>, ExecOptions), WireError> {
+    let backend = match v.get("backend") {
+        None | Some(Value::Null) => None,
+        Some(Value::Str(s)) => Some(
+            BackendKind::parse(s).map_err(|e| WireError::bad(Some(id), e.to_string()))?,
+        ),
+        Some(_) => return Err(WireError::bad(Some(id), "'backend' must be a string")),
+    };
+    let seed = match v.get("seed") {
+        None | Some(Value::Null) => None,
+        // i64 on the wire (JSON has no u64); the bit pattern is the seed
+        Some(s) => Some(s.as_i64().ok_or_else(|| {
+            WireError::bad(Some(id), "'seed' must be an integer")
+        })? as u64),
+    };
+    let trials = match v.get("trials") {
+        None | Some(Value::Null) => 1u32,
+        Some(t) => {
+            let t = t.as_i64().ok_or_else(|| {
+                WireError::bad(Some(id), "'trials' must be an integer")
+            })?;
+            if t < 1 || t > MAX_TRIALS as i64 {
+                return Err(WireError::bad(
+                    Some(id),
+                    format!("'trials' must be in 1..={MAX_TRIALS} (got {t})"),
+                ));
+            }
+            t as u32
+        }
+    };
+    Ok((backend, ExecOptions { seed, trials }))
+}
+
 // ---- responses ------------------------------------------------------------
+
+/// One row's inference result on the wire: logits, argmax class, and —
+/// for stochastic backends run with `trials > 1` — the per-logit
+/// standard deviation across trials (the served uncertainty estimate).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRow {
+    pub logits: Vec<f32>,
+    pub class: usize,
+    pub std: Option<Vec<f32>>,
+}
+
+impl WireRow {
+    fn to_fields(&self) -> Vec<(&'static str, Value)> {
+        fn floats(xs: &[f32]) -> Value {
+            arr(xs.iter().map(|&v| Value::Float(v as f64)).collect())
+        }
+        let mut fields = vec![
+            ("logits", floats(&self.logits)),
+            ("class", Value::Int(self.class as i64)),
+        ];
+        if let Some(s) = &self.std {
+            fields.push(("std", floats(s)));
+        }
+        fields
+    }
+
+    fn from_value(v: &Value) -> crate::error::Result<WireRow> {
+        Ok(WireRow {
+            logits: v.f32_vec("logits")?,
+            class: v.req_usize("class")?,
+            std: match v.get("std") {
+                None => None,
+                Some(_) => Some(v.f32_vec("std")?),
+            },
+        })
+    }
+}
 
 /// A typed v2 response. `op` on the wire mirrors the request verb
 /// (`"pong"` for ping, `"error"` for failures).
@@ -439,9 +642,9 @@ pub enum Response {
         max_in_flight: usize,
     },
     Pong { id: i64 },
-    Infer { id: i64, model: String, logits: Vec<f32>, class: usize },
-    /// One `(logits, class)` pair per submitted row, in row order.
-    InferBatch { id: i64, model: String, results: Vec<(Vec<f32>, usize)> },
+    Infer { id: i64, model: String, row: WireRow },
+    /// One result per submitted row, in row order.
+    InferBatch { id: i64, model: String, results: Vec<WireRow> },
     ModelList { id: i64, models: Vec<ModelSummary> },
     ModelInfo { id: i64, model: ModelSummary },
     /// Free-form report object (per-model serving metrics + wire
@@ -480,9 +683,6 @@ impl Response {
         fn base(id: i64, op: &str) -> Vec<(&str, Value)> {
             vec![("id", Value::Int(id)), ("op", Value::Str(op.to_string()))]
         }
-        fn floats(xs: &[f32]) -> Value {
-            arr(xs.iter().map(|&v| Value::Float(v as f64)).collect())
-        }
         match self {
             Response::Hello { id, protocol, server, max_frame, max_in_flight } => {
                 let mut fields = base(*id, "hello");
@@ -493,23 +693,14 @@ impl Response {
                 obj(fields)
             }
             Response::Pong { id } => obj(base(*id, "pong")),
-            Response::Infer { id, model, logits, class } => {
+            Response::Infer { id, model, row } => {
                 let mut fields = base(*id, "infer");
                 fields.push(("model", Value::Str(model.clone())));
-                fields.push(("logits", floats(logits)));
-                fields.push(("class", Value::Int(*class as i64)));
+                fields.extend(row.to_fields());
                 obj(fields)
             }
             Response::InferBatch { id, model, results } => {
-                let items: Vec<Value> = results
-                    .iter()
-                    .map(|(logits, class)| {
-                        obj(vec![
-                            ("logits", floats(logits)),
-                            ("class", Value::Int(*class as i64)),
-                        ])
-                    })
-                    .collect();
+                let items: Vec<Value> = results.iter().map(|r| obj(r.to_fields())).collect();
                 let mut fields = base(*id, "infer_batch");
                 fields.push(("model", Value::Str(model.clone())));
                 fields.push(("results", arr(items)));
@@ -607,13 +798,12 @@ impl Response {
             "infer" => Ok(Response::Infer {
                 id,
                 model: v.req_str("model")?.to_string(),
-                logits: v.f32_vec("logits")?,
-                class: v.req_usize("class")?,
+                row: WireRow::from_value(v)?,
             }),
             "infer_batch" => {
                 let mut results = Vec::new();
                 for item in v.req_array("results")? {
-                    results.push((item.f32_vec("logits")?, item.req_usize("class")?));
+                    results.push(WireRow::from_value(item)?);
                 }
                 Ok(Response::InferBatch {
                     id,
@@ -715,18 +905,73 @@ mod tests {
         roundtrip_request(Request::Infer {
             id: 4,
             model: Some("kan1@2".into()),
+            backend: None,
+            exec: ExecOptions::default(),
             features: vec![0.5, -1.25],
         });
-        roundtrip_request(Request::Infer { id: 5, model: None, features: vec![1.0] });
+        roundtrip_request(Request::Infer {
+            id: 5,
+            model: None,
+            backend: Some(BackendKind::Acim),
+            exec: ExecOptions { seed: Some(42), trials: 8 },
+            features: vec![1.0],
+        });
         roundtrip_request(Request::InferBatch {
             id: 6,
             model: None,
+            backend: None,
+            exec: ExecOptions::default(),
             rows: vec![vec![0.5, 0.5], vec![-1.0, 2.0]],
+        });
+        roundtrip_request(Request::InferBatch {
+            id: 11,
+            model: Some("kan2".into()),
+            backend: Some(BackendKind::Digital),
+            exec: ExecOptions { seed: Some(7), trials: 1 },
+            rows: vec![vec![0.5]],
         });
         roundtrip_request(Request::ListModels { id: 7 });
         roundtrip_request(Request::ModelInfo { id: 8, model: "kan2".into() });
         roundtrip_request(Request::Metrics { id: 9 });
         roundtrip_request(Request::Health { id: 10 });
+    }
+
+    #[test]
+    fn exec_field_validation_is_typed() {
+        // unknown backend name
+        let err = Request::from_bytes(
+            br#"{"id":1,"op":"infer","backend":"gpu","features":[1]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("unknown backend 'gpu'"), "{}", err.message);
+        // out-of-range trials
+        for bad in ["0", "65", "-3"] {
+            let payload =
+                format!("{{\"id\":1,\"op\":\"infer\",\"trials\":{bad},\"features\":[1]}}");
+            let err = Request::from_bytes(payload.as_bytes()).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "trials={bad}");
+            assert!(err.message.contains("trials"), "{}", err.message);
+        }
+        // non-integer seed
+        let err = Request::from_bytes(
+            br#"{"id":1,"op":"infer","seed":"abc","features":[1]}"#,
+        )
+        .unwrap_err();
+        assert!(err.message.contains("seed"), "{}", err.message);
+        // defaults omitted from serialization: a plain infer has none of
+        // the exec fields on the wire
+        let v = Request::Infer {
+            id: 1,
+            model: None,
+            backend: None,
+            exec: ExecOptions::default(),
+            features: vec![1.0],
+        }
+        .to_value();
+        assert!(v.get("backend").is_none());
+        assert!(v.get("seed").is_none());
+        assert!(v.get("trials").is_none());
     }
 
     fn roundtrip_response(resp: Response) {
@@ -748,13 +993,24 @@ mod tests {
         roundtrip_response(Response::Infer {
             id: 3,
             model: "a@1".into(),
-            logits: vec![1.5, -1.5],
-            class: 0,
+            row: WireRow { logits: vec![1.5, -1.5], class: 0, std: None },
+        });
+        roundtrip_response(Response::Infer {
+            id: 12,
+            model: "a@1".into(),
+            row: WireRow {
+                logits: vec![1.5, -1.5],
+                class: 0,
+                std: Some(vec![0.25, 0.5]),
+            },
         });
         roundtrip_response(Response::InferBatch {
             id: 4,
             model: "a@1".into(),
-            results: vec![(vec![1.0, 0.0], 0), (vec![0.0, 1.0], 1)],
+            results: vec![
+                WireRow { logits: vec![1.0, 0.0], class: 0, std: None },
+                WireRow { logits: vec![0.0, 1.0], class: 1, std: Some(vec![0.1, 0.1]) },
+            ],
         });
         roundtrip_response(Response::ModelList {
             id: 5,
@@ -767,6 +1023,14 @@ mod tests {
                 live: true,
                 accuracy: Some(0.9),
                 digest: Some("fnv1a:abc".into()),
+                backend: Some(BackendInfo {
+                    kind: "digital".into(),
+                    deterministic: true,
+                    reference_exact: true,
+                    input_dim: Some(2),
+                    output_dim: 2,
+                    shadow: Some(("acim".into(), 0.25)),
+                }),
             }],
         });
         roundtrip_response(Response::ModelInfo {
@@ -780,6 +1044,7 @@ mod tests {
                 live: false,
                 accuracy: None,
                 digest: None,
+                backend: None,
             },
         });
         roundtrip_response(Response::Health { id: 7, status: "ok".into(), models_live: 2 });

@@ -1,15 +1,32 @@
-//! Backend construction + routing: turn config + artifacts into a running
-//! [`InferenceService`](super::server::InferenceService).
+//! Backend construction + routing: turn config + artifacts into running
+//! [`ExecutionSession`]s.
 //!
-//! Single-model serving calls [`build_backend`] directly; multi-model
-//! serving goes through [`crate::registry::ModelRegistry`], which calls
-//! back into [`build_backend`] per variant and gives each one its own
-//! dynamic batcher + worker pool.
+//! The two-stage API (`docs/BACKENDS.md`): a [`BackendKind`] is parsed
+//! once at config load / the wire boundary, and a [`BackendFactory`]
+//! compiles `(manifest entry, kind)` into an [`ExecutionSession`]
+//! carrying its [`BackendSpec`](super::backend::BackendSpec) capability
+//! descriptor. Single-model serving calls [`build_session`] directly;
+//! multi-model serving goes through [`crate::registry::ModelRegistry`],
+//! which owns a factory and gives each compiled session its own dynamic
+//! batcher + worker pool.
+//!
+//! ACIM builds need per-layer interval-occupancy statistics for the
+//! KAN-SAM mapping. Those are expensive (a full calibration-set forward
+//! per layer), so the factory caches them by weights digest: a registry
+//! hot reload — or building an ACIM mirror next to a digital primary —
+//! never repays calibration for unchanged weights. Calibration
+//! activations propagate in **f64** end-to-end: the pre-v2 code
+//! truncated each layer's outputs through `f32`, the same double
+//! rounding PR 4 removed from serving, so calibration-time interval
+//! occupancy could disagree with serve-time codes at level boundaries.
 
-use std::path::Path;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
-use super::backend::{AcimBackend, DigitalBackend, InferBackend, MlpBackend, PjrtBackend};
+use super::backend::{
+    AcimSession, BackendKind, DigitalSession, ExecutionSession, MlpSession, PjrtSession,
+};
 use super::batcher::BatchPolicy;
 use super::scheduler::{SchedMode, SchedulerOptions};
 use super::server::ServeOptions;
@@ -52,59 +69,287 @@ pub fn tcp_limits(cfg: &AppConfig) -> TcpLimits {
     }
 }
 
-/// Build the backend named by `cfg.server.backend` for `model`.
-pub fn build_backend(
+/// Compiles manifest entries into execution sessions, caching the
+/// expensive intermediate products (per-layer calibration occupancy)
+/// across builds.
+pub struct BackendFactory {
+    cfg: AppConfig,
+    dir: PathBuf,
+    /// Per-layer interval-occupancy statistics keyed by weights digest:
+    /// hot reloads and mirror builds of unchanged weights skip the full
+    /// calibration propagation.
+    occupancy: Mutex<HashMap<String, Arc<Vec<Vec<f64>>>>>,
+}
+
+impl BackendFactory {
+    pub fn new(cfg: &AppConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            dir: PathBuf::from(&cfg.artifacts.dir),
+            occupancy: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Compile `model` (a manifest entry) into a session executing
+    /// `kind`. MLP artifacts always execute the float MLP path —
+    /// requesting `mlp` on a KAN artifact (or a KAN kind on an MLP
+    /// artifact's weights) fails when the checkpoint cannot back it.
+    pub fn build(
+        &self,
+        manifest: &Manifest,
+        model: &str,
+        kind: BackendKind,
+    ) -> Result<Arc<dyn ExecutionSession>> {
+        let entry = manifest
+            .models
+            .get(model)
+            .ok_or_else(|| Error::Artifact(format!("model '{model}' not in manifest")))?;
+
+        if entry.kind == "mlp" || kind == BackendKind::Mlp {
+            if entry.kind != "mlp" {
+                return Err(Error::Artifact(format!(
+                    "model '{model}' is a '{}' artifact; the mlp backend needs \
+                     mlp weights",
+                    entry.kind
+                )));
+            }
+            let mlp = MlpModel::load(self.dir.join(&entry.weights))?;
+            return Ok(Arc::new(MlpSession { model: Arc::new(mlp) }));
+        }
+
+        match kind {
+            BackendKind::Mlp => unreachable!("handled above"),
+            BackendKind::Pjrt => {
+                let batch = self.cfg.server.max_batch;
+                // use the largest compiled batch <= configured max
+                let mut sizes: Vec<usize> = entry.hlo.keys().copied().collect();
+                sizes.sort_unstable();
+                let chosen = sizes
+                    .iter()
+                    .rev()
+                    .find(|&&s| s <= batch)
+                    .or(sizes.first())
+                    .copied()
+                    .ok_or_else(|| {
+                        Error::Artifact(format!("model '{model}' has no HLO"))
+                    })?;
+                let file = entry.hlo.get(&chosen).expect("chosen batch exists");
+                let session = PjrtSession::spawn(
+                    self.dir.join(file),
+                    chosen,
+                    entry.dims[0],
+                    *entry.dims.last().unwrap(),
+                    model.to_string(),
+                )?;
+                Ok(Arc::new(session))
+            }
+            BackendKind::Digital => {
+                let qk = QuantKanModel::load(self.dir.join(&entry.weights))?;
+                Ok(Arc::new(DigitalSession::with_engine(
+                    Arc::new(qk),
+                    self.cfg.server.engine,
+                )))
+            }
+            BackendKind::Acim => {
+                let (acim, _qk) = self.build_acim_pair(manifest, model)?;
+                Ok(Arc::new(AcimSession::new(acim, model.to_string())))
+            }
+        }
+    }
+
+    /// Build the programmed ACIM simulator for `model` together with the
+    /// digital reference it was programmed from — the pair the shadow
+    /// mirror needs for per-layer divergence attribution.
+    pub fn build_acim_pair(
+        &self,
+        manifest: &Manifest,
+        model: &str,
+    ) -> Result<(Arc<AcimModel>, Arc<QuantKanModel>)> {
+        let entry = manifest
+            .models
+            .get(model)
+            .ok_or_else(|| Error::Artifact(format!("model '{model}' not in manifest")))?;
+        let weights_path = self.dir.join(&entry.weights);
+        let qk = Arc::new(QuantKanModel::load(&weights_path)?);
+        let occupancy = self.occupancy_for(&qk, &weights_path)?;
+        let opts = self.cfg.hardware.acim;
+        let mappings: Vec<Vec<usize>> = occupancy
+            .iter()
+            .map(|probs| {
+                mapping::build_mapping(probs, opts.array.rows, MappingStrategy::Sam)
+            })
+            .collect();
+        let acim = AcimModel::program(&qk, opts, &mappings)?;
+        Ok((Arc::new(acim), qk))
+    }
+
+    /// Per-layer occupancy statistics for `model`, cached by weights
+    /// digest. Prefers the artifact calibration set; a registry without
+    /// one (synthetic/bench deployments) falls back to the centered-
+    /// Gaussian prior — the same fallback the engine plan uses.
+    fn occupancy_for(
+        &self,
+        model: &QuantKanModel,
+        weights_path: &Path,
+    ) -> Result<Arc<Vec<Vec<f64>>>> {
+        let key = crate::registry::digest_file(weights_path)?;
+        if let Some(hit) = self.occupancy.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        // compute outside the lock: calibration propagation is the slow
+        // part, and a concurrent identical build just recomputes
+        let probs = match Dataset::load(&self.dir) {
+            Ok(ds) => layer_occupancy(model, &ds),
+            Err(_) => model
+                .layers
+                .iter()
+                .map(|l| mapping::gaussian(l, 0.0, 0.5))
+                .collect(),
+        };
+        let arc = Arc::new(probs);
+        self.occupancy
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| arc.clone());
+        Ok(arc)
+    }
+
+    /// Number of cached occupancy entries (test hook for the
+    /// calibrate-once contract).
+    pub fn occupancy_cache_len(&self) -> usize {
+        self.occupancy.lock().unwrap().len()
+    }
+
+    /// Build the mirror executor for shadow serving `model` on `kind`.
+    ///
+    /// The ACIM mirror compares at two granularities: the full analog
+    /// forward against the served logits (argmax flip, logit MAE), and
+    /// each layer's analog output against the digital golden output *for
+    /// the same layer inputs* — isolating per-layer partial-sum error
+    /// (the paper's non-ideal-effect statistic) from compounded drift.
+    /// Any other mirror kind compares final logits only.
+    pub fn build_shadow_exec(
+        &self,
+        manifest: &Manifest,
+        model: &str,
+        kind: BackendKind,
+    ) -> Result<super::shadow::ShadowExec> {
+        use super::backend::{argmax_f32, trial_seed};
+        use super::shadow::ShadowObservation;
+        use crate::acim::NoiseModel;
+
+        fn mae32(a: &[f32], b: &[f32]) -> f64 {
+            if a.is_empty() {
+                return 0.0;
+            }
+            a.iter()
+                .zip(b)
+                .map(|(x, y)| (*x as f64 - *y as f64).abs())
+                .sum::<f64>()
+                / a.len() as f64
+        }
+
+        if kind != BackendKind::Acim {
+            let session = self.build(manifest, model, kind)?;
+            return Ok(Box::new(move |job| {
+                let out = session.run(vec![job.features.clone()], &[job.opts])?;
+                let mirror = &out[0].logits;
+                Ok(ShadowObservation {
+                    flip: argmax_f32(mirror) != argmax_f32(&job.primary),
+                    mae: mae32(mirror, &job.primary),
+                    layer_err: Vec::new(),
+                })
+            }));
+        }
+
+        let (acim, digital) = self.build_acim_pair(manifest, model)?;
+        // draw counter for unseeded jobs (embedded callers that skip the
+        // wire edge's seed resolution): without it every such mirrored
+        // row would replay one frozen noise realization and the
+        // divergence statistics would measure a single draw instead of
+        // the distribution. The worker thread owns the closure, so a
+        // plain counter suffices.
+        let mut unseeded: u64 = 0;
+        Ok(Box::new(move |job| {
+            // same seed derivation as AcimSession trial 0: an explicitly
+            // seeded request's mirror run is reproducible offline
+            let base = job.opts.seed.unwrap_or_else(|| {
+                unseeded += 1;
+                crate::util::rng::mix(acim.opts.seed ^ 0x77, unseeded)
+            });
+            let mut noise = NoiseModel::from_config(trial_seed(base, 0), &acim.opts.array);
+            let mirror64 = acim.forward(&job.features, &mut noise);
+            let mirror: Vec<f32> = mirror64.iter().map(|&v| v as f32).collect();
+
+            // per-layer partial-sum error: feed each analog layer the
+            // *golden* activations so errors do not compound across layers
+            let mut layer_err = Vec::with_capacity(acim.layers.len());
+            let mut h: Vec<f64> =
+                job.features.iter().map(|&v| v as f64).collect();
+            for (al, dl) in acim.layers.iter().zip(&digital.layers) {
+                let xq: Vec<u32> = h.iter().map(|&v| dl.spec.quantize(v)).collect();
+                let mut want = vec![0.0f64; dl.dout];
+                dl.forward_digital(&xq, &mut want);
+                let mut got = vec![0.0f64; al.dout];
+                al.forward(&xq, &acim.opts, &mut noise, &mut got);
+                let err = if want.is_empty() {
+                    0.0
+                } else {
+                    want.iter()
+                        .zip(&got)
+                        .map(|(w, g)| (w - g).abs())
+                        .sum::<f64>()
+                        / want.len() as f64
+                };
+                layer_err.push(err);
+                h = want; // golden path continues in f64
+            }
+            Ok(ShadowObservation {
+                flip: argmax_f32(&mirror) != argmax_f32(&job.primary),
+                mae: mae32(&mirror, &job.primary),
+                layer_err,
+            })
+        }))
+    }
+}
+
+/// Build the session named by `cfg.server.backend` for `model` — the
+/// single-model entry point (transient factory, no cache reuse).
+pub fn build_session(
     cfg: &AppConfig,
     manifest: &Manifest,
     model: &str,
-) -> Result<Arc<dyn InferBackend>> {
-    let dir = Path::new(&cfg.artifacts.dir);
-    let entry = manifest
-        .models
-        .get(model)
-        .ok_or_else(|| Error::Artifact(format!("model '{model}' not in manifest")))?;
+) -> Result<Arc<dyn ExecutionSession>> {
+    BackendFactory::new(cfg).build(manifest, model, cfg.server.backend)
+}
 
-    match (cfg.server.backend.as_str(), entry.kind.as_str()) {
-        (_, "mlp") => {
-            let mlp = MlpModel::load(dir.join(&entry.weights))?;
-            Ok(Arc::new(MlpBackend { model: Arc::new(mlp) }))
-        }
-        ("pjrt", _) => {
-            let batch = cfg.server.max_batch;
-            // use the largest compiled batch <= configured max
-            let mut sizes: Vec<usize> = entry.hlo.keys().copied().collect();
-            sizes.sort_unstable();
-            let chosen = sizes
-                .iter()
-                .rev()
-                .find(|&&s| s <= batch)
-                .or(sizes.first())
-                .copied()
-                .ok_or_else(|| Error::Artifact(format!("model '{model}' has no HLO")))?;
-            let file = entry.hlo.get(&chosen).expect("chosen batch exists");
-            let backend = PjrtBackend::spawn(
-                dir.join(file),
-                chosen,
-                entry.dims[0],
-                *entry.dims.last().unwrap(),
-                model.to_string(),
-            )?;
-            Ok(Arc::new(backend))
-        }
-        ("digital", _) => {
-            let qk = QuantKanModel::load(dir.join(&entry.weights))?;
-            Ok(Arc::new(DigitalBackend::with_engine(
-                Arc::new(qk),
-                cfg.server.engine,
-            )))
-        }
-        ("acim", _) => {
-            let qk = QuantKanModel::load(dir.join(&entry.weights))?;
-            let acim = build_acim(&qk, cfg.hardware.acim, dir, MappingStrategy::Sam)?;
-            Ok(Arc::new(AcimBackend::new(Arc::new(acim), model.to_string())))
-        }
-        (other, _) => Err(Error::Config(format!("unknown backend '{other}'"))),
+/// Per-layer expected word-line drive (interval occupancy) over the
+/// calibration set, with activations propagated in f64 end-to-end.
+fn layer_occupancy(model: &QuantKanModel, ds: &Dataset) -> Vec<Vec<f64>> {
+    // the dataset stores f32 rows — that is the true input precision;
+    // everything after the first quantization stays f64
+    let mut acts: Vec<Vec<f64>> = ds
+        .calib_rows()
+        .map(|r| r.iter().map(|&v| v as f64).collect())
+        .collect();
+    let mut probs = Vec::with_capacity(model.layers.len());
+    for layer in &model.layers {
+        probs.push(mapping::empirical(layer, acts.iter().map(|r| r.as_slice())));
+        // next layer's calibration inputs = this layer's digital outputs,
+        // kept in f64 (no inter-layer f32 double rounding)
+        acts = acts
+            .iter()
+            .map(|r| {
+                let xq: Vec<u32> =
+                    r.iter().map(|&v| layer.spec.quantize(v)).collect();
+                let mut out = vec![0.0; layer.dout];
+                layer.forward_digital(&xq, &mut out);
+                out
+            })
+            .collect();
     }
+    probs
 }
 
 /// Program a quantized KAN onto the ACIM simulator with the given mapping
@@ -119,30 +364,17 @@ pub fn build_acim(
     build_acim_with_calib(model, opts, &ds, strategy)
 }
 
-/// Same as [`build_acim`] but with an explicit dataset (used by benches).
+/// Same as [`build_acim`] but with an explicit dataset (used by benches
+/// and `kan-edge eval/sam`).
 pub fn build_acim_with_calib(
     model: &QuantKanModel,
     opts: AcimOptions,
     ds: &Dataset,
     strategy: MappingStrategy,
 ) -> Result<AcimModel> {
-    let mut mappings = Vec::new();
-    // propagate calibration activations layer by layer to estimate each
-    // layer's input distribution
-    let mut acts: Vec<Vec<f32>> = ds.calib_rows().map(|r| r.to_vec()).collect();
-    for layer in &model.layers {
-        let probs = mapping::empirical(layer, acts.iter().cloned());
-        mappings.push(mapping::build_mapping(&probs, opts.array.rows, strategy));
-        // next layer's calibration inputs = this layer's digital outputs
-        acts = acts
-            .iter()
-            .map(|r| {
-                let xq = layer.quantize_input(r);
-                let mut out = vec![0.0; layer.dout];
-                layer.forward_digital(&xq, &mut out);
-                out.iter().map(|&v| v as f32).collect()
-            })
-            .collect();
-    }
+    let mappings: Vec<Vec<usize>> = layer_occupancy(model, ds)
+        .iter()
+        .map(|probs| mapping::build_mapping(probs, opts.array.rows, strategy))
+        .collect();
     AcimModel::program(model, opts, &mappings)
 }

@@ -377,10 +377,16 @@ mod tests {
         SchedulerOptions { mode, client_quota: quota, fairness_window: window }
     }
 
-    fn mk_request(v: f32) -> (Request, Receiver<Result<Vec<f32>>>) {
+    fn mk_request(v: f32) -> (Request, Receiver<Result<crate::coordinator::backend::RowOutput>>)
+    {
         let (tx, rx) = sync_channel(1);
         (
-            Request { features: vec![v], enqueued: Instant::now(), respond: tx },
+            Request {
+                features: vec![v],
+                opts: crate::coordinator::backend::ExecOptions::default(),
+                enqueued: Instant::now(),
+                respond: tx,
+            },
             rx,
         )
     }

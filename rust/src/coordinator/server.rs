@@ -1,20 +1,25 @@
 //! The serving engine: admission ([`super::scheduler`]) → dynamic
-//! batcher → worker pool → backend, with metrics throughout. The public
-//! handle is [`InferenceService`], a cheap-to-clone client; `infer`
-//! blocks the calling thread (callers that need async fan-out use one
-//! thread per in-flight request, which is plenty at edge rates).
+//! batcher → worker pool → execution session, with metrics throughout.
+//! The public handle is [`InferenceService`], a cheap-to-clone client;
+//! `infer` blocks the calling thread (callers that need async fan-out
+//! use one thread per in-flight request, which is plenty at edge rates).
 //!
 //! Fairness: every submission is attributed to a [`ClientId`]. The TCP
 //! layer passes a per-connection id so one connection's burst cannot
 //! starve another's singletons under the `drr` admission policy; direct
 //! API callers that use the id-less convenience wrappers get a fresh id
 //! per call (each call is its own fairness class).
+//!
+//! Per-request execution options ([`ExecOptions`]: ACIM noise seed,
+//! trial count) are resolved at submission and ride with each row into
+//! the dynamic batch, so a batch can mix differently-optioned rows and
+//! stochastic outputs never depend on batch composition.
 
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::backend::InferBackend;
+use super::backend::{BackendKind, BackendSpec, ExecOptions, ExecutionSession, RowOutput};
 use super::batcher::{run_batcher, Batch, BatchPolicy, Request};
 use super::metrics::{Metrics, MetricsReport};
 use super::protocol::ModelSummary;
@@ -45,6 +50,24 @@ impl Default for ServeOptions {
     }
 }
 
+/// Per-request routing + execution selection, as carried by the wire
+/// layers into [`Dispatch`]: the optional model spec (`None` = default
+/// model), the optional backend kind (`None` = the model's primary
+/// backend), and the execution options.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RouteSpec {
+    pub model: Option<String>,
+    pub backend: Option<BackendKind>,
+    pub opts: ExecOptions,
+}
+
+impl RouteSpec {
+    /// Route to `model` with default backend and options.
+    pub fn to_model(model: Option<&str>) -> Self {
+        Self { model: model.map(str::to_string), ..Self::default() }
+    }
+}
+
 /// Closes the admission scheduler when the last [`InferenceService`]
 /// clone drops: the batcher drains what is queued, sees end-of-stream,
 /// exits, and the worker pool follows — channel teardown, no force-kill.
@@ -61,17 +84,16 @@ impl Drop for SchedulerCloser {
 pub struct InferenceService {
     sched: Arc<Scheduler>,
     _closer: Arc<SchedulerCloser>,
-    /// Expected row width when the backend declares one; rows are
-    /// validated at submit so one malformed request cannot poison a
-    /// shared dynamic batch carrying other clients' rows.
-    input_dim: Option<usize>,
+    /// The served session's capability descriptor: admission validates
+    /// row shapes against it, and the control plane surfaces it.
+    spec: BackendSpec,
     pub metrics: Arc<Metrics>,
 }
 
 impl InferenceService {
-    /// Spin up the batcher + worker pool over `backend`.
-    pub fn start(backend: Arc<dyn InferBackend>, opts: ServeOptions) -> Self {
-        Self::start_with_metrics(backend, opts, Arc::new(Metrics::new()))
+    /// Spin up the batcher + worker pool over `session`.
+    pub fn start(session: Arc<dyn ExecutionSession>, opts: ServeOptions) -> Self {
+        Self::start_with_metrics(session, opts, Arc::new(Metrics::new()))
     }
 
     /// Like [`InferenceService::start`] but recording into an externally
@@ -79,11 +101,11 @@ impl InferenceService {
     /// from its [`super::metrics::MetricsHub`] so reports survive
     /// hot-reload swaps.
     pub fn start_with_metrics(
-        backend: Arc<dyn InferBackend>,
+        session: Arc<dyn ExecutionSession>,
         opts: ServeOptions,
         metrics: Arc<Metrics>,
     ) -> Self {
-        let input_dim = backend.input_dim();
+        let spec = session.spec();
         let sched = Arc::new(Scheduler::new(opts.queue_depth, opts.scheduler));
         let (batch_tx, batch_rx) = sync_channel::<Batch>(opts.workers.max(1) * 2);
         let batcher_sched = sched.clone();
@@ -95,23 +117,28 @@ impl InferenceService {
         let shared_rx = Arc::new(Mutex::new(batch_rx));
         for i in 0..opts.workers.max(1) {
             let rx = shared_rx.clone();
-            let be = backend.clone();
+            let se = session.clone();
             let m = metrics.clone();
             std::thread::Builder::new()
                 .name(format!("kan-edge-worker-{i}"))
-                .spawn(move || worker_loop(rx, be, m))
+                .spawn(move || worker_loop(rx, se, m))
                 .expect("spawn worker");
         }
         let closer = Arc::new(SchedulerCloser(sched.clone()));
-        Self { sched, _closer: closer, input_dim, metrics }
+        Self { sched, _closer: closer, spec, metrics }
     }
 
-    /// Admission-time row validation: shape (when the backend declares
+    /// Capability descriptor of the session this service executes.
+    pub fn backend_spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    /// Admission-time row validation: shape (when the session declares
     /// one) and finiteness. A NaN/∞ feature must be rejected here with a
     /// structured shape error — past admission it would quantize to an
     /// arbitrary-but-valid code and yield a confident prediction.
     fn check_shape(&self, features: &[f32]) -> Result<()> {
-        if let Some(din) = self.input_dim {
+        if let Some(din) = self.spec.input_dim {
             if features.len() != din {
                 return Err(Error::Shape(format!(
                     "row has {} features, expected {din}",
@@ -140,9 +167,23 @@ impl InferenceService {
     /// rejects only on a full queue (seed behavior), `drr` also enforces
     /// the per-client quota and rejects with a retry hint.
     pub fn infer_from(&self, client: ClientId, features: Vec<f32>) -> Result<Vec<f32>> {
+        Ok(self
+            .infer_opts_from(client, features, ExecOptions::default())?
+            .logits)
+    }
+
+    /// Like [`InferenceService::infer_from`] with explicit per-request
+    /// execution options; returns the full [`RowOutput`] (logits plus
+    /// the trial spread for stochastic sessions run with `trials > 1`).
+    pub fn infer_opts_from(
+        &self,
+        client: ClientId,
+        features: Vec<f32>,
+        opts: ExecOptions,
+    ) -> Result<RowOutput> {
         self.check_shape(&features)?;
         let (tx, rx) = sync_channel(1);
-        let req = Request { features, enqueued: Instant::now(), respond: tx };
+        let req = Request { features, opts, enqueued: Instant::now(), respond: tx };
         match self.sched.try_submit(client, req) {
             Submit::Admitted => {}
             Submit::Rejected(r) => {
@@ -166,10 +207,27 @@ impl InferenceService {
         self.infer_many_from(ClientId::fresh(), rows)
     }
 
-    /// Submit many feature vectors on behalf of `client` and wait for all
-    /// logits (row order preserved). The rows hit the dynamic batcher as
-    /// one burst, so a single caller produces multi-row batches — this is
-    /// the engine behind the v2 `infer_batch` verb.
+    /// Submit many feature vectors on behalf of `client` and wait for
+    /// all logits (row order preserved).
+    pub fn infer_many_from(
+        &self,
+        client: ClientId,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok(self
+            .infer_many_opts_from(client, rows, ExecOptions::default())?
+            .into_iter()
+            .map(|o| o.logits)
+            .collect())
+    }
+
+    /// Batch submit with per-request execution options. The rows hit the
+    /// dynamic batcher as one burst, so a single caller produces
+    /// multi-row batches — this is the engine behind the v2
+    /// `infer_batch` verb. When `opts.seed` is set, row `i` derives its
+    /// own independent noise stream as `mix(seed, i)` — a function of
+    /// the *submitted* row order only, so results are identical for any
+    /// batching, interleaving, or worker count.
     ///
     /// Admission control applies to the batch head only: if the scheduler
     /// cannot take the first row the whole batch is rejected up front.
@@ -180,11 +238,12 @@ impl InferenceService {
     /// the quota caps how many of this batch's rows can ever sit in the
     /// queue, so concurrent clients keep being admitted and the
     /// round-robin drain interleaves their rows with this batch.
-    pub fn infer_many_from(
+    pub fn infer_many_opts_from(
         &self,
         client: ClientId,
         rows: Vec<Vec<f32>>,
-    ) -> Result<Vec<Vec<f32>>> {
+        opts: ExecOptions,
+    ) -> Result<Vec<RowOutput>> {
         if rows.is_empty() {
             return Err(Error::Serving("empty batch".into()));
         }
@@ -195,9 +254,15 @@ impl InferenceService {
         }
         let mut waiters = Vec::with_capacity(rows.len());
         let mut admitted_head = false;
-        for features in rows {
+        for (i, features) in rows.into_iter().enumerate() {
+            let row_opts = opts.for_row(i);
             let (tx, rx) = sync_channel(1);
-            let req = Request { features, enqueued: Instant::now(), respond: tx };
+            let req = Request {
+                features,
+                opts: row_opts,
+                enqueued: Instant::now(),
+                respond: tx,
+            };
             if !admitted_head {
                 match self.sched.try_submit(client, req) {
                     Submit::Admitted => admitted_head = true,
@@ -258,9 +323,10 @@ impl InferenceService {
 /// [`InferenceService`] or a multi-model
 /// [`crate::registry::ModelRegistry`].
 ///
-/// `dispatch` resolves the optional model spec (`None` = default model,
-/// `Some("name")` / `Some("name@version")` otherwise), runs inference,
-/// and returns the resolved model id alongside the logits so clients can
+/// `dispatch` resolves the [`RouteSpec`] — optional model spec (`None`
+/// = default model), optional [`BackendKind`] (`None` = the model's
+/// primary backend), per-request [`ExecOptions`] — runs inference, and
+/// returns the resolved model id alongside the output so clients can
 /// observe which version served them (hot-reload visibility). `client`
 /// attributes the submission for fair admission (the TCP layer passes a
 /// per-connection id).
@@ -272,27 +338,35 @@ pub trait Dispatch: Send + Sync {
     fn dispatch(
         &self,
         client: ClientId,
-        model: Option<&str>,
+        route: &RouteSpec,
         features: Vec<f32>,
-    ) -> Result<(String, Vec<f32>)>;
+    ) -> Result<(String, RowOutput)>;
 
-    /// Batch dispatch: resolve the model once, run every row, return the
-    /// resolved id with one logit vector per row (row order preserved).
+    /// Batch dispatch: resolve the route once, run every row, return the
+    /// resolved id with one output per row (row order preserved).
     /// Implementations with a dynamic batcher override this to feed it
-    /// the whole batch back-to-back.
+    /// the whole batch back-to-back. The default honors the wire
+    /// contract's per-row seed derivation (`mix(seed, i)`), so even a
+    /// loop-based implementation gives batch rows independent noise
+    /// streams.
     fn dispatch_batch(
         &self,
         client: ClientId,
-        model: Option<&str>,
+        route: &RouteSpec,
         rows: Vec<Vec<f32>>,
-    ) -> Result<(String, Vec<Vec<f32>>)> {
+    ) -> Result<(String, Vec<RowOutput>)> {
         if rows.is_empty() {
             return Err(Error::Serving("empty batch".into()));
         }
         let mut id = String::new();
         let mut out = Vec::with_capacity(rows.len());
-        for row in rows {
-            let (mid, logits) = self.dispatch(client, model, row)?;
+        for (i, row) in rows.into_iter().enumerate() {
+            let row_route = RouteSpec {
+                model: route.model.clone(),
+                backend: route.backend,
+                opts: route.opts.for_row(i),
+            };
+            let (mid, logits) = self.dispatch(client, &row_route, row)?;
             id = mid;
             out.push(logits);
         }
@@ -319,27 +393,29 @@ impl Dispatch for InferenceService {
     fn dispatch(
         &self,
         client: ClientId,
-        model: Option<&str>,
+        route: &RouteSpec,
         features: Vec<f32>,
-    ) -> Result<(String, Vec<f32>)> {
-        match model {
-            Some(m) => Err(single_model_error(m)),
-            None => Ok(("default".to_string(), self.infer_from(client, features)?)),
+    ) -> Result<(String, RowOutput)> {
+        if let Some(m) = &route.model {
+            return Err(single_model_error(m));
         }
+        self.check_backend(route.backend)?;
+        let out = self.infer_opts_from(client, features, route.opts)?;
+        Ok(("default".to_string(), out))
     }
 
     fn dispatch_batch(
         &self,
         client: ClientId,
-        model: Option<&str>,
+        route: &RouteSpec,
         rows: Vec<Vec<f32>>,
-    ) -> Result<(String, Vec<Vec<f32>>)> {
-        match model {
-            Some(m) => Err(single_model_error(m)),
-            None => {
-                Ok(("default".to_string(), self.infer_many_from(client, rows)?))
-            }
+    ) -> Result<(String, Vec<RowOutput>)> {
+        if let Some(m) = &route.model {
+            return Err(single_model_error(m));
         }
+        self.check_backend(route.backend)?;
+        let outs = self.infer_many_opts_from(client, rows, route.opts)?;
+        Ok(("default".to_string(), outs))
     }
 
     fn model_summaries(&self) -> Vec<ModelSummary> {
@@ -352,11 +428,25 @@ impl Dispatch for InferenceService {
             live: true,
             accuracy: None,
             digest: None,
+            backend: Some(super::protocol::BackendInfo::from_spec(&self.spec, None)),
         }]
     }
 
     fn metrics_reports(&self) -> Vec<(String, MetricsReport)> {
         vec![("default".to_string(), self.metrics.report())]
+    }
+}
+
+impl InferenceService {
+    /// A single-session endpoint serves exactly one backend: an explicit
+    /// request for a different one is a routing error, not silent
+    /// fallback.
+    fn check_backend(&self, requested: Option<BackendKind>) -> Result<()> {
+        match requested {
+            None => Ok(()),
+            Some(k) if k == self.spec.kind => Ok(()),
+            Some(k) => Err(backend_not_served(k, &[self.spec.kind])),
+        }
     }
 }
 
@@ -367,9 +457,19 @@ fn single_model_error(model: &str) -> Error {
     ))
 }
 
+/// Structured error for a backend the endpoint cannot execute — mapped
+/// to the `not_found` wire code (see [`super::protocol::code_for`]).
+pub fn backend_not_served(requested: BackendKind, served: &[BackendKind]) -> Error {
+    let served: Vec<&str> = served.iter().map(|k| k.as_str()).collect();
+    Error::Serving(format!(
+        "backend '{requested}' is not served here (serving: {})",
+        served.join(", ")
+    ))
+}
+
 fn worker_loop(
     rx: Arc<Mutex<Receiver<Batch>>>,
-    be: Arc<dyn InferBackend>,
+    session: Arc<dyn ExecutionSession>,
     m: Arc<Metrics>,
 ) {
     loop {
@@ -382,16 +482,18 @@ fn worker_loop(
         };
         m.record_batch(batch.len());
         let queue_wait = batch.max_queue_wait();
-        // move the feature rows out of the requests: the backend takes
+        // move the feature rows out of the requests: the session takes
         // ownership (no per-dispatch copy), the waiters keep only the
         // response channel and the enqueue timestamp
         let mut rows = Vec::with_capacity(batch.requests.len());
+        let mut opts = Vec::with_capacity(batch.requests.len());
         let mut waiters = Vec::with_capacity(batch.requests.len());
         for req in batch.requests {
             rows.push(req.features);
+            opts.push(req.opts);
             waiters.push((req.enqueued, req.respond));
         }
-        match be.infer_batch(rows) {
+        match session.run(rows, &opts) {
             Ok(outputs) => {
                 for ((enqueued, respond), out) in waiters.into_iter().zip(outputs) {
                     let latency = enqueued.elapsed();
@@ -418,32 +520,32 @@ mod tests {
     /// Backend that doubles its input.
     struct Doubler;
 
-    impl InferBackend for Doubler {
+    impl ExecutionSession for Doubler {
         fn name(&self) -> &str {
             "doubler"
         }
 
-        fn output_dim(&self) -> usize {
-            1
+        fn spec(&self) -> BackendSpec {
+            BackendSpec::synthetic(1)
         }
 
-        fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
-            Ok(rows.iter().map(|r| vec![r[0] * 2.0]).collect())
+        fn run(&self, rows: Vec<Vec<f32>>, _opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
+            Ok(rows.iter().map(|r| vec![r[0] * 2.0].into()).collect())
         }
     }
 
     struct Exploder;
 
-    impl InferBackend for Exploder {
+    impl ExecutionSession for Exploder {
         fn name(&self) -> &str {
             "exploder"
         }
 
-        fn output_dim(&self) -> usize {
-            1
+        fn spec(&self) -> BackendSpec {
+            BackendSpec::synthetic(1)
         }
 
-        fn infer_batch(&self, _rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        fn run(&self, _rows: Vec<Vec<f32>>, _opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
             Err(Error::Serving("boom".into()))
         }
     }
@@ -451,18 +553,42 @@ mod tests {
     /// Backend that sleeps per batch so queues stay occupied.
     struct Sleepy(Duration);
 
-    impl InferBackend for Sleepy {
+    impl ExecutionSession for Sleepy {
         fn name(&self) -> &str {
             "sleepy"
         }
 
-        fn output_dim(&self) -> usize {
-            1
+        fn spec(&self) -> BackendSpec {
+            BackendSpec::synthetic(1)
         }
 
-        fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        fn run(&self, rows: Vec<Vec<f32>>, _opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
             std::thread::sleep(self.0);
-            Ok(rows.iter().map(|r| vec![r[0]]).collect())
+            Ok(rows.iter().map(|r| vec![r[0]].into()).collect())
+        }
+    }
+
+    /// Backend that echoes each row's resolved seed (or -1) — proves
+    /// per-row option plumbing end to end.
+    struct SeedEcho;
+
+    impl ExecutionSession for SeedEcho {
+        fn name(&self) -> &str {
+            "seed-echo"
+        }
+
+        fn spec(&self) -> BackendSpec {
+            BackendSpec { deterministic: false, ..BackendSpec::synthetic(1) }
+        }
+
+        fn run(&self, rows: Vec<Vec<f32>>, opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
+            Ok(rows
+                .iter()
+                .zip(opts)
+                .map(|(_, o)| {
+                    vec![o.seed.map(|s| (s % 1024) as f32).unwrap_or(-1.0)].into()
+                })
+                .collect())
         }
     }
 
@@ -499,21 +625,21 @@ mod tests {
     fn shape_checked_at_admission() {
         struct Fixed;
 
-        impl InferBackend for Fixed {
+        impl ExecutionSession for Fixed {
             fn name(&self) -> &str {
                 "fixed"
             }
 
-            fn output_dim(&self) -> usize {
-                1
+            fn spec(&self) -> BackendSpec {
+                BackendSpec::exact(BackendKind::Digital, Some(2), 1)
             }
 
-            fn input_dim(&self) -> Option<usize> {
-                Some(2)
-            }
-
-            fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
-                Ok(rows.iter().map(|r| vec![r[0] + r[1]]).collect())
+            fn run(
+                &self,
+                rows: Vec<Vec<f32>>,
+                _opts: &[ExecOptions],
+            ) -> Result<Vec<RowOutput>> {
+                Ok(rows.iter().map(|r| vec![r[0] + r[1]].into()).collect())
             }
         }
 
@@ -567,6 +693,53 @@ mod tests {
             "batch submit produced singletons (mean {})",
             report.mean_batch
         );
+    }
+
+    #[test]
+    fn batch_rows_get_independent_derived_seeds() {
+        let svc = InferenceService::start(Arc::new(SeedEcho), ServeOptions::default());
+        let opts = ExecOptions { seed: Some(42), trials: 1 };
+        let outs = svc
+            .infer_many_opts_from(
+                ClientId::fresh(),
+                vec![vec![0.0], vec![0.0], vec![0.0]],
+                opts,
+            )
+            .unwrap();
+        // every row saw a seed, derived deterministically per row index
+        let seeds: Vec<f32> = outs.iter().map(|o| o.logits[0]).collect();
+        assert!(seeds.iter().all(|&s| s >= 0.0), "row lost its seed: {seeds:?}");
+        assert_ne!(seeds[0], seeds[1], "rows must not share a noise stream");
+        // resubmitting the same batch derives the same per-row seeds
+        let again = svc
+            .infer_many_opts_from(
+                ClientId::fresh(),
+                vec![vec![0.0], vec![0.0], vec![0.0]],
+                opts,
+            )
+            .unwrap();
+        assert_eq!(outs, again);
+        // unseeded rows stay unseeded
+        let outs = svc
+            .infer_many_opts_from(
+                ClientId::fresh(),
+                vec![vec![0.0]],
+                ExecOptions::default(),
+            )
+            .unwrap();
+        assert_eq!(outs[0].logits[0], -1.0);
+    }
+
+    #[test]
+    fn single_session_dispatch_rejects_other_backends() {
+        let svc = InferenceService::start(Arc::new(Doubler), ServeOptions::default());
+        let route = RouteSpec { backend: Some(BackendKind::Acim), ..Default::default() };
+        let err = svc.dispatch(ClientId::fresh(), &route, vec![1.0]).unwrap_err();
+        assert!(err.to_string().contains("not served here"), "{err}");
+        // the served kind is accepted explicitly
+        let route = RouteSpec { backend: Some(BackendKind::Digital), ..Default::default() };
+        let (_, out) = svc.dispatch(ClientId::fresh(), &route, vec![2.0]).unwrap();
+        assert_eq!(out.logits, vec![4.0]);
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! Shadow execution: mirror a sampled fraction of served traffic onto a
+//! second backend **off the response path** and record digital-vs-analog
+//! divergence ([`ShadowMetrics`]).
+//!
+//! The paper's central claim is that the RRAM-ACIM analog path holds
+//! accuracy under measured non-ideal effects; shadow serving measures
+//! exactly that on live traffic: every mirrored row is re-executed by
+//! the mirror backend (typically the ACIM simulator) and compared
+//! against the logits the primary actually served — argmax flip rate,
+//! logit MAE, and per-layer partial-sum error quantiles.
+//!
+//! Latency contract: [`ShadowState::observe`] never blocks and never
+//! fails the caller. Jobs go through a bounded queue with `try_send`;
+//! when the mirror falls behind, sampled rows are *dropped* (counted)
+//! rather than delaying a primary response. The unit test below pins
+//! this down with a mirror that blocks forever.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::Arc;
+
+use super::backend::{BackendKind, ExecOptions};
+use super::metrics::ShadowMetrics;
+use crate::error::Result;
+
+/// One sampled row queued for mirror execution: the features, the
+/// logits the primary served, and the request's execution options (the
+/// mirror derives its noise from the same seed, so a shadow comparison
+/// is reproducible).
+pub struct ShadowJob {
+    pub features: Vec<f32>,
+    pub primary: Vec<f32>,
+    pub opts: ExecOptions,
+}
+
+/// What one mirror execution observed.
+pub struct ShadowObservation {
+    /// Mirror argmax differs from the served argmax.
+    pub flip: bool,
+    /// Mean absolute logit error between mirror and served logits.
+    pub mae: f64,
+    /// Per-layer mean absolute partial-sum error (empty when the mirror
+    /// cannot attribute divergence per layer).
+    pub layer_err: Vec<f64>,
+}
+
+/// Mirror executor: runs one sampled job and returns the comparison.
+/// Boxed closure so the registry can capture whatever model pair the
+/// mirror needs (ACIM simulator + digital golden reference) and tests
+/// can inject controlled behavior.
+pub type ShadowExec = Box<dyn FnMut(&ShadowJob) -> Result<ShadowObservation> + Send>;
+
+/// A running shadow mirror for one served model.
+pub struct ShadowState {
+    /// Mirrored backend kind (control-plane visibility).
+    pub kind: BackendKind,
+    /// Fraction of primary rows sampled for mirroring, in (0, 1].
+    pub fraction: f64,
+    pub metrics: Arc<ShadowMetrics>,
+    tx: SyncSender<ShadowJob>,
+    seen: AtomicU64,
+}
+
+impl ShadowState {
+    /// Spawn the mirror worker thread. `queue` bounds in-flight jobs;
+    /// overflow drops (and counts) rather than blocking the caller.
+    pub fn spawn(
+        kind: BackendKind,
+        fraction: f64,
+        queue: usize,
+        mut exec: ShadowExec,
+    ) -> Arc<ShadowState> {
+        let metrics = Arc::new(ShadowMetrics::new());
+        let (tx, rx) = sync_channel::<ShadowJob>(queue.max(1));
+        let worker_metrics = metrics.clone();
+        let spawned = std::thread::Builder::new()
+            .name("kan-edge-shadow".into())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    match exec(&job) {
+                        Ok(obs) => worker_metrics.record_mirror(
+                            obs.flip,
+                            obs.mae,
+                            &obs.layer_err,
+                        ),
+                        Err(_) => worker_metrics.record_error(),
+                    }
+                }
+            });
+        if let Err(e) = spawned {
+            // no worker ⇒ the receiver is gone and every enqueue counts
+            // as a drop; say so once instead of degrading silently
+            eprintln!(
+                "warning: cannot spawn shadow mirror worker ({e}); every \
+                 sampled row will be counted as dropped"
+            );
+        }
+        Arc::new(ShadowState {
+            kind,
+            fraction: fraction.clamp(0.0, 1.0),
+            metrics,
+            tx,
+            seen: AtomicU64::new(0),
+        })
+    }
+
+    /// Deterministic counter-based sampler: row `n` is mirrored when the
+    /// cumulative target `floor((n+1)·f)` advances — exactly a fraction
+    /// `f` of rows, evenly spread, with no RNG on the serving path.
+    ///
+    /// Public so dispatchers can decide *before* copying anything:
+    /// consult `presample` per row and clone only the selected ones —
+    /// the serving path must not pay a copy for the ~`1-f` of rows the
+    /// sampler will discard. Metrics are recorded at
+    /// [`Self::enqueue`], so a row presampled but never enqueued (its
+    /// dispatch failed) leaves the counters consistent.
+    pub fn presample(&self) -> bool {
+        let n = self.seen.fetch_add(1, Ordering::Relaxed);
+        let f = self.fraction;
+        ((n + 1) as f64 * f).floor() > (n as f64 * f).floor()
+    }
+
+    /// Hand a presampled row to the mirror. Non-blocking by contract:
+    /// enqueue or drop, never wait — the primary response is already on
+    /// its way to the client and must not gain latency here.
+    pub fn enqueue(&self, features: Vec<f32>, primary: Vec<f32>, opts: ExecOptions) {
+        self.metrics.record_sampled();
+        let job = ShadowJob { features, primary, opts };
+        match self.tx.try_send(job) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.metrics.record_dropped();
+            }
+        }
+    }
+
+    /// Convenience `presample` + `enqueue` for single-row callers.
+    pub fn observe(&self, features: &[f32], primary: &[f32], opts: ExecOptions) {
+        if self.presample() {
+            self.enqueue(features.to_vec(), primary.to_vec(), opts);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    fn counting_exec() -> ShadowExec {
+        Box::new(|job| {
+            Ok(ShadowObservation {
+                flip: job.features[0] < 0.0,
+                mae: 0.5,
+                layer_err: vec![0.1, 0.2],
+            })
+        })
+    }
+
+    #[test]
+    fn sampler_hits_the_configured_fraction() {
+        let s = ShadowState::spawn(BackendKind::Acim, 0.25, 64, counting_exec());
+        for i in 0..1000 {
+            s.observe(&[i as f32], &[0.0], ExecOptions::default());
+        }
+        // deterministic sampler: exactly a quarter selected
+        assert_eq!(s.metrics.report().sampled, 250);
+        // fraction 1.0 mirrors everything
+        let all = ShadowState::spawn(BackendKind::Acim, 1.0, 2000, counting_exec());
+        for i in 0..100 {
+            all.observe(&[i as f32], &[0.0], ExecOptions::default());
+        }
+        assert_eq!(all.metrics.report().sampled, 100);
+    }
+
+    #[test]
+    fn mirror_records_divergence() {
+        let s = ShadowState::spawn(BackendKind::Acim, 1.0, 64, counting_exec());
+        for i in 0..8 {
+            let x = if i % 2 == 0 { 1.0 } else { -1.0 };
+            s.observe(&[x], &[0.0], ExecOptions::default());
+        }
+        // wait for the worker to drain (bounded)
+        let t0 = Instant::now();
+        while s.metrics.report().mirrored < 8 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "mirror never drained");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let r = s.metrics.report();
+        assert_eq!(r.mirrored, 8);
+        assert_eq!(r.argmax_flips, 4);
+        assert_eq!(r.layer_err_quantiles.len(), 2);
+    }
+
+    #[test]
+    fn observe_never_blocks_even_when_the_mirror_hangs() {
+        // a mirror that never completes: the queue fills, and every
+        // further observe must return immediately as a counted drop
+        let blocked: ShadowExec = Box::new(|_job| {
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        });
+        let s = ShadowState::spawn(BackendKind::Acim, 1.0, 2, blocked);
+        let t0 = Instant::now();
+        for i in 0..100 {
+            s.observe(&[i as f32], &[0.0], ExecOptions::default());
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "observe blocked on a wedged mirror: {:?}",
+            t0.elapsed()
+        );
+        let r = s.metrics.report();
+        assert_eq!(r.sampled, 100);
+        // queue depth 2 (+1 in the worker's hands): nearly everything dropped
+        assert!(r.dropped >= 96, "dropped {}", r.dropped);
+        assert_eq!(r.mirrored, 0);
+    }
+}

@@ -31,13 +31,14 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use super::backend::{argmax_f32, BackendKind, ExecOptions};
 use super::metrics::WireMetrics;
 use super::protocol::{
     self, error_response, read_frame, write_frame, ErrorCode, FrameRead, Request,
-    Response,
+    Response, WireRow,
 };
 use super::scheduler::ClientId;
-use super::server::Dispatch;
+use super::server::{Dispatch, RouteSpec};
 use crate::error::{Error, Result};
 use crate::util::json::{obj, Value};
 
@@ -324,12 +325,44 @@ fn error_reply(msg: impl Into<String>) -> Value {
     obj(vec![("error", Value::Str(msg.into()))])
 }
 
+/// A fresh noise seed for unseeded requests, resolved once at the wire
+/// edge so the primary execution and any shadow mirror of the same row
+/// share one concrete draw. Unseeded traffic carries no
+/// reproducibility contract, but it must still *sample the noise
+/// distribution*: a fixed fallback — or one keyed to the client-chosen
+/// request id, which restarts at 1 on every connection — would make
+/// unseeded ACIM responses (and their shadow comparisons) replay a
+/// handful of noise realizations, silently biasing exactly the
+/// statistics shadow serving measures.
+fn fresh_unseeded_seed() -> u64 {
+    use std::sync::atomic::AtomicU64;
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    crate::util::rng::mix(0x5EED_C0DE, NEXT.fetch_add(1, Ordering::Relaxed))
+}
+
 /// Pure v1 request→response mapping (unit-testable without sockets).
 pub fn respond(line: &str, client: ClientId, target: &dyn Dispatch) -> Value {
     let parsed = match Value::parse(line) {
         Ok(v) => v,
         Err(_) => return error_reply("bad request: not valid JSON"),
     };
+    // v1 has no per-request execution surface; a request that names one
+    // must get a structured refusal, not a silent drop of the option
+    // (the caller clearly expected it to take effect)
+    for field in ["backend", "seed", "trials"] {
+        if parsed.get(field).is_some() {
+            return obj(vec![
+                (
+                    "error",
+                    Value::Str(format!(
+                        "'{field}' requires protocol v2 (per-request execution \
+                         options are not part of the v1 JSON-lines protocol)"
+                    )),
+                ),
+                ("code", Value::Str(ErrorCode::Unsupported.as_str().into())),
+            ]);
+        }
+    }
     let features = match parsed.f32_vec("features") {
         Ok(f) => f,
         Err(_) => {
@@ -341,11 +374,17 @@ pub fn respond(line: &str, client: ClientId, target: &dyn Dispatch) -> Value {
         Some(Value::Str(s)) => Some(s.as_str()),
         Some(_) => return error_reply("bad request: 'model' must be a string"),
     };
-    match target.dispatch(client, model, features) {
-        Ok((id, logits)) => {
-            let pred = argmax_f32(&logits);
+    // v1 names no seed, so give the request its own draw (see
+    // fresh_unseeded_seed); deterministic backends ignore it
+    let route = RouteSpec {
+        opts: ExecOptions { seed: Some(fresh_unseeded_seed()), trials: 1 },
+        ..RouteSpec::to_model(model)
+    };
+    match target.dispatch(client, &route, features) {
+        Ok((id, out)) => {
+            let pred = argmax_f32(&out.logits);
             let items: Vec<Value> =
-                logits.iter().map(|&v| Value::Float(v as f64)).collect();
+                out.logits.iter().map(|&v| Value::Float(v as f64)).collect();
             obj(vec![
                 ("logits", Value::Array(items)),
                 ("class", Value::Int(pred as i64)),
@@ -362,19 +401,6 @@ pub fn respond(line: &str, client: ClientId, target: &dyn Dispatch) -> Value {
         ]),
         Err(e) => error_reply(e.to_string()),
     }
-}
-
-/// Index of the maximum logit (first on ties) without the per-row
-/// `Vec<f64>` widening a round-trip through [`crate::kan::model::argmax`]
-/// would cost — this runs once per row of every batch response.
-fn argmax_f32(logits: &[f32]) -> usize {
-    let mut best = 0usize;
-    for (i, &x) in logits.iter().enumerate().skip(1) {
-        if x > logits[best] {
-            best = i;
-        }
-    }
-    best
 }
 
 /// Best-effort discard of whatever the peer is still sending before an
@@ -445,6 +471,27 @@ impl Drop for InFlightPermit {
 enum Work {
     One { features: Vec<f32> },
     Batch { rows: Vec<Vec<f32>> },
+}
+
+/// Resolve the wire-level execution fields into a [`RouteSpec`]: an
+/// explicit `seed` passes through verbatim (the fixed-`(row, seed)`
+/// reproducibility contract), an absent one resolves to a fresh
+/// server-side draw here at the edge — see [`fresh_unseeded_seed`] —
+/// so every unseeded request gets its own noise stream regardless of
+/// protocol or connection churn.
+fn route_for(
+    model: Option<String>,
+    backend: Option<BackendKind>,
+    exec: ExecOptions,
+) -> RouteSpec {
+    RouteSpec {
+        model,
+        backend,
+        opts: ExecOptions {
+            seed: Some(exec.seed.unwrap_or_else(fresh_unseeded_seed)),
+            trials: exec.trials,
+        },
+    }
 }
 
 /// Shared state of one v2 connection.
@@ -619,14 +666,16 @@ impl V2Conn {
                 })
                 .is_ok()
             }
-            Request::Infer { id, model, features } => {
+            Request::Infer { id, model, backend, exec, features } => {
                 self.wire.record_v2_infer(1);
-                self.dispatch_async(id, model, Work::One { features });
+                let route = route_for(model, backend, exec);
+                self.dispatch_async(id, route, Work::One { features });
                 true
             }
-            Request::InferBatch { id, model, rows } => {
+            Request::InferBatch { id, model, backend, exec, rows } => {
                 self.wire.record_v2_infer(rows.len() as u64);
-                self.dispatch_async(id, model, Work::Batch { rows });
+                let route = route_for(model, backend, exec);
+                self.dispatch_async(id, route, Work::Batch { rows });
                 true
             }
         }
@@ -636,7 +685,7 @@ impl V2Conn {
     /// frames (pipelining); responses are written as they complete, out
     /// of order. Blocks for backpressure once `max_in_flight` dispatches
     /// are outstanding on this connection.
-    fn dispatch_async(&self, id: i64, model: Option<String>, work: Work) {
+    fn dispatch_async(&self, id: i64, route: RouteSpec, work: Work) {
         let depth = self.in_flight.acquire();
         self.wire.observe_in_flight(depth as u64);
         let permit = InFlightPermit(self.in_flight.clone());
@@ -651,7 +700,7 @@ impl V2Conn {
                 // stays healthy, so without a frame the client would wait
                 // on this id forever
                 let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                    || run_work(id, client, model, work, target.as_ref()),
+                    || run_work(id, client, route, work, target.as_ref()),
                 ))
                 .unwrap_or_else(|_| Response::Error {
                     id: Some(id),
@@ -678,62 +727,55 @@ impl V2Conn {
 fn run_work(
     id: i64,
     client: ClientId,
-    model: Option<String>,
+    route: RouteSpec,
     work: Work,
     target: &dyn Dispatch,
 ) -> Response {
+    fn wire_row(out: crate::coordinator::backend::RowOutput) -> WireRow {
+        let class = argmax_f32(&out.logits);
+        WireRow { logits: out.logits, class, std: out.trial_std }
+    }
     match work {
-        Work::One { features } => {
-            match target.dispatch(client, model.as_deref(), features) {
-                Ok((mid, logits)) => {
-                    let class = argmax_f32(&logits);
-                    Response::Infer { id, model: mid, logits, class }
-                }
-                Err(e) => error_response(Some(id), &e),
+        Work::One { features } => match target.dispatch(client, &route, features) {
+            Ok((mid, out)) => Response::Infer { id, model: mid, row: wire_row(out) },
+            Err(e) => error_response(Some(id), &e),
+        },
+        Work::Batch { rows } => match target.dispatch_batch(client, &route, rows) {
+            Ok((mid, outs)) => {
+                let results = outs.into_iter().map(wire_row).collect();
+                Response::InferBatch { id, model: mid, results }
             }
-        }
-        Work::Batch { rows } => {
-            match target.dispatch_batch(client, model.as_deref(), rows) {
-                Ok((mid, outs)) => {
-                    let results = outs
-                        .into_iter()
-                        .map(|logits| {
-                            let class = argmax_f32(&logits);
-                            (logits, class)
-                        })
-                        .collect();
-                    Response::InferBatch { id, model: mid, results }
-                }
-                Err(e) => error_response(Some(id), &e),
-            }
-        }
+            Err(e) => error_response(Some(id), &e),
+        },
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::InferBackend;
+    use crate::coordinator::backend::{
+        BackendSpec, ExecutionSession, RowOutput,
+    };
     use crate::coordinator::server::{InferenceService, ServeOptions};
     use crate::error::{Error, Result};
 
     struct Sum;
 
-    impl InferBackend for Sum {
+    impl ExecutionSession for Sum {
         fn name(&self) -> &str {
             "sum"
         }
 
-        fn output_dim(&self) -> usize {
-            2
+        fn spec(&self) -> BackendSpec {
+            BackendSpec::synthetic(2)
         }
 
-        fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        fn run(&self, rows: Vec<Vec<f32>>, _opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
             Ok(rows
                 .iter()
                 .map(|r| {
                     let s: f32 = r.iter().sum();
-                    vec![s, -s]
+                    vec![s, -s].into()
                 })
                 .collect())
         }
@@ -754,13 +796,13 @@ mod tests {
         fn dispatch(
             &self,
             _client: ClientId,
-            model: Option<&str>,
+            route: &RouteSpec,
             features: Vec<f32>,
-        ) -> Result<(String, Vec<f32>)> {
+        ) -> Result<(String, RowOutput)> {
             let s: f32 = features.iter().sum();
-            match model.unwrap_or("pos") {
-                "pos" => Ok(("pos@1".into(), vec![s, -s])),
-                "neg" => Ok(("neg@2".into(), vec![-s, s])),
+            match route.model.as_deref().unwrap_or("pos") {
+                "pos" => Ok(("pos@1".into(), vec![s, -s].into())),
+                "neg" => Ok(("neg@2".into(), vec![-s, s].into())),
                 other => Err(Error::Registry(format!("model '{other}' not found"))),
             }
         }
@@ -820,6 +862,24 @@ mod tests {
     }
 
     #[test]
+    fn v1_rejects_per_request_execution_options() {
+        let svc = svc();
+        for body in [
+            r#"{"features": [1.0], "backend": "acim"}"#,
+            r#"{"features": [1.0], "seed": 42}"#,
+            r#"{"features": [1.0], "trials": 8}"#,
+        ] {
+            let v = respond(body, ClientId::fresh(), svc.as_ref());
+            let err = v.get("error").unwrap().as_str().unwrap();
+            assert!(err.contains("protocol v2"), "{body}: {err}");
+            assert_eq!(v.get("code").unwrap().as_str().unwrap(), "unsupported");
+        }
+        // plain v1 traffic is untouched
+        let v = respond(r#"{"features": [1.0]}"#, ClientId::fresh(), svc.as_ref());
+        assert!(v.get("error").is_none());
+    }
+
+    #[test]
     fn v1_overloaded_reply_is_structured() {
         /// Always-overloaded target.
         struct Full;
@@ -828,9 +888,9 @@ mod tests {
             fn dispatch(
                 &self,
                 _client: ClientId,
-                _model: Option<&str>,
+                _route: &RouteSpec,
                 _features: Vec<f32>,
-            ) -> Result<(String, Vec<f32>)> {
+            ) -> Result<(String, RowOutput)> {
                 Err(Error::Overloaded {
                     message: "client quota exceeded (4/4 rows in queue)".into(),
                     retry_after_ms: 9,

@@ -22,9 +22,12 @@ use std::sync::Arc;
 
 use kan_edge::acim::{AcimOptions, ArrayConfig};
 use kan_edge::circuits::{fig10_sweep, fig11_comparison, Tech};
-use kan_edge::client::KanClient;
+use kan_edge::client::{CallOptions, KanClient};
 use kan_edge::config::AppConfig;
-use kan_edge::coordinator::{build_acim_with_calib, build_backend, tcp_limits, Dispatch};
+use kan_edge::coordinator::{
+    build_acim_with_calib, build_session, tcp_limits, BackendKind, Dispatch,
+    ExecutionSession,
+};
 use kan_edge::error::Result;
 use kan_edge::kan::checkpoint::{Dataset, Manifest};
 use kan_edge::kan::QuantKanModel;
@@ -46,12 +49,14 @@ COMMANDS:
   bench-net [--requests N] [--batch B] [--window W]
             [--tenants T] [--mix-requests M] [--mix-batch R]
             [--mix-queue Q] [--json FILE] [--skip-mixed] [--mixed-only]
-            [--skip-hotpath]
+            [--skip-hotpath] [--skip-shadow]
                                                served throughput: v1 vs v2,
                                                the digital engine-off-vs-on
-                                               hot-path phase, plus the
-                                               mixed-tenant fifo-vs-drr
-                                               fairness comparison
+                                               hot-path phase, the digital-
+                                               vs-ACIM shadow-divergence
+                                               phase, plus the mixed-tenant
+                                               fifo-vs-drr fairness
+                                               comparison
   eval      --model NAME --backend B           accuracy on the test set
                                                (B: digital = planned engine,
                                                digital-ref = scalar golden
@@ -386,7 +391,7 @@ fn spawn_bench_server_with(
     let mut cfg = cfg.clone();
     cfg.artifacts.dir = dir.to_string_lossy().into_owned();
     cfg.artifacts.model = "bench".into();
-    cfg.server.backend = "digital".into();
+    cfg.server.backend = BackendKind::Digital;
     let registry = ModelRegistry::open(&cfg)?;
     let src = dir.join("bench.incoming.json");
     std::fs::write(&src, ckpt_json)?;
@@ -442,6 +447,117 @@ fn run_hotpath_mode(
     server.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
     Ok(requests as f64 / secs.max(1e-9))
+}
+
+/// Digital-vs-ACIM served phase: serve a synthetic KAN with the digital
+/// primary mirrored by an ACIM shadow (fraction 0.5), drive digital
+/// traffic plus a burst of per-request `backend: "acim"` infers, wait
+/// for the mirror to drain, and report served throughput per backend
+/// alongside the online divergence statistics the shadow collected —
+/// the paper's non-ideal-effect numbers measured from the serving loop.
+fn run_shadow_phase(
+    cfg: &AppConfig,
+    requests: usize,
+    batch: usize,
+) -> Result<kan_edge::util::json::Value> {
+    use kan_edge::util::json::{obj, Value};
+    use std::time::{Duration, Instant};
+
+    let mut cfg = cfg.clone();
+    cfg.server.shadow.backend = Some(BackendKind::Acim);
+    cfg.server.shadow.fraction = 0.5;
+    cfg.server.shadow.queue = 4096;
+    // a checkpoint with real spline mass (the [2,2] routing fixture has
+    // all-zero coefficients, which an analog crossbar reproduces exactly)
+    let ckpt = kan_edge::kan::checkpoint::synthetic_kan_checkpoint(
+        "bench",
+        &[8, 8, 4],
+        5,
+        3,
+        0x5AD,
+    );
+    let (dir, server) =
+        spawn_bench_server_with(&cfg, "shadow", &ckpt.to_value().to_string())?;
+    let mut client = KanClient::connect(server.addr)?;
+    let mut lg = kan_edge::data::LoadGen::new(0x5AD0, 8);
+    client.infer(&lg.next_vec())?; // load the pipeline
+
+    // digital primary traffic (mirrored at the configured fraction)
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < requests {
+        let n = batch.min(requests - done);
+        client.infer_batch(None, lg.batch(n))?;
+        done += n;
+    }
+    let digital_rps = requests as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // explicit per-request ACIM selection on the same connection
+    let acim_requests = (requests / 10).max(20);
+    let opts = CallOptions {
+        backend: Some(BackendKind::Acim),
+        seed: Some(0xCAB),
+        trials: 1,
+    };
+    let t0 = Instant::now();
+    for _ in 0..acim_requests {
+        client.infer_opts(None, &lg.next_vec(), &opts)?;
+    }
+    let acim_rps = acim_requests as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // wait (bounded) for the mirror queue to drain so the report covers
+    // every sampled row
+    let shadow_of = |client: &mut KanClient| -> Result<Option<Value>> {
+        let body = client.metrics()?;
+        Ok(body
+            .field("models")?
+            .get("bench@1")
+            .and_then(|m| m.get("shadow"))
+            .cloned())
+    };
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut shadow = shadow_of(&mut client)?;
+    while Instant::now() < deadline {
+        let done = shadow.as_ref().is_some_and(|s| {
+            let count = |k: &str| s.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+            count("mirrored") + count("dropped") + count("errors") >= count("sampled")
+        });
+        if done {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        shadow = shadow_of(&mut client)?;
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    let shadow = shadow.unwrap_or(Value::Null);
+
+    println!(
+        "\nshadow phase: digital primary + acim mirror (fraction 0.5), \
+         {requests} digital + {acim_requests} acim-selected requests"
+    );
+    println!("  digital     {digital_rps:>11.0} req/s");
+    println!("  acim        {acim_rps:>11.0} req/s (per-request backend selection)");
+    if let Some(s) = shadow.as_object() {
+        let geti = |k: &str| s.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+        let getf = |k: &str| s.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!(
+            "  mirrored {} of {} sampled ({} dropped); argmax flip rate {:.4}, \
+             logit MAE mean {:.5} (p99 {:.5})",
+            geti("mirrored"),
+            geti("sampled"),
+            geti("dropped"),
+            getf("flip_rate"),
+            getf("logit_mae_mean"),
+            getf("logit_mae_p99"),
+        );
+    }
+    Ok(obj(vec![
+        ("digital_rps", Value::Float(digital_rps)),
+        ("acim_rps", Value::Float(acim_rps)),
+        ("acim_requests", Value::Int(acim_requests as i64)),
+        ("divergence", shadow),
+    ]))
 }
 
 /// One policy's mixed-tenant measurements.
@@ -638,6 +754,7 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
     let mixed_only = args.opts.contains_key("mixed-only");
     let skip_mixed = args.opts.contains_key("skip-mixed");
     let skip_hotpath = args.opts.contains_key("skip-hotpath");
+    let skip_shadow = args.opts.contains_key("skip-shadow");
 
     let mut phases: Vec<(String, f64, f64)> = Vec::new();
     if !mixed_only {
@@ -755,6 +872,12 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
         }
     }
 
+    // digital-vs-ACIM served phase with online shadow divergence
+    let mut shadow_report = kan_edge::util::json::Value::Null;
+    if !mixed_only && !skip_shadow {
+        shadow_report = run_shadow_phase(cfg, requests.min(400), batch)?;
+    }
+
     let mut mixed: Vec<MixedPolicyReport> = Vec::new();
     if !skip_mixed {
         println!(
@@ -826,6 +949,7 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
         let report = obj(vec![
             ("phases", arr(phase_values)),
             ("hotpath", arr(hotpath_values)),
+            ("shadow", shadow_report),
             (
                 "mixed",
                 obj(vec![
@@ -879,8 +1003,8 @@ fn eval(cfg: &AppConfig, model: &str, backend: &str) -> Result<()> {
         }
         ("pjrt", _) => {
             let mut cfg2 = cfg.clone();
-            cfg2.server.backend = "pjrt".into();
-            let be = build_backend(&cfg2, &manifest, model)?;
+            cfg2.server.backend = BackendKind::Pjrt;
+            let be = build_session(&cfg2, &manifest, model)?;
             eval_backend(be, &ds)
         }
         (other, _) => {
@@ -891,10 +1015,10 @@ fn eval(cfg: &AppConfig, model: &str, backend: &str) -> Result<()> {
     Ok(())
 }
 
-fn eval_backend(be: Arc<dyn kan_edge::coordinator::InferBackend>, ds: &Dataset) -> f64 {
+fn eval_backend(be: Arc<dyn ExecutionSession>, ds: &Dataset) -> f64 {
     let rows: Vec<Vec<f32>> = ds.test_rows().map(|(r, _)| r.to_vec()).collect();
     let labels: Vec<u32> = ds.test_rows().map(|(_, y)| y).collect();
-    let outs = be.infer_batch(rows).expect("inference failed");
+    let outs = be.infer_logits(rows).expect("inference failed");
     let correct = outs
         .iter()
         .zip(&labels)

@@ -19,13 +19,22 @@ use crate::kan::layer::QuantKanLayer;
 /// drive* rather than the on/off frequency weights frequently-hit, strongly
 /// driven rows highest — those carry the most charge and therefore matter
 /// most under IR-drop.
-pub fn empirical(layer: &QuantKanLayer, calib: impl Iterator<Item = Vec<f32>>) -> Vec<f64> {
+///
+/// Calibration rows arrive as `f64`: the caller propagates activations
+/// through the digital reference without any `f32` truncation, so the
+/// interval occupancy counted here matches the codes serving computes
+/// (an `f32` round trip is a double rounding that can flip a code at a
+/// level boundary).
+pub fn empirical<'a>(
+    layer: &QuantKanLayer,
+    calib: impl Iterator<Item = &'a [f64]>,
+) -> Vec<f64> {
     let nb = layer.spec.num_basis();
     let mut acc = vec![0.0f64; layer.din * nb];
     let mut n = 0usize;
     for row in calib {
         assert_eq!(row.len(), layer.din);
-        let xq = layer.quantize_input(&row);
+        let xq: Vec<u32> = row.iter().map(|&v| layer.spec.quantize(v)).collect();
         let drives = layer.wordline_drives(&xq);
         for (slot, &d) in drives.iter().enumerate() {
             acc[slot] += d as f64 / 255.0;
@@ -119,10 +128,10 @@ mod tests {
     fn empirical_matches_structure() {
         let layer = toy_layer(5, 3, 2, 1);
         // calibration set concentrated near x = 0 (grid center)
-        let calib: Vec<Vec<f32>> = (0..200)
-            .map(|i| vec![0.05 * ((i % 9) as f32 - 4.0) / 4.0; 2])
+        let calib: Vec<Vec<f64>> = (0..200)
+            .map(|i| vec![0.05 * ((i % 9) as f64 - 4.0) / 4.0; 2])
             .collect();
-        let probs = empirical(&layer, calib.into_iter());
+        let probs = empirical(&layer, calib.iter().map(|r| r.as_slice()));
         let nb = layer.spec.num_basis();
         // central rows should dominate extreme rows for both inputs
         for i in 0..2 {
@@ -136,7 +145,7 @@ mod tests {
     #[test]
     fn empirical_handles_empty_calibration() {
         let layer = toy_layer(5, 3, 2, 1);
-        let probs = empirical(&layer, std::iter::empty());
+        let probs = empirical(&layer, std::iter::empty::<&[f64]>());
         assert!(probs.iter().all(|&p| p == 0.0));
     }
 }

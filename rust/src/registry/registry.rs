@@ -33,14 +33,18 @@ use super::lru::Lru;
 use super::manifest::{ModelManifest, ModelMeta};
 use super::store::{verify_file, ArtifactStore};
 use crate::config::AppConfig;
+use crate::coordinator::backend::{BackendKind, BackendSpec, RowOutput};
 use crate::coordinator::metrics::{MetricsHub, MetricsReport};
-use crate::coordinator::protocol::ModelSummary;
-use crate::coordinator::router::{build_backend, serve_options};
+use crate::coordinator::protocol::{BackendInfo, ModelSummary};
+use crate::coordinator::router::{serve_options, BackendFactory};
 use crate::coordinator::scheduler::ClientId;
-use crate::coordinator::server::{Dispatch, InferenceService};
+use crate::coordinator::server::{Dispatch, InferenceService, RouteSpec};
+use crate::coordinator::shadow::ShadowState;
 use crate::error::{Error, Result};
 
-/// One live (servable) model version.
+/// One live (servable) model version: the primary pipeline plus the
+/// variant's *backend set* — lazily built pipelines for per-request
+/// backend selection and the optional shadow mirror.
 pub struct ServedModel {
     /// `name@version` serving id.
     pub id: String,
@@ -48,8 +52,23 @@ pub struct ServedModel {
     pub version: u32,
     /// Content digest of the weights the backend was built from.
     pub digest: String,
-    /// This variant's private batcher + worker pool.
+    /// The primary backend's private batcher + worker pool.
     pub svc: InferenceService,
+    /// Capability descriptor of the primary session.
+    pub spec: BackendSpec,
+    /// Shadow mirror sampling primary traffic off the response path.
+    pub shadow: Option<Arc<ShadowState>>,
+    /// The manifest snapshot this variant was built from. Per-request
+    /// backend pipelines build against *this*, not the registry's
+    /// current manifest — during a hot reload the in-memory manifest
+    /// already points at the next version, and an extra pipeline built
+    /// from it would serve new weights under the old `name@version`.
+    manifest: crate::kan::checkpoint::Manifest,
+    /// Pipelines for per-request backend selection, built on first
+    /// request for each kind. Each gets its own batcher + worker pool,
+    /// so batches stay keyed by `(model, backend)` and mixed traffic on
+    /// one connection batches correctly per backend.
+    extra: Mutex<BTreeMap<BackendKind, InferenceService>>,
 }
 
 /// CLI-facing summary of one registered model.
@@ -75,6 +94,10 @@ pub struct ModelRegistry {
     dir: PathBuf,
     store: ArtifactStore,
     hub: MetricsHub,
+    /// Session compiler shared across variants: its calibration-
+    /// occupancy cache makes hot reloads and mirror builds of unchanged
+    /// weights skip recalibration.
+    factory: BackendFactory,
     inner: RwLock<Inner>,
     lru: Mutex<Lru<String>>,
 }
@@ -106,9 +129,16 @@ impl ModelRegistry {
             dir,
             store,
             hub: MetricsHub::new(),
+            factory: BackendFactory::new(cfg),
             inner: RwLock::new(Inner { manifest, live: BTreeMap::new() }),
             lru: Mutex::new(Lru::new(cfg.registry.max_loaded)),
         }))
+    }
+
+    /// The session factory (test hook: its occupancy cache proves the
+    /// calibrate-once contract).
+    pub fn factory(&self) -> &BackendFactory {
+        &self.factory
     }
 
     pub fn store(&self) -> &ArtifactStore {
@@ -145,9 +175,24 @@ impl ModelRegistry {
         out
     }
 
-    /// Per-model metrics reports (includes retired versions).
+    /// Per-model metrics reports (includes retired versions). Live
+    /// models running a shadow mirror get their divergence report
+    /// attached under `shadow`.
     pub fn metrics(&self) -> Vec<(String, MetricsReport)> {
-        self.hub.reports()
+        let mut reports = self.hub.reports();
+        let shadows: BTreeMap<String, Arc<ShadowState>> = {
+            let g = self.inner.read().unwrap();
+            g.live
+                .values()
+                .filter_map(|s| s.shadow.clone().map(|sh| (s.id.clone(), sh)))
+                .collect()
+        };
+        for (id, report) in reports.iter_mut() {
+            if let Some(sh) = shadows.get(id) {
+                report.shadow = Some(sh.metrics.report());
+            }
+        }
+        reports
     }
 
     /// Exact rollup across all models and versions.
@@ -182,29 +227,110 @@ impl ModelRegistry {
             }
             None => digest::digest_file(&weights_path)?,
         };
-        let backend = build_backend(&self.cfg, &manifest, name)?;
+        let session = self.factory.build(&manifest, name, self.cfg.server.backend)?;
+        let spec = session.spec();
         // cross-check backend output shape against the manifest entry
         let declared_out = *entry.dims.last().unwrap_or(&0);
-        if backend.output_dim() != declared_out {
+        if spec.output_dim != declared_out {
             return Err(Error::Shape(format!(
                 "model '{name}': weights produce {} outputs but manifest dims \
                  end in {declared_out}",
-                backend.output_dim()
+                spec.output_dim
             )));
         }
         let id = format!("{name}@{}", meta.version);
         let svc = InferenceService::start_with_metrics(
-            backend,
+            session,
             serve_options(&self.cfg),
             self.hub.for_model(&id),
         );
+        // optional shadow mirror: a build failure (e.g. a kind this
+        // artifact cannot back) degrades to primary-only serving with a
+        // warning — shadow observability must never take a model down
+        let shadow = match self.cfg.server.shadow.backend {
+            Some(kind) if kind != spec.kind => {
+                match self.factory.build_shadow_exec(&manifest, name, kind) {
+                    Ok(exec) => Some(ShadowState::spawn(
+                        kind,
+                        self.cfg.server.shadow.fraction,
+                        self.cfg.server.shadow.queue,
+                        exec,
+                    )),
+                    Err(e) => {
+                        eprintln!(
+                            "warning: shadow '{kind}' for '{id}' failed to build \
+                             ({e}); serving without a mirror"
+                        );
+                        None
+                    }
+                }
+            }
+            _ => None,
+        };
         Ok(Arc::new(ServedModel {
             id,
             name: name.to_string(),
             version: meta.version,
             digest: file_digest,
             svc,
+            spec,
+            shadow,
+            manifest,
+            extra: Mutex::new(BTreeMap::new()),
         }))
+    }
+
+    /// The pipeline executing `backend` for `served`: the primary when
+    /// `backend` is `None` or names the primary's kind, else a
+    /// per-kind pipeline from the variant's backend set, built on first
+    /// use (its session comes from the shared factory, so e.g. an ACIM
+    /// mirror reuses cached calibration occupancy).
+    fn service_for(
+        &self,
+        served: &Arc<ServedModel>,
+        backend: Option<BackendKind>,
+    ) -> Result<InferenceService> {
+        let kind = match backend {
+            None => return Ok(served.svc.clone()),
+            Some(k) if k == served.spec.kind => return Ok(served.svc.clone()),
+            Some(k) => k,
+        };
+        if let Some(svc) = served.extra.lock().unwrap().get(&kind) {
+            return Ok(svc.clone());
+        }
+        // build outside the lock (slow: reads weights, may calibrate)
+        // and from the variant's own manifest snapshot — never the
+        // registry's current one, which may already describe the next
+        // version mid-hot-reload. Losing a race just builds twice and
+        // keeps the first insert.
+        let session = self
+            .factory
+            .build(&served.manifest, &served.name, kind)
+            .map_err(|e| match e {
+                // requesting a kind this deployment cannot execute — the
+                // artifact cannot back it (Artifact) or the executor
+                // cannot come up at all, e.g. a pjrt-less build
+                // (Runtime) — is a routing error, shaped like the
+                // single-endpoint refusal so it maps to `not_found`
+                // rather than a retryable `internal`
+                Error::Artifact(m) | Error::Runtime(m) => Error::Serving(format!(
+                    "backend '{kind}' is not served here for '{}': {m}",
+                    served.name
+                )),
+                other => other,
+            })?;
+        let svc = InferenceService::start_with_metrics(
+            session,
+            serve_options(&self.cfg),
+            self.hub.for_model(&format!("{}+{kind}", served.id)),
+        );
+        Ok(served
+            .extra
+            .lock()
+            .unwrap()
+            .entry(kind)
+            .or_insert(svc)
+            .clone())
     }
 
     /// The live pipeline for `name`, loading it on first use (LRU-bounded).
@@ -290,9 +416,34 @@ impl ModelRegistry {
         spec: Option<&str>,
         features: Vec<f32>,
     ) -> Result<(String, Vec<f32>)> {
-        let served = self.resolve(spec)?;
-        let logits = served.svc.infer_from(client, features)?;
-        Ok((served.id.clone(), logits))
+        let (id, out) = self.infer_route_from(client, &RouteSpec::to_model(spec), features)?;
+        Ok((id, out.logits))
+    }
+
+    /// Full-route single-row dispatch: resolves the model, picks the
+    /// requested backend pipeline from the variant's backend set, runs
+    /// the row, and offers the served result to the shadow mirror (only
+    /// when the primary served it — a mirrored backend watching its own
+    /// output would measure nothing).
+    pub fn infer_route_from(
+        &self,
+        client: ClientId,
+        route: &RouteSpec,
+        features: Vec<f32>,
+    ) -> Result<(String, RowOutput)> {
+        let served = self.resolve(route.model.as_deref())?;
+        let svc = self.service_for(&served, route.backend)?;
+        // presample before dispatch consumes the row: only a selected
+        // row is ever copied on the serving path
+        let mirror = primary_shadow(&served, route.backend);
+        let keep = mirror
+            .as_ref()
+            .and_then(|sh| sh.presample().then(|| features.clone()));
+        let out = svc.infer_opts_from(client, features, route.opts)?;
+        if let (Some(sh), Some(row)) = (mirror, keep) {
+            sh.enqueue(row, out.logits.clone(), route.opts);
+        }
+        Ok((served.id.clone(), out))
     }
 
     /// Route one whole batch: the variant is resolved once and every row
@@ -316,8 +467,41 @@ impl ModelRegistry {
         spec: Option<&str>,
         rows: Vec<Vec<f32>>,
     ) -> Result<(String, Vec<Vec<f32>>)> {
-        let served = self.resolve(spec)?;
-        let outs = served.svc.infer_many_from(client, rows)?;
+        let (id, outs) =
+            self.infer_batch_route_from(client, &RouteSpec::to_model(spec), rows)?;
+        Ok((id, outs.into_iter().map(|o| o.logits).collect()))
+    }
+
+    /// Full-route batch dispatch (see [`ModelRegistry::infer_route_from`]).
+    pub fn infer_batch_route_from(
+        &self,
+        client: ClientId,
+        route: &RouteSpec,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<RowOutput>)> {
+        let served = self.resolve(route.model.as_deref())?;
+        let svc = self.service_for(&served, route.backend)?;
+        // presample before dispatch consumes the rows: only selected
+        // rows are copied, never the whole batch
+        let mirror = primary_shadow(&served, route.backend);
+        let sampled: Vec<(usize, Vec<f32>)> = match &mirror {
+            Some(sh) => rows
+                .iter()
+                .enumerate()
+                .filter(|_| sh.presample())
+                .map(|(i, row)| (i, row.clone()))
+                .collect(),
+            None => Vec::new(),
+        };
+        let outs = svc.infer_many_opts_from(client, rows, route.opts)?;
+        if let Some(sh) = mirror {
+            for (i, row) in sampled {
+                // the same per-row seed derivation the service applied
+                // (ExecOptions::for_row), so a mirrored comparison
+                // reproduces offline
+                sh.enqueue(row, outs[i].logits.clone(), route.opts.for_row(i));
+            }
+        }
         Ok((served.id.clone(), outs))
     }
 
@@ -423,42 +607,71 @@ impl ModelRegistry {
     }
 }
 
+/// The shadow to offer a served row to: only when the row was served by
+/// the primary backend (explicitly or by default).
+fn primary_shadow(
+    served: &Arc<ServedModel>,
+    backend: Option<BackendKind>,
+) -> Option<Arc<ShadowState>> {
+    match backend {
+        None => served.shadow.clone(),
+        Some(k) if k == served.spec.kind => served.shadow.clone(),
+        Some(_) => None,
+    }
+}
+
 impl Dispatch for ModelRegistry {
     fn dispatch(
         &self,
         client: ClientId,
-        model: Option<&str>,
+        route: &RouteSpec,
         features: Vec<f32>,
-    ) -> Result<(String, Vec<f32>)> {
-        self.infer_from(client, model, features)
+    ) -> Result<(String, RowOutput)> {
+        self.infer_route_from(client, route, features)
     }
 
     fn dispatch_batch(
         &self,
         client: ClientId,
-        model: Option<&str>,
+        route: &RouteSpec,
         rows: Vec<Vec<f32>>,
-    ) -> Result<(String, Vec<Vec<f32>>)> {
+    ) -> Result<(String, Vec<RowOutput>)> {
         // `infer_many` also rejects empty batches, but guarding before
         // `resolve` avoids lazily loading a pipeline for a no-op call
         if rows.is_empty() {
             return Err(Error::Serving("empty batch".into()));
         }
-        self.infer_batch_from(client, model, rows)
+        self.infer_batch_route_from(client, route, rows)
     }
 
     fn model_summaries(&self) -> Vec<ModelSummary> {
+        // served-backend capabilities for live variants, from the
+        // primary session's spec + shadow status
+        let live_info: BTreeMap<String, BackendInfo> = {
+            let g = self.inner.read().unwrap();
+            g.live
+                .values()
+                .map(|s| {
+                    let shadow = s.shadow.as_ref().map(|sh| (sh.kind, sh.fraction));
+                    (s.name.clone(), BackendInfo::from_spec(&s.spec, shadow))
+                })
+                .collect()
+        };
         self.models()
             .into_iter()
-            .map(|m| ModelSummary {
-                name: m.name,
-                version: m.meta.version,
-                kind: m.kind,
-                dims: m.dims,
-                num_params: m.num_params,
-                live: m.live,
-                accuracy: m.meta.accuracy,
-                digest: m.meta.digest,
+            .map(|m| {
+                let backend = live_info.get(&m.name).cloned();
+                ModelSummary {
+                    name: m.name,
+                    version: m.meta.version,
+                    kind: m.kind,
+                    dims: m.dims,
+                    num_params: m.num_params,
+                    live: m.live,
+                    accuracy: m.meta.accuracy,
+                    digest: m.meta.digest,
+                    backend,
+                }
             })
             .collect()
     }

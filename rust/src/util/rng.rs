@@ -5,6 +5,18 @@
 //! BigCrush); determinism given a seed is the property the experiments
 //! depend on.
 
+/// One-way 64-bit mix (the SplitMix64 finalizer over `seed ^ f(salt)`):
+/// derives statistically independent sub-seeds from a base seed and a
+/// salt (row index, trial index). Pure and stable — the serving path
+/// relies on it to make per-request noise reproducible regardless of
+/// batching or worker count.
+pub fn mix(seed: u64, salt: u64) -> u64 {
+    let mut z = seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256++ PRNG.
 #[derive(Debug, Clone)]
 pub struct Rng {

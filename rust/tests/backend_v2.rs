@@ -1,0 +1,435 @@
+//! Backend API v2 integration tests: per-request backend selection over
+//! the v2 wire, ACIM per-request-seed reproducibility (any worker
+//! count, any interleaving), structured unknown-backend errors, served
+//! capability descriptors on the control plane, ACIM shadow serving
+//! with divergence counters, and the shadow no-added-latency contract.
+//! Fully offline (synthetic KAN checkpoints published into temp
+//! registries).
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kan_edge::client::{CallOptions, KanClient};
+use kan_edge::config::AppConfig;
+use kan_edge::coordinator::protocol::{read_frame, write_frame, FrameRead, MAGIC};
+use kan_edge::coordinator::{BackendKind, Dispatch, TcpServer};
+use kan_edge::kan::checkpoint::synthetic_kan_checkpoint;
+use kan_edge::registry::{ModelManifest, ModelRegistry};
+use kan_edge::util::json::Value;
+
+mod common;
+
+fn tmp_dir(test: &str) -> PathBuf {
+    common::tmp_dir("kan_edge_backend_v2_tests", test)
+}
+
+/// Publish a synthetic KAN with real (nonzero) spline mass as model "m"
+/// into a fresh registry dir. The [2,2] routing fixture has all-zero
+/// spline coefficients, which an analog crossbar reproduces exactly —
+/// useless for divergence tests — so these suites use a dense one.
+fn publish_dense_model(dir: &Path, cfg: &AppConfig) -> Arc<ModelRegistry> {
+    ModelManifest::empty().save(dir).unwrap();
+    let registry = ModelRegistry::open(cfg).unwrap();
+    let ckpt = synthetic_kan_checkpoint("m", &[2, 3, 2], 5, 3, 0xD1CE);
+    let src = dir.join("m.incoming.json");
+    std::fs::write(&src, ckpt.to_value().to_string()).unwrap();
+    registry.publish_file(&src, None, None).unwrap();
+    registry
+}
+
+fn base_config(dir: &Path) -> AppConfig {
+    let mut cfg = common::test_config(dir, "m");
+    // stochastic analog path with visible noise, so seed semantics and
+    // divergence are observable (not just reproducibly zero)
+    cfg.hardware.acim.array.sigma_read = 0.5;
+    cfg
+}
+
+fn spawn(cfg: &AppConfig, dir: &Path) -> (Arc<ModelRegistry>, TcpServer) {
+    let registry = publish_dense_model(dir, cfg);
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+    (registry, server)
+}
+
+/// The `shadow` section of model `id`'s served metrics, if present.
+fn shadow_section(client: &mut KanClient, id: &str) -> Option<Value> {
+    let body = client.metrics().unwrap();
+    body.field("models")
+        .unwrap()
+        .get(id)
+        .and_then(|m| m.get("shadow"))
+        .cloned()
+}
+
+/// Poll until every sampled shadow row is accounted for (mirrored,
+/// dropped, or errored), bounded.
+fn wait_shadow_drained(client: &mut KanClient, id: &str) -> Value {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        if let Some(s) = shadow_section(client, id) {
+            let count = |k: &str| s.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+            if count("sampled") > 0
+                && count("mirrored") + count("dropped") + count("errors")
+                    >= count("sampled")
+            {
+                return s;
+            }
+        }
+        assert!(Instant::now() < deadline, "shadow mirror never drained");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+// ---- per-request backend selection + seed reproducibility ------------------
+
+#[test]
+fn acim_fixed_row_and_seed_is_bit_identical_across_worker_counts() {
+    let row = vec![0.3f32, -0.6];
+    let opts = CallOptions {
+        backend: Some(BackendKind::Acim),
+        seed: Some(0xABCD),
+        trials: 1,
+    };
+    let mut outputs = Vec::new();
+    for workers in [1usize, 4] {
+        let dir = tmp_dir(&format!("seed_workers_{workers}"));
+        let mut cfg = base_config(&dir);
+        cfg.server.workers = workers;
+        let (_registry, server) = spawn(&cfg, &dir);
+        let mut client = KanClient::connect(server.addr).unwrap();
+        // submit the same (row, seed) repeatedly, interleaved with other
+        // traffic, from several concurrent connections: every answer
+        // must be bit-identical
+        let mut logits = Vec::new();
+        for i in 0..6 {
+            // interleaving traffic with different seeds and backends
+            client.infer(&[i as f32 * 0.1, 0.2]).unwrap();
+            let out = client.infer_opts(None, &row, &opts).unwrap();
+            assert_eq!(out.model, "m@1");
+            logits.push(out.logits);
+        }
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let row = row.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = KanClient::connect(addr).unwrap();
+                c.infer_opts(None, &row, &opts).unwrap().logits
+            }));
+        }
+        for h in handles {
+            logits.push(h.join().unwrap());
+        }
+        for l in &logits {
+            assert_eq!(
+                l.clone(),
+                logits[0].clone(),
+                "non-deterministic ACIM output under workers={workers}"
+            );
+        }
+        outputs.push(logits[0].clone());
+        server.shutdown();
+    }
+    // identical across server instances with different worker pools
+    assert_eq!(outputs[0], outputs[1]);
+}
+
+#[test]
+fn one_connection_interleaves_digital_and_acim_against_one_model() {
+    let dir = tmp_dir("interleave");
+    let cfg = base_config(&dir);
+    let (_registry, server) = spawn(&cfg, &dir);
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    let row = vec![0.25f32, 0.75];
+    let digital = client.infer(&row).unwrap();
+    let acim = client
+        .infer_opts(
+            None,
+            &row,
+            &CallOptions { backend: Some(BackendKind::Acim), seed: Some(1), trials: 1 },
+        )
+        .unwrap();
+    // same model id serves both; the analog path visibly diverges from
+    // the exact digital one (sigma_read is large here)
+    assert_eq!(digital.model, "m@1");
+    assert_eq!(acim.model, "m@1");
+    assert_ne!(digital.logits, acim.logits);
+    // interleave freely: digital answers stay bit-stable, acim answers
+    // reproduce per seed
+    let d2 = client.infer(&row).unwrap();
+    assert_eq!(d2.logits, digital.logits);
+    let a2 = client
+        .infer_opts(
+            None,
+            &row,
+            &CallOptions { backend: Some(BackendKind::Acim), seed: Some(1), trials: 1 },
+        )
+        .unwrap();
+    assert_eq!(a2.logits, acim.logits);
+    // a different seed draws different noise
+    let a3 = client
+        .infer_opts(
+            None,
+            &row,
+            &CallOptions { backend: Some(BackendKind::Acim), seed: Some(2), trials: 1 },
+        )
+        .unwrap();
+    assert_ne!(a3.logits, acim.logits);
+
+    // explicit primary-kind selection is also valid
+    let d3 = client
+        .infer_opts(
+            None,
+            &row,
+            &CallOptions { backend: Some(BackendKind::Digital), seed: None, trials: 1 },
+        )
+        .unwrap();
+    assert_eq!(d3.logits, digital.logits);
+
+    // seeded batch submit on the acim backend reproduces row by row
+    let rows: Vec<Vec<f32>> = (0..5).map(|i| vec![0.1 * i as f32, -0.2]).collect();
+    let opts = CallOptions { backend: Some(BackendKind::Acim), seed: Some(9), trials: 1 };
+    let (_, b1) = client.infer_batch_opts(None, rows.clone(), &opts).unwrap();
+    let (_, b2) = client.infer_batch_opts(None, rows, &opts).unwrap();
+    assert_eq!(b1, b2);
+    server.shutdown();
+}
+
+#[test]
+fn acim_trials_serve_uncertainty_estimates() {
+    let dir = tmp_dir("trials");
+    let cfg = base_config(&dir);
+    let (_registry, server) = spawn(&cfg, &dir);
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    let row = vec![0.4f32, -0.1];
+    let opts = CallOptions {
+        backend: Some(BackendKind::Acim),
+        seed: Some(77),
+        trials: 16,
+    };
+    let out = client.infer_opts(None, &row, &opts).unwrap();
+    let std = out.std.as_ref().expect("trials > 1 must serve a trial spread");
+    assert_eq!(std.len(), out.logits.len());
+    // real noise → nonzero spread somewhere
+    assert!(std.iter().any(|&s| s > 0.0), "{std:?}");
+    // repeated trials are reproducible too
+    let again = client.infer_opts(None, &row, &opts).unwrap();
+    assert_eq!(out.logits, again.logits);
+    assert_eq!(out.std, again.std);
+    // single-trial responses carry no std field
+    let single = client
+        .infer_opts(
+            None,
+            &row,
+            &CallOptions { backend: Some(BackendKind::Acim), seed: Some(77), trials: 1 },
+        )
+        .unwrap();
+    assert!(single.std.is_none());
+    // out-of-range trials are a typed wire error
+    let err = client
+        .infer_opts(
+            None,
+            &row,
+            &CallOptions { backend: Some(BackendKind::Acim), seed: None, trials: 1000 },
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("trials"), "{err}");
+    server.shutdown();
+}
+
+// ---- routing errors + control plane ----------------------------------------
+
+#[test]
+fn unknown_and_unserveable_backends_are_structured_errors() {
+    let dir = tmp_dir("bad_backend");
+    let cfg = base_config(&dir);
+    let (_registry, server) = spawn(&cfg, &dir);
+
+    // unknown backend name: typed bad_request at the wire boundary
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    conn.write_all(&MAGIC).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    write_frame(
+        &mut conn,
+        br#"{"id": 1, "op": "infer", "backend": "gpu", "features": [0.1, 0.2]}"#,
+    )
+    .unwrap();
+    let v = match read_frame(&mut reader, 1 << 20).unwrap() {
+        FrameRead::Frame(p) => Value::parse(std::str::from_utf8(&p).unwrap()).unwrap(),
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "bad_request");
+    assert!(v
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("unknown backend 'gpu'"));
+
+    // a known kind the artifact cannot back: structured not_found
+    let mut client = KanClient::connect(server.addr).unwrap();
+    let err = client
+        .infer_opts(
+            None,
+            &[0.1, 0.2],
+            &CallOptions { backend: Some(BackendKind::Mlp), seed: None, trials: 1 },
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("not_found"), "{err}");
+
+    // v1 gets a clean refusal for the new fields over a real socket
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(b"{\"features\": [0.1, 0.2], \"backend\": \"acim\"}\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Value::parse(line.trim()).unwrap();
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "unsupported");
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("protocol v2"));
+    server.shutdown();
+}
+
+#[test]
+fn control_plane_reports_backend_capabilities_and_shadow_status() {
+    let dir = tmp_dir("capabilities");
+    let mut cfg = base_config(&dir);
+    cfg.server.shadow.backend = Some(BackendKind::Acim);
+    cfg.server.shadow.fraction = 0.25;
+    let (_registry, server) = spawn(&cfg, &dir);
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    // not live yet: no compiled session to describe
+    let info = client.model_info("m").unwrap();
+    assert!(info.backend.is_none());
+
+    client.infer(&[0.1, 0.2]).unwrap(); // load the pipeline
+    let info = client.model_info("m").unwrap();
+    let be = info.backend.expect("live model must report its backend spec");
+    assert_eq!(be.kind, "digital");
+    assert!(be.deterministic);
+    assert!(be.reference_exact);
+    assert_eq!(be.input_dim, Some(2));
+    assert_eq!(be.output_dim, 2);
+    let (shadow_kind, fraction) = be.shadow.expect("shadow status must be reported");
+    assert_eq!(shadow_kind, "acim");
+    assert!((fraction - 0.25).abs() < 1e-12);
+    server.shutdown();
+}
+
+// ---- shadow serving ---------------------------------------------------------
+
+#[test]
+fn shadow_mirror_records_divergence_on_live_traffic() {
+    let dir = tmp_dir("shadow_divergence");
+    let mut cfg = base_config(&dir);
+    cfg.server.shadow.backend = Some(BackendKind::Acim);
+    cfg.server.shadow.fraction = 1.0;
+    cfg.server.shadow.queue = 4096;
+    // crank read noise: mirrored analog outputs must visibly flip
+    cfg.hardware.acim.array.sigma_read = 2.0;
+    let (_registry, server) = spawn(&cfg, &dir);
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    let mut lg = kan_edge::data::LoadGen::new(0x5EED, 2);
+    for _ in 0..20 {
+        client.infer(&lg.next_vec()).unwrap();
+    }
+    client.infer_batch(None, lg.batch(40)).unwrap();
+
+    let s = wait_shadow_drained(&mut client, "m@1");
+    let count = |k: &str| s.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+    assert_eq!(count("sampled"), 60, "fraction 1.0 must sample every row");
+    assert!(count("mirrored") > 0, "{s}");
+    assert_eq!(count("errors"), 0, "{s}");
+    assert!(
+        count("argmax_flips") > 0,
+        "heavy read noise must flip some argmaxes: {s}"
+    );
+    assert!(s.get("logit_mae_mean").unwrap().as_f64().unwrap() > 0.0);
+    // per-layer partial-sum error quantiles, one entry per layer
+    let layers = s.get("layer_err").unwrap().as_array().unwrap();
+    assert_eq!(layers.len(), 2);
+    for l in layers {
+        let p50 = l.get("p50").unwrap().as_f64().unwrap();
+        let p99 = l.get("p99").unwrap().as_f64().unwrap();
+        assert!(p99 >= p50 && p50 >= 0.0);
+    }
+
+    // mirrored traffic does not error or reject the primary path
+    let body = client.metrics().unwrap();
+    let model = body.field("models").unwrap().get("m@1").unwrap().clone();
+    assert_eq!(model.get("errors").unwrap().as_i64().unwrap(), 0);
+    assert_eq!(model.get("requests").unwrap().as_i64().unwrap(), 60);
+    server.shutdown();
+}
+
+#[test]
+fn shadow_overflow_drops_instead_of_delaying_primary_responses() {
+    let dir = tmp_dir("shadow_no_latency");
+    let mut cfg = base_config(&dir);
+    cfg.server.shadow.backend = Some(BackendKind::Acim);
+    cfg.server.shadow.fraction = 1.0;
+    cfg.server.shadow.queue = 2; // force overflow under any burst
+    let (_registry, server) = spawn(&cfg, &dir);
+    let mut client = KanClient::connect(server.addr).unwrap();
+    client.infer(&[0.1, 0.2]).unwrap(); // build both pipelines up front
+
+    let mut lg = kan_edge::data::LoadGen::new(0xF10D, 2);
+    // a burst far larger than the mirror queue: every primary response
+    // must come back promptly and successfully even though the mirror
+    // cannot keep up — overflow is counted as drops, never as waiting
+    let (_, results) = client.infer_batch(None, lg.batch(300)).unwrap();
+    assert_eq!(results.len(), 300);
+
+    let s = wait_shadow_drained(&mut client, "m@1");
+    let count = |k: &str| s.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+    assert_eq!(count("sampled"), 301);
+    assert!(
+        count("dropped") > 0,
+        "queue of 2 under a 300-row burst must have dropped: {s}"
+    );
+    assert_eq!(count("mirrored") + count("dropped") + count("errors"), 301);
+    server.shutdown();
+}
+
+// ---- calibrate-once caching -------------------------------------------------
+
+#[test]
+fn acim_occupancy_is_cached_across_rebuilds() {
+    let dir = tmp_dir("occupancy_cache");
+    let cfg = base_config(&dir);
+    let registry = publish_dense_model(&dir, &cfg);
+    assert_eq!(registry.factory().occupancy_cache_len(), 0);
+
+    // first ACIM build calibrates once
+    let row = vec![0.2f32, 0.4];
+    registry.ensure_loaded("m").unwrap();
+    let (_, out1) = registry.infer(Some("m"), row.clone()).unwrap();
+    assert_eq!(out1.len(), 2);
+    let mut raw = kan_edge::coordinator::RouteSpec::to_model(Some("m"));
+    raw.backend = Some(BackendKind::Acim);
+    raw.opts.seed = Some(3);
+    let (_, a1) = registry
+        .infer_route_from(kan_edge::coordinator::ClientId::fresh(), &raw, row.clone())
+        .unwrap();
+    assert_eq!(registry.factory().occupancy_cache_len(), 1);
+
+    // hot-swap rebuild (same weights): the ACIM pipeline is rebuilt but
+    // the calibration occupancy is a cache hit, and seeded outputs are
+    // unchanged
+    registry.reload_model("m").unwrap();
+    let (_, a2) = registry
+        .infer_route_from(kan_edge::coordinator::ClientId::fresh(), &raw, row)
+        .unwrap();
+    assert_eq!(registry.factory().occupancy_cache_len(), 1);
+    assert_eq!(a1.logits, a2.logits);
+}

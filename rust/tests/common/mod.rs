@@ -12,6 +12,7 @@
 use std::path::{Path, PathBuf};
 
 use kan_edge::config::AppConfig;
+use kan_edge::coordinator::BackendKind;
 use kan_edge::registry::digest_file;
 
 /// Fresh per-test directory under `suite` (wiped if it already exists).
@@ -63,6 +64,6 @@ pub fn test_config(dir: &Path, default_model: &str) -> AppConfig {
     let mut cfg = AppConfig::default();
     cfg.artifacts.dir = dir.to_string_lossy().into_owned();
     cfg.artifacts.model = default_model.to_string();
-    cfg.server.backend = "digital".into();
+    cfg.server.backend = BackendKind::Digital;
     cfg
 }

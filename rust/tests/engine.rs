@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use kan_edge::coordinator::{DigitalBackend, InferBackend};
+use kan_edge::coordinator::{DigitalSession, ExecutionSession};
 use kan_edge::data::LoadGen;
 use kan_edge::kan::checkpoint::{synthetic_kan_checkpoint, Dataset};
 use kan_edge::kan::{
@@ -137,14 +137,14 @@ fn batch_outputs_bit_identical_for_any_worker_count() {
 #[test]
 fn digital_backend_engine_matches_reference_path() {
     let m = Arc::new(model(&[17, 8, 14], 5, 3, 0xF00));
-    let eng = DigitalBackend::new(m.clone());
+    let eng = DigitalSession::new(m.clone());
     assert!(eng.engine_enabled());
-    let refp = DigitalBackend::with_engine(m, false);
+    let refp = DigitalSession::with_engine(m, false);
     assert!(!refp.engine_enabled());
     let mut lg = LoadGen::new(8, 17);
     let rows = lg.batch(20);
-    let a = eng.infer_batch(rows.clone()).unwrap();
-    let b = refp.infer_batch(rows).unwrap();
+    let a = eng.infer_logits(rows.clone()).unwrap();
+    let b = refp.infer_logits(rows).unwrap();
     for (ra, rb) in a.iter().zip(&b) {
         let fa: Vec<f64> = ra.iter().map(|&v| v as f64).collect();
         let fb: Vec<f64> = rb.iter().map(|&v| v as f64).collect();

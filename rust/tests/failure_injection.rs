@@ -122,9 +122,9 @@ fn pjrt_padding_of_short_batches_is_correct() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    use kan_edge::coordinator::PjrtBackend;
-    use kan_edge::coordinator::InferBackend;
-    let be = PjrtBackend::spawn(
+    use kan_edge::coordinator::ExecutionSession;
+    use kan_edge::coordinator::PjrtSession;
+    let be = PjrtSession::spawn(
         format!("{dir}/kan1.b32.hlo.txt").into(),
         32,
         17,
@@ -134,9 +134,9 @@ fn pjrt_padding_of_short_batches_is_correct() {
     .unwrap();
     let row: Vec<f32> = (0..17).map(|i| (i as f32) * 0.05 - 0.4).collect();
     // 1-row batch (31 padded) vs the same row inside a 3-row batch
-    let a = be.infer_batch(vec![row.clone()]).unwrap();
+    let a = be.infer_logits(vec![row.clone()]).unwrap();
     let b = be
-        .infer_batch(vec![vec![0.3; 17], row.clone(), vec![-0.2; 17]])
+        .infer_logits(vec![vec![0.3; 17], row.clone(), vec![-0.2; 17]])
         .unwrap();
     for (x, y) in a[0].iter().zip(&b[1]) {
         assert!((x - y).abs() < 1e-5, "{x} vs {y}");

@@ -13,7 +13,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use kan_edge::client::KanClient;
-use kan_edge::coordinator::backend::InferBackend;
+use kan_edge::coordinator::backend::{
+    BackendSpec, ExecOptions, ExecutionSession, RowOutput,
+};
 use kan_edge::coordinator::{
     BatchPolicy, InferenceService, Metrics, SchedMode, SchedulerOptions, ServeOptions,
     TcpServer,
@@ -25,18 +27,18 @@ use kan_edge::error::{Error, Result};
 /// speed.
 struct SlowEcho(Duration);
 
-impl InferBackend for SlowEcho {
+impl ExecutionSession for SlowEcho {
     fn name(&self) -> &str {
         "slow-echo"
     }
 
-    fn output_dim(&self) -> usize {
-        1
+    fn spec(&self) -> BackendSpec {
+        BackendSpec::synthetic(1)
     }
 
-    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+    fn run(&self, rows: Vec<Vec<f32>>, _opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
         std::thread::sleep(self.0);
-        Ok(rows.iter().map(|r| vec![r[0]]).collect())
+        Ok(rows.iter().map(|r| vec![r[0]].into()).collect())
     }
 }
 
@@ -86,8 +88,8 @@ fn mixed_load(mode: SchedMode) -> (u64, usize) {
     let (model, results) = batch.join().unwrap();
     assert_eq!(model, "default");
     assert_eq!(results.len(), 128);
-    for (i, (logits, _class)) in results.iter().enumerate() {
-        assert_eq!(logits[0], i as f32, "batch row order broken at {i}");
+    for (i, row) in results.iter().enumerate() {
+        assert_eq!(row.logits[0], i as f32, "batch row order broken at {i}");
     }
     server.shutdown();
     (rejections, successes)
@@ -119,22 +121,22 @@ struct Gated {
     gate: Arc<(Mutex<bool>, Condvar)>,
 }
 
-impl InferBackend for Gated {
+impl ExecutionSession for Gated {
     fn name(&self) -> &str {
         "gated"
     }
 
-    fn output_dim(&self) -> usize {
-        1
+    fn spec(&self) -> BackendSpec {
+        BackendSpec::synthetic(1)
     }
 
-    fn infer_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+    fn run(&self, rows: Vec<Vec<f32>>, _opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
         let (m, cv) = &*self.gate;
         let mut open = m.lock().unwrap();
         while !*open {
             open = cv.wait(open).unwrap();
         }
-        Ok(rows.iter().map(|r| vec![r[0]]).collect())
+        Ok(rows.iter().map(|r| vec![r[0]].into()).collect())
     }
 }
 

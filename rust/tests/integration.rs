@@ -12,7 +12,8 @@ use kan_edge::baseline::MlpModel;
 use kan_edge::config::AppConfig;
 use kan_edge::coordinator::batcher::BatchPolicy;
 use kan_edge::coordinator::{
-    build_acim_with_calib, build_backend, InferenceService, ServeOptions,
+    build_acim_with_calib, build_session, BackendKind, ExecutionSession,
+    InferenceService, ServeOptions,
 };
 use kan_edge::kan::checkpoint::{Dataset, Manifest};
 use kan_edge::kan::QuantKanModel;
@@ -97,13 +98,13 @@ fn pjrt_matches_digital_reference() {
     let ds = Dataset::load(dir).unwrap();
     let mut cfg = AppConfig::default();
     cfg.artifacts.dir = dir.to_string();
-    cfg.server.backend = "pjrt".into();
-    let pjrt = build_backend(&cfg, &manifest, "kan1").unwrap();
+    cfg.server.backend = BackendKind::Pjrt;
+    let pjrt = build_session(&cfg, &manifest, "kan1").unwrap();
     let digital = QuantKanModel::load(format!("{dir}/kan1.weights.json")).unwrap();
 
     let rows: Vec<Vec<f32>> =
         ds.test_rows().take(128).map(|(r, _)| r.to_vec()).collect();
-    let outs = pjrt.infer_batch(rows.clone()).unwrap();
+    let outs = pjrt.infer_logits(rows.clone()).unwrap();
     let mut agree = 0;
     for (row, out) in rows.iter().zip(&outs) {
         let p_pjrt = kan_edge::kan::argmax(
@@ -132,8 +133,8 @@ fn serving_pipeline_end_to_end_digital() {
     let ds = Dataset::load(dir).unwrap();
     let mut cfg = AppConfig::default();
     cfg.artifacts.dir = dir.to_string();
-    cfg.server.backend = "digital".into();
-    let backend = build_backend(&cfg, &manifest, "kan1").unwrap();
+    cfg.server.backend = BackendKind::Digital;
+    let backend = build_session(&cfg, &manifest, "kan1").unwrap();
     let svc = InferenceService::start(
         backend,
         ServeOptions {
@@ -225,17 +226,18 @@ fn backend_output_dims_consistent() {
     let manifest = Manifest::load(dir).unwrap();
     let mut cfg = AppConfig::default();
     cfg.artifacts.dir = dir.to_string();
-    let backends: &[&str] =
+    let backends: &[BackendKind] =
         if cfg!(all(feature = "pjrt", feature = "xla")) {
-            &["digital", "pjrt"]
+            &[BackendKind::Digital, BackendKind::Pjrt]
         } else {
-            &["digital"]
+            &[BackendKind::Digital]
         };
-    for backend_name in backends.iter().copied() {
-        cfg.server.backend = backend_name.into();
-        let be = build_backend(&cfg, &manifest, "kan1").unwrap();
-        assert_eq!(be.output_dim(), 14, "{backend_name}");
-        let out = be.infer_batch(vec![vec![0.0; 17]]).unwrap();
+    for backend_kind in backends.iter().copied() {
+        cfg.server.backend = backend_kind;
+        let be = build_session(&cfg, &manifest, "kan1").unwrap();
+        assert_eq!(be.spec().output_dim, 14, "{backend_kind}");
+        assert_eq!(be.spec().kind, backend_kind);
+        let out = be.infer_logits(vec![vec![0.0; 17]]).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].len(), 14);
         assert!(out[0].iter().all(|v| v.is_finite()));
@@ -248,7 +250,7 @@ fn unknown_model_is_clear_error() {
     let manifest = Manifest::load(dir).unwrap();
     let mut cfg = AppConfig::default();
     cfg.artifacts.dir = dir.to_string();
-    let err = match build_backend(&cfg, &manifest, "nope") {
+    let err = match build_session(&cfg, &manifest, "nope") {
         Err(e) => e.to_string(),
         Ok(_) => panic!("expected error"),
     };
@@ -261,8 +263,8 @@ fn concurrent_serving_under_load() {
     let manifest = Manifest::load(dir).unwrap();
     let mut cfg = AppConfig::default();
     cfg.artifacts.dir = dir.to_string();
-    cfg.server.backend = "digital".into();
-    let backend = build_backend(&cfg, &manifest, "kan1").unwrap();
+    cfg.server.backend = BackendKind::Digital;
+    let backend = build_session(&cfg, &manifest, "kan1").unwrap();
     let svc = InferenceService::start(
         backend,
         ServeOptions {

@@ -15,7 +15,9 @@ use std::time::Duration;
 
 use kan_edge::client::KanClient;
 use kan_edge::coordinator::protocol::{read_frame, write_frame, FrameRead, MAGIC};
-use kan_edge::coordinator::{ClientId, Dispatch, TcpLimits, TcpServer};
+use kan_edge::coordinator::{
+    ClientId, Dispatch, RouteSpec, RowOutput, TcpLimits, TcpServer,
+};
 use kan_edge::error::Result;
 use kan_edge::kan::checkpoint::synthetic_checkpoint_json as kan_variant_json;
 use kan_edge::registry::ModelRegistry;
@@ -248,15 +250,15 @@ impl Dispatch for SleepyEcho {
     fn dispatch(
         &self,
         _client: ClientId,
-        _model: Option<&str>,
+        _route: &RouteSpec,
         features: Vec<f32>,
-    ) -> Result<(String, Vec<f32>)> {
+    ) -> Result<(String, RowOutput)> {
         let delay_ms = features.get(1).copied().unwrap_or(0.0);
         if delay_ms > 0.0 {
             std::thread::sleep(Duration::from_millis(delay_ms as u64));
         }
         let x = features.first().copied().unwrap_or(0.0);
-        Ok(("echo@1".into(), vec![x, -x]))
+        Ok(("echo@1".into(), vec![x, -x].into()))
     }
 }
 
@@ -311,12 +313,12 @@ impl Dispatch for PanicOnNegative {
     fn dispatch(
         &self,
         _client: ClientId,
-        _model: Option<&str>,
+        _route: &RouteSpec,
         features: Vec<f32>,
-    ) -> Result<(String, Vec<f32>)> {
+    ) -> Result<(String, RowOutput)> {
         let x = features.first().copied().unwrap_or(0.0);
         assert!(x >= 0.0, "injected dispatch panic");
-        Ok(("echo@1".into(), vec![x, -x]))
+        Ok(("echo@1".into(), vec![x, -x].into()))
     }
 }
 
@@ -381,7 +383,7 @@ fn v2_batch_submit_feeds_the_batcher_whole() {
     let (model, results) = client.infer_batch(Some("a"), rows.clone()).unwrap();
     assert_eq!(model, "a@1");
     assert_eq!(results.len(), 64);
-    assert!(results.iter().all(|(_, class)| *class == 0));
+    assert!(results.iter().all(|r| r.class == 0));
 
     // the server-side batcher must have seen multi-row batches from
     // this single connection (the whole point of the verb)
