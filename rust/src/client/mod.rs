@@ -333,6 +333,33 @@ impl KanClient {
         }
     }
 
+    /// The metrics snapshot rendered as Prometheus text exposition
+    /// format (see `docs/OBSERVABILITY.md`).
+    pub fn metrics_prom(&mut self) -> Result<String> {
+        let id = self.fresh_id();
+        match self.call(Request::MetricsProm { id })? {
+            Response::MetricsProm { text, .. } => Ok(text),
+            Response::Error { code, message, retry_after_ms, .. } => {
+                Err(wire_error(code, &message, retry_after_ms))
+            }
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Recent sampled request traces (free-form JSON report: a
+    /// `"summary"` section and a `"spans"` array, newest first, capped
+    /// at `limit` when given).
+    pub fn trace(&mut self, limit: Option<usize>) -> Result<Value> {
+        let id = self.fresh_id();
+        match self.call(Request::Trace { id, limit })? {
+            Response::Trace { body, .. } => Ok(body),
+            Response::Error { code, message, retry_after_ms, .. } => {
+                Err(wire_error(code, &message, retry_after_ms))
+            }
+            other => Err(unexpected(other)),
+        }
+    }
+
     /// Endpoint health: `(status, live model count)`.
     pub fn health(&mut self) -> Result<(String, usize)> {
         let id = self.fresh_id();

@@ -24,6 +24,7 @@ pub struct AppConfig {
     pub registry: RegistryConfig,
     pub hardware: HardwareConfig,
     pub neurosim: NeurosimConfig,
+    pub observability: ObservabilityConfig,
 }
 
 #[derive(Debug, Clone)]
@@ -182,6 +183,35 @@ impl Default for NeurosimConfig {
     }
 }
 
+/// `[observability]` — tracing, engine profiling and logging knobs
+/// (see `docs/OBSERVABILITY.md`).
+#[derive(Debug, Clone)]
+pub struct ObservabilityConfig {
+    /// Deterministic request-trace sampling: every Nth served v2
+    /// `infer` request carries a span. 0 disables tracing entirely.
+    pub sample_every: u64,
+    /// Completed-span ring-buffer capacity (the `trace` verb's window).
+    pub trace_ring: usize,
+    /// Opt-in engine profiling counters (tiles touched, fused hits,
+    /// interval occupancy vs the SAM calibration prior). Off by
+    /// default: off means zero extra work on the engine inner loop.
+    pub engine_profiling: bool,
+    /// Structured-logger level: `"error" | "warn" | "info" | "debug"`.
+    /// The `KAN_EDGE_LOG` environment variable overrides this.
+    pub log_level: String,
+}
+
+impl Default for ObservabilityConfig {
+    fn default() -> Self {
+        Self {
+            sample_every: 16,
+            trace_ring: 256,
+            engine_profiling: false,
+            log_level: "info".into(),
+        }
+    }
+}
+
 fn get_f64(v: &Value, key: &str, dst: &mut f64) {
     if let Some(x) = v.get(key).and_then(|x| x.as_f64()) {
         *dst = x;
@@ -315,6 +345,12 @@ impl AppConfig {
                 get_u64(a, "seed", &mut acim.seed);
             }
         }
+        if let Some(o) = v.get("observability") {
+            get_u64(o, "sample_every", &mut self.observability.sample_every);
+            get_usize(o, "trace_ring", &mut self.observability.trace_ring);
+            get_bool(o, "engine_profiling", &mut self.observability.engine_profiling);
+            get_string(o, "log_level", &mut self.observability.log_level);
+        }
         if let Some(n) = v.get("neurosim") {
             if let Some(c) = n.get("constraints") {
                 self.neurosim.constraints.max_area_mm2 =
@@ -385,6 +421,15 @@ impl AppConfig {
         }
         if self.registry.store_dir.is_empty() {
             return Err(Error::Config("registry.store_dir must be non-empty".into()));
+        }
+        if self.observability.trace_ring == 0 {
+            return Err(Error::Config("observability.trace_ring must be > 0".into()));
+        }
+        if crate::obs::log::Level::parse(&self.observability.log_level).is_none() {
+            return Err(Error::Config(format!(
+                "unknown observability.log_level '{}' (error | warn | info | debug)",
+                self.observability.log_level
+            )));
         }
         self.hardware.acim.array.validate()?;
         Ok(())
@@ -542,6 +587,39 @@ mod tests {
 
         cfg.registry.max_loaded = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn observability_section_parses_and_validates() {
+        let mut cfg = AppConfig::default();
+        // defaults: sampled tracing on, profiling off
+        assert_eq!(cfg.observability.sample_every, 16);
+        assert_eq!(cfg.observability.trace_ring, 256);
+        assert!(!cfg.observability.engine_profiling);
+        assert_eq!(cfg.observability.log_level, "info");
+        cfg.apply(
+            &Value::parse(
+                r#"{"observability": {"sample_every": 1, "trace_ring": 64,
+                    "engine_profiling": true, "log_level": "debug"}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.observability.sample_every, 1);
+        assert_eq!(cfg.observability.trace_ring, 64);
+        assert!(cfg.observability.engine_profiling);
+        assert_eq!(cfg.observability.log_level, "debug");
+        cfg.validate().unwrap();
+
+        // sample_every = 0 is valid (tracing off), ring 0 is not
+        cfg.observability.sample_every = 0;
+        cfg.validate().unwrap();
+        cfg.observability.trace_ring = 0;
+        assert!(cfg.validate().is_err());
+        cfg.observability.trace_ring = 64;
+        cfg.observability.log_level = "verbose".into();
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("observability.log_level"), "{err}");
     }
 
     #[test]

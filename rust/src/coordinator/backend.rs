@@ -36,8 +36,9 @@ use std::sync::{Arc, Mutex};
 use crate::acim::{AcimModel, NoiseModel};
 use crate::baseline::MlpModel;
 use crate::error::{Error, Result};
-use crate::kan::{EngineOptions, EngineScratch, KanEngine, QuantKanModel};
+use crate::kan::{EngineOptions, EngineProfile, EngineScratch, KanEngine, QuantKanModel};
 use crate::runtime::PjrtEngine;
+use crate::util::json::Value;
 use crate::util::rng::mix;
 
 // ---- backend identity ------------------------------------------------------
@@ -251,6 +252,16 @@ pub trait ExecutionSession: Send + Sync {
         let opts = vec![ExecOptions::default(); rows.len()];
         Ok(self.run(rows, &opts)?.into_iter().map(|o| o.logits).collect())
     }
+
+    /// Live profiling counters rendered for the metrics plane, or `None`
+    /// when this session does not profile (the default). Sessions that
+    /// opt in (the engine-backed [`DigitalSession`] with
+    /// `observability.engine_profiling = true`) report per-layer path
+    /// counters and the live-vs-calibration occupancy drift
+    /// (`docs/OBSERVABILITY.md`).
+    fn profile(&self) -> Option<Value> {
+        None
+    }
 }
 
 // ---- PJRT ------------------------------------------------------------------
@@ -384,6 +395,11 @@ pub struct DigitalSession {
     /// popped for the duration of a `run`, pushed back after —
     /// steady state allocates no new arenas.
     scratch: Mutex<Vec<EngineScratch>>,
+    /// Engine profiling opt-in: scratches carry per-scratch counters
+    /// (plain integers, no atomics in the engine loop) and each `run`
+    /// folds them into `profile_acc` with one lock per batch.
+    profiled: bool,
+    profile_acc: Mutex<Option<EngineProfile>>,
 }
 
 impl DigitalSession {
@@ -397,14 +413,30 @@ impl DigitalSession {
     /// the scalar reference with a warning rather than refusing to
     /// serve.
     pub fn with_engine(model: Arc<QuantKanModel>, use_engine: bool) -> Self {
+        Self::with_engine_profiled(model, use_engine, false)
+    }
+
+    /// Like [`Self::with_engine`], additionally enabling engine
+    /// profiling counters (`observability.engine_profiling`). Profiling
+    /// requires the engine path; with `use_engine = false` the flag is
+    /// inert and [`ExecutionSession::profile`] stays `None`.
+    pub fn with_engine_profiled(
+        model: Arc<QuantKanModel>,
+        use_engine: bool,
+        profiled: bool,
+    ) -> Self {
         let engine = if use_engine {
             match KanEngine::compile(&model, EngineOptions::default()) {
                 Ok(e) => Some(Arc::new(e)),
                 Err(e) => {
-                    eprintln!(
-                        "warning: engine compile failed for '{}' ({e}); \
-                         serving the scalar reference path",
-                        model.name
+                    crate::obs::log::log_kv(
+                        crate::obs::log::Level::Warn,
+                        "backend",
+                        &format!(
+                            "engine compile failed ({e}); serving the scalar \
+                             reference path"
+                        ),
+                        vec![("model", Value::Str(model.name.clone()))],
                     );
                     None
                 }
@@ -412,7 +444,14 @@ impl DigitalSession {
         } else {
             None
         };
-        Self { model, engine, scratch: Mutex::new(Vec::new()) }
+        let profiled = profiled && engine.is_some();
+        Self {
+            model,
+            engine,
+            scratch: Mutex::new(Vec::new()),
+            profiled,
+            profile_acc: Mutex::new(None),
+        }
     }
 
     /// Whether the planned engine is the active execution path.
@@ -453,14 +492,24 @@ impl ExecutionSession for DigitalSession {
         let out = if let Some(engine) = &self.engine {
             // one scratch per call: the service's worker pool provides
             // the multi-core, each worker reuses an arena from the pool
-            let mut s = self
-                .scratch
-                .lock()
-                .unwrap()
-                .pop()
-                .unwrap_or_else(|| engine.new_scratch());
+            let mut s = self.scratch.lock().unwrap().pop().unwrap_or_else(|| {
+                if self.profiled {
+                    engine.new_scratch_profiled()
+                } else {
+                    engine.new_scratch()
+                }
+            });
             let mut out = vec![0.0f64; batch * dout];
             engine.forward_batch_with(&flat, batch, &mut out, std::slice::from_mut(&mut s));
+            // fold the scratch's counters into the session accumulator:
+            // one lock per batch, zero work when profiling is off
+            if let Some(taken) = s.take_profile() {
+                let mut acc = self.profile_acc.lock().unwrap();
+                match acc.as_mut() {
+                    Some(a) => a.merge(&taken),
+                    None => *acc = Some(taken),
+                }
+            }
             self.scratch.lock().unwrap().push(s);
             out
         } else {
@@ -470,6 +519,20 @@ impl ExecutionSession for DigitalSession {
             .chunks_exact(dout)
             .map(|c| RowOutput::from(c.iter().map(|&v| v as f32).collect::<Vec<f32>>()))
             .collect())
+    }
+
+    fn profile(&self) -> Option<Value> {
+        if !self.profiled {
+            return None;
+        }
+        let engine = self.engine.as_ref()?;
+        let acc = self.profile_acc.lock().unwrap();
+        // zeroed counters before any batch ran: the section exists as
+        // soon as profiling is on, so scrapers see a stable schema
+        match acc.as_ref() {
+            Some(p) => Some(p.to_value(engine.plan())),
+            None => Some(EngineProfile::new(engine.plan()).to_value(engine.plan())),
+        }
     }
 }
 
@@ -636,6 +699,41 @@ mod tests {
         assert_eq!(trial_seed(42, 0), trial_seed(42, 0));
         assert_ne!(trial_seed(42, 0), trial_seed(42, 1));
         assert_ne!(trial_seed(42, 0), trial_seed(43, 0));
+    }
+
+    #[test]
+    fn digital_profiling_changes_no_output_bits_and_reports() {
+        use crate::kan::checkpoint::synthetic_kan_checkpoint;
+
+        let qk = Arc::new(QuantKanModel::from_checkpoint(&synthetic_kan_checkpoint(
+            "p",
+            &[3, 4, 2],
+            5,
+            3,
+            0xC33,
+        )));
+        let plain = DigitalSession::with_engine(qk.clone(), true);
+        let prof = DigitalSession::with_engine_profiled(qk.clone(), true, true);
+        assert!(plain.profile().is_none(), "unprofiled sessions report None");
+        let rows: Vec<Vec<f32>> = vec![vec![0.1, -0.2, 0.3], vec![0.9, 0.0, -0.9]];
+        let opts = vec![ExecOptions::default(); rows.len()];
+        let a = plain.run(rows.clone(), &opts).unwrap();
+        let b = prof.run(rows, &opts).unwrap();
+        for (ra, rb) in a.iter().zip(&b) {
+            for (x, y) in ra.logits.iter().zip(&rb.logits) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        let v = prof.profile().expect("profiled session reports");
+        assert_eq!(v.get("samples").and_then(|s| s.as_i64()), Some(2));
+        let layers = v.get("layers").and_then(|l| l.as_array()).unwrap();
+        assert_eq!(layers.len(), 2);
+        for l in layers {
+            assert!(l.get("mapping_drift_rankcorr").and_then(|x| x.as_f64()).is_some());
+        }
+        // the flag is inert without the engine path
+        let scalar = DigitalSession::with_engine_profiled(qk, false, true);
+        assert!(scalar.profile().is_none());
     }
 
     #[test]

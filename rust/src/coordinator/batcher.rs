@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 use super::backend::{ExecOptions, RowOutput};
 use super::scheduler::{Recv, Scheduler};
 use crate::error::{Error, Result};
+use crate::obs::trace::TraceHandle;
 
 /// One queued inference request. `respond` is a rendezvous channel the
 /// worker pushes the result into (a one-shot). `opts` rides with the
@@ -27,6 +28,11 @@ pub struct Request {
     pub opts: ExecOptions,
     pub enqueued: Instant,
     pub respond: SyncSender<Result<RowOutput>>,
+    /// Observability span for sampled requests (`None` for the
+    /// unsampled majority): the batcher and workers stamp queue /
+    /// batch / execute stage boundaries into it as the request moves
+    /// through the pipeline (`docs/OBSERVABILITY.md`).
+    pub trace: Option<TraceHandle>,
 }
 
 /// A closed batch ready for a backend.
@@ -121,6 +127,7 @@ mod tests {
                 opts: ExecOptions::default(),
                 enqueued: Instant::now(),
                 respond: tx,
+                trace: None,
             },
             rx,
         )
@@ -130,7 +137,7 @@ mod tests {
         Arc::new(Scheduler::new(capacity, SchedulerOptions::default()))
     }
 
-    fn admit(s: &Scheduler, v: f32) -> StdReceiver<Result<Vec<f32>>> {
+    fn admit(s: &Scheduler, v: f32) -> StdReceiver<Result<RowOutput>> {
         let (req, rx) = mk_request(v);
         match s.try_submit(ClientId::fresh(), req) {
             Submit::Admitted => rx,
@@ -201,6 +208,7 @@ mod tests {
             opts: ExecOptions::default(),
             enqueued: Instant::now() - Duration::from_millis(50),
             respond: tx,
+            trace: None,
         };
         let batch = Batch { requests: vec![early], closed_at: Instant::now() };
         assert!(batch.max_queue_wait() >= Duration::from_millis(50));

@@ -150,6 +150,11 @@ impl Inner {
                 self.batched_rows as f64 / self.batches as f64
             },
             shadow: None,
+            queue_depth: None,
+            queue_clients: None,
+            max_client_backlog: None,
+            stages: None,
+            engine_profile: None,
         }
     }
 }
@@ -184,6 +189,22 @@ pub struct MetricsReport {
     /// Shadow-execution divergence, when the model runs with a mirror
     /// backend (attached by the registry; `None` for plain pipelines).
     pub shadow: Option<ShadowReport>,
+    /// Instantaneous admission-queue depth (rows queued across all
+    /// clients). Attached by the serving layer that owns the scheduler;
+    /// `None` when the report comes from a bare [`Metrics`].
+    pub queue_depth: Option<usize>,
+    /// Distinct clients with queued rows (`drr` only; 0 under `fifo`).
+    pub queue_clients: Option<usize>,
+    /// Deepest single-client backlog (`drr` only; 0 under `fifo`).
+    pub max_client_backlog: Option<usize>,
+    /// Per-stage p50/p99 rollup over sampled request traces (attached
+    /// from the [`crate::obs::trace::TraceHub`]; `None` when tracing is
+    /// off or nothing completed yet) — see `docs/OBSERVABILITY.md`.
+    pub stages: Option<crate::obs::trace::StageReport>,
+    /// Live engine profile (tiles touched, fused hits, per-layer
+    /// interval occupancy vs the SAM calibration prior), when the
+    /// model's session runs with profiling on.
+    pub engine_profile: Option<Value>,
 }
 
 impl MetricsReport {
@@ -202,6 +223,21 @@ impl MetricsReport {
         ];
         if let Some(s) = &self.shadow {
             fields.push(("shadow", s.to_value()));
+        }
+        if let Some(d) = self.queue_depth {
+            fields.push(("queue_depth", Value::Int(d as i64)));
+        }
+        if let Some(c) = self.queue_clients {
+            fields.push(("queue_clients", Value::Int(c as i64)));
+        }
+        if let Some(b) = self.max_client_backlog {
+            fields.push(("max_client_backlog", Value::Int(b as i64)));
+        }
+        if let Some(st) = &self.stages {
+            fields.push(("stages", st.to_value()));
+        }
+        if let Some(p) = &self.engine_profile {
+            fields.push(("engine_profile", p.clone()));
         }
         obj(fields)
     }
@@ -364,6 +400,11 @@ impl MetricsHub {
                 batched_rows as f64 / batches as f64
             },
             shadow: None,
+            queue_depth: None,
+            queue_clients: None,
+            max_client_backlog: None,
+            stages: None,
+            engine_profile: None,
         }
     }
 }
@@ -839,6 +880,42 @@ mod tests {
         assert!(mr.to_value().get("shadow").is_none());
         mr.shadow = Some(r);
         assert!(mr.to_value().get("shadow").unwrap().get("flip_rate").is_some());
+    }
+
+    #[test]
+    fn optional_report_sections_serialize_when_attached() {
+        use crate::obs::trace::{StageReport, STAGES};
+        let mut r = Metrics::new().report();
+        let v = r.to_value();
+        assert!(v.get("queue_depth").is_none());
+        assert!(v.get("stages").is_none());
+        assert!(v.get("engine_profile").is_none());
+        r.queue_depth = Some(7);
+        r.queue_clients = Some(2);
+        r.max_client_backlog = Some(4);
+        r.stages = Some(StageReport {
+            count: 3,
+            p50_us: [1; STAGES],
+            p99_us: [2; STAGES],
+        });
+        r.engine_profile = Some(obj(vec![("samples", Value::Int(5))]));
+        let v = r.to_value();
+        assert_eq!(v.get("queue_depth").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(v.get("queue_clients").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(v.get("max_client_backlog").unwrap().as_i64().unwrap(), 4);
+        assert_eq!(
+            v.get("stages").unwrap().get("count").unwrap().as_i64().unwrap(),
+            3
+        );
+        assert_eq!(
+            v.get("engine_profile")
+                .unwrap()
+                .get("samples")
+                .unwrap()
+                .as_i64()
+                .unwrap(),
+            5
+        );
     }
 
     #[test]

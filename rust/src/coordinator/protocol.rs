@@ -383,6 +383,12 @@ pub enum Request {
     ModelInfo { id: i64, model: String },
     /// Serving + wire metrics snapshot.
     Metrics { id: i64 },
+    /// The same snapshot rendered as Prometheus text exposition format
+    /// (see `docs/OBSERVABILITY.md`).
+    MetricsProm { id: i64 },
+    /// Recent sampled request traces (newest first), capped at `limit`
+    /// spans when given.
+    Trace { id: i64, limit: Option<usize> },
     /// Endpoint health.
     Health { id: i64 },
 }
@@ -397,6 +403,8 @@ impl Request {
             | Request::ListModels { id }
             | Request::ModelInfo { id, .. }
             | Request::Metrics { id }
+            | Request::MetricsProm { id }
+            | Request::Trace { id, .. }
             | Request::Health { id } => *id,
         }
     }
@@ -442,6 +450,14 @@ impl Request {
                 obj(fields)
             }
             Request::Metrics { id } => obj(base(*id, "metrics")),
+            Request::MetricsProm { id } => obj(base(*id, "metrics_prom")),
+            Request::Trace { id, limit } => {
+                let mut fields = base(*id, "trace");
+                if let Some(n) = limit {
+                    fields.push(("limit", Value::Int(*n as i64)));
+                }
+                obj(fields)
+            }
             Request::Health { id } => obj(base(*id, "health")),
         }
     }
@@ -499,6 +515,19 @@ impl Request {
                 None => Err(WireError::bad(Some(id), "'model_info' requires 'model'")),
             },
             "metrics" => Ok(Request::Metrics { id }),
+            "metrics_prom" => Ok(Request::MetricsProm { id }),
+            "trace" => {
+                let limit = match v.get("limit") {
+                    None | Some(Value::Null) => None,
+                    Some(l) => Some(l.as_usize().ok_or_else(|| {
+                        WireError::bad(
+                            Some(id),
+                            "'limit' must be a non-negative integer",
+                        )
+                    })?),
+                };
+                Ok(Request::Trace { id, limit })
+            }
             "health" => Ok(Request::Health { id }),
             other => Err(WireError {
                 id: Some(id),
@@ -651,6 +680,11 @@ pub enum Response {
     /// counters); kept as JSON because its shape evolves with the
     /// metrics, not with the protocol.
     Metrics { id: i64, body: Value },
+    /// The metrics snapshot rendered as Prometheus text exposition.
+    MetricsProm { id: i64, text: String },
+    /// Free-form trace report (sampler summary + recent spans); JSON
+    /// for the same reason as `Metrics`.
+    Trace { id: i64, body: Value },
     Health { id: i64, status: String, models_live: usize },
     /// `id` is `None` for connection-level errors (unparseable frame,
     /// oversized payload) that cannot be correlated. `retry_after_ms` is
@@ -664,6 +698,37 @@ pub enum Response {
     },
 }
 
+/// Merge transport framing (`id`, `op`) into a free-form report body —
+/// the serialization of body-carrying responses (`metrics`, `trace`).
+/// A non-object body is wrapped under `"body"` so the framing fields
+/// can never be clobbered.
+fn merge_body(id: i64, op: &str, body: &Value) -> Value {
+    let mut map = match body {
+        Value::Object(m) => m.clone(),
+        other => {
+            let mut m = BTreeMap::new();
+            m.insert("body".to_string(), other.clone());
+            m
+        }
+    };
+    map.insert("id".to_string(), Value::Int(id));
+    map.insert("op".to_string(), Value::Str(op.to_string()));
+    Value::Object(map)
+}
+
+/// Strip the transport framing back out of a body-carrying response so
+/// the body round-trips symmetrically (`v` is an object — `op` was
+/// just read from it).
+fn strip_body(v: &Value) -> Value {
+    let mut map = match v {
+        Value::Object(m) => m.clone(),
+        _ => BTreeMap::new(),
+    };
+    map.remove("id");
+    map.remove("op");
+    Value::Object(map)
+}
+
 impl Response {
     pub fn id(&self) -> Option<i64> {
         match self {
@@ -674,6 +739,8 @@ impl Response {
             | Response::ModelList { id, .. }
             | Response::ModelInfo { id, .. }
             | Response::Metrics { id, .. }
+            | Response::MetricsProm { id, .. }
+            | Response::Trace { id, .. }
             | Response::Health { id, .. } => Some(*id),
             Response::Error { id, .. } => *id,
         }
@@ -716,19 +783,13 @@ impl Response {
                 fields.push(("model", model.to_value()));
                 obj(fields)
             }
-            Response::Metrics { id, body } => {
-                let mut map = match body {
-                    Value::Object(m) => m.clone(),
-                    other => {
-                        let mut m = BTreeMap::new();
-                        m.insert("body".to_string(), other.clone());
-                        m
-                    }
-                };
-                map.insert("id".to_string(), Value::Int(*id));
-                map.insert("op".to_string(), Value::Str("metrics".to_string()));
-                Value::Object(map)
+            Response::Metrics { id, body } => merge_body(*id, "metrics", body),
+            Response::MetricsProm { id, text } => {
+                let mut fields = base(*id, "metrics_prom");
+                fields.push(("text", Value::Str(text.clone())));
+                obj(fields)
             }
+            Response::Trace { id, body } => merge_body(*id, "trace", body),
             Response::Health { id, status, models_live } => {
                 let mut fields = base(*id, "health");
                 fields.push(("status", Value::Str(status.clone())));
@@ -823,19 +884,12 @@ impl Response {
                 id,
                 model: ModelSummary::from_value(v.field("model")?)?,
             }),
-            "metrics" => {
-                // strip the transport framing `to_value` merged in, so
-                // the body is the report alone and the variant
-                // round-trips symmetrically (`v` is an object — `op`
-                // was just read from it)
-                let mut map = match v {
-                    Value::Object(m) => m.clone(),
-                    _ => BTreeMap::new(),
-                };
-                map.remove("id");
-                map.remove("op");
-                Ok(Response::Metrics { id, body: Value::Object(map) })
-            }
+            "metrics" => Ok(Response::Metrics { id, body: strip_body(v) }),
+            "metrics_prom" => Ok(Response::MetricsProm {
+                id,
+                text: v.req_str("text")?.to_string(),
+            }),
+            "trace" => Ok(Response::Trace { id, body: strip_body(v) }),
             "health" => Ok(Response::Health {
                 id,
                 status: v.req_str("status")?.to_string(),
@@ -933,7 +987,15 @@ mod tests {
         roundtrip_request(Request::ListModels { id: 7 });
         roundtrip_request(Request::ModelInfo { id: 8, model: "kan2".into() });
         roundtrip_request(Request::Metrics { id: 9 });
+        roundtrip_request(Request::MetricsProm { id: 12 });
+        roundtrip_request(Request::Trace { id: 13, limit: None });
+        roundtrip_request(Request::Trace { id: 14, limit: Some(16) });
         roundtrip_request(Request::Health { id: 10 });
+        // a non-integer trace limit is a typed bad_request
+        let err = Request::from_bytes(br#"{"id":1,"op":"trace","limit":"x"}"#)
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("limit"), "{}", err.message);
     }
 
     #[test]
@@ -1048,6 +1110,16 @@ mod tests {
             },
         });
         roundtrip_response(Response::Health { id: 7, status: "ok".into(), models_live: 2 });
+        roundtrip_response(Response::MetricsProm {
+            id: 13,
+            text: "# TYPE kan_edge_wire_v2_requests gauge\n\
+                   kan_edge_wire_v2_requests 4\n"
+                .into(),
+        });
+        roundtrip_response(Response::Trace {
+            id: 14,
+            body: Value::parse(r#"{"spans":[],"summary":{"ring_len":0}}"#).unwrap(),
+        });
         roundtrip_response(Response::Error {
             id: Some(8),
             code: ErrorCode::NotFound,

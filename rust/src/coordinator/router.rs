@@ -69,6 +69,14 @@ pub fn tcp_limits(cfg: &AppConfig) -> TcpLimits {
     }
 }
 
+/// Build the request-trace hub from the `[observability]` section.
+pub fn trace_hub(cfg: &AppConfig) -> Arc<crate::obs::trace::TraceHub> {
+    Arc::new(crate::obs::trace::TraceHub::new(
+        cfg.observability.sample_every,
+        cfg.observability.trace_ring,
+    ))
+}
+
 /// Compiles manifest entries into execution sessions, caching the
 /// expensive intermediate products (per-layer calibration occupancy)
 /// across builds.
@@ -145,9 +153,10 @@ impl BackendFactory {
             }
             BackendKind::Digital => {
                 let qk = QuantKanModel::load(self.dir.join(&entry.weights))?;
-                Ok(Arc::new(DigitalSession::with_engine(
+                Ok(Arc::new(DigitalSession::with_engine_profiled(
                     Arc::new(qk),
                     self.cfg.server.engine,
+                    self.cfg.observability.engine_profiling,
                 )))
             }
             BackendKind::Acim => {

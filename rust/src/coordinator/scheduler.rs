@@ -114,6 +114,20 @@ pub enum Recv {
     Closed,
 }
 
+/// Point-in-time scheduler occupancy, exported as gauges in
+/// [`super::metrics::MetricsReport`] (the only queue visibility before
+/// this was the indirect `retry_after_ms` drain-rate hint).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueGauges {
+    /// Rows queued across all clients.
+    pub depth: usize,
+    /// Clients with at least one queued row. Always 0 under `fifo`,
+    /// which keeps no per-client accounting.
+    pub clients: usize,
+    /// Largest single-client backlog (`drr` only; 0 under `fifo`).
+    pub max_client_backlog: usize,
+}
+
 #[derive(Default)]
 struct Inner {
     /// `fifo` storage: one global arrival-order queue.
@@ -171,6 +185,25 @@ impl Scheduler {
     /// Rows currently queued across all clients.
     pub fn queued(&self) -> usize {
         self.inner.lock().unwrap().total
+    }
+
+    /// Point-in-time queue gauges for the metrics plane (one lock
+    /// acquisition; never taken on the admission or drain paths).
+    pub fn gauges(&self) -> QueueGauges {
+        let g = self.inner.lock().unwrap();
+        match self.opts.mode {
+            // fifo keeps no per-client accounting — one shared queue
+            SchedMode::Fifo => QueueGauges {
+                depth: g.total,
+                clients: 0,
+                max_client_backlog: 0,
+            },
+            SchedMode::Drr => QueueGauges {
+                depth: g.total,
+                clients: g.queues.len(),
+                max_client_backlog: g.queues.values().map(VecDeque::len).max().unwrap_or(0),
+            },
+        }
     }
 
     /// Non-blocking admission: reject over capacity, and in `drr` mode
@@ -386,6 +419,7 @@ mod tests {
                 opts: crate::coordinator::backend::ExecOptions::default(),
                 enqueued: Instant::now(),
                 respond: tx,
+                trace: None,
             },
             rx,
         )
@@ -533,6 +567,28 @@ mod tests {
             Recv::Timeout
         ));
         assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn gauges_snapshot_depth_and_backlogs() {
+        let s = Scheduler::new(16, opts(SchedMode::Drr, 8, 2));
+        let a = ClientId::fresh();
+        let b = ClientId::fresh();
+        admit(&s, a, 1.0);
+        admit(&s, a, 2.0);
+        admit(&s, a, 3.0);
+        admit(&s, b, 4.0);
+        let g = s.gauges();
+        assert_eq!(g.depth, 4);
+        assert_eq!(g.clients, 2);
+        assert_eq!(g.max_client_backlog, 3);
+        let _ = s.recv().unwrap();
+        assert_eq!(s.gauges().depth, 3);
+        // fifo keeps no per-client accounting: depth only
+        let f = Scheduler::new(16, opts(SchedMode::Fifo, 8, 2));
+        admit(&f, ClientId::fresh(), 1.0);
+        let g = f.gauges();
+        assert_eq!((g.depth, g.clients, g.max_client_backlog), (1, 0, 0));
     }
 
     #[test]

@@ -24,9 +24,11 @@ use super::batcher::{run_batcher, Batch, BatchPolicy, Request};
 use super::metrics::{Metrics, MetricsReport};
 use super::protocol::ModelSummary;
 use super::scheduler::{
-    ClientId, RejectReason, Rejection, SchedMode, Scheduler, SchedulerOptions, Submit,
+    ClientId, QueueGauges, RejectReason, Rejection, SchedMode, Scheduler,
+    SchedulerOptions, Submit,
 };
 use crate::error::{Error, Result};
+use crate::obs::trace::{Stage, TraceHandle};
 
 /// Serving configuration (see `config::ServerConfig` and
 /// `config::SchedulerConfig` for the file side).
@@ -54,11 +56,28 @@ impl Default for ServeOptions {
 /// layers into [`Dispatch`]: the optional model spec (`None` = default
 /// model), the optional backend kind (`None` = the model's primary
 /// backend), and the execution options.
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, Default)]
 pub struct RouteSpec {
     pub model: Option<String>,
     pub backend: Option<BackendKind>,
     pub opts: ExecOptions,
+    /// Observability span for sampled requests (`None` for the
+    /// unsampled majority). Not part of routing identity — see the
+    /// manual [`PartialEq`] below — it merely rides the same path so
+    /// the admission and worker layers can stamp stage boundaries
+    /// (`docs/OBSERVABILITY.md`).
+    pub trace: Option<TraceHandle>,
+}
+
+/// Routing identity ignores the trace span: two routes that resolve to
+/// the same model/backend/options are equal whether or not either
+/// request happens to be sampled.
+impl PartialEq for RouteSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.model == other.model
+            && self.backend == other.backend
+            && self.opts == other.opts
+    }
 }
 
 impl RouteSpec {
@@ -87,6 +106,9 @@ pub struct InferenceService {
     /// The served session's capability descriptor: admission validates
     /// row shapes against it, and the control plane surfaces it.
     spec: BackendSpec,
+    /// The session the worker pool executes — kept so the control plane
+    /// can read its live profile ([`ExecutionSession::profile`]).
+    session: Arc<dyn ExecutionSession>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -125,12 +147,25 @@ impl InferenceService {
                 .expect("spawn worker");
         }
         let closer = Arc::new(SchedulerCloser(sched.clone()));
-        Self { sched, _closer: closer, spec, metrics }
+        Self { sched, _closer: closer, spec, session, metrics }
     }
 
     /// Capability descriptor of the session this service executes.
     pub fn backend_spec(&self) -> &BackendSpec {
         &self.spec
+    }
+
+    /// The execution session behind this service (for control-plane
+    /// reads such as [`ExecutionSession::profile`]).
+    pub fn session(&self) -> &Arc<dyn ExecutionSession> {
+        &self.session
+    }
+
+    /// Instantaneous admission-queue gauges (depth, distinct clients,
+    /// deepest per-client backlog) — exported via
+    /// [`MetricsReport`](super::metrics::MetricsReport).
+    pub fn queue_gauges(&self) -> QueueGauges {
+        self.sched.gauges()
     }
 
     /// Admission-time row validation: shape (when the session declares
@@ -181,11 +216,36 @@ impl InferenceService {
         features: Vec<f32>,
         opts: ExecOptions,
     ) -> Result<RowOutput> {
+        self.infer_traced_from(client, features, opts, None)
+    }
+
+    /// Like [`InferenceService::infer_opts_from`] with an optional
+    /// observability span: the admission stage is stamped here on
+    /// successful submit, and the handle rides the queued request so
+    /// the batcher/worker layers stamp the remaining stages
+    /// (`docs/OBSERVABILITY.md`).
+    pub fn infer_traced_from(
+        &self,
+        client: ClientId,
+        features: Vec<f32>,
+        opts: ExecOptions,
+        trace: Option<TraceHandle>,
+    ) -> Result<RowOutput> {
         self.check_shape(&features)?;
         let (tx, rx) = sync_channel(1);
-        let req = Request { features, opts, enqueued: Instant::now(), respond: tx };
+        let req = Request {
+            features,
+            opts,
+            enqueued: Instant::now(),
+            respond: tx,
+            trace: trace.clone(),
+        };
         match self.sched.try_submit(client, req) {
-            Submit::Admitted => {}
+            Submit::Admitted => {
+                if let Some(t) = &trace {
+                    t.mark(Stage::Admission);
+                }
+            }
             Submit::Rejected(r) => {
                 // the rejected request's respond channel pairs with `rx`
                 // below, which we are about to drop — the error goes to
@@ -262,6 +322,10 @@ impl InferenceService {
                 opts: row_opts,
                 enqueued: Instant::now(),
                 respond: tx,
+                // only single-row v2 requests are traced: a batch's rows
+                // interleave arbitrarily under drr, so one span cannot
+                // represent the batch's pipeline passage faithfully
+                trace: None,
             };
             if !admitted_head {
                 match self.sched.try_submit(client, req) {
@@ -365,6 +429,7 @@ pub trait Dispatch: Send + Sync {
                 model: route.model.clone(),
                 backend: route.backend,
                 opts: route.opts.for_row(i),
+                trace: None,
             };
             let (mid, logits) = self.dispatch(client, &row_route, row)?;
             id = mid;
@@ -400,7 +465,8 @@ impl Dispatch for InferenceService {
             return Err(single_model_error(m));
         }
         self.check_backend(route.backend)?;
-        let out = self.infer_opts_from(client, features, route.opts)?;
+        let out =
+            self.infer_traced_from(client, features, route.opts, route.trace.clone())?;
         Ok(("default".to_string(), out))
     }
 
@@ -433,7 +499,13 @@ impl Dispatch for InferenceService {
     }
 
     fn metrics_reports(&self) -> Vec<(String, MetricsReport)> {
-        vec![("default".to_string(), self.metrics.report())]
+        let mut report = self.metrics.report();
+        let g = self.queue_gauges();
+        report.queue_depth = Some(g.depth);
+        report.queue_clients = Some(g.clients);
+        report.max_client_backlog = Some(g.max_client_backlog);
+        report.engine_profile = self.session.profile();
+        vec![("default".to_string(), report)]
     }
 }
 
@@ -482,20 +554,33 @@ fn worker_loop(
         };
         m.record_batch(batch.len());
         let queue_wait = batch.max_queue_wait();
+        let closed_at = batch.closed_at;
         // move the feature rows out of the requests: the session takes
         // ownership (no per-dispatch copy), the waiters keep only the
-        // response channel and the enqueue timestamp
+        // response channel, the enqueue timestamp, and the trace span
         let mut rows = Vec::with_capacity(batch.requests.len());
         let mut opts = Vec::with_capacity(batch.requests.len());
         let mut waiters = Vec::with_capacity(batch.requests.len());
         for req in batch.requests {
+            if let Some(t) = &req.trace {
+                // queue ends when the batcher closed the batch; the gap
+                // from there to here (channel hop + worker pickup) is
+                // the batch stage
+                t.mark_at(Stage::Queue, closed_at);
+                t.mark(Stage::Batch);
+            }
             rows.push(req.features);
             opts.push(req.opts);
-            waiters.push((req.enqueued, req.respond));
+            waiters.push((req.enqueued, req.respond, req.trace));
         }
         match session.run(rows, &opts) {
             Ok(outputs) => {
-                for ((enqueued, respond), out) in waiters.into_iter().zip(outputs) {
+                for ((enqueued, respond, trace), out) in
+                    waiters.into_iter().zip(outputs)
+                {
+                    if let Some(t) = &trace {
+                        t.mark(Stage::Execute);
+                    }
                     let latency = enqueued.elapsed();
                     m.record_request(latency, queue_wait);
                     let _ = respond.try_send(Ok(out));
@@ -504,7 +589,10 @@ fn worker_loop(
             Err(e) => {
                 m.record_error();
                 let msg = e.to_string();
-                for (_, respond) in waiters {
+                for (_, respond, trace) in waiters {
+                    if let Some(t) = &trace {
+                        t.mark(Stage::Execute);
+                    }
                     let _ = respond.try_send(Err(Error::Serving(msg.clone())));
                 }
             }
@@ -598,6 +686,34 @@ mod tests {
         let out = svc.infer(vec![21.0]).unwrap();
         assert_eq!(out, vec![42.0]);
         assert_eq!(svc.metrics.report().requests, 1);
+    }
+
+    #[test]
+    fn traced_request_stamps_pipeline_stages() {
+        use crate::obs::trace::SpanCell;
+        let svc = InferenceService::start(Arc::new(Doubler), ServeOptions::default());
+        let span = Arc::new(SpanCell::new(7));
+        let out = svc
+            .infer_traced_from(
+                ClientId::fresh(),
+                vec![3.0],
+                ExecOptions::default(),
+                Some(span.clone()),
+            )
+            .unwrap();
+        assert_eq!(out.logits, vec![6.0]);
+        let offs = span.offsets_us();
+        for s in [Stage::Admission, Stage::Queue, Stage::Batch, Stage::Execute] {
+            assert!(offs[s as usize].is_some(), "stage {} not stamped", s.as_str());
+        }
+        // the respond stage belongs to the wire layer, which this
+        // direct-API call never touches
+        assert!(offs[Stage::Respond as usize].is_none());
+        // stamped offsets are monotone in stage order
+        let stamped: Vec<u64> = offs.iter().flatten().copied().collect();
+        for w in stamped.windows(2) {
+            assert!(w[0] <= w[1], "offsets not monotone: {stamped:?}");
+        }
     }
 
     #[test]

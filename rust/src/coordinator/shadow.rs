@@ -90,9 +90,12 @@ impl ShadowState {
         if let Err(e) = spawned {
             // no worker ⇒ the receiver is gone and every enqueue counts
             // as a drop; say so once instead of degrading silently
-            eprintln!(
-                "warning: cannot spawn shadow mirror worker ({e}); every \
-                 sampled row will be counted as dropped"
+            crate::obs::log::warn(
+                "shadow",
+                &format!(
+                    "cannot spawn shadow mirror worker ({e}); every \
+                     sampled row will be counted as dropped"
+                ),
             );
         }
         Arc::new(ShadowState {

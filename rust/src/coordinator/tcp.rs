@@ -40,6 +40,7 @@ use super::protocol::{
 use super::scheduler::ClientId;
 use super::server::{Dispatch, RouteSpec};
 use crate::error::{Error, Result};
+use crate::obs::trace::{Stage, TraceHub};
 use crate::util::json::{obj, Value};
 
 /// Per-connection transport limits (file side: the `[server]` config
@@ -59,6 +60,10 @@ impl Default for TcpLimits {
     }
 }
 
+/// Spans returned by the v2 `trace` verb when the request names no
+/// `limit` (the ring may hold more; see `observability.trace_ring`).
+const DEFAULT_TRACE_SPANS: usize = 32;
+
 /// A running TCP server; `shutdown` stops the accept loop promptly and
 /// joins it (open connections finish on their own threads).
 pub struct TcpServer {
@@ -66,6 +71,9 @@ pub struct TcpServer {
     /// Transport counters (v1/v2 split, connections, in-flight HWM);
     /// also served by the v2 `metrics` verb.
     pub wire: Arc<WireMetrics>,
+    /// Request-trace sampler + span ring serving the v2 `trace` verb
+    /// (a disabled hub when the server was spawned without one).
+    pub trace: Arc<TraceHub>,
     stop: Arc<AtomicBool>,
     accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -77,11 +85,23 @@ impl TcpServer {
         Self::spawn_with_limits(addr, target, TcpLimits::default())
     }
 
-    /// Like [`TcpServer::spawn`] with explicit transport limits.
+    /// Like [`TcpServer::spawn`] with explicit transport limits (request
+    /// tracing disabled).
     pub fn spawn_with_limits(
         addr: &str,
         target: Arc<dyn Dispatch>,
         limits: TcpLimits,
+    ) -> Result<TcpServer> {
+        Self::spawn_with_obs(addr, target, limits, Arc::new(TraceHub::disabled()))
+    }
+
+    /// Like [`TcpServer::spawn_with_limits`] with a request-trace hub
+    /// (see [`super::router::trace_hub`] for the config-driven one).
+    pub fn spawn_with_obs(
+        addr: &str,
+        target: Arc<dyn Dispatch>,
+        limits: TcpLimits,
+        trace: Arc<TraceHub>,
     ) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -89,6 +109,7 @@ impl TcpServer {
         let stop2 = stop.clone();
         let wire = Arc::new(WireMetrics::new());
         let wire2 = wire.clone();
+        let trace2 = trace.clone();
         let handle = std::thread::Builder::new()
             .name("kan-edge-tcp".into())
             .spawn(move || {
@@ -103,11 +124,15 @@ impl TcpServer {
                         Ok(s) => {
                             let target = target.clone();
                             let wire = wire2.clone();
+                            let trace = trace2.clone();
                             std::thread::spawn(move || {
-                                handle_conn(s, target, limits, wire)
+                                handle_conn(s, target, limits, wire, trace)
                             });
                         }
-                        Err(e) => eprintln!("accept error: {e}"),
+                        Err(e) => crate::obs::log::warn(
+                            "tcp",
+                            &format!("accept error: {e}"),
+                        ),
                     }
                 }
                 // listener drops here: the port is released by the time
@@ -117,6 +142,7 @@ impl TcpServer {
         Ok(TcpServer {
             addr: local,
             wire,
+            trace,
             stop,
             accept_thread: Mutex::new(Some(handle)),
         })
@@ -152,9 +178,10 @@ pub fn handle_conn(
     target: Arc<dyn Dispatch>,
     limits: TcpLimits,
     wire: Arc<WireMetrics>,
+    trace: Arc<TraceHub>,
 ) {
     wire.connection_opened();
-    serve_conn(stream, target, limits, &wire);
+    serve_conn(stream, target, limits, &wire, trace);
     wire.connection_closed();
 }
 
@@ -163,6 +190,7 @@ fn serve_conn(
     target: Arc<dyn Dispatch>,
     limits: TcpLimits,
     wire: &Arc<WireMetrics>,
+    trace: Arc<TraceHub>,
 ) {
     let client = ClientId::fresh();
     // protocol sniff: a v2 connection opens with the 4-byte magic; the
@@ -198,7 +226,7 @@ fn serve_conn(
                 return;
             }
             if prefix.len() == protocol::MAGIC.len() {
-                serve_v2(stream, client, target, limits, wire);
+                serve_v2(stream, client, target, limits, wire, trace);
                 return;
             }
         }
@@ -502,6 +530,7 @@ struct V2Conn {
     writer: Arc<Mutex<TcpStream>>,
     in_flight: Arc<InFlight>,
     wire: Arc<WireMetrics>,
+    trace: Arc<TraceHub>,
     limits: TcpLimits,
 }
 
@@ -511,6 +540,7 @@ fn serve_v2(
     target: Arc<dyn Dispatch>,
     limits: TcpLimits,
     wire: &Arc<WireMetrics>,
+    trace: Arc<TraceHub>,
 ) {
     let writer = match stream.try_clone() {
         Ok(w) => Arc::new(Mutex::new(w)),
@@ -523,6 +553,7 @@ fn serve_v2(
         writer,
         in_flight: Arc::new(InFlight::new(limits.max_in_flight)),
         wire: wire.clone(),
+        trace,
         limits,
     };
     loop {
@@ -580,6 +611,29 @@ fn send_response(writer: &Mutex<TcpStream>, resp: &Response) -> std::io::Result<
 impl V2Conn {
     fn send(&self, resp: &Response) -> std::io::Result<()> {
         send_response(&self.writer, resp)
+    }
+
+    /// The metrics snapshot body: per-model serving reports (with the
+    /// per-stage trace rollup folded in), the trace-sampler summary,
+    /// and the wire counters. Shared by the `metrics` (JSON) and
+    /// `metrics_prom` (Prometheus text) verbs so both expose the same
+    /// numbers.
+    fn metrics_body(&self) -> Value {
+        let models = self
+            .target
+            .metrics_reports()
+            .into_iter()
+            .map(|(mid, mut r)| {
+                r.stages = self.trace.stage_report(&mid);
+                (mid, r.to_value())
+            })
+            .collect::<Vec<_>>();
+        let models_obj = Value::Object(models.into_iter().collect());
+        obj(vec![
+            ("models", models_obj),
+            ("trace", self.trace.summary_value()),
+            ("wire", self.wire.to_value()),
+        ])
     }
 
     /// Handle one parsed request; returns `false` when the connection
@@ -644,18 +698,18 @@ impl V2Conn {
             }
             Request::Metrics { id } => {
                 self.wire.record_v2_control();
-                let models = self
-                    .target
-                    .metrics_reports()
-                    .into_iter()
-                    .map(|(mid, r)| (mid, r.to_value()))
-                    .collect::<Vec<_>>();
-                let models_obj = Value::Object(models.into_iter().collect());
-                let body = obj(vec![
-                    ("models", models_obj),
-                    ("wire", self.wire.to_value()),
-                ]);
+                let body = self.metrics_body();
                 self.send(&Response::Metrics { id, body }).is_ok()
+            }
+            Request::MetricsProm { id } => {
+                self.wire.record_v2_control();
+                let text = crate::obs::prom::render(&self.metrics_body());
+                self.send(&Response::MetricsProm { id, text }).is_ok()
+            }
+            Request::Trace { id, limit } => {
+                self.wire.record_v2_control();
+                let body = self.trace.to_value(limit.unwrap_or(DEFAULT_TRACE_SPANS));
+                self.send(&Response::Trace { id, body }).is_ok()
             }
             Request::Health { id } => {
                 self.wire.record_v2_control();
@@ -668,7 +722,11 @@ impl V2Conn {
             }
             Request::Infer { id, model, backend, exec, features } => {
                 self.wire.record_v2_infer(1);
-                let route = route_for(model, backend, exec);
+                let mut route = route_for(model, backend, exec);
+                // single-row requests are the traced unit: the sampler
+                // decides here, the span's t0 is now, and the stages are
+                // stamped as the request crosses each pipeline layer
+                route.trace = self.trace.sample(id);
                 self.dispatch_async(id, route, Work::One { features });
                 true
             }
@@ -692,6 +750,9 @@ impl V2Conn {
         let client = self.client;
         let target = self.target.clone();
         let writer = self.writer.clone();
+        let hub = self.trace.clone();
+        let span = route.trace.clone();
+        let requested_model = route.model.clone();
         let spawned = std::thread::Builder::new()
             .name("kan-edge-v2-dispatch".into())
             .spawn(move || {
@@ -709,6 +770,17 @@ impl V2Conn {
                     retry_after_ms: None,
                 });
                 let _ = send_response(&writer, &resp);
+                if let Some(s) = &span {
+                    // respond closes after the frame write; key the
+                    // rollup by the id that actually served (errors
+                    // yield incomplete spans, ring-only)
+                    s.mark(Stage::Respond);
+                    let model = match &resp {
+                        Response::Infer { model, .. } => model.clone(),
+                        _ => requested_model.unwrap_or_else(|| "default".into()),
+                    };
+                    hub.finish(s, &model);
+                }
             });
         if spawned.is_err() {
             // thread exhaustion: the un-run closure was dropped (slot

@@ -19,6 +19,7 @@ use crate::kan::checkpoint::Dataset;
 use crate::kan::model::{argmax, QuantKanModel};
 use crate::kan::plan::{KanPlan, PlanOptions};
 use crate::mapping::MappingStrategy;
+use crate::util::json::{arr, obj, Value};
 
 /// Engine construction knobs.
 #[derive(Debug, Clone, Copy)]
@@ -57,6 +58,122 @@ pub struct EngineScratch {
     /// between layers.
     h: Vec<f64>,
     h2: Vec<f64>,
+    /// Opt-in profiling counters (see [`EngineProfile`]). `None` — the
+    /// default — costs one branch per layer and nothing else; counters
+    /// are plain per-scratch integers, never atomics, and the update
+    /// reads the already-quantized codes, so profiling can not change
+    /// an output bit.
+    profile: Option<EngineProfile>,
+}
+
+impl EngineScratch {
+    /// The profiling counters accumulated by this scratch, if enabled.
+    pub fn profile(&self) -> Option<&EngineProfile> {
+        self.profile.as_ref()
+    }
+
+    /// Take the accumulated counters out, leaving zeroed counters in
+    /// place (the merge-then-reset idiom of the serving accumulator).
+    pub fn take_profile(&mut self) -> Option<EngineProfile> {
+        let p = self.profile.as_mut()?;
+        let taken = p.clone();
+        p.reset();
+        Some(taken)
+    }
+}
+
+/// Per-layer engine profiling counters.
+#[derive(Debug, Clone, Default)]
+pub struct LayerProfile {
+    /// Codes served by the tiled path (each code touches one
+    /// `(input, interval)` coefficient tile).
+    pub tiles_touched: u64,
+    /// Codes served by the per-code fused-row fast path.
+    pub fused_hits: u64,
+    /// Live interval-occupancy histogram, `din · G` buckets in the same
+    /// layout as the SAM calibration prior
+    /// ([`crate::kan::plan::LayerPlan::prior`]).
+    pub interval_counts: Vec<u64>,
+}
+
+/// Engine profiling counters for one plan: samples executed plus one
+/// [`LayerProfile`] per layer. Compare `interval_counts` against the
+/// stored calibration prior with [`crate::obs::rank_correlation`] to get
+/// the per-layer "mapping drift" statistic (`docs/OBSERVABILITY.md`).
+#[derive(Debug, Clone)]
+pub struct EngineProfile {
+    /// Samples (single-row forwards) executed while profiling.
+    pub samples: u64,
+    pub layers: Vec<LayerProfile>,
+}
+
+impl EngineProfile {
+    /// Zeroed counters shaped for `plan`.
+    pub fn new(plan: &KanPlan) -> EngineProfile {
+        EngineProfile {
+            samples: 0,
+            layers: plan
+                .layers
+                .iter()
+                .map(|l| LayerProfile {
+                    tiles_touched: 0,
+                    fused_hits: 0,
+                    interval_counts: vec![0u64; l.din * l.intervals()],
+                })
+                .collect(),
+        }
+    }
+
+    /// Accumulate `other` into `self` (shapes must match).
+    pub fn merge(&mut self, other: &EngineProfile) {
+        self.samples += other.samples;
+        for (dst, src) in self.layers.iter_mut().zip(&other.layers) {
+            dst.tiles_touched += src.tiles_touched;
+            dst.fused_hits += src.fused_hits;
+            for (d, s) in dst.interval_counts.iter_mut().zip(&src.interval_counts) {
+                *d += *s;
+            }
+        }
+    }
+
+    /// Zero all counters in place.
+    pub fn reset(&mut self) {
+        self.samples = 0;
+        for l in &mut self.layers {
+            l.tiles_touched = 0;
+            l.fused_hits = 0;
+            l.interval_counts.fill(0);
+        }
+    }
+
+    /// Render for the metrics plane: per layer the path counters plus
+    /// `mapping_drift_rankcorr`, the Spearman correlation between the
+    /// live occupancy histogram and the SAM calibration prior stored in
+    /// `plan` (1.0 = calibration ranking still matches traffic, ~0 =
+    /// unrelated; 0.0 also before any sample has been profiled).
+    pub fn to_value(&self, plan: &KanPlan) -> Value {
+        let layers: Vec<Value> = self
+            .layers
+            .iter()
+            .zip(&plan.layers)
+            .map(|(lp, pl)| {
+                let live: Vec<f64> =
+                    lp.interval_counts.iter().map(|&c| c as f64).collect();
+                obj(vec![
+                    ("tiles_touched", Value::Int(lp.tiles_touched as i64)),
+                    ("fused_hits", Value::Int(lp.fused_hits as i64)),
+                    (
+                        "mapping_drift_rankcorr",
+                        Value::Float(crate::obs::rank_correlation(pl.prior(), &live)),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("samples", Value::Int(self.samples as i64)),
+            ("layers", arr(layers)),
+        ])
+    }
 }
 
 /// The compiled, executable form of a [`QuantKanModel`].
@@ -121,7 +238,17 @@ impl KanEngine {
             acc: vec![0i64; w],
             h: vec![0.0f64; w],
             h2: vec![0.0f64; w],
+            profile: None,
         }
+    }
+
+    /// Like [`Self::new_scratch`] but with profiling counters attached:
+    /// every forward through this scratch also updates per-layer tile /
+    /// fused-path counts and the interval-occupancy histogram.
+    pub fn new_scratch_profiled(&self) -> EngineScratch {
+        let mut s = self.new_scratch();
+        s.profile = Some(EngineProfile::new(&self.plan));
+        s
     }
 
     /// Forward one sample into `out` using `s` — the zero-allocation
@@ -135,10 +262,28 @@ impl KanEngine {
         }
         let mut width = x.len();
         let last = self.plan.layers.len() - 1;
+        if let Some(p) = s.profile.as_mut() {
+            p.samples += 1;
+        }
         for (li, layer) in self.plan.layers.iter().enumerate() {
             debug_assert_eq!(width, layer.din);
             for (c, v) in s.codes.iter_mut().zip(&s.h[..width]) {
                 *c = layer.spec.quantize(*v);
+            }
+            // profiling reads the already-quantized codes and writes only
+            // its own per-scratch counters — it cannot perturb the
+            // integer dataflow below (bit-parity enforced in tests)
+            if let Some(p) = s.profile.as_mut() {
+                let lp = &mut p.layers[li];
+                let g = layer.intervals();
+                for (i, &q) in s.codes[..width].iter().enumerate() {
+                    lp.interval_counts[i * g + (q >> layer.spec.ld) as usize] += 1;
+                }
+                if layer.uses_fused() {
+                    lp.fused_hits += width as u64;
+                } else {
+                    lp.tiles_touched += width as u64;
+                }
             }
             let acc = &mut s.acc[..layer.dout];
             if li == last {
@@ -353,6 +498,70 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
             }
         }
+    }
+
+    #[test]
+    fn profiled_scratch_is_bit_identical_and_counts() {
+        let model = toy_model(5, 3, &[4, 3, 2]);
+        let engine = KanEngine::compile(&model, EngineOptions::default()).unwrap();
+        let mut plain = engine.new_scratch();
+        let mut prof = engine.new_scratch_profiled();
+        let mut lg = crate::data::LoadGen::new(5, 4);
+        let mut a = vec![0.0f64; 2];
+        let mut b = vec![0.0f64; 2];
+        for _ in 0..40 {
+            let x = lg.next_vec();
+            engine.forward_into(&x, &mut a, &mut plain);
+            engine.forward_into(&x, &mut b, &mut prof);
+            for (va, vb) in a.iter().zip(&b) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+        let p = prof.profile().unwrap();
+        assert_eq!(p.samples, 40);
+        assert_eq!(p.layers.len(), 2);
+        let l0 = &p.layers[0];
+        // every sample quantizes din codes, each landing in one interval
+        assert_eq!(l0.interval_counts.iter().sum::<u64>(), 40 * 4);
+        // the toy model fuses by default, so all codes hit the fast path
+        assert_eq!(l0.fused_hits, 40 * 4);
+        assert_eq!(l0.tiles_touched, 0);
+        // the rendered report carries one drift statistic per layer
+        let v = p.to_value(engine.plan());
+        let layers = v.get("layers").and_then(|l| l.as_array()).unwrap();
+        assert_eq!(layers.len(), 2);
+        for l in layers {
+            let d = l.get("mapping_drift_rankcorr").and_then(|x| x.as_f64()).unwrap();
+            assert!((-1.0..=1.0).contains(&d), "{d}");
+        }
+        // take_profile hands the counters out and zeroes the scratch
+        let taken = prof.take_profile().unwrap();
+        assert_eq!(taken.samples, 40);
+        assert_eq!(prof.profile().unwrap().samples, 0);
+        assert_eq!(
+            prof.profile().unwrap().layers[0].interval_counts.iter().sum::<u64>(),
+            0
+        );
+    }
+
+    #[test]
+    fn tiled_path_counts_tiles_not_fused() {
+        let model = toy_model(5, 3, &[3, 2]);
+        let engine = KanEngine::compile(
+            &model,
+            EngineOptions { fused_budget: 0, ..Default::default() },
+        )
+        .unwrap();
+        let mut s = engine.new_scratch_profiled();
+        let mut out = vec![0.0f64; 2];
+        let mut lg = crate::data::LoadGen::new(9, 3);
+        for _ in 0..10 {
+            let x = lg.next_vec();
+            engine.forward_into(&x, &mut out, &mut s);
+        }
+        let p = s.profile().unwrap();
+        assert_eq!(p.layers[0].tiles_touched, 10 * 3);
+        assert_eq!(p.layers[0].fused_hits, 0);
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod plan;
 pub mod spline;
 
 pub use checkpoint::{Dataset, KanCheckpoint, Manifest, MlpCheckpoint};
-pub use engine::{EngineOptions, EngineScratch, KanEngine};
+pub use engine::{EngineOptions, EngineProfile, EngineScratch, KanEngine, LayerProfile};
 pub use layer::QuantKanLayer;
 pub use model::{argmax, QuantKanModel};
 pub use plan::{KanPlan, LayerPlan, PlanOptions};

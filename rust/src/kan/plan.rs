@@ -83,6 +83,12 @@ pub struct LayerPlan {
     deq: Vec<f64>,
     /// The single integer→float conversion: `lut_scale · coeff_scale`.
     out_scale: f64,
+    /// The `din · G` interval-activation probabilities this layer's tile
+    /// placement was ranked by (empirical calibration occupancy or the
+    /// Gaussian prior) — kept so live occupancy histograms can be
+    /// compared against exactly the ranking input ("mapping drift",
+    /// `docs/OBSERVABILITY.md`).
+    prior: Vec<f64>,
 }
 
 impl LayerPlan {
@@ -196,12 +202,25 @@ impl LayerPlan {
             wb: layer.wb.clone(),
             deq,
             out_scale: lut_scale * layer.coeff_scale,
+            prior: probs.to_vec(),
         })
     }
 
     /// Whether this layer executes from the per-code fused rows.
     pub fn uses_fused(&self) -> bool {
         self.fused.is_some()
+    }
+
+    /// Knot intervals per input (`G`) — the per-input bucket count of
+    /// the occupancy histograms.
+    pub fn intervals(&self) -> usize {
+        self.g
+    }
+
+    /// The `din · G` calibration-time interval probabilities the tile
+    /// placement was ranked by (see the `prior` field).
+    pub fn prior(&self) -> &[f64] {
+        &self.prior
     }
 
     /// Integer-exact forward for pre-quantized codes.

@@ -36,6 +36,11 @@
 //! * [`client`] — the typed Rust client ([`client::KanClient`]):
 //!   connect/negotiate, `infer`, batch submit, pipelined
 //!   `submit`/`poll`, and registry/metrics/health queries.
+//! * [`obs`] — observability: sampled end-to-end request tracing with
+//!   per-stage timestamps, the SAM mapping-drift statistic, a
+//!   Prometheus text-format exposition of every counter, and the
+//!   structured leveled JSON logger. `docs/OBSERVABILITY.md` documents
+//!   the span stages and the overhead contract.
 //! * [`registry`] — model registry & multi-model serving: the
 //!   schema-tagged manifest (v1 = flat aot.py output, v2 = per-model
 //!   version/digest/quant/hardware-cost metadata), a content-addressed
@@ -62,6 +67,7 @@ pub mod error;
 pub mod kan;
 pub mod mapping;
 pub mod neurosim;
+pub mod obs;
 pub mod quant;
 pub mod registry;
 pub mod runtime;

@@ -49,14 +49,20 @@ COMMANDS:
   bench-net [--requests N] [--batch B] [--window W]
             [--tenants T] [--mix-requests M] [--mix-batch R]
             [--mix-queue Q] [--json FILE] [--skip-mixed] [--mixed-only]
-            [--skip-hotpath] [--skip-shadow]
+            [--skip-hotpath] [--skip-shadow] [--skip-trace]
                                                served throughput: v1 vs v2,
                                                the digital engine-off-vs-on
                                                hot-path phase, the digital-
                                                vs-ACIM shadow-divergence
-                                               phase, plus the mixed-tenant
-                                               fifo-vs-drr fairness
-                                               comparison
+                                               phase, the request-tracing
+                                               overhead phase, plus the
+                                               mixed-tenant fifo-vs-drr
+                                               fairness comparison
+  metrics   [--addr HOST:PORT] [--prom] [--demo]
+                                               scrape a server's metrics as
+                                               JSON or Prometheus text;
+                                               --demo serves + drives an
+                                               in-process model first
   eval      --model NAME --backend B           accuracy on the test set
                                                (B: digital = planned engine,
                                                digital-ref = scalar golden
@@ -75,8 +81,12 @@ docs/PROTOCOL.md): v1 JSON lines, where the optional \"model\" field
 routes to a variant (\"name\" or pinned \"name@version\"):
   {\"model\": \"kan2\", \"features\": [...]}
 and framed v2 (magic \"KAN2\") with request ids, pipelining, batch
-submit and control verbs (hello/list_models/model_info/metrics/health),
-spoken by kan_edge::client::KanClient.
+submit and control verbs (hello/list_models/model_info/metrics/
+metrics_prom/trace/health), spoken by kan_edge::client::KanClient.
+
+Structured logs go to stderr as JSON lines; the level comes from the
+[observability] config section and the KAN_EDGE_LOG env var (error|
+warn|info|debug, env wins). See docs/OBSERVABILITY.md.
 ";
 
 /// Parsed command line: subcommand + `--key value` options.
@@ -154,6 +164,11 @@ fn run(args: &Args) -> Result<()> {
     if let Some(dir) = args.opts.get("artifacts") {
         cfg.artifacts.dir = dir.clone();
     }
+    // structured logging: config sets the level, KAN_EDGE_LOG overrides
+    if let Some(l) = kan_edge::obs::log::Level::parse(&cfg.observability.log_level) {
+        kan_edge::obs::log::set_level(l);
+    }
+    kan_edge::obs::log::init_from_env();
     match args.cmd.as_str() {
         "serve" => serve(
             &cfg,
@@ -161,6 +176,7 @@ fn run(args: &Args) -> Result<()> {
             &args.get("addr", "127.0.0.1:7777"),
         ),
         "models" => models_cmd(&cfg, args.opts.get("model").map(|s| s.as_str())),
+        "metrics" => metrics_cmd(&cfg, args),
         "publish" => publish_cmd(&cfg, args),
         "bench-net" => bench_net_cmd(&cfg, args),
         "eval" => eval(
@@ -206,7 +222,10 @@ fn serve(cfg: &AppConfig, model: &str, addr: &str) -> Result<()> {
         match registry.ensure_loaded(name) {
             Ok(served) => println!("loaded {} [{}]", served.id, cfg.server.backend),
             Err(e) if name == &cfg.artifacts.model => return Err(e),
-            Err(e) => eprintln!("warning: preload of '{name}' failed: {e}"),
+            Err(e) => kan_edge::obs::log::warn(
+                "serve",
+                &format!("preload of '{name}' failed: {e}"),
+            ),
         }
     }
 
@@ -217,17 +236,23 @@ fn serve(cfg: &AppConfig, model: &str, addr: &str) -> Result<()> {
         );
     }
     let target: Arc<dyn Dispatch> = registry.clone();
-    let server = kan_edge::coordinator::TcpServer::spawn_with_limits(
+    let server = kan_edge::coordinator::TcpServer::spawn_with_obs(
         addr,
         target,
         tcp_limits(&cfg),
+        kan_edge::coordinator::router::trace_hub(&cfg),
     )?;
     println!(
         "kan-edge serving {} model(s) on {} (default {model}, protocols v1+v2, \
-         hot-reload {}; Ctrl-C to stop)",
+         hot-reload {}, tracing {}; Ctrl-C to stop)",
         registry.model_names().len(),
         server.addr,
         if cfg.registry.reload_poll_ms > 0 { "on" } else { "off" },
+        if cfg.observability.sample_every > 0 {
+            format!("1-in-{}", cfg.observability.sample_every)
+        } else {
+            "off".into()
+        },
     );
     // serve until the process is killed
     loop {
@@ -333,6 +358,51 @@ fn publish_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Scrape a serving endpoint's metrics. `--prom` renders the Prometheus
+/// exposition text (the `metrics_prom` verb) and re-validates it
+/// client-side before printing — an unparseable scrape is a hard error,
+/// which is what CI keys on. The default prints the `metrics` JSON
+/// body. `--demo` publishes a synthetic model into a temp registry,
+/// serves it in-process with tracing at 1-in-1, drives a few dozen
+/// requests, and scrapes that — an exposition-plane smoke test needing
+/// no running deployment.
+fn metrics_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let prom = args.opts.contains_key("prom");
+    let scrape = |client: &mut KanClient| -> Result<String> {
+        if prom {
+            let text = client.metrics_prom()?;
+            kan_edge::obs::prom::validate(&text).map_err(|e| {
+                kan_edge::Error::Serving(format!(
+                    "metrics_prom returned invalid exposition text: {e}"
+                ))
+            })?;
+            Ok(text)
+        } else {
+            Ok(client.metrics()?.to_string())
+        }
+    };
+    let out = if args.opts.contains_key("demo") {
+        let mut cfg = cfg.clone();
+        cfg.observability.sample_every = 1; // trace every demo request
+        let (dir, server) = spawn_bench_server(&cfg, "metrics_demo")?;
+        let mut client = KanClient::connect(server.addr)?;
+        let mut lg = kan_edge::data::LoadGen::new(0x0B5, 2);
+        for _ in 0..32 {
+            client.infer(&lg.next_vec())?;
+        }
+        let text = scrape(&mut client);
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+        text?
+    } else {
+        let addr = args.get("addr", "127.0.0.1:7777");
+        let mut client = KanClient::connect(addr.as_str())?;
+        scrape(&mut client)?
+    };
+    println!("{out}");
+    Ok(())
+}
+
 /// `(requests, batches)` served so far by the (single) bench model;
 /// `(0, 0)` before its pipeline first loads.
 fn served_counts(client: &mut KanClient) -> Result<(i64, i64)> {
@@ -397,10 +467,13 @@ fn spawn_bench_server_with(
     std::fs::write(&src, ckpt_json)?;
     registry.publish_file(&src, None, None)?;
     let target: Arc<dyn Dispatch> = registry;
-    let server = kan_edge::coordinator::TcpServer::spawn_with_limits(
+    // trace hub from cfg.observability, so bench phases can enable
+    // sampling by setting `sample_every` before spawning
+    let server = kan_edge::coordinator::TcpServer::spawn_with_obs(
         "127.0.0.1:0",
         target,
         tcp_limits(&cfg),
+        kan_edge::coordinator::router::trace_hub(&cfg),
     )?;
     Ok((dir, server))
 }
@@ -447,6 +520,37 @@ fn run_hotpath_mode(
     server.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
     Ok(requests as f64 / secs.max(1e-9))
+}
+
+/// One sampling mode of the request-tracing overhead phase: drive
+/// `requests` single-row synchronous infers and report the
+/// client-observed latency p50/p99 in microseconds.
+fn run_trace_mode(
+    cfg: &AppConfig,
+    sample_every: u64,
+    requests: usize,
+) -> Result<(u64, u64)> {
+    use std::time::Instant;
+
+    let mut cfg = cfg.clone();
+    cfg.observability.sample_every = sample_every;
+    let (dir, server) = spawn_bench_server(&cfg, &format!("trace_{sample_every}"))?;
+    let mut client = KanClient::connect(server.addr)?;
+    let mut lg = kan_edge::data::LoadGen::new(0x7AC3, 2);
+    client.infer(&lg.next_vec())?; // warm the pipeline
+    let mut lat = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let t0 = Instant::now();
+        client.infer(&lg.next_vec())?;
+        lat.push(t0.elapsed().as_micros() as u64);
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    lat.sort_unstable();
+    Ok((
+        kan_edge::coordinator::metrics::percentile(&lat, 0.50),
+        kan_edge::coordinator::metrics::percentile(&lat, 0.99),
+    ))
 }
 
 /// Digital-vs-ACIM served phase: serve a synthetic KAN with the digital
@@ -755,6 +859,7 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
     let skip_mixed = args.opts.contains_key("skip-mixed");
     let skip_hotpath = args.opts.contains_key("skip-hotpath");
     let skip_shadow = args.opts.contains_key("skip-shadow");
+    let skip_trace = args.opts.contains_key("skip-trace");
 
     let mut phases: Vec<(String, f64, f64)> = Vec::new();
     if !mixed_only {
@@ -878,6 +983,39 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
         shadow_report = run_shadow_phase(cfg, requests.min(400), batch)?;
     }
 
+    // request-tracing overhead: sampling off vs the default 1-in-16 vs
+    // trace-everything 1-in-1, under the same synchronous load. The
+    // documented contract (docs/OBSERVABILITY.md): 1-in-1 tracing may
+    // cost at most 2x the untraced p99.
+    let mut tracing: Vec<(u64, u64, u64)> = Vec::new();
+    if !mixed_only && !skip_trace {
+        let n = requests.min(1000);
+        println!("\nrequest-tracing overhead ({n} single-row requests per mode)");
+        println!("{:<10} {:>10} {:>10}", "sampling", "p50(us)", "p99(us)");
+        for every in [0u64, 16, 1] {
+            let (p50, p99) = run_trace_mode(cfg, every, n)?;
+            let name = match every {
+                0 => "off".to_string(),
+                e => format!("1-in-{e}"),
+            };
+            println!("{name:<10} {p50:>10} {p99:>10}");
+            tracing.push((every, p50, p99));
+        }
+        if let (Some(off), Some(all)) = (tracing.first(), tracing.get(2)) {
+            let ratio = all.2 as f64 / (off.2 as f64).max(1.0);
+            println!(
+                "  1-in-1 p99 overhead: {ratio:.2}x untraced \
+                 (documented bound 2.0x)"
+            );
+            if ratio > 2.0 {
+                println!(
+                    "  WARNING: tracing overhead exceeds the documented 2.0x \
+                     p99 bound"
+                );
+            }
+        }
+    }
+
     let mut mixed: Vec<MixedPolicyReport> = Vec::new();
     if !skip_mixed {
         println!(
@@ -946,10 +1084,21 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
                 ])
             })
             .collect();
+        let tracing_values: Vec<Value> = tracing
+            .iter()
+            .map(|(every, p50, p99)| {
+                obj(vec![
+                    ("sample_every", Value::Int(*every as i64)),
+                    ("p50_us", Value::Int(*p50 as i64)),
+                    ("p99_us", Value::Int(*p99 as i64)),
+                ])
+            })
+            .collect();
         let report = obj(vec![
             ("phases", arr(phase_values)),
             ("hotpath", arr(hotpath_values)),
             ("shadow", shadow_report),
+            ("tracing", arr(tracing_values)),
             (
                 "mixed",
                 obj(vec![
@@ -988,7 +1137,10 @@ fn eval(cfg: &AppConfig, model: &str, backend: &str) -> Result<()> {
             match qk.compile(kan_edge::kan::EngineOptions::default()) {
                 Ok(engine) => engine.accuracy(&ds),
                 Err(e) => {
-                    eprintln!("warning: engine compile failed ({e}); using reference");
+                    kan_edge::obs::log::warn(
+                        "eval",
+                        &format!("engine compile failed ({e}); using reference"),
+                    );
                     qk.accuracy(&ds)
                 }
             }

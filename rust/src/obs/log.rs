@@ -1,0 +1,155 @@
+//! Leveled structured logger: one JSON object per line on stderr.
+//!
+//! Replaces the ad-hoc `eprintln!` warning sites scattered through the
+//! library. The CLI's own usage/exit messages in `main.rs` stay plain
+//! `eprintln!` — they are user-facing terminal output, not telemetry.
+//!
+//! The level lives in a global atomic so checking it costs one relaxed
+//! load; a disabled line allocates nothing. Output is a single `write_all`
+//! of a preformatted line, so concurrent threads cannot interleave
+//! mid-record (stderr writes are atomic per call on the platforms we
+//! target, and a torn line only garbles, never blocks).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::{obj, Value};
+
+/// Log severity, ordered so that `level <= current` means "emit".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a level name (case-insensitive). Returns `None` for
+    /// anything else so callers can produce their own error message.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global log level (config load and tests).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global level.
+pub fn level() -> Level {
+    Level::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+/// Whether a record at `level` would be emitted right now.
+pub fn enabled(level: Level) -> bool {
+    level <= self::level()
+}
+
+/// Apply the `KAN_EDGE_LOG` environment variable if set and valid.
+/// The env var wins over config so an operator can turn on `debug`
+/// for one run without editing files. Returns the resulting level.
+pub fn init_from_env() -> Level {
+    if let Ok(v) = std::env::var("KAN_EDGE_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+    level()
+}
+
+/// Emit one structured record: `{"level":..,"msg":..,"target":..,"ts_ms":..}`
+/// plus any extra fields. Fields with keys colliding with the built-ins
+/// are overridden by the built-ins (BTreeMap insert order).
+pub fn log_kv(level: Level, target: &str, msg: &str, fields: Vec<(&str, Value)>) {
+    if !enabled(level) {
+        return;
+    }
+    let ts_ms = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as i64)
+        .unwrap_or(0);
+    let mut all = fields;
+    all.push(("level", Value::Str(level.as_str().into())));
+    all.push(("msg", Value::Str(msg.into())));
+    all.push(("target", Value::Str(target.into())));
+    all.push(("ts_ms", Value::Int(ts_ms)));
+    let line = obj(all).to_string();
+    let mut err = std::io::stderr().lock();
+    let _ = err.write_all(line.as_bytes());
+    let _ = err.write_all(b"\n");
+}
+
+/// Error-level record with no extra fields.
+pub fn error(target: &str, msg: &str) {
+    log_kv(Level::Error, target, msg, Vec::new());
+}
+
+/// Warn-level record with no extra fields.
+pub fn warn(target: &str, msg: &str) {
+    log_kv(Level::Warn, target, msg, Vec::new());
+}
+
+/// Info-level record with no extra fields.
+pub fn info(target: &str, msg: &str) {
+    log_kv(Level::Info, target, msg, Vec::new());
+}
+
+/// Debug-level record with no extra fields.
+pub fn debug(target: &str, msg: &str) {
+    log_kv(Level::Debug, target, msg, Vec::new());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_ordering() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(l.as_str()), Some(l));
+        }
+        assert_eq!(Level::parse("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn enabled_respects_level() {
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(prev);
+    }
+}

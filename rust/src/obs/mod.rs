@@ -1,0 +1,120 @@
+//! Observability: request tracing, engine profiling statistics, and a
+//! Prometheus-style exposition plane (`docs/OBSERVABILITY.md`).
+//!
+//! Three dependency-free pieces, sharing the bounded-memory,
+//! never-block-the-hot-path contract the shadow mirror established:
+//!
+//! * [`log`] — a leveled structured logger emitting one JSON object per
+//!   line to stderr, replacing the scattered ad-hoc `eprintln!` sites.
+//!   Level comes from the `[observability]` config section or the
+//!   `KAN_EDGE_LOG` environment variable.
+//! * [`trace`] — end-to-end request tracing: a [`trace::TraceHub`]
+//!   deterministically samples 1-in-N served v2 `infer` requests, and a
+//!   sampled request carries a lock-free [`trace::SpanCell`] through
+//!   admission → scheduler queue → batcher → engine execute → response
+//!   write, each stage stamped with a monotonic offset. Completed spans
+//!   land in a bounded ring buffer (the `trace` control verb reads it)
+//!   and feed a per-model p50/p99 stage rollup folded into
+//!   [`crate::coordinator::metrics::MetricsReport`].
+//! * [`prom`] — Prometheus text-format exposition rendering of the
+//!   whole metrics tree (wire, scheduler, shadow, per-model, trace),
+//!   served by the `metrics_prom` control verb and the
+//!   `kan-edge metrics --prom` subcommand, plus the grammar validator
+//!   the tests and the CI scrape gate on.
+//!
+//! The module also hosts [`rank_correlation`], the Spearman statistic
+//! used to report live-vs-calibration interval-occupancy "mapping
+//! drift" per layer (see `DigitalSession::profile`).
+
+pub mod log;
+pub mod prom;
+pub mod trace;
+
+/// Spearman rank correlation between two equal-length samples, with
+/// average ranks for ties (interval-occupancy vectors are tie-heavy:
+/// most cold intervals count zero).
+///
+/// Returns a value in `[-1, 1]`; `0.0` when either input is shorter
+/// than 2 or has zero rank variance (a constant vector carries no
+/// ordering to agree or disagree with).
+///
+/// This is the engine's "mapping drift" statistic: the SAM tile
+/// placement ranked intervals by calibration-time activation
+/// probability, so the rank correlation between that prior and the live
+/// occupancy histogram says how well the calibration ordering still
+/// matches traffic (`1.0` = same ranking, `~0` = unrelated).
+pub fn rank_correlation(a: &[f64], b: &[f64]) -> f64 {
+    if a.len() != b.len() || a.len() < 2 {
+        return 0.0;
+    }
+    let ra = ranks(a);
+    let rb = ranks(b);
+    let n = ra.len() as f64;
+    let mean = (n + 1.0) / 2.0;
+    let (mut cov, mut va, mut vb) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in ra.iter().zip(&rb) {
+        let dx = x - mean;
+        let dy = y - mean;
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// 1-based ranks with ties averaged (the standard Spearman treatment).
+fn ranks(v: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    idx.sort_by(|&i, &j| v[i].partial_cmp(&v[j]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0f64; v.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && v[idx[j + 1]] == v[idx[i]] {
+            j += 1;
+        }
+        // positions i..=j hold a tie group: each gets the average rank
+        let rank = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = rank;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_agreement_is_one() {
+        let a = [0.1, 0.4, 0.2, 0.9];
+        let b = [1.0, 4.0, 2.0, 9.0];
+        assert!((rank_correlation(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reversed_order_is_minus_one() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [4.0, 3.0, 2.0, 1.0];
+        assert!((rank_correlation(&a, &b) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_average_and_degenerate_inputs_are_zero() {
+        // tie-heavy vectors still produce a bounded statistic
+        let a = [0.0, 0.0, 1.0, 2.0, 0.0];
+        let b = [0.0, 0.0, 2.0, 3.0, 0.0];
+        let r = rank_correlation(&a, &b);
+        assert!(r > 0.9 && r <= 1.0, "{r}");
+        // constant vector: no ordering information
+        assert_eq!(rank_correlation(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+        // length mismatch and short inputs
+        assert_eq!(rank_correlation(&[1.0], &[1.0]), 0.0);
+        assert_eq!(rank_correlation(&[1.0, 2.0], &[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,320 @@
+//! Prometheus text-format exposition.
+//!
+//! [`render`] walks the same JSON tree the `metrics` control verb
+//! returns and flattens every numeric leaf into a
+//! `kan_edge_*`-prefixed gauge sample, so the Prometheus plane can
+//! never drift from the JSON plane — new counters show up in both the
+//! moment they are added to a report. Per-model series keep the model
+//! id out of the metric name and in a `model="..."` label, following
+//! Prometheus naming conventions.
+//!
+//! [`validate`] is a strict line-grammar checker for the subset of the
+//! text format we emit (`# `-comments, `name{label="value"} value`).
+//! The `metrics --prom` subcommand and the CI scrape step both gate on
+//! it, so an exposition regression fails fast instead of surfacing as
+//! a scrape error in some downstream collector.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Value;
+
+/// One flattened sample: optional `(label_name, label_value)` + value.
+type Sample = (Option<(String, String)>, f64);
+
+/// Render a metrics JSON tree as Prometheus text format.
+///
+/// Mapping rules:
+/// * the top-level `models` object becomes per-model series — each
+///   model's subtree renders with the metric name
+///   `kan_edge_model_<path>` and a `model="<id>"` label;
+/// * every other top-level section renders as
+///   `kan_edge_<section>_<path>` with no labels;
+/// * array elements append their index to the path;
+/// * non-numeric leaves (strings, bools, nulls) and non-finite floats
+///   are skipped — Prometheus samples are numbers.
+///
+/// Samples sharing a metric name are grouped under one `# TYPE` line.
+/// Everything is declared `gauge`: several of our "counters" are
+/// windowed or reservoir-derived, and gauge is the honest common type.
+pub fn render(root: &Value) -> String {
+    let mut samples: BTreeMap<String, Vec<Sample>> = BTreeMap::new();
+    if let Some(map) = root.as_object() {
+        for (section, v) in map {
+            if section == "models" {
+                if let Some(models) = v.as_object() {
+                    for (id, report) in models {
+                        let label = Some(("model".to_string(), id.clone()));
+                        collect(report, &mut vec!["model".to_string()], &label, &mut samples);
+                    }
+                }
+            } else {
+                collect(v, &mut vec![section.clone()], &None, &mut samples);
+            }
+        }
+    }
+    let mut out = String::new();
+    for (name, rows) in &samples {
+        out.push_str(&format!("# TYPE {name} gauge\n"));
+        for (label, value) in rows {
+            match label {
+                Some((k, v)) => {
+                    let val = fmt(*value);
+                    out.push_str(&format!("{name}{{{k}=\"{}\"}} {val}\n", escape_label(v)));
+                }
+                None => out.push_str(&format!("{name} {}\n", fmt(*value))),
+            }
+        }
+    }
+    out
+}
+
+fn collect(
+    v: &Value,
+    path: &mut Vec<String>,
+    label: &Option<(String, String)>,
+    samples: &mut BTreeMap<String, Vec<Sample>>,
+) {
+    match v {
+        Value::Int(_) | Value::Float(_) => {
+            let x = v.as_f64().unwrap_or(f64::NAN);
+            if x.is_finite() {
+                let mut name = String::from("kan_edge");
+                for seg in path.iter() {
+                    name.push('_');
+                    name.push_str(&sanitize(seg));
+                }
+                samples.entry(name).or_default().push((label.clone(), x));
+            }
+        }
+        Value::Object(map) => {
+            for (k, child) in map {
+                path.push(k.clone());
+                collect(child, path, label, samples);
+                path.pop();
+            }
+        }
+        Value::Array(items) => {
+            for (i, child) in items.iter().enumerate() {
+                path.push(i.to_string());
+                collect(child, path, label, samples);
+                path.pop();
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Replace anything outside `[a-zA-Z0-9_]` with `_`; prefix a digit
+/// with `_` so a path segment like `0` stays a legal name part.
+fn sanitize(seg: &str) -> String {
+    let mut out = String::with_capacity(seg.len());
+    for c in seg.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a sample value: integral values without a fraction, others
+/// via the shortest roundtrip float formatting Rust gives us.
+fn fmt(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Validate Prometheus text-format lines (the subset we emit, which is
+/// also the subset most exporters emit): comment lines starting with
+/// `# `, blank lines, and sample lines `name[{labels}] value`.
+/// Returns the first offense as `Err("line N: reason")`.
+pub fn validate(text: &str) -> Result<(), String> {
+    for (i, line) in text.lines().enumerate() {
+        let n = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if rest.starts_with(' ') {
+                continue;
+            }
+            return Err(format!("line {n}: comment must start with '# '"));
+        }
+        validate_sample(line).map_err(|e| format!("line {n}: {e}"))?;
+    }
+    Ok(())
+}
+
+fn is_name_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_' || c == ':'
+}
+
+fn is_name_char(c: char) -> bool {
+    is_name_start(c) || c.is_ascii_digit()
+}
+
+fn validate_sample(line: &str) -> Result<(), String> {
+    let bytes: Vec<char> = line.chars().collect();
+    let mut pos = 0;
+    // metric name
+    if pos >= bytes.len() || !is_name_start(bytes[pos]) {
+        return Err("metric name must start with [a-zA-Z_:]".into());
+    }
+    while pos < bytes.len() && is_name_char(bytes[pos]) {
+        pos += 1;
+    }
+    // optional label set
+    if pos < bytes.len() && bytes[pos] == '{' {
+        pos += 1;
+        loop {
+            if pos < bytes.len() && bytes[pos] == '}' {
+                pos += 1;
+                break;
+            }
+            // label name
+            if pos >= bytes.len() || !is_name_start(bytes[pos]) {
+                return Err("label name must start with [a-zA-Z_:]".into());
+            }
+            while pos < bytes.len() && is_name_char(bytes[pos]) {
+                pos += 1;
+            }
+            if pos >= bytes.len() || bytes[pos] != '=' {
+                return Err("expected '=' after label name".into());
+            }
+            pos += 1;
+            if pos >= bytes.len() || bytes[pos] != '"' {
+                return Err("label value must be double-quoted".into());
+            }
+            pos += 1;
+            while pos < bytes.len() && bytes[pos] != '"' {
+                if bytes[pos] == '\\' {
+                    pos += 1; // escape consumes the next char
+                    if pos >= bytes.len() {
+                        return Err("dangling escape in label value".into());
+                    }
+                }
+                pos += 1;
+            }
+            if pos >= bytes.len() {
+                return Err("unterminated label value".into());
+            }
+            pos += 1; // closing quote
+            if pos < bytes.len() && bytes[pos] == ',' {
+                pos += 1;
+            } else if pos >= bytes.len() || bytes[pos] != '}' {
+                return Err("expected ',' or '}' after label".into());
+            }
+        }
+    }
+    // single space, then the value
+    if pos >= bytes.len() || bytes[pos] != ' ' {
+        return Err("expected ' ' before sample value".into());
+    }
+    pos += 1;
+    let value: String = bytes[pos..].iter().collect();
+    if value.is_empty() {
+        return Err("missing sample value".into());
+    }
+    match value.as_str() {
+        "NaN" | "+Inf" | "-Inf" => Ok(()),
+        v => v
+            .parse::<f64>()
+            .map(|_| ())
+            .map_err(|_| format!("invalid sample value '{v}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{arr, obj};
+
+    #[test]
+    fn renders_sections_and_model_labels() {
+        let root = obj(vec![
+            (
+                "wire",
+                obj(vec![
+                    ("v2_requests", Value::Int(12)),
+                    ("connections_active", Value::Int(1)),
+                ]),
+            ),
+            (
+                "models",
+                obj(vec![(
+                    "bench",
+                    obj(vec![
+                        ("requests", Value::Int(5)),
+                        ("latency_p99_us", Value::Int(740)),
+                        ("name", Value::Str("bench".into())),
+                    ]),
+                )]),
+            ),
+        ]);
+        let text = render(&root);
+        assert!(text.contains("# TYPE kan_edge_wire_v2_requests gauge\n"));
+        assert!(text.contains("kan_edge_wire_v2_requests 12\n"));
+        assert!(text.contains("kan_edge_model_requests{model=\"bench\"} 5\n"));
+        assert!(text.contains("kan_edge_model_latency_p99_us{model=\"bench\"} 740\n"));
+        // string leaf skipped
+        assert!(!text.contains("kan_edge_model_name"));
+        validate(&text).unwrap();
+    }
+
+    #[test]
+    fn arrays_index_and_bad_chars_sanitize() {
+        let root = obj(vec![(
+            "models",
+            obj(vec![(
+                "a-b.c",
+                obj(vec![("hist", arr(vec![Value::Int(1), Value::Float(2.5)]))]),
+            )]),
+        )]);
+        let text = render(&root);
+        assert!(text.contains("kan_edge_model_hist_0{model=\"a-b.c\"} 1\n"));
+        assert!(text.contains("kan_edge_model_hist_1{model=\"a-b.c\"} 2.5\n"));
+        validate(&text).unwrap();
+    }
+
+    #[test]
+    fn validator_accepts_good_and_rejects_bad() {
+        validate("# TYPE x gauge\nx 1\nx{a=\"b\",c=\"d\"} 2.5\nx NaN\nx -Inf\n").unwrap();
+        assert!(validate("1bad 2\n").is_err());
+        assert!(validate("x{a=b} 2\n").is_err());
+        assert!(validate("x{a=\"b} 2\n").is_err());
+        assert!(validate("x 1 trailing\n").is_err());
+        assert!(validate("x\n").is_err());
+        assert!(validate("#bad comment\n").is_err());
+    }
+
+    #[test]
+    fn label_values_escape() {
+        let root = obj(vec![(
+            "models",
+            obj(vec![("m\"odel", obj(vec![("requests", Value::Int(1))]))]),
+        )]);
+        let text = render(&root);
+        assert!(text.contains("{model=\"m\\\"odel\"} 1\n"));
+        validate(&text).unwrap();
+    }
+}

@@ -1,0 +1,435 @@
+//! End-to-end request tracing.
+//!
+//! A sampled v2 `infer` request carries a [`TraceHandle`] (an
+//! `Arc<SpanCell>`) from the TCP dispatch thread through admission, the
+//! scheduler queue, the batcher, the execution session, and the response
+//! write. Each pipeline stage stamps a monotonic offset into the cell
+//! with a single relaxed atomic store — no locks, no allocation on the
+//! hot path. When the response has been written, the dispatch thread
+//! hands the cell to [`TraceHub::finish`], which folds it into a bounded
+//! ring buffer (read by the `trace` control verb) and a bounded
+//! per-model stage rollup (folded into `MetricsReport` as p50/p99
+//! per-stage durations).
+//!
+//! ## Stage partition
+//!
+//! The five stages partition the server-side lifetime of a request
+//! exactly — durations sum to the end-to-end total by construction:
+//!
+//! | stage     | ends when                                            |
+//! |-----------|------------------------------------------------------|
+//! | admission | scheduler `try_submit` accepted the request          |
+//! | queue     | the batcher closed the batch containing it           |
+//! | batch     | a worker picked the batch up and is about to execute |
+//! | execute   | the execution session returned                       |
+//! | respond   | the response frame was written to the socket         |
+//!
+//! Unsampled requests carry `None` and pay one branch per stage.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::metrics::percentile;
+use crate::util::json::{arr, obj, Value};
+
+/// Pipeline stages, in order. Values index [`SpanCell`] stamp slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Admission = 0,
+    Queue = 1,
+    Batch = 2,
+    Execute = 3,
+    Respond = 4,
+}
+
+/// Number of stages (stamp slots per span).
+pub const STAGES: usize = 5;
+
+impl Stage {
+    /// All stages in pipeline order.
+    pub const ALL: [Stage; STAGES] = [
+        Stage::Admission,
+        Stage::Queue,
+        Stage::Batch,
+        Stage::Execute,
+        Stage::Respond,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::Batch => "batch",
+            Stage::Execute => "execute",
+            Stage::Respond => "respond",
+        }
+    }
+}
+
+/// Per-request span: a creation instant plus one atomic stamp slot per
+/// stage. Stamps store `elapsed_µs + 1` so zero can mean "never marked"
+/// (a request that errored out mid-pipeline leaves later slots unset).
+#[derive(Debug)]
+pub struct SpanCell {
+    id: i64,
+    t0: Instant,
+    stamps: [AtomicU64; STAGES],
+}
+
+/// Shared handle threaded through the pipeline alongside a request.
+pub type TraceHandle = Arc<SpanCell>;
+
+impl SpanCell {
+    pub fn new(id: i64) -> SpanCell {
+        SpanCell {
+            id,
+            t0: Instant::now(),
+            stamps: Default::default(),
+        }
+    }
+
+    /// Request id (the wire-protocol request id for v2 requests).
+    pub fn id(&self) -> i64 {
+        self.id
+    }
+
+    /// Stamp `stage` as completed now.
+    pub fn mark(&self, stage: Stage) {
+        self.mark_at(stage, Instant::now());
+    }
+
+    /// Stamp `stage` as completed at `at` (used when the completion
+    /// instant was captured elsewhere, e.g. the batcher's `closed_at`).
+    /// `fetch_max` keeps stamps monotone if a stage is marked twice.
+    pub fn mark_at(&self, stage: Stage, at: Instant) {
+        let us = at.saturating_duration_since(self.t0).as_micros() as u64;
+        self.stamps[stage as usize].fetch_max(us + 1, Ordering::Relaxed);
+    }
+
+    /// Raw offsets from span creation, in µs; `None` = stage never ran.
+    pub fn offsets_us(&self) -> [Option<u64>; STAGES] {
+        let mut out = [None; STAGES];
+        for (slot, stamp) in out.iter_mut().zip(&self.stamps) {
+            let v = stamp.load(Ordering::Relaxed);
+            if v > 0 {
+                *slot = Some(v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// A completed (or abandoned) span, as stored in the ring buffer.
+/// `stages_us` holds per-stage *durations*: `admission` is measured
+/// from span creation, every later stage from the previous stage's
+/// stamp — so present durations sum to `total_us` exactly.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub id: i64,
+    pub model: String,
+    pub stages_us: [Option<u64>; STAGES],
+    pub total_us: u64,
+    pub complete: bool,
+}
+
+impl SpanRecord {
+    fn from_cell(cell: &SpanCell, model: &str) -> SpanRecord {
+        let offsets = cell.offsets_us();
+        let mut stages = [None; STAGES];
+        let mut prev = 0u64;
+        let mut total = 0u64;
+        let mut complete = true;
+        for (i, off) in offsets.iter().enumerate() {
+            match off {
+                Some(o) => {
+                    // stamps come from different threads (e.g. admission
+                    // from the submitter, queue from the worker at the
+                    // batcher's close instant) and can land a few µs out
+                    // of order; clamping keeps the partition exact
+                    let o = (*o).max(prev);
+                    stages[i] = Some(o - prev);
+                    prev = o;
+                    total = o;
+                }
+                None => complete = false,
+            }
+        }
+        SpanRecord {
+            id: cell.id,
+            model: model.to_string(),
+            stages_us: stages,
+            total_us: total,
+            complete,
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut stage_fields = Vec::with_capacity(STAGES);
+        for (stage, d) in Stage::ALL.iter().zip(&self.stages_us) {
+            let v = match d {
+                Some(us) => Value::Int(*us as i64),
+                None => Value::Null,
+            };
+            stage_fields.push((stage.as_str(), v));
+        }
+        obj(vec![
+            ("id", Value::Int(self.id)),
+            ("model", Value::Str(self.model.clone())),
+            ("stages_us", obj(stage_fields)),
+            ("total_us", Value::Int(self.total_us as i64)),
+            ("complete", Value::Bool(self.complete)),
+        ])
+    }
+}
+
+/// Per-model bounded sliding windows of per-stage durations, feeding
+/// the p50/p99 rollup. One window per stage, capped at
+/// [`ROLLUP_WINDOW`] samples (oldest evicted first).
+const ROLLUP_WINDOW: usize = 1024;
+
+#[derive(Debug, Default)]
+struct StageWindows {
+    count: u64,
+    windows: [VecDeque<u64>; STAGES],
+}
+
+/// p50/p99 of per-stage durations for one model, over the rollup
+/// window. Folded into `MetricsReport` as the `stages` section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageReport {
+    /// Completed sampled spans observed (monotonic, not windowed).
+    pub count: u64,
+    pub p50_us: [u64; STAGES],
+    pub p99_us: [u64; STAGES],
+}
+
+impl StageReport {
+    pub fn to_value(&self) -> Value {
+        let mut fields = vec![("count", Value::Int(self.count as i64))];
+        for (i, stage) in Stage::ALL.iter().enumerate() {
+            fields.push((
+                stage.as_str(),
+                obj(vec![
+                    ("p50_us", Value::Int(self.p50_us[i] as i64)),
+                    ("p99_us", Value::Int(self.p99_us[i] as i64)),
+                ]),
+            ));
+        }
+        obj(fields)
+    }
+}
+
+/// Sampling + storage hub. One per `TcpServer`.
+///
+/// Memory is bounded by construction: the ring holds at most `cap`
+/// records and each model's rollup at most `ROLLUP_WINDOW` samples per
+/// stage. Sampling is deterministic — request counter modulo N — so
+/// tests and the overhead bench see a fixed schedule.
+#[derive(Debug)]
+pub struct TraceHub {
+    sample_every: u64,
+    cap: usize,
+    counter: AtomicU64,
+    sampled: AtomicU64,
+    completed: AtomicU64,
+    ring: Mutex<VecDeque<SpanRecord>>,
+    rollup: Mutex<BTreeMap<String, StageWindows>>,
+}
+
+impl TraceHub {
+    /// `sample_every` = N for 1-in-N sampling (0 disables tracing);
+    /// `cap` = ring-buffer capacity in spans.
+    pub fn new(sample_every: u64, cap: usize) -> TraceHub {
+        TraceHub {
+            sample_every,
+            cap: cap.max(1),
+            counter: AtomicU64::new(0),
+            sampled: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+            rollup: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// A hub that never samples — the default for embedded servers and
+    /// existing callers that don't opt in.
+    pub fn disabled() -> TraceHub {
+        TraceHub::new(0, 1)
+    }
+
+    /// Whether any request can ever be sampled.
+    pub fn enabled(&self) -> bool {
+        self.sample_every > 0
+    }
+
+    /// 1-in-N decision for the next request. Returns a live span handle
+    /// on the sampled schedule, `None` otherwise. The first request is
+    /// always sampled when enabled (counter starts at 0).
+    pub fn sample(&self, id: i64) -> Option<TraceHandle> {
+        if self.sample_every == 0 {
+            return None;
+        }
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        if n % self.sample_every != 0 {
+            return None;
+        }
+        self.sampled.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::new(SpanCell::new(id)))
+    }
+
+    /// Fold a finished span into the ring and the per-model rollup.
+    /// Called once per sampled request after the response write (also
+    /// on error paths, with whatever stages were stamped).
+    pub fn finish(&self, span: &SpanCell, model: &str) {
+        let record = SpanRecord::from_cell(span, model);
+        if record.complete {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            let mut rollup = self.rollup.lock().unwrap();
+            let windows = rollup.entry(model.to_string()).or_default();
+            windows.count += 1;
+            for (w, d) in windows.windows.iter_mut().zip(&record.stages_us) {
+                if let Some(us) = d {
+                    if w.len() >= ROLLUP_WINDOW {
+                        w.pop_front();
+                    }
+                    w.push_back(*us);
+                }
+            }
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(record);
+    }
+
+    /// Most recent spans, newest first, at most `limit`.
+    pub fn recent(&self, limit: usize) -> Vec<SpanRecord> {
+        let ring = self.ring.lock().unwrap();
+        ring.iter().rev().take(limit).cloned().collect()
+    }
+
+    /// Current ring occupancy (test hook for the boundedness contract).
+    pub fn ring_len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// p50/p99 stage breakdown for one model, if any sampled spans for
+    /// it completed.
+    pub fn stage_report(&self, model: &str) -> Option<StageReport> {
+        let rollup = self.rollup.lock().unwrap();
+        let windows = rollup.get(model)?;
+        let mut p50 = [0u64; STAGES];
+        let mut p99 = [0u64; STAGES];
+        for (i, w) in windows.windows.iter().enumerate() {
+            let mut sorted: Vec<u64> = w.iter().copied().collect();
+            sorted.sort_unstable();
+            p50[i] = percentile(&sorted, 0.50);
+            p99[i] = percentile(&sorted, 0.99);
+        }
+        Some(StageReport {
+            count: windows.count,
+            p50_us: p50,
+            p99_us: p99,
+        })
+    }
+
+    /// Summary counters for the `trace` verb / `metrics` body.
+    pub fn summary_value(&self) -> Value {
+        obj(vec![
+            ("sample_every", Value::Int(self.sample_every as i64)),
+            ("ring_capacity", Value::Int(self.cap as i64)),
+            ("ring_len", Value::Int(self.ring_len() as i64)),
+            (
+                "sampled_total",
+                Value::Int(self.sampled.load(Ordering::Relaxed) as i64),
+            ),
+            (
+                "completed_total",
+                Value::Int(self.completed.load(Ordering::Relaxed) as i64),
+            ),
+        ])
+    }
+
+    /// Body for the `trace` control verb: summary plus recent spans.
+    pub fn to_value(&self, limit: usize) -> Value {
+        let spans: Vec<Value> = self.recent(limit).iter().map(|r| r.to_value()).collect();
+        obj(vec![
+            ("summary", self.summary_value()),
+            ("spans", arr(spans)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn finish_marked(hub: &TraceHub, id: i64) {
+        let span = SpanCell::new(id);
+        for s in Stage::ALL {
+            span.mark(s);
+        }
+        hub.finish(&span, "m");
+    }
+
+    #[test]
+    fn sampling_schedule_is_deterministic() {
+        let hub = TraceHub::new(4, 16);
+        let hits: Vec<bool> = (0..12).map(|i| hub.sample(i).is_some()).collect();
+        assert_eq!(
+            hits,
+            vec![true, false, false, false, true, false, false, false, true, false, false, false]
+        );
+        let off = TraceHub::new(0, 16);
+        assert!(!off.enabled());
+        assert!((0..100).all(|i| off.sample(i).is_none()));
+    }
+
+    #[test]
+    fn durations_partition_total() {
+        let span = SpanCell::new(7);
+        let base = span.t0;
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            span.mark_at(*s, base + Duration::from_micros(100 * (i as u64 + 1)));
+        }
+        let rec = SpanRecord::from_cell(&span, "m");
+        assert!(rec.complete);
+        assert_eq!(rec.total_us, 500);
+        let sum: u64 = rec.stages_us.iter().map(|d| d.unwrap()).sum();
+        assert_eq!(sum, rec.total_us);
+        assert!(rec.stages_us.iter().all(|d| d == &Some(100)));
+    }
+
+    #[test]
+    fn incomplete_span_keeps_missing_stages_none() {
+        let hub = TraceHub::new(1, 8);
+        let span = hub.sample(1).unwrap();
+        span.mark(Stage::Admission);
+        hub.finish(&span, "m");
+        let recent = hub.recent(10);
+        assert_eq!(recent.len(), 1);
+        assert!(!recent[0].complete);
+        assert!(recent[0].stages_us[Stage::Admission as usize].is_some());
+        assert!(recent[0].stages_us[Stage::Respond as usize].is_none());
+        // incomplete spans do not pollute the rollup
+        assert!(hub.stage_report("m").is_none());
+    }
+
+    #[test]
+    fn ring_is_bounded_and_newest_first() {
+        let hub = TraceHub::new(1, 8);
+        for i in 0..1000 {
+            finish_marked(&hub, i);
+        }
+        assert_eq!(hub.ring_len(), 8);
+        let recent = hub.recent(3);
+        assert_eq!(recent[0].id, 999);
+        assert_eq!(recent[1].id, 998);
+        let report = hub.stage_report("m").unwrap();
+        assert_eq!(report.count, 1000);
+    }
+}

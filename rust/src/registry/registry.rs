@@ -180,16 +180,22 @@ impl ModelRegistry {
     /// attached under `shadow`.
     pub fn metrics(&self) -> Vec<(String, MetricsReport)> {
         let mut reports = self.hub.reports();
-        let shadows: BTreeMap<String, Arc<ShadowState>> = {
+        let live: BTreeMap<String, Arc<ServedModel>> = {
             let g = self.inner.read().unwrap();
-            g.live
-                .values()
-                .filter_map(|s| s.shadow.clone().map(|sh| (s.id.clone(), sh)))
-                .collect()
+            g.live.values().map(|s| (s.id.clone(), s.clone())).collect()
         };
         for (id, report) in reports.iter_mut() {
-            if let Some(sh) = shadows.get(id) {
-                report.shadow = Some(sh.metrics.report());
+            if let Some(s) = live.get(id) {
+                if let Some(sh) = &s.shadow {
+                    report.shadow = Some(sh.metrics.report());
+                }
+                // live scheduler gauges + engine profile come from the
+                // primary pipeline; retired versions keep plain counters
+                let g = s.svc.queue_gauges();
+                report.queue_depth = Some(g.depth);
+                report.queue_clients = Some(g.clients);
+                report.max_client_backlog = Some(g.max_client_backlog);
+                report.engine_profile = s.svc.session().profile();
             }
         }
         reports
@@ -257,9 +263,12 @@ impl ModelRegistry {
                         exec,
                     )),
                     Err(e) => {
-                        eprintln!(
-                            "warning: shadow '{kind}' for '{id}' failed to build \
-                             ({e}); serving without a mirror"
+                        crate::obs::log::warn(
+                            "registry",
+                            &format!(
+                                "shadow '{kind}' for '{id}' failed to build \
+                                 ({e}); serving without a mirror"
+                            ),
                         );
                         None
                     }
@@ -439,7 +448,7 @@ impl ModelRegistry {
         let keep = mirror
             .as_ref()
             .and_then(|sh| sh.presample().then(|| features.clone()));
-        let out = svc.infer_opts_from(client, features, route.opts)?;
+        let out = svc.infer_traced_from(client, features, route.opts, route.trace.clone())?;
         if let (Some(sh), Some(row)) = (mirror, keep) {
             sh.enqueue(row, out.logits.clone(), route.opts);
         }
@@ -567,7 +576,10 @@ impl ModelRegistry {
                 // block reloads of the models after it in the loop
                 match self.reload_model(&name) {
                     Ok(served) => swapped.push(served.id.clone()),
-                    Err(e) => eprintln!("hot-reload of '{name}' failed: {e}"),
+                    Err(e) => crate::obs::log::warn(
+                        "registry",
+                        &format!("hot-reload of '{name}' failed: {e}"),
+                    ),
                 }
             }
         }
@@ -696,7 +708,10 @@ pub fn spawn_reload_thread(registry: &Arc<ModelRegistry>, interval: Duration) {
             match weak.upgrade() {
                 Some(reg) => {
                     if let Err(e) = reg.poll_reload() {
-                        eprintln!("hot-reload poll failed: {e}");
+                        crate::obs::log::warn(
+                            "registry",
+                            &format!("hot-reload poll failed: {e}"),
+                        );
                     }
                 }
                 None => break,

@@ -1,0 +1,317 @@
+//! Observability integration tests: end-to-end request tracing over a
+//! live TCP server (every stage stamped, durations partition the
+//! total), the bounded-memory contract of the trace ring under
+//! sustained load, the Prometheus exposition plane agreeing with the
+//! JSON metrics plane, and the engine-profiling bit-parity guarantee.
+//! Fully offline (synthetic KAN checkpoints published into temp
+//! registries).
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kan_edge::client::KanClient;
+use kan_edge::config::AppConfig;
+use kan_edge::coordinator::router::trace_hub;
+use kan_edge::coordinator::{tcp_limits, Dispatch, TcpServer};
+use kan_edge::kan::checkpoint::synthetic_kan_checkpoint;
+use kan_edge::obs::trace::{Stage, TraceHub};
+use kan_edge::registry::{ModelManifest, ModelRegistry};
+use kan_edge::util::json::Value;
+
+mod common;
+
+const STAGE_NAMES: [&str; 5] = ["admission", "queue", "batch", "execute", "respond"];
+
+fn tmp_dir(test: &str) -> PathBuf {
+    common::tmp_dir("kan_edge_obs_tests", test)
+}
+
+/// Publish a synthetic KAN with real (nonzero) spline mass as model "m"
+/// into a fresh registry dir.
+fn publish_dense_model(dir: &Path, cfg: &AppConfig) -> Arc<ModelRegistry> {
+    ModelManifest::empty().save(dir).unwrap();
+    let registry = ModelRegistry::open(cfg).unwrap();
+    let ckpt = synthetic_kan_checkpoint("m", &[2, 3, 2], 5, 3, 0xD1CE);
+    let src = dir.join("m.incoming.json");
+    std::fs::write(&src, ckpt.to_value().to_string()).unwrap();
+    registry.publish_file(&src, None, None).unwrap();
+    registry
+}
+
+/// Spawn the registry-backed server with request tracing at
+/// `cfg.observability.sample_every`.
+fn spawn_traced(cfg: &AppConfig, dir: &Path) -> (Arc<ModelRegistry>, TcpServer) {
+    let registry = publish_dense_model(dir, cfg);
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server =
+        TcpServer::spawn_with_obs("127.0.0.1:0", target, tcp_limits(cfg), trace_hub(cfg))
+            .unwrap();
+    (registry, server)
+}
+
+// ---- end-to-end tracing over live TCP --------------------------------------
+
+#[test]
+fn traced_requests_stamp_every_stage_and_durations_partition_total() {
+    let dir = tmp_dir("stages_partition");
+    let mut cfg = common::test_config(&dir, "m");
+    cfg.observability.sample_every = 1; // trace everything
+    let (_registry, server) = spawn_traced(&cfg, &dir);
+    let mut client = KanClient::connect(server.addr).unwrap();
+    let n = 8;
+    for i in 0..n {
+        client.infer(&[0.1 * i as f32, -0.2]).unwrap();
+    }
+
+    // the span is finished *after* the response write, so the last one
+    // can trail the client's view of its own request: poll, bounded
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let spans: Vec<Value> = loop {
+        let body = client.trace(Some(64)).unwrap();
+        let spans: Vec<Value> = body
+            .field("spans")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .filter(|s| s.get("model").and_then(|m| m.as_str()) == Some("m@1"))
+            .cloned()
+            .collect();
+        if spans.len() >= n {
+            break spans;
+        }
+        assert!(Instant::now() < deadline, "trace ring never saw {n} spans");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+
+    for span in &spans {
+        assert_eq!(span.get("complete").and_then(|v| v.as_bool()), Some(true));
+        let stages = span.field("stages_us").unwrap();
+        let total = span.get("total_us").and_then(|v| v.as_i64()).unwrap();
+        let mut sum = 0i64;
+        for name in STAGE_NAMES {
+            let d = stages
+                .get(name)
+                .and_then(|v| v.as_i64())
+                .unwrap_or_else(|| panic!("stage '{name}' missing from {span}"));
+            assert!(d >= 0, "stage '{name}' negative: {d}");
+            sum += d;
+        }
+        // the five stages partition the request's server-side lifetime
+        assert_eq!(sum, total, "stage durations must sum to total_us");
+    }
+
+    // the rollup surfaces in the metrics body as per-model p50/p99
+    let body = client.metrics().unwrap();
+    let report = body.field("models").unwrap().field("m@1").unwrap();
+    let st = report.field("stages").unwrap();
+    assert!(st.get("count").and_then(|v| v.as_i64()).unwrap() >= n as i64);
+    for name in STAGE_NAMES {
+        let s = st.field(name).unwrap();
+        assert!(s.get("p50_us").and_then(|v| v.as_i64()).is_some());
+        assert!(s.get("p99_us").and_then(|v| v.as_i64()).is_some());
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sampling_one_in_n_traces_a_strict_subset() {
+    let dir = tmp_dir("sampling_subset");
+    let mut cfg = common::test_config(&dir, "m");
+    cfg.observability.sample_every = 4;
+    let (_registry, server) = spawn_traced(&cfg, &dir);
+    let mut client = KanClient::connect(server.addr).unwrap();
+    for _ in 0..16 {
+        client.infer(&[0.3, 0.4]).unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let summary = client.trace(None).unwrap().field("summary").unwrap().clone();
+        let sampled = summary.get("sampled_total").and_then(|v| v.as_i64()).unwrap();
+        // 16 infers at 1-in-4: exactly 4 sampled (deterministic schedule)
+        if sampled == 4 {
+            break;
+        }
+        assert!(
+            sampled < 16,
+            "1-in-4 sampling must not trace every request (sampled {sampled})"
+        );
+        assert!(Instant::now() < deadline, "sampled_total never reached 4");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- bounded memory under sustained load -----------------------------------
+
+#[test]
+fn trace_ring_and_rollup_stay_bounded_after_100k_spans() {
+    let hub = TraceHub::new(1, 256);
+    for i in 0..100_000i64 {
+        let span = hub.sample(i).expect("1-in-1 samples everything");
+        for s in Stage::ALL {
+            span.mark(s);
+        }
+        hub.finish(&span, "m");
+    }
+    assert_eq!(hub.ring_len(), 256, "ring must stay at its capacity");
+    let summary = hub.summary_value();
+    assert_eq!(
+        summary.get("sampled_total").and_then(|v| v.as_i64()),
+        Some(100_000)
+    );
+    assert_eq!(
+        summary.get("completed_total").and_then(|v| v.as_i64()),
+        Some(100_000)
+    );
+    // the rollup keeps counting past its window without growing
+    let report = hub.stage_report("m").expect("rollup exists");
+    assert_eq!(report.count, 100_000);
+}
+
+// ---- Prometheus plane agrees with the JSON plane ---------------------------
+
+/// The value of the unique sample line starting with `prefix`.
+fn prom_value(text: &str, prefix: &str) -> f64 {
+    let line = text
+        .lines()
+        .find(|l| l.starts_with(prefix))
+        .unwrap_or_else(|| panic!("no sample line starts with '{prefix}'"));
+    line[prefix.len()..].trim().parse().unwrap()
+}
+
+#[test]
+fn prom_scrape_validates_and_agrees_with_metrics_json() {
+    let dir = tmp_dir("prom_agrees");
+    let mut cfg = common::test_config(&dir, "m");
+    cfg.observability.sample_every = 1;
+    let (_registry, server) = spawn_traced(&cfg, &dir);
+    let mut client = KanClient::connect(server.addr).unwrap();
+    for i in 0..12 {
+        client.infer(&[0.05 * i as f32, 0.5]).unwrap();
+    }
+
+    let body = client.metrics().unwrap();
+    let text = client.metrics_prom().unwrap();
+    kan_edge::obs::prom::validate(&text).expect("exposition text must parse");
+
+    // wire and per-model infer counters only move on infer requests, so
+    // the two scrapes (JSON first, text second) must agree on them
+    let wire_v2 = body
+        .field("wire")
+        .unwrap()
+        .field("v2_requests")
+        .unwrap()
+        .as_i64()
+        .unwrap();
+    assert_eq!(wire_v2, 12);
+    assert_eq!(prom_value(&text, "kan_edge_wire_v2_requests "), wire_v2 as f64);
+
+    let model_requests = body
+        .field("models")
+        .unwrap()
+        .field("m@1")
+        .unwrap()
+        .field("requests")
+        .unwrap()
+        .as_i64()
+        .unwrap();
+    assert_eq!(
+        prom_value(&text, "kan_edge_model_requests{model=\"m@1\"} "),
+        model_requests as f64
+    );
+
+    // tracing counters cross both planes too
+    assert_eq!(prom_value(&text, "kan_edge_trace_sample_every "), 1.0);
+    assert!(prom_value(&text, "kan_edge_trace_sampled_total ") >= 12.0);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- engine profiling: bit parity + drift report ---------------------------
+
+#[test]
+fn engine_profiling_changes_no_served_bits_and_reports_drift() {
+    let rows: Vec<Vec<f32>> = (0..16)
+        .map(|i| vec![(i as f32 * 0.11).sin(), (i as f32 * 0.07).cos()])
+        .collect();
+    let mut outputs: Vec<Vec<Vec<f32>>> = Vec::new();
+    for profiling in [false, true] {
+        let dir = tmp_dir(&format!("profiling_{profiling}"));
+        let mut cfg = common::test_config(&dir, "m");
+        cfg.server.engine = true;
+        cfg.observability.engine_profiling = profiling;
+        let registry = publish_dense_model(&dir, &cfg);
+        let mut logits = Vec::new();
+        for row in &rows {
+            let (id, out) = registry.infer(None, row.clone()).unwrap();
+            assert_eq!(id, "m@1");
+            logits.push(out);
+        }
+        let report = registry
+            .metrics()
+            .into_iter()
+            .find(|(id, _)| id == "m@1")
+            .map(|(_, r)| r)
+            .unwrap();
+        match report.engine_profile {
+            None => assert!(!profiling, "profiling on must attach engine_profile"),
+            Some(profile) => {
+                assert!(profiling, "profiling off must not attach engine_profile");
+                assert!(
+                    profile.get("samples").and_then(|v| v.as_i64()).unwrap()
+                        >= rows.len() as i64
+                );
+                let layers = profile.get("layers").and_then(|v| v.as_array()).unwrap();
+                assert_eq!(layers.len(), 2, "one profile entry per layer");
+                for l in layers {
+                    let drift = l
+                        .get("mapping_drift_rankcorr")
+                        .and_then(|v| v.as_f64())
+                        .expect("per-layer drift statistic");
+                    assert!((-1.0..=1.0).contains(&drift), "rank corr in [-1,1]: {drift}");
+                }
+            }
+        }
+        outputs.push(logits);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    // profiling must not change one served bit
+    for (a, b) in outputs[0].iter().zip(&outputs[1]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "profiling changed a served bit");
+        }
+    }
+}
+
+// ---- scheduler gauges on the metrics plane ---------------------------------
+
+#[test]
+fn queue_gauges_appear_for_live_models() {
+    let dir = tmp_dir("queue_gauges");
+    let cfg = common::test_config(&dir, "m");
+    let (registry, server) = spawn_traced(&cfg, &dir);
+    let mut client = KanClient::connect(server.addr).unwrap();
+    client.infer(&[0.2, 0.8]).unwrap();
+    let report = registry
+        .metrics()
+        .into_iter()
+        .find(|(id, _)| id == "m@1")
+        .map(|(_, r)| r)
+        .unwrap();
+    // idle pipeline: gauges present and empty
+    assert_eq!(report.queue_depth, Some(0));
+    assert_eq!(report.max_client_backlog, Some(0));
+    // and they ride the JSON plane
+    let body = client.metrics().unwrap();
+    let m = body.field("models").unwrap().field("m@1").unwrap();
+    assert_eq!(m.get("queue_depth").and_then(|v| v.as_i64()), Some(0));
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
