@@ -68,11 +68,15 @@ pub struct CallOptions {
     /// Noisy trials to aggregate (server cap applies); `> 1` yields the
     /// per-logit trial spread in [`Inference::std`].
     pub trials: u32,
+    /// When the server answers a structured `overloaded` rejection,
+    /// sleep for its `retry_after_ms` hint and reissue the call once
+    /// before surfacing [`Error::Overloaded`] to the caller.
+    pub retry_overloaded: bool,
 }
 
 impl Default for CallOptions {
     fn default() -> Self {
-        Self { backend: None, seed: None, trials: 1 }
+        Self { backend: None, seed: None, trials: 1, retry_overloaded: false }
     }
 }
 
@@ -92,6 +96,12 @@ pub struct ServerInfo {
     /// Pipelining depth per connection before the server applies
     /// backpressure.
     pub max_in_flight: usize,
+    /// Stable cluster identity of the node, when it has one (serve
+    /// endpoints started with node identity report it; older servers
+    /// and plain endpoints leave it out).
+    pub node_id: Option<String>,
+    /// Seconds since the node process started, when reported.
+    pub uptime_s: Option<u64>,
 }
 
 /// A connected v2 client (one TCP connection; not `Sync` — use one per
@@ -126,6 +136,8 @@ impl KanClient {
                 server: String::new(),
                 max_frame: 1 << 20,
                 max_in_flight: 1,
+                node_id: None,
+                uptime_s: None,
             },
             next_id: 1,
             completed: BTreeMap::new(),
@@ -136,9 +148,23 @@ impl KanClient {
         let resp =
             client.call(Request::Hello { id, client: Some("kan-edge-client".into()) })?;
         match resp {
-            Response::Hello { protocol, server, max_frame, max_in_flight, .. } => {
-                client.info =
-                    ServerInfo { protocol, server, max_frame, max_in_flight };
+            Response::Hello {
+                protocol,
+                server,
+                max_frame,
+                max_in_flight,
+                node_id,
+                uptime_s,
+                ..
+            } => {
+                client.info = ServerInfo {
+                    protocol,
+                    server,
+                    max_frame,
+                    max_in_flight,
+                    node_id,
+                    uptime_s,
+                };
                 Ok(client)
             }
             Response::Error { message, .. } => {
@@ -177,8 +203,28 @@ impl KanClient {
     }
 
     /// Infer with explicit per-request execution options: backend
-    /// selection and/or ACIM `seed`/`trials`.
+    /// selection and/or ACIM `seed`/`trials`. With
+    /// [`CallOptions::retry_overloaded`] set, one `overloaded`
+    /// rejection is absorbed by sleeping the server's `retry_after_ms`
+    /// hint and reissuing.
     pub fn infer_opts(
+        &mut self,
+        model: Option<&str>,
+        features: &[f32],
+        opts: &CallOptions,
+    ) -> Result<Inference> {
+        match self.infer_once(model, features, opts) {
+            Err(Error::Overloaded { retry_after_ms, .. }) if opts.retry_overloaded => {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    retry_after_ms.max(1),
+                ));
+                self.infer_once(model, features, opts)
+            }
+            other => other,
+        }
+    }
+
+    fn infer_once(
         &mut self,
         model: Option<&str>,
         features: &[f32],
@@ -210,8 +256,31 @@ impl KanClient {
 
     /// Batch submit with explicit per-request execution options. Row
     /// `i` derives its noise stream as `mix(seed, i)` server-side, so a
-    /// seeded batch reproduces bit-identically row by row.
+    /// seeded batch reproduces bit-identically row by row. With
+    /// [`CallOptions::retry_overloaded`] set, one `overloaded`
+    /// rejection is retried after the server's backoff hint (the rows
+    /// are cloned up front to make the reissue possible).
     pub fn infer_batch_opts(
+        &mut self,
+        model: Option<&str>,
+        rows: Vec<Vec<f32>>,
+        opts: &CallOptions,
+    ) -> Result<(String, Vec<WireRow>)> {
+        if !opts.retry_overloaded {
+            return self.infer_batch_once(model, rows, opts);
+        }
+        match self.infer_batch_once(model, rows.clone(), opts) {
+            Err(Error::Overloaded { retry_after_ms, .. }) => {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    retry_after_ms.max(1),
+                ));
+                self.infer_batch_once(model, rows, opts)
+            }
+            other => other,
+        }
+    }
+
+    fn infer_batch_once(
         &mut self,
         model: Option<&str>,
         rows: Vec<Vec<f32>>,
@@ -362,9 +431,64 @@ impl KanClient {
 
     /// Endpoint health: `(status, live model count)`.
     pub fn health(&mut self) -> Result<(String, usize)> {
+        let (status, models_live, _, _) = self.health_node()?;
+        Ok((status, models_live))
+    }
+
+    /// Endpoint health with cluster identity: `(status, live model
+    /// count, node_id, uptime_s)`. The identity fields are `None` when
+    /// the endpoint was not started with one (see `docs/CLUSTER.md`).
+    pub fn health_node(
+        &mut self,
+    ) -> Result<(String, usize, Option<String>, Option<u64>)> {
         let id = self.fresh_id();
         match self.call(Request::Health { id })? {
-            Response::Health { status, models_live, .. } => Ok((status, models_live)),
+            Response::Health { status, models_live, node_id, uptime_s, .. } => {
+                Ok((status, models_live, node_id, uptime_s))
+            }
+            Response::Error { code, message, retry_after_ms, .. } => {
+                Err(wire_error(code, &message, retry_after_ms))
+            }
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Fetch one artifact by content digest: `(payload bytes, optional
+    /// manifest metadata)`. The caller should re-hash and compare —
+    /// [`crate::registry::digest::digest_bytes`] — before trusting the
+    /// payload; the server verifies its copy before sending, but the
+    /// bytes also crossed a network.
+    pub fn pull_artifact(&mut self, digest: &str) -> Result<(Vec<u8>, Option<Value>)> {
+        let id = self.fresh_id();
+        match self.call(Request::PullArtifact { id, digest: digest.to_string() })? {
+            Response::Artifact { data, meta, .. } => Ok((data, meta)),
+            Response::Error { code, message, retry_after_ms, .. } => {
+                Err(wire_error(code, &message, retry_after_ms))
+            }
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Publish artifact bytes as model `model` on the remote endpoint
+    /// (digest computed here and re-verified server-side). Returns the
+    /// resolved `name@version` the server registered. Re-pushing bytes
+    /// the server already serves under `model` is an idempotent no-op.
+    pub fn push_artifact(
+        &mut self,
+        model: &str,
+        version: Option<u32>,
+        data: &[u8],
+    ) -> Result<String> {
+        let digest = crate::registry::digest::digest_bytes(data);
+        let id = self.fresh_id();
+        match self.call(Request::PushArtifact {
+            id,
+            model: model.to_string(),
+            version,
+            digest,
+            data: data.to_vec(),
+        })? {
+            Response::Published { model, .. } => Ok(model),
             Response::Error { code, message, retry_after_ms, .. } => {
                 Err(wire_error(code, &message, retry_after_ms))
             }

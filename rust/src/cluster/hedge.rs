@@ -1,0 +1,116 @@
+//! Hedged-retry policy: when the primary replica has not answered
+//! within a quantile of recently observed latencies, reissue the
+//! request to the next replica and take whichever answer lands first.
+//!
+//! Safe because the data path is idempotent by construction: the wire
+//! layer resolves the noise seed *before* routing, so both replicas
+//! compute the same bit-identical output for the same `(row, seed)` —
+//! a hedge can change who answers, never what the answer is.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::metrics::percentile;
+
+/// Samples needed before the quantile is trusted; below this the delay
+/// is the configured maximum (conservative: cold routers barely hedge).
+const WARM_SAMPLES: usize = 8;
+
+/// Bounded ring of recent request latencies (millis) plus the knobs
+/// that turn its quantile into a hedge delay.
+pub struct HedgePolicy {
+    quantile: f64,
+    min_ms: u64,
+    max_ms: u64,
+    window: Mutex<Window>,
+}
+
+struct Window {
+    samples: Vec<u64>,
+    next: usize,
+}
+
+impl HedgePolicy {
+    /// `quantile` in `(0, 1]`; the derived delay is clamped to
+    /// `[min_ms, max_ms]`.
+    pub fn new(quantile: f64, min_ms: u64, max_ms: u64) -> Self {
+        Self {
+            quantile: quantile.clamp(0.01, 1.0),
+            min_ms: min_ms.min(max_ms),
+            max_ms: max_ms.max(min_ms).max(1),
+            window: Mutex::new(Window { samples: Vec::with_capacity(512), next: 0 }),
+        }
+    }
+
+    /// Record one successful first-answer latency.
+    pub fn record(&self, latency: Duration) {
+        let ms = latency.as_millis().min(u128::from(u64::MAX)) as u64;
+        let mut w = self.window.lock().unwrap();
+        if w.samples.len() < 512 {
+            w.samples.push(ms);
+        } else {
+            let at = w.next;
+            w.samples[at] = ms;
+            w.next = (at + 1) % 512;
+        }
+    }
+
+    /// Current hedge delay: the configured quantile of the window,
+    /// clamped, or `max_ms` while the window is cold.
+    pub fn delay(&self) -> Duration {
+        let w = self.window.lock().unwrap();
+        let ms = if w.samples.len() < WARM_SAMPLES {
+            self.max_ms
+        } else {
+            let mut sorted = w.samples.clone();
+            sorted.sort_unstable();
+            percentile(&sorted, self.quantile).clamp(self.min_ms, self.max_ms)
+        };
+        Duration::from_millis(ms)
+    }
+
+    /// Observed sample count (for the metrics rollup).
+    pub fn samples(&self) -> usize {
+        self.window.lock().unwrap().samples.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_window_uses_the_maximum() {
+        let h = HedgePolicy::new(0.9, 1, 40);
+        assert_eq!(h.delay(), Duration::from_millis(40));
+        for _ in 0..WARM_SAMPLES - 1 {
+            h.record(Duration::from_millis(2));
+        }
+        assert_eq!(h.delay(), Duration::from_millis(40), "still one sample short");
+    }
+
+    #[test]
+    fn warm_window_tracks_the_quantile_clamped() {
+        let h = HedgePolicy::new(0.9, 5, 100);
+        for ms in [1u64, 1, 1, 2, 2, 2, 3, 3, 3, 50] {
+            h.record(Duration::from_millis(ms));
+        }
+        // p90 of the window is 3ms -> clamped up to min_ms=5
+        assert_eq!(h.delay(), Duration::from_millis(5));
+        for _ in 0..40 {
+            h.record(Duration::from_millis(400));
+        }
+        // dominated by 400ms samples -> clamped down to max_ms=100
+        assert_eq!(h.delay(), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let h = HedgePolicy::new(0.5, 1, 1000);
+        for _ in 0..2000 {
+            h.record(Duration::from_millis(7));
+        }
+        assert_eq!(h.samples(), 512);
+        assert_eq!(h.delay(), Duration::from_millis(7));
+    }
+}

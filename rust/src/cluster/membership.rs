@@ -1,0 +1,221 @@
+//! Cluster membership as seen by one router: per-node liveness driven
+//! by the heartbeat loop (and by transport failures observed on the
+//! data path, which count the same — a request that cannot connect is
+//! better evidence than a heartbeat that has not fired yet).
+//!
+//! States: `Up` (routable), `Down` (after `fail_after` consecutive
+//! failures; first success recovers it), `Draining` (operator-set: no
+//! new work is routed there, but the node keeps being heartbeated and
+//! can still serve as a replication source).
+
+use std::sync::Mutex;
+
+use crate::util::json::{obj, Value};
+
+/// Routing view of one node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    Up,
+    Down,
+    Draining,
+}
+
+impl NodeState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NodeState::Up => "up",
+            NodeState::Down => "down",
+            NodeState::Draining => "draining",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct NodeView {
+    state: NodeState,
+    consecutive_failures: u32,
+    /// Stable identity the node reported in `health` (None until the
+    /// first successful probe, or for pre-identity servers).
+    node_id: Option<String>,
+    models_live: usize,
+    uptime_s: Option<u64>,
+}
+
+/// Membership table over the static configured node list. Index `i`
+/// here is index `i` in `cluster.nodes` and in the hash ring.
+pub struct Membership {
+    addrs: Vec<String>,
+    fail_after: u32,
+    views: Vec<Mutex<NodeView>>,
+}
+
+impl Membership {
+    /// All nodes start `Up` (optimistic): traffic can route before the
+    /// first heartbeat, and a dead node is demoted after `fail_after`
+    /// observed failures from either the heartbeat or the data path.
+    pub fn new(addrs: Vec<String>, fail_after: u32) -> Self {
+        let views = addrs
+            .iter()
+            .map(|_| {
+                Mutex::new(NodeView {
+                    state: NodeState::Up,
+                    consecutive_failures: 0,
+                    node_id: None,
+                    models_live: 0,
+                    uptime_s: None,
+                })
+            })
+            .collect();
+        Self { addrs, fail_after: fail_after.max(1), views }
+    }
+
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+
+    pub fn addr(&self, idx: usize) -> &str {
+        &self.addrs[idx]
+    }
+
+    pub fn state(&self, idx: usize) -> NodeState {
+        self.views[idx].lock().unwrap().state
+    }
+
+    /// Identity label for metrics/rollups: the reported `node_id` when
+    /// known, else the configured address.
+    pub fn label(&self, idx: usize) -> String {
+        let v = self.views[idx].lock().unwrap();
+        v.node_id.clone().unwrap_or_else(|| self.addrs[idx].clone())
+    }
+
+    /// May new requests be routed to this node?
+    pub fn is_routable(&self, idx: usize) -> bool {
+        self.state(idx) == NodeState::Up
+    }
+
+    pub fn up_count(&self) -> usize {
+        (0..self.len()).filter(|&i| self.is_routable(i)).count()
+    }
+
+    /// A successful probe or data-path call: resets the failure streak
+    /// and recovers a `Down` node (a `Draining` node stays draining —
+    /// that flag is operator intent, not an observation).
+    pub fn record_ok(
+        &self,
+        idx: usize,
+        node_id: Option<String>,
+        models_live: usize,
+        uptime_s: Option<u64>,
+    ) {
+        let mut v = self.views[idx].lock().unwrap();
+        v.consecutive_failures = 0;
+        if let Some(id) = node_id {
+            v.node_id = Some(id);
+        }
+        v.models_live = models_live;
+        if uptime_s.is_some() {
+            v.uptime_s = uptime_s;
+        }
+        if v.state == NodeState::Down {
+            v.state = NodeState::Up;
+        }
+    }
+
+    /// A failed probe or data-path transport error. Returns `true` when
+    /// this failure transitioned the node to `Down`.
+    pub fn record_failure(&self, idx: usize) -> bool {
+        let mut v = self.views[idx].lock().unwrap();
+        v.consecutive_failures = v.consecutive_failures.saturating_add(1);
+        if v.state == NodeState::Up && v.consecutive_failures >= self.fail_after {
+            v.state = NodeState::Down;
+            return true;
+        }
+        false
+    }
+
+    /// Operator drain toggle. Un-draining returns the node to `Up`; the
+    /// next failures can still demote it normally.
+    pub fn set_draining(&self, idx: usize, draining: bool) {
+        let mut v = self.views[idx].lock().unwrap();
+        v.state = if draining { NodeState::Draining } else { NodeState::Up };
+        if !draining {
+            v.consecutive_failures = 0;
+        }
+    }
+
+    /// Flat per-node status objects for the metrics rollup, keyed by
+    /// the node label (reported id, else address).
+    pub fn summaries(&self) -> Vec<(String, Value)> {
+        (0..self.len())
+            .map(|i| {
+                let v = self.views[i].lock().unwrap();
+                let label =
+                    v.node_id.clone().unwrap_or_else(|| self.addrs[i].clone());
+                let body = obj(vec![
+                    ("addr", Value::Str(self.addrs[i].clone())),
+                    ("state", Value::Str(v.state.as_str().to_string())),
+                    ("up", Value::Int((v.state == NodeState::Up) as i64)),
+                    ("models_live", Value::Int(v.models_live as i64)),
+                    (
+                        "uptime_s",
+                        v.uptime_s.map(|u| Value::Int(u as i64)).unwrap_or(Value::Null),
+                    ),
+                ]);
+                (label, body)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two() -> Membership {
+        Membership::new(vec!["a:1".into(), "b:2".into()], 2)
+    }
+
+    #[test]
+    fn fails_down_after_threshold_and_recovers() {
+        let m = two();
+        assert!(m.is_routable(0));
+        assert!(!m.record_failure(0));
+        assert!(m.is_routable(0), "one failure below fail_after=2 must not demote");
+        assert!(m.record_failure(0));
+        assert_eq!(m.state(0), NodeState::Down);
+        assert_eq!(m.up_count(), 1);
+        // repeated failures do not re-report the transition
+        assert!(!m.record_failure(0));
+        m.record_ok(0, Some("n0".into()), 3, Some(12));
+        assert_eq!(m.state(0), NodeState::Up);
+        assert_eq!(m.label(0), "n0");
+    }
+
+    #[test]
+    fn draining_is_not_routable_but_not_down() {
+        let m = two();
+        m.set_draining(1, true);
+        assert!(!m.is_routable(1));
+        assert_eq!(m.state(1), NodeState::Draining);
+        // observations do not overrule operator intent
+        m.record_ok(1, None, 0, None);
+        assert_eq!(m.state(1), NodeState::Draining);
+        m.set_draining(1, false);
+        assert!(m.is_routable(1));
+    }
+
+    #[test]
+    fn summaries_key_by_id_when_known() {
+        let m = two();
+        m.record_ok(0, Some("alpha".into()), 2, Some(5));
+        let s = m.summaries();
+        assert_eq!(s[0].0, "alpha");
+        assert_eq!(s[1].0, "b:2");
+        assert_eq!(s[0].1.get("up").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(s[0].1.get("models_live").unwrap().as_i64().unwrap(), 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! Sharded multi-node serving (`docs/CLUSTER.md`).
+//!
+//! A [`ClusterRouter`] is a [`crate::coordinator::Dispatch`] that owns
+//! no models itself: it places each `name@version` on a replica set via
+//! a consistent-hash [`ring`], forwards the v2 verbs to the owning
+//! nodes over pooled [`crate::client::KanClient`] connections, tracks
+//! per-node liveness ([`membership`], fed by a heartbeat loop), hedges
+//! slow single-row requests ([`hedge`]), and replicates missing
+//! artifacts on demand through the `pull_artifact` / `push_artifact`
+//! verbs. Served behind the ordinary [`crate::coordinator::TcpServer`],
+//! the cluster is indistinguishable from a single node to clients.
+
+pub mod hedge;
+pub mod membership;
+pub mod ring;
+pub mod router;
+
+pub use hedge::HedgePolicy;
+pub use membership::{Membership, NodeState};
+pub use ring::HashRing;
+pub use router::{ClusterRouter, RouterOptions};

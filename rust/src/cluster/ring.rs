@@ -1,0 +1,160 @@
+//! Consistent-hash ring with virtual nodes.
+//!
+//! Each cluster node contributes `vnodes` points on a 64-bit ring,
+//! derived from its name with the crate's FNV-1a digest and the
+//! split-mix `mix` (see [`crate::util::rng`]) — the same primitives the
+//! registry and the seeded backends use, so the ring costs no new
+//! hashing code. A key routes to the first point at or after its own
+//! hash (wrapping), and its replica set is the next `rf` *distinct*
+//! nodes clockwise from there.
+//!
+//! Virtual nodes bound key movement under membership change: adding or
+//! removing one node of `n` moves only the keys whose arcs it owned,
+//! about `1/n` of the space, instead of reshuffling everything the way
+//! `hash % n` would. `rust/tests/cluster.rs` asserts that bound.
+
+use crate::registry::digest::fnv64;
+use crate::util::rng::mix;
+
+/// Salt mixed into key hashes so a key and an identically-named node
+/// never collide onto the same point by construction.
+const KEY_SALT: u64 = 0x6b65795f73616c74; // "key_salt"
+
+/// Immutable ring over a static node list (index = position in the
+/// configured `cluster.nodes` order).
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// Sorted `(point, node index)` pairs.
+    points: Vec<(u64, usize)>,
+    nodes: usize,
+}
+
+impl HashRing {
+    /// Build a ring with `vnodes` points per node. Node identity is the
+    /// *name* (its configured address string), so the ring layout is
+    /// identical on every router that shares the config.
+    pub fn new(node_names: &[String], vnodes: usize) -> Self {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(node_names.len() * vnodes);
+        for (idx, name) in node_names.iter().enumerate() {
+            let base = fnv64(name.as_bytes());
+            for v in 0..vnodes {
+                points.push((mix(base, v as u64), idx));
+            }
+        }
+        // ties (64-bit collisions) resolve by node index, deterministically
+        points.sort_unstable();
+        Self { points, nodes: node_names.len() }
+    }
+
+    /// Number of nodes the ring was built over.
+    pub fn node_count(&self) -> usize {
+        self.nodes
+    }
+
+    fn key_point(key: &str) -> u64 {
+        mix(fnv64(key.as_bytes()), KEY_SALT)
+    }
+
+    /// The first `rf` distinct nodes clockwise from `key`'s point, in
+    /// preference order (primary first). Fewer than `rf` when the ring
+    /// has fewer nodes; empty only for an empty ring.
+    pub fn replicas(&self, key: &str, rf: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(rf.min(self.nodes));
+        if self.points.is_empty() || rf == 0 {
+            return out;
+        }
+        let h = Self::key_point(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for i in 0..self.points.len() {
+            let (_, node) = self.points[(start + i) % self.points.len()];
+            if !out.contains(&node) {
+                out.push(node);
+                if out.len() == rf.min(self.nodes) {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The key's primary owner.
+    pub fn primary(&self, key: &str) -> Option<usize> {
+        self.replicas(key, 1).first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("node-{i}:77{i:02}")).collect()
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_stable() {
+        let ring = HashRing::new(&names(5), 64);
+        for k in 0..200 {
+            let key = format!("model-{k}@1");
+            let r = ring.replicas(&key, 3);
+            assert_eq!(r.len(), 3);
+            let mut sorted = r.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "duplicate replica for {key}: {r:?}");
+            // deterministic across ring rebuilds from the same config
+            assert_eq!(HashRing::new(&names(5), 64).replicas(&key, 3), r);
+        }
+    }
+
+    #[test]
+    fn rf_larger_than_cluster_returns_every_node() {
+        let ring = HashRing::new(&names(3), 16);
+        let r = ring.replicas("m@1", 5);
+        let mut sorted = r.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2]);
+        assert!(HashRing::new(&[], 16).replicas("m@1", 2).is_empty());
+    }
+
+    #[test]
+    fn join_moves_a_bounded_fraction_of_keys() {
+        let before = HashRing::new(&names(4), 64);
+        let mut grown = names(4);
+        grown.push("node-4:7704".into());
+        let after = HashRing::new(&grown, 64);
+        let total = 2000;
+        let mut moved = 0;
+        for k in 0..total {
+            let key = format!("model-{k}@1");
+            let (b, a) = (before.primary(&key).unwrap(), after.primary(&key).unwrap());
+            if b != a {
+                // keys only ever move *to* the joining node, never
+                // between the survivors
+                assert_eq!(a, 4, "key {key} moved {b} -> {a}");
+                moved += 1;
+            }
+        }
+        // ideal is 1/5 of the keys; allow generous slack for vnode variance
+        assert!(
+            moved > 0 && (moved as f64) < 0.45 * total as f64,
+            "join moved {moved}/{total} keys"
+        );
+    }
+
+    #[test]
+    fn keys_balance_roughly_across_nodes() {
+        let ring = HashRing::new(&names(4), 64);
+        let mut counts = [0usize; 4];
+        for k in 0..4000 {
+            counts[ring.primary(&format!("key-{k}")).unwrap()] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                c > 400 && c < 2200,
+                "node {i} owns {c}/4000 keys: {counts:?}"
+            );
+        }
+    }
+}

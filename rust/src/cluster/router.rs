@@ -1,0 +1,724 @@
+//! The cluster front-router: a [`Dispatch`] implementation that speaks
+//! protocol v2 *client-side* to a static set of backend nodes.
+//!
+//! Placement is consistent hashing over the request's model spec (see
+//! [`super::ring`]): every model owns a primary plus `replication - 1`
+//! fallback nodes, and the router walks that preference order. The
+//! seed-resolution contract makes the whole data path idempotent — the
+//! node-side wire layer the router sits behind resolves `seed` before
+//! dispatch, so a hedged or failed-over reissue carries the exact same
+//! seed and every replica computes bit-identical logits.
+//!
+//! Three recovery mechanisms compose per request:
+//!
+//! * **Failover** — a transport error (connect refused, connection
+//!   dropped) marks the node toward `Down` and moves to the next
+//!   replica. Clean application errors (`[code] ...` wire errors,
+//!   overload rejections) are returned to the caller untouched: they
+//!   are deterministic and would repeat on every replica.
+//! * **Replication on demand** — a `not in manifest` answer makes the
+//!   router find the artifact on any other node (`list_models` →
+//!   `pull_artifact` by digest), re-verify the digest locally, push it
+//!   to the missing node at the same version, and retry. Nodes never
+//!   talk to each other; the router mediates.
+//! * **Hedged retries** — single-row requests that outlive a
+//!   quantile-derived delay ([`super::hedge`]) are reissued to the next
+//!   replica; the first answer wins and the loser is discarded (its
+//!   connection is returned to the pool once it drains — the v2
+//!   pipelining protocol stashes the stale response harmlessly). Batch
+//!   requests fail over but never hedge: a duplicate batch doubles
+//!   load for a latency win only its slowest row would see.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::client::{CallOptions, Inference, KanClient};
+use crate::coordinator::backend::RowOutput;
+use crate::coordinator::protocol::ModelSummary;
+use crate::coordinator::scheduler::ClientId;
+use crate::coordinator::server::{Dispatch, RouteSpec};
+use crate::error::{Error, Result};
+use crate::obs::trace::Stage;
+use crate::registry::{digest, parse_model_spec};
+use crate::util::json::{obj, Value};
+
+use super::hedge::HedgePolicy;
+use super::membership::{Membership, NodeState};
+use super::ring::HashRing;
+
+/// Idle pooled connections kept per node.
+const POOL_CAP: usize = 8;
+
+/// Monotone counters for the `cluster` metrics section.
+#[derive(Default)]
+struct Counters {
+    forwards: AtomicU64,
+    hedges: AtomicU64,
+    hedge_wins: AtomicU64,
+    hedge_cancellations: AtomicU64,
+    failovers: AtomicU64,
+    replications: AtomicU64,
+    replication_failures: AtomicU64,
+}
+
+/// Tuning for [`ClusterRouter::new`] (see `config::ClusterConfig` for
+/// the file side and the defaults).
+#[derive(Debug, Clone)]
+pub struct RouterOptions {
+    /// Replicas per model spec (primary included).
+    pub replication: usize,
+    /// Virtual nodes per physical node on the hash ring.
+    pub vnodes: usize,
+    /// Heartbeat probe period; `0` disables the background loop
+    /// (data-path failures still drive membership).
+    pub heartbeat_ms: u64,
+    /// Consecutive failures before a node is marked `Down`.
+    pub fail_after: u32,
+    /// Master switch for hedged retries.
+    pub hedge: bool,
+    /// Latency quantile the hedge delay is derived from.
+    pub hedge_quantile: f64,
+    /// Clamp on the derived hedge delay.
+    pub hedge_min_ms: u64,
+    pub hedge_max_ms: u64,
+}
+
+impl Default for RouterOptions {
+    fn default() -> Self {
+        Self {
+            replication: 2,
+            vnodes: 64,
+            heartbeat_ms: 500,
+            fail_after: 2,
+            hedge: true,
+            hedge_quantile: 0.9,
+            hedge_min_ms: 1,
+            hedge_max_ms: 100,
+        }
+    }
+}
+
+/// One completed remote attempt, as reported by its worker thread.
+struct Attempt {
+    node: usize,
+    hedge: bool,
+    result: Result<Inference>,
+}
+
+/// The router itself. Construct with [`ClusterRouter::new`], wrap in an
+/// `Arc`, and hand it to [`crate::coordinator::TcpServer`] — clients
+/// then talk to the cluster exactly as they would to a single node.
+pub struct ClusterRouter {
+    ring: HashRing,
+    members: Arc<Membership>,
+    pools: Vec<Arc<Mutex<Vec<KanClient>>>>,
+    opts: RouterOptions,
+    hedge: HedgePolicy,
+    counters: Counters,
+    stop: Arc<AtomicBool>,
+}
+
+impl ClusterRouter {
+    /// Build the ring + membership over `nodes` (host:port strings, the
+    /// order defines ring identity) and start the heartbeat loop.
+    pub fn new(nodes: Vec<String>, opts: RouterOptions) -> Result<Arc<ClusterRouter>> {
+        if nodes.is_empty() {
+            return Err(Error::Config(
+                "cluster router needs at least one node (cluster.nodes)".into(),
+            ));
+        }
+        let members = Arc::new(Membership::new(nodes.clone(), opts.fail_after));
+        let router = Arc::new(ClusterRouter {
+            ring: HashRing::new(&nodes, opts.vnodes),
+            pools: nodes.iter().map(|_| Arc::new(Mutex::new(Vec::new()))).collect(),
+            hedge: HedgePolicy::new(
+                opts.hedge_quantile,
+                opts.hedge_min_ms,
+                opts.hedge_max_ms,
+            ),
+            members: members.clone(),
+            counters: Counters::default(),
+            stop: Arc::new(AtomicBool::new(false)),
+            opts,
+        });
+        if router.opts.heartbeat_ms > 0 {
+            spawn_heartbeat(
+                members,
+                Duration::from_millis(router.opts.heartbeat_ms),
+                router.stop.clone(),
+            );
+        }
+        Ok(router)
+    }
+
+    /// Membership view (tests and the CLI use this to drain nodes).
+    pub fn membership(&self) -> &Membership {
+        &self.members
+    }
+
+    /// Ring placement for a model spec, preference order (tests use
+    /// this to aim traffic at a known replica set).
+    pub fn placement(&self, key: &str) -> Vec<usize> {
+        self.ring.replicas(key, self.opts.replication)
+    }
+
+    // ---- connection pool -------------------------------------------------
+
+    fn checkout(&self, node: usize) -> Result<KanClient> {
+        if let Some(c) = self.pools[node].lock().unwrap().pop() {
+            return Ok(c);
+        }
+        KanClient::connect(self.members.addr(node))
+    }
+
+    fn put_back(&self, node: usize, client: KanClient) {
+        put_back_pool(&self.pools[node], client);
+    }
+
+    // ---- single-row data path (hedged) -------------------------------------
+
+    /// Spawn one remote attempt; the worker owns the connection for the
+    /// call's duration and reports through `tx` (a dropped receiver —
+    /// the caller already got a winner — is fine).
+    fn spawn_attempt(
+        &self,
+        node: usize,
+        model: Option<String>,
+        features: Vec<f32>,
+        call: CallOptions,
+        hedge: bool,
+        tx: mpsc::Sender<Attempt>,
+    ) {
+        let pool = self.pools[node].clone();
+        let addr = self.members.addr(node).to_string();
+        std::thread::spawn(move || {
+            let mut client = {
+                let pooled = pool.lock().unwrap().pop();
+                match pooled.map(Ok).unwrap_or_else(|| KanClient::connect(&addr)) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        let _ = tx.send(Attempt { node, hedge, result: Err(e) });
+                        return;
+                    }
+                }
+            };
+            let result = client.infer_opts(model.as_deref(), &features, &call);
+            if result.is_ok() || is_remote_app_error(result.as_ref().err()) {
+                put_back_pool(&pool, client);
+            }
+            let _ = tx.send(Attempt { node, hedge, result });
+        });
+    }
+
+    fn route_candidates(&self, key: &str) -> Result<Vec<usize>> {
+        let pref = self.ring.replicas(key, self.opts.replication);
+        let up: Vec<usize> = pref.into_iter().filter(|&i| self.members.is_routable(i)).collect();
+        if up.is_empty() {
+            return Err(Error::Serving(format!(
+                "no routable cluster node for '{key}' ({} configured, {} up)",
+                self.members.len(),
+                self.members.up_count()
+            )));
+        }
+        Ok(up)
+    }
+
+    // ---- replication -------------------------------------------------------
+
+    /// Find `spec`'s artifact on any non-down node other than `target`,
+    /// verify it locally, and push it to `target` at the source's
+    /// version. Draining nodes still serve as sources.
+    fn replicate_to(&self, target: usize, spec: Option<&str>) -> Result<()> {
+        let spec = spec.ok_or_else(|| {
+            Error::Serving(
+                "cannot replicate: the request named no model (default-model \
+                 requests need the artifact pre-published on every replica)"
+                    .into(),
+            )
+        })?;
+        let (name, want_version) = parse_model_spec(spec)?;
+        let mut last_err: Option<Error> = None;
+        for src in 0..self.members.len() {
+            if src == target || self.members.state(src) == NodeState::Down {
+                continue;
+            }
+            match self.replicate_from(src, target, name, want_version) {
+                Ok(found) => {
+                    if found {
+                        self.counters.replications.fetch_add(1, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        self.counters.replication_failures.fetch_add(1, Ordering::Relaxed);
+        Err(last_err.unwrap_or_else(|| {
+            Error::Serving(format!("no cluster node has an artifact for model '{spec}'"))
+        }))
+    }
+
+    /// One source candidate: `Ok(false)` means "this node does not have
+    /// it, try the next"; errors mean the transfer itself failed.
+    fn replicate_from(
+        &self,
+        src: usize,
+        target: usize,
+        name: &str,
+        want_version: Option<u32>,
+    ) -> Result<bool> {
+        let mut from = self.checkout(src)?;
+        let models = match from.list_models() {
+            Ok(m) => m,
+            Err(e) => {
+                self.members.record_failure(src);
+                return Err(e);
+            }
+        };
+        let found = models
+            .into_iter()
+            .find(|m| m.name == name && want_version.map_or(true, |v| v == m.version));
+        let Some(summary) = found else {
+            self.put_back(src, from);
+            return Ok(false);
+        };
+        let Some(dig) = summary.digest.clone() else {
+            self.put_back(src, from);
+            return Ok(false);
+        };
+        let (data, _meta) = from.pull_artifact(&dig)?;
+        self.put_back(src, from);
+        // end-to-end integrity: re-hash what actually crossed the wire
+        let actual = digest::digest_bytes(&data);
+        if actual != dig {
+            return Err(Error::Registry(format!(
+                "digest mismatch pulling '{name}' from {}: source says {dig}, \
+                 payload is {actual} (artifact corrupted in transit?)",
+                self.members.addr(src)
+            )));
+        }
+        let mut to = self.checkout(target)?;
+        let result = to.push_artifact(name, Some(summary.version), &data);
+        if result.is_ok() || is_remote_app_error(result.as_ref().err()) {
+            self.put_back(target, to);
+        }
+        result.map(|_| true)
+    }
+
+    // ---- metrics rollup ----------------------------------------------------
+
+    /// Fetch one routable node's `metrics` body, if reachable.
+    fn node_metrics(&self, node: usize) -> Option<Value> {
+        let mut c = self.checkout(node).ok()?;
+        match c.metrics() {
+            Ok(body) => {
+                self.put_back(node, c);
+                Some(body)
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+impl Drop for ClusterRouter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn put_back_pool(pool: &Mutex<Vec<KanClient>>, client: KanClient) {
+    let mut p = pool.lock().unwrap();
+    if p.len() < POOL_CAP {
+        p.push(client);
+    }
+}
+
+/// A clean remote application error: the node answered a well-formed
+/// wire error (`[code] ...` rendering, or the typed overload). The
+/// connection is still healthy and the error is deterministic — every
+/// replica would repeat it.
+fn is_remote_app_error(e: Option<&Error>) -> bool {
+    match e {
+        None => false,
+        Some(Error::Overloaded { .. }) => true,
+        Some(Error::Serving(m)) => m.starts_with('['),
+        Some(_) => false,
+    }
+}
+
+/// Does this error mean "the node does not have the model" (and
+/// replication could fix it)?
+fn is_missing_model(e: &Error) -> bool {
+    matches!(e, Error::Serving(m) if m.starts_with("[not_found]") && m.contains("not in manifest"))
+}
+
+fn heartbeat_node(members: &Membership, idx: usize) {
+    let probe = KanClient::connect(members.addr(idx)).and_then(|mut c| c.health_node());
+    match probe {
+        Ok((_, models_live, node_id, uptime_s)) => {
+            members.record_ok(idx, node_id, models_live, uptime_s);
+        }
+        Err(_) => {
+            members.record_failure(idx);
+        }
+    }
+}
+
+/// Background liveness loop. Heartbeat connections are throwaway on
+/// purpose: probing the ability to *connect* is the point, a pooled
+/// connection would keep reporting a node healthy after it stopped
+/// accepting.
+fn spawn_heartbeat(members: Arc<Membership>, period: Duration, stop: Arc<AtomicBool>) {
+    std::thread::Builder::new()
+        .name("kan-edge-heartbeat".into())
+        .spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                for idx in 0..members.len() {
+                    heartbeat_node(&members, idx);
+                }
+                std::thread::sleep(period);
+            }
+        })
+        .expect("spawn heartbeat");
+}
+
+impl Dispatch for ClusterRouter {
+    /// Route one row. The trace stages are reinterpreted as route hops
+    /// (`docs/OBSERVABILITY.md`): admission = replica selection, queue =
+    /// primary issued, batch = hedge window closed, execute = winning
+    /// answer arrived; respond stays with the router's own wire layer.
+    fn dispatch(
+        &self,
+        _client: ClientId,
+        route: &RouteSpec,
+        features: Vec<f32>,
+    ) -> Result<(String, RowOutput)> {
+        let started = Instant::now();
+        let key = route.model.clone().unwrap_or_default();
+        let candidates = self.route_candidates(&key)?;
+        if let Some(t) = &route.trace {
+            t.mark(Stage::Admission);
+        }
+        self.counters.forwards.fetch_add(1, Ordering::Relaxed);
+        let call = CallOptions {
+            backend: route.backend,
+            seed: route.opts.seed,
+            trials: route.opts.trials,
+            retry_overloaded: false,
+        };
+
+        let (tx, rx) = mpsc::channel();
+        self.spawn_attempt(
+            candidates[0],
+            route.model.clone(),
+            features.clone(),
+            call,
+            false,
+            tx.clone(),
+        );
+        if let Some(t) = &route.trace {
+            t.mark(Stage::Queue);
+        }
+        let mut in_flight = 1usize;
+        let mut next = 1usize;
+        let mut hedged = false;
+        let mut replicated = false;
+        let mut hedge_window_open = route.trace.is_some();
+        let mut last_err: Option<Error> = None;
+
+        loop {
+            let attempt = if in_flight > 0
+                && self.opts.hedge
+                && !hedged
+                && next < candidates.len()
+            {
+                match rx.recv_timeout(self.hedge.delay()) {
+                    Ok(a) => a,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        hedged = true;
+                        self.counters.hedges.fetch_add(1, Ordering::Relaxed);
+                        self.spawn_attempt(
+                            candidates[next],
+                            route.model.clone(),
+                            features.clone(),
+                            call,
+                            true,
+                            tx.clone(),
+                        );
+                        next += 1;
+                        in_flight += 1;
+                        if let Some(t) = &route.trace {
+                            t.mark(Stage::Batch);
+                        }
+                        hedge_window_open = false;
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            } else if in_flight > 0 {
+                match rx.recv() {
+                    Ok(a) => a,
+                    Err(_) => break,
+                }
+            } else if next < candidates.len() {
+                self.counters.failovers.fetch_add(1, Ordering::Relaxed);
+                self.spawn_attempt(
+                    candidates[next],
+                    route.model.clone(),
+                    features.clone(),
+                    call,
+                    false,
+                    tx.clone(),
+                );
+                next += 1;
+                in_flight += 1;
+                continue;
+            } else {
+                break;
+            };
+            in_flight -= 1;
+
+            match attempt.result {
+                Ok(inf) => {
+                    if attempt.hedge {
+                        self.counters.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                    } else if hedged {
+                        self.counters
+                            .hedge_cancellations
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.hedge.record(started.elapsed());
+                    if let Some(t) = &route.trace {
+                        if hedge_window_open {
+                            t.mark(Stage::Batch);
+                        }
+                        t.mark(Stage::Execute);
+                    }
+                    return Ok((
+                        inf.model,
+                        RowOutput { logits: inf.logits, trial_std: inf.std },
+                    ));
+                }
+                Err(e) if is_missing_model(&e) && !replicated => {
+                    replicated = true;
+                    match self.replicate_to(attempt.node, route.model.as_deref()) {
+                        Ok(()) => {
+                            self.spawn_attempt(
+                                attempt.node,
+                                route.model.clone(),
+                                features.clone(),
+                                call,
+                                attempt.hedge,
+                                tx.clone(),
+                            );
+                            in_flight += 1;
+                        }
+                        Err(rep) => last_err = Some(rep),
+                    }
+                }
+                Err(e) if is_remote_app_error(Some(&e)) => return Err(e),
+                Err(e) => {
+                    self.members.record_failure(attempt.node);
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::Serving("no cluster replica answered".into())))
+    }
+
+    /// Batch routing: same placement and failover as single rows, but
+    /// never hedged (a duplicated batch doubles backend load; its
+    /// latency is dominated by the slowest row either way).
+    fn dispatch_batch(
+        &self,
+        _client: ClientId,
+        route: &RouteSpec,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<RowOutput>)> {
+        let key = route.model.clone().unwrap_or_default();
+        let candidates = self.route_candidates(&key)?;
+        self.counters.forwards.fetch_add(1, Ordering::Relaxed);
+        let call = CallOptions {
+            backend: route.backend,
+            seed: route.opts.seed,
+            trials: route.opts.trials,
+            retry_overloaded: false,
+        };
+        let mut replicated = false;
+        let mut last_err: Option<Error> = None;
+        let mut i = 0usize;
+        while i < candidates.len() {
+            let node = candidates[i];
+            let mut client = match self.checkout(node) {
+                Ok(c) => c,
+                Err(e) => {
+                    self.members.record_failure(node);
+                    last_err = Some(e);
+                    i += 1;
+                    if i < candidates.len() {
+                        self.counters.failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                    continue;
+                }
+            };
+            match client.infer_batch_opts(route.model.as_deref(), rows.clone(), &call) {
+                Ok((model, wire_rows)) => {
+                    self.put_back(node, client);
+                    let outs = wire_rows
+                        .into_iter()
+                        .map(|w| RowOutput { logits: w.logits, trial_std: w.std })
+                        .collect();
+                    return Ok((model, outs));
+                }
+                Err(e) if is_missing_model(&e) && !replicated => {
+                    self.put_back(node, client);
+                    replicated = true;
+                    match self.replicate_to(node, route.model.as_deref()) {
+                        Ok(()) => continue, // retry the same node
+                        Err(rep) => {
+                            last_err = Some(rep);
+                            i += 1;
+                        }
+                    }
+                }
+                Err(e) if is_remote_app_error(Some(&e)) => {
+                    self.put_back(node, client);
+                    return Err(e);
+                }
+                Err(e) => {
+                    self.members.record_failure(node);
+                    last_err = Some(e);
+                    i += 1;
+                    if i < candidates.len() {
+                        self.counters.failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::Serving("no cluster replica answered".into())))
+    }
+
+    /// Union of every routable node's models, deduplicated by
+    /// `name@version` (a replicated model reports once, `live` if live
+    /// anywhere).
+    fn model_summaries(&self) -> Vec<ModelSummary> {
+        let mut seen: BTreeMap<String, ModelSummary> = BTreeMap::new();
+        for node in 0..self.members.len() {
+            if !self.members.is_routable(node) {
+                continue;
+            }
+            let Ok(mut c) = self.checkout(node) else { continue };
+            let Ok(models) = c.list_models() else { continue };
+            self.put_back(node, c);
+            for m in models {
+                let key = format!("{}@{}", m.name, m.version);
+                match seen.get_mut(&key) {
+                    Some(prev) => prev.live = prev.live || m.live,
+                    None => {
+                        seen.insert(key, m);
+                    }
+                }
+            }
+        }
+        seen.into_values().collect()
+    }
+
+    /// Cluster rollup merged into the router's `metrics` body:
+    ///
+    /// * `"cluster"` — router-side counters (forwards, hedges/wins/
+    ///   cancellations, failovers, replications) plus membership gauges.
+    /// * `"nodes"` — one flat object per node, keyed by its reported
+    ///   `node_id` (address until known): liveness plus that node's
+    ///   summed request/error counters.
+    /// * `"models"` — per-serving-id counters summed *exactly* across
+    ///   nodes (integer counters only; a replicated model's traffic
+    ///   adds up across its replicas).
+    fn metrics_overlay(&self) -> Option<Value> {
+        let c = &self.counters;
+        let cluster = obj(vec![
+            ("nodes_configured", Value::Int(self.members.len() as i64)),
+            ("nodes_up", Value::Int(self.members.up_count() as i64)),
+            ("replication_factor", Value::Int(self.opts.replication as i64)),
+            ("forwards", Value::Int(c.forwards.load(Ordering::Relaxed) as i64)),
+            ("hedges", Value::Int(c.hedges.load(Ordering::Relaxed) as i64)),
+            ("hedge_wins", Value::Int(c.hedge_wins.load(Ordering::Relaxed) as i64)),
+            (
+                "hedge_cancellations",
+                Value::Int(c.hedge_cancellations.load(Ordering::Relaxed) as i64),
+            ),
+            ("hedge_delay_ms", Value::Int(self.hedge.delay().as_millis() as i64)),
+            ("failovers", Value::Int(c.failovers.load(Ordering::Relaxed) as i64)),
+            ("replications", Value::Int(c.replications.load(Ordering::Relaxed) as i64)),
+            (
+                "replication_failures",
+                Value::Int(c.replication_failures.load(Ordering::Relaxed) as i64),
+            ),
+        ]);
+
+        let mut nodes: BTreeMap<String, Value> = BTreeMap::new();
+        let mut model_sums: BTreeMap<String, BTreeMap<String, i64>> = BTreeMap::new();
+        for (node, (label, status)) in self.members.summaries().into_iter().enumerate() {
+            let mut flat: BTreeMap<String, Value> = match status {
+                Value::Object(m) => m,
+                other => {
+                    let mut m = BTreeMap::new();
+                    m.insert("status".to_string(), other);
+                    m
+                }
+            };
+            if self.members.is_routable(node) {
+                if let Some(body) = self.node_metrics(node) {
+                    let mut requests = 0i64;
+                    let mut errors = 0i64;
+                    if let Some(models) = body.get("models").and_then(Value::as_object) {
+                        for (mid, report) in models {
+                            let Some(fields) = report.as_object() else { continue };
+                            let sums = model_sums.entry(mid.clone()).or_default();
+                            for (k, v) in fields {
+                                if let Value::Int(i) = v {
+                                    *sums.entry(k.clone()).or_insert(0) += i;
+                                }
+                            }
+                            requests += fields
+                                .get("requests")
+                                .and_then(|v| v.as_i64())
+                                .unwrap_or(0);
+                            errors += fields
+                                .get("errors")
+                                .and_then(|v| v.as_i64())
+                                .unwrap_or(0);
+                        }
+                    }
+                    flat.insert("requests".to_string(), Value::Int(requests));
+                    flat.insert("errors".to_string(), Value::Int(errors));
+                }
+            }
+            nodes.insert(label, Value::Object(flat));
+        }
+
+        let models = Value::Object(
+            model_sums
+                .into_iter()
+                .map(|(mid, fields)| {
+                    (
+                        mid,
+                        Value::Object(
+                            fields
+                                .into_iter()
+                                .map(|(k, v)| (k, Value::Int(v)))
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        );
+
+        Some(obj(vec![
+            ("cluster", cluster),
+            ("nodes", Value::Object(nodes)),
+            ("models", models),
+        ]))
+    }
+}

@@ -25,6 +25,7 @@ pub struct AppConfig {
     pub hardware: HardwareConfig,
     pub neurosim: NeurosimConfig,
     pub observability: ObservabilityConfig,
+    pub cluster: ClusterConfig,
 }
 
 #[derive(Debug, Clone)]
@@ -212,6 +213,66 @@ impl Default for ObservabilityConfig {
     }
 }
 
+/// `[cluster]` — front-router knobs for `kan-edge route` (see
+/// [`crate::cluster`] and `docs/CLUSTER.md`). Only the router reads
+/// this section; `serve` nodes ignore it.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Backend node addresses (`host:port`), in ring-identity order —
+    /// every router sharing this list computes the same placement.
+    pub nodes: Vec<String>,
+    /// Replicas per model spec, primary included.
+    pub replication: usize,
+    /// Virtual nodes per physical node on the hash ring.
+    pub vnodes: usize,
+    /// Heartbeat probe period in milliseconds; 0 disables the loop
+    /// (data-path failures still drive membership).
+    pub heartbeat_ms: u64,
+    /// Consecutive probe/data-path failures before a node is `Down`.
+    pub fail_after: u32,
+    /// Hedged retries for single-row requests.
+    pub hedge: bool,
+    /// Latency quantile the hedge delay is derived from, in (0, 1].
+    pub hedge_quantile: f64,
+    /// Clamp on the derived hedge delay, milliseconds.
+    pub hedge_min_ms: u64,
+    pub hedge_max_ms: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        let r = crate::cluster::RouterOptions::default();
+        Self {
+            nodes: Vec::new(),
+            replication: r.replication,
+            vnodes: r.vnodes,
+            heartbeat_ms: r.heartbeat_ms,
+            fail_after: r.fail_after,
+            hedge: r.hedge,
+            hedge_quantile: r.hedge_quantile,
+            hedge_min_ms: r.hedge_min_ms,
+            hedge_max_ms: r.hedge_max_ms,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// The tuning subset, in the shape [`crate::cluster::ClusterRouter`]
+    /// takes (everything but the node list).
+    pub fn router_options(&self) -> crate::cluster::RouterOptions {
+        crate::cluster::RouterOptions {
+            replication: self.replication,
+            vnodes: self.vnodes,
+            heartbeat_ms: self.heartbeat_ms,
+            fail_after: self.fail_after,
+            hedge: self.hedge,
+            hedge_quantile: self.hedge_quantile,
+            hedge_min_ms: self.hedge_min_ms,
+            hedge_max_ms: self.hedge_max_ms,
+        }
+    }
+}
+
 fn get_f64(v: &Value, key: &str, dst: &mut f64) {
     if let Some(x) = v.get(key).and_then(|x| x.as_f64()) {
         *dst = x;
@@ -351,6 +412,23 @@ impl AppConfig {
             get_bool(o, "engine_profiling", &mut self.observability.engine_profiling);
             get_string(o, "log_level", &mut self.observability.log_level);
         }
+        if let Some(c) = v.get("cluster") {
+            if let Some(nodes) = c.get("nodes").and_then(|x| x.as_array()) {
+                self.cluster.nodes = nodes
+                    .iter()
+                    .filter_map(|n| n.as_str())
+                    .map(|n| n.to_string())
+                    .collect();
+            }
+            get_usize(c, "replication", &mut self.cluster.replication);
+            get_usize(c, "vnodes", &mut self.cluster.vnodes);
+            get_u64(c, "heartbeat_ms", &mut self.cluster.heartbeat_ms);
+            get_u32(c, "fail_after", &mut self.cluster.fail_after);
+            get_bool(c, "hedge", &mut self.cluster.hedge);
+            get_f64(c, "hedge_quantile", &mut self.cluster.hedge_quantile);
+            get_u64(c, "hedge_min_ms", &mut self.cluster.hedge_min_ms);
+            get_u64(c, "hedge_max_ms", &mut self.cluster.hedge_max_ms);
+        }
         if let Some(n) = v.get("neurosim") {
             if let Some(c) = n.get("constraints") {
                 self.neurosim.constraints.max_area_mm2 =
@@ -430,6 +508,25 @@ impl AppConfig {
                 "unknown observability.log_level '{}' (error | warn | info | debug)",
                 self.observability.log_level
             )));
+        }
+        if self.cluster.replication == 0 {
+            return Err(Error::Config("cluster.replication must be > 0".into()));
+        }
+        if self.cluster.vnodes == 0 {
+            return Err(Error::Config("cluster.vnodes must be > 0".into()));
+        }
+        if self.cluster.fail_after == 0 {
+            return Err(Error::Config("cluster.fail_after must be > 0".into()));
+        }
+        if !(self.cluster.hedge_quantile > 0.0 && self.cluster.hedge_quantile <= 1.0) {
+            return Err(Error::Config(
+                "cluster.hedge_quantile must be in (0, 1]".into(),
+            ));
+        }
+        if self.cluster.hedge_min_ms > self.cluster.hedge_max_ms {
+            return Err(Error::Config(
+                "cluster.hedge_min_ms must be <= cluster.hedge_max_ms".into(),
+            ));
         }
         self.hardware.acim.array.validate()?;
         Ok(())
@@ -620,6 +717,52 @@ mod tests {
         cfg.observability.log_level = "verbose".into();
         let err = cfg.validate().unwrap_err();
         assert!(err.to_string().contains("observability.log_level"), "{err}");
+    }
+
+    #[test]
+    fn cluster_section_parses_and_validates() {
+        let mut cfg = AppConfig::default();
+        assert!(cfg.cluster.nodes.is_empty(), "no cluster by default");
+        assert_eq!(cfg.cluster.replication, 2);
+        assert!(cfg.cluster.hedge);
+        cfg.apply(
+            &Value::parse(
+                r#"{"cluster": {"nodes": ["127.0.0.1:7001", "127.0.0.1:7002"],
+                    "replication": 1, "vnodes": 16, "heartbeat_ms": 100,
+                    "fail_after": 3, "hedge": false, "hedge_quantile": 0.99,
+                    "hedge_min_ms": 2, "hedge_max_ms": 50}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.nodes, vec!["127.0.0.1:7001", "127.0.0.1:7002"]);
+        assert_eq!(cfg.cluster.replication, 1);
+        assert_eq!(cfg.cluster.vnodes, 16);
+        assert_eq!(cfg.cluster.heartbeat_ms, 100);
+        assert_eq!(cfg.cluster.fail_after, 3);
+        assert!(!cfg.cluster.hedge);
+        assert_eq!(cfg.cluster.hedge_quantile, 0.99);
+        assert_eq!(cfg.cluster.hedge_min_ms, 2);
+        assert_eq!(cfg.cluster.hedge_max_ms, 50);
+        cfg.validate().unwrap();
+
+        cfg.cluster.replication = 0;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.replication = 2;
+        cfg.cluster.vnodes = 0;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.vnodes = 16;
+        cfg.cluster.hedge_quantile = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.hedge_quantile = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.hedge_quantile = 0.9;
+        cfg.cluster.hedge_min_ms = 200;
+        cfg.cluster.hedge_max_ms = 100;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.hedge_min_ms = 1;
+        cfg.cluster.fail_after = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -47,4 +47,4 @@ pub use router::{
 pub use scheduler::{ClientId, SchedMode, Scheduler, SchedulerOptions};
 pub use server::{Dispatch, InferenceService, RouteSpec, ServeOptions};
 pub use shadow::{ShadowExec, ShadowJob, ShadowObservation, ShadowState};
-pub use tcp::{TcpLimits, TcpServer};
+pub use tcp::{NodeIdentity, TcpLimits, TcpServer};

@@ -146,6 +146,11 @@ pub fn code_for(e: &Error) -> ErrorCode {
         // backend-selection routing: the requested kind exists but this
         // endpoint/model cannot execute it
         Error::Serving(m) if m.contains("not served here") => ErrorCode::NotFound,
+        // replication verbs hitting a dispatch target without a
+        // registry behind it (single-model endpoints)
+        Error::Serving(m) if m.contains("not supported on this endpoint") => {
+            ErrorCode::Unsupported
+        }
         // the worker pool re-wraps backend errors as Serving with the
         // original message; a shape mismatch is the client's fault
         Error::Serving(m) if m.contains("shape mismatch") => ErrorCode::BadRequest,
@@ -391,6 +396,21 @@ pub enum Request {
     Trace { id: i64, limit: Option<usize> },
     /// Endpoint health.
     Health { id: i64 },
+    /// Fetch a stored artifact (weights blob) by content digest — the
+    /// read half of on-demand cluster replication. The payload rides
+    /// the frame hex-encoded (the JSON layer has no binary type).
+    PullArtifact { id: i64, digest: String },
+    /// Publish an artifact payload as `model` (optionally at an exact
+    /// `version`) — the write half of replication. The receiver
+    /// re-hashes the payload and rejects on digest mismatch *before*
+    /// anything is published.
+    PushArtifact {
+        id: i64,
+        model: String,
+        version: Option<u32>,
+        digest: String,
+        data: Vec<u8>,
+    },
 }
 
 impl Request {
@@ -405,7 +425,9 @@ impl Request {
             | Request::Metrics { id }
             | Request::MetricsProm { id }
             | Request::Trace { id, .. }
-            | Request::Health { id } => *id,
+            | Request::Health { id }
+            | Request::PullArtifact { id, .. }
+            | Request::PushArtifact { id, .. } => *id,
         }
     }
 
@@ -459,6 +481,24 @@ impl Request {
                 obj(fields)
             }
             Request::Health { id } => obj(base(*id, "health")),
+            Request::PullArtifact { id, digest } => {
+                let mut fields = base(*id, "pull_artifact");
+                fields.push(("digest", Value::Str(digest.clone())));
+                obj(fields)
+            }
+            Request::PushArtifact { id, model, version, digest, data } => {
+                let mut fields = base(*id, "push_artifact");
+                fields.push(("model", Value::Str(model.clone())));
+                if let Some(ver) = version {
+                    fields.push(("version", Value::Int(*ver as i64)));
+                }
+                fields.push(("digest", Value::Str(digest.clone())));
+                fields.push((
+                    "data",
+                    Value::Str(crate::registry::store::encode_hex(data)),
+                ));
+                obj(fields)
+            }
         }
     }
 
@@ -529,6 +569,43 @@ impl Request {
                 Ok(Request::Trace { id, limit })
             }
             "health" => Ok(Request::Health { id }),
+            "pull_artifact" => {
+                let digest = v
+                    .req_str("digest")
+                    .map_err(|e| WireError::bad(Some(id), e.to_string()))?
+                    .to_string();
+                Ok(Request::PullArtifact { id, digest })
+            }
+            "push_artifact" => {
+                let model = match model {
+                    Some(m) => m,
+                    None => {
+                        return Err(WireError::bad(
+                            Some(id),
+                            "'push_artifact' requires 'model'",
+                        ))
+                    }
+                };
+                let version = match v.get("version") {
+                    None | Some(Value::Null) => None,
+                    Some(n) => Some(n.as_usize().ok_or_else(|| {
+                        WireError::bad(
+                            Some(id),
+                            "'version' must be a non-negative integer",
+                        )
+                    })? as u32),
+                };
+                let digest = v
+                    .req_str("digest")
+                    .map_err(|e| WireError::bad(Some(id), e.to_string()))?
+                    .to_string();
+                let data = crate::registry::store::decode_hex(
+                    v.req_str("data")
+                        .map_err(|e| WireError::bad(Some(id), e.to_string()))?,
+                )
+                .map_err(|e| WireError::bad(Some(id), e.to_string()))?;
+                Ok(Request::PushArtifact { id, model, version, digest, data })
+            }
             other => Err(WireError {
                 id: Some(id),
                 code: ErrorCode::Unsupported,
@@ -669,6 +746,11 @@ pub enum Response {
         server: String,
         max_frame: usize,
         max_in_flight: usize,
+        /// Stable cluster identity of the answering node; `None` on
+        /// endpoints spawned without one (pre-cluster deployments).
+        node_id: Option<String>,
+        /// Seconds since the node's serving endpoint came up.
+        uptime_s: Option<u64>,
     },
     Pong { id: i64 },
     Infer { id: i64, model: String, row: WireRow },
@@ -685,7 +767,28 @@ pub enum Response {
     /// Free-form trace report (sampler summary + recent spans); JSON
     /// for the same reason as `Metrics`.
     Trace { id: i64, body: Value },
-    Health { id: i64, status: String, models_live: usize },
+    Health {
+        id: i64,
+        status: String,
+        models_live: usize,
+        /// Node identity + uptime, mirroring `hello` — the fields a
+        /// router heartbeat keys on. `None` on pre-cluster endpoints.
+        node_id: Option<String>,
+        uptime_s: Option<u64>,
+    },
+    /// A stored artifact fetched by digest (`pull_artifact` reply):
+    /// the raw payload plus the manifest metadata describing the model
+    /// entry it backs (name/version/kind), so a replica can republish
+    /// it under the same identity.
+    Artifact {
+        id: i64,
+        digest: String,
+        data: Vec<u8>,
+        meta: Option<Value>,
+    },
+    /// Acknowledgement of `push_artifact`: the resolved `name@version`
+    /// the payload was published as, plus its verified digest.
+    Published { id: i64, model: String, digest: String },
     /// `id` is `None` for connection-level errors (unparseable frame,
     /// oversized payload) that cannot be correlated. `retry_after_ms` is
     /// present on `overloaded` admission rejections: a best-effort
@@ -741,7 +844,9 @@ impl Response {
             | Response::Metrics { id, .. }
             | Response::MetricsProm { id, .. }
             | Response::Trace { id, .. }
-            | Response::Health { id, .. } => Some(*id),
+            | Response::Health { id, .. }
+            | Response::Artifact { id, .. }
+            | Response::Published { id, .. } => Some(*id),
             Response::Error { id, .. } => *id,
         }
     }
@@ -751,12 +856,26 @@ impl Response {
             vec![("id", Value::Int(id)), ("op", Value::Str(op.to_string()))]
         }
         match self {
-            Response::Hello { id, protocol, server, max_frame, max_in_flight } => {
+            Response::Hello {
+                id,
+                protocol,
+                server,
+                max_frame,
+                max_in_flight,
+                node_id,
+                uptime_s,
+            } => {
                 let mut fields = base(*id, "hello");
                 fields.push(("protocol", Value::Int(*protocol as i64)));
                 fields.push(("server", Value::Str(server.clone())));
                 fields.push(("max_frame", Value::Int(*max_frame as i64)));
                 fields.push(("max_in_flight", Value::Int(*max_in_flight as i64)));
+                if let Some(n) = node_id {
+                    fields.push(("node_id", Value::Str(n.clone())));
+                }
+                if let Some(u) = uptime_s {
+                    fields.push(("uptime_s", Value::Int(*u as i64)));
+                }
                 obj(fields)
             }
             Response::Pong { id } => obj(base(*id, "pong")),
@@ -790,10 +909,34 @@ impl Response {
                 obj(fields)
             }
             Response::Trace { id, body } => merge_body(*id, "trace", body),
-            Response::Health { id, status, models_live } => {
+            Response::Health { id, status, models_live, node_id, uptime_s } => {
                 let mut fields = base(*id, "health");
                 fields.push(("status", Value::Str(status.clone())));
                 fields.push(("models_live", Value::Int(*models_live as i64)));
+                if let Some(n) = node_id {
+                    fields.push(("node_id", Value::Str(n.clone())));
+                }
+                if let Some(u) = uptime_s {
+                    fields.push(("uptime_s", Value::Int(*u as i64)));
+                }
+                obj(fields)
+            }
+            Response::Artifact { id, digest, data, meta } => {
+                let mut fields = base(*id, "pull_artifact");
+                fields.push(("digest", Value::Str(digest.clone())));
+                fields.push((
+                    "data",
+                    Value::Str(crate::registry::store::encode_hex(data)),
+                ));
+                if let Some(m) = meta {
+                    fields.push(("meta", m.clone()));
+                }
+                obj(fields)
+            }
+            Response::Published { id, model, digest } => {
+                let mut fields = base(*id, "push_artifact");
+                fields.push(("model", Value::Str(model.clone())));
+                fields.push(("digest", Value::Str(digest.clone())));
                 obj(fields)
             }
             Response::Error { id, code, message, retry_after_ms } => {
@@ -854,6 +997,8 @@ impl Response {
                 server: v.req_str("server")?.to_string(),
                 max_frame: v.req_usize("max_frame")?,
                 max_in_flight: v.req_usize("max_in_flight")?,
+                node_id: v.get("node_id").and_then(|n| n.as_str()).map(str::to_string),
+                uptime_s: v.get("uptime_s").and_then(|u| u.as_i64()).map(|u| u.max(0) as u64),
             }),
             "pong" => Ok(Response::Pong { id }),
             "infer" => Ok(Response::Infer {
@@ -894,6 +1039,19 @@ impl Response {
                 id,
                 status: v.req_str("status")?.to_string(),
                 models_live: v.req_usize("models_live")?,
+                node_id: v.get("node_id").and_then(|n| n.as_str()).map(str::to_string),
+                uptime_s: v.get("uptime_s").and_then(|u| u.as_i64()).map(|u| u.max(0) as u64),
+            }),
+            "pull_artifact" => Ok(Response::Artifact {
+                id,
+                digest: v.req_str("digest")?.to_string(),
+                data: crate::registry::store::decode_hex(v.req_str("data")?)?,
+                meta: v.get("meta").cloned(),
+            }),
+            "push_artifact" => Ok(Response::Published {
+                id,
+                model: v.req_str("model")?.to_string(),
+                digest: v.req_str("digest")?.to_string(),
             }),
             other => Err(Error::Json(format!("unknown response op '{other}'"))),
         }
@@ -991,6 +1149,37 @@ mod tests {
         roundtrip_request(Request::Trace { id: 13, limit: None });
         roundtrip_request(Request::Trace { id: 14, limit: Some(16) });
         roundtrip_request(Request::Health { id: 10 });
+        roundtrip_request(Request::PullArtifact {
+            id: 15,
+            digest: "fnv64:00000000000000aa".into(),
+        });
+        roundtrip_request(Request::PushArtifact {
+            id: 16,
+            model: "kan2".into(),
+            version: Some(3),
+            digest: "fnv64:00000000000000bb".into(),
+            data: vec![0x00, 0x7f, 0xff],
+        });
+        roundtrip_request(Request::PushArtifact {
+            id: 17,
+            model: "kan2".into(),
+            version: None,
+            digest: "fnv64:00000000000000cc".into(),
+            data: vec![],
+        });
+        // push_artifact without a model is a typed bad_request
+        let err = Request::from_bytes(
+            br#"{"id":1,"op":"push_artifact","digest":"fnv64:aa","data":"00"}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("model"), "{}", err.message);
+        // and a non-hex payload is rejected at the wire boundary
+        let err = Request::from_bytes(
+            br#"{"id":1,"op":"push_artifact","model":"m","digest":"fnv64:aa","data":"zz"}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
         // a non-integer trace limit is a typed bad_request
         let err = Request::from_bytes(br#"{"id":1,"op":"trace","limit":"x"}"#)
             .unwrap_err();
@@ -1050,6 +1239,17 @@ mod tests {
             server: "kan-edge/0.1.0".into(),
             max_frame: 1 << 20,
             max_in_flight: 64,
+            node_id: None,
+            uptime_s: None,
+        });
+        roundtrip_response(Response::Hello {
+            id: 15,
+            protocol: 2,
+            server: "kan-edge/0.1.0".into(),
+            max_frame: 1 << 20,
+            max_in_flight: 64,
+            node_id: Some("node-a".into()),
+            uptime_s: Some(120),
         });
         roundtrip_response(Response::Pong { id: 2 });
         roundtrip_response(Response::Infer {
@@ -1109,7 +1309,39 @@ mod tests {
                 backend: None,
             },
         });
-        roundtrip_response(Response::Health { id: 7, status: "ok".into(), models_live: 2 });
+        roundtrip_response(Response::Health {
+            id: 7,
+            status: "ok".into(),
+            models_live: 2,
+            node_id: None,
+            uptime_s: None,
+        });
+        roundtrip_response(Response::Health {
+            id: 16,
+            status: "ok".into(),
+            models_live: 1,
+            node_id: Some("node-b".into()),
+            uptime_s: Some(0),
+        });
+        roundtrip_response(Response::Artifact {
+            id: 17,
+            digest: "fnv64:00000000000000aa".into(),
+            data: vec![1, 2, 3, 255],
+            meta: Some(
+                Value::parse(r#"{"name":"kan2","version":3,"kind":"kan"}"#).unwrap(),
+            ),
+        });
+        roundtrip_response(Response::Artifact {
+            id: 18,
+            digest: "fnv64:00000000000000ab".into(),
+            data: vec![],
+            meta: None,
+        });
+        roundtrip_response(Response::Published {
+            id: 19,
+            model: "kan2@3".into(),
+            digest: "fnv64:00000000000000aa".into(),
+        });
         roundtrip_response(Response::MetricsProm {
             id: 13,
             text: "# TYPE kan_edge_wire_v2_requests gauge\n\
@@ -1230,5 +1462,11 @@ mod tests {
         );
         assert_eq!(code_for(&Error::Json("bad".into())), ErrorCode::BadRequest);
         assert_eq!(code_for(&Error::Runtime("pjrt".into())), ErrorCode::Internal);
+        assert_eq!(
+            code_for(&Error::Serving(
+                "artifact replication is not supported on this endpoint".into()
+            )),
+            ErrorCode::Unsupported
+        );
     }
 }

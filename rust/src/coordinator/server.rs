@@ -452,6 +452,42 @@ pub trait Dispatch: Send + Sync {
     fn live_model_count(&self) -> usize {
         self.model_summaries().iter().filter(|m| m.live).count()
     }
+
+    /// Fetch a stored artifact by content digest for replication: the
+    /// manifest metadata of the model entry it backs (if any) plus the
+    /// raw payload. Registry-backed endpoints override this; the
+    /// default refuses — a single-model endpoint has no store.
+    fn pull_artifact(
+        &self,
+        _digest: &str,
+    ) -> Result<(Option<crate::util::json::Value>, Vec<u8>)> {
+        Err(Error::Serving(
+            "artifact replication is not supported on this endpoint".into(),
+        ))
+    }
+
+    /// Publish a pushed artifact payload as `name` (optionally at an
+    /// exact version). Returns the resolved `name@version`. The
+    /// implementation must re-hash `data` against `digest` before
+    /// publishing anything.
+    fn push_artifact(
+        &self,
+        _name: &str,
+        _version: Option<u32>,
+        _digest: &str,
+        _data: &[u8],
+    ) -> Result<String> {
+        Err(Error::Serving(
+            "artifact replication is not supported on this endpoint".into(),
+        ))
+    }
+
+    /// Extra top-level sections merged into the `metrics` body (the
+    /// cluster router adds `cluster` / `nodes` rollups here). `None`
+    /// adds nothing.
+    fn metrics_overlay(&self) -> Option<crate::util::json::Value> {
+        None
+    }
 }
 
 impl Dispatch for InferenceService {

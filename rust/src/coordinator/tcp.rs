@@ -64,6 +64,25 @@ impl Default for TcpLimits {
 /// `limit` (the ring may hold more; see `observability.trace_ring`).
 const DEFAULT_TRACE_SPANS: usize = 32;
 
+/// Control-plane identity of a serving node, reported by the v2
+/// `hello` and `health` verbs so a cluster router can tell replicas
+/// apart (and detect restarts: `uptime_s` resets while `node_id`
+/// stays stable when the CLI persists it next to the artifacts).
+#[derive(Debug, Clone)]
+pub struct NodeIdentity {
+    /// Stable name of this node (config/CLI-chosen or generated once
+    /// and persisted by the `serve` command).
+    pub node_id: String,
+    /// Process start, anchoring the `uptime_s` field.
+    pub started: std::time::Instant,
+}
+
+impl NodeIdentity {
+    pub fn new(node_id: impl Into<String>) -> Self {
+        Self { node_id: node_id.into(), started: std::time::Instant::now() }
+    }
+}
+
 /// A running TCP server; `shutdown` stops the accept loop promptly and
 /// joins it (open connections finish on their own threads).
 pub struct TcpServer {
@@ -103,6 +122,20 @@ impl TcpServer {
         limits: TcpLimits,
         trace: Arc<TraceHub>,
     ) -> Result<TcpServer> {
+        Self::spawn_with_identity(addr, target, limits, trace, None)
+    }
+
+    /// Like [`TcpServer::spawn_with_obs`] with a control-plane
+    /// [`NodeIdentity`] reported by `hello`/`health` (`None` keeps the
+    /// identity fields off the wire — single-node endpoints).
+    pub fn spawn_with_identity(
+        addr: &str,
+        target: Arc<dyn Dispatch>,
+        limits: TcpLimits,
+        trace: Arc<TraceHub>,
+        identity: Option<NodeIdentity>,
+    ) -> Result<TcpServer> {
+        let identity = identity.map(Arc::new);
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -125,8 +158,9 @@ impl TcpServer {
                             let target = target.clone();
                             let wire = wire2.clone();
                             let trace = trace2.clone();
+                            let identity = identity.clone();
                             std::thread::spawn(move || {
-                                handle_conn(s, target, limits, wire, trace)
+                                handle_conn(s, target, limits, wire, trace, identity)
                             });
                         }
                         Err(e) => crate::obs::log::warn(
@@ -179,9 +213,10 @@ pub fn handle_conn(
     limits: TcpLimits,
     wire: Arc<WireMetrics>,
     trace: Arc<TraceHub>,
+    identity: Option<Arc<NodeIdentity>>,
 ) {
     wire.connection_opened();
-    serve_conn(stream, target, limits, &wire, trace);
+    serve_conn(stream, target, limits, &wire, trace, identity);
     wire.connection_closed();
 }
 
@@ -191,6 +226,7 @@ fn serve_conn(
     limits: TcpLimits,
     wire: &Arc<WireMetrics>,
     trace: Arc<TraceHub>,
+    identity: Option<Arc<NodeIdentity>>,
 ) {
     let client = ClientId::fresh();
     // protocol sniff: a v2 connection opens with the 4-byte magic; the
@@ -226,7 +262,7 @@ fn serve_conn(
                 return;
             }
             if prefix.len() == protocol::MAGIC.len() {
-                serve_v2(stream, client, target, limits, wire, trace);
+                serve_v2(stream, client, target, limits, wire, trace, identity);
                 return;
             }
         }
@@ -519,6 +555,7 @@ fn route_for(
             seed: Some(exec.seed.unwrap_or_else(fresh_unseeded_seed)),
             trials: exec.trials,
         },
+        trace: None,
     }
 }
 
@@ -532,6 +569,7 @@ struct V2Conn {
     wire: Arc<WireMetrics>,
     trace: Arc<TraceHub>,
     limits: TcpLimits,
+    identity: Option<Arc<NodeIdentity>>,
 }
 
 fn serve_v2(
@@ -541,6 +579,7 @@ fn serve_v2(
     limits: TcpLimits,
     wire: &Arc<WireMetrics>,
     trace: Arc<TraceHub>,
+    identity: Option<Arc<NodeIdentity>>,
 ) {
     let writer = match stream.try_clone() {
         Ok(w) => Arc::new(Mutex::new(w)),
@@ -555,6 +594,7 @@ fn serve_v2(
         wire: wire.clone(),
         trace,
         limits,
+        identity,
     };
     loop {
         let payload = match read_frame(&mut reader, limits.max_request_bytes) {
@@ -629,11 +669,31 @@ impl V2Conn {
             })
             .collect::<Vec<_>>();
         let models_obj = Value::Object(models.into_iter().collect());
-        obj(vec![
-            ("models", models_obj),
-            ("trace", self.trace.summary_value()),
-            ("wire", self.wire.to_value()),
-        ])
+        let mut body: std::collections::BTreeMap<String, Value> = vec![
+            ("models".to_string(), models_obj),
+            ("trace".to_string(), self.trace.summary_value()),
+            ("wire".to_string(), self.wire.to_value()),
+        ]
+        .into_iter()
+        .collect();
+        // endpoint-specific sections (the cluster router's `cluster` /
+        // `nodes` rollups) override same-named standard sections: the
+        // overlay's view is the authoritative one for such endpoints
+        if let Some(Value::Object(extra)) = self.target.metrics_overlay() {
+            for (k, v) in extra {
+                body.insert(k, v);
+            }
+        }
+        Value::Object(body)
+    }
+
+    /// `(node_id, uptime_s)` fields for `hello`/`health`, both `None`
+    /// when the server was spawned without an identity.
+    fn identity_fields(&self) -> (Option<String>, Option<u64>) {
+        match &self.identity {
+            Some(n) => (Some(n.node_id.clone()), Some(n.started.elapsed().as_secs())),
+            None => (None, None),
+        }
     }
 
     /// Handle one parsed request; returns `false` when the connection
@@ -642,12 +702,15 @@ impl V2Conn {
         match req {
             Request::Hello { id, .. } => {
                 self.wire.record_v2_control();
+                let (node_id, uptime_s) = self.identity_fields();
                 self.send(&Response::Hello {
                     id,
                     protocol: protocol::PROTOCOL_VERSION,
                     server: concat!("kan-edge/", env!("CARGO_PKG_VERSION")).to_string(),
                     max_frame: self.limits.max_request_bytes,
                     max_in_flight: self.limits.max_in_flight,
+                    node_id,
+                    uptime_s,
                 })
                 .is_ok()
             }
@@ -713,12 +776,32 @@ impl V2Conn {
             }
             Request::Health { id } => {
                 self.wire.record_v2_control();
+                let (node_id, uptime_s) = self.identity_fields();
                 self.send(&Response::Health {
                     id,
                     status: "ok".to_string(),
                     models_live: self.target.live_model_count(),
+                    node_id,
+                    uptime_s,
                 })
                 .is_ok()
+            }
+            Request::PullArtifact { id, digest } => {
+                self.wire.record_v2_control();
+                let resp = match self.target.pull_artifact(&digest) {
+                    Ok((meta, data)) => Response::Artifact { id, digest, data, meta },
+                    Err(e) => error_response(Some(id), &e),
+                };
+                self.send(&resp).is_ok()
+            }
+            Request::PushArtifact { id, model, version, digest, data } => {
+                self.wire.record_v2_control();
+                let out = self.target.push_artifact(&model, version, &digest, &data);
+                let resp = match out {
+                    Ok(resolved) => Response::Published { id, model: resolved, digest },
+                    Err(e) => error_response(Some(id), &e),
+                };
+                self.send(&resp).is_ok()
             }
             Request::Infer { id, model, backend, exec, features } => {
                 self.wire.record_v2_infer(1);

@@ -60,6 +60,7 @@ pub mod acim;
 pub mod baseline;
 pub mod circuits;
 pub mod client;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

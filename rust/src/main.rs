@@ -3,6 +3,8 @@
 //! Subcommands map onto the paper's artifacts:
 //! * `serve`     — multi-model edge inference (TCP JSON-lines) over the
 //!   model registry; requests pick a variant with `"model"`
+//! * `route`     — cluster front-router: consistent-hash sharding over a
+//!   set of `serve` nodes with replication and hedged retries
 //! * `models`    — list / inspect registered model versions
 //! * `publish`   — publish a weights file as a new model version
 //! * `eval`      — accuracy of a model on the artifact test set per backend
@@ -42,22 +44,39 @@ kan-edge — KAN edge-inference accelerator stack
 USAGE: kan-edge [--config FILE] [--artifacts DIR] <command> [options]
 
 COMMANDS:
-  serve     --addr HOST:PORT [--model NAME]    multi-model TCP serving
+  serve     --addr HOST:PORT [--model NAME] [--node-id ID]
+                                               multi-model TCP serving; the
+                                               node id (generated + persisted
+                                               in the artifacts dir when not
+                                               given) names this node in
+                                               cluster rollups
+  route     --nodes H1:P1,H2:P2,... [--addr HOST:PORT]
+                                               cluster front-router over the
+                                               given serve nodes: consistent-
+                                               hash placement, on-demand
+                                               artifact replication, hedged
+                                               retries (see docs/CLUSTER.md;
+                                               [cluster] config section)
   models    [--model NAME]                     list / inspect registry
-  publish   --weights FILE [--model N] [--version V]
+  publish   --weights FILE [--model N] [--version V] | --synthetic [--model N]
                                                publish a new model version
+                                               (--synthetic generates a tiny
+                                               deterministic KAN checkpoint)
   bench-net [--requests N] [--batch B] [--window W]
             [--tenants T] [--mix-requests M] [--mix-batch R]
             [--mix-queue Q] [--json FILE] [--skip-mixed] [--mixed-only]
-            [--skip-hotpath] [--skip-shadow] [--skip-trace]
+            [--skip-hotpath] [--skip-shadow] [--skip-trace] [--skip-cluster]
                                                served throughput: v1 vs v2,
                                                the digital engine-off-vs-on
                                                hot-path phase, the digital-
                                                vs-ACIM shadow-divergence
                                                phase, the request-tracing
-                                               overhead phase, plus the
-                                               mixed-tenant fifo-vs-drr
-                                               fairness comparison
+                                               overhead phase, the routed-vs-
+                                               direct cluster phase (3 nodes
+                                               + router, hedging vs a slow
+                                               replica), plus the mixed-
+                                               tenant fifo-vs-drr fairness
+                                               comparison
   metrics   [--addr HOST:PORT] [--prom] [--demo]
                                                scrape a server's metrics as
                                                JSON or Prometheus text;
@@ -174,7 +193,9 @@ fn run(args: &Args) -> Result<()> {
             &cfg,
             &args.get("model", &cfg.artifacts.model.clone()),
             &args.get("addr", "127.0.0.1:7777"),
+            args.opts.get("node-id").cloned(),
         ),
+        "route" => route_cmd(&cfg, args),
         "models" => models_cmd(&cfg, args.opts.get("model").map(|s| s.as_str())),
         "metrics" => metrics_cmd(&cfg, args),
         "publish" => publish_cmd(&cfg, args),
@@ -206,7 +227,43 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-fn serve(cfg: &AppConfig, model: &str, addr: &str) -> Result<()> {
+/// Resolve this node's stable cluster identity: `--node-id` wins, else
+/// the `node_id` file persisted next to the artifacts (written on first
+/// start, so restarts keep the same identity while `uptime_s` resets).
+fn resolve_node_id(artifacts_dir: &Path, explicit: Option<String>) -> String {
+    if let Some(id) = explicit {
+        return id;
+    }
+    let path = artifacts_dir.join("node_id");
+    if let Ok(s) = std::fs::read_to_string(&path) {
+        let s = s.trim().to_string();
+        if !s.is_empty() {
+            return s;
+        }
+    }
+    let entropy = format!(
+        "{}:{:?}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default()
+    );
+    let generated = format!(
+        "node-{:08x}",
+        kan_edge::registry::digest::fnv64(entropy.as_bytes()) as u32
+    );
+    // best-effort persistence: a read-only artifacts dir just means a
+    // fresh id per start
+    let _ = std::fs::write(&path, &generated);
+    generated
+}
+
+fn serve(
+    cfg: &AppConfig,
+    model: &str,
+    addr: &str,
+    node_id: Option<String>,
+) -> Result<()> {
     // the default model comes from --model / config
     let mut cfg = cfg.clone();
     cfg.artifacts.model = model.to_string();
@@ -235,16 +292,18 @@ fn serve(cfg: &AppConfig, model: &str, addr: &str) -> Result<()> {
             std::time::Duration::from_millis(cfg.registry.reload_poll_ms),
         );
     }
+    let node = resolve_node_id(Path::new(&cfg.artifacts.dir), node_id);
     let target: Arc<dyn Dispatch> = registry.clone();
-    let server = kan_edge::coordinator::TcpServer::spawn_with_obs(
+    let server = kan_edge::coordinator::TcpServer::spawn_with_identity(
         addr,
         target,
         tcp_limits(&cfg),
         kan_edge::coordinator::router::trace_hub(&cfg),
+        Some(kan_edge::coordinator::NodeIdentity::new(node.clone())),
     )?;
     println!(
-        "kan-edge serving {} model(s) on {} (default {model}, protocols v1+v2, \
-         hot-reload {}, tracing {}; Ctrl-C to stop)",
+        "kan-edge serving {} model(s) on {} (default {model}, node {node}, \
+         protocols v1+v2, hot-reload {}, tracing {}; Ctrl-C to stop)",
         registry.model_names().len(),
         server.addr,
         if cfg.registry.reload_poll_ms > 0 { "on" } else { "off" },
@@ -255,6 +314,45 @@ fn serve(cfg: &AppConfig, model: &str, addr: &str) -> Result<()> {
         },
     );
     // serve until the process is killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// The cluster front-router: place models on `--nodes` (or the
+/// `cluster.nodes` config list) by consistent hashing and serve the
+/// ordinary v1+v2 endpoint on `--addr` — clients cannot tell the
+/// router from a single node. See `docs/CLUSTER.md`.
+fn route_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let mut cfg = cfg.clone();
+    if let Some(nodes) = args.opts.get("nodes") {
+        cfg.cluster.nodes = nodes
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    let addr = args.get("addr", "127.0.0.1:7700");
+    let router = kan_edge::cluster::ClusterRouter::new(
+        cfg.cluster.nodes.clone(),
+        cfg.cluster.router_options(),
+    )?;
+    let target: Arc<dyn Dispatch> = router;
+    let server = kan_edge::coordinator::TcpServer::spawn_with_identity(
+        &addr,
+        target,
+        tcp_limits(&cfg),
+        kan_edge::coordinator::router::trace_hub(&cfg),
+        Some(kan_edge::coordinator::NodeIdentity::new(args.get("node-id", "router"))),
+    )?;
+    println!(
+        "kan-edge routing {} node(s) on {} (replication {}, hedging {}; \
+         Ctrl-C to stop)",
+        cfg.cluster.nodes.len(),
+        server.addr,
+        cfg.cluster.replication,
+        if cfg.cluster.hedge { "on" } else { "off" },
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -319,9 +417,16 @@ fn models_cmd(cfg: &AppConfig, inspect: Option<&str>) -> Result<()> {
 }
 
 fn publish_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
-    let weights = args.opts.get("weights").ok_or_else(|| {
-        kan_edge::Error::Registry("publish requires --weights FILE".into())
-    })?;
+    let synthetic = args.opts.contains_key("synthetic");
+    let weights = match args.opts.get("weights") {
+        Some(w) => Some(w.clone()),
+        None if synthetic => None,
+        None => {
+            return Err(kan_edge::Error::Registry(
+                "publish requires --weights FILE (or --synthetic)".into(),
+            ))
+        }
+    };
     let version = match args.opts.get("version") {
         None => None,
         Some(v) => Some(v.parse::<u32>().map_err(|_| {
@@ -333,14 +438,36 @@ fn publish_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
     // publishing into a fresh directory bootstraps an empty v2 manifest
     let dir = Path::new(&cfg.artifacts.dir);
     if !dir.join("manifest.json").exists() {
+        std::fs::create_dir_all(dir)?;
         kan_edge::registry::ModelManifest::empty().save(dir)?;
     }
     let registry = ModelRegistry::open(cfg)?;
-    let (name, meta) = registry.publish_file(
-        Path::new(weights),
+    // --synthetic: generate a tiny deterministic checkpoint (same fixture
+    // the tests use) and publish it — lets CI bring up a cluster node
+    // with a servable model without shipping weight files around
+    let mut staged: Option<std::path::PathBuf> = None;
+    let weights = match weights {
+        Some(w) => std::path::PathBuf::from(w),
+        None => {
+            let name = args.get("model", "synthetic");
+            let path = dir.join(format!(".synthetic-{}.incoming.json", std::process::id()));
+            std::fs::write(
+                &path,
+                kan_edge::kan::checkpoint::synthetic_checkpoint_json(&name, 0),
+            )?;
+            staged = Some(path.clone());
+            path
+        }
+    };
+    let publish = registry.publish_file(
+        &weights,
         args.opts.get("model").map(|s| s.as_str()),
         version,
-    )?;
+    );
+    if let Some(p) = staged {
+        let _ = std::fs::remove_file(p);
+    }
+    let (name, meta) = publish?;
     println!(
         "published {name}@{} (digest {})",
         meta.version,
@@ -444,13 +571,14 @@ fn spawn_bench_server(
     )
 }
 
-/// Like [`spawn_bench_server`] with an explicit checkpoint JSON (must
-/// name its model "bench" — the registry's default model).
-fn spawn_bench_server_with(
+/// Fresh temp registry with one published synthetic "bench" model — the
+/// building block of the bench servers and the cluster-phase nodes.
+/// Returns the registry dir, the adjusted config, and the open registry.
+fn bench_registry_with(
     cfg: &AppConfig,
     tag: &str,
     ckpt_json: &str,
-) -> Result<(std::path::PathBuf, kan_edge::coordinator::TcpServer)> {
+) -> Result<(std::path::PathBuf, AppConfig, Arc<ModelRegistry>)> {
     // per-process, per-phase dir: concurrent bench-net runs must not
     // wipe each other's live registry mid-benchmark
     let dir = std::env::temp_dir()
@@ -466,6 +594,17 @@ fn spawn_bench_server_with(
     let src = dir.join("bench.incoming.json");
     std::fs::write(&src, ckpt_json)?;
     registry.publish_file(&src, None, None)?;
+    Ok((dir, cfg, registry))
+}
+
+/// Like [`spawn_bench_server`] with an explicit checkpoint JSON (must
+/// name its model "bench" — the registry's default model).
+fn spawn_bench_server_with(
+    cfg: &AppConfig,
+    tag: &str,
+    ckpt_json: &str,
+) -> Result<(std::path::PathBuf, kan_edge::coordinator::TcpServer)> {
+    let (dir, cfg, registry) = bench_registry_with(cfg, tag, ckpt_json)?;
     let target: Arc<dyn Dispatch> = registry;
     // trace hub from cfg.observability, so bench phases can enable
     // sampling by setting `sample_every` before spawning
@@ -602,6 +741,7 @@ fn run_shadow_phase(
         backend: Some(BackendKind::Acim),
         seed: Some(0xCAB),
         trials: 1,
+        ..CallOptions::default()
     };
     let t0 = Instant::now();
     for _ in 0..acim_requests {
@@ -828,6 +968,208 @@ fn run_mixed_policy(
     })
 }
 
+/// Dispatch wrapper injecting a runtime-adjustable delay before every
+/// forwarded call — the deliberately slow replica of the cluster bench
+/// phase. Everything else passes through unchanged.
+struct SlowDispatch {
+    inner: Arc<dyn Dispatch>,
+    delay_ms: Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl SlowDispatch {
+    fn stall(&self) {
+        let ms = self.delay_ms.load(std::sync::atomic::Ordering::Relaxed);
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+impl Dispatch for SlowDispatch {
+    fn dispatch(
+        &self,
+        client: kan_edge::coordinator::ClientId,
+        route: &kan_edge::coordinator::RouteSpec,
+        features: Vec<f32>,
+    ) -> Result<(String, kan_edge::coordinator::RowOutput)> {
+        self.stall();
+        self.inner.dispatch(client, route, features)
+    }
+
+    fn dispatch_batch(
+        &self,
+        client: kan_edge::coordinator::ClientId,
+        route: &kan_edge::coordinator::RouteSpec,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<kan_edge::coordinator::RowOutput>)> {
+        self.stall();
+        self.inner.dispatch_batch(client, route, rows)
+    }
+
+    fn model_summaries(&self) -> Vec<kan_edge::coordinator::ModelSummary> {
+        self.inner.model_summaries()
+    }
+
+    fn metrics_reports(&self) -> Vec<(String, kan_edge::coordinator::MetricsReport)> {
+        self.inner.metrics_reports()
+    }
+
+    fn live_model_count(&self) -> usize {
+        self.inner.live_model_count()
+    }
+
+    fn pull_artifact(
+        &self,
+        digest: &str,
+    ) -> Result<(Option<kan_edge::util::json::Value>, Vec<u8>)> {
+        self.inner.pull_artifact(digest)
+    }
+
+    fn push_artifact(
+        &self,
+        name: &str,
+        version: Option<u32>,
+        digest: &str,
+        data: &[u8],
+    ) -> Result<String> {
+        self.inner.push_artifact(name, version, digest, data)
+    }
+}
+
+/// Cluster phase: 3 single-model nodes behind a [`ClusterRouter`]
+/// (replication 2). Measures the router-hop overhead (direct-to-primary
+/// vs routed p50/p99) and then injects a 25 ms delay into the primary
+/// replica to show hedged retries bounding the routed p99 far below the
+/// injected latency, reporting the hedge fire/win counters.
+fn run_cluster_phase(
+    cfg: &AppConfig,
+    requests: usize,
+) -> Result<kan_edge::util::json::Value> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::Instant;
+
+    use kan_edge::coordinator::metrics::percentile;
+    use kan_edge::util::json::{obj, Value};
+
+    const SLOW_MS: u64 = 25;
+    let n = requests.clamp(40, 300);
+
+    let mut dirs = Vec::new();
+    let mut servers = Vec::new();
+    let mut delays: Vec<Arc<AtomicU64>> = Vec::new();
+    let mut nodes = Vec::new();
+    for i in 0..3 {
+        let (dir, node_cfg, registry) = bench_registry_with(
+            cfg,
+            &format!("cluster_{i}"),
+            &kan_edge::kan::checkpoint::synthetic_checkpoint_json("bench", 0),
+        )?;
+        let delay = Arc::new(AtomicU64::new(0));
+        let inner: Arc<dyn Dispatch> = registry;
+        let target: Arc<dyn Dispatch> =
+            Arc::new(SlowDispatch { inner, delay_ms: delay.clone() });
+        let server = kan_edge::coordinator::TcpServer::spawn_with_identity(
+            "127.0.0.1:0",
+            target,
+            tcp_limits(&node_cfg),
+            kan_edge::coordinator::router::trace_hub(&node_cfg),
+            Some(kan_edge::coordinator::NodeIdentity::new(format!("bench-node-{i}"))),
+        )?;
+        nodes.push(server.addr.to_string());
+        dirs.push(dir);
+        servers.push(server);
+        delays.push(delay);
+    }
+
+    let ropts = kan_edge::cluster::RouterOptions {
+        replication: 2,
+        heartbeat_ms: 100,
+        hedge_min_ms: 1,
+        hedge_max_ms: 5,
+        ..kan_edge::cluster::RouterOptions::default()
+    };
+    let router = kan_edge::cluster::ClusterRouter::new(nodes.clone(), ropts)?;
+    let primary = router.placement("bench")[0];
+    let router_target: Arc<dyn Dispatch> = router;
+    let router_server =
+        kan_edge::coordinator::TcpServer::spawn("127.0.0.1:0", router_target)?;
+
+    let measure = |client: &mut KanClient, n: usize| -> Result<(u64, u64)> {
+        let mut lg = kan_edge::data::LoadGen::new(0xC1A5, 2);
+        client.infer_model(Some("bench"), &lg.next_vec())?; // warm
+        let mut lat = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t0 = Instant::now();
+            client.infer_model(Some("bench"), &lg.next_vec())?;
+            lat.push(t0.elapsed().as_micros() as u64);
+        }
+        lat.sort_unstable();
+        Ok((percentile(&lat, 0.50), percentile(&lat, 0.99)))
+    };
+
+    // direct to the model's primary replica, then through the router
+    let mut direct_client = KanClient::connect(servers[primary].addr)?;
+    let (direct_p50, direct_p99) = measure(&mut direct_client, n)?;
+    let mut routed_client = KanClient::connect(router_server.addr)?;
+    let (routed_p50, routed_p99) = measure(&mut routed_client, n)?;
+
+    // slow down the primary: hedged reissues to the other replica keep
+    // the routed tail far below the injected delay
+    delays[primary].store(SLOW_MS, Ordering::Relaxed);
+    let (slow_p50, slow_p99) = measure(&mut routed_client, n)?;
+    delays[primary].store(0, Ordering::Relaxed);
+
+    let body = routed_client.metrics()?;
+    let counter = |k: &str| -> i64 {
+        body.get("cluster")
+            .and_then(|c| c.get(k))
+            .and_then(|v| v.as_i64())
+            .unwrap_or(0)
+    };
+    let (hedges, hedge_wins) = (counter("hedges"), counter("hedge_wins"));
+
+    router_server.shutdown();
+    for s in &servers {
+        s.shutdown();
+    }
+    for d in &dirs {
+        let _ = std::fs::remove_dir_all(d);
+    }
+
+    println!(
+        "\ncluster: 3 nodes + router, replication 2 ({n} single-row requests \
+         per mode)"
+    );
+    println!("{:<28} {:>10} {:>10}", "mode", "p50(us)", "p99(us)");
+    println!("{:<28} {:>10} {:>10}", "direct (primary node)", direct_p50, direct_p99);
+    println!("{:<28} {:>10} {:>10}", "routed", routed_p50, routed_p99);
+    println!(
+        "{:<28} {:>10} {:>10}",
+        format!("routed, primary +{SLOW_MS}ms"),
+        slow_p50,
+        slow_p99
+    );
+    if hedges > 0 {
+        println!(
+            "  hedges fired {hedges}, won {hedge_wins} ({:.0}% win rate); \
+             injected primary latency {SLOW_MS}ms",
+            100.0 * hedge_wins as f64 / hedges as f64
+        );
+    }
+    Ok(obj(vec![
+        ("requests", Value::Int(n as i64)),
+        ("slow_node_ms", Value::Int(SLOW_MS as i64)),
+        ("direct_p50_us", Value::Int(direct_p50 as i64)),
+        ("direct_p99_us", Value::Int(direct_p99 as i64)),
+        ("routed_p50_us", Value::Int(routed_p50 as i64)),
+        ("routed_p99_us", Value::Int(routed_p99 as i64)),
+        ("slow_routed_p50_us", Value::Int(slow_p50 as i64)),
+        ("slow_routed_p99_us", Value::Int(slow_p99 as i64)),
+        ("hedges", Value::Int(hedges)),
+        ("hedge_wins", Value::Int(hedge_wins)),
+    ]))
+}
+
 /// Self-contained network benchmark: publish a tiny synthetic KAN into
 /// a temp registry, serve it on an ephemeral port (digital backend),
 /// and measure served throughput over one connection in three modes —
@@ -860,6 +1202,7 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
     let skip_hotpath = args.opts.contains_key("skip-hotpath");
     let skip_shadow = args.opts.contains_key("skip-shadow");
     let skip_trace = args.opts.contains_key("skip-trace");
+    let skip_cluster = args.opts.contains_key("skip-cluster");
 
     let mut phases: Vec<(String, f64, f64)> = Vec::new();
     if !mixed_only {
@@ -1016,6 +1359,12 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
         }
     }
 
+    // routed-vs-direct cluster phase with an injected slow replica
+    let mut cluster_report = kan_edge::util::json::Value::Null;
+    if !mixed_only && !skip_cluster {
+        cluster_report = run_cluster_phase(cfg, requests)?;
+    }
+
     let mut mixed: Vec<MixedPolicyReport> = Vec::new();
     if !skip_mixed {
         println!(
@@ -1099,6 +1448,7 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
             ("hotpath", arr(hotpath_values)),
             ("shadow", shadow_report),
             ("tracing", arr(tracing_values)),
+            ("cluster", cluster_report),
             (
                 "mixed",
                 obj(vec![

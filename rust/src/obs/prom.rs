@@ -27,6 +27,9 @@ type Sample = (Option<(String, String)>, f64);
 /// * the top-level `models` object becomes per-model series — each
 ///   model's subtree renders with the metric name
 ///   `kan_edge_model_<path>` and a `model="<id>"` label;
+/// * the top-level `nodes` object (the cluster router's rollup) becomes
+///   per-node series the same way: `kan_edge_node_<path>` with a
+///   `node="<id>"` label (see `docs/CLUSTER.md`);
 /// * every other top-level section renders as
 ///   `kan_edge_<section>_<path>` with no labels;
 /// * array elements append their index to the path;
@@ -45,6 +48,13 @@ pub fn render(root: &Value) -> String {
                     for (id, report) in models {
                         let label = Some(("model".to_string(), id.clone()));
                         collect(report, &mut vec!["model".to_string()], &label, &mut samples);
+                    }
+                }
+            } else if section == "nodes" {
+                if let Some(nodes) = v.as_object() {
+                    for (id, report) in nodes {
+                        let label = Some(("node".to_string(), id.clone()));
+                        collect(report, &mut vec!["node".to_string()], &label, &mut samples);
                     }
                 }
             } else {
@@ -293,6 +303,34 @@ mod tests {
         let text = render(&root);
         assert!(text.contains("kan_edge_model_hist_0{model=\"a-b.c\"} 1\n"));
         assert!(text.contains("kan_edge_model_hist_1{model=\"a-b.c\"} 2.5\n"));
+        validate(&text).unwrap();
+    }
+
+    #[test]
+    fn nodes_section_gets_node_labels() {
+        let root = obj(vec![
+            ("cluster", obj(vec![("hedges", Value::Int(3))])),
+            (
+                "nodes",
+                obj(vec![
+                    (
+                        "node-a",
+                        obj(vec![("up", Value::Int(1)), ("requests", Value::Int(7))]),
+                    ),
+                    (
+                        "node-b",
+                        obj(vec![("up", Value::Int(0)), ("state", Value::Str("down".into()))]),
+                    ),
+                ]),
+            ),
+        ]);
+        let text = render(&root);
+        assert!(text.contains("kan_edge_cluster_hedges 3\n"));
+        assert!(text.contains("kan_edge_node_up{node=\"node-a\"} 1\n"));
+        assert!(text.contains("kan_edge_node_requests{node=\"node-a\"} 7\n"));
+        assert!(text.contains("kan_edge_node_up{node=\"node-b\"} 0\n"));
+        // string leaves (state) are skipped, as everywhere else
+        assert!(!text.contains("kan_edge_node_state"));
         validate(&text).unwrap();
     }
 

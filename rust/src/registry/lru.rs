@@ -52,6 +52,34 @@ impl<K: PartialEq + Clone> Lru<K> {
         }
     }
 
+    /// Like [`Lru::insert`], but only keys satisfying `is_evictable`
+    /// may be chosen as the victim: the scan walks from least-recent
+    /// toward most-recent and skips protected (pinned) keys. When every
+    /// over-capacity candidate is protected the list is allowed to run
+    /// over capacity — pinning is a guarantee, not a suggestion. The
+    /// just-inserted key is never the one evicted.
+    pub fn insert_with(
+        &mut self,
+        k: K,
+        is_evictable: impl Fn(&K) -> bool,
+    ) -> Option<K> {
+        if let Some(pos) = self.order.iter().position(|x| x == &k) {
+            let key = self.order.remove(pos);
+            self.order.insert(0, key);
+            return None;
+        }
+        self.order.insert(0, k);
+        if self.order.len() > self.cap {
+            // least-recent first; index 0 is the key just inserted
+            for pos in (1..self.order.len()).rev() {
+                if is_evictable(&self.order[pos]) {
+                    return Some(self.order.remove(pos));
+                }
+            }
+        }
+        None
+    }
+
     pub fn remove(&mut self, k: &K) {
         self.order.retain(|x| x != k);
     }
@@ -78,6 +106,23 @@ mod tests {
         lru.insert(2);
         assert_eq!(lru.insert(1), None); // already tracked
         assert_eq!(lru.insert(3), Some(2));
+    }
+
+    #[test]
+    fn insert_with_skips_pinned_victims() {
+        let mut lru = Lru::new(2);
+        lru.insert("pinned");
+        lru.insert("a"); // order: a, pinned
+        // the least-recent key is protected, so the next-oldest goes
+        assert_eq!(lru.insert_with("b", |k| *k != "pinned"), Some("a"));
+        assert!(lru.contains(&"pinned") && lru.contains(&"b"));
+        // everything protected: runs over capacity instead of evicting
+        assert_eq!(lru.insert_with("c", |_| false), None);
+        assert_eq!(lru.len(), 3);
+        assert!(lru.contains(&"pinned") && lru.contains(&"b") && lru.contains(&"c"));
+        // re-inserting a tracked key is a touch, never an eviction
+        assert_eq!(lru.insert_with("pinned", |_| true), None);
+        assert_eq!(lru.len(), 3);
     }
 
     #[test]

@@ -35,4 +35,4 @@ pub mod store;
 pub use digest::{digest_bytes, digest_file};
 pub use manifest::{HwCost, ModelManifest, ModelMeta, QuantSpec};
 pub use registry::{parse_model_spec, spawn_reload_thread, ModelInfo, ModelRegistry, ServedModel};
-pub use store::{ArtifactStore, StoredArtifact};
+pub use store::{decode_hex, encode_hex, ArtifactStore, StoredArtifact};

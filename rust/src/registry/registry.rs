@@ -23,7 +23,7 @@
 //!   the weights file is re-hashed before a backend is built; mismatch
 //!   is a hard [`Error::Registry`].
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
@@ -100,6 +100,10 @@ pub struct ModelRegistry {
     factory: BackendFactory,
     inner: RwLock<Inner>,
     lru: Mutex<Lru<String>>,
+    /// Names protected from LRU eviction ([`ModelRegistry::pin`]):
+    /// replication targets and canary-rollback fallbacks must not have
+    /// their pipeline evicted mid-flight.
+    pinned: Mutex<BTreeSet<String>>,
 }
 
 /// Split `"name@version"` into its parts; plain `"name"` pins nothing.
@@ -132,6 +136,7 @@ impl ModelRegistry {
             factory: BackendFactory::new(cfg),
             inner: RwLock::new(Inner { manifest, live: BTreeMap::new() }),
             lru: Mutex::new(Lru::new(cfg.registry.max_loaded)),
+            pinned: Mutex::new(BTreeSet::new()),
         }))
     }
 
@@ -342,6 +347,64 @@ impl ModelRegistry {
             .clone())
     }
 
+    /// Protect `spec` (`"name"` or `"name@version"`) from LRU eviction.
+    /// The model must be in the manifest; a pinned version must match
+    /// the published one (pins track the *name* — a later publish keeps
+    /// the pin on the new version, which is what a rollback fallback
+    /// wants). Idempotent.
+    pub fn pin(&self, spec: &str) -> Result<()> {
+        let (name, version) = parse_model_spec(spec)?;
+        let current = {
+            let g = self.inner.read().unwrap();
+            g.manifest
+                .base
+                .models
+                .contains_key(name)
+                .then(|| g.manifest.meta_for(name).version)
+        };
+        let current = current.ok_or_else(|| {
+            Error::Registry(format!(
+                "cannot pin '{spec}': model '{name}' not in manifest"
+            ))
+        })?;
+        if let Some(v) = version {
+            if v != current {
+                return Err(Error::Registry(format!(
+                    "cannot pin '{spec}': model '{name}' is at version {current}"
+                )));
+            }
+        }
+        self.pinned.lock().unwrap().insert(name.to_string());
+        Ok(())
+    }
+
+    /// Remove an eviction pin; returns whether it existed.
+    pub fn unpin(&self, name: &str) -> bool {
+        self.pinned.lock().unwrap().remove(name)
+    }
+
+    pub fn is_pinned(&self, name: &str) -> bool {
+        self.pinned.lock().unwrap().contains(name)
+    }
+
+    /// Track `name` in the LRU and apply any pin-respecting eviction:
+    /// pinned names are never chosen as the victim (the list runs over
+    /// capacity instead when everything else is pinned).
+    fn lru_admit(&self, name: &str, live: &mut BTreeMap<String, Arc<ServedModel>>) {
+        let evicted = {
+            let pinned = self.pinned.lock().unwrap();
+            self.lru
+                .lock()
+                .unwrap()
+                .insert_with(name.to_string(), |k| !pinned.contains(k))
+        };
+        if let Some(old) = evicted {
+            // dropping the ServedModel closes its request channel; the
+            // batcher flushes and the workers drain in-flight batches
+            live.remove(&old);
+        }
+    }
+
     /// The live pipeline for `name`, loading it on first use (LRU-bounded).
     pub fn ensure_loaded(&self, name: &str) -> Result<Arc<ServedModel>> {
         if let Some(served) = self.inner.read().unwrap().live.get(name) {
@@ -355,12 +418,7 @@ impl ModelRegistry {
             return Ok(existing.clone());
         }
         g.live.insert(name.to_string(), built.clone());
-        let evicted = self.lru.lock().unwrap().insert(name.to_string());
-        if let Some(old) = evicted {
-            // dropping the ServedModel closes its request channel; the
-            // batcher flushes and the workers drain in-flight batches
-            g.live.remove(&old);
-        }
+        self.lru_admit(name, &mut g.live);
         Ok(built)
     }
 
@@ -523,9 +581,7 @@ impl ModelRegistry {
         // keep live and the LRU in sync: reloading a model that was not
         // tracked (non-live reload, or a racing eviction) can push another
         // entry past capacity
-        if let Some(old) = self.lru.lock().unwrap().insert(name.to_string()) {
-            g.live.remove(&old);
-        }
+        self.lru_admit(name, &mut g.live);
         Ok(built)
     }
 
@@ -694,6 +750,77 @@ impl Dispatch for ModelRegistry {
 
     fn live_model_count(&self) -> usize {
         self.inner.read().unwrap().live.len()
+    }
+
+    /// Replication read side: resolve `digest` in the content-addressed
+    /// store (re-hashed — a corrupted object is refused, never shipped)
+    /// and attach the manifest entry it currently backs, so the puller
+    /// can republish under the same `name@version`.
+    fn pull_artifact(
+        &self,
+        digest_str: &str,
+    ) -> Result<(Option<crate::util::json::Value>, Vec<u8>)> {
+        use crate::util::json::{obj, Value};
+        let path = self.store.open_verified(digest_str)?;
+        let data = std::fs::read(&path)?;
+        let meta = {
+            let g = self.inner.read().unwrap();
+            g.manifest.base.models.iter().find_map(|(name, e)| {
+                let m = g.manifest.meta_for(name);
+                (m.digest.as_deref() == Some(digest_str)).then(|| {
+                    obj(vec![
+                        ("name", Value::Str(name.clone())),
+                        ("version", Value::Int(m.version as i64)),
+                        ("kind", Value::Str(e.kind.clone())),
+                    ])
+                })
+            })
+        };
+        Ok((meta, data))
+    }
+
+    /// Replication write side: verify the payload against the declared
+    /// digest *first*, then run the normal validated publish path
+    /// (checkpoint parse, store ingest, manifest rewrite, hot swap if
+    /// live). A re-push of an already-published `(name, version,
+    /// digest)` is an idempotent success — replication retries must not
+    /// trip the version-monotonicity check.
+    fn push_artifact(
+        &self,
+        name: &str,
+        version: Option<u32>,
+        digest_str: &str,
+        data: &[u8],
+    ) -> Result<String> {
+        let actual = digest::digest_bytes(data);
+        if actual != digest_str {
+            return Err(Error::Registry(format!(
+                "digest mismatch for pushed artifact '{name}': caller says \
+                 {digest_str}, payload is {actual} (artifact corrupted in \
+                 transit?)"
+            )));
+        }
+        {
+            let g = self.inner.read().unwrap();
+            if g.manifest.base.models.contains_key(name) {
+                let m = g.manifest.meta_for(name);
+                if m.digest.as_deref() == Some(digest_str)
+                    && version.map_or(true, |v| v == m.version)
+                {
+                    return Ok(format!("{name}@{}", m.version));
+                }
+            }
+        }
+        // stage to a temp file: publish validates the checkpoint by
+        // loading it, and the store ingests by path
+        let tmp = self
+            .dir
+            .join(format!(".push-{name}-{}.incoming.json", std::process::id()));
+        std::fs::write(&tmp, data)?;
+        let result = self.publish_file(&tmp, Some(name), version);
+        let _ = std::fs::remove_file(&tmp);
+        let (published_name, meta) = result?;
+        Ok(format!("{published_name}@{}", meta.version))
     }
 }
 

@@ -112,6 +112,45 @@ impl ArtifactStore {
     }
 }
 
+/// Lowercase hex encoding of a byte buffer — how artifact payloads ride
+/// the v2 wire on `pull_artifact` / `push_artifact` (the hand-rolled
+/// JSON layer has no binary type, and hex survives every JSON transport
+/// unescaped).
+pub fn encode_hex(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Inverse of [`encode_hex`]; rejects odd lengths and non-hex digits.
+pub fn decode_hex(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(Error::Registry(format!(
+            "hex payload has odd length {}",
+            s.len()
+        )));
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(s.len() / 2);
+    let nibble = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            other => Err(Error::Registry(format!(
+                "invalid hex digit '{}' in payload",
+                other as char
+            ))),
+        }
+    };
+    for pair in bytes.chunks_exact(2) {
+        out.push((nibble(pair[0])? << 4) | nibble(pair[1])?);
+    }
+    Ok(out)
+}
+
 /// Check that `path`'s content hashes to `expected` (used both by the
 /// store and by the registry when validating manifest-declared digests
 /// against weights files living outside the store).
@@ -158,6 +197,18 @@ mod tests {
         std::fs::write(&a.path, b"evil bytes").unwrap();
         let err = store.open_verified(&a.digest).map(|_| ()).unwrap_err().to_string();
         assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejection() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        let hex = encode_hex(&data);
+        assert_eq!(decode_hex(&hex).unwrap(), data);
+        assert_eq!(encode_hex(&[0x00, 0xff, 0x0a]), "00ff0a");
+        assert_eq!(decode_hex("00FF0A").unwrap(), vec![0x00, 0xff, 0x0a]);
+        assert!(decode_hex("abc").is_err()); // odd length
+        assert!(decode_hex("zz").is_err()); // bad digit
+        assert!(decode_hex("").unwrap().is_empty());
     }
 
     #[test]

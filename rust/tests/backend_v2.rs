@@ -95,6 +95,7 @@ fn acim_fixed_row_and_seed_is_bit_identical_across_worker_counts() {
         backend: Some(BackendKind::Acim),
         seed: Some(0xABCD),
         trials: 1,
+        ..CallOptions::default()
     };
     let mut outputs = Vec::new();
     for workers in [1usize, 4] {
@@ -153,7 +154,12 @@ fn one_connection_interleaves_digital_and_acim_against_one_model() {
         .infer_opts(
             None,
             &row,
-            &CallOptions { backend: Some(BackendKind::Acim), seed: Some(1), trials: 1 },
+            &CallOptions {
+                backend: Some(BackendKind::Acim),
+                seed: Some(1),
+                trials: 1,
+                ..CallOptions::default()
+            },
         )
         .unwrap();
     // same model id serves both; the analog path visibly diverges from
@@ -169,7 +175,12 @@ fn one_connection_interleaves_digital_and_acim_against_one_model() {
         .infer_opts(
             None,
             &row,
-            &CallOptions { backend: Some(BackendKind::Acim), seed: Some(1), trials: 1 },
+            &CallOptions {
+                backend: Some(BackendKind::Acim),
+                seed: Some(1),
+                trials: 1,
+                ..CallOptions::default()
+            },
         )
         .unwrap();
     assert_eq!(a2.logits, acim.logits);
@@ -178,7 +189,12 @@ fn one_connection_interleaves_digital_and_acim_against_one_model() {
         .infer_opts(
             None,
             &row,
-            &CallOptions { backend: Some(BackendKind::Acim), seed: Some(2), trials: 1 },
+            &CallOptions {
+                backend: Some(BackendKind::Acim),
+                seed: Some(2),
+                trials: 1,
+                ..CallOptions::default()
+            },
         )
         .unwrap();
     assert_ne!(a3.logits, acim.logits);
@@ -188,14 +204,24 @@ fn one_connection_interleaves_digital_and_acim_against_one_model() {
         .infer_opts(
             None,
             &row,
-            &CallOptions { backend: Some(BackendKind::Digital), seed: None, trials: 1 },
+            &CallOptions {
+                backend: Some(BackendKind::Digital),
+                seed: None,
+                trials: 1,
+                ..CallOptions::default()
+            },
         )
         .unwrap();
     assert_eq!(d3.logits, digital.logits);
 
     // seeded batch submit on the acim backend reproduces row by row
     let rows: Vec<Vec<f32>> = (0..5).map(|i| vec![0.1 * i as f32, -0.2]).collect();
-    let opts = CallOptions { backend: Some(BackendKind::Acim), seed: Some(9), trials: 1 };
+    let opts = CallOptions {
+        backend: Some(BackendKind::Acim),
+        seed: Some(9),
+        trials: 1,
+        ..CallOptions::default()
+    };
     let (_, b1) = client.infer_batch_opts(None, rows.clone(), &opts).unwrap();
     let (_, b2) = client.infer_batch_opts(None, rows, &opts).unwrap();
     assert_eq!(b1, b2);
@@ -214,6 +240,7 @@ fn acim_trials_serve_uncertainty_estimates() {
         backend: Some(BackendKind::Acim),
         seed: Some(77),
         trials: 16,
+        ..CallOptions::default()
     };
     let out = client.infer_opts(None, &row, &opts).unwrap();
     let std = out.std.as_ref().expect("trials > 1 must serve a trial spread");
@@ -229,7 +256,12 @@ fn acim_trials_serve_uncertainty_estimates() {
         .infer_opts(
             None,
             &row,
-            &CallOptions { backend: Some(BackendKind::Acim), seed: Some(77), trials: 1 },
+            &CallOptions {
+                backend: Some(BackendKind::Acim),
+                seed: Some(77),
+                trials: 1,
+                ..CallOptions::default()
+            },
         )
         .unwrap();
     assert!(single.std.is_none());
@@ -238,7 +270,12 @@ fn acim_trials_serve_uncertainty_estimates() {
         .infer_opts(
             None,
             &row,
-            &CallOptions { backend: Some(BackendKind::Acim), seed: None, trials: 1000 },
+            &CallOptions {
+                backend: Some(BackendKind::Acim),
+                seed: None,
+                trials: 1000,
+                ..CallOptions::default()
+            },
         )
         .unwrap_err();
     assert!(err.to_string().contains("trials"), "{err}");
@@ -280,7 +317,12 @@ fn unknown_and_unserveable_backends_are_structured_errors() {
         .infer_opts(
             None,
             &[0.1, 0.2],
-            &CallOptions { backend: Some(BackendKind::Mlp), seed: None, trials: 1 },
+            &CallOptions {
+                backend: Some(BackendKind::Mlp),
+                seed: None,
+                trials: 1,
+                ..CallOptions::default()
+            },
         )
         .unwrap_err();
     assert!(err.to_string().contains("not_found"), "{err}");

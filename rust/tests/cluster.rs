@@ -1,0 +1,517 @@
+//! Cluster-plane integration tests: consistent-hash placement, the
+//! front router's failover / hedging / on-demand replication, the
+//! cluster metrics rollup, registry pinning under LRU pressure, and the
+//! client's opt-in overload retry.
+//!
+//! Everything runs in-process: each "node" is a [`ModelRegistry`] over
+//! its own temp artifacts dir behind a real [`TcpServer`] on an
+//! ephemeral port, and the router is a [`ClusterRouter`] fronted by its
+//! own `TcpServer` — the same wiring `kan-edge serve` / `kan-edge
+//! route` produce, minus the processes.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use kan_edge::client::{CallOptions, KanClient};
+use kan_edge::cluster::{ClusterRouter, HashRing, NodeState, RouterOptions};
+use kan_edge::coordinator::{
+    ClientId, Dispatch, MetricsReport, ModelSummary, RouteSpec, RowOutput, TcpServer,
+};
+use kan_edge::error::{Error, Result};
+use kan_edge::kan::checkpoint::synthetic_checkpoint_json;
+use kan_edge::registry::{ModelManifest, ModelRegistry};
+use kan_edge::util::json::Value;
+
+mod common;
+use common::{test_config, write_manifest_v2};
+
+fn tmp(test: &str) -> PathBuf {
+    common::tmp_dir("kan_edge_cluster_tests", test)
+}
+
+/// Artifacts dir with model "cm" (favors class 0) in the manifest.
+fn dir_with_model(test: &str, node: usize) -> PathBuf {
+    let dir = tmp(&format!("{test}_n{node}"));
+    std::fs::write(dir.join("cm.weights.json"), synthetic_checkpoint_json("cm", 0)).unwrap();
+    write_manifest_v2(&dir, &[("cm", "cm.weights.json", 1)]);
+    dir
+}
+
+/// Artifacts dir with a valid but empty manifest (nothing published).
+fn empty_dir(test: &str, node: usize) -> PathBuf {
+    let dir = tmp(&format!("{test}_n{node}"));
+    ModelManifest::empty().save(&dir).unwrap();
+    dir
+}
+
+/// One in-process serving node: registry + wire endpoint.
+struct Node {
+    registry: Arc<ModelRegistry>,
+    server: TcpServer,
+}
+
+fn spawn_node(dir: &Path) -> Node {
+    let registry = ModelRegistry::open(&test_config(dir, "cm")).unwrap();
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+    Node { registry, server }
+}
+
+/// Router options for deterministic tests: no background heartbeat, no
+/// hedging (tests that want hedging opt back in).
+fn quiet_opts() -> RouterOptions {
+    RouterOptions { heartbeat_ms: 0, hedge: false, ..RouterOptions::default() }
+}
+
+/// Front a router with its own wire endpoint and connect a client.
+fn front(router: &Arc<ClusterRouter>) -> (TcpServer, KanClient) {
+    let target: Arc<dyn Dispatch> = router.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+    let client = KanClient::connect(server.addr).unwrap();
+    (server, client)
+}
+
+fn overlay_int(overlay: &Value, section: &str, key: &str) -> i64 {
+    overlay
+        .get(section)
+        .and_then(|s| s.get(key))
+        .and_then(|v| v.as_i64())
+        .unwrap_or_else(|| panic!("no integer {section}.{key} in {overlay:?}"))
+}
+
+// ---- placement -----------------------------------------------------------
+
+#[test]
+fn node_leave_moves_only_the_departed_nodes_keys() {
+    let full: Vec<String> = (0..5).map(|i| format!("node-{i}:77{i:02}")).collect();
+    let before = HashRing::new(&full, 64);
+    let after = HashRing::new(&full[..4], 64);
+    let total = 2000;
+    let mut moved = 0;
+    for k in 0..total {
+        let key = format!("model-{k}@1");
+        let b = before.primary(&key).unwrap();
+        let a = after.primary(&key).unwrap();
+        if b == 4 {
+            // orphaned keys respread among the survivors
+            assert!(a < 4, "key {key} still maps to the departed node");
+            moved += 1;
+        } else {
+            assert_eq!(a, b, "key {key} moved between surviving nodes {b} -> {a}");
+        }
+    }
+    // the departed node owned about 1/5 of the space; generous slack
+    assert!(moved > 0 && (moved as f64) < 0.45 * total as f64, "leave moved {moved}/{total}");
+}
+
+// ---- replication ---------------------------------------------------------
+
+#[test]
+fn routed_inference_replicates_on_demand() {
+    let dirs: Vec<PathBuf> = (0..3).map(|i| empty_dir("replicate", i)).collect();
+    let nodes: Vec<Node> = dirs.iter().map(|d| spawn_node(d)).collect();
+    let addrs: Vec<String> = nodes.iter().map(|n| n.server.addr.to_string()).collect();
+    let router = ClusterRouter::new(addrs, quiet_opts()).unwrap();
+
+    // publish the model to exactly one node, *outside* its replica set:
+    // every routed request lands on a node that does not have it yet
+    let placement = router.placement("cm");
+    assert_eq!(placement.len(), 2);
+    let source = (0..3).find(|i| !placement.contains(i)).unwrap();
+    let incoming = dirs[source].join("incoming.weights.json");
+    std::fs::write(&incoming, synthetic_checkpoint_json("cm", 1)).unwrap();
+    let (name, meta) = nodes[source].registry.publish_file(&incoming, Some("cm"), None).unwrap();
+    assert_eq!((name.as_str(), meta.version), ("cm", 1));
+    let dig = meta.digest.clone().unwrap();
+
+    let (server, mut client) = front(&router);
+    let inf = client.infer_model(Some("cm"), &[0.5, 0.5]).unwrap();
+    assert_eq!(inf.model, "cm@1");
+    assert!(inf.logits[1] > inf.logits[0], "replicated copy must serve v1 weights");
+
+    // the primary now holds a digest-verified copy in its own store
+    let primary = placement[0];
+    assert!(nodes[primary].registry.model_names().contains(&"cm".to_string()));
+    assert!(nodes[primary].registry.store().contains(&dig));
+    // replication is on-demand, not broadcast: the other replica slot
+    // stays empty until a request actually lands there
+    assert!(!nodes[placement[1]].registry.model_names().contains(&"cm".to_string()));
+    let overlay = router.metrics_overlay().unwrap();
+    assert_eq!(overlay_int(&overlay, "cluster", "replications"), 1);
+    assert_eq!(overlay_int(&overlay, "cluster", "replication_failures"), 0);
+
+    // the copy persists: a second request serves locally, no new transfer
+    let again = client.infer_model(Some("cm"), &[0.5, 0.5]).unwrap();
+    assert_eq!(again.model, "cm@1");
+    assert_eq!(again.logits, inf.logits);
+    let overlay = router.metrics_overlay().unwrap();
+    assert_eq!(overlay_int(&overlay, "cluster", "replications"), 1);
+
+    server.shutdown();
+    for n in &nodes {
+        n.server.shutdown();
+    }
+}
+
+#[test]
+fn corrupted_push_is_rejected_and_store_untouched() {
+    let dir = empty_dir("corrupt_push", 0);
+    let registry = ModelRegistry::open(&test_config(&dir, "cm")).unwrap();
+    let data = synthetic_checkpoint_json("x", 0).into_bytes();
+
+    // digest mismatch: refused before anything touches the store
+    let err = registry
+        .push_artifact("x", Some(1), "fnv64:00000000000000ff", &data)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("digest mismatch"), "{err}");
+    assert!(!registry.model_names().contains(&"x".to_string()));
+
+    // correct digest publishes; an identical re-push is idempotent
+    let dig = kan_edge::registry::digest_bytes(&data);
+    assert_eq!(registry.push_artifact("x", Some(1), &dig, &data).unwrap(), "x@1");
+    assert_eq!(registry.push_artifact("x", Some(1), &dig, &data).unwrap(), "x@1");
+    assert!(registry.store().contains(&dig));
+    let (id, logits) = registry.infer(Some("x"), vec![0.5, 0.5]).unwrap();
+    assert_eq!(id, "x@1");
+    assert_eq!(logits.len(), 2);
+}
+
+// ---- hedged retries ------------------------------------------------------
+
+/// Wraps a node's dispatch with a settable artificial stall, so a test
+/// can make one replica slow without touching the replica's outputs.
+struct SlowDispatch {
+    inner: Arc<dyn Dispatch>,
+    delay_ms: AtomicU64,
+}
+
+impl SlowDispatch {
+    fn stall(&self) {
+        let ms = self.delay_ms.load(Ordering::Relaxed);
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+impl Dispatch for SlowDispatch {
+    fn dispatch(
+        &self,
+        client: ClientId,
+        route: &RouteSpec,
+        features: Vec<f32>,
+    ) -> Result<(String, RowOutput)> {
+        self.stall();
+        self.inner.dispatch(client, route, features)
+    }
+
+    fn dispatch_batch(
+        &self,
+        client: ClientId,
+        route: &RouteSpec,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<RowOutput>)> {
+        self.stall();
+        self.inner.dispatch_batch(client, route, rows)
+    }
+
+    fn model_summaries(&self) -> Vec<ModelSummary> {
+        self.inner.model_summaries()
+    }
+
+    fn metrics_reports(&self) -> Vec<(String, MetricsReport)> {
+        self.inner.metrics_reports()
+    }
+}
+
+#[test]
+fn hedged_retry_beats_slow_primary_with_bit_identical_outputs() {
+    let dirs: Vec<PathBuf> = (0..3).map(|i| dir_with_model("hedge", i)).collect();
+    let mut servers = Vec::new();
+    let mut delays = Vec::new();
+    let mut addrs = Vec::new();
+    for dir in &dirs {
+        let registry = ModelRegistry::open(&test_config(dir, "cm")).unwrap();
+        let slow = Arc::new(SlowDispatch { inner: registry, delay_ms: AtomicU64::new(0) });
+        delays.push(slow.clone());
+        let target: Arc<dyn Dispatch> = slow;
+        let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+        addrs.push(server.addr.to_string());
+        servers.push(server);
+    }
+    let opts = RouterOptions {
+        heartbeat_ms: 0,
+        hedge_min_ms: 1,
+        hedge_max_ms: 5,
+        ..RouterOptions::default()
+    };
+    let router = ClusterRouter::new(addrs, opts).unwrap();
+    let placement = router.placement("cm");
+    let (primary, secondary) = (placement[0], placement[1]);
+    delays[primary].delay_ms.store(60, Ordering::Relaxed);
+
+    let (server, mut client) = front(&router);
+    let call = CallOptions { seed: Some(7), ..CallOptions::default() };
+    let routed = client.infer_opts(Some("cm"), &[0.25, 0.75], &call).unwrap();
+    assert_eq!(routed.model, "cm@1");
+
+    let overlay = router.metrics_overlay().unwrap();
+    assert!(overlay_int(&overlay, "cluster", "hedges") >= 1, "hedge never fired: {overlay:?}");
+    assert!(overlay_int(&overlay, "cluster", "hedge_wins") >= 1, "hedge never won: {overlay:?}");
+
+    // idempotence: the fast winner and the slow loser are bit-identical,
+    // so it cannot matter which answer the caller got
+    delays[primary].delay_ms.store(0, Ordering::Relaxed);
+    for node in [primary, secondary] {
+        let mut direct = KanClient::connect(servers[node].addr).unwrap();
+        let d = direct.infer_opts(Some("cm"), &[0.25, 0.75], &call).unwrap();
+        assert_eq!(d.logits, routed.logits, "node {node} diverged from the routed answer");
+        assert_eq!(d.class, routed.class);
+    }
+
+    server.shutdown();
+    for s in &servers {
+        s.shutdown();
+    }
+}
+
+// ---- failover ------------------------------------------------------------
+
+#[test]
+fn killed_node_fails_over_and_cluster_keeps_serving() {
+    let dirs: Vec<PathBuf> = (0..3).map(|i| dir_with_model("failover", i)).collect();
+    let nodes: Vec<Node> = dirs.iter().map(|d| spawn_node(d)).collect();
+    let addrs: Vec<String> = nodes.iter().map(|n| n.server.addr.to_string()).collect();
+    let router = ClusterRouter::new(addrs, quiet_opts()).unwrap();
+    let placement = router.placement("cm");
+    let (primary, secondary) = (placement[0], placement[1]);
+
+    // kill the primary before any traffic
+    nodes[primary].server.shutdown();
+
+    let (server, mut client) = front(&router);
+    let call = CallOptions { seed: Some(9), ..CallOptions::default() };
+    let mut answers = Vec::new();
+    for _ in 0..3 {
+        let inf = client.infer_opts(Some("cm"), &[0.5, 0.5], &call).unwrap();
+        assert_eq!(inf.model, "cm@1");
+        answers.push(inf.logits);
+    }
+    // the survivor serves bit-identical outputs for the same (row, seed)
+    assert_eq!(answers[0], answers[1]);
+    assert_eq!(answers[0], answers[2]);
+    let mut direct = KanClient::connect(nodes[secondary].server.addr).unwrap();
+    let d = direct.infer_opts(Some("cm"), &[0.5, 0.5], &call).unwrap();
+    assert_eq!(d.logits, answers[0]);
+
+    // fail_after=2 data-path failures demoted the dead node; later
+    // requests skip it at selection time instead of failing over
+    assert_eq!(router.membership().state(primary), NodeState::Down);
+    let overlay = router.metrics_overlay().unwrap();
+    assert_eq!(overlay_int(&overlay, "cluster", "nodes_up"), 2);
+    assert_eq!(overlay_int(&overlay, "cluster", "failovers"), 2);
+    assert_eq!(overlay_int(&overlay, "cluster", "forwards"), 3);
+
+    server.shutdown();
+    nodes[secondary].server.shutdown();
+    for (i, n) in nodes.iter().enumerate() {
+        if i != primary && i != secondary {
+            n.server.shutdown();
+        }
+    }
+}
+
+#[test]
+fn draining_node_receives_no_traffic() {
+    let dirs: Vec<PathBuf> = (0..2).map(|i| dir_with_model("draining", i)).collect();
+    let nodes: Vec<Node> = dirs.iter().map(|d| spawn_node(d)).collect();
+    let addrs: Vec<String> = nodes.iter().map(|n| n.server.addr.to_string()).collect();
+    let router = ClusterRouter::new(addrs, quiet_opts()).unwrap();
+    let placement = router.placement("cm");
+
+    router.membership().set_draining(placement[0], true);
+    let (server, mut client) = front(&router);
+    for _ in 0..3 {
+        client.infer_model(Some("cm"), &[0.5, 0.5]).unwrap();
+    }
+    assert_eq!(nodes[placement[0]].registry.aggregate_metrics().requests, 0);
+    assert_eq!(nodes[placement[1]].registry.aggregate_metrics().requests, 3);
+
+    // un-draining restores the normal preference order
+    router.membership().set_draining(placement[0], false);
+    client.infer_model(Some("cm"), &[0.5, 0.5]).unwrap();
+    assert_eq!(nodes[placement[0]].registry.aggregate_metrics().requests, 1);
+
+    server.shutdown();
+    for n in &nodes {
+        n.server.shutdown();
+    }
+}
+
+// ---- metrics rollup ------------------------------------------------------
+
+#[test]
+fn router_metrics_rollup_sums_node_counters_exactly() {
+    let dirs: Vec<PathBuf> = (0..2).map(|i| dir_with_model("rollup", i)).collect();
+    let nodes: Vec<Node> = dirs.iter().map(|d| spawn_node(d)).collect();
+    let addrs: Vec<String> = nodes.iter().map(|n| n.server.addr.to_string()).collect();
+
+    // drive known per-node request counts *directly*, bypassing the router
+    for (node, count) in [(0usize, 3usize), (1, 2)] {
+        let mut c = KanClient::connect(nodes[node].server.addr).unwrap();
+        for _ in 0..count {
+            c.infer_model(Some("cm"), &[0.5, 0.5]).unwrap();
+        }
+    }
+
+    let router = ClusterRouter::new(addrs.clone(), quiet_opts()).unwrap();
+    let overlay = router.metrics_overlay().unwrap();
+    // per-model integer counters sum exactly across nodes
+    let cm = overlay.get("models").and_then(|m| m.get("cm@1")).unwrap();
+    assert_eq!(cm.get("requests").unwrap().as_i64().unwrap(), 5);
+    // per-node entries keyed by label (address until an id is reported)
+    let n0 = overlay.get("nodes").and_then(|n| n.get(&addrs[0])).unwrap();
+    assert_eq!(n0.get("requests").unwrap().as_i64().unwrap(), 3);
+    assert_eq!(n0.get("up").unwrap().as_i64().unwrap(), 1);
+    let n1 = overlay.get("nodes").and_then(|n| n.get(&addrs[1])).unwrap();
+    assert_eq!(n1.get("requests").unwrap().as_i64().unwrap(), 2);
+
+    // the same rollup crosses the wire: the router's own endpoint merges
+    // it into `metrics` and renders `node`-labeled Prometheus series
+    let (server, mut client) = front(&router);
+    let body = client.metrics().unwrap();
+    let via_wire = body.get("models").and_then(|m| m.get("cm@1")).unwrap();
+    assert_eq!(via_wire.get("requests").unwrap().as_i64().unwrap(), 5);
+    let prom = client.metrics_prom().unwrap();
+    assert!(prom.contains("kan_edge_cluster_forwards"), "{prom}");
+    let series = format!("kan_edge_node_requests{{node=\"{}\"}} 3", addrs[0]);
+    assert!(prom.contains(&series), "missing {series} in:\n{prom}");
+
+    server.shutdown();
+    for n in &nodes {
+        n.server.shutdown();
+    }
+}
+
+// ---- registry pinning ----------------------------------------------------
+
+#[test]
+fn pinned_variant_survives_lru_pressure() {
+    let dir = tmp("pinning");
+    let variants = [("a", 0), ("b", 1), ("c", 0), ("d", 1)];
+    for (name, favor) in variants {
+        let file = format!("{name}.weights.json");
+        std::fs::write(dir.join(&file), synthetic_checkpoint_json(name, favor)).unwrap();
+    }
+    write_manifest_v2(
+        &dir,
+        &[
+            ("a", "a.weights.json", 1),
+            ("b", "b.weights.json", 1),
+            ("c", "c.weights.json", 1),
+            ("d", "d.weights.json", 1),
+        ],
+    );
+    let mut cfg = test_config(&dir, "a");
+    cfg.registry.max_loaded = 2;
+    let registry = ModelRegistry::open(&cfg).unwrap();
+
+    registry.pin("a").unwrap();
+    assert!(registry.is_pinned("a"));
+    // fill the LRU well past capacity: every admission after the second
+    // must evict, and "a" would be the LRU victim each time
+    for (name, _) in variants {
+        registry.infer(Some(name), vec![0.5, 0.5]).unwrap();
+    }
+    let live: Vec<(String, bool)> =
+        registry.models().iter().map(|m| (m.name.clone(), m.live)).collect();
+    let expect = [("a", true), ("b", false), ("c", false), ("d", true)];
+    let expect: Vec<(String, bool)> =
+        expect.iter().map(|(n, l)| (n.to_string(), *l)).collect();
+    assert_eq!(live, expect, "pinned 'a' must survive; eviction falls on the LRU unpinned");
+    let (id, logits) = registry.infer(Some("a"), vec![0.5, 0.5]).unwrap();
+    assert_eq!(id, "a@1");
+    assert!(logits[0] > logits[1]);
+
+    // pinning an unknown model is a clear error
+    let err = registry.pin("zzz").unwrap_err().to_string();
+    assert!(err.contains("zzz"), "{err}");
+    // version-qualified pins must match the manifest's current version
+    let err = registry.pin("a@9").unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    // unpinned, "a" ages out normally again
+    assert!(registry.unpin("a"));
+    assert!(!registry.is_pinned("a"));
+    registry.infer(Some("c"), vec![0.5, 0.5]).unwrap(); // evicts "d" (LRU)
+    registry.infer(Some("b"), vec![0.5, 0.5]).unwrap(); // evicts "a"
+    let live_a = registry.models().iter().find(|m| m.name == "a").unwrap().live;
+    assert!(!live_a, "unpinned variant must be evictable again");
+}
+
+// ---- client overload retry -----------------------------------------------
+
+/// Rejects the next `remaining` dispatches with a structured overload
+/// (retry hint attached), then forwards to the real registry.
+struct FlakyOverload {
+    inner: Arc<ModelRegistry>,
+    remaining: AtomicU32,
+}
+
+impl Dispatch for FlakyOverload {
+    fn dispatch(
+        &self,
+        client: ClientId,
+        route: &RouteSpec,
+        features: Vec<f32>,
+    ) -> Result<(String, RowOutput)> {
+        let rejected = self
+            .remaining
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+            .is_ok();
+        if rejected {
+            return Err(Error::Overloaded {
+                message: "induced overload".into(),
+                retry_after_ms: 5,
+            });
+        }
+        self.inner.dispatch(client, route, features)
+    }
+
+    fn model_summaries(&self) -> Vec<ModelSummary> {
+        self.inner.model_summaries()
+    }
+}
+
+#[test]
+fn client_retries_overloaded_once_when_asked() {
+    let dir = dir_with_model("retry_overloaded", 0);
+    let registry = ModelRegistry::open(&test_config(&dir, "cm")).unwrap();
+    let flaky = Arc::new(FlakyOverload { inner: registry, remaining: AtomicU32::new(1) });
+    let target: Arc<dyn Dispatch> = flaky.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    // default options surface the structured rejection, hint intact
+    let err = client.infer_opts(Some("cm"), &[0.5, 0.5], &CallOptions::default()).unwrap_err();
+    match err {
+        Error::Overloaded { retry_after_ms, .. } => assert_eq!(retry_after_ms, 5),
+        other => panic!("expected overloaded, got: {other}"),
+    }
+
+    // opted-in retry absorbs exactly one rejection
+    flaky.remaining.store(1, Ordering::SeqCst);
+    let call = CallOptions { retry_overloaded: true, ..CallOptions::default() };
+    let inf = client.infer_opts(Some("cm"), &[0.5, 0.5], &call).unwrap();
+    assert_eq!(inf.model, "cm@1");
+
+    // two consecutive rejections still fail: the retry is single-shot
+    flaky.remaining.store(2, Ordering::SeqCst);
+    let err = client.infer_opts(Some("cm"), &[0.5, 0.5], &call).unwrap_err();
+    assert!(matches!(err, Error::Overloaded { .. }), "{err}");
+    server.shutdown();
+}
