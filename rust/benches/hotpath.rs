@@ -2,7 +2,8 @@
 //! EXPERIMENTS.md §Perf.
 //!
 //! * digital KAN forward — the scalar golden reference vs the planned
-//!   execution engine (`docs/ENGINE.md`), single-sample and batch-64
+//!   batch-major execution engine (`docs/ENGINE.md`), single-sample and
+//!   batch-64, plus the engine autotune sweep (`docs/PERFORMANCE.md`)
 //! * IR-drop ladder solve (ACIM simulation inner loop)
 //! * batcher + service round trip (serving overhead floor)
 //! * PJRT executable round trip (AOT graph dispatch cost)
@@ -85,15 +86,34 @@ fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
 
     header("digital KAN forward");
-    let (model, model_source) =
-        match QuantKanModel::load(format!("{dir}/kan2.weights.json")) {
-            Ok(m) => (m, "artifact"),
+    // which checkpoint produced the numbers (artifact weights vs the
+    // synthetic fallback) goes into the JSON verbatim, so trajectory
+    // comparisons across CI runs are apples-to-apples
+    let weights_path = format!("{dir}/kan2.weights.json");
+    let (model, model_source, checkpoint_detail) =
+        match QuantKanModel::load(&weights_path) {
+            Ok(m) => {
+                let detail = ("weights", Value::Str(weights_path.clone()));
+                (m, "artifact", detail)
+            }
             Err(_) => {
                 println!("  (artifacts missing; using a synthetic kan2-shaped checkpoint)");
                 let ckpt = synthetic_kan_checkpoint("kan2", &[17, 8, 14], 5, 3, 0xCAFE);
-                (QuantKanModel::from_checkpoint(&ckpt), "synthetic")
+                let detail = ("seed", Value::Str("0xCAFE".to_string()));
+                (QuantKanModel::from_checkpoint(&ckpt), "synthetic", detail)
             }
         };
+    let checkpoint = obj(vec![
+        ("source", Value::Str(model_source.to_string())),
+        ("model", Value::Str(model.name.clone())),
+        (
+            "dims",
+            arr(model.dims.iter().map(|&d| Value::Int(d as i64)).collect()),
+        ),
+        ("g", Value::Int(model.g as i64)),
+        ("k", Value::Int(model.k as i64)),
+        checkpoint_detail,
+    ]);
     let mut lg = LoadGen::new(7, model.input_dim());
     let one = lg.next_vec();
     // the pre-PR scalar reference numbers, measured in the same run the
@@ -142,6 +162,33 @@ fn main() {
         })
         .count();
     println!("  engine/reference argmax agreement: {agree}/{samples}");
+
+    // autotune sweep: block / grouping-threshold / fusion-budget grid on
+    // the same checkpoint and batch size as the headline bench; the full
+    // report lands in the JSON (docs/PERFORMANCE.md explains the schema)
+    header("engine autotune (batch 64)");
+    let tune = kan_edge::kan::autotune(&model, 64, 40, &[])
+        .expect("autotune sweep");
+    for o in &tune.outcomes {
+        let c = o.candidate;
+        let mode = if c.group_threshold > kan_edge::kan::engine::MAX_BLOCK {
+            "row-major"
+        } else {
+            "grouped"
+        };
+        println!(
+            "  block {:>4}  {:<9}  budget {:>8}  {:>10.0} ns/op",
+            c.block, mode, c.fused_budget, o.ns_per_op
+        );
+    }
+    println!(
+        "  best: block {} threshold {} budget {} — {:.2}x vs reference, {:.2}x vs default engine",
+        tune.best.candidate.block,
+        tune.best.candidate.group_threshold,
+        tune.best.candidate.fused_budget,
+        tune.speedup_vs_reference(),
+        tune.speedup_vs_default()
+    );
 
     header("IR-drop ladder solve");
     for rows in [128usize, 512, 1024] {
@@ -222,13 +269,15 @@ fn main() {
         _ => None,
     };
     let mut fields = vec![
-        ("schema", Value::Int(1)),
+        ("schema", Value::Int(2)),
         ("model_source", Value::Str(model_source.to_string())),
+        ("checkpoint", checkpoint),
         (
             "argmax_agreement",
             Value::Float(agree as f64 / samples as f64),
         ),
         ("benches", arr(bench_values)),
+        ("autotune", tune.to_value(model_source)),
     ];
     if let Some((_, _, s)) = speedup {
         fields.push(("speedup_forward_batch_64", Value::Float(s)));

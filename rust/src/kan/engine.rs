@@ -9,10 +9,23 @@
 //! of the worker count (rows are independent; each worker owns a
 //! disjoint output slice).
 //!
+//! Batches execute **batch-major**: rows are cut into micro-blocks of
+//! [`EngineOptions::block`] rows, each layer gathers the block's
+//! quantized codes into a column-major (structure-of-arrays) arena, and
+//! [`crate::kan::plan::LayerPlan::accumulate_batch`] groups the rows of
+//! every input column by shared code so each `(input, interval)`
+//! coefficient tile is materialized once and amortized across all rows
+//! that hit it, through the fixed-width kernels of
+//! [`crate::kan::kernels`]. Integer accumulation is order-independent,
+//! so the regrouped outputs are bit-identical to the row-major
+//! single-sample path ([`KanEngine::forward_into`]) — a contract
+//! `rust/tests/engine.rs` enforces per bit.
+//!
 //! The scalar reference (`QuantKanLayer::forward_digital`) stays the
 //! golden path; the engine agrees with it within float-summation-order
 //! tolerance and exactly in argmax on the artifact dataset (enforced by
-//! `rust/tests/engine.rs`). Contract details: `docs/ENGINE.md`.
+//! `rust/tests/engine.rs`). Contract details: `docs/ENGINE.md`; tuning:
+//! `docs/PERFORMANCE.md`.
 
 use crate::error::Result;
 use crate::kan::checkpoint::Dataset;
@@ -33,6 +46,17 @@ pub struct EngineOptions {
     /// an outer pool (the serving workers) already provides parallelism;
     /// benches and offline eval raise it.
     pub workers: usize,
+    /// Batch-major micro-block size: rows per structure-of-arrays block.
+    /// Larger blocks amortize more tile loads per column but grow the
+    /// scratch arenas; clamped to `1..=`[`MAX_BLOCK`]. `kan-edge
+    /// tune-engine` sweeps this (`docs/PERFORMANCE.md`).
+    pub block: usize,
+    /// Minimum rows for the grouped batch-major path; blocks with fewer
+    /// rows (batch tails, tiny batches) run the row-major
+    /// [`KanEngine::forward_into`] loop, which skips the counting-sort
+    /// setup. Values above [`MAX_BLOCK`] force row-major execution
+    /// everywhere — the autotuner's baseline candidate.
+    pub group_threshold: usize,
 }
 
 impl Default for EngineOptions {
@@ -42,22 +66,42 @@ impl Default for EngineOptions {
             mapping: plan.mapping,
             fused_budget: plan.fused_budget,
             workers: 1,
+            block: 64,
+            group_threshold: 2,
         }
     }
 }
+
+/// Upper bound on [`EngineOptions::block`]: bounds the per-scratch arena
+/// footprint (`block · max_width` entries of u32 + i64 + 2·f64 ≈ 28 B
+/// each) and lets a `group_threshold` above it mean "always row-major".
+pub const MAX_BLOCK: usize = 1024;
 
 /// Preallocated per-worker arenas: one scratch serves any number of
 /// sequential samples without touching the allocator.
 #[derive(Debug, Clone)]
 pub struct EngineScratch {
-    /// Quantized codes of the current layer input.
+    /// Quantized codes of the current layer input (row-major path).
     codes: Vec<u32>,
-    /// i64 spline accumulator.
+    /// i64 spline accumulator (row-major path).
     acc: Vec<i64>,
     /// Current / next activation vectors (f64 end-to-end), swapped
     /// between layers.
     h: Vec<f64>,
     h2: Vec<f64>,
+    /// Batch-major arenas (`block · max_width` each): column-major codes
+    /// of the current block (`cols[i · n + r]`), per-row i64
+    /// accumulators, and the current / next block activations.
+    cols: Vec<u32>,
+    bacc: Vec<i64>,
+    bh: Vec<f64>,
+    bh2: Vec<f64>,
+    /// Counting-sort bucket cursors (`max layer range + 1`) and the
+    /// grouped row permutation (`block`) for the SoA gather.
+    starts: Vec<u32>,
+    order: Vec<u32>,
+    /// Staging row (`max_width`) for one materialized LUT×tile product.
+    tmp: Vec<i64>,
     /// Opt-in profiling counters (see [`EngineProfile`]). `None` — the
     /// default — costs one branch per layer and nothing else; counters
     /// are plain per-scratch integers, never atomics, and the update
@@ -90,6 +134,13 @@ pub struct LayerProfile {
     pub tiles_touched: u64,
     /// Codes served by the per-code fused-row fast path.
     pub fused_hits: u64,
+    /// LUT×tile products actually materialized on the tiled path. Under
+    /// batch-major grouping rows sharing a code reuse one product, so
+    /// `tile_loads ≤ tiles_touched` and the ratio is the measured
+    /// amortization; in row-major execution the two counters advance in
+    /// lockstep. The fused path loads no tiles, so fused layers keep
+    /// this at 0.
+    pub tile_loads: u64,
     /// Live interval-occupancy histogram, `din · G` buckets in the same
     /// layout as the SAM calibration prior
     /// ([`crate::kan::plan::LayerPlan::prior`]).
@@ -116,9 +167,8 @@ impl EngineProfile {
                 .layers
                 .iter()
                 .map(|l| LayerProfile {
-                    tiles_touched: 0,
-                    fused_hits: 0,
                     interval_counts: vec![0u64; l.din * l.intervals()],
+                    ..LayerProfile::default()
                 })
                 .collect(),
         }
@@ -130,6 +180,7 @@ impl EngineProfile {
         for (dst, src) in self.layers.iter_mut().zip(&other.layers) {
             dst.tiles_touched += src.tiles_touched;
             dst.fused_hits += src.fused_hits;
+            dst.tile_loads += src.tile_loads;
             for (d, s) in dst.interval_counts.iter_mut().zip(&src.interval_counts) {
                 *d += *s;
             }
@@ -142,6 +193,7 @@ impl EngineProfile {
         for l in &mut self.layers {
             l.tiles_touched = 0;
             l.fused_hits = 0;
+            l.tile_loads = 0;
             l.interval_counts.fill(0);
         }
     }
@@ -162,6 +214,7 @@ impl EngineProfile {
                 obj(vec![
                     ("tiles_touched", Value::Int(lp.tiles_touched as i64)),
                     ("fused_hits", Value::Int(lp.fused_hits as i64)),
+                    ("tile_loads", Value::Int(lp.tile_loads as i64)),
                     (
                         "mapping_drift_rankcorr",
                         Value::Float(crate::obs::rank_correlation(pl.prior(), &live)),
@@ -181,6 +234,13 @@ impl EngineProfile {
 pub struct KanEngine {
     plan: KanPlan,
     workers: usize,
+    /// Batch-major micro-block rows (sanitized [`EngineOptions::block`]).
+    block: usize,
+    /// Minimum block rows for the grouped path
+    /// ([`EngineOptions::group_threshold`]).
+    group_threshold: usize,
+    /// Widest quantizer range across the layers (counting-sort buckets).
+    max_range: usize,
 }
 
 impl KanEngine {
@@ -208,9 +268,14 @@ impl KanEngine {
             mapping: opts.mapping,
             fused_budget: opts.fused_budget,
         };
+        let plan = KanPlan::compile(model, &plan_opts, calib)?;
+        let max_range = plan.layers.iter().map(|l| l.range()).max().unwrap_or(1);
         Ok(Self {
-            plan: KanPlan::compile(model, &plan_opts, calib)?,
+            plan,
             workers: opts.workers.max(1),
+            block: opts.block.clamp(1, MAX_BLOCK),
+            group_threshold: opts.group_threshold.max(2),
+            max_range,
         })
     }
 
@@ -230,14 +295,32 @@ impl KanEngine {
         self.workers
     }
 
+    /// Sanitized batch-major micro-block size this engine executes with.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Minimum block rows for the grouped batch-major path.
+    pub fn group_threshold(&self) -> usize {
+        self.group_threshold
+    }
+
     /// Allocate one worker's scratch arenas, sized for this plan.
     pub fn new_scratch(&self) -> EngineScratch {
         let w = self.plan.max_width;
+        let b = self.block;
         EngineScratch {
             codes: vec![0u32; w],
             acc: vec![0i64; w],
             h: vec![0.0f64; w],
             h2: vec![0.0f64; w],
+            cols: vec![0u32; w * b],
+            bacc: vec![0i64; w * b],
+            bh: vec![0.0f64; w * b],
+            bh2: vec![0.0f64; w * b],
+            starts: vec![0u32; self.max_range + 1],
+            order: vec![0u32; b],
+            tmp: vec![0i64; w],
             profile: None,
         }
     }
@@ -282,7 +365,9 @@ impl KanEngine {
                 if layer.uses_fused() {
                     lp.fused_hits += width as u64;
                 } else {
+                    // row-major: every code materializes its own product
                     lp.tiles_touched += width as u64;
+                    lp.tile_loads += width as u64;
                 }
             }
             let acc = &mut s.acc[..layer.dout];
@@ -304,12 +389,137 @@ impl KanEngine {
         out
     }
 
+    /// Forward a contiguous run of rows on one scratch: cut into
+    /// micro-blocks of [`Self::block`] rows, each executed batch-major
+    /// through [`Self::forward_block`] when it reaches
+    /// [`Self::group_threshold`] rows, row-major otherwise (the
+    /// counting-sort setup is not worth it for a short tail). Both paths
+    /// produce bit-identical rows, so the dispatch is invisible in the
+    /// outputs.
+    fn forward_rows(&self, x: &[f32], rows: usize, out: &mut [f64], s: &mut EngineScratch) {
+        let din = self.plan.input_dim;
+        let dout = self.plan.output_dim;
+        debug_assert_eq!(x.len(), rows * din);
+        debug_assert_eq!(out.len(), rows * dout);
+        let mut done = 0usize;
+        while done < rows {
+            let n = self.block.min(rows - done);
+            let cx = &x[done * din..(done + n) * din];
+            let co = &mut out[done * dout..(done + n) * dout];
+            if n < self.group_threshold {
+                for b in 0..n {
+                    self.forward_into(
+                        &cx[b * din..(b + 1) * din],
+                        &mut co[b * dout..(b + 1) * dout],
+                        s,
+                    );
+                }
+            } else {
+                self.forward_block(cx, n, co, s);
+            }
+            done += n;
+        }
+    }
+
+    /// Batch-major execution of one micro-block of `n` rows.
+    ///
+    /// Per layer: quantize the block's activations into the column-major
+    /// `cols` arena (the SoA gather — `cols[i·n + r]` so each input
+    /// column is contiguous for the grouping sort), hand the columns to
+    /// [`crate::kan::plan::LayerPlan::accumulate_batch`] for the grouped
+    /// integer accumulation, then finish each row's float conversion and
+    /// residual in row order. Nothing here allocates; the arenas were
+    /// sized by [`Self::new_scratch`].
+    fn forward_block(&self, x: &[f32], n: usize, out: &mut [f64], s: &mut EngineScratch) {
+        debug_assert!((1..=self.block).contains(&n));
+        assert!(
+            s.bh.len() >= n * self.plan.max_width
+                && s.order.len() >= n
+                && s.starts.len() > self.max_range,
+            "scratch arenas too small for this engine (use KanEngine::new_scratch)"
+        );
+        // widen the block's inputs once; activations stay f64 end-to-end
+        for (dst, &v) in s.bh.iter_mut().zip(x.iter()) {
+            *dst = v as f64;
+        }
+        let mut width = self.plan.input_dim;
+        let last = self.plan.layers.len() - 1;
+        if let Some(p) = s.profile.as_mut() {
+            p.samples += n as u64;
+        }
+        for (li, layer) in self.plan.layers.iter().enumerate() {
+            debug_assert_eq!(width, layer.din);
+            // SoA gather: quantize row-major activations into
+            // column-major codes
+            for r in 0..n {
+                let row = &s.bh[r * width..][..width];
+                for (i, &h) in row.iter().enumerate() {
+                    s.cols[i * n + r] = layer.spec.quantize(h);
+                }
+            }
+            // profiling reads the already-quantized codes and writes only
+            // its own per-scratch counters (bit-parity enforced in tests);
+            // tile_loads is added below from the actual grouping outcome
+            if let Some(p) = s.profile.as_mut() {
+                let lp = &mut p.layers[li];
+                let g = layer.intervals();
+                for i in 0..width {
+                    for &q in &s.cols[i * n..][..n] {
+                        lp.interval_counts[i * g + (q >> layer.spec.ld) as usize] += 1;
+                    }
+                }
+                if layer.uses_fused() {
+                    lp.fused_hits += (n * width) as u64;
+                } else {
+                    lp.tiles_touched += (n * width) as u64;
+                }
+            }
+            let dout = layer.dout;
+            let loads = layer.accumulate_batch(
+                &s.cols[..width * n],
+                n,
+                &mut s.starts,
+                &mut s.order,
+                &mut s.tmp,
+                &mut s.bacc[..n * dout],
+            );
+            if let Some(p) = s.profile.as_mut() {
+                p.layers[li].tile_loads += loads;
+            }
+            if li == last {
+                for r in 0..n {
+                    layer.finish_batch_row(
+                        &s.cols[..width * n],
+                        n,
+                        r,
+                        &s.bacc[r * dout..][..dout],
+                        &mut out[r * dout..][..dout],
+                    );
+                }
+            } else {
+                for r in 0..n {
+                    layer.finish_batch_row(
+                        &s.cols[..width * n],
+                        n,
+                        r,
+                        &s.bacc[r * dout..][..dout],
+                        &mut s.bh2[r * dout..][..dout],
+                    );
+                }
+                std::mem::swap(&mut s.bh, &mut s.bh2);
+            }
+            width = dout;
+        }
+    }
+
     /// Batch forward over caller-owned arenas: `x` is `[batch, din]`
     /// row-major, `out` is `[batch, dout]`, and `scratches.len()` is the
     /// worker count. With one scratch the batch runs inline on the
     /// calling thread; with more, rows are chunked across scoped worker
-    /// threads, each writing its disjoint output slice — outputs are
-    /// bit-identical for any worker count.
+    /// threads, each writing its disjoint output slice. Each worker's
+    /// run executes batch-major (see [`Self::forward_rows`]); outputs
+    /// are bit-identical for any worker count, any batch size, and any
+    /// block/threshold configuration.
     pub fn forward_batch_with(
         &self,
         x: &[f32],
@@ -324,14 +534,7 @@ impl KanEngine {
         assert!(!scratches.is_empty(), "need at least one scratch");
         let workers = scratches.len().min(batch.max(1));
         if workers <= 1 {
-            let s = &mut scratches[0];
-            for b in 0..batch {
-                self.forward_into(
-                    &x[b * din..(b + 1) * din],
-                    &mut out[b * dout..(b + 1) * dout],
-                    s,
-                );
-            }
+            self.forward_rows(x, batch, out, &mut scratches[0]);
             return;
         }
         let chunk = batch.div_ceil(workers);
@@ -351,15 +554,7 @@ impl KanEngine {
                     std::mem::take(&mut rest_out).split_at_mut(rows * dout);
                 rest_x = rx;
                 rest_out = ro;
-                scope.spawn(move || {
-                    for b in 0..rows {
-                        self.forward_into(
-                            &cx[b * din..(b + 1) * din],
-                            &mut co[b * dout..(b + 1) * dout],
-                            s,
-                        );
-                    }
-                });
+                scope.spawn(move || self.forward_rows(cx, rows, co, s));
             }
         });
     }
@@ -464,7 +659,7 @@ mod tests {
             EngineOptions {
                 mapping: MappingStrategy::Uniform,
                 fused_budget: 0,
-                workers: 1,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -562,6 +757,82 @@ mod tests {
         let p = s.profile().unwrap();
         assert_eq!(p.layers[0].tiles_touched, 10 * 3);
         assert_eq!(p.layers[0].fused_hits, 0);
+        // row-major execution materializes one product per code
+        assert_eq!(p.layers[0].tile_loads, 10 * 3);
+    }
+
+    #[test]
+    fn batch_major_block_is_bit_identical_to_row_major() {
+        let model = toy_model(5, 3, &[4, 5, 3]);
+        let mut lg = crate::data::LoadGen::new(17, 4);
+        let batch = 41usize;
+        let flat: Vec<f32> = lg.batch(batch).into_iter().flatten().collect();
+        // golden: the row-major single-sample path
+        let row_major = KanEngine::compile(
+            &model,
+            EngineOptions { group_threshold: MAX_BLOCK + 1, ..Default::default() },
+        )
+        .unwrap();
+        let mut want = vec![0.0f64; batch * 3];
+        let mut s = row_major.new_scratch();
+        for b in 0..batch {
+            let dst = &mut want[b * 3..(b + 1) * 3];
+            row_major.forward_into(&flat[b * 4..(b + 1) * 4], dst, &mut s);
+        }
+        // every block geometry — fused and tiled — must reproduce it
+        for budget in [0usize, 1 << 22] {
+            for (block, threshold) in [(1, 2), (7, 2), (64, 2), (64, 9), (1024, 2)] {
+                let engine = KanEngine::compile(
+                    &model,
+                    EngineOptions {
+                        fused_budget: budget,
+                        block,
+                        group_threshold: threshold,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let mut out = vec![0.0f64; batch * 3];
+                let mut scratches = vec![engine.new_scratch()];
+                engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+                for (a, b) in out.iter().zip(&want) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "budget={budget} block={block} threshold={threshold}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_major_grouping_amortizes_tile_loads() {
+        // identical rows ⇒ every column of a block collapses to ONE code
+        // group ⇒ one materialized product per (input, layer, block)
+        let model = toy_model(5, 3, &[3, 2]);
+        let engine = KanEngine::compile(
+            &model,
+            EngineOptions { fused_budget: 0, block: 64, ..Default::default() },
+        )
+        .unwrap();
+        let batch = 64usize;
+        let row = [0.25f32, -0.5, 0.75];
+        let flat: Vec<f32> = row.iter().copied().cycle().take(batch * 3).collect();
+        let mut out = vec![0.0f64; batch * 2];
+        let mut scratches = vec![engine.new_scratch_profiled()];
+        engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+        let p = scratches[0].profile().unwrap();
+        assert_eq!(p.samples, 64);
+        assert_eq!(p.layers[0].tiles_touched, 64 * 3);
+        // one block, three input columns, one distinct code each
+        assert_eq!(p.layers[0].tile_loads, 3);
+        // outputs of identical rows are identical
+        for r in 1..batch {
+            for o in 0..2 {
+                assert_eq!(out[r * 2 + o].to_bits(), out[o].to_bits());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,142 @@
+//! Fixed-width integer inner kernels for the batch-major engine.
+//!
+//! These are the only loops that run per `(code, output)` pair in the
+//! hot path, so they are written for the auto-vectorizer: each kernel
+//! walks its operands in fixed strips of [`STRIP`] lanes via
+//! `chunks_exact`, which proves the trip count to LLVM and removes all
+//! bounds checks from the strip body; the tail shorter than one strip is
+//! handled once after the strips. All arithmetic widens to `i64` before
+//! accumulating, so the kernels are exact for every operand the plan can
+//! produce (`|lut| < 2^30`, `|ci'| <= 2^15`, row lengths bounded by the
+//! layer width).
+//!
+//! The kernels are `#[inline]` free functions with no dependency on
+//! [`super::plan::LayerPlan`] internals, so they are unit-testable in
+//! isolation (see the tests at the bottom of this file) and reusable by
+//! both the row-major and batch-major execution paths.
+
+/// Vector strip width (lanes per unrolled chunk). Eight `i64` lanes span
+/// two 256-bit registers — wide enough to keep AVX2/NEON busy, small
+/// enough that the sub-strip tail stays cheap for narrow layers.
+pub const STRIP: usize = 8;
+
+/// `acc[k] += b · row[k]` over an `i16` coefficient row.
+///
+/// This is the tile kernel: `row` is one tap row of a fused coefficient
+/// tile and `b` the (pre-widened) LUT code weighting it.
+#[inline]
+pub fn axpy_i16(acc: &mut [i64], row: &[i16], b: i64) {
+    debug_assert_eq!(acc.len(), row.len());
+    let mut strips = acc.chunks_exact_mut(STRIP);
+    let mut rows = row.chunks_exact(STRIP);
+    for (a, r) in strips.by_ref().zip(rows.by_ref()) {
+        for (av, &rv) in a.iter_mut().zip(r) {
+            *av += b * rv as i64;
+        }
+    }
+    for (av, &rv) in strips.into_remainder().iter_mut().zip(rows.remainder()) {
+        *av += b * rv as i64;
+    }
+}
+
+/// `acc[k] += src[k]` over an `i32` fused row (the per-code fast path).
+#[inline]
+pub fn add_i32(acc: &mut [i64], src: &[i32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    let mut strips = acc.chunks_exact_mut(STRIP);
+    let mut rows = src.chunks_exact(STRIP);
+    for (a, r) in strips.by_ref().zip(rows.by_ref()) {
+        for (av, &rv) in a.iter_mut().zip(r) {
+            *av += rv as i64;
+        }
+    }
+    for (av, &rv) in strips.into_remainder().iter_mut().zip(rows.remainder()) {
+        *av += rv as i64;
+    }
+}
+
+/// `acc[k] += src[k]` over an `i64` staging row (broadcasting one
+/// materialized LUT×tile product into every row of a code group).
+#[inline]
+pub fn add_i64(acc: &mut [i64], src: &[i64]) {
+    debug_assert_eq!(acc.len(), src.len());
+    let mut strips = acc.chunks_exact_mut(STRIP);
+    let mut rows = src.chunks_exact(STRIP);
+    for (a, r) in strips.by_ref().zip(rows.by_ref()) {
+        for (av, &rv) in a.iter_mut().zip(r) {
+            *av += rv;
+        }
+    }
+    for (av, &rv) in strips.into_remainder().iter_mut().zip(rows.remainder()) {
+        *av += rv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random operands without pulling in a PRNG.
+    fn pattern_i64(len: usize, salt: i64) -> Vec<i64> {
+        (0..len).map(|k| (k as i64 * 37 + salt) % 1001 - 500).collect()
+    }
+
+    #[test]
+    fn axpy_i16_matches_scalar_for_all_tail_lengths() {
+        for len in 0..3 * STRIP + 1 {
+            let mut acc = pattern_i64(len, 3);
+            let want: Vec<i64> = acc
+                .iter()
+                .enumerate()
+                .map(|(k, &a)| a + -7 * ((k as i64 * 13 - 91) % 300))
+                .collect();
+            let row: Vec<i16> =
+                (0..len).map(|k| ((k as i64 * 13 - 91) % 300) as i16).collect();
+            axpy_i16(&mut acc, &row, -7);
+            assert_eq!(acc, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn add_i32_matches_scalar_for_all_tail_lengths() {
+        for len in 0..3 * STRIP + 1 {
+            let mut acc = pattern_i64(len, 11);
+            let src: Vec<i32> =
+                (0..len).map(|k| (k as i32 * 29 - 400) % 9999).collect();
+            let want: Vec<i64> = acc
+                .iter()
+                .zip(&src)
+                .map(|(&a, &s)| a + s as i64)
+                .collect();
+            add_i32(&mut acc, &src);
+            assert_eq!(acc, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn add_i64_matches_scalar_for_all_tail_lengths() {
+        for len in 0..3 * STRIP + 1 {
+            let mut acc = pattern_i64(len, 23);
+            let src = pattern_i64(len, 41);
+            let want: Vec<i64> =
+                acc.iter().zip(&src).map(|(&a, &s)| a + s).collect();
+            add_i64(&mut acc, &src);
+            assert_eq!(acc, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn axpy_i16_is_exact_at_operand_extremes() {
+        // |b| can reach 2^30 - 1 (widest LUT the plan accepts) and the
+        // coefficients span the full i16 range; the product must widen
+        // through i64 without saturating or wrapping
+        let b = (1i64 << 30) - 1;
+        let row = [i16::MIN, i16::MAX, -1, 1];
+        let mut acc = [0i64; 4];
+        axpy_i16(&mut acc, &row, b);
+        assert_eq!(acc[0], b * i16::MIN as i64);
+        assert_eq!(acc[1], b * i16::MAX as i64);
+        assert_eq!(acc[2], -b);
+        assert_eq!(acc[3], b);
+    }
+}

@@ -3,13 +3,16 @@
 
 pub mod checkpoint;
 pub mod engine;
+pub mod kernels;
 pub mod layer;
 pub mod model;
 pub mod plan;
 pub mod spline;
+pub mod tune;
 
 pub use checkpoint::{Dataset, KanCheckpoint, Manifest, MlpCheckpoint};
 pub use engine::{EngineOptions, EngineProfile, EngineScratch, KanEngine, LayerProfile};
 pub use layer::QuantKanLayer;
 pub use model::{argmax, QuantKanModel};
 pub use plan::{KanPlan, LayerPlan, PlanOptions};
+pub use tune::{autotune, TuneCandidate, TuneOutcome, TuneReport};

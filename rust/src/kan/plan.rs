@@ -26,6 +26,7 @@
 //!   path (f64, exactly as the reference computes it).
 
 use crate::error::{Error, Result};
+use crate::kan::kernels;
 use crate::kan::layer::QuantKanLayer;
 use crate::kan::model::QuantKanModel;
 use crate::mapping::{build_mapping, MappingStrategy};
@@ -223,6 +224,12 @@ impl LayerPlan {
         &self.prior
     }
 
+    /// Quantizer range `R = G · 2^LD` — the number of distinct input
+    /// codes, i.e. the bucket count of the batch-major counting sort.
+    pub fn range(&self) -> usize {
+        self.deq.len()
+    }
+
     /// Integer-exact forward for pre-quantized codes.
     ///
     /// `acc` is the i64 spline accumulator (len `dout`), `out` receives
@@ -269,6 +276,158 @@ impl LayerPlan {
         // residual path: w_b · ReLU(x̂), float exactly like the reference
         for (i, &q) in codes.iter().enumerate() {
             let x = self.deq[q as usize];
+            if x > 0.0 {
+                let w = &self.wb[i * dout..][..dout];
+                for (o, &wv) in out.iter_mut().zip(w) {
+                    *o += x * wv;
+                }
+            }
+        }
+    }
+
+    /// Batch-major integer spline accumulation over a block of rows.
+    ///
+    /// `codes` holds the block's quantized inputs **column-major**
+    /// (`codes[i · rows + r]` is input `i` of row `r` — the SoA gather
+    /// the engine performs per layer), `acc` the per-row `i64`
+    /// accumulators (`[rows][dout]` row-major, zeroed here). `start`
+    /// (len > `R`), `order` (len ≥ `rows`) and `tmp` (len ≥ `dout`) are
+    /// caller-owned scratch so the steady state allocates nothing.
+    ///
+    /// Per input column the rows are grouped by their full code `q` with
+    /// a counting sort over the `R` buckets; `q` orders by interval
+    /// first (`q = j·2^LD + l`), so walking the buckets in code order
+    /// also walks each `(input, interval)` coefficient tile once, while
+    /// it is hot. For the tiled path each distinct code's `Σ_t lut·ci'`
+    /// product is materialized once — into `acc` directly for single-row
+    /// groups, into `tmp` and then broadcast for larger groups — so
+    /// duplicated codes amortize both the tile loads and the multiplies.
+    /// The fused path needs no grouping: iterating column-major already
+    /// keeps each input's `R × dout` fused slab cache-resident across
+    /// every row of the block.
+    ///
+    /// Because every per-row contribution is an exact integer sum
+    /// accumulated in `i64`, regrouping changes nothing: the returned
+    /// accumulators are bit-identical to `rows` independent
+    /// [`Self::forward_codes`] calls.
+    ///
+    /// Returns the number of LUT×tile products materialized (the
+    /// `tile_loads` profiling counter); `0` on the fused path, which
+    /// loads no tiles.
+    pub fn accumulate_batch(
+        &self,
+        codes: &[u32],
+        rows: usize,
+        start: &mut [u32],
+        order: &mut [u32],
+        tmp: &mut [i64],
+        acc: &mut [i64],
+    ) -> u64 {
+        let dout = self.dout;
+        let taps = self.taps;
+        let range = self.deq.len();
+        debug_assert_eq!(codes.len(), self.din * rows);
+        debug_assert!(start.len() > range);
+        debug_assert!(order.len() >= rows);
+        debug_assert!(tmp.len() >= dout);
+        debug_assert_eq!(acc.len(), rows * dout);
+        acc.fill(0);
+        let mut loads = 0u64;
+        for i in 0..self.din {
+            let col = &codes[i * rows..][..rows];
+            if let Some(fused) = &self.fused {
+                let base = i * range * dout;
+                for (r, &q) in col.iter().enumerate() {
+                    let row = &fused[base + q as usize * dout..][..dout];
+                    kernels::add_i32(&mut acc[r * dout..][..dout], row);
+                }
+                continue;
+            }
+            // counting sort of the block's rows by code: histogram into
+            // start[q+1], prefix-sum, then scatter row ids; afterwards
+            // start[q] is the END of bucket q and buckets are walked
+            // with a running `begin` cursor
+            let start = &mut start[..range + 1];
+            start.fill(0);
+            for &q in col {
+                start[q as usize + 1] += 1;
+            }
+            for k in 1..=range {
+                start[k] += start[k - 1];
+            }
+            for (r, &q) in col.iter().enumerate() {
+                let slot = start[q as usize];
+                order[slot as usize] = r as u32;
+                start[q as usize] = slot + 1;
+            }
+            let mut begin = 0usize;
+            for q in 0..range {
+                let end = start[q] as usize;
+                if end == begin {
+                    continue;
+                }
+                let group = &order[begin..end];
+                begin = end;
+                loads += 1;
+                let j = q >> self.spec.ld;
+                let l = q & (self.levels - 1);
+                let lut = &self.lut_rows[l * taps..][..taps];
+                let tile =
+                    &self.tiles[self.tile_off[i * self.g + j] as usize..][..taps * dout];
+                if let [r] = *group {
+                    // single-row group: accumulate straight into the row
+                    let a = &mut acc[r as usize * dout..][..dout];
+                    for (t, &b) in lut.iter().enumerate() {
+                        if b == 0 {
+                            continue;
+                        }
+                        kernels::axpy_i16(a, &tile[t * dout..][..dout], b as i64);
+                    }
+                } else {
+                    // materialize the LUT×tile product once, broadcast it
+                    let tmp = &mut tmp[..dout];
+                    tmp.fill(0);
+                    for (t, &b) in lut.iter().enumerate() {
+                        if b == 0 {
+                            continue;
+                        }
+                        kernels::axpy_i16(tmp, &tile[t * dout..][..dout], b as i64);
+                    }
+                    for &r in group {
+                        kernels::add_i64(&mut acc[r as usize * dout..][..dout], tmp);
+                    }
+                }
+            }
+        }
+        loads
+    }
+
+    /// Per-row float finish of a batch-major block: the single
+    /// `out_scale` integer→float conversion plus the residual
+    /// `w_b · ReLU(x̂)` path, in exactly the operation order of
+    /// [`Self::forward_codes`] (conversion first, then residual inputs
+    /// ascending) so the result is bit-identical to the row-major path.
+    ///
+    /// `codes` is the same column-major block passed to
+    /// [`Self::accumulate_batch`], `acc` the finished accumulator row
+    /// (`dout`) for row `r`, `out` that row's output slice.
+    pub fn finish_batch_row(
+        &self,
+        codes: &[u32],
+        rows: usize,
+        r: usize,
+        acc: &[i64],
+        out: &mut [f64],
+    ) {
+        let dout = self.dout;
+        debug_assert_eq!(codes.len(), self.din * rows);
+        debug_assert_eq!(acc.len(), dout);
+        debug_assert_eq!(out.len(), dout);
+        for (o, &a) in out.iter_mut().zip(acc.iter()) {
+            *o = a as f64 * self.out_scale;
+        }
+        for i in 0..self.din {
+            let x = self.deq[codes[i * rows + r] as usize];
             if x > 0.0 {
                 let w = &self.wb[i * dout..][..dout];
                 for (o, &wv) in out.iter_mut().zip(w) {

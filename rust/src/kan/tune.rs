@@ -1,0 +1,255 @@
+//! Engine autotuner: sweep the batch-major execution knobs against a
+//! live model and pick the fastest configuration.
+//!
+//! The sweep covers the three knobs that shape the hot loop —
+//! [`EngineOptions::block`] (micro-block rows),
+//! [`EngineOptions::group_threshold`] (grouped vs row-major dispatch,
+//! including a pure row-major baseline candidate), and
+//! [`EngineOptions::fused_budget`] (per-code fused rows vs coefficient
+//! tiles) — benchmarking each compiled candidate on the same batch with
+//! the crate's own harness ([`crate::util::bench`]). Every candidate is
+//! first checked bit-identical to the default engine on the bench batch,
+//! so the tuner can never trade correctness for speed.
+//!
+//! Consumers: `benches/hotpath.rs` embeds the report in
+//! `BENCH_hotpath.json` (CI archives it), and the `kan-edge tune-engine`
+//! subcommand runs the same sweep standalone. How to read the output:
+//! `docs/PERFORMANCE.md`.
+
+use crate::data::LoadGen;
+use crate::error::{Error, Result};
+use crate::kan::engine::{EngineOptions, KanEngine, MAX_BLOCK};
+use crate::kan::model::QuantKanModel;
+use crate::util::bench::{bench, black_box};
+use crate::util::json::{arr, obj, Value};
+
+/// One point of the sweep: the execution knobs under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuneCandidate {
+    /// Micro-block rows ([`EngineOptions::block`]).
+    pub block: usize,
+    /// Grouped-path threshold ([`EngineOptions::group_threshold`]);
+    /// values above [`MAX_BLOCK`] select the row-major baseline.
+    pub group_threshold: usize,
+    /// Fusion budget ([`EngineOptions::fused_budget`]).
+    pub fused_budget: usize,
+}
+
+impl TuneCandidate {
+    /// The engine options this candidate compiles with (defaults
+    /// elsewhere).
+    pub fn options(&self) -> EngineOptions {
+        EngineOptions {
+            block: self.block,
+            group_threshold: self.group_threshold,
+            fused_budget: self.fused_budget,
+            ..EngineOptions::default()
+        }
+    }
+
+    fn to_value(self, ns_per_op: f64) -> Value {
+        obj(vec![
+            ("block", Value::Int(self.block as i64)),
+            ("group_threshold", Value::Int(self.group_threshold as i64)),
+            ("fused_budget", Value::Int(self.fused_budget as i64)),
+            ("row_major", Value::Bool(self.group_threshold > MAX_BLOCK)),
+            ("ns_per_op", Value::Float(ns_per_op)),
+        ])
+    }
+}
+
+/// A measured candidate.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneOutcome {
+    pub candidate: TuneCandidate,
+    /// Median wall time of one batch forward, nanoseconds.
+    pub ns_per_op: f64,
+}
+
+/// The full sweep result.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// Rows per benched batch forward.
+    pub batch: usize,
+    /// Median ns of the scalar reference (`QuantKanModel::forward_batch`).
+    pub reference_ns: f64,
+    /// Median ns of the engine at [`EngineOptions::default`].
+    pub default_engine_ns: f64,
+    /// Every candidate, in sweep order.
+    pub outcomes: Vec<TuneOutcome>,
+    /// The fastest candidate.
+    pub best: TuneOutcome,
+}
+
+impl TuneReport {
+    /// Engine options of the winning candidate.
+    pub fn best_options(&self) -> EngineOptions {
+        self.best.candidate.options()
+    }
+
+    /// Best-candidate speedup over the scalar reference.
+    pub fn speedup_vs_reference(&self) -> f64 {
+        self.reference_ns / self.best.ns_per_op.max(1.0)
+    }
+
+    /// Best-candidate speedup over the default-configured engine.
+    pub fn speedup_vs_default(&self) -> f64 {
+        self.default_engine_ns / self.best.ns_per_op.max(1.0)
+    }
+
+    /// Render the `autotune` section of `BENCH_hotpath.json`
+    /// (`docs/PERFORMANCE.md` documents the schema). `model_source`
+    /// records which checkpoint produced the numbers ("artifact" or
+    /// "synthetic") so trajectories across runs stay apples-to-apples.
+    pub fn to_value(&self, model_source: &str) -> Value {
+        obj(vec![
+            ("model_source", Value::Str(model_source.to_string())),
+            ("batch", Value::Int(self.batch as i64)),
+            ("reference_ns_per_op", Value::Float(self.reference_ns)),
+            ("default_engine_ns_per_op", Value::Float(self.default_engine_ns)),
+            (
+                "candidates",
+                arr(self
+                    .outcomes
+                    .iter()
+                    .map(|o| o.candidate.to_value(o.ns_per_op))
+                    .collect()),
+            ),
+            ("best", self.best.candidate.to_value(self.best.ns_per_op)),
+            ("speedup_vs_reference", Value::Float(self.speedup_vs_reference())),
+            ("speedup_vs_default_engine", Value::Float(self.speedup_vs_default())),
+        ])
+    }
+}
+
+/// The default sweep grid: micro-block sizes around the serving batch,
+/// grouped execution vs the row-major baseline, fused rows vs tiles.
+pub fn default_candidates() -> Vec<TuneCandidate> {
+    let budgets = [EngineOptions::default().fused_budget, 0usize];
+    let mut out = Vec::new();
+    for &fused_budget in &budgets {
+        for &block in &[16usize, 64, 256] {
+            for &group_threshold in &[2usize, MAX_BLOCK + 1] {
+                out.push(TuneCandidate { block, group_threshold, fused_budget });
+            }
+        }
+    }
+    out
+}
+
+/// Sweep `candidates` (or [`default_candidates`] when empty) on `model`,
+/// benchmarking one `batch`-row forward per iteration for ~`target_ms`
+/// per candidate. Inputs come from the deterministic [`LoadGen`] stream,
+/// so two sweeps on one machine see identical work.
+///
+/// Fails if any candidate's outputs are not bit-identical to the
+/// default engine's on the bench batch.
+pub fn autotune(
+    model: &QuantKanModel,
+    batch: usize,
+    target_ms: u64,
+    candidates: &[TuneCandidate],
+) -> Result<TuneReport> {
+    let batch = batch.max(1);
+    let din = model.input_dim();
+    let dout = model.output_dim();
+    let mut lg = LoadGen::new(0x7E57, din);
+    let flat: Vec<f32> = lg.batch(batch).into_iter().flatten().collect();
+
+    let reference_ns = bench("reference", target_ms, || {
+        black_box(model.forward_batch(&flat, batch));
+    })
+    .per_iter_ns();
+
+    let default_engine = KanEngine::compile(model, EngineOptions::default())?;
+    let mut baseline = vec![0.0f64; batch * dout];
+    let mut out = vec![0.0f64; batch * dout];
+    let mut scratches = vec![default_engine.new_scratch()];
+    default_engine.forward_batch_with(&flat, batch, &mut baseline, &mut scratches);
+    let default_engine_ns = bench("engine default", target_ms, || {
+        default_engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+        black_box(&out);
+    })
+    .per_iter_ns();
+
+    let grid = if candidates.is_empty() {
+        default_candidates()
+    } else {
+        candidates.to_vec()
+    };
+    let mut outcomes = Vec::with_capacity(grid.len());
+    for cand in grid {
+        let engine = KanEngine::compile(model, cand.options())?;
+        let mut scratches = vec![engine.new_scratch()];
+        engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+        for (a, b) in out.iter().zip(&baseline) {
+            if a.to_bits() != b.to_bits() {
+                return Err(Error::Config(format!(
+                    "autotune candidate (block {}, threshold {}, budget {}) \
+                     diverged from the default engine",
+                    cand.block, cand.group_threshold, cand.fused_budget
+                )));
+            }
+        }
+        let ns = bench("candidate", target_ms, || {
+            engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+            black_box(&out);
+        })
+        .per_iter_ns();
+        outcomes.push(TuneOutcome { candidate: cand, ns_per_op: ns });
+    }
+    let best = *outcomes
+        .iter()
+        .min_by(|a, b| a.ns_per_op.total_cmp(&b.ns_per_op))
+        .expect("sweep grid is never empty");
+    Ok(TuneReport {
+        batch,
+        reference_ns,
+        default_engine_ns,
+        outcomes,
+        best,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kan::checkpoint::synthetic_kan_checkpoint;
+
+    fn tiny_model() -> QuantKanModel {
+        let ckpt = synthetic_kan_checkpoint("tune", &[3, 4, 2], 5, 3, 0x7E57);
+        QuantKanModel::from_checkpoint(&ckpt)
+    }
+
+    #[test]
+    fn autotune_picks_a_candidate_and_reports() {
+        let model = tiny_model();
+        // 1 ms per candidate keeps the unit test fast; the sweep shape,
+        // parity gate, and report schema are what is under test here
+        let report = autotune(&model, 8, 1, &[]).unwrap();
+        assert_eq!(report.batch, 8);
+        assert_eq!(report.outcomes.len(), default_candidates().len());
+        assert!(report.best.ns_per_op > 0.0);
+        assert!(report.reference_ns > 0.0);
+        let v = report.to_value("synthetic");
+        assert_eq!(
+            v.get("model_source").and_then(|s| s.as_str()),
+            Some("synthetic")
+        );
+        let best = v.get("best").unwrap();
+        assert!(best.get("block").and_then(|b| b.as_i64()).is_some());
+        let cands = v.get("candidates").and_then(|c| c.as_array()).unwrap();
+        assert_eq!(cands.len(), report.outcomes.len());
+        // the winner's options compile
+        assert!(KanEngine::compile(&model, report.best_options()).is_ok());
+    }
+
+    #[test]
+    fn explicit_candidate_list_is_respected() {
+        let model = tiny_model();
+        let only = [TuneCandidate { block: 32, group_threshold: 2, fused_budget: 0 }];
+        let report = autotune(&model, 4, 1, &only).unwrap();
+        assert_eq!(report.outcomes.len(), 1);
+        assert_eq!(report.best.candidate, only[0]);
+    }
+}

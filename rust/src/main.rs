@@ -8,6 +8,7 @@
 //! * `models`    — list / inspect registered model versions
 //! * `publish`   — publish a weights file as a new model version
 //! * `eval`      — accuracy of a model on the artifact test set per backend
+//! * `tune-engine` — autotune the batch-major engine execution knobs
 //! * `neurosim`  — KAN-NeuroSim constraint search (Fig 9 / Fig 13)
 //! * `quantize`  — inspect ASP-KAN-HAQ geometry for a (G, K, n) point
 //! * `inputgen`  — the Fig 11 WL input generator comparison
@@ -86,6 +87,16 @@ COMMANDS:
                                                (B: digital = planned engine,
                                                digital-ref = scalar golden
                                                reference, acim, pjrt)
+  tune-engine [--model NAME] [--batch B] [--target-ms MS] [--json FILE]
+                                               sweep the batch-major engine
+                                               knobs (block, grouping
+                                               threshold, fusion budget) on
+                                               the named model (synthetic
+                                               fallback when artifacts are
+                                               missing) and merge the report
+                                               into FILE (default
+                                               BENCH_hotpath.json); see
+                                               docs/PERFORMANCE.md
   neurosim  --budget minimal|moderate|none     Fig 9/13 constraint search
   quantize  --g G --k K --n-bits N             ASP-KAN-HAQ geometry
   inputgen  --bits N                           Fig 11 generator comparison
@@ -200,6 +211,7 @@ fn run(args: &Args) -> Result<()> {
         "metrics" => metrics_cmd(&cfg, args),
         "publish" => publish_cmd(&cfg, args),
         "bench-net" => bench_net_cmd(&cfg, args),
+        "tune-engine" => tune_engine_cmd(&cfg, args),
         "eval" => eval(
             &cfg,
             &args.get("model", "kan1"),
@@ -1433,6 +1445,26 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
                 ])
             })
             .collect();
+        // the served hot-path phase always runs the synthetic checkpoint
+        // (spawned servers get a fresh artifacts dir); record it so the
+        // numbers are comparable across runs, mirroring BENCH_hotpath.json
+        let hotpath_section = obj(vec![
+            (
+                "checkpoint",
+                obj(vec![
+                    ("source", Value::Str("synthetic".to_string())),
+                    ("model", Value::Str("bench".to_string())),
+                    (
+                        "dims",
+                        arr(vec![Value::Int(17), Value::Int(8), Value::Int(14)]),
+                    ),
+                    ("g", Value::Int(5)),
+                    ("k", Value::Int(3)),
+                    ("seed", Value::Str("0xB16".to_string())),
+                ]),
+            ),
+            ("modes", arr(hotpath_values)),
+        ]);
         let tracing_values: Vec<Value> = tracing
             .iter()
             .map(|(every, p50, p99)| {
@@ -1445,7 +1477,7 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
             .collect();
         let report = obj(vec![
             ("phases", arr(phase_values)),
-            ("hotpath", arr(hotpath_values)),
+            ("hotpath", hotpath_section),
             ("shadow", shadow_report),
             ("tracing", arr(tracing_values)),
             ("cluster", cluster_report),
@@ -1466,6 +1498,76 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
         std::fs::write(path, report.to_string())?;
         println!("\nwrote JSON report to {path}");
     }
+    Ok(())
+}
+
+/// `tune-engine`: run the batch-major engine autotune sweep standalone
+/// and merge its report into the hot-path bench JSON, so a tuned config
+/// measured on the target device lands in the same artifact CI archives
+/// (`docs/PERFORMANCE.md`).
+fn tune_engine_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
+    use kan_edge::util::json::{obj, Value};
+    let dir = Path::new(&cfg.artifacts.dir);
+    let model_name = args.get("model", "kan2");
+    let batch = args.get_usize("batch", 64).max(1);
+    let target_ms = args.get_usize("target-ms", 60).max(1) as u64;
+    let json_path = args.get("json", "BENCH_hotpath.json");
+
+    // artifact weights when present, the deterministic synthetic
+    // fallback otherwise — same policy as benches/hotpath.rs, and the
+    // source is recorded in the report for apples-to-apples trajectories
+    let loaded = Manifest::load(dir).ok().and_then(|m| {
+        m.models
+            .get(&model_name)
+            .and_then(|e| QuantKanModel::load(dir.join(&e.weights)).ok())
+    });
+    let (model, source) = match loaded {
+        Some(m) => (m, "artifact"),
+        None => {
+            println!("(artifacts missing; tuning a synthetic {model_name}-shaped checkpoint)");
+            let ckpt = kan_edge::kan::checkpoint::synthetic_kan_checkpoint(
+                &model_name,
+                &[17, 8, 14],
+                5,
+                3,
+                0xCAFE,
+            );
+            (QuantKanModel::from_checkpoint(&ckpt), "synthetic")
+        }
+    };
+
+    let report = kan_edge::kan::autotune(&model, batch, target_ms, &[])?;
+    println!(
+        "{:<8} {:<12} {:>12} {:>12}",
+        "block", "threshold", "budget", "ns/op"
+    );
+    for o in &report.outcomes {
+        let c = o.candidate;
+        println!(
+            "{:<8} {:<12} {:>12} {:>12.0}",
+            c.block, c.group_threshold, c.fused_budget, o.ns_per_op
+        );
+    }
+    println!(
+        "best: block {} threshold {} budget {} — {:.2}x vs reference, {:.2}x vs default engine",
+        report.best.candidate.block,
+        report.best.candidate.group_threshold,
+        report.best.candidate.fused_budget,
+        report.speedup_vs_reference(),
+        report.speedup_vs_default()
+    );
+
+    // merge into the existing bench report when one is present, so the
+    // autotune section rides next to the hot-path numbers
+    let mut root = std::fs::read_to_string(&json_path)
+        .ok()
+        .and_then(|t| Value::parse(&t).ok())
+        .unwrap_or_else(|| obj(vec![("schema", Value::Int(2))]));
+    if let Value::Object(map) = &mut root {
+        map.insert("autotune".to_string(), report.to_value(source));
+    }
+    std::fs::write(&json_path, root.to_string())?;
+    println!("wrote autotune section to {json_path}");
     Ok(())
 }
 

@@ -97,8 +97,14 @@ fn execution_variants_are_bit_identical() {
         EngineOptions {
             mapping: MappingStrategy::WorstCase,
             fused_budget: 0,
-            workers: 1,
+            ..Default::default()
         },
+        // batch-major block geometries (and the row-major fallback via a
+        // threshold no block reaches) must not change a single bit
+        EngineOptions { block: 1, ..Default::default() },
+        EngineOptions { block: 7, group_threshold: 3, ..Default::default() },
+        EngineOptions { block: 256, fused_budget: 0, ..Default::default() },
+        EngineOptions { group_threshold: usize::MAX, ..Default::default() },
     ];
     let mut lg = LoadGen::new(17, 9);
     let rows = lg.batch(40);
@@ -132,6 +138,129 @@ fn batch_outputs_bit_identical_for_any_worker_count() {
             assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
         }
     }
+}
+
+#[test]
+fn batch_major_parity_across_batch_sizes_and_worker_counts() {
+    // the issue-mandated grid: batch sizes around the block boundary
+    // (1, 2, 63, 64, 65) plus a multi-block odd size (257), crossed with
+    // worker counts; every cell must be bit-identical to the row-major
+    // single-sample path AND within reference tolerance
+    let m = model(&[17, 8, 14], 5, 3, 0xBA7C);
+    for budget in [0usize, 1 << 22] {
+        let engine = KanEngine::compile(
+            &m,
+            EngineOptions { fused_budget: budget, ..Default::default() },
+        )
+        .unwrap();
+        let mut lg = LoadGen::new(31, 17);
+        for &batch in &[1usize, 2, 63, 64, 65, 257] {
+            let flat: Vec<f32> = lg.batch(batch).into_iter().flatten().collect();
+            // golden: row-major forwards through one scratch
+            let mut want = vec![0.0f64; batch * 14];
+            let mut s = engine.new_scratch();
+            for b in 0..batch {
+                engine.forward_into(
+                    &flat[b * 17..(b + 1) * 17],
+                    &mut want[b * 14..(b + 1) * 14],
+                    &mut s,
+                );
+            }
+            for r in 0..batch {
+                let reference = m.forward(&flat[r * 17..(r + 1) * 17]);
+                assert_close(
+                    &want[r * 14..(r + 1) * 14],
+                    &reference,
+                    &format!("batch={batch} row={r}"),
+                );
+            }
+            for &workers in &[1usize, 2, 3, 8] {
+                let mut scratches: Vec<EngineScratch> =
+                    (0..workers).map(|_| engine.new_scratch()).collect();
+                let mut out = vec![0.0f64; batch * 14];
+                engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+                for (a, b) in out.iter().zip(&want) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "budget={budget} batch={batch} workers={workers}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_rows_straddling_interval_boundaries() {
+    // rows pinned exactly on and around the knot-interval boundaries:
+    // adjacent codes fall in different intervals, so the SoA grouping
+    // walks many single-row groups and interval transitions in one block
+    let m = model(&[2, 3], 5, 3, 0xB0DA);
+    let spec = m.layers[0].spec;
+    let levels = spec.levels_per_interval();
+    let mut rows: Vec<[f32; 2]> = Vec::new();
+    for j in 0..spec.g {
+        // first and last code of interval j, paired against the interval
+        // boundary seen from the second input
+        let q_lo = j * levels;
+        let q_hi = q_lo + levels - 1;
+        rows.push([spec.dequantize(q_lo) as f32, spec.dequantize(q_hi) as f32]);
+        rows.push([spec.dequantize(q_hi) as f32, spec.dequantize(q_lo) as f32]);
+    }
+    let batch = rows.len();
+    let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+    for budget in [0usize, 1 << 22] {
+        // a small block so the boundary rows also straddle block cuts
+        let engine = KanEngine::compile(
+            &m,
+            EngineOptions { fused_budget: budget, block: 3, ..Default::default() },
+        )
+        .unwrap();
+        let mut out = vec![0.0f64; batch * 3];
+        engine.forward_batch_with(&flat, batch, &mut out, &mut [engine.new_scratch()]);
+        for (r, row) in rows.iter().enumerate() {
+            let want = m.forward(row);
+            assert_close(&out[r * 3..(r + 1) * 3], &want, &format!("boundary row {r}"));
+            let single = engine.forward(row);
+            for (a, b) in out[r * 3..(r + 1) * 3].iter().zip(&single) {
+                assert_eq!(a.to_bits(), b.to_bits(), "boundary row {r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_batch_where_every_row_maps_to_one_tile() {
+    // all rows identical ⇒ every input column of every block collapses
+    // to a single (input, interval) code group — the maximal-amortization
+    // corner of the grouping path
+    let m = model(&[3, 2], 5, 3, 0xDE6E);
+    let engine = KanEngine::compile(
+        &m,
+        EngineOptions { fused_budget: 0, block: 64, ..Default::default() },
+    )
+    .unwrap();
+    let batch = 300usize;
+    let row = [0.2f32, -0.4, 0.9];
+    let flat: Vec<f32> = row.iter().copied().cycle().take(batch * 3).collect();
+    let mut out = vec![0.0f64; batch * 2];
+    let mut scratches = vec![engine.new_scratch_profiled()];
+    engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+    let want = m.forward(&row);
+    let single = engine.forward(&row);
+    for r in 0..batch {
+        assert_close(&out[r * 2..(r + 1) * 2], &want, &format!("row {r}"));
+        for (a, b) in out[r * 2..(r + 1) * 2].iter().zip(&single) {
+            assert_eq!(a.to_bits(), b.to_bits(), "row {r}");
+        }
+    }
+    // 300 rows cut into blocks of 64 ⇒ 5 blocks; with one distinct code
+    // per column, layer 0 materializes exactly blocks × din products
+    let p = scratches[0].profile().unwrap();
+    assert_eq!(p.samples, batch as u64);
+    assert_eq!(p.layers[0].tiles_touched, (batch * 3) as u64);
+    assert_eq!(p.layers[0].tile_loads, 5 * 3);
 }
 
 #[test]

@@ -68,3 +68,50 @@ fn steady_state_forward_allocates_nothing() {
         rows.len()
     );
 }
+
+#[test]
+fn steady_state_batch_major_forward_allocates_nothing() {
+    // the batch-major path (SoA gather + counting-sort grouping) must
+    // run entirely out of the preallocated scratch arenas, across block
+    // boundaries and ragged tails, on both the fused and tiled plans
+    let ckpt = kan_edge::kan::checkpoint::synthetic_kan_checkpoint(
+        "alloc-batch",
+        &[17, 8, 14],
+        5,
+        3,
+        0xA110D,
+    );
+    let model = kan_edge::kan::QuantKanModel::from_checkpoint(&ckpt);
+    let mut lg = kan_edge::data::LoadGen::new(4, 17);
+    let batch = 100usize; // block of 64 + ragged tail of 36
+    let flat: Vec<f32> =
+        lg.batch(batch).into_iter().flatten().collect();
+    for budget in [0usize, 1 << 22] {
+        let engine = kan_edge::kan::KanEngine::compile(
+            &model,
+            kan_edge::kan::EngineOptions {
+                fused_budget: budget,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // one scratch: the batch runs inline (scoped worker threads are
+        // an explicit opt-in and allocate their stacks by design)
+        let mut scratches = vec![engine.new_scratch()];
+        let mut out = vec![0.0f64; batch * engine.output_dim()];
+
+        // prime once, then the steady state must stay off the allocator
+        engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..16 {
+            engine.forward_batch_with(&flat, batch, &mut out, &mut scratches);
+        }
+        let after = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "batch-major steady state (budget {budget}) hit the allocator {} times",
+            after - before,
+        );
+    }
+}

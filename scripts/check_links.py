@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Dependency-free markdown link checker for the docs tree.
+
+Scans docs/*.md plus the root README.md and ROADMAP.md for inline
+markdown links `[text](target)` and verifies that every *relative*
+target resolves to an existing file (fragments are stripped; external
+http(s)/mailto links are skipped — CI must not depend on the network).
+
+Exit status: 0 when every link resolves, 1 otherwise (one line per
+broken link). Run from the repository root:
+
+    python3 scripts/check_links.py
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# inline links only; reference-style links are not used in this repo.
+# [text](target) with no whitespace/paren inside the target.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def collect_sources(root: Path):
+    sources = sorted((root / "docs").glob("*.md"))
+    for name in ("README.md", "ROADMAP.md"):
+        p = root / name
+        if p.exists():
+            sources.append(p)
+    return sources
+
+
+def check_file(path: Path, root: Path):
+    """Yield (line_no, target, resolved) for each broken link in path."""
+    text = path.read_text(encoding="utf-8")
+    in_fence = False
+    for line_no, line in enumerate(text.splitlines(), start=1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            # strip fragment; a bare '#section' always refers to this file
+            file_part = target.split("#", 1)[0]
+            if not file_part:
+                continue
+            resolved = (path.parent / file_part).resolve()
+            try:
+                resolved.relative_to(root.resolve())
+            except ValueError:
+                yield line_no, target, "escapes the repository"
+                continue
+            if not resolved.exists():
+                yield line_no, target, "missing"
+
+
+def main():
+    root = Path(__file__).resolve().parent.parent
+    sources = collect_sources(root)
+    if not sources:
+        print("check_links: no markdown sources found", file=sys.stderr)
+        return 1
+    broken = 0
+    for src in sources:
+        for line_no, target, why in check_file(src, root):
+            rel = src.relative_to(root)
+            print(f"{rel}:{line_no}: broken link '{target}' ({why})")
+            broken += 1
+    checked = ", ".join(str(s.relative_to(root)) for s in sources)
+    if broken:
+        print(f"check_links: {broken} broken link(s) across: {checked}")
+        return 1
+    print(f"check_links: OK ({len(sources)} files: {checked})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
