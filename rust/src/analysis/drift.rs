@@ -1,0 +1,407 @@
+//! Doc-drift checks: facts extracted from the source tree are compared
+//! against what the docs claim, in both directions where the doc side
+//! is authoritative-by-table.
+//!
+//! * wire error codes — `ErrorCode::as_str` in `coordinator/protocol.rs`
+//!   vs the "Error codes" table in `docs/PROTOCOL.md`;
+//! * Prometheus series — every `kan_edge_*` series named in docs must be
+//!   segmentable from the string-literal vocabulary of the source tree
+//!   (the exposition builds names by joining literal segments);
+//! * config keys — every backticked `section.key` path in the docs must
+//!   be parsed by `AppConfig::apply` in `config/mod.rs`.
+
+use super::lexer::TokKind;
+use super::report::Report;
+use super::ScannedFile;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// Contents of a string literal token (`"x"`, `b"x"`, `r#"x"#` → `x`).
+fn str_content(raw: &str) -> Option<&str> {
+    let open = raw.find('"')?;
+    let close = raw.rfind('"')?;
+    if close <= open {
+        return None;
+    }
+    Some(&raw[open + 1..close])
+}
+
+fn is_snake(s: &str) -> bool {
+    let mut ch = s.chars();
+    match ch.next() {
+        Some(c) if c.is_ascii_lowercase() => {}
+        _ => return false,
+    }
+    ch.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Run all drift checks. `root` is the repo root; `files` the scanned
+/// source set (doc files are read directly — they are not Rust).
+pub fn drift_checks(root: &Path, files: &[ScannedFile], report: &mut Report) {
+    error_code_drift(root, files, report);
+    prom_series_drift(root, files, report);
+    config_key_drift(root, files, report);
+}
+
+fn read_doc(root: &Path, rel: &str) -> Option<String> {
+    std::fs::read_to_string(root.join(rel)).ok()
+}
+
+fn find_file<'a>(files: &'a [ScannedFile], rel_src: &str) -> Option<&'a ScannedFile> {
+    files.iter().find(|f| f.rel_src == rel_src)
+}
+
+// ---- wire error codes ---------------------------------------------------
+
+fn error_code_drift(root: &Path, files: &[ScannedFile], report: &mut Report) {
+    let Some(proto) = find_file(files, "coordinator/protocol.rs") else { return };
+    let mut code_codes = BTreeSet::new();
+    for f in &proto.fns {
+        if f.name != "as_str" {
+            continue;
+        }
+        for i in f.body_open..f.body_close {
+            if proto.lx.kind(i) == Some(TokKind::Str) {
+                if let Some(s) = str_content(proto.lx.s(i)) {
+                    code_codes.insert(s.to_string());
+                }
+            }
+        }
+    }
+    let Some(doc) = read_doc(root, "docs/PROTOCOL.md") else {
+        report.report(
+            "doc-drift",
+            "docs/PROTOCOL.md",
+            0,
+            "docs/PROTOCOL.md missing (error-code table unverifiable)".into(),
+        );
+        return;
+    };
+    // anchor: a line mentioning "error codes", then the next table rows
+    let mut doc_codes = BTreeSet::new();
+    let mut in_section = false;
+    for line in doc.lines() {
+        if !in_section {
+            if line.to_ascii_lowercase().contains("error codes") {
+                in_section = true;
+            }
+            continue;
+        }
+        let t = line.trim_start();
+        if t.is_empty() {
+            continue;
+        }
+        if !t.starts_with('|') {
+            if !doc_codes.is_empty() {
+                break;
+            }
+            // prose between the anchor and the table: keep scanning
+            in_section = false;
+            continue;
+        }
+        if let Some(code) = parse_code_row(t) {
+            doc_codes.insert(code);
+        }
+    }
+    for c in code_codes.difference(&doc_codes) {
+        report.report(
+            "doc-drift",
+            "docs/PROTOCOL.md",
+            0,
+            format!("wire error code `{c}` missing from docs/PROTOCOL.md"),
+        );
+    }
+    for c in doc_codes.difference(&code_codes) {
+        report.report(
+            "doc-drift",
+            "docs/PROTOCOL.md",
+            0,
+            format!("documented error code `{c}` not produced by protocol.rs"),
+        );
+    }
+}
+
+/// `| `code` | ... |` → `code`.
+fn parse_code_row(t: &str) -> Option<String> {
+    let t = t.strip_prefix('|')?.trim_start();
+    let t = t.strip_prefix('`')?;
+    let end = t.find('`')?;
+    let code = &t[..end];
+    (!code.is_empty() && code.chars().all(|c| c.is_ascii_lowercase() || c == '_'))
+        .then(|| code.to_string())
+}
+
+// ---- Prometheus series --------------------------------------------------
+
+fn prom_series_drift(root: &Path, files: &[ScannedFile], report: &mut Report) {
+    // vocabulary: every snake_case string literal in the tree, plus the
+    // segment roots the exposition synthesizes structurally
+    let mut vocab = BTreeSet::new();
+    for file in files {
+        for i in 0..file.lx.toks.len() {
+            if file.lx.kind(i) == Some(TokKind::Str) {
+                if let Some(s) = str_content(file.lx.s(i)) {
+                    if is_snake(s) {
+                        vocab.insert(s.to_string());
+                    }
+                }
+            }
+        }
+    }
+    for s in ["kan_edge", "model", "node"] {
+        vocab.insert(s.to_string());
+    }
+
+    let docs_dir = root.join("docs");
+    let Ok(entries) = std::fs::read_dir(&docs_dir) else { return };
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".md"))
+        .collect();
+    names.sort();
+    for name in names {
+        let Some(text) = read_doc(root, &format!("docs/{name}")) else { continue };
+        for (idx, line) in text.lines().enumerate() {
+            for series in extract_series(line) {
+                if !segmentable(&series, &vocab) {
+                    report.report(
+                        "doc-drift",
+                        &format!("docs/{name}"),
+                        idx as u32 + 1,
+                        format!(
+                            "documented series `{series}` cannot be produced \
+                             by the metrics tree"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `kan_edge_[a-z0-9_]+` occurrences in one doc line, skipping wildcard
+/// families written as `kan_edge_foo_*`.
+fn extract_series(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let b = line.as_bytes();
+    let mut i = 0usize;
+    while let Some(pos) = line[i..].find("kan_edge_") {
+        let start = i + pos;
+        // must not be mid-identifier
+        if start > 0 && (b[start - 1].is_ascii_alphanumeric() || b[start - 1] == b'_') {
+            i = start + 1;
+            continue;
+        }
+        let mut end = start;
+        while end < b.len()
+            && (b[end].is_ascii_lowercase() || b[end].is_ascii_digit() || b[end] == b'_')
+        {
+            end += 1;
+        }
+        if end < b.len() && b[end] == b'*' {
+            i = end + 1;
+            continue;
+        }
+        out.push(line[start..end].to_string());
+        i = end;
+    }
+    out
+}
+
+/// Can `name` be written as vocabulary words joined by single
+/// underscores? Dynamic program over byte positions.
+fn segmentable(name: &str, vocab: &BTreeSet<String>) -> bool {
+    let n = name.len();
+    let mut ok = vec![false; n + 1];
+    ok[0] = true;
+    for i in 0..n {
+        if !ok[i] {
+            continue;
+        }
+        let start = if name.as_bytes()[i] == b'_' { i + 1 } else { i };
+        for w in vocab {
+            if name[start..].starts_with(w.as_str()) {
+                ok[start + w.len()] = true;
+            }
+        }
+    }
+    ok[n]
+}
+
+// ---- config keys --------------------------------------------------------
+
+fn config_key_drift(root: &Path, files: &[ScannedFile], report: &mut Report) {
+    let Some(cfg) = find_file(files, "config/mod.rs") else { return };
+    let (sections, keys) = parsed_config_keys(cfg);
+    if sections.is_empty() {
+        return;
+    }
+
+    let mut doc_rels: Vec<String> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(root.join("docs")) {
+        for e in entries.filter_map(|e| e.ok()) {
+            let n = e.file_name().to_string_lossy().into_owned();
+            if n.ends_with(".md") {
+                doc_rels.push(format!("docs/{n}"));
+            }
+        }
+    }
+    doc_rels.sort();
+    doc_rels.push("README.md".into());
+    for rel in doc_rels {
+        let Some(text) = read_doc(root, &rel) else { continue };
+        for (idx, line) in text.lines().enumerate() {
+            for path in extract_dotted_keys(line) {
+                let first = path.split('.').next().unwrap_or("");
+                if sections.contains(first) && !keys.contains(&path) {
+                    report.report(
+                        "doc-drift",
+                        &rel,
+                        idx as u32 + 1,
+                        format!("documented config key `{path}` not parsed by config/mod.rs"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Walk `AppConfig::apply`: `get("name")` followed (eventually) by `{`
+/// opens a section scope; `get("name")` that hits `;`/`)` first is a
+/// leaf; `get_*(section, "key", ...)` is a leaf under the current
+/// scope. Scopes close with their braces.
+fn parsed_config_keys(cfg: &ScannedFile) -> (BTreeSet<String>, BTreeSet<String>) {
+    let mut sections = BTreeSet::new();
+    let mut keys = BTreeSet::new();
+    let lx = &cfg.lx;
+    for f in &cfg.fns {
+        if f.name != "apply" {
+            continue;
+        }
+        let mut stack: Vec<(String, i32)> = Vec::new();
+        let mut depth = 0i32;
+        let mut i = f.body_open;
+        while i < f.body_close {
+            let t = lx.s(i);
+            if t == "{" {
+                depth += 1;
+            } else if t == "}" {
+                depth -= 1;
+                while stack.last().is_some_and(|s| s.1 > depth) {
+                    stack.pop();
+                }
+            }
+            if lx.is_id(i, "get")
+                && lx.is_punct(i + 1, "(")
+                && lx.kind(i + 2) == Some(TokKind::Str)
+                && lx.is_punct(i + 3, ")")
+            {
+                if let Some(name) = str_content(lx.s(i + 2)) {
+                    let mut j = i + 4;
+                    let mut is_section = false;
+                    while j < f.body_close {
+                        let tt = lx.s(j);
+                        if tt == "{" {
+                            is_section = true;
+                            break;
+                        }
+                        if tt == ";" || tt == ")" {
+                            break;
+                        }
+                        j += 1;
+                    }
+                    if is_section {
+                        sections.insert(name.to_string());
+                        stack.push((name.to_string(), depth + 1));
+                        keys.insert(join_path(&stack, None));
+                    } else {
+                        keys.insert(join_path(&stack, Some(name)));
+                    }
+                }
+            } else if lx.kind(i) == Some(TokKind::Id)
+                && lx.s(i).starts_with("get_")
+                && lx.is_punct(i + 1, "(")
+            {
+                // first string argument is the key name
+                let mut j = i + 2;
+                while j < f.body_close {
+                    if lx.kind(j) == Some(TokKind::Str) {
+                        if let Some(name) = str_content(lx.s(j)) {
+                            keys.insert(join_path(&stack, Some(name)));
+                        }
+                        break;
+                    }
+                    if lx.is_punct(j, ")") {
+                        break;
+                    }
+                    j += 1;
+                }
+            }
+            i += 1;
+        }
+    }
+    (sections, keys)
+}
+
+fn join_path(stack: &[(String, i32)], leaf: Option<&str>) -> String {
+    let mut parts: Vec<&str> = stack.iter().map(|s| s.0.as_str()).collect();
+    if let Some(l) = leaf {
+        parts.push(l);
+    }
+    parts.join(".")
+}
+
+/// Backticked dotted paths `a.b` / `a.b.c` on one doc line.
+fn extract_dotted_keys(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(open) = rest.find('`') {
+        let tail = &rest[open + 1..];
+        let Some(close) = tail.find('`') else { break };
+        let inner = &tail[..close];
+        if inner.contains('.')
+            && !inner.is_empty()
+            && inner
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c == '_' || c == '.')
+            && inner.split('.').all(|seg| !seg.is_empty())
+            && inner.split('.').count() >= 2
+        {
+            out.push(inner.to_string());
+        }
+        rest = &tail[close + 1..];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_segmentation() {
+        let vocab: BTreeSet<String> =
+            ["kan_edge", "requests", "model"].iter().map(|s| s.to_string()).collect();
+        assert!(segmentable("kan_edge_model_requests", &vocab));
+        assert!(!segmentable("kan_edge_lost_series", &vocab));
+    }
+
+    #[test]
+    fn series_extraction_skips_wildcards() {
+        let s = extract_series("see `kan_edge_node_up` and `kan_edge_cluster_*`");
+        assert_eq!(s, ["kan_edge_node_up"]);
+    }
+
+    #[test]
+    fn dotted_key_extraction() {
+        let ks = extract_dotted_keys("set `server.max_batch` (not `x` or `a..b`)");
+        assert_eq!(ks, ["server.max_batch"]);
+    }
+
+    #[test]
+    fn code_row_parse() {
+        assert_eq!(parse_code_row("| `bad_request` | malformed |"), Some("bad_request".into()));
+        assert_eq!(parse_code_row("| code | meaning |"), None);
+    }
+}

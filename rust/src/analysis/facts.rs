@@ -1,0 +1,509 @@
+//! Per-function fact extraction over the token stream: function body
+//! spans (with `#[cfg(test)]` / `#[test]` code excluded from policed
+//! rules), lock-guard acquisition sites, the token extent each guard is
+//! held over, direct blocking calls, and plain call sites for the
+//! inter-procedural fixpoint in the lock rule.
+
+use super::lexer::{Lexed, TokKind};
+use std::collections::HashMap;
+
+/// One `fn` item: token-index span of its body plus metadata.
+#[derive(Clone, Debug)]
+pub struct FnInfo {
+    pub name: String,
+    pub body_open: usize,
+    pub body_close: usize,
+    pub line: u32,
+    /// Inside a `#[cfg(test)]` module or under `#[test]` — exempt from
+    /// every policed rule (tests are where unwrap is the right idiom).
+    pub test: bool,
+}
+
+/// Guard acquisition kind: which primitive the method maps to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AcqKind {
+    Lock,
+    Read,
+    Write,
+}
+
+/// One guard acquisition: `recv.lock()` / `recv.lock_recover()` /
+/// `recv.read()` / … at token `idx`, with the receiver's last field
+/// name and the token extent the guard is live over.
+#[derive(Clone, Debug)]
+pub struct Acquisition {
+    pub idx: usize,
+    pub kind: AcqKind,
+    pub name: String,
+    pub line: u32,
+    pub ext_start: usize,
+    pub ext_end: usize,
+}
+
+/// Extracted facts for one function body.
+pub struct FnFacts {
+    pub acqs: Vec<Acquisition>,
+    /// Direct blocking calls: (token idx, line, method name).
+    pub blocks: Vec<(usize, u32, String)>,
+    /// Plain call sites `name(`: (name, token idx) — fed to the
+    /// inter-procedural fixpoint.
+    pub calls: Vec<(String, usize)>,
+}
+
+/// Calls that can park the thread indefinitely while a guard is held.
+/// Channel/socket waits are unbounded (the peer may never act), which
+/// is what makes holding a lock across them a serving-path hazard;
+/// bounded local file I/O is deliberately NOT here (atomic
+/// publish-under-lock is a legitimate registry idiom). `Condvar::wait`
+/// is also absent: it releases the lock while parked.
+const BLOCKING: &[&str] = &[
+    "send",
+    "recv",
+    "recv_timeout",
+    "join",
+    "accept",
+    "connect",
+    "read_exact",
+    "write_all",
+    "flush",
+    "read_to_end",
+    "sleep",
+];
+
+/// Receivers whose `.lock()` is std stream locking, not a Mutex.
+const IO_RECEIVERS: &[&str] = &["stderr", "stdout", "stdin"];
+
+/// Methods the lock rule treats as guard acquisitions (empty-args only:
+/// `Read::read`/`Write::write` take buffer arguments, RwLock ops none).
+fn acq_kind(meth: &str) -> Option<AcqKind> {
+    match meth {
+        "lock" | "lock_recover" => Some(AcqKind::Lock),
+        "read" | "read_recover" => Some(AcqKind::Read),
+        "write" | "write_recover" => Some(AcqKind::Write),
+        _ => None,
+    }
+}
+
+/// Matching brace indices (both directions) over the token stream.
+pub fn match_braces(lx: &Lexed) -> HashMap<usize, usize> {
+    let mut map = HashMap::new();
+    let mut stack = Vec::new();
+    for idx in 0..lx.toks.len() {
+        if lx.is_punct(idx, "{") {
+            stack.push(idx);
+        } else if lx.is_punct(idx, "}") {
+            if let Some(open) = stack.pop() {
+                map.insert(open, idx);
+                map.insert(idx, open);
+            }
+        }
+    }
+    map
+}
+
+/// Token-index spans covered by `#[cfg(test)]` modules or `#[test]`
+/// functions: the attribute token through the close of the following
+/// braced item.
+fn test_spans(lx: &Lexed, braces: &HashMap<usize, usize>) -> Vec<(usize, usize)> {
+    let n = lx.toks.len();
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if lx.is_punct(i, "#") && lx.is_punct(i + 1, "[") {
+            // collect the attribute text up to the matching ]
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut attr = String::new();
+            while j < n && depth > 0 {
+                let t = lx.s(j);
+                if t == "[" {
+                    depth += 1;
+                } else if t == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                attr.push_str(t);
+                j += 1;
+            }
+            if attr == "cfg(test)" || attr == "test" {
+                // the next braced item closes the span
+                let mut p = j + 1;
+                while p < n && !(lx.is_punct(p, "{") || lx.is_punct(p, ";")) {
+                    p += 1;
+                }
+                if p < n && lx.is_punct(p, "{") {
+                    if let Some(&close) = braces.get(&p) {
+                        spans.push((i, close));
+                    }
+                }
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Extract every `fn` item with a body from the token stream.
+pub fn extract_functions(lx: &Lexed, braces: &HashMap<usize, usize>) -> Vec<FnInfo> {
+    let n = lx.toks.len();
+    let tests = test_spans(lx, braces);
+    let in_test = |idx: usize| tests.iter().any(|&(a, b)| a <= idx && idx <= b);
+    let mut fns = Vec::new();
+    for idx in 0..n {
+        if !lx.is_id(idx, "fn") || lx.kind(idx + 1) != Some(TokKind::Id) {
+            continue;
+        }
+        let name = lx.s(idx + 1).to_string();
+        // scan past the signature: the body `{` at paren depth 0, or a
+        // trait-declaration `;`
+        let mut p = idx + 2;
+        let mut pdepth = 0i32;
+        let mut body = None;
+        while p < n {
+            let t = lx.s(p);
+            match t {
+                "(" => pdepth += 1,
+                ")" => pdepth -= 1,
+                "{" if pdepth == 0 => {
+                    body = Some(p);
+                    break;
+                }
+                ";" if pdepth == 0 => break,
+                _ => {}
+            }
+            p += 1;
+        }
+        let Some(body_open) = body else { continue };
+        let Some(&body_close) = braces.get(&body_open) else { continue };
+        fns.push(FnInfo {
+            name,
+            body_open,
+            body_close,
+            line: lx.line(idx),
+            test: in_test(idx),
+        });
+    }
+    fns
+}
+
+/// Last field-ish identifier of the receiver chain ending at the `.`
+/// before an acquisition method, skipping call/index groups:
+/// `self.inner.state[i].lock()` → `state`. Returns `None` for chains
+/// that start with a call result and for std stream receivers.
+fn receiver_name(lx: &Lexed, dot_idx: usize) -> Option<String> {
+    let mut j = dot_idx;
+    loop {
+        if j == 0 {
+            return None;
+        }
+        j -= 1;
+        let t = lx.s(j);
+        if lx.kind(j) == Some(TokKind::Punct) && (t == ")" || t == "]") {
+            let (close, open) = if t == ")" { (")", "(") } else { ("]", "[") };
+            let mut depth = 1usize;
+            while j > 0 && depth > 0 {
+                j -= 1;
+                let tt = lx.s(j);
+                if tt == close {
+                    depth += 1;
+                } else if tt == open {
+                    depth -= 1;
+                }
+            }
+            continue;
+        }
+        if lx.kind(j) == Some(TokKind::Id) {
+            let name = lx.s(j);
+            if IO_RECEIVERS.contains(&name) {
+                return None;
+            }
+            return Some(name.to_string());
+        }
+        return None;
+    }
+}
+
+/// The token extent a guard acquired at `acq_idx` is held over.
+///
+/// Three shapes, mirroring how Rust scopes temporaries:
+/// * scrutinee of `if`/`while`/`match` — the guard lives through the
+///   whole following block (scrutinee temporary extension);
+/// * `let g = recv.lock()...;` where the chain (through
+///   unwrap/expect/unwrap_or_else/map_err/`?`) IS the whole initializer
+///   — held to the end of the enclosing block, truncated at `drop(g)`;
+/// * anything else — a statement temporary, released at the `;`.
+fn guard_extent(
+    lx: &Lexed,
+    braces: &HashMap<usize, usize>,
+    fi: &FnInfo,
+    acq_idx: usize,
+) -> (usize, usize) {
+    let n = lx.toks.len();
+    // statement start: scan back to `;` `{` `}` `(` `[` at relative depth 0
+    let mut j = acq_idx;
+    let mut depth = 0i32;
+    let mut stmt_start = fi.body_open + 1;
+    while j > fi.body_open {
+        j -= 1;
+        if lx.kind(j) != Some(TokKind::Punct) {
+            continue;
+        }
+        match lx.s(j) {
+            ")" | "}" | "]" => depth += 1,
+            "(" | "{" | "[" => {
+                if depth == 0 {
+                    stmt_start = j + 1;
+                    break;
+                }
+                depth -= 1;
+            }
+            ";" if depth == 0 => {
+                stmt_start = j + 1;
+                break;
+            }
+            _ => {}
+        }
+    }
+    // statement end: scan forward to `;` or an unmatched closer
+    let mut j = acq_idx;
+    let mut depth = 0i32;
+    let mut stmt_end = fi.body_close;
+    while j < fi.body_close {
+        if lx.kind(j) == Some(TokKind::Punct) {
+            match lx.s(j) {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => {
+                    if depth == 0 {
+                        stmt_end = j;
+                        break;
+                    }
+                    depth -= 1;
+                }
+                ";" if depth == 0 => {
+                    stmt_end = j;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+
+    // scrutinee extension: acquisition inside an if/while/match head
+    let first = lx.s(stmt_start);
+    if lx.kind(stmt_start) == Some(TokKind::Id)
+        && (first == "if" || first == "while" || first == "match")
+    {
+        let mut j = stmt_start;
+        let mut depth = 0i32;
+        while j < fi.body_close {
+            let t = lx.s(j);
+            if t == "(" || t == "[" {
+                depth += 1;
+            } else if t == ")" || t == "]" {
+                depth -= 1;
+            } else if t == "{" && depth == 0 {
+                break;
+            }
+            j += 1;
+        }
+        if j < fi.body_close && acq_idx < j {
+            if let Some(&close) = braces.get(&j) {
+                return (acq_idx, close);
+            }
+        }
+        return (acq_idx, stmt_end);
+    }
+
+    // let-bound guard: `let [mut] NAME = <acquisition chain>;`
+    if lx.is_id(stmt_start, "let") {
+        let mut p = stmt_start + 1;
+        if lx.is_id(p, "mut") {
+            p += 1;
+        }
+        if lx.kind(p) == Some(TokKind::Id) && lx.is_punct(p + 1, "=") {
+            let gname = lx.s(p).to_string();
+            // walk from the acquisition's `()` through passthrough
+            // adapters; a binding is a guard only when the chain lands
+            // exactly on the statement end (no further projection)
+            let mut j = acq_idx + 4; // past `.meth()` → first token after `)`
+            const PASS: &[&str] = &["unwrap", "expect", "unwrap_or_else", "map_err"];
+            while j < stmt_end {
+                if lx.is_punct(j, ".") && PASS.contains(&lx.s(j + 1)) {
+                    j += 2;
+                    if lx.is_punct(j, "(") {
+                        let mut depth = 1i32;
+                        j += 1;
+                        while j < n && depth > 0 {
+                            if lx.is_punct(j, "(") {
+                                depth += 1;
+                            } else if lx.is_punct(j, ")") {
+                                depth -= 1;
+                            }
+                            j += 1;
+                        }
+                    }
+                    continue;
+                }
+                if lx.is_punct(j, "?") {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            if j == stmt_end {
+                // enclosing block = nearest unmatched `{` before the stmt
+                let mut open_idx = None;
+                let mut depth = 0i32;
+                let mut j = stmt_start;
+                while j > fi.body_open {
+                    j -= 1;
+                    if lx.is_punct(j, "}") {
+                        depth += 1;
+                    } else if lx.is_punct(j, "{") {
+                        if depth == 0 {
+                            open_idx = Some(j);
+                            break;
+                        }
+                        depth -= 1;
+                    }
+                }
+                let mut end = open_idx
+                    .and_then(|o| braces.get(&o).copied())
+                    .unwrap_or(fi.body_close);
+                // explicit early release truncates the extent
+                let mut j = stmt_end;
+                while j + 3 < end {
+                    if lx.is_id(j, "drop")
+                        && lx.is_punct(j + 1, "(")
+                        && lx.s(j + 2) == gname
+                        && lx.is_punct(j + 3, ")")
+                    {
+                        end = j;
+                        break;
+                    }
+                    j += 1;
+                }
+                return (acq_idx, end);
+            }
+        }
+    }
+    (acq_idx, stmt_end)
+}
+
+/// Extract acquisition/blocking/call facts for one function body.
+pub fn fn_facts(lx: &Lexed, braces: &HashMap<usize, usize>, fi: &FnInfo) -> FnFacts {
+    let mut facts = FnFacts { acqs: Vec::new(), blocks: Vec::new(), calls: Vec::new() };
+    let mut i = fi.body_open;
+    while i < fi.body_close {
+        // `.meth()` with empty parens → acquisition candidate
+        if lx.is_punct(i, ".")
+            && lx.kind(i + 1) == Some(TokKind::Id)
+            && lx.is_punct(i + 2, "(")
+            && lx.is_punct(i + 3, ")")
+        {
+            if let Some(kind) = acq_kind(lx.s(i + 1)) {
+                if let Some(name) = receiver_name(lx, i) {
+                    let (ext_start, ext_end) = guard_extent(lx, braces, fi, i);
+                    facts.acqs.push(Acquisition {
+                        idx: i,
+                        kind,
+                        name,
+                        line: lx.line(i + 1),
+                        ext_start,
+                        ext_end,
+                    });
+                }
+            }
+        }
+        if lx.kind(i) == Some(TokKind::Id) && lx.is_punct(i + 1, "(") {
+            let name = lx.s(i);
+            if BLOCKING.contains(&name) {
+                // `join` blocks only as JoinHandle::join(), which takes
+                // no arguments (Path::join / slice::join both do)
+                let arg_join = name == "join" && !lx.is_punct(i + 2, ")");
+                if !arg_join {
+                    facts.blocks.push((i, lx.line(i), name.to_string()));
+                }
+            } else {
+                facts.calls.push((name.to_string(), i));
+            }
+        }
+        i += 1;
+    }
+    facts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::tokenize;
+
+    fn lex(src: &str) -> Lexed {
+        Lexed { text: src.to_string(), toks: tokenize(src) }
+    }
+
+    #[test]
+    fn functions_and_test_spans() {
+        let src = "fn a() { 1 }\n#[cfg(test)]\nmod t { #[test]\nfn b() {} fn c() {} }\n";
+        let lx = lex(src);
+        let braces = match_braces(&lx);
+        let fns = extract_functions(&lx, &braces);
+        let by_name: Vec<(&str, bool)> =
+            fns.iter().map(|f| (f.name.as_str(), f.test)).collect();
+        assert_eq!(by_name, [("a", false), ("b", true), ("c", true)]);
+    }
+
+    #[test]
+    fn statement_temporary_released_at_semicolon() {
+        let src = "fn f(&self) { self.m.lock().unwrap().push(1); self.tx.send(2); }";
+        let lx = lex(src);
+        let braces = match_braces(&lx);
+        let fns = extract_functions(&lx, &braces);
+        let facts = fn_facts(&lx, &braces, &fns[0]);
+        assert_eq!(facts.acqs.len(), 1);
+        let a = &facts.acqs[0];
+        // the send() comes after the statement end: not in extent
+        let send = facts.blocks.iter().find(|b| b.2 == "send").unwrap();
+        assert!(send.0 > a.ext_end);
+    }
+
+    #[test]
+    fn let_bound_guard_extends_to_block_end() {
+        let src = "fn f(&self) { let g = self.m.lock().unwrap(); self.tx.send(2); }";
+        let lx = lex(src);
+        let braces = match_braces(&lx);
+        let fns = extract_functions(&lx, &braces);
+        let facts = fn_facts(&lx, &braces, &fns[0]);
+        let a = &facts.acqs[0];
+        let send = facts.blocks.iter().find(|b| b.2 == "send").unwrap();
+        assert!(send.0 < a.ext_end, "guard should cover the send");
+    }
+
+    #[test]
+    fn drop_truncates_guard_extent() {
+        let src =
+            "fn f(&self) { let g = self.m.lock().unwrap(); drop(g); self.tx.send(2); }";
+        let lx = lex(src);
+        let braces = match_braces(&lx);
+        let fns = extract_functions(&lx, &braces);
+        let facts = fn_facts(&lx, &braces, &fns[0]);
+        let a = &facts.acqs[0];
+        let send = facts.blocks.iter().find(|b| b.2 == "send").unwrap();
+        assert!(send.0 > a.ext_end, "drop(g) should end the extent");
+    }
+
+    #[test]
+    fn path_join_is_not_blocking() {
+        let src = "fn f(&self) { let p = self.dir.join(\"x\"); }";
+        let lx = lex(src);
+        let braces = match_braces(&lx);
+        let fns = extract_functions(&lx, &braces);
+        let facts = fn_facts(&lx, &braces, &fns[0]);
+        assert!(facts.blocks.is_empty());
+    }
+}

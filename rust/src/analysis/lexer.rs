@@ -1,0 +1,386 @@
+//! Comment- and string-aware Rust token scanner.
+//!
+//! The analyzer does not need a real parser: every rule in this
+//! subsystem is phrased over a flat token stream (identifier before a
+//! `[`, `.lock()` method chains, brace nesting). What it *does* need is
+//! to never be fooled by comments, string literals, raw strings, char
+//! literals, or lifetimes — a `".lock()"` inside a doc string must not
+//! count as an acquisition. This lexer handles exactly that and nothing
+//! more; numeric literal shapes beyond "digits and embedded dots" are
+//! out of scope because no rule looks inside numbers.
+
+/// Token class. `Life` (lifetimes) and `Char` are distinguished from
+/// punctuation so `'a` in generics never half-consumes a char literal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Id,
+    Num,
+    Str,
+    Char,
+    Life,
+    Punct,
+}
+
+/// One token: kind, byte span into the source, and 1-based line of the
+/// span start. Text is borrowed back from the source on demand.
+#[derive(Clone, Copy, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub start: usize,
+    pub end: usize,
+    pub line: u32,
+}
+
+/// Tokenized file: the source plus its token stream.
+pub struct Lexed {
+    pub text: String,
+    pub toks: Vec<Token>,
+}
+
+impl Lexed {
+    /// Token text; empty for an out-of-range index (simplifies lookahead).
+    pub fn s(&self, idx: usize) -> &str {
+        match self.toks.get(idx) {
+            Some(t) => &self.text[t.start..t.end],
+            None => "",
+        }
+    }
+
+    pub fn kind(&self, idx: usize) -> Option<TokKind> {
+        self.toks.get(idx).map(|t| t.kind)
+    }
+
+    pub fn line(&self, idx: usize) -> u32 {
+        self.toks.get(idx).map(|t| t.line).unwrap_or(0)
+    }
+
+    /// True when token `idx` is an identifier with this exact text.
+    pub fn is_id(&self, idx: usize, text: &str) -> bool {
+        self.kind(idx) == Some(TokKind::Id) && self.s(idx) == text
+    }
+
+    /// True when token `idx` is this punctuation character.
+    pub fn is_punct(&self, idx: usize, text: &str) -> bool {
+        self.kind(idx) == Some(TokKind::Punct) && self.s(idx) == text
+    }
+}
+
+fn is_id_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_id_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Tokenize Rust source. Comments are skipped (the caller collects
+/// `// lint:` annotations line-by-line from the raw text); strings and
+/// chars become single tokens carrying their quoted text.
+pub fn tokenize(text: &str) -> Vec<Token> {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte-raw strings: r"..."  r#"..."#  br##"..."##
+        if c == b'r' || c == b'b' {
+            let mut j = i;
+            if b[j] == b'b' && j + 1 < n && b[j + 1] == b'r' {
+                j += 2;
+            } else if b[j] == b'r' {
+                j += 1;
+            } else {
+                j = usize::MAX;
+            }
+            if j != usize::MAX {
+                let mut hashes = 0usize;
+                let mut k = j;
+                while k < n && b[k] == b'#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == b'"' {
+                    // scan for closing quote followed by `hashes` #s
+                    let mut e = k + 1;
+                    let start = i;
+                    loop {
+                        if e >= n {
+                            break;
+                        }
+                        if b[e] == b'"'
+                            && n - e - 1 >= hashes
+                            && b[e + 1..e + 1 + hashes].iter().all(|&h| h == b'#')
+                        {
+                            e += 1 + hashes;
+                            break;
+                        }
+                        if b[e] == b'\n' {
+                            line += 1;
+                        }
+                        e += 1;
+                    }
+                    toks.push(Token { kind: TokKind::Str, start, end: e, line });
+                    i = e;
+                    continue;
+                }
+            }
+        }
+        // plain / byte strings
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            let start = i;
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'"' {
+                    j += 1;
+                    break;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Token { kind: TokKind::Str, start, end: j.min(n), line });
+            i = j.min(n);
+            continue;
+        }
+        // lifetime vs char literal
+        if c == b'\'' {
+            // lifetime: 'ident not followed by a closing quote
+            let mut j = i + 1;
+            while j < n && is_id_cont(b[j]) {
+                j += 1;
+            }
+            if j > i + 1 && is_id_start(b[i + 1]) && (j >= n || b[j] != b'\'') {
+                toks.push(Token { kind: TokKind::Life, start: i, end: j, line });
+                i = j;
+                continue;
+            }
+            // char literal: '<escape-or-byte>'
+            let mut j = i + 1;
+            if j < n && b[j] == b'\\' {
+                j += 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+            } else {
+                // a char may be multi-byte UTF-8; scan to the close quote
+                while j < n && b[j] != b'\'' && b[j] != b'\n' {
+                    j += 1;
+                }
+            }
+            if j < n && b[j] == b'\'' {
+                toks.push(Token { kind: TokKind::Char, start: i, end: j + 1, line });
+                i = j + 1;
+                continue;
+            }
+            toks.push(Token { kind: TokKind::Punct, start: i, end: i + 1, line });
+            i += 1;
+            continue;
+        }
+        if is_id_start(c) {
+            let start = i;
+            while i < n && is_id_cont(b[i]) {
+                i += 1;
+            }
+            toks.push(Token { kind: TokKind::Id, start, end: i, line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n {
+                if b[i] == b'.' {
+                    // only part of the number when a digit follows:
+                    // `1.max(2)` must split at the dot
+                    if i + 1 < n && b[i + 1].is_ascii_digit() {
+                        i += 1;
+                        continue;
+                    }
+                    break;
+                }
+                if !is_id_cont(b[i]) {
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Token { kind: TokKind::Num, start, end: i, line });
+            continue;
+        }
+        toks.push(Token { kind: TokKind::Punct, start: i, end: i + 1, line });
+        i += 1;
+    }
+    toks
+}
+
+/// One `// lint: allow(rule, "reason")` annotation. A reason-less allow
+/// still suppresses its rule but is itself reported as `bad-annotation`
+/// — the grammar makes justification mandatory, not optional.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub line: u32,
+    pub rule: String,
+    pub reason: Option<String>,
+}
+
+/// Collect `// lint: allow(...)` annotations from raw source text. An
+/// allow on line L covers findings reported on L and L+1 (same line or
+/// the line directly below the comment).
+pub fn collect_allows(text: &str) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = idx as u32 + 1;
+        let mut rest = raw;
+        while let Some(pos) = rest.find("//") {
+            let tail = &rest[pos + 2..];
+            let t = tail.trim_start();
+            if let Some(t) = t.strip_prefix("lint:") {
+                let t = t.trim_start();
+                if let Some(t) = t.strip_prefix("allow(") {
+                    if let Some(a) = parse_allow(t, line) {
+                        out.push(a);
+                    }
+                }
+            }
+            rest = tail;
+        }
+    }
+    out
+}
+
+fn parse_allow(t: &str, line: u32) -> Option<Allow> {
+    // rule name: [a-z-]+
+    let rule_end = t
+        .char_indices()
+        .find(|&(_, c)| !(c.is_ascii_lowercase() || c == '-'))
+        .map(|(i, _)| i)
+        .unwrap_or(t.len());
+    if rule_end == 0 {
+        return None;
+    }
+    let rule = t[..rule_end].to_string();
+    let rest = t[rule_end..].trim_start();
+    if let Some(r) = rest.strip_prefix(')') {
+        let _ = r;
+        return Some(Allow { line, rule, reason: None });
+    }
+    let rest = rest.strip_prefix(',')?.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    // scan the quoted reason, honoring backslash escapes
+    let mut reason = String::new();
+    let mut chars = rest.chars();
+    loop {
+        match chars.next()? {
+            '\\' => {
+                reason.push(chars.next()?);
+            }
+            '"' => break,
+            c => reason.push(c),
+        }
+    }
+    let tail = chars.as_str().trim_start();
+    if !tail.starts_with(')') {
+        return None;
+    }
+    Some(Allow { line, rule, reason: Some(reason) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        let toks = tokenize(src);
+        toks.iter()
+            .map(|t| (t.kind, src[t.start..t.end].to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let src = r#"
+            // a .lock() in a comment
+            /* nested /* block */ .lock() */
+            let s = "call .lock() here";
+            let r = r#x"raw .lock()"#x;
+        "#
+        .replace("#x", "#");
+        let ks = kinds(&src);
+        let ids: Vec<&str> = ks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Id)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(ids, ["let", "s", "let", "r"]);
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let ks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        assert!(ks.iter().any(|(k, s)| *k == TokKind::Life && s == "'a"));
+        assert!(ks.iter().any(|(k, s)| *k == TokKind::Char && s == "'x'"));
+        assert!(ks.iter().any(|(k, s)| *k == TokKind::Char && s == "'\\n'"));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_method_calls() {
+        let ks = kinds("let x = 1.max(2) + 3.5;");
+        assert!(ks.iter().any(|(k, s)| *k == TokKind::Num && s == "1"));
+        assert!(ks.iter().any(|(k, s)| *k == TokKind::Id && s == "max"));
+        assert!(ks.iter().any(|(k, s)| *k == TokKind::Num && s == "3.5"));
+    }
+
+    #[test]
+    fn allow_annotations_parse() {
+        // `\u{20}` keeps this file's *raw text* free of the annotation
+        // marker so the analyzer's own self-scan does not pick these up
+        let src =
+            "x(); //\u{20}lint: allow(panic, \"why not\")\ny(); //\u{20}lint: allow(index)\n";
+        let allows = collect_allows(src);
+        assert_eq!(allows.len(), 2);
+        assert_eq!(allows[0].rule, "panic");
+        assert_eq!(allows[0].reason.as_deref(), Some("why not"));
+        assert_eq!(allows[1].line, 2);
+        assert!(allows[1].reason.is_none());
+    }
+}

@@ -1,0 +1,149 @@
+//! `kan-edge lint`: repo-native static analysis for the invariants the
+//! serving stack depends on but the compiler cannot check.
+//!
+//! Dependency-free by construction (the offline image carries no
+//! rustc internals, no syn): a comment/string-aware token scanner
+//! ([`lexer`]) feeds per-function fact extraction ([`facts`]), and four
+//! rule families run over the facts:
+//!
+//! * **lock discipline** ([`rules::lock_rule`]) — every guard
+//!   acquisition site, an inter-procedural lock graph across the
+//!   coordinator/cluster/registry/obs planes, lock-order cycles, and
+//!   guards held across unbounded blocking calls (channel send/recv,
+//!   socket I/O, `JoinHandle::join`);
+//! * **panic policy** ([`rules::panic_rule`]) — no `unwrap`/`expect`/
+//!   `panic!` on the serving path, with the poisoning-recovery idiom
+//!   (`util::sync`) carved out as its own `poison` rule, plus the
+//!   `index` sub-rule denying direct `[...]` indexing in the
+//!   wire-facing files;
+//! * **hot-path allocations** ([`rules::alloc_rule`]) — the engine
+//!   steady-state functions and kernels must not allocate per row;
+//! * **doc drift** ([`drift`]) — wire error codes, Prometheus series
+//!   names, and config keys are cross-checked against the docs.
+//!
+//! Suppression is explicit and audited: `// lint: allow(rule, "reason")`
+//! on the finding line or the line above. A reason-less allow is itself
+//! a finding (`bad-annotation`) — the tree cannot silently accumulate
+//! unexplained exceptions. See `docs/ANALYSIS.md` for the rule
+//! catalogue and the annotation grammar.
+
+pub mod drift;
+pub mod facts;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::{render_human, render_json, Finding};
+
+use crate::error::Result;
+use lexer::Lexed;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One scanned source file: token stream + structural indexes.
+pub struct ScannedFile {
+    /// Repo-relative path (`rust/src/coordinator/tcp.rs`).
+    pub rel: String,
+    /// Path relative to `rust/src` (`coordinator/tcp.rs`) — the rule
+    /// families key their policed sets off this.
+    pub rel_src: String,
+    pub lx: Lexed,
+    pub braces: HashMap<usize, usize>,
+    pub fns: Vec<facts::FnInfo>,
+}
+
+/// Lint outcome: sorted findings plus the scan size and suppression
+/// surface for the report.
+pub struct LintOutcome {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Total `// lint: allow(...)` annotations in the tree.
+    pub allows: usize,
+    /// Annotations missing the mandatory reason string (each also
+    /// surfaces as a `bad-annotation` finding).
+    pub allows_without_reason: usize,
+}
+
+impl LintOutcome {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+fn scan_file(root: &Path, path: &Path) -> Result<(ScannedFile, Vec<lexer::Allow>)> {
+    let text = std::fs::read_to_string(path)?;
+    let allows = lexer::collect_allows(&text);
+    let lx = Lexed { toks: lexer::tokenize(&text), text };
+    let braces = facts::match_braces(&lx);
+    let fns = facts::extract_functions(&lx, &braces);
+    let rel = path
+        .strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/");
+    let rel_src = rel.strip_prefix("rust/src/").unwrap_or(&rel).to_string();
+    Ok((ScannedFile { rel, rel_src, lx, braces, fns }, allows))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule family over the tree rooted at `root` (the repo
+/// root: sources are read from `root/rust/src`, docs from `root/docs`).
+pub fn run_lint(root: &Path) -> Result<LintOutcome> {
+    let src = root.join("rust").join("src");
+    let mut paths = Vec::new();
+    collect_rs(&src, &mut paths)?;
+    let mut files = Vec::with_capacity(paths.len());
+    let mut rep = report::Report::new();
+    for p in &paths {
+        let (file, allows) = scan_file(root, p)?;
+        rep.register_allows(&file.rel, allows);
+        files.push(file);
+    }
+    rules::lock_rule(&files, &mut rep);
+    rules::panic_rule(&files, &mut rep);
+    rules::index_rule(&files, &mut rep);
+    rules::alloc_rule(&files, &mut rep);
+    drift::drift_checks(root, &files, &mut rep);
+    let (allows, allows_without_reason) = rep.allow_counts();
+    Ok(LintOutcome {
+        findings: rep.into_findings(),
+        files_scanned: files.len(),
+        allows,
+        allows_without_reason,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_check_tree_is_clean() {
+        // the shipped tree must pass its own lint — this is the
+        // guarantee that every suppression carries a reason and every
+        // doc table matches the code it documents
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("crate lives in <repo>/rust")
+            .to_path_buf();
+        let out = run_lint(&root).expect("lint scan");
+        assert!(out.files_scanned > 40, "expected a full tree scan");
+        let rendered = render_human(&out.findings, out.files_scanned);
+        assert!(out.clean(), "lint found issues on the shipped tree:\n{rendered}");
+    }
+}

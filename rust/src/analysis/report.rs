@@ -1,0 +1,166 @@
+//! Finding collection, annotation-based suppression, and rendering
+//! (human text + machine JSON).
+
+use super::lexer::Allow;
+use crate::util::json::{arr, obj, Value};
+use std::collections::HashMap;
+
+/// One lint finding, anchored to a repo-relative path and 1-based line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: String,
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Collects findings and applies `// lint: allow(...)` suppression. An
+/// allow on line L covers findings on L and L+1; a reason-less allow
+/// suppresses its target but surfaces as a `bad-annotation` finding so
+/// the tree can never silently accumulate unexplained exceptions.
+pub struct Report {
+    findings: Vec<Finding>,
+    /// path -> allows for that file.
+    allows: HashMap<String, Vec<Allow>>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Report { findings: Vec::new(), allows: HashMap::new() }
+    }
+
+    pub fn register_allows(&mut self, path: &str, allows: Vec<Allow>) {
+        for a in &allows {
+            if a.reason.is_none() {
+                self.findings.push(Finding {
+                    rule: "bad-annotation".into(),
+                    path: path.to_string(),
+                    line: a.line,
+                    msg: format!("lint allow({}) without a reason", a.rule),
+                });
+            }
+        }
+        self.allows.insert(path.to_string(), allows);
+    }
+
+    fn allowed(&self, rule: &str, path: &str, line: u32) -> bool {
+        let Some(allows) = self.allows.get(path) else { return false };
+        allows
+            .iter()
+            .any(|a| a.rule == rule && (a.line == line || a.line + 1 == line))
+    }
+
+    pub fn report(&mut self, rule: &str, path: &str, line: u32, msg: String) {
+        if self.allowed(rule, path, line) {
+            return;
+        }
+        self.findings.push(Finding {
+            rule: rule.to_string(),
+            path: path.to_string(),
+            line,
+            msg,
+        });
+    }
+
+    /// (total annotations, annotations missing a reason) across every
+    /// registered file — the audited waiver surface of the tree.
+    pub fn allow_counts(&self) -> (usize, usize) {
+        let total = self.allows.values().map(Vec::len).sum();
+        let unreasoned = self
+            .allows
+            .values()
+            .flatten()
+            .filter(|a| a.reason.is_none())
+            .count();
+        (total, unreasoned)
+    }
+
+    /// Findings sorted by (path, line, rule) for stable output.
+    pub fn into_findings(mut self) -> Vec<Finding> {
+        self.findings.sort_by(|a, b| {
+            (&a.path, a.line, &a.rule).cmp(&(&b.path, b.line, &b.rule))
+        });
+        self.findings
+    }
+}
+
+/// Render findings as `path:line: [rule] message` lines plus a summary.
+pub fn render_human(findings: &[Finding], files_scanned: usize) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.path, f.line, f.rule, f.msg));
+    }
+    if findings.is_empty() {
+        out.push_str(&format!("lint: clean ({files_scanned} files scanned)\n"));
+    } else {
+        out.push_str(&format!(
+            "lint: {} finding(s) across {files_scanned} files\n",
+            findings.len()
+        ));
+    }
+    out
+}
+
+/// Machine-readable report body for `kan-edge lint --json`. The allow
+/// counts expose the suppression surface so it can be audited over time.
+pub fn render_json(
+    findings: &[Finding],
+    files_scanned: usize,
+    allows: usize,
+    allows_without_reason: usize,
+) -> Value {
+    let items = findings
+        .iter()
+        .map(|f| {
+            obj(vec![
+                ("rule", Value::Str(f.rule.clone())),
+                ("path", Value::Str(f.path.clone())),
+                ("line", Value::Int(f.line as i64)),
+                ("message", Value::Str(f.msg.clone())),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", Value::Str("kan-edge-lint/v1".into())),
+        ("files_scanned", Value::Int(files_scanned as i64)),
+        ("findings", arr(items)),
+        ("clean", Value::Bool(findings.is_empty())),
+        ("allows", Value::Int(allows as i64)),
+        ("allows_without_reason", Value::Int(allows_without_reason as i64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_covers_same_and_next_line() {
+        let mut r = Report::new();
+        r.register_allows(
+            "a.rs",
+            vec![Allow { line: 10, rule: "panic".into(), reason: Some("ok".into()) }],
+        );
+        r.report("panic", "a.rs", 10, "x".into());
+        r.report("panic", "a.rs", 11, "y".into());
+        r.report("panic", "a.rs", 12, "z".into());
+        r.report("index", "a.rs", 10, "other rule".into());
+        let f = r.into_findings();
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().any(|f| f.rule == "panic" && f.line == 12));
+        assert!(f.iter().any(|f| f.rule == "index" && f.line == 10));
+    }
+
+    #[test]
+    fn reasonless_allow_is_a_finding() {
+        let mut r = Report::new();
+        r.register_allows(
+            "a.rs",
+            vec![Allow { line: 3, rule: "alloc".into(), reason: None }],
+        );
+        r.report("alloc", "a.rs", 3, "suppressed".into());
+        let f = r.into_findings();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "bad-annotation");
+    }
+}

@@ -1,0 +1,478 @@
+//! The four serving-path rule families: lock discipline (ordering
+//! cycles + guards held across blocking calls), panic policy, direct
+//! indexing on the wire-facing set, and the hot-path allocation policy.
+
+use super::facts::{fn_facts, Acquisition, FnFacts};
+use super::report::Report;
+use super::ScannedFile;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Serving-path modules policed by the panic and lock rules. Compute
+/// modules (kan/, acim/, quant/, …) are exempt: they run under the
+/// coordinator which catches nothing — panics there are caught by the
+/// engine test suite, not by request traffic.
+fn policed(rel_src: &str) -> bool {
+    ["coordinator/", "cluster/", "registry/", "obs/"]
+        .iter()
+        .any(|d| rel_src.starts_with(d))
+}
+
+/// Identity of a lock: `file_stem.field_name`. Coarse by design — one
+/// name per (file, field) pair is exactly the granularity the
+/// coordinator/registry code uses for its mutexes.
+fn lock_id(rel_src: &str, field: &str) -> String {
+    let stem = rel_src
+        .rsplit('/')
+        .next()
+        .unwrap_or(rel_src)
+        .trim_end_matches(".rs");
+    format!("{stem}.{field}")
+}
+
+/// Key for one function: (file index, fn index) into the scan set.
+type FnKey = (usize, usize);
+
+struct LockWorld<'a> {
+    files: &'a [ScannedFile],
+    facts: BTreeMap<FnKey, FnFacts>,
+    /// Unique simple-name resolution: fn name -> its only definition.
+    /// Ambiguous names are absent (documented limitation: calls to them
+    /// are not traced inter-procedurally).
+    unique: BTreeMap<String, FnKey>,
+    may_acq: BTreeMap<FnKey, BTreeSet<String>>,
+    may_blk: BTreeMap<FnKey, BTreeSet<String>>,
+}
+
+fn build_world(files: &[ScannedFile]) -> LockWorld<'_> {
+    let mut facts = BTreeMap::new();
+    let mut seen: BTreeMap<String, Vec<FnKey>> = BTreeMap::new();
+    for (fi, file) in files.iter().enumerate() {
+        for (gi, f) in file.fns.iter().enumerate() {
+            if f.test {
+                continue;
+            }
+            let key = (fi, gi);
+            seen.entry(f.name.clone()).or_default().push(key);
+            facts.insert(key, fn_facts(&file.lx, &file.braces, f));
+        }
+    }
+    let unique: BTreeMap<String, FnKey> = seen
+        .into_iter()
+        .filter_map(|(n, ks)| (ks.len() == 1).then(|| (n, ks[0])))
+        .collect();
+    // seed the fixpoint with each function's direct facts
+    let mut may_acq: BTreeMap<FnKey, BTreeSet<String>> = BTreeMap::new();
+    let mut may_blk: BTreeMap<FnKey, BTreeSet<String>> = BTreeMap::new();
+    for (&key, ff) in &facts {
+        let rel = &files[key.0].rel_src;
+        may_acq.insert(
+            key,
+            ff.acqs.iter().map(|a| lock_id(rel, &a.name)).collect(),
+        );
+        may_blk.insert(key, ff.blocks.iter().map(|b| b.2.clone()).collect());
+    }
+    // propagate through the call graph to fixpoint
+    let mut changed = true;
+    while changed {
+        changed = false;
+        let keys: Vec<FnKey> = facts.keys().copied().collect();
+        for key in keys {
+            let callees: Vec<FnKey> = facts[&key]
+                .calls
+                .iter()
+                .filter_map(|(n, _)| self::resolve(&unique, n, key))
+                .collect();
+            for tgt in callees {
+                let (acq, blk) = (may_acq[&tgt].clone(), may_blk[&tgt].clone());
+                let a = may_acq.get_mut(&key).expect("seeded");
+                if !acq.is_subset(a) {
+                    a.extend(acq);
+                    changed = true;
+                }
+                let b = may_blk.get_mut(&key).expect("seeded");
+                if !blk.is_subset(b) {
+                    b.extend(blk);
+                    changed = true;
+                }
+            }
+        }
+    }
+    LockWorld { files, facts, unique, may_acq, may_blk }
+}
+
+fn resolve(unique: &BTreeMap<String, FnKey>, name: &str, caller: FnKey) -> Option<FnKey> {
+    let tgt = *unique.get(name)?;
+    (tgt != caller).then_some(tgt)
+}
+
+/// Lock-discipline rule: build the inter-procedural lock graph over the
+/// policed modules, flag order cycles, and flag guards held across
+/// blocking channel/socket/thread waits (direct or through calls).
+pub fn lock_rule(files: &[ScannedFile], report: &mut Report) {
+    let world = build_world(files);
+    // edges: held-lock -> acquired-while-held, with a witness site
+    let mut edges: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut witness: BTreeMap<(String, String), (String, u32)> = BTreeMap::new();
+    for (&key, ff) in &world.facts {
+        let file = &world.files[key.0];
+        if !policed(&file.rel_src) {
+            continue;
+        }
+        for a in &ff.acqs {
+            let held = lock_id(&file.rel_src, &a.name);
+            check_extent(&world, key, ff, a, &held, report);
+            // nested direct acquisitions
+            for b in &ff.acqs {
+                if b.idx > a.ext_start && b.idx <= a.ext_end && b.idx != a.idx {
+                    let tgt = lock_id(&file.rel_src, &b.name);
+                    if tgt != held {
+                        edges.entry(held.clone()).or_default().insert(tgt.clone());
+                        witness
+                            .entry((held.clone(), tgt))
+                            .or_insert_with(|| (file.rel.clone(), b.line));
+                    }
+                }
+            }
+            // acquisitions reached through calls inside the extent
+            for (cn, ci) in &ff.calls {
+                if !(*ci > a.ext_start && *ci <= a.ext_end) {
+                    continue;
+                }
+                let Some(tgt) = resolve(&world.unique, cn, key) else { continue };
+                for lid in &world.may_acq[&tgt] {
+                    if lid != &held {
+                        edges
+                            .entry(held.clone())
+                            .or_default()
+                            .insert(lid.clone());
+                        witness
+                            .entry((held.clone(), lid.clone()))
+                            .or_insert_with(|| (file.rel.clone(), file.lx.line(*ci)));
+                    }
+                }
+            }
+        }
+    }
+    if let Some(cycle) = find_cycle(&edges) {
+        let w = witness
+            .get(&(cycle[0].clone(), cycle[1].clone()))
+            .cloned()
+            .unwrap_or_else(|| ("rust/src".into(), 0));
+        report.report(
+            "lock-cycle",
+            &w.0,
+            w.1,
+            format!("lock order cycle: {}", cycle.join(" -> ")),
+        );
+    }
+}
+
+/// Blocking calls inside one guard's extent (direct + through calls).
+fn check_extent(
+    world: &LockWorld<'_>,
+    key: FnKey,
+    ff: &FnFacts,
+    a: &Acquisition,
+    held: &str,
+    report: &mut Report,
+) {
+    let file = &world.files[key.0];
+    for (bi, bline, what) in &ff.blocks {
+        if *bi > a.ext_start && *bi <= a.ext_end {
+            report.report(
+                "lock-blocking",
+                &file.rel,
+                *bline,
+                format!(
+                    "guard `{held}` (acquired line {}) held across blocking `{what}()`",
+                    a.line
+                ),
+            );
+        }
+    }
+    for (cn, ci) in &ff.calls {
+        if !(*ci > a.ext_start && *ci <= a.ext_end) {
+            continue;
+        }
+        let Some(tgt) = resolve(&world.unique, cn, key) else { continue };
+        for what in &world.may_blk[&tgt] {
+            report.report(
+                "lock-blocking",
+                &file.rel,
+                file.lx.line(*ci),
+                format!(
+                    "guard `{held}` (line {}) held across call `{cn}()` \
+                     which may block on `{what}`",
+                    a.line
+                ),
+            );
+        }
+    }
+}
+
+/// First lock-order cycle in the edge set, as the node sequence
+/// `a -> b -> ... -> a`, or `None` when the graph is acyclic.
+fn find_cycle(edges: &BTreeMap<String, BTreeSet<String>>) -> Option<Vec<String>> {
+    // iterative DFS with tri-color marking, deterministic via BTreeMap
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        White,
+        Grey,
+        Black,
+    }
+    let mut color: BTreeMap<&str, Color> = BTreeMap::new();
+    fn dfs<'a>(
+        u: &'a str,
+        edges: &'a BTreeMap<String, BTreeSet<String>>,
+        color: &mut BTreeMap<&'a str, Color>,
+        stack: &mut Vec<&'a str>,
+    ) -> Option<Vec<String>> {
+        color.insert(u, Color::Grey);
+        stack.push(u);
+        for v in edges.get(u).into_iter().flatten() {
+            match color.get(v.as_str()).copied().unwrap_or(Color::White) {
+                Color::Grey => {
+                    let pos =
+                        stack.iter().position(|s| *s == v.as_str()).unwrap_or(0);
+                    let mut cyc: Vec<String> =
+                        stack[pos..].iter().map(|s| s.to_string()).collect();
+                    cyc.push(v.clone());
+                    return Some(cyc);
+                }
+                Color::White => {
+                    if let Some(c) = dfs(v.as_str(), edges, color, stack) {
+                        return Some(c);
+                    }
+                }
+                Color::Black => {}
+            }
+        }
+        stack.pop();
+        color.insert(u, Color::Black);
+        None
+    }
+    for u in edges.keys() {
+        if color.get(u.as_str()).copied().unwrap_or(Color::White) == Color::White {
+            let mut stack = Vec::new();
+            if let Some(c) = dfs(u, edges, &mut color, &mut stack) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Panic-policy rule over the serving-path modules: no panic-family
+/// macros, no `.unwrap()`/`.expect()` outside tests. A bare unwrap
+/// directly on a lock/condvar acquisition is reported as the distinct
+/// `poison` rule (the fix is the `util::sync` recover helpers, not an
+/// error return).
+pub fn panic_rule(files: &[ScannedFile], report: &mut Report) {
+    for file in files {
+        if !policed(&file.rel_src) {
+            continue;
+        }
+        let lx = &file.lx;
+        for f in &file.fns {
+            if f.test {
+                continue;
+            }
+            for i in f.body_open..f.body_close {
+                if lx.kind(i) != Some(super::lexer::TokKind::Id) {
+                    continue;
+                }
+                let t = lx.s(i);
+                if PANIC_MACROS.contains(&t) && lx.is_punct(i + 1, "!") {
+                    report.report(
+                        "panic",
+                        &file.rel,
+                        lx.line(i),
+                        format!("`{t}!` on serving path"),
+                    );
+                }
+                if (t == "unwrap" || t == "expect") && i > 0 && lx.is_punct(i - 1, ".") {
+                    let t = t.to_string();
+                    if is_poison_unwrap(file, i) {
+                        report.report(
+                            "poison",
+                            &file.rel,
+                            lx.line(i),
+                            format!(
+                                "bare poison-`{t}` on lock acquisition \
+                                 (use util::sync recover helpers)"
+                            ),
+                        );
+                    } else {
+                        report.report(
+                            "panic",
+                            &file.rel,
+                            lx.line(i),
+                            format!("`.{t}()` on serving path"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Is `.unwrap()` at token `i` applied directly to a lock/condvar
+/// acquisition result (`.lock().unwrap()`, `cv.wait(g).unwrap()`)?
+fn is_poison_unwrap(file: &ScannedFile, i: usize) -> bool {
+    let lx = &file.lx;
+    // token before the `.` must be the `)` closing the receiver call
+    if i < 2 || !lx.is_punct(i - 2, ")") {
+        return false;
+    }
+    // scan back to the matching `(` and read the callee
+    let mut depth = 1usize;
+    let mut j = i - 2;
+    while j > 0 && depth > 0 {
+        j -= 1;
+        let t = lx.s(j);
+        if t == ")" {
+            depth += 1;
+        } else if t == "(" {
+            depth -= 1;
+        }
+    }
+    if j == 0 || depth != 0 {
+        return false;
+    }
+    let callee = lx.s(j - 1);
+    let empty = lx.is_punct(j + 1, ")");
+    match callee {
+        // RwLock/Mutex ops take no args; io::Read::read does
+        "lock" | "read" | "write" => empty,
+        "wait" | "wait_timeout" | "wait_while" => true,
+        _ => false,
+    }
+}
+
+/// Files whose `fn`s are policed for direct `[...]` indexing: the
+/// wire-facing set, where every index is driven by request-derived
+/// data and a slip is a remote panic trigger.
+const INDEX_FILES: &[&str] = &["coordinator/protocol.rs", "coordinator/tcp.rs"];
+
+/// Keywords that can directly precede a `[` that is an array literal
+/// or pattern, not an indexing expression.
+const INDEX_KEYWORDS: &[&str] = &[
+    "in", "return", "break", "continue", "else", "match", "if", "while", "loop",
+    "move", "mut", "ref", "as", "let",
+];
+
+pub fn index_rule(files: &[ScannedFile], report: &mut Report) {
+    use super::lexer::TokKind;
+    for file in files {
+        if !INDEX_FILES.contains(&file.rel_src.as_str()) {
+            continue;
+        }
+        let lx = &file.lx;
+        for f in &file.fns {
+            if f.test {
+                continue;
+            }
+            for i in f.body_open..f.body_close {
+                if !lx.is_punct(i, "[") || i == 0 {
+                    continue;
+                }
+                let pk = lx.kind(i - 1);
+                let pt = lx.s(i - 1);
+                let indexing = (pk == Some(TokKind::Id)
+                    && !INDEX_KEYWORDS.contains(&pt))
+                    || (pk == Some(TokKind::Punct) && (pt == ")" || pt == "]"));
+                if !indexing {
+                    continue;
+                }
+                // `&x[..]` full-range reborrow cannot panic
+                if lx.is_punct(i + 1, ".")
+                    && lx.is_punct(i + 2, ".")
+                    && lx.is_punct(i + 3, "]")
+                {
+                    continue;
+                }
+                report.report(
+                    "index",
+                    &file.rel,
+                    lx.line(i),
+                    format!("direct indexing in `{}`", f.name),
+                );
+            }
+        }
+    }
+}
+
+/// Hot-path allocation policy: the engine steady-state functions and
+/// the kernels must not allocate per row/batch — scratch is provided by
+/// the caller. `(file, policed fn names)`; `None` = every fn.
+fn hot_fns(rel_src: &str) -> Option<Option<&'static [&'static str]>> {
+    match rel_src {
+        "kan/engine.rs" => Some(Some(&["forward_into", "forward_rows", "forward_block"])),
+        "kan/plan.rs" => Some(Some(&["accumulate_batch", "finish_batch_row"])),
+        "kan/kernels.rs" => Some(None),
+        _ => None,
+    }
+}
+
+const ALLOC_METHODS: &[&str] =
+    &["to_vec", "to_string", "to_owned", "clone", "collect", "with_capacity"];
+const ALLOC_TYPES: &[&str] = &["Vec", "String", "Box", "BTreeMap", "HashMap"];
+
+pub fn alloc_rule(files: &[ScannedFile], report: &mut Report) {
+    use super::lexer::TokKind;
+    for file in files {
+        let Some(only) = hot_fns(&file.rel_src) else { continue };
+        let lx = &file.lx;
+        for f in &file.fns {
+            if f.test {
+                continue;
+            }
+            if let Some(names) = only {
+                if !names.contains(&f.name.as_str()) {
+                    continue;
+                }
+            }
+            for i in f.body_open..f.body_close {
+                if lx.kind(i) != Some(TokKind::Id) {
+                    continue;
+                }
+                let t = lx.s(i);
+                if (t == "format" || t == "vec") && lx.is_punct(i + 1, "!") {
+                    report.report(
+                        "alloc",
+                        &file.rel,
+                        lx.line(i),
+                        format!("`{t}!` in hot path `{}`", f.name),
+                    );
+                }
+                if ALLOC_TYPES.contains(&t) && lx.is_punct(i + 1, ":") {
+                    report.report(
+                        "alloc",
+                        &file.rel,
+                        lx.line(i),
+                        format!("`{t}::` constructor in hot path `{}`", f.name),
+                    );
+                }
+                if ALLOC_METHODS.contains(&t)
+                    && i > 0
+                    && lx.is_punct(i - 1, ".")
+                    && lx.is_punct(i + 1, "(")
+                {
+                    report.report(
+                        "alloc",
+                        &file.rel,
+                        lx.line(i),
+                        format!("`.{t}()` in hot path `{}`", f.name),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The policed-module prefixes, for the CLI's self-description.
+pub fn policed_dirs() -> &'static [&'static str] {
+    &["coordinator/", "cluster/", "registry/", "obs/"]
+}

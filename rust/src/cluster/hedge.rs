@@ -10,6 +10,7 @@
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::util::sync::LockExt;
 use crate::coordinator::metrics::percentile;
 
 /// Samples needed before the quantile is trusted; below this the delay
@@ -45,7 +46,7 @@ impl HedgePolicy {
     /// Record one successful first-answer latency.
     pub fn record(&self, latency: Duration) {
         let ms = latency.as_millis().min(u128::from(u64::MAX)) as u64;
-        let mut w = self.window.lock().unwrap();
+        let mut w = self.window.lock_recover();
         if w.samples.len() < 512 {
             w.samples.push(ms);
         } else {
@@ -58,7 +59,7 @@ impl HedgePolicy {
     /// Current hedge delay: the configured quantile of the window,
     /// clamped, or `max_ms` while the window is cold.
     pub fn delay(&self) -> Duration {
-        let w = self.window.lock().unwrap();
+        let w = self.window.lock_recover();
         let ms = if w.samples.len() < WARM_SAMPLES {
             self.max_ms
         } else {
@@ -71,7 +72,7 @@ impl HedgePolicy {
 
     /// Observed sample count (for the metrics rollup).
     pub fn samples(&self) -> usize {
-        self.window.lock().unwrap().samples.len()
+        self.window.lock_recover().samples.len()
     }
 }
 

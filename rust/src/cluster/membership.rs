@@ -10,6 +10,7 @@
 
 use std::sync::Mutex;
 
+use crate::util::sync::LockExt;
 use crate::util::json::{obj, Value};
 
 /// Routing view of one node.
@@ -82,13 +83,13 @@ impl Membership {
     }
 
     pub fn state(&self, idx: usize) -> NodeState {
-        self.views[idx].lock().unwrap().state
+        self.views[idx].lock_recover().state
     }
 
     /// Identity label for metrics/rollups: the reported `node_id` when
     /// known, else the configured address.
     pub fn label(&self, idx: usize) -> String {
-        let v = self.views[idx].lock().unwrap();
+        let v = self.views[idx].lock_recover();
         v.node_id.clone().unwrap_or_else(|| self.addrs[idx].clone())
     }
 
@@ -111,7 +112,7 @@ impl Membership {
         models_live: usize,
         uptime_s: Option<u64>,
     ) {
-        let mut v = self.views[idx].lock().unwrap();
+        let mut v = self.views[idx].lock_recover();
         v.consecutive_failures = 0;
         if let Some(id) = node_id {
             v.node_id = Some(id);
@@ -128,7 +129,7 @@ impl Membership {
     /// A failed probe or data-path transport error. Returns `true` when
     /// this failure transitioned the node to `Down`.
     pub fn record_failure(&self, idx: usize) -> bool {
-        let mut v = self.views[idx].lock().unwrap();
+        let mut v = self.views[idx].lock_recover();
         v.consecutive_failures = v.consecutive_failures.saturating_add(1);
         if v.state == NodeState::Up && v.consecutive_failures >= self.fail_after {
             v.state = NodeState::Down;
@@ -140,7 +141,7 @@ impl Membership {
     /// Operator drain toggle. Un-draining returns the node to `Up`; the
     /// next failures can still demote it normally.
     pub fn set_draining(&self, idx: usize, draining: bool) {
-        let mut v = self.views[idx].lock().unwrap();
+        let mut v = self.views[idx].lock_recover();
         v.state = if draining { NodeState::Draining } else { NodeState::Up };
         if !draining {
             v.consecutive_failures = 0;
@@ -152,7 +153,7 @@ impl Membership {
     pub fn summaries(&self) -> Vec<(String, Value)> {
         (0..self.len())
             .map(|i| {
-                let v = self.views[i].lock().unwrap();
+                let v = self.views[i].lock_recover();
                 let label =
                     v.node_id.clone().unwrap_or_else(|| self.addrs[i].clone());
                 let body = obj(vec![

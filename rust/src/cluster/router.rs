@@ -34,6 +34,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::sync::LockExt;
 use crate::client::{CallOptions, Inference, KanClient};
 use crate::coordinator::backend::RowOutput;
 use crate::coordinator::protocol::ModelSummary;
@@ -167,7 +168,7 @@ impl ClusterRouter {
     // ---- connection pool -------------------------------------------------
 
     fn checkout(&self, node: usize) -> Result<KanClient> {
-        if let Some(c) = self.pools[node].lock().unwrap().pop() {
+        if let Some(c) = self.pools[node].lock_recover().pop() {
             return Ok(c);
         }
         KanClient::connect(self.members.addr(node))
@@ -195,7 +196,7 @@ impl ClusterRouter {
         let addr = self.members.addr(node).to_string();
         std::thread::spawn(move || {
             let mut client = {
-                let pooled = pool.lock().unwrap().pop();
+                let pooled = pool.lock_recover().pop();
                 match pooled.map(Ok).unwrap_or_else(|| KanClient::connect(&addr)) {
                     Ok(c) => c,
                     Err(e) => {
@@ -329,7 +330,7 @@ impl Drop for ClusterRouter {
 }
 
 fn put_back_pool(pool: &Mutex<Vec<KanClient>>, client: KanClient) {
-    let mut p = pool.lock().unwrap();
+    let mut p = pool.lock_recover();
     if p.len() < POOL_CAP {
         p.push(client);
     }
@@ -371,7 +372,7 @@ fn heartbeat_node(members: &Membership, idx: usize) {
 /// connection would keep reporting a node healthy after it stopped
 /// accepting.
 fn spawn_heartbeat(members: Arc<Membership>, period: Duration, stop: Arc<AtomicBool>) {
-    std::thread::Builder::new()
+    let spawned = std::thread::Builder::new()
         .name("kan-edge-heartbeat".into())
         .spawn(move || {
             while !stop.load(Ordering::Relaxed) {
@@ -380,8 +381,16 @@ fn spawn_heartbeat(members: Arc<Membership>, period: Duration, stop: Arc<AtomicB
                 }
                 std::thread::sleep(period);
             }
-        })
-        .expect("spawn heartbeat");
+        });
+    // the heartbeat is an optimization: data-path failures also drive
+    // membership state, so a failed spawn degrades liveness detection
+    // instead of taking the router down
+    if let Err(e) = spawned {
+        crate::obs::log::warn(
+            "cluster",
+            &format!("heartbeat thread failed to spawn ({e}); relying on data-path failures"),
+        );
+    }
 }
 
 impl Dispatch for ClusterRouter {

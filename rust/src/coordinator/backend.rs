@@ -33,6 +33,7 @@ use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Mutex};
 
+use crate::util::sync::LockExt;
 use crate::acim::{AcimModel, NoiseModel};
 use crate::baseline::MlpModel;
 use crate::error::{Error, Result};
@@ -367,12 +368,12 @@ impl ExecutionSession for PjrtSession {
 
     fn run(&self, rows: Vec<Vec<f32>>, _opts: &[ExecOptions]) -> Result<Vec<RowOutput>> {
         let (reply_tx, reply_rx) = sync_channel(1);
-        {
-            // ownership of the rows moves through the channel; no copy
-            let tx = self.tx.lock().unwrap();
-            tx.send((rows, reply_tx))
-                .map_err(|_| Error::Runtime("pjrt actor gone".into()))?;
-        }
+        // ownership of the rows moves through the channel; no copy. The
+        // sender is cloned out of the mutex so a full actor queue blocks
+        // this caller on the channel, never while holding the lock.
+        let tx = self.tx.lock_recover().clone();
+        tx.send((rows, reply_tx))
+            .map_err(|_| Error::Runtime("pjrt actor gone".into()))?;
         let outs = reply_rx
             .recv()
             .map_err(|_| Error::Runtime("pjrt actor dropped reply".into()))??;
@@ -492,7 +493,7 @@ impl ExecutionSession for DigitalSession {
         let out = if let Some(engine) = &self.engine {
             // one scratch per call: the service's worker pool provides
             // the multi-core, each worker reuses an arena from the pool
-            let mut s = self.scratch.lock().unwrap().pop().unwrap_or_else(|| {
+            let mut s = self.scratch.lock_recover().pop().unwrap_or_else(|| {
                 if self.profiled {
                     engine.new_scratch_profiled()
                 } else {
@@ -504,13 +505,13 @@ impl ExecutionSession for DigitalSession {
             // fold the scratch's counters into the session accumulator:
             // one lock per batch, zero work when profiling is off
             if let Some(taken) = s.take_profile() {
-                let mut acc = self.profile_acc.lock().unwrap();
+                let mut acc = self.profile_acc.lock_recover();
                 match acc.as_mut() {
                     Some(a) => a.merge(&taken),
                     None => *acc = Some(taken),
                 }
             }
-            self.scratch.lock().unwrap().push(s);
+            self.scratch.lock_recover().push(s);
             out
         } else {
             self.model.forward_batch(&flat, batch)
@@ -526,7 +527,7 @@ impl ExecutionSession for DigitalSession {
             return None;
         }
         let engine = self.engine.as_ref()?;
-        let acc = self.profile_acc.lock().unwrap();
+        let acc = self.profile_acc.lock_recover();
         // zeroed counters before any batch ran: the section exists as
         // soon as profiling is on, so scrapers see a stable schema
         match acc.as_ref() {
@@ -653,7 +654,7 @@ impl ExecutionSession for MlpSession {
         BackendSpec::exact(
             BackendKind::Mlp,
             self.model.dims.first().copied(),
-            *self.model.dims.last().unwrap(),
+            self.model.dims.last().copied().unwrap_or(0),
         )
     }
 

@@ -38,6 +38,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::sync::LockExt;
 use crate::util::json::{obj, Value};
 use crate::util::rng::Rng;
 
@@ -254,7 +255,7 @@ impl Metrics {
     }
 
     pub fn record_request(&self, latency: Duration, queue_wait: Duration) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         let now = Instant::now();
         g.started.get_or_insert(now);
         g.finished = Some(now);
@@ -264,17 +265,17 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, size: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         g.batches += 1;
         g.batched_rows += size as u64;
     }
 
     pub fn record_rejection(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.inner.lock_recover().rejected += 1;
     }
 
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        self.inner.lock_recover().errors += 1;
     }
 
     pub fn report(&self) -> MetricsReport {
@@ -287,12 +288,12 @@ impl Metrics {
     /// `(retained, observed)` for the latency series — the test hook for
     /// the boundedness contract (retained ≤ reservoir size always).
     pub fn latency_sample_state(&self) -> (usize, u64) {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_recover();
         (g.latencies_us.samples.len(), g.latencies_us.seen)
     }
 
     fn snapshot(&self) -> Inner {
-        self.inner.lock().unwrap().clone()
+        self.inner.lock_recover().clone()
     }
 }
 
@@ -311,8 +312,7 @@ impl MetricsHub {
     /// for the hub's lifetime so retired versions still roll up.
     pub fn for_model(&self, id: &str) -> Arc<Metrics> {
         self.models
-            .lock()
-            .unwrap()
+            .lock_recover()
             .entry(id.to_string())
             .or_default()
             .clone()
@@ -325,8 +325,7 @@ impl MetricsHub {
     /// hot reloads) and recording.
     fn handles(&self) -> Vec<(String, Arc<Metrics>)> {
         self.models
-            .lock()
-            .unwrap()
+            .lock_recover()
             .iter()
             .map(|(id, m)| (id.clone(), m.clone()))
             .collect()
@@ -496,7 +495,7 @@ impl ShadowMetrics {
         if flip {
             self.argmax_flips.fetch_add(1, Ordering::Relaxed);
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         g.mae_sum += mae;
         g.mae.record(mae);
         while g.layer_err.len() < layer_err.len() {
@@ -510,16 +509,16 @@ impl ShadowMetrics {
 
     pub fn report(&self) -> ShadowReport {
         let (mae_sum, mut mae, layer) = {
-            let g = self.inner.lock().unwrap();
+            let g = self.inner.lock_recover();
             (g.mae_sum, g.mae.samples.clone(), g.layer_err.clone())
         };
-        mae.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        mae.sort_unstable_by(f64::total_cmp);
         let mirrored = self.mirrored.load(Ordering::Relaxed);
         let layer_err_quantiles = layer
             .into_iter()
             .map(|r| {
                 let mut s = r.samples;
-                s.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                s.sort_unstable_by(f64::total_cmp);
                 (percentile(&s, 0.50), percentile(&s, 0.99))
             })
             .collect();
@@ -795,7 +794,7 @@ mod tests {
         // 2 observations outvote a's thousands
         let hub = MetricsHub::new();
         let a = Arc::new(Metrics::with_reservoir(8));
-        hub.models.lock().unwrap().insert("a@1".into(), a.clone());
+        hub.models.lock_recover().insert("a@1".into(), a.clone());
         let b = hub.for_model("b@1");
         for _ in 0..4096 {
             a.record_request(Duration::from_micros(10), Duration::from_micros(1));

@@ -51,6 +51,7 @@ pub fn read_frame(r: &mut impl Read, max_frame: usize) -> std::io::Result<FrameR
     while got < 4 {
         // retry EINTR like read_exact does for the payload below; a
         // signal must not tear down a healthy connection mid-header
+        // lint: allow(index, "got < 4 is the loop condition; header is [u8; 4]")
         let n = match r.read(&mut header[got..]) {
             Ok(n) => n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,

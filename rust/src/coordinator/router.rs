@@ -31,6 +31,7 @@ use super::batcher::BatchPolicy;
 use super::scheduler::{SchedMode, SchedulerOptions};
 use super::server::ServeOptions;
 use super::tcp::TcpLimits;
+use crate::util::sync::LockExt;
 use crate::acim::{AcimModel, AcimOptions};
 use crate::baseline::MlpModel;
 use crate::config::AppConfig;
@@ -126,27 +127,39 @@ impl BackendFactory {
         }
 
         match kind {
-            BackendKind::Mlp => unreachable!("handled above"),
+            // the mlp branch above returned for both mlp cases; a
+            // fall-through is a routing bug, surfaced as a structured
+            // error rather than a panic on the serving path
+            BackendKind::Mlp => Err(Error::Runtime(format!(
+                "backend routing bug: mlp fell through for model '{model}'"
+            ))),
             BackendKind::Pjrt => {
                 let batch = self.cfg.server.max_batch;
                 // use the largest compiled batch <= configured max
-                let mut sizes: Vec<usize> = entry.hlo.keys().copied().collect();
-                sizes.sort_unstable();
-                let chosen = sizes
+                let mut pairs: Vec<(usize, &String)> =
+                    entry.hlo.iter().map(|(&s, f)| (s, f)).collect();
+                pairs.sort_unstable_by_key(|&(s, _)| s);
+                let (chosen, file) = pairs
                     .iter()
                     .rev()
-                    .find(|&&s| s <= batch)
-                    .or(sizes.first())
+                    .find(|&&(s, _)| s <= batch)
+                    .or(pairs.first())
                     .copied()
                     .ok_or_else(|| {
                         Error::Artifact(format!("model '{model}' has no HLO"))
                     })?;
-                let file = entry.hlo.get(&chosen).expect("chosen batch exists");
+                let (&in_dim, &out_dim) = entry
+                    .dims
+                    .first()
+                    .zip(entry.dims.last())
+                    .ok_or_else(|| {
+                        Error::Artifact(format!("model '{model}' has empty dims"))
+                    })?;
                 let session = PjrtSession::spawn(
                     self.dir.join(file),
                     chosen,
-                    entry.dims[0],
-                    *entry.dims.last().unwrap(),
+                    in_dim,
+                    out_dim,
                     model.to_string(),
                 )?;
                 Ok(Arc::new(session))
@@ -202,7 +215,7 @@ impl BackendFactory {
         weights_path: &Path,
     ) -> Result<Arc<Vec<Vec<f64>>>> {
         let key = crate::registry::digest_file(weights_path)?;
-        if let Some(hit) = self.occupancy.lock().unwrap().get(&key) {
+        if let Some(hit) = self.occupancy.lock_recover().get(&key) {
             return Ok(hit.clone());
         }
         // compute outside the lock: calibration propagation is the slow
@@ -217,8 +230,7 @@ impl BackendFactory {
         };
         let arc = Arc::new(probs);
         self.occupancy
-            .lock()
-            .unwrap()
+            .lock_recover()
             .entry(key)
             .or_insert_with(|| arc.clone());
         Ok(arc)
@@ -227,7 +239,7 @@ impl BackendFactory {
     /// Number of cached occupancy entries (test hook for the
     /// calibrate-once contract).
     pub fn occupancy_cache_len(&self) -> usize {
-        self.occupancy.lock().unwrap().len()
+        self.occupancy.lock_recover().len()
     }
 
     /// Build the mirror executor for shadow serving `model` on `kind`.

@@ -35,6 +35,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::batcher::Request;
+use crate::util::sync::{CondvarExt, LockExt};
 
 /// Identity of a submitting client for fairness accounting. TCP
 /// connections hold one for their lifetime; direct API callers get a
@@ -184,13 +185,13 @@ impl Scheduler {
 
     /// Rows currently queued across all clients.
     pub fn queued(&self) -> usize {
-        self.inner.lock().unwrap().total
+        self.inner.lock_recover().total
     }
 
     /// Point-in-time queue gauges for the metrics plane (one lock
     /// acquisition; never taken on the admission or drain paths).
     pub fn gauges(&self) -> QueueGauges {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_recover();
         match self.opts.mode {
             // fifo keeps no per-client accounting — one shared queue
             SchedMode::Fifo => QueueGauges {
@@ -209,7 +210,7 @@ impl Scheduler {
     /// Non-blocking admission: reject over capacity, and in `drr` mode
     /// over the per-client quota.
     pub fn try_submit(&self, client: ClientId, req: Request) -> Submit {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         if g.closed {
             return Submit::Closed(req);
         }
@@ -249,7 +250,7 @@ impl Scheduler {
     /// of rejecting — the backpressure path for the tail of an admitted
     /// batch. Returns the request if the scheduler closed while waiting.
     pub fn submit_blocking(&self, client: ClientId, req: Request) -> Result<(), Request> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         loop {
             if g.closed {
                 return Err(req);
@@ -263,7 +264,7 @@ impl Scheduler {
                 self.readable.notify_one();
                 return Ok(());
             }
-            g = self.writable.wait(g).unwrap();
+            g = self.writable.wait_recover(g);
         }
     }
 
@@ -271,7 +272,7 @@ impl Scheduler {
     /// `None` once the scheduler is closed *and* drained (every queued
     /// request is still delivered first, so shutdown flushes).
     pub fn recv(&self) -> Option<Request> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         loop {
             if let Some(req) = self.pop_locked(&mut g) {
                 return Some(req);
@@ -279,7 +280,7 @@ impl Scheduler {
             if g.closed {
                 return None;
             }
-            g = self.readable.wait(g).unwrap();
+            g = self.readable.wait_recover(g);
         }
     }
 
@@ -291,7 +292,7 @@ impl Scheduler {
     /// Like [`Scheduler::recv`] with a deadline (the batcher's
     /// batch-close timer).
     pub fn recv_deadline(&self, deadline: Instant) -> Recv {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         loop {
             if let Some(req) = self.pop_locked(&mut g) {
                 return Recv::Req(req);
@@ -304,7 +305,7 @@ impl Scheduler {
                 return Recv::Timeout;
             }
             let (guard, timeout) =
-                self.readable.wait_timeout(g, deadline - now).unwrap();
+                self.readable.wait_timeout_recover(g, deadline - now);
             g = guard;
             if timeout.timed_out() {
                 // one last look: a submit may have raced the wakeup
@@ -322,7 +323,7 @@ impl Scheduler {
     /// Close the scheduler: all waiting submitters fail, the batcher
     /// drains what is queued and then sees end-of-stream.
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         g.closed = true;
         drop(g);
         self.readable.notify_all();
@@ -353,7 +354,9 @@ impl Scheduler {
             SchedMode::Fifo => g.fifo.pop_front()?,
             SchedMode::Drr => {
                 let front = *g.ring.front()?;
+                // lint: allow(panic, "DRR structural invariant: every ring entry has a queue")
                 let q = g.queues.get_mut(&front).expect("ring client has a queue");
+                // lint: allow(panic, "DRR structural invariant: empty queues are removed from the ring")
                 let req = q.pop_front().expect("ring queues are non-empty");
                 if q.is_empty() {
                     g.queues.remove(&front);
@@ -363,6 +366,7 @@ impl Scheduler {
                     g.window_left = g.window_left.saturating_sub(1);
                     if g.window_left == 0 {
                         // quantum spent: rotate to the next client
+                        // lint: allow(panic, "DRR structural invariant: ring non-empty while its queue is")
                         let id = g.ring.pop_front().expect("ring non-empty");
                         g.ring.push_back(id);
                         g.window_left = self.opts.fairness_window;

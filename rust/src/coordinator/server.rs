@@ -27,6 +27,7 @@ use super::scheduler::{
     ClientId, QueueGauges, RejectReason, Rejection, SchedMode, Scheduler,
     SchedulerOptions, Submit,
 };
+use crate::util::sync::LockExt;
 use crate::error::{Error, Result};
 use crate::obs::trace::{Stage, TraceHandle};
 
@@ -134,6 +135,7 @@ impl InferenceService {
         std::thread::Builder::new()
             .name("kan-edge-batcher".into())
             .spawn(move || run_batcher(batcher_sched, batch_tx, opts.policy))
+            // lint: allow(panic, "server construction, before any request is accepted")
             .expect("spawn batcher");
 
         let shared_rx = Arc::new(Mutex::new(batch_rx));
@@ -144,6 +146,7 @@ impl InferenceService {
             std::thread::Builder::new()
                 .name(format!("kan-edge-worker-{i}"))
                 .spawn(move || worker_loop(rx, se, m))
+                // lint: allow(panic, "server construction, before any request is accepted")
                 .expect("spawn worker");
         }
         let closer = Arc::new(SchedulerCloser(sched.clone()));
@@ -582,7 +585,8 @@ fn worker_loop(
 ) {
     loop {
         let batch = {
-            let guard = rx.lock().unwrap();
+            let guard = rx.lock_recover();
+            // lint: allow(lock-blocking, "shared-receiver worker pool: the lock exists to multiplex recv")
             match guard.recv() {
                 Ok(b) => b,
                 Err(_) => break,

@@ -55,8 +55,13 @@
 // config structs are routinely built as default-then-override (tests,
 // examples, callers); the style lint fights that idiom
 #![allow(clippy::field_reassign_with_default)]
+// a `pub` item that is not actually reachable from outside the crate is
+// a doc lie — surface it (kan-edge lint's drift family covers docs; the
+// compiler covers visibility)
+#![warn(unreachable_pub)]
 
 pub mod acim;
+pub mod analysis;
 pub mod baseline;
 pub mod circuits;
 pub mod client;

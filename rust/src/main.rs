@@ -103,6 +103,11 @@ COMMANDS:
   sam       --g G --array ROWS                 Fig 12 mapping comparison
   fig10                                        Fig 10 quantization sweep
   cost      --g G --dims a,b,c --tm-n N        accelerator cost estimate
+  lint      [--root DIR] [--json FILE]         repo-native static analysis:
+                                               lock discipline, panic policy,
+                                               hot-path allocations, doc
+                                               drift (docs/ANALYSIS.md);
+                                               exits 1 on findings
   stats                                        ACIM calibration statistics
   info                                         artifact manifest summary
 
@@ -230,6 +235,7 @@ fn run(args: &Args) -> Result<()> {
         "sam" => sam_cmd(&cfg, args.get_u32("g", 15), args.get_usize("array", 256)),
         "fig10" => fig10_cmd(&cfg),
         "cost" => cost_cmd(&cfg, args),
+        "lint" => lint_cmd(args),
         "stats" => stats_cmd(),
         "info" => info_cmd(&cfg),
         other => {
@@ -1794,6 +1800,61 @@ fn cost_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
         ("latency_ns", report.latency_ns.into()),
         ("num_params", report.num_params.into()),
     ]));
+    Ok(())
+}
+
+/// `kan-edge lint`: run the repo-native static analyzer over the tree
+/// rooted at `--root` (default: the current directory, falling back to
+/// the nearest ancestor containing `rust/src`). Human findings go to
+/// stdout; `--json FILE` additionally writes the machine report (CI
+/// archives it). Exits 1 when any finding survives — the analyzer is a
+/// gate, not a suggestion box.
+fn lint_cmd(args: &Args) -> Result<()> {
+    let root = match args.opts.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => {
+            // ascend from cwd to the first directory holding rust/src,
+            // so `kan-edge lint` works from anywhere inside the repo
+            let cwd = std::env::current_dir()?;
+            let mut found = None;
+            let mut probe = Some(cwd.as_path());
+            while let Some(dir) = probe {
+                if dir.join("rust").join("src").is_dir() {
+                    found = Some(dir.to_path_buf());
+                    break;
+                }
+                probe = dir.parent();
+            }
+            found.ok_or_else(|| {
+                kan_edge::Error::Config(
+                    "no rust/src in this or any parent directory; pass --root".into(),
+                )
+            })?
+        }
+    };
+    if !root.join("rust").join("src").is_dir() {
+        return Err(kan_edge::Error::Config(format!(
+            "--root {} does not contain rust/src",
+            root.display()
+        )));
+    }
+    let out = kan_edge::analysis::run_lint(&root)?;
+    if let Some(path) = args.opts.get("json") {
+        let body = kan_edge::analysis::render_json(
+            &out.findings,
+            out.files_scanned,
+            out.allows,
+            out.allows_without_reason,
+        );
+        std::fs::write(path, body.to_string())?;
+    }
+    print!(
+        "{}",
+        kan_edge::analysis::render_human(&out.findings, out.files_scanned)
+    );
+    if !out.clean() {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

@@ -31,6 +31,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::util::sync::LockExt;
 use crate::coordinator::metrics::percentile;
 use crate::util::json::{arr, obj, Value};
 
@@ -286,7 +287,7 @@ impl TraceHub {
         let record = SpanRecord::from_cell(span, model);
         if record.complete {
             self.completed.fetch_add(1, Ordering::Relaxed);
-            let mut rollup = self.rollup.lock().unwrap();
+            let mut rollup = self.rollup.lock_recover();
             let windows = rollup.entry(model.to_string()).or_default();
             windows.count += 1;
             for (w, d) in windows.windows.iter_mut().zip(&record.stages_us) {
@@ -298,7 +299,7 @@ impl TraceHub {
                 }
             }
         }
-        let mut ring = self.ring.lock().unwrap();
+        let mut ring = self.ring.lock_recover();
         if ring.len() >= self.cap {
             ring.pop_front();
         }
@@ -307,19 +308,19 @@ impl TraceHub {
 
     /// Most recent spans, newest first, at most `limit`.
     pub fn recent(&self, limit: usize) -> Vec<SpanRecord> {
-        let ring = self.ring.lock().unwrap();
+        let ring = self.ring.lock_recover();
         ring.iter().rev().take(limit).cloned().collect()
     }
 
     /// Current ring occupancy (test hook for the boundedness contract).
     pub fn ring_len(&self) -> usize {
-        self.ring.lock().unwrap().len()
+        self.ring.lock_recover().len()
     }
 
     /// p50/p99 stage breakdown for one model, if any sampled spans for
     /// it completed.
     pub fn stage_report(&self, model: &str) -> Option<StageReport> {
-        let rollup = self.rollup.lock().unwrap();
+        let rollup = self.rollup.lock_recover();
         let windows = rollup.get(model)?;
         let mut p50 = [0u64; STAGES];
         let mut p99 = [0u64; STAGES];

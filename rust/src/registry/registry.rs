@@ -32,6 +32,7 @@ use super::digest;
 use super::lru::Lru;
 use super::manifest::{ModelManifest, ModelMeta};
 use super::store::{verify_file, ArtifactStore};
+use crate::util::sync::{LockExt, RwLockExt};
 use crate::config::AppConfig;
 use crate::coordinator::backend::{BackendKind, BackendSpec, RowOutput};
 use crate::coordinator::metrics::{MetricsHub, MetricsReport};
@@ -152,7 +153,7 @@ impl ModelRegistry {
 
     /// Names registered in the manifest (not necessarily live).
     pub fn model_names(&self) -> Vec<String> {
-        let g = self.inner.read().unwrap();
+        let g = self.inner.read_recover();
         let mut names: Vec<String> = g.manifest.base.models.keys().cloned().collect();
         names.sort();
         names
@@ -160,7 +161,7 @@ impl ModelRegistry {
 
     /// Summaries for `kan-edge models`.
     pub fn models(&self) -> Vec<ModelInfo> {
-        let g = self.inner.read().unwrap();
+        let g = self.inner.read_recover();
         let mut out: Vec<ModelInfo> = g
             .manifest
             .base
@@ -186,7 +187,7 @@ impl ModelRegistry {
     pub fn metrics(&self) -> Vec<(String, MetricsReport)> {
         let mut reports = self.hub.reports();
         let live: BTreeMap<String, Arc<ServedModel>> = {
-            let g = self.inner.read().unwrap();
+            let g = self.inner.read_recover();
             g.live.values().map(|s| (s.id.clone(), s.clone())).collect()
         };
         for (id, report) in reports.iter_mut() {
@@ -215,7 +216,7 @@ impl ModelRegistry {
     /// Slow (reads weights, may compile); called with no locks held.
     fn build_served(&self, name: &str) -> Result<Arc<ServedModel>> {
         let (manifest, meta) = {
-            let g = self.inner.read().unwrap();
+            let g = self.inner.read_recover();
             if !g.manifest.base.models.contains_key(name) {
                 // (names computed inline: taking the lock again here
                 // would be a re-entrant read on this RwLock)
@@ -309,7 +310,7 @@ impl ModelRegistry {
             Some(k) if k == served.spec.kind => return Ok(served.svc.clone()),
             Some(k) => k,
         };
-        if let Some(svc) = served.extra.lock().unwrap().get(&kind) {
+        if let Some(svc) = served.extra.lock_recover().get(&kind) {
             return Ok(svc.clone());
         }
         // build outside the lock (slow: reads weights, may calibrate)
@@ -340,8 +341,7 @@ impl ModelRegistry {
         );
         Ok(served
             .extra
-            .lock()
-            .unwrap()
+            .lock_recover()
             .entry(kind)
             .or_insert(svc)
             .clone())
@@ -355,7 +355,7 @@ impl ModelRegistry {
     pub fn pin(&self, spec: &str) -> Result<()> {
         let (name, version) = parse_model_spec(spec)?;
         let current = {
-            let g = self.inner.read().unwrap();
+            let g = self.inner.read_recover();
             g.manifest
                 .base
                 .models
@@ -374,17 +374,17 @@ impl ModelRegistry {
                 )));
             }
         }
-        self.pinned.lock().unwrap().insert(name.to_string());
+        self.pinned.lock_recover().insert(name.to_string());
         Ok(())
     }
 
     /// Remove an eviction pin; returns whether it existed.
     pub fn unpin(&self, name: &str) -> bool {
-        self.pinned.lock().unwrap().remove(name)
+        self.pinned.lock_recover().remove(name)
     }
 
     pub fn is_pinned(&self, name: &str) -> bool {
-        self.pinned.lock().unwrap().contains(name)
+        self.pinned.lock_recover().contains(name)
     }
 
     /// Track `name` in the LRU and apply any pin-respecting eviction:
@@ -392,10 +392,9 @@ impl ModelRegistry {
     /// capacity instead when everything else is pinned).
     fn lru_admit(&self, name: &str, live: &mut BTreeMap<String, Arc<ServedModel>>) {
         let evicted = {
-            let pinned = self.pinned.lock().unwrap();
+            let pinned = self.pinned.lock_recover();
             self.lru
-                .lock()
-                .unwrap()
+                .lock_recover()
                 .insert_with(name.to_string(), |k| !pinned.contains(k))
         };
         if let Some(old) = evicted {
@@ -407,12 +406,12 @@ impl ModelRegistry {
 
     /// The live pipeline for `name`, loading it on first use (LRU-bounded).
     pub fn ensure_loaded(&self, name: &str) -> Result<Arc<ServedModel>> {
-        if let Some(served) = self.inner.read().unwrap().live.get(name) {
-            self.lru.lock().unwrap().touch(&name.to_string());
+        if let Some(served) = self.inner.read_recover().live.get(name) {
+            self.lru.lock_recover().touch(&name.to_string());
             return Ok(served.clone());
         }
         let built = self.build_served(name)?;
-        let mut g = self.inner.write().unwrap();
+        let mut g = self.inner.write_recover();
         // lost the race? serve whichever version won
         if let Some(existing) = g.live.get(name) {
             return Ok(existing.clone());
@@ -425,8 +424,8 @@ impl ModelRegistry {
     /// Unload `name` (manifest entry stays; next request reloads).
     /// Returns whether it was live.
     pub fn retire(&self, name: &str) -> bool {
-        let mut g = self.inner.write().unwrap();
-        self.lru.lock().unwrap().remove(&name.to_string());
+        let mut g = self.inner.write_recover();
+        self.lru.lock_recover().remove(&name.to_string());
         g.live.remove(name).is_some()
     }
 
@@ -441,7 +440,7 @@ impl ModelRegistry {
             // a doomed request must not build a backend (and potentially
             // LRU-evict a serving model) only to be refused afterwards
             let current = {
-                let g = self.inner.read().unwrap();
+                let g = self.inner.read_recover();
                 g.manifest
                     .base
                     .models
@@ -576,7 +575,7 @@ impl ModelRegistry {
     /// swap it in. In-flight requests on the old pipeline complete.
     pub fn reload_model(&self, name: &str) -> Result<Arc<ServedModel>> {
         let built = self.build_served(name)?;
-        let mut g = self.inner.write().unwrap();
+        let mut g = self.inner.write_recover();
         g.live.insert(name.to_string(), built.clone());
         // keep live and the LRU in sync: reloading a model that was not
         // tracked (non-live reload, or a racing eviction) can push another
@@ -592,12 +591,12 @@ impl ModelRegistry {
     pub fn poll_reload(&self) -> Result<Vec<String>> {
         let fresh = ModelManifest::load(&self.dir)?;
         {
-            let mut g = self.inner.write().unwrap();
+            let mut g = self.inner.write_recover();
             g.manifest = fresh;
         }
         // snapshot live state, then compare digests without locks
         let live: Vec<(String, u32, String)> = {
-            let g = self.inner.read().unwrap();
+            let g = self.inner.read_recover();
             g.live
                 .values()
                 .map(|s| (s.name.clone(), s.version, s.digest.clone()))
@@ -606,7 +605,7 @@ impl ModelRegistry {
         let mut swapped = Vec::new();
         for (name, version, old_digest) in live {
             let lookup = {
-                let g = self.inner.read().unwrap();
+                let g = self.inner.read_recover();
                 g.manifest
                     .base
                     .models
@@ -654,7 +653,7 @@ impl ModelRegistry {
         version_override: Option<u32>,
     ) -> Result<(String, ModelMeta)> {
         let published = {
-            let mut g = self.inner.write().unwrap();
+            let mut g = self.inner.write_recover();
             let published = super::publish::publish_into(
                 &mut g.manifest,
                 &self.store,
@@ -667,7 +666,7 @@ impl ModelRegistry {
             published
         };
         let (name, meta) = &published;
-        let was_live = self.inner.read().unwrap().live.contains_key(name);
+        let was_live = self.inner.read_recover().live.contains_key(name);
         if was_live {
             self.reload_model(name)?;
         }
@@ -716,7 +715,7 @@ impl Dispatch for ModelRegistry {
         // served-backend capabilities for live variants, from the
         // primary session's spec + shadow status
         let live_info: BTreeMap<String, BackendInfo> = {
-            let g = self.inner.read().unwrap();
+            let g = self.inner.read_recover();
             g.live
                 .values()
                 .map(|s| {
@@ -749,7 +748,7 @@ impl Dispatch for ModelRegistry {
     }
 
     fn live_model_count(&self) -> usize {
-        self.inner.read().unwrap().live.len()
+        self.inner.read_recover().live.len()
     }
 
     /// Replication read side: resolve `digest` in the content-addressed
@@ -764,7 +763,7 @@ impl Dispatch for ModelRegistry {
         let path = self.store.open_verified(digest_str)?;
         let data = std::fs::read(&path)?;
         let meta = {
-            let g = self.inner.read().unwrap();
+            let g = self.inner.read_recover();
             g.manifest.base.models.iter().find_map(|(name, e)| {
                 let m = g.manifest.meta_for(name);
                 (m.digest.as_deref() == Some(digest_str)).then(|| {
@@ -801,7 +800,7 @@ impl Dispatch for ModelRegistry {
             )));
         }
         {
-            let g = self.inner.read().unwrap();
+            let g = self.inner.read_recover();
             if g.manifest.base.models.contains_key(name) {
                 let m = g.manifest.meta_for(name);
                 if m.digest.as_deref() == Some(digest_str)

@@ -7,6 +7,7 @@
 pub mod bench;
 pub mod json;
 pub mod rng;
+pub mod sync;
 
 pub use json::Value;
 pub use rng::Rng;

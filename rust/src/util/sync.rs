@@ -1,0 +1,125 @@
+//! Poisoning-recovery lock helpers for the serving path.
+//!
+//! A poisoned `Mutex`/`RwLock` means some thread panicked while holding
+//! the guard. The serving stack's policy is **availability over
+//! poisoning**: every shared structure behind a lock here is either a
+//! monotone counter set, a bounded ring, or a map that is rebuilt from
+//! durable state (the manifest) — recovering the guard and continuing
+//! is strictly better than letting one panicked worker cascade a panic
+//! into every thread that touches the same lock. Request-path panics
+//! are already converted to structured `internal` errors by the
+//! dispatch layer's `catch_unwind`; these helpers make sure the *next*
+//! request does not inherit the blast radius.
+//!
+//! The repo-native lint (`kan-edge lint`, see `docs/ANALYSIS.md`)
+//! enforces the pairing: a bare `.lock().unwrap()` in a serving module
+//! is a `lock-poison` finding; acquisitions through these helpers are
+//! recognized as the sanctioned idiom.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard,
+    RwLockWriteGuard, WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// `Mutex` acquisition that recovers from poisoning instead of
+/// propagating the panic.
+pub trait LockExt<T> {
+    /// Like `lock().unwrap()`, but a poisoned mutex yields its inner
+    /// guard instead of panicking.
+    fn lock_recover(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn lock_recover(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// `RwLock` acquisition that recovers from poisoning.
+pub trait RwLockExt<T> {
+    fn read_recover(&self) -> RwLockReadGuard<'_, T>;
+    fn write_recover(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T> RwLockExt<T> for RwLock<T> {
+    fn read_recover(&self) -> RwLockReadGuard<'_, T> {
+        self.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn write_recover(&self) -> RwLockWriteGuard<'_, T> {
+        self.write().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Condvar waits that recover the re-acquired guard from poisoning.
+/// (The wait itself *releases* the lock — it is never a
+/// held-across-blocking hazard; only the re-acquisition can observe
+/// poison.)
+pub trait CondvarExt {
+    fn wait_recover<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T>;
+    fn wait_timeout_recover<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult);
+}
+
+impl CondvarExt for Condvar {
+    fn wait_recover<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.wait(guard).unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn wait_timeout_recover<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        self.wait_timeout(guard, dur)
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock_recover();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*m.lock_recover(), 7);
+        *m.lock_recover() = 8;
+        assert_eq!(*m.lock_recover(), 8);
+    }
+
+    #[test]
+    fn rwlock_recover_survives_poison() {
+        let l = Arc::new(RwLock::new(1u32));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write_recover();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*l.read_recover(), 1);
+        *l.write_recover() = 2;
+        assert_eq!(*l.read_recover(), 2);
+    }
+
+    #[test]
+    fn wait_timeout_recover_times_out() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = m.lock_recover();
+        let (_g, res) = cv.wait_timeout_recover(g, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

@@ -1,0 +1,160 @@
+//! Analyzer behavior tests: each fixture under `fixtures/lint/` is
+//! planted into a throwaway mini-tree at the path its rule polices,
+//! `run_lint` runs over that tree, and the expected rule (and only the
+//! expected rule) must fire. The final test is the self-check: the
+//! shipped tree must be clean — zero findings, zero reason-less
+//! suppressions.
+
+use kan_edge::analysis::{run_lint, Finding, LintOutcome};
+use std::path::{Path, PathBuf};
+
+/// Build a disposable repo-shaped tree containing `files` (repo-relative
+/// path → contents) and lint it.
+fn lint_tree(tag: &str, files: &[(&str, &str)]) -> LintOutcome {
+    let root = std::env::temp_dir()
+        .join(format!("kan_edge_lint_fixture_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    for (rel, content) in files {
+        let p = root.join(rel);
+        std::fs::create_dir_all(p.parent().expect("fixture path has a parent"))
+            .expect("mkdir fixture tree");
+        std::fs::write(&p, content).expect("write fixture");
+    }
+    let out = run_lint(&root).expect("lint fixture tree");
+    let _ = std::fs::remove_dir_all(&root);
+    out
+}
+
+fn rules(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+#[test]
+fn lock_cycle_fixture_trips() {
+    let out = lint_tree(
+        "cycle",
+        &[(
+            "rust/src/coordinator/state.rs",
+            include_str!("fixtures/lint/lock_cycle.rs"),
+        )],
+    );
+    assert_eq!(rules(&out.findings), ["lock-cycle"], "{:#?}", out.findings);
+    assert!(
+        out.findings[0].msg.contains("state.a") && out.findings[0].msg.contains("state.b"),
+        "cycle message should name both locks: {}",
+        out.findings[0].msg
+    );
+}
+
+#[test]
+fn lock_across_send_fixture_trips() {
+    let out = lint_tree(
+        "blocking",
+        &[(
+            "rust/src/coordinator/pipe.rs",
+            include_str!("fixtures/lint/lock_blocking.rs"),
+        )],
+    );
+    assert_eq!(rules(&out.findings), ["lock-blocking"], "{:#?}", out.findings);
+    assert!(out.findings[0].msg.contains("send"), "{}", out.findings[0].msg);
+}
+
+#[test]
+fn hot_path_alloc_fixture_trips() {
+    let out = lint_tree(
+        "alloc",
+        &[(
+            "rust/src/kan/engine.rs",
+            include_str!("fixtures/lint/hot_alloc.rs"),
+        )],
+    );
+    assert_eq!(rules(&out.findings), ["alloc"], "{:#?}", out.findings);
+    assert!(
+        out.findings[0].msg.contains("forward_into"),
+        "{}",
+        out.findings[0].msg
+    );
+}
+
+#[test]
+fn undocumented_error_code_fixture_trips() {
+    let out = lint_tree(
+        "drift",
+        &[
+            (
+                "rust/src/coordinator/protocol.rs",
+                include_str!("fixtures/lint/undocumented_code.rs"),
+            ),
+            (
+                "docs/PROTOCOL.md",
+                "# Protocol\n\nError codes:\n\n| code | meaning |\n|---|---|\n\
+                 | `bad_thing` | something bad happened |\n",
+            ),
+        ],
+    );
+    assert_eq!(rules(&out.findings), ["doc-drift"], "{:#?}", out.findings);
+    assert!(out.findings[0].msg.contains("mystery"), "{}", out.findings[0].msg);
+}
+
+#[test]
+fn panic_and_poison_fixture_trips() {
+    let out = lint_tree(
+        "panic",
+        &[(
+            "rust/src/cluster/worker.rs",
+            include_str!("fixtures/lint/panic_unwrap.rs"),
+        )],
+    );
+    let mut got = rules(&out.findings);
+    got.sort_unstable();
+    assert_eq!(got, ["panic", "poison"], "{:#?}", out.findings);
+}
+
+#[test]
+fn clean_fixture_passes() {
+    let out = lint_tree(
+        "clean",
+        &[(
+            "rust/src/coordinator/clean.rs",
+            include_str!("fixtures/lint/clean.rs"),
+        )],
+    );
+    assert!(out.clean(), "clean fixture should produce no findings: {:#?}", out.findings);
+}
+
+#[test]
+fn reasonless_annotation_is_flagged() {
+    let src = "\
+pub fn f(v: Option<u32>) -> u32 {
+    // lint: allow(panic)
+    v.unwrap()
+}
+";
+    let out = lint_tree("badann", &[("rust/src/obs/x.rs", src)]);
+    assert_eq!(rules(&out.findings), ["bad-annotation"], "{:#?}", out.findings);
+}
+
+#[test]
+fn shipped_tree_is_clean() {
+    // CARGO_MANIFEST_DIR is <repo>/rust; the repo root is its parent
+    let root: PathBuf = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .to_path_buf();
+    let out = run_lint(&root).expect("lint shipped tree");
+    assert!(out.files_scanned > 40, "expected a full tree scan, got {}", out.files_scanned);
+    assert!(
+        out.clean(),
+        "shipped tree must pass its own lint:\n{}",
+        kan_edge::analysis::render_human(&out.findings, out.files_scanned)
+    );
+    assert_eq!(
+        out.allows_without_reason, 0,
+        "every suppression in the tree must carry a reason"
+    );
+    assert!(
+        out.allows > 0,
+        "the tree carries reasoned suppressions; zero means annotation \
+         collection silently broke"
+    );
+}

@@ -1,0 +1,26 @@
+// Fixture: serving-path code written to policy — recover helpers for
+// locks, a reasoned annotation for the one deliberate expect. The
+// analyzer must report nothing. Not compiled; consumed as text by
+// tests/analysis.rs via include_str!.
+use std::sync::Mutex;
+
+pub struct Clean {
+    n: Mutex<u64>,
+}
+
+impl Clean {
+    pub fn bump(&self) -> u64 {
+        let mut g = self.n.lock_recover();
+        *g += 1;
+        *g
+    }
+
+    pub fn must(&self) -> u64 {
+        // lint: allow(panic, "fixture: demonstrates a reasoned suppression")
+        self.maybe().expect("fixture invariant")
+    }
+
+    fn maybe(&self) -> Option<u64> {
+        Some(*self.n.lock_recover())
+    }
+}

@@ -1,0 +1,7 @@
+// Fixture: a per-row allocation inside an engine steady-state function
+// — the analyzer must report `alloc`. Not compiled; consumed as text by
+// tests/analysis.rs via include_str!.
+pub fn forward_into(xs: &[f32], out: &mut Vec<f32>) {
+    let scratch: Vec<f32> = xs.to_vec();
+    out.extend(scratch);
+}

@@ -1,0 +1,16 @@
+// Fixture: a mutex guard held across a channel send — the analyzer
+// must report `lock-blocking`. Not compiled; consumed as text by
+// tests/analysis.rs via include_str!.
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+pub struct Pipe {
+    tx: Mutex<Sender<u32>>,
+}
+
+impl Pipe {
+    pub fn push(&self, v: u32) {
+        let tx = self.tx.lock_recover();
+        let _ = tx.send(v);
+    }
+}

@@ -1,0 +1,29 @@
+// Fixture: two mutexes acquired in opposite orders by two functions —
+// the analyzer must report a `lock-cycle`. Not compiled; consumed as
+// text by tests/analysis.rs via include_str!.
+use std::sync::Mutex;
+
+pub struct S {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl S {
+    pub fn ab(&self) -> u32 {
+        let ga = self.a.lock_recover();
+        let gb = self.b.lock_recover();
+        let v = *ga + *gb;
+        drop(gb);
+        drop(ga);
+        v
+    }
+
+    pub fn ba(&self) -> u32 {
+        let gb = self.b.lock_recover();
+        let ga = self.a.lock_recover();
+        let v = *ga + *gb;
+        drop(ga);
+        drop(gb);
+        v
+    }
+}

@@ -1,0 +1,19 @@
+// Fixture: a bare poison-unwrap on a lock plus an unwrap on
+// request-derived data — the analyzer must report `poison` for the
+// first and `panic` for the second. Not compiled; consumed as text by
+// tests/analysis.rs via include_str!.
+use std::sync::Mutex;
+
+pub struct W {
+    state: Mutex<u32>,
+}
+
+impl W {
+    pub fn read_state(&self) -> u32 {
+        *self.state.lock().unwrap()
+    }
+
+    pub fn explode(&self, v: Option<u32>) -> u32 {
+        v.unwrap()
+    }
+}

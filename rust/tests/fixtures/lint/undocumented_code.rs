@@ -1,0 +1,16 @@
+// Fixture: `as_str` produces a wire error code the PROTOCOL.md table
+// does not list — the analyzer must report `doc-drift`. Not compiled;
+// consumed as text by tests/analysis.rs via include_str!.
+pub enum ErrorCode {
+    BadThing,
+    Mystery,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadThing => "bad_thing",
+            ErrorCode::Mystery => "mystery",
+        }
+    }
+}

@@ -6,8 +6,12 @@ markdown links `[text](target)` and verifies that every *relative*
 target resolves to an existing file (fragments are stripped; external
 http(s)/mailto links are skipped — CI must not depend on the network).
 
-Exit status: 0 when every link resolves, 1 otherwise (one line per
-broken link). Run from the repository root:
+Also enforces index completeness: every docs/*.md (other than the
+index itself) must be linked from docs/README.md, so a new subsystem
+document cannot land without registering itself in the reading index.
+
+Exit status: 0 when every link resolves and the index is complete,
+1 otherwise (one line per problem). Run from the repository root:
 
     python3 scripts/check_links.py
 """
@@ -60,6 +64,21 @@ def check_file(path: Path, root: Path):
                 yield line_no, target, "missing"
 
 
+def check_index(root: Path):
+    """Yield names of docs/*.md files docs/README.md does not link."""
+    index = root / "docs" / "README.md"
+    if not index.exists():
+        return
+    linked = set()
+    for m in LINK_RE.finditer(index.read_text(encoding="utf-8")):
+        file_part = m.group(1).split("#", 1)[0]
+        if file_part:
+            linked.add(Path(file_part).name)
+    for doc in sorted((root / "docs").glob("*.md")):
+        if doc.name != "README.md" and doc.name not in linked:
+            yield doc.name
+
+
 def main():
     root = Path(__file__).resolve().parent.parent
     sources = collect_sources(root)
@@ -72,6 +91,9 @@ def main():
             rel = src.relative_to(root)
             print(f"{rel}:{line_no}: broken link '{target}' ({why})")
             broken += 1
+    for name in check_index(root):
+        print(f"docs/README.md: docs/{name} is not linked from the index")
+        broken += 1
     checked = ", ".join(str(s.relative_to(root)) for s in sources)
     if broken:
         print(f"check_links: {broken} broken link(s) across: {checked}")
