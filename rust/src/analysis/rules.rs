@@ -12,7 +12,7 @@ use std::collections::{BTreeMap, BTreeSet};
 /// coordinator which catches nothing — panics there are caught by the
 /// engine test suite, not by request traffic.
 fn policed(rel_src: &str) -> bool {
-    ["coordinator/", "cluster/", "registry/", "obs/"]
+    ["coordinator/", "cluster/", "registry/", "rollout/", "obs/"]
         .iter()
         .any(|d| rel_src.starts_with(d))
 }
@@ -474,5 +474,5 @@ pub fn alloc_rule(files: &[ScannedFile], report: &mut Report) {
 
 /// The policed-module prefixes, for the CLI's self-description.
 pub fn policed_dirs() -> &'static [&'static str] {
-    &["coordinator/", "cluster/", "registry/", "obs/"]
+    &["coordinator/", "cluster/", "registry/", "rollout/", "obs/"]
 }

@@ -496,6 +496,51 @@ impl KanClient {
         }
     }
 
+    /// Start a staged canary rollout of `model` (the manifest-current
+    /// version) against `baseline` (the retained previous version).
+    /// Returns the initial rollout status body (see `docs/ROLLOUT.md`).
+    pub fn rollout_start(&mut self, model: &str, baseline: &str) -> Result<Value> {
+        let id = self.fresh_id();
+        self.rollout_call(Request::RolloutStart {
+            id,
+            model: model.to_string(),
+            baseline: baseline.to_string(),
+        })
+    }
+
+    /// Rollout state machines, gate evaluations and decision history —
+    /// every rollout on the endpoint, or just `model`'s.
+    pub fn rollout_status(&mut self, model: Option<&str>) -> Result<Value> {
+        let id = self.fresh_id();
+        self.rollout_call(Request::RolloutStatus {
+            id,
+            model: model.map(str::to_string),
+        })
+    }
+
+    /// Operator-initiated instant rollback of `model`'s rollout.
+    pub fn rollout_abort(&mut self, model: &str) -> Result<Value> {
+        let id = self.fresh_id();
+        self.rollout_call(Request::RolloutAbort { id, model: model.to_string() })
+    }
+
+    /// Drop `model`'s terminal rollout record (and its routing
+    /// override). Returns the final status body.
+    pub fn rollout_clear(&mut self, model: &str) -> Result<Value> {
+        let id = self.fresh_id();
+        self.rollout_call(Request::RolloutClear { id, model: model.to_string() })
+    }
+
+    fn rollout_call(&mut self, req: Request) -> Result<Value> {
+        match self.call(req)? {
+            Response::Rollout { body, .. } => Ok(body),
+            Response::Error { code, message, retry_after_ms, .. } => {
+                Err(wire_error(code, &message, retry_after_ms))
+            }
+            other => Err(unexpected(other)),
+        }
+    }
+
     // ---- plumbing --------------------------------------------------------
 
     fn fresh_id(&mut self) -> i64 {

@@ -321,6 +321,55 @@ impl ClusterRouter {
             Err(_) => None,
         }
     }
+
+    // ---- rollout control ---------------------------------------------------
+
+    /// Forward one rollout control verb to the shard that owns `name`.
+    /// Placement keys on the *bare* model name — the same key default
+    /// (unversioned) inference traffic hashes to — so the shard running
+    /// the rollout is the shard splitting the traffic. Transport errors
+    /// fail over along the replica preference order; clean application
+    /// errors come back untouched (they are deterministic).
+    fn forward_rollout(
+        &self,
+        name: &str,
+        mut call: impl FnMut(&mut KanClient) -> Result<Value>,
+    ) -> Result<Value> {
+        let candidates = self.route_candidates(name)?;
+        self.counters.forwards.fetch_add(1, Ordering::Relaxed);
+        let mut last_err: Option<Error> = None;
+        for (i, &node) in candidates.iter().enumerate() {
+            let mut client = match self.checkout(node) {
+                Ok(c) => c,
+                Err(e) => {
+                    self.members.record_failure(node);
+                    last_err = Some(e);
+                    if i + 1 < candidates.len() {
+                        self.counters.failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                    continue;
+                }
+            };
+            match call(&mut client) {
+                Ok(body) => {
+                    self.put_back(node, client);
+                    return Ok(body);
+                }
+                Err(e) if is_remote_app_error(Some(&e)) => {
+                    self.put_back(node, client);
+                    return Err(e);
+                }
+                Err(e) => {
+                    self.members.record_failure(node);
+                    last_err = Some(e);
+                    if i + 1 < candidates.len() {
+                        self.counters.failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::Serving("no cluster replica answered".into())))
+    }
 }
 
 impl Drop for ClusterRouter {
@@ -729,5 +778,56 @@ impl Dispatch for ClusterRouter {
             ("nodes", Value::Object(nodes)),
             ("models", models),
         ]))
+    }
+
+    /// Start a rollout on the shard owning the candidate's model name.
+    fn rollout_start(&self, model: &str, baseline: &str) -> Result<Value> {
+        let (name, _) = parse_model_spec(model)?;
+        self.forward_rollout(name, |c| c.rollout_start(model, baseline))
+    }
+
+    /// Named status goes to the owning shard; the unnamed form fans out
+    /// to every routable node and merges each shard's `rollouts` map
+    /// (names are globally unique — one shard owns each rollout).
+    fn rollout_status(&self, model: Option<&str>) -> Result<Value> {
+        if let Some(spec) = model {
+            let (name, _) = parse_model_spec(spec)?;
+            return self.forward_rollout(name, |c| c.rollout_status(Some(spec)));
+        }
+        let mut merged: BTreeMap<String, Value> = BTreeMap::new();
+        let mut reachable = 0usize;
+        for node in 0..self.members.len() {
+            if !self.members.is_routable(node) {
+                continue;
+            }
+            let Ok(mut c) = self.checkout(node) else { continue };
+            if let Ok(body) = c.rollout_status(None) {
+                self.put_back(node, c);
+                reachable += 1;
+                if let Some(ro) = body.get("rollouts").and_then(Value::as_object) {
+                    for (k, v) in ro {
+                        merged.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+        }
+        if reachable == 0 {
+            return Err(Error::Serving(format!(
+                "no routable cluster node answered rollout_status ({} configured, {} up)",
+                self.members.len(),
+                self.members.up_count()
+            )));
+        }
+        Ok(obj(vec![("rollouts", Value::Object(merged))]))
+    }
+
+    fn rollout_abort(&self, model: &str) -> Result<Value> {
+        let (name, _) = parse_model_spec(model)?;
+        self.forward_rollout(name, |c| c.rollout_abort(model))
+    }
+
+    fn rollout_clear(&self, model: &str) -> Result<Value> {
+        let (name, _) = parse_model_spec(model)?;
+        self.forward_rollout(name, |c| c.rollout_clear(model))
     }
 }

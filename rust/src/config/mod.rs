@@ -26,6 +26,7 @@ pub struct AppConfig {
     pub neurosim: NeurosimConfig,
     pub observability: ObservabilityConfig,
     pub cluster: ClusterConfig,
+    pub rollout: RolloutConfig,
 }
 
 #[derive(Debug, Clone)]
@@ -273,6 +274,56 @@ impl ClusterConfig {
     }
 }
 
+/// `[rollout]` — SLO gates and ramp schedule for staged canary
+/// deployments (see [`crate::rollout`] and `docs/ROLLOUT.md`). The gates
+/// are evaluated once per observation window; every gate must hold for a
+/// full window to advance the ramp, and any breach triggers an instant
+/// rollback to the pinned baseline.
+#[derive(Debug, Clone)]
+pub struct RolloutConfig {
+    /// Canary traffic fractions for the `Ramping` steps, in [0, 1],
+    /// non-decreasing. The terminal `Observing` step always runs at
+    /// fraction 1.0, so the schedule need not end with 1.0. An entry of
+    /// 0.0 keeps all traffic on the baseline while the split machinery
+    /// runs (used by `bench-net` to price the splitter).
+    pub ramp: Vec<f64>,
+    /// Observation window per step, milliseconds.
+    pub window_ms: u64,
+    /// Minimum canary samples a window needs before the gates are
+    /// evaluated; a starved window extends instead of deciding.
+    pub min_samples: usize,
+    /// Gate: max fraction of mirrored rows whose argmax class flips
+    /// between baseline and canary, in [0, 1].
+    pub max_flip_rate: f64,
+    /// Gate: max p99 of the per-row mean absolute logit error between
+    /// baseline and canary.
+    pub max_logit_mae_p99: f64,
+    /// Gate: max canary p99 latency as a multiple of the baseline p99
+    /// (1.5 = canary may be at most 50% slower), >= 1.0.
+    pub max_latency_regression: f64,
+    /// Bound on queued divergence-mirror jobs; overflow drops the
+    /// mirror (never blocks the serving path).
+    pub queue: usize,
+    /// Controller tick period, milliseconds: how often windows are
+    /// checked for expiry.
+    pub poll_ms: u64,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> Self {
+        Self {
+            ramp: vec![0.05, 0.25, 0.5],
+            window_ms: 2000,
+            min_samples: 50,
+            max_flip_rate: 0.01,
+            max_logit_mae_p99: 0.05,
+            max_latency_regression: 1.5,
+            queue: 256,
+            poll_ms: 50,
+        }
+    }
+}
+
 fn get_f64(v: &Value, key: &str, dst: &mut f64) {
     if let Some(x) = v.get(key).and_then(|x| x.as_f64()) {
         *dst = x;
@@ -429,6 +480,22 @@ impl AppConfig {
             get_u64(c, "hedge_min_ms", &mut self.cluster.hedge_min_ms);
             get_u64(c, "hedge_max_ms", &mut self.cluster.hedge_max_ms);
         }
+        if let Some(r) = v.get("rollout") {
+            if let Some(ramp) = r.get("ramp").and_then(|x| x.as_array()) {
+                self.rollout.ramp = ramp.iter().filter_map(|f| f.as_f64()).collect();
+            }
+            get_u64(r, "window_ms", &mut self.rollout.window_ms);
+            get_usize(r, "min_samples", &mut self.rollout.min_samples);
+            get_f64(r, "max_flip_rate", &mut self.rollout.max_flip_rate);
+            get_f64(r, "max_logit_mae_p99", &mut self.rollout.max_logit_mae_p99);
+            get_f64(
+                r,
+                "max_latency_regression",
+                &mut self.rollout.max_latency_regression,
+            );
+            get_usize(r, "queue", &mut self.rollout.queue);
+            get_u64(r, "poll_ms", &mut self.rollout.poll_ms);
+        }
         if let Some(n) = v.get("neurosim") {
             if let Some(c) = n.get("constraints") {
                 self.neurosim.constraints.max_area_mm2 =
@@ -527,6 +594,45 @@ impl AppConfig {
             return Err(Error::Config(
                 "cluster.hedge_min_ms must be <= cluster.hedge_max_ms".into(),
             ));
+        }
+        for (i, f) in self.rollout.ramp.iter().enumerate() {
+            if !(*f >= 0.0 && *f <= 1.0) {
+                return Err(Error::Config(format!(
+                    "rollout.ramp[{i}] must be in [0, 1] (got {f})"
+                )));
+            }
+            if i > 0 && *f < self.rollout.ramp[i - 1] {
+                return Err(Error::Config(
+                    "rollout.ramp must be non-decreasing".into(),
+                ));
+            }
+        }
+        if self.rollout.window_ms == 0 {
+            return Err(Error::Config("rollout.window_ms must be > 0".into()));
+        }
+        if self.rollout.min_samples == 0 {
+            return Err(Error::Config("rollout.min_samples must be > 0".into()));
+        }
+        if !(self.rollout.max_flip_rate >= 0.0 && self.rollout.max_flip_rate <= 1.0) {
+            return Err(Error::Config(
+                "rollout.max_flip_rate must be in [0, 1]".into(),
+            ));
+        }
+        if self.rollout.max_logit_mae_p99 < 0.0 {
+            return Err(Error::Config(
+                "rollout.max_logit_mae_p99 must be >= 0".into(),
+            ));
+        }
+        if self.rollout.max_latency_regression < 1.0 {
+            return Err(Error::Config(
+                "rollout.max_latency_regression must be >= 1.0".into(),
+            ));
+        }
+        if self.rollout.queue == 0 {
+            return Err(Error::Config("rollout.queue must be > 0".into()));
+        }
+        if self.rollout.poll_ms == 0 {
+            return Err(Error::Config("rollout.poll_ms must be > 0".into()));
         }
         self.hardware.acim.array.validate()?;
         Ok(())
@@ -762,6 +868,61 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.cluster.hedge_min_ms = 1;
         cfg.cluster.fail_after = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rollout_section_parses_and_validates() {
+        let mut cfg = AppConfig::default();
+        assert_eq!(cfg.rollout.ramp, vec![0.05, 0.25, 0.5]);
+        assert_eq!(cfg.rollout.window_ms, 2000);
+        cfg.apply(
+            &Value::parse(
+                r#"{"rollout": {"ramp": [0.1, 0.5], "window_ms": 150,
+                    "min_samples": 10, "max_flip_rate": 0.02,
+                    "max_logit_mae_p99": 0.1, "max_latency_regression": 2.0,
+                    "queue": 64, "poll_ms": 20}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.rollout.ramp, vec![0.1, 0.5]);
+        assert_eq!(cfg.rollout.window_ms, 150);
+        assert_eq!(cfg.rollout.min_samples, 10);
+        assert_eq!(cfg.rollout.max_flip_rate, 0.02);
+        assert_eq!(cfg.rollout.max_logit_mae_p99, 0.1);
+        assert_eq!(cfg.rollout.max_latency_regression, 2.0);
+        assert_eq!(cfg.rollout.queue, 64);
+        assert_eq!(cfg.rollout.poll_ms, 20);
+        cfg.validate().unwrap();
+
+        // an empty ramp is valid: the rollout goes straight to Observing
+        cfg.rollout.ramp = Vec::new();
+        cfg.validate().unwrap();
+        // fraction 0.0 is valid (baseline-only split, used by bench-net)
+        cfg.rollout.ramp = vec![0.0];
+        cfg.validate().unwrap();
+        cfg.rollout.ramp = vec![0.5, 0.25];
+        assert!(cfg.validate().is_err(), "decreasing ramp rejected");
+        cfg.rollout.ramp = vec![1.5];
+        assert!(cfg.validate().is_err());
+        cfg.rollout.ramp = vec![0.5];
+        cfg.rollout.window_ms = 0;
+        assert!(cfg.validate().is_err());
+        cfg.rollout.window_ms = 100;
+        cfg.rollout.min_samples = 0;
+        assert!(cfg.validate().is_err());
+        cfg.rollout.min_samples = 1;
+        cfg.rollout.max_flip_rate = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.rollout.max_flip_rate = 0.01;
+        cfg.rollout.max_latency_regression = 0.5;
+        assert!(cfg.validate().is_err());
+        cfg.rollout.max_latency_regression = 1.5;
+        cfg.rollout.queue = 0;
+        assert!(cfg.validate().is_err());
+        cfg.rollout.queue = 16;
+        cfg.rollout.poll_ms = 0;
         assert!(cfg.validate().is_err());
     }
 

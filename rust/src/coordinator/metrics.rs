@@ -156,6 +156,7 @@ impl Inner {
             max_client_backlog: None,
             stages: None,
             engine_profile: None,
+            rollout: None,
         }
     }
 }
@@ -206,6 +207,10 @@ pub struct MetricsReport {
     /// interval occupancy vs the SAM calibration prior), when the
     /// model's session runs with profiling on.
     pub engine_profile: Option<Value>,
+    /// Rollout status for the model this report describes, when it is
+    /// the candidate of an active or recorded canary rollout (attached
+    /// by the registry; see [`crate::rollout`]).
+    pub rollout: Option<Value>,
 }
 
 impl MetricsReport {
@@ -239,6 +244,9 @@ impl MetricsReport {
         }
         if let Some(p) = &self.engine_profile {
             fields.push(("engine_profile", p.clone()));
+        }
+        if let Some(r) = &self.rollout {
+            fields.push(("rollout", r.clone()));
         }
         obj(fields)
     }
@@ -404,6 +412,7 @@ impl MetricsHub {
             max_client_backlog: None,
             stages: None,
             engine_profile: None,
+            rollout: None,
         }
     }
 }
@@ -505,6 +514,26 @@ impl ShadowMetrics {
         for (r, &e) in g.layer_err.iter_mut().zip(layer_err) {
             r.record(e);
         }
+    }
+
+    /// Zero every counter and reservoir. Divergence statistics are only
+    /// meaningful for one (baseline, candidate) pair: whoever owns the
+    /// mirror must reset (or replace) the metrics whenever the mirrored
+    /// target changes, so a new comparison never inherits a previous
+    /// candidate's flip/MAE reservoirs. The rollout plane also uses
+    /// this at observation-window boundaries to get per-window gates.
+    pub fn reset(&self) {
+        // take the inner lock first so a concurrent `record_mirror`
+        // cannot interleave a counter bump between the two phases
+        let mut g = self.inner.lock_recover();
+        self.sampled.store(0, Ordering::Relaxed);
+        self.mirrored.store(0, Ordering::Relaxed);
+        self.dropped.store(0, Ordering::Relaxed);
+        self.errors.store(0, Ordering::Relaxed);
+        self.argmax_flips.store(0, Ordering::Relaxed);
+        g.mae_sum = 0.0;
+        g.mae = Reservoir::new(DEFAULT_RESERVOIR_SIZE, 0x5AD0_11AE);
+        g.layer_err = Vec::new();
     }
 
     pub fn report(&self) -> ShadowReport {

@@ -106,6 +106,10 @@ pub enum ErrorCode {
     TooLarge,
     /// Admission control rejected the request (queue full).
     Overloaded,
+    /// The request conflicts with current server state (e.g. starting a
+    /// rollout while one is already in progress, or aborting one that
+    /// already finished).
+    Conflict,
     /// Unknown `op`.
     Unsupported,
     /// Anything else server-side.
@@ -119,6 +123,7 @@ impl ErrorCode {
             ErrorCode::NotFound => "not_found",
             ErrorCode::TooLarge => "too_large",
             ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Conflict => "conflict",
             ErrorCode::Unsupported => "unsupported",
             ErrorCode::Internal => "internal",
         }
@@ -130,6 +135,7 @@ impl ErrorCode {
             "not_found" => ErrorCode::NotFound,
             "too_large" => ErrorCode::TooLarge,
             "overloaded" => ErrorCode::Overloaded,
+            "conflict" => ErrorCode::Conflict,
             "unsupported" => ErrorCode::Unsupported,
             _ => ErrorCode::Internal,
         }
@@ -152,6 +158,14 @@ pub fn code_for(e: &Error) -> ErrorCode {
         Error::Serving(m) if m.contains("not supported on this endpoint") => {
             ErrorCode::Unsupported
         }
+        // rollout lifecycle conflicts: the request is well-formed but
+        // the state machine is not where it requires
+        Error::Serving(m)
+            if m.contains("already in progress") || m.contains("already finished") =>
+        {
+            ErrorCode::Conflict
+        }
+        Error::Serving(m) if m.contains("no rollout") => ErrorCode::NotFound,
         // the worker pool re-wraps backend errors as Serving with the
         // original message; a shape mismatch is the client's fault
         Error::Serving(m) if m.contains("shape mismatch") => ErrorCode::BadRequest,
@@ -412,6 +426,18 @@ pub enum Request {
         digest: String,
         data: Vec<u8>,
     },
+    /// Start a staged canary rollout: ramp `model` (which must resolve
+    /// to the manifest-current version) against `baseline` (the warm
+    /// previous version retained at hot-swap time). See
+    /// `docs/ROLLOUT.md`.
+    RolloutStart { id: i64, model: String, baseline: String },
+    /// Rollout state machines, per-window gate evaluations and decision
+    /// history — every rollout, or just `model`'s.
+    RolloutStatus { id: i64, model: Option<String> },
+    /// Operator-initiated instant rollback of `model`'s rollout.
+    RolloutAbort { id: i64, model: String },
+    /// Drop `model`'s terminal rollout record and its routing override.
+    RolloutClear { id: i64, model: String },
 }
 
 impl Request {
@@ -428,7 +454,11 @@ impl Request {
             | Request::Trace { id, .. }
             | Request::Health { id }
             | Request::PullArtifact { id, .. }
-            | Request::PushArtifact { id, .. } => *id,
+            | Request::PushArtifact { id, .. }
+            | Request::RolloutStart { id, .. }
+            | Request::RolloutStatus { id, .. }
+            | Request::RolloutAbort { id, .. }
+            | Request::RolloutClear { id, .. } => *id,
         }
     }
 
@@ -498,6 +528,29 @@ impl Request {
                     "data",
                     Value::Str(crate::registry::store::encode_hex(data)),
                 ));
+                obj(fields)
+            }
+            Request::RolloutStart { id, model, baseline } => {
+                let mut fields = base(*id, "rollout_start");
+                fields.push(("model", Value::Str(model.clone())));
+                fields.push(("baseline", Value::Str(baseline.clone())));
+                obj(fields)
+            }
+            Request::RolloutStatus { id, model } => {
+                let mut fields = base(*id, "rollout_status");
+                if let Some(m) = model {
+                    fields.push(("model", Value::Str(m.clone())));
+                }
+                obj(fields)
+            }
+            Request::RolloutAbort { id, model } => {
+                let mut fields = base(*id, "rollout_abort");
+                fields.push(("model", Value::Str(model.clone())));
+                obj(fields)
+            }
+            Request::RolloutClear { id, model } => {
+                let mut fields = base(*id, "rollout_clear");
+                fields.push(("model", Value::Str(model.clone())));
                 obj(fields)
             }
         }
@@ -607,6 +660,31 @@ impl Request {
                 .map_err(|e| WireError::bad(Some(id), e.to_string()))?;
                 Ok(Request::PushArtifact { id, model, version, digest, data })
             }
+            "rollout_start" => {
+                let model = match model {
+                    Some(m) => m,
+                    None => {
+                        return Err(WireError::bad(
+                            Some(id),
+                            "'rollout_start' requires 'model'",
+                        ))
+                    }
+                };
+                let baseline = v
+                    .req_str("baseline")
+                    .map_err(|e| WireError::bad(Some(id), e.to_string()))?
+                    .to_string();
+                Ok(Request::RolloutStart { id, model, baseline })
+            }
+            "rollout_status" => Ok(Request::RolloutStatus { id, model }),
+            "rollout_abort" => match model {
+                Some(m) => Ok(Request::RolloutAbort { id, model: m }),
+                None => Err(WireError::bad(Some(id), "'rollout_abort' requires 'model'")),
+            },
+            "rollout_clear" => match model {
+                Some(m) => Ok(Request::RolloutClear { id, model: m }),
+                None => Err(WireError::bad(Some(id), "'rollout_clear' requires 'model'")),
+            },
             other => Err(WireError {
                 id: Some(id),
                 code: ErrorCode::Unsupported,
@@ -737,6 +815,27 @@ impl WireRow {
     }
 }
 
+/// Which rollout control verb a [`Response::Rollout`] answers; its
+/// `wire_op` is the wire `op` (mirrors the request verb).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RolloutVerb {
+    Start,
+    Status,
+    Abort,
+    Clear,
+}
+
+impl RolloutVerb {
+    pub fn wire_op(self) -> &'static str {
+        match self {
+            RolloutVerb::Start => "rollout_start",
+            RolloutVerb::Status => "rollout_status",
+            RolloutVerb::Abort => "rollout_abort",
+            RolloutVerb::Clear => "rollout_clear",
+        }
+    }
+}
+
 /// A typed v2 response. `op` on the wire mirrors the request verb
 /// (`"pong"` for ping, `"error"` for failures).
 #[derive(Debug, Clone, PartialEq)]
@@ -790,6 +889,10 @@ pub enum Response {
     /// Acknowledgement of `push_artifact`: the resolved `name@version`
     /// the payload was published as, plus its verified digest.
     Published { id: i64, model: String, digest: String },
+    /// Reply to any `rollout_*` verb: a free-form status body (state
+    /// machine, per-window gate evaluations, decision history) — JSON
+    /// because its shape evolves with the controller, not the protocol.
+    Rollout { id: i64, verb: RolloutVerb, body: Value },
     /// `id` is `None` for connection-level errors (unparseable frame,
     /// oversized payload) that cannot be correlated. `retry_after_ms` is
     /// present on `overloaded` admission rejections: a best-effort
@@ -847,7 +950,8 @@ impl Response {
             | Response::Trace { id, .. }
             | Response::Health { id, .. }
             | Response::Artifact { id, .. }
-            | Response::Published { id, .. } => Some(*id),
+            | Response::Published { id, .. }
+            | Response::Rollout { id, .. } => Some(*id),
             Response::Error { id, .. } => *id,
         }
     }
@@ -940,6 +1044,7 @@ impl Response {
                 fields.push(("digest", Value::Str(digest.clone())));
                 obj(fields)
             }
+            Response::Rollout { id, verb, body } => merge_body(*id, verb.wire_op(), body),
             Response::Error { id, code, message, retry_after_ms } => {
                 let mut fields = vec![
                     (
@@ -1054,6 +1159,18 @@ impl Response {
                 model: v.req_str("model")?.to_string(),
                 digest: v.req_str("digest")?.to_string(),
             }),
+            "rollout_start" => {
+                Ok(Response::Rollout { id, verb: RolloutVerb::Start, body: strip_body(v) })
+            }
+            "rollout_status" => {
+                Ok(Response::Rollout { id, verb: RolloutVerb::Status, body: strip_body(v) })
+            }
+            "rollout_abort" => {
+                Ok(Response::Rollout { id, verb: RolloutVerb::Abort, body: strip_body(v) })
+            }
+            "rollout_clear" => {
+                Ok(Response::Rollout { id, verb: RolloutVerb::Clear, body: strip_body(v) })
+            }
             other => Err(Error::Json(format!("unknown response op '{other}'"))),
         }
     }
@@ -1186,6 +1303,29 @@ mod tests {
             .unwrap_err();
         assert_eq!(err.code, ErrorCode::BadRequest);
         assert!(err.message.contains("limit"), "{}", err.message);
+        // rollout verbs
+        roundtrip_request(Request::RolloutStart {
+            id: 18,
+            model: "kan2".into(),
+            baseline: "kan2@1".into(),
+        });
+        roundtrip_request(Request::RolloutStatus { id: 19, model: None });
+        roundtrip_request(Request::RolloutStatus { id: 20, model: Some("kan2".into()) });
+        roundtrip_request(Request::RolloutAbort { id: 21, model: "kan2".into() });
+        roundtrip_request(Request::RolloutClear { id: 22, model: "kan2".into() });
+        // rollout_start/abort/clear without a model are typed bad_requests
+        for op in ["rollout_start", "rollout_abort", "rollout_clear"] {
+            let payload = format!("{{\"id\":1,\"op\":\"{op}\"}}");
+            let err = Request::from_bytes(payload.as_bytes()).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "op {op}");
+        }
+        // rollout_start also needs a baseline
+        let err = Request::from_bytes(
+            br#"{"id":1,"op":"rollout_start","model":"kan2"}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("baseline"), "{}", err.message);
     }
 
     #[test]
@@ -1371,6 +1511,25 @@ mod tests {
             message: "client quota exceeded (4/4 rows in queue)".into(),
             retry_after_ms: Some(12),
         });
+        roundtrip_response(Response::Rollout {
+            id: 20,
+            verb: RolloutVerb::Status,
+            body: Value::parse(
+                r#"{"rollouts":{"kan2":{"phase":"ramping","fraction":0.25}}}"#,
+            )
+            .unwrap(),
+        });
+        roundtrip_response(Response::Rollout {
+            id: 21,
+            verb: RolloutVerb::Start,
+            body: Value::parse(r#"{"rollouts":{}}"#).unwrap(),
+        });
+        roundtrip_response(Response::Error {
+            id: Some(22),
+            code: ErrorCode::Conflict,
+            message: "rollout already in progress for 'kan2'".into(),
+            retry_after_ms: None,
+        });
     }
 
     #[test]
@@ -1439,6 +1598,7 @@ mod tests {
             ErrorCode::NotFound,
             ErrorCode::TooLarge,
             ErrorCode::Overloaded,
+            ErrorCode::Conflict,
             ErrorCode::Unsupported,
             ErrorCode::Internal,
         ] {
@@ -1466,6 +1626,28 @@ mod tests {
         assert_eq!(
             code_for(&Error::Serving(
                 "artifact replication is not supported on this endpoint".into()
+            )),
+            ErrorCode::Unsupported
+        );
+        assert_eq!(
+            code_for(&Error::Serving(
+                "rollout already in progress for 'kan2' (kan2@1 -> kan2@2)".into()
+            )),
+            ErrorCode::Conflict
+        );
+        assert_eq!(
+            code_for(&Error::Serving(
+                "rollout for 'kan2' already finished: promoted".into()
+            )),
+            ErrorCode::Conflict
+        );
+        assert_eq!(
+            code_for(&Error::Serving("no rollout for model 'kan9'".into())),
+            ErrorCode::NotFound
+        );
+        assert_eq!(
+            code_for(&Error::Serving(
+                "rollouts are not supported on this endpoint".into()
             )),
             ErrorCode::Unsupported
         );

@@ -491,6 +491,42 @@ pub trait Dispatch: Send + Sync {
     fn metrics_overlay(&self) -> Option<crate::util::json::Value> {
         None
     }
+
+    /// Start a staged canary rollout of `model` (the manifest-current
+    /// version) against `baseline` (see [`crate::rollout`]). Registry
+    /// endpoints override; the default refuses — a single-model endpoint
+    /// has no versions to split between.
+    fn rollout_start(
+        &self,
+        _model: &str,
+        _baseline: &str,
+    ) -> Result<crate::util::json::Value> {
+        Err(Error::Serving(
+            "rollouts are not supported on this endpoint".into(),
+        ))
+    }
+
+    /// Rollout state machines, gate evaluations and decision history
+    /// (all rollouts, or just `model`'s).
+    fn rollout_status(&self, _model: Option<&str>) -> Result<crate::util::json::Value> {
+        Err(Error::Serving(
+            "rollouts are not supported on this endpoint".into(),
+        ))
+    }
+
+    /// Operator-initiated instant rollback of `model`'s rollout.
+    fn rollout_abort(&self, _model: &str) -> Result<crate::util::json::Value> {
+        Err(Error::Serving(
+            "rollouts are not supported on this endpoint".into(),
+        ))
+    }
+
+    /// Drop `model`'s terminal rollout record (and its routing override).
+    fn rollout_clear(&self, _model: &str) -> Result<crate::util::json::Value> {
+        Err(Error::Serving(
+            "rollouts are not supported on this endpoint".into(),
+        ))
+    }
 }
 
 impl Dispatch for InferenceService {

@@ -68,9 +68,24 @@ impl ShadowState {
         kind: BackendKind,
         fraction: f64,
         queue: usize,
-        mut exec: ShadowExec,
+        exec: ShadowExec,
     ) -> Arc<ShadowState> {
-        let metrics = Arc::new(ShadowMetrics::new());
+        Self::spawn_with_metrics(kind, fraction, queue, exec, Arc::new(ShadowMetrics::new()))
+    }
+
+    /// [`Self::spawn`] with caller-owned metrics. Divergence statistics
+    /// are only meaningful per (primary, mirror) pair, so a caller that
+    /// re-targets its mirror (the rollout plane replaces the candidate)
+    /// must hand each pair its own [`ShadowMetrics`] — or
+    /// [`ShadowMetrics::reset`] the old one — instead of letting a new
+    /// comparison inherit a previous target's flip/MAE reservoirs.
+    pub fn spawn_with_metrics(
+        kind: BackendKind,
+        fraction: f64,
+        queue: usize,
+        mut exec: ShadowExec,
+        metrics: Arc<ShadowMetrics>,
+    ) -> Arc<ShadowState> {
         let (tx, rx) = sync_channel::<ShadowJob>(queue.max(1));
         let worker_metrics = metrics.clone();
         let spawned = std::thread::Builder::new()

@@ -35,7 +35,7 @@ use super::backend::{argmax_f32, BackendKind, ExecOptions};
 use super::metrics::WireMetrics;
 use super::protocol::{
     self, error_response, read_frame, write_frame, ErrorCode, FrameRead, Request,
-    Response, WireRow,
+    Response, RolloutVerb, WireRow,
 };
 use super::scheduler::ClientId;
 use super::server::{Dispatch, RouteSpec};
@@ -809,6 +809,38 @@ impl V2Conn {
                 let out = self.target.push_artifact(&model, version, &digest, &data);
                 let resp = match out {
                     Ok(resolved) => Response::Published { id, model: resolved, digest },
+                    Err(e) => error_response(Some(id), &e),
+                };
+                self.send(&resp).is_ok()
+            }
+            Request::RolloutStart { id, model, baseline } => {
+                self.wire.record_v2_control();
+                let resp = match self.target.rollout_start(&model, &baseline) {
+                    Ok(body) => Response::Rollout { id, verb: RolloutVerb::Start, body },
+                    Err(e) => error_response(Some(id), &e),
+                };
+                self.send(&resp).is_ok()
+            }
+            Request::RolloutStatus { id, model } => {
+                self.wire.record_v2_control();
+                let resp = match self.target.rollout_status(model.as_deref()) {
+                    Ok(body) => Response::Rollout { id, verb: RolloutVerb::Status, body },
+                    Err(e) => error_response(Some(id), &e),
+                };
+                self.send(&resp).is_ok()
+            }
+            Request::RolloutAbort { id, model } => {
+                self.wire.record_v2_control();
+                let resp = match self.target.rollout_abort(&model) {
+                    Ok(body) => Response::Rollout { id, verb: RolloutVerb::Abort, body },
+                    Err(e) => error_response(Some(id), &e),
+                };
+                self.send(&resp).is_ok()
+            }
+            Request::RolloutClear { id, model } => {
+                self.wire.record_v2_control();
+                let resp = match self.target.rollout_clear(&model) {
+                    Ok(body) => Response::Rollout { id, verb: RolloutVerb::Clear, body },
                     Err(e) => error_response(Some(id), &e),
                 };
                 self.send(&resp).is_ok()

@@ -48,6 +48,12 @@
 //!   [`registry::ModelRegistry`] serving many `name@version` variants
 //!   behind one TCP endpoint (requests carry an optional `"model"`
 //!   field; see [`coordinator::tcp`] for the wire protocol).
+//! * [`rollout`] — staged canary deployments: a deterministic traffic
+//!   splitter ramps the manifest-current version against the retained
+//!   previous version while SLO gates (argmax-flip rate, logit-MAE p99,
+//!   latency regression) auto-promote a clean canary or instantly roll
+//!   back a breaching one. `docs/ROLLOUT.md` covers the state machine,
+//!   gates and `rollout_*` control verbs.
 //!
 //! Python (JAX + Pallas) appears only in the build path (`make artifacts`);
 //! this crate is self-contained at run time.
@@ -76,6 +82,7 @@ pub mod neurosim;
 pub mod obs;
 pub mod quant;
 pub mod registry;
+pub mod rollout;
 pub mod runtime;
 pub mod util;
 

@@ -58,15 +58,26 @@ COMMANDS:
                                                artifact replication, hedged
                                                retries (see docs/CLUSTER.md;
                                                [cluster] config section)
-  models    [--model NAME]                     list / inspect registry
+  models    [--model NAME] [--addr HOST:PORT]  list / inspect registry
+                                               (--addr lists a live server's
+                                               models, annotated with any
+                                               active rollout)
   publish   --weights FILE [--model N] [--version V] | --synthetic [--model N]
                                                publish a new model version
                                                (--synthetic generates a tiny
                                                deterministic KAN checkpoint)
+  rollout   start MODEL@VER --baseline MODEL@VER [--addr HOST:PORT]
+            status [MODEL] | abort MODEL | clear MODEL  [--json]
+                                               staged canary deployment with
+                                               SLO-gated auto-promote and
+                                               instant auto-rollback
+                                               (docs/ROLLOUT.md; [rollout]
+                                               config section)
   bench-net [--requests N] [--batch B] [--window W]
             [--tenants T] [--mix-requests M] [--mix-batch R]
             [--mix-queue Q] [--json FILE] [--skip-mixed] [--mixed-only]
             [--skip-hotpath] [--skip-shadow] [--skip-trace] [--skip-cluster]
+            [--skip-rollout]
                                                served throughput: v1 vs v2,
                                                the digital engine-off-vs-on
                                                hot-path phase, the digital-
@@ -75,7 +86,9 @@ COMMANDS:
                                                overhead phase, the routed-vs-
                                                direct cluster phase (3 nodes
                                                + router, hedging vs a slow
-                                               replica), plus the mixed-
+                                               replica), the rollout canary
+                                               phase (split overhead at
+                                               fraction 0), plus the mixed-
                                                tenant fifo-vs-drr fairness
                                                comparison
   metrics   [--addr HOST:PORT] [--prom] [--demo]
@@ -117,22 +130,27 @@ routes to a variant (\"name\" or pinned \"name@version\"):
   {\"model\": \"kan2\", \"features\": [...]}
 and framed v2 (magic \"KAN2\") with request ids, pipelining, batch
 submit and control verbs (hello/list_models/model_info/metrics/
-metrics_prom/trace/health), spoken by kan_edge::client::KanClient.
+metrics_prom/trace/health/rollout_start/rollout_status/rollout_abort/
+rollout_clear), spoken by kan_edge::client::KanClient.
 
 Structured logs go to stderr as JSON lines; the level comes from the
 [observability] config section and the KAN_EDGE_LOG env var (error|
 warn|info|debug, env wins). See docs/OBSERVABILITY.md.
 ";
 
-/// Parsed command line: subcommand + `--key value` options.
+/// Parsed command line: subcommand + positional words + `--key value`
+/// options (`rollout start name@2` carries the action and model spec
+/// as positionals).
 struct Args {
     cmd: String,
+    pos: Vec<String>,
     opts: HashMap<String, String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> std::result::Result<Args, String> {
         let mut cmd = None;
+        let mut pos = Vec::new();
         let mut opts = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
@@ -148,11 +166,11 @@ impl Args {
             } else if cmd.is_none() {
                 cmd = Some(a.clone());
             } else {
-                return Err(format!("unexpected argument '{a}'"));
+                pos.push(a.clone());
             }
             i += 1;
         }
-        Ok(Args { cmd: cmd.unwrap_or_else(|| "help".into()), opts })
+        Ok(Args { cmd: cmd.unwrap_or_else(|| "help".into()), pos, opts })
     }
 
     fn get(&self, key: &str, default: &str) -> String {
@@ -212,9 +230,10 @@ fn run(args: &Args) -> Result<()> {
             args.opts.get("node-id").cloned(),
         ),
         "route" => route_cmd(&cfg, args),
-        "models" => models_cmd(&cfg, args.opts.get("model").map(|s| s.as_str())),
+        "models" => models_cmd(&cfg, args),
         "metrics" => metrics_cmd(&cfg, args),
         "publish" => publish_cmd(&cfg, args),
+        "rollout" => rollout_cmd(args),
         "bench-net" => bench_net_cmd(&cfg, args),
         "tune-engine" => tune_engine_cmd(&cfg, args),
         "eval" => eval(
@@ -376,7 +395,13 @@ fn route_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
     }
 }
 
-fn models_cmd(cfg: &AppConfig, inspect: Option<&str>) -> Result<()> {
+fn models_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let inspect = args.opts.get("model").map(|s| s.as_str());
+    // --addr: list a live server's models over the wire, with any
+    // active rollout annotated per name (docs/ROLLOUT.md)
+    if let Some(addr) = args.opts.get("addr") {
+        return models_remote(addr, inspect);
+    }
     let registry = ModelRegistry::open(cfg)?;
     let models = registry.models();
     match inspect {
@@ -432,6 +457,158 @@ fn models_cmd(cfg: &AppConfig, inspect: Option<&str>) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Remote `models --addr`: `list_models` over the wire plus the active
+/// rollout map, so an operator sees which names are mid-rollout without
+/// scraping metrics.
+fn models_remote(addr: &str, inspect: Option<&str>) -> Result<()> {
+    use kan_edge::util::json::Value;
+    let mut client = KanClient::connect(addr)?;
+    let models = client.list_models()?;
+    // older endpoints (or ones with no registry) refuse the verb; the
+    // listing still works, just without rollout annotations
+    let rollouts = client
+        .rollout_status(None)
+        .ok()
+        .and_then(|b| b.get("rollouts").cloned())
+        .unwrap_or(Value::Null);
+    let rollout_of = |name: &str| -> Option<String> {
+        let ro = rollouts.get(name)?;
+        let phase = ro.get("phase").and_then(|v| v.as_str())?.to_string();
+        let frac = ro.get("fraction").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        Some(format!("{phase} f={frac:.2}"))
+    };
+    println!(
+        "{:<20} {:>4} {:<6} {:>9} {:>5}  {:<22} {}",
+        "model", "ver", "kind", "params", "live", "rollout", "digest"
+    );
+    for m in &models {
+        if inspect.is_some_and(|n| n != m.name) {
+            continue;
+        }
+        println!(
+            "{:<20} {:>4} {:<6} {:>9} {:>5}  {:<22} {}",
+            m.name,
+            m.version,
+            m.kind,
+            m.num_params,
+            if m.live { "yes" } else { "no" },
+            rollout_of(&m.name).unwrap_or_else(|| "-".into()),
+            m.digest.as_deref().unwrap_or("-"),
+        );
+    }
+    Ok(())
+}
+
+/// `rollout` subcommand: drive the v2 `rollout_*` control verbs against
+/// a serving endpoint (node or cluster router). Actions:
+/// `start MODEL@VER --baseline MODEL@VER`, `status [MODEL]`,
+/// `abort MODEL`, `clear MODEL`; `--json` prints the raw body.
+fn rollout_cmd(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7777");
+    let action = args.pos.first().map(|s| s.as_str()).unwrap_or("status");
+    let model = args.pos.get(1).map(|s| s.as_str());
+    let need_model = || -> Result<&str> {
+        model.ok_or_else(|| {
+            kan_edge::Error::Serving(format!(
+                "rollout {action} needs a model (kan-edge rollout {action} NAME)"
+            ))
+        })
+    };
+    let mut client = KanClient::connect(addr.as_str())?;
+    let body = match action {
+        "start" => {
+            let spec = need_model()?;
+            let baseline = args.opts.get("baseline").ok_or_else(|| {
+                kan_edge::Error::Serving(
+                    "rollout start needs --baseline MODEL@VERSION (the warm \
+                     standby to fall back to)"
+                        .into(),
+                )
+            })?;
+            client.rollout_start(spec, baseline)?
+        }
+        "status" => client.rollout_status(model)?,
+        "abort" => client.rollout_abort(need_model()?)?,
+        "clear" => client.rollout_clear(need_model()?)?,
+        other => {
+            return Err(kan_edge::Error::Serving(format!(
+                "unknown rollout action '{other}' (start|status|abort|clear)"
+            )))
+        }
+    };
+    if args.opts.contains_key("json") {
+        println!("{body}");
+    } else {
+        print_rollouts(&body);
+    }
+    Ok(())
+}
+
+/// Human rendering of a `rollout_*` response body (`{"rollouts": ...}`).
+fn print_rollouts(body: &kan_edge::util::json::Value) {
+    let Some(rollouts) = body.get("rollouts").and_then(|v| v.as_object()) else {
+        println!("{body}");
+        return;
+    };
+    if rollouts.is_empty() {
+        println!("no active rollouts");
+        return;
+    }
+    let geti = |v: &kan_edge::util::json::Value, k: &str| -> i64 {
+        v.get(k).and_then(|x| x.as_i64()).unwrap_or(0)
+    };
+    let getf = |v: &kan_edge::util::json::Value, k: &str| -> f64 {
+        v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0)
+    };
+    let gets = |v: &kan_edge::util::json::Value, k: &str| -> String {
+        v.get(k).and_then(|x| x.as_str()).unwrap_or("-").to_string()
+    };
+    for (name, ro) in rollouts {
+        println!(
+            "{name}: {} (canary {} vs baseline {})",
+            gets(ro, "phase"),
+            gets(ro, "candidate"),
+            gets(ro, "baseline"),
+        );
+        println!(
+            "  step {}/{} fraction {:.2}; {} window(s) (+{} extended); \
+             {} canary / {} baseline requests; {:.1}s elapsed",
+            geti(ro, "step") + 1,
+            geti(ro, "steps"),
+            getf(ro, "fraction"),
+            geti(ro, "windows"),
+            geti(ro, "windows_extended"),
+            geti(ro, "canary_requests"),
+            geti(ro, "baseline_requests"),
+            getf(ro, "elapsed_ms") / 1000.0,
+        );
+        if let Some(div) = ro.get("divergence") {
+            println!(
+                "  divergence: flip_rate {:.4}, logit MAE p99 {:.5} \
+                 ({} sampled, {} dropped, {} errors)",
+                getf(div, "flip_rate"),
+                getf(div, "logit_mae_p99"),
+                geti(div, "sampled"),
+                geti(div, "dropped"),
+                geti(div, "errors"),
+            );
+        }
+        if let Some(decisions) = ro.get("decisions").and_then(|v| v.as_array()) {
+            println!("  decisions:");
+            for d in decisions {
+                println!(
+                    "    [{:>8}ms] {:<9} f={:.2} {:<10} {}",
+                    geti(d, "at_ms"),
+                    gets(d, "phase"),
+                    getf(d, "fraction"),
+                    gets(d, "action"),
+                    gets(d, "reason"),
+                );
+            }
+        }
+    }
 }
 
 fn publish_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
@@ -1052,6 +1229,22 @@ impl Dispatch for SlowDispatch {
     ) -> Result<String> {
         self.inner.push_artifact(name, version, digest, data)
     }
+
+    fn rollout_start(&self, model: &str, baseline: &str) -> Result<kan_edge::util::json::Value> {
+        self.inner.rollout_start(model, baseline)
+    }
+
+    fn rollout_status(&self, model: Option<&str>) -> Result<kan_edge::util::json::Value> {
+        self.inner.rollout_status(model)
+    }
+
+    fn rollout_abort(&self, model: &str) -> Result<kan_edge::util::json::Value> {
+        self.inner.rollout_abort(model)
+    }
+
+    fn rollout_clear(&self, model: &str) -> Result<kan_edge::util::json::Value> {
+        self.inner.rollout_clear(model)
+    }
 }
 
 /// Cluster phase: 3 single-model nodes behind a [`ClusterRouter`]
@@ -1188,6 +1381,82 @@ fn run_cluster_phase(
     ]))
 }
 
+/// Rollout canary phase: price the dispatch-path splitter at fraction
+/// 0. Measures single-row p50/p99 with no rollout, then publishes a v2
+/// over the wire (hot-swap shelves v1 as the warm baseline), starts a
+/// rollout parked at fraction 0.0 (one-step ramp of 0.0 under an
+/// unreachable window), and re-measures: every request now consults the
+/// splitter but none reach the canary, isolating the pure split
+/// overhead. The documented target (`docs/ROLLOUT.md`) is no measurable
+/// p99 regression.
+fn run_rollout_phase(
+    cfg: &AppConfig,
+    requests: usize,
+) -> Result<kan_edge::util::json::Value> {
+    use std::time::Instant;
+
+    use kan_edge::coordinator::metrics::percentile;
+    use kan_edge::util::json::{obj, Value};
+
+    let n = requests.clamp(100, 1000);
+    let mut cfg = cfg.clone();
+    cfg.rollout.ramp = vec![0.0];
+    cfg.rollout.window_ms = 3_600_000;
+    cfg.rollout.min_samples = usize::MAX;
+    let (dir, server) = spawn_bench_server(&cfg, "rollout")?;
+    let mut client = KanClient::connect(server.addr)?;
+    let mut lg = kan_edge::data::LoadGen::new(0x0110, 2);
+    client.infer(&lg.next_vec())?; // load v1 live
+
+    let mut measure = |client: &mut KanClient, n: usize| -> Result<(u64, u64)> {
+        let mut lat = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t0 = Instant::now();
+            client.infer(&lg.next_vec())?;
+            lat.push(t0.elapsed().as_micros() as u64);
+        }
+        lat.sort_unstable();
+        Ok((percentile(&lat, 0.50), percentile(&lat, 0.99)))
+    };
+    let (off_p50, off_p99) = measure(&mut client, n)?;
+
+    let ckpt = kan_edge::kan::checkpoint::synthetic_checkpoint_json("bench", 1);
+    client.push_artifact("bench", Some(2), ckpt.as_bytes())?;
+    client.rollout_start("bench@2", "bench@1")?;
+    let (on_p50, on_p99) = measure(&mut client, n)?;
+
+    let status = client.rollout_status(Some("bench"))?;
+    let fraction = status
+        .get("rollouts")
+        .and_then(|r| r.get("bench"))
+        .and_then(|ro| ro.get("fraction"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(-1.0);
+    client.rollout_abort("bench")?;
+    client.rollout_clear("bench")?;
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let ratio = on_p99 as f64 / (off_p99 as f64).max(1.0);
+    println!(
+        "\nrollout canary phase: splitter at fraction {fraction} \
+         ({n} single-row requests per mode)"
+    );
+    println!("{:<24} {:>10} {:>10}", "mode", "p50(us)", "p99(us)");
+    println!("{:<24} {:>10} {:>10}", "no rollout", off_p50, off_p99);
+    println!("{:<24} {:>10} {:>10}", "rollout @ fraction 0", on_p50, on_p99);
+    println!("  split overhead: {ratio:.2}x p99 (target: ~1.0x)");
+    Ok(obj(vec![
+        ("requests", Value::Int(n as i64)),
+        ("fraction", Value::Float(fraction)),
+        ("off_p50_us", Value::Int(off_p50 as i64)),
+        ("off_p99_us", Value::Int(off_p99 as i64)),
+        ("on_p50_us", Value::Int(on_p50 as i64)),
+        ("on_p99_us", Value::Int(on_p99 as i64)),
+        ("p99_ratio", Value::Float(ratio)),
+    ]))
+}
+
 /// Self-contained network benchmark: publish a tiny synthetic KAN into
 /// a temp registry, serve it on an ephemeral port (digital backend),
 /// and measure served throughput over one connection in three modes —
@@ -1221,6 +1490,7 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
     let skip_shadow = args.opts.contains_key("skip-shadow");
     let skip_trace = args.opts.contains_key("skip-trace");
     let skip_cluster = args.opts.contains_key("skip-cluster");
+    let skip_rollout = args.opts.contains_key("skip-rollout");
 
     let mut phases: Vec<(String, f64, f64)> = Vec::new();
     if !mixed_only {
@@ -1383,6 +1653,12 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
         cluster_report = run_cluster_phase(cfg, requests)?;
     }
 
+    // rollout canary phase: split overhead at fraction 0
+    let mut rollout_report = kan_edge::util::json::Value::Null;
+    if !mixed_only && !skip_rollout {
+        rollout_report = run_rollout_phase(cfg, requests)?;
+    }
+
     let mut mixed: Vec<MixedPolicyReport> = Vec::new();
     if !skip_mixed {
         println!(
@@ -1487,6 +1763,7 @@ fn bench_net_cmd(cfg: &AppConfig, args: &Args) -> Result<()> {
             ("shadow", shadow_report),
             ("tracing", arr(tracing_values)),
             ("cluster", cluster_report),
+            ("rollout", rollout_report),
             (
                 "mixed",
                 obj(vec![

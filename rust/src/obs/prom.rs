@@ -30,6 +30,9 @@ type Sample = (Option<(String, String)>, f64);
 /// * the top-level `nodes` object (the cluster router's rollup) becomes
 ///   per-node series the same way: `kan_edge_node_<path>` with a
 ///   `node="<id>"` label (see `docs/CLUSTER.md`);
+/// * the top-level `rollout` object (the rollout plane's overlay)
+///   becomes per-rollout series: `kan_edge_rollout_<path>` with a
+///   `model="<name>"` label (see `docs/ROLLOUT.md`);
 /// * every other top-level section renders as
 ///   `kan_edge_<section>_<path>` with no labels;
 /// * array elements append their index to the path;
@@ -55,6 +58,13 @@ pub fn render(root: &Value) -> String {
                     for (id, report) in nodes {
                         let label = Some(("node".to_string(), id.clone()));
                         collect(report, &mut vec!["node".to_string()], &label, &mut samples);
+                    }
+                }
+            } else if section == "rollout" {
+                if let Some(rollouts) = v.as_object() {
+                    for (name, report) in rollouts {
+                        let label = Some(("model".to_string(), name.clone()));
+                        collect(report, &mut vec!["rollout".to_string()], &label, &mut samples);
                     }
                 }
             } else {
@@ -331,6 +341,26 @@ mod tests {
         assert!(text.contains("kan_edge_node_up{node=\"node-b\"} 0\n"));
         // string leaves (state) are skipped, as everywhere else
         assert!(!text.contains("kan_edge_node_state"));
+        validate(&text).unwrap();
+    }
+
+    #[test]
+    fn rollout_section_gets_model_labels() {
+        let root = obj(vec![(
+            "rollout",
+            obj(vec![(
+                "mnist",
+                obj(vec![
+                    ("phase_code", Value::Int(0)),
+                    ("fraction", Value::Float(0.25)),
+                    ("flip_rate", Value::Float(0.0)),
+                ]),
+            )]),
+        )]);
+        let text = render(&root);
+        assert!(text.contains("kan_edge_rollout_phase_code{model=\"mnist\"} 0\n"));
+        assert!(text.contains("kan_edge_rollout_fraction{model=\"mnist\"} 0.25\n"));
+        assert!(text.contains("kan_edge_rollout_flip_rate{model=\"mnist\"} 0\n"));
         validate(&text).unwrap();
     }
 

@@ -25,8 +25,8 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::time::{Duration, Instant};
 
 use super::digest;
 use super::lru::Lru;
@@ -40,8 +40,10 @@ use crate::coordinator::protocol::{BackendInfo, ModelSummary};
 use crate::coordinator::router::{serve_options, BackendFactory};
 use crate::coordinator::scheduler::ClientId;
 use crate::coordinator::server::{Dispatch, InferenceService, RouteSpec};
-use crate::coordinator::shadow::ShadowState;
+use crate::coordinator::shadow::{ShadowExec, ShadowObservation, ShadowState};
 use crate::error::{Error, Result};
+use crate::rollout::{Rollout, RolloutPlane, Split, TickOutcome};
+use crate::util::json::Value;
 
 /// One live (servable) model version: the primary pipeline plus the
 /// variant's *backend set* — lazily built pipelines for per-request
@@ -105,6 +107,19 @@ pub struct ModelRegistry {
     /// replication targets and canary-rollback fallbacks must not have
     /// their pipeline evicted mid-flight.
     pinned: Mutex<BTreeSet<String>>,
+    /// The previously-live pipeline per name, retained warm at hot-swap
+    /// time. The manifest keeps only the current version, so this shelf
+    /// is the only place the old version's running backend survives —
+    /// it is what a rollout's instant rollback repoints to.
+    standby: Mutex<BTreeMap<String, Arc<ServedModel>>>,
+    /// Staged canary deployments ([`crate::rollout`]).
+    rollouts: RolloutPlane,
+    /// Names this registry pinned *on behalf of a rollout* (so terminal
+    /// cleanup unpins exactly those, never an operator's own pin).
+    rollout_pins: Mutex<BTreeSet<String>>,
+    /// Self-reference for spawning rollout driver threads (weak: a
+    /// driver must not keep a dropped registry alive).
+    self_weak: Mutex<Weak<ModelRegistry>>,
 }
 
 /// Split `"name@version"` into its parts; plain `"name"` pins nothing.
@@ -129,7 +144,7 @@ impl ModelRegistry {
         let dir = PathBuf::from(&cfg.artifacts.dir);
         let manifest = ModelManifest::load(&dir)?;
         let store = ArtifactStore::open(dir.join(&cfg.registry.store_dir))?;
-        Ok(Arc::new(Self {
+        let reg = Arc::new(Self {
             cfg: cfg.clone(),
             dir,
             store,
@@ -138,7 +153,13 @@ impl ModelRegistry {
             inner: RwLock::new(Inner { manifest, live: BTreeMap::new() }),
             lru: Mutex::new(Lru::new(cfg.registry.max_loaded)),
             pinned: Mutex::new(BTreeSet::new()),
-        }))
+            standby: Mutex::new(BTreeMap::new()),
+            rollouts: RolloutPlane::new(cfg.rollout.clone()),
+            rollout_pins: Mutex::new(BTreeSet::new()),
+            self_weak: Mutex::new(Weak::new()),
+        });
+        *reg.self_weak.lock_recover() = Arc::downgrade(&reg);
+        Ok(reg)
     }
 
     /// The session factory (test hook: its occupancy cache proves the
@@ -202,6 +223,15 @@ impl ModelRegistry {
                 report.queue_clients = Some(g.clients);
                 report.max_client_backlog = Some(g.max_client_backlog);
                 report.engine_profile = s.svc.session().profile();
+            }
+        }
+        // staged rollouts attach their numeric summary to the candidate
+        // version's report (decision history stays on `rollout_status`)
+        for ro in self.rollouts.all() {
+            for r in reports.iter_mut() {
+                if r.0 == ro.candidate_id {
+                    r.1.rollout = Some(ro.prom_value());
+                }
             }
         }
         reports
@@ -422,8 +452,19 @@ impl ModelRegistry {
     }
 
     /// Unload `name` (manifest entry stays; next request reloads).
-    /// Returns whether it was live.
+    /// Returns whether it was live. Retiring a model mid-rollout aborts
+    /// the rollout (instant rollback) — an unloaded candidate must not
+    /// keep receiving canary traffic.
     pub fn retire(&self, name: &str) -> bool {
+        if let Some(ro) = self.rollouts.active(name) {
+            if ro.abort("model retired").is_ok() {
+                crate::obs::log::warn(
+                    "rollout",
+                    &format!("rollout for '{name}' rolled back: model retired"),
+                );
+            }
+            self.finalize_rollout(name);
+        }
         let mut g = self.inner.write_recover();
         self.lru.lock_recover().remove(&name.to_string());
         g.live.remove(name).is_some()
@@ -498,6 +539,15 @@ impl ModelRegistry {
         features: Vec<f32>,
     ) -> Result<(String, RowOutput)> {
         let served = self.resolve(route.model.as_deref())?;
+        // staged-rollout override: default-routed traffic (no explicit
+        // version pin, primary backend) splits between candidate and
+        // baseline; an explicit `name@v` or backend request must see
+        // exactly what it asked for
+        if route.backend.is_none() && !spec_pins_version(route.model.as_deref()) {
+            if let Some((ro, split)) = self.rollouts.route(&served.name) {
+                return self.infer_rollout_row(client, &served, &ro, split, route, features);
+            }
+        }
         let svc = self.service_for(&served, route.backend)?;
         // presample before dispatch consumes the row: only a selected
         // row is ever copied on the serving path
@@ -546,6 +596,13 @@ impl ModelRegistry {
         rows: Vec<Vec<f32>>,
     ) -> Result<(String, Vec<RowOutput>)> {
         let served = self.resolve(route.model.as_deref())?;
+        // the whole batch is one split unit (a batch response carries a
+        // single resolved id, so its rows cannot straddle versions)
+        if route.backend.is_none() && !spec_pins_version(route.model.as_deref()) {
+            if let Some((ro, split)) = self.rollouts.route(&served.name) {
+                return self.infer_rollout_batch(client, &served, &ro, split, route, rows);
+            }
+        }
         let svc = self.service_for(&served, route.backend)?;
         // presample before dispatch consumes the rows: only selected
         // rows are copied, never the whole batch
@@ -572,15 +629,27 @@ impl ModelRegistry {
     }
 
     /// Rebuild `name` from the on-disk manifest/weights and atomically
-    /// swap it in. In-flight requests on the old pipeline complete.
+    /// swap it in. In-flight requests on the old pipeline complete. The
+    /// displaced pipeline (if the version actually changed) moves to the
+    /// standby shelf, so a subsequent `rollout start` has a warm
+    /// baseline to fall back to.
     pub fn reload_model(&self, name: &str) -> Result<Arc<ServedModel>> {
         let built = self.build_served(name)?;
-        let mut g = self.inner.write_recover();
-        g.live.insert(name.to_string(), built.clone());
-        // keep live and the LRU in sync: reloading a model that was not
-        // tracked (non-live reload, or a racing eviction) can push another
-        // entry past capacity
-        self.lru_admit(name, &mut g.live);
+        let prev = {
+            let mut g = self.inner.write_recover();
+            let prev = g.live.insert(name.to_string(), built.clone());
+            // keep live and the LRU in sync: reloading a model that was not
+            // tracked (non-live reload, or a racing eviction) can push another
+            // entry past capacity
+            self.lru_admit(name, &mut g.live);
+            prev
+        };
+        if let Some(old) = prev {
+            if old.id != built.id {
+                self.standby.lock_recover().insert(name.to_string(), old);
+                self.rollout_candidate_superseded(name, &built.id);
+            }
+        }
         Ok(built)
     }
 
@@ -672,6 +741,362 @@ impl ModelRegistry {
         }
         Ok((name.clone(), meta.clone()))
     }
+}
+
+/// Staged canary deployments ([`crate::rollout`], `docs/ROLLOUT.md`).
+///
+/// The registry is the rollout plane's host: it retains the displaced
+/// pipeline on the standby shelf at hot-swap time (the warm baseline),
+/// pins the candidate's live slot against LRU eviction for the rollout
+/// lifetime, consults the splitter on the dispatch path, and runs one
+/// driver thread per rollout to expire observation windows.
+impl ModelRegistry {
+    /// The rollout plane (test hook).
+    pub fn rollout_plane(&self) -> &RolloutPlane {
+        &self.rollouts
+    }
+
+    /// Start a rollout: ramp `model_spec` (which must resolve to the
+    /// manifest-current version) against `baseline_spec` (which must
+    /// match the warm pipeline retained on the standby shelf at the last
+    /// hot swap).
+    pub fn rollout_start(&self, model_spec: &str, baseline_spec: &str) -> Result<Value> {
+        let (name, want_ver) = parse_model_spec(model_spec)?;
+        let (bname, want_base_ver) = parse_model_spec(baseline_spec)?;
+        if bname != name {
+            return Err(Error::Serving(format!(
+                "baseline '{baseline_spec}' must be a version of '{name}'"
+            )));
+        }
+        let candidate = self.ensure_loaded(name)?;
+        if let Some(v) = want_ver {
+            if v != candidate.version {
+                return Err(Error::Registry(format!(
+                    "candidate must be the current version: '{name}' is live at \
+                     {}, requested @{v}",
+                    candidate.version
+                )));
+            }
+        }
+        let baseline = self.standby.lock_recover().get(name).cloned();
+        let baseline = baseline.ok_or_else(|| {
+            Error::Registry(format!(
+                "no retained baseline for '{name}': the previous version's \
+                 pipeline survives only across a hot swap (serve the old \
+                 version, publish the new one, then start the rollout)"
+            ))
+        })?;
+        if let Some(v) = want_base_ver {
+            if v != baseline.version {
+                return Err(Error::Registry(format!(
+                    "retained baseline for '{name}' is @{}, requested @{v}",
+                    baseline.version
+                )));
+            }
+        }
+        if baseline.id == candidate.id {
+            return Err(Error::Serving(format!(
+                "baseline and candidate are both {}",
+                candidate.id
+            )));
+        }
+        // the divergence mirror re-executes canary-served rows on the
+        // warm baseline and compares logits; it runs off the response
+        // path on the shadow worker, so a mirrored row costs the canary
+        // request nothing
+        let base = baseline.clone();
+        let exec: ShadowExec = Box::new(move |job| {
+            let out = base.svc.infer_opts_from(
+                ClientId::fresh(),
+                job.features.clone(),
+                job.opts,
+            )?;
+            Ok(compare_divergence(&out.logits, &job.primary))
+        });
+        let ro = self.rollouts.start(
+            name,
+            baseline.clone(),
+            &candidate.id,
+            baseline.spec.kind,
+            exec,
+        )?;
+        // pin the candidate's live slot for the rollout lifetime; track
+        // the pin so terminal cleanup never removes an operator's own
+        if !self.is_pinned(name) {
+            self.pin(name)?;
+            self.rollout_pins.lock_recover().insert(name.to_string());
+        }
+        self.spawn_rollout_driver(name);
+        crate::obs::log::info(
+            "rollout",
+            &format!(
+                "rollout started for '{name}': {} -> {} (ramp {:?})",
+                ro.baseline_id,
+                ro.candidate_id,
+                self.cfg.rollout.ramp
+            ),
+        );
+        self.rollouts.status(Some(name))
+    }
+
+    /// `rollout_status` body: all rollouts, or just `model`'s.
+    pub fn rollout_status(&self, model: Option<&str>) -> Result<Value> {
+        self.rollouts.status(model)
+    }
+
+    /// Operator-initiated instant rollback.
+    pub fn rollout_abort(&self, model: &str) -> Result<Value> {
+        self.rollouts.abort(model, "operator abort")?;
+        crate::obs::log::warn(
+            "rollout",
+            &format!("rollout for '{model}' rolled back: operator abort"),
+        );
+        self.finalize_rollout(model);
+        self.rollouts.status(Some(model))
+    }
+
+    /// Drop a terminal rollout record (and its routing override — after
+    /// clearing a rolled-back rollout, default traffic returns to the
+    /// manifest-current version). Returns the final status.
+    pub fn rollout_clear(&self, model: &str) -> Result<Value> {
+        let status = self.rollouts.clear(model)?;
+        self.finalize_rollout_record_gone(model);
+        Ok(status)
+    }
+
+    /// Terminal cleanup (idempotent): unpin what the rollout pinned;
+    /// a promoted rollout also releases the standby shelf (its baseline
+    /// is obsolete), while a rolled-back one keeps it — the baseline is
+    /// still serving all default traffic.
+    fn finalize_rollout(&self, name: &str) {
+        let Some(ro) = self.rollouts.get(name) else {
+            return;
+        };
+        if !ro.is_terminal() {
+            return;
+        }
+        if !ro.needs_cleanup.swap(false, std::sync::atomic::Ordering::SeqCst) {
+            return;
+        }
+        let was_mine = self.rollout_pins.lock_recover().remove(name);
+        if was_mine {
+            self.unpin(name);
+        }
+        if ro.phase() == crate::rollout::RolloutPhase::Promoted {
+            let mut shelf = self.standby.lock_recover();
+            let matches = shelf.get(name).map_or(false, |s| s.id == ro.baseline_id);
+            if matches {
+                shelf.remove(name);
+            }
+        }
+        crate::obs::log::info(
+            "rollout",
+            &format!(
+                "rollout for '{name}' finalized: {} ({} -> {})",
+                ro.phase().as_str(),
+                ro.baseline_id,
+                ro.candidate_id
+            ),
+        );
+    }
+
+    /// Cleanup after the record itself was removed (`rollout_clear`):
+    /// only the pin bookkeeping can still be pending.
+    fn finalize_rollout_record_gone(&self, name: &str) {
+        let was_mine = self.rollout_pins.lock_recover().remove(name);
+        if was_mine {
+            self.unpin(name);
+        }
+    }
+
+    /// A newer version replaced the rollout's candidate as the manifest
+    /// default: the rollout's verdict is moot and its routing override
+    /// must not shadow the new version. Abort (recorded) and drop the
+    /// record.
+    fn rollout_candidate_superseded(&self, name: &str, new_id: &str) {
+        let Some(ro) = self.rollouts.get(name) else {
+            return;
+        };
+        if ro.candidate_id == new_id {
+            return;
+        }
+        if !ro.is_terminal() {
+            let _ = ro.abort(&format!("candidate superseded by {new_id}"));
+            crate::obs::log::warn(
+                "rollout",
+                &format!(
+                    "rollout for '{name}' rolled back: candidate {} superseded \
+                     by {new_id}",
+                    ro.candidate_id
+                ),
+            );
+        }
+        self.finalize_rollout(name);
+        self.rollouts.remove(name);
+    }
+
+    /// One driver thread per rollout: ticks the window clock every
+    /// `rollout.poll_ms` and runs terminal cleanup. Holds only a `Weak`
+    /// on the registry, so a dropped registry stops the driver.
+    fn spawn_rollout_driver(&self, name: &str) {
+        let weak = self.self_weak.lock_recover().clone();
+        let name = name.to_string();
+        let poll = Duration::from_millis(self.cfg.rollout.poll_ms.max(1));
+        let spawned = std::thread::Builder::new()
+            .name("kan-edge-rollout".into())
+            .spawn(move || loop {
+                std::thread::sleep(poll);
+                let Some(reg) = weak.upgrade() else { break };
+                match reg.rollouts.tick(&name) {
+                    TickOutcome::Gone => break,
+                    TickOutcome::Promoted => {
+                        crate::obs::log::info(
+                            "rollout",
+                            &format!("rollout for '{name}' promoted"),
+                        );
+                        reg.finalize_rollout(&name);
+                        break;
+                    }
+                    TickOutcome::RolledBack => {
+                        crate::obs::log::warn(
+                            "rollout",
+                            &format!(
+                                "rollout for '{name}' rolled back by gate breach"
+                            ),
+                        );
+                        reg.finalize_rollout(&name);
+                        break;
+                    }
+                    TickOutcome::Idle => {
+                        // an operator abort lands terminal outside the
+                        // tick path; notice and stop
+                        let done = reg
+                            .rollouts
+                            .get(&name)
+                            .map_or(true, |ro| ro.is_terminal());
+                        if done {
+                            reg.finalize_rollout(&name);
+                            break;
+                        }
+                    }
+                    TickOutcome::Advanced | TickOutcome::Extended => {}
+                }
+            });
+        if let Err(e) = spawned {
+            crate::obs::log::warn(
+                "rollout",
+                &format!(
+                    "cannot spawn rollout driver for '{name}' ({e}); the \
+                     rollout will not advance or roll back on its own"
+                ),
+            );
+        }
+    }
+
+    /// Serve one split-routed row (see [`crate::rollout`] module docs).
+    fn infer_rollout_row(
+        &self,
+        client: ClientId,
+        candidate: &Arc<ServedModel>,
+        ro: &Arc<Rollout>,
+        split: Split,
+        route: &RouteSpec,
+        features: Vec<f32>,
+    ) -> Result<(String, RowOutput)> {
+        if split == Split::Baseline {
+            if let Some(base) = ro.baseline_model() {
+                let t0 = Instant::now();
+                let out = base.svc.infer_traced_from(
+                    client,
+                    features,
+                    route.opts,
+                    route.trace.clone(),
+                )?;
+                ro.record_baseline(t0.elapsed());
+                return Ok((base.id.clone(), out));
+            }
+            // promoted concurrently: the candidate serves everything now
+        }
+        let t0 = Instant::now();
+        let out = candidate.svc.infer_traced_from(
+            client,
+            features.clone(),
+            route.opts,
+            route.trace.clone(),
+        )?;
+        ro.record_canary(t0.elapsed());
+        // every canary-served row feeds the divergence mirror (bounded
+        // queue; overflow drops, never blocks)
+        ro.mirror_canary(features, out.logits.clone(), route.opts);
+        Ok((candidate.id.clone(), out))
+    }
+
+    /// Serve one split-routed batch. The whole batch is one split unit —
+    /// a batch response carries a single resolved id, so its rows cannot
+    /// straddle versions.
+    fn infer_rollout_batch(
+        &self,
+        client: ClientId,
+        candidate: &Arc<ServedModel>,
+        ro: &Arc<Rollout>,
+        split: Split,
+        route: &RouteSpec,
+        rows: Vec<Vec<f32>>,
+    ) -> Result<(String, Vec<RowOutput>)> {
+        if split == Split::Baseline {
+            if let Some(base) = ro.baseline_model() {
+                let t0 = Instant::now();
+                let outs = base.svc.infer_many_opts_from(client, rows, route.opts)?;
+                ro.record_baseline(t0.elapsed());
+                return Ok((base.id.clone(), outs));
+            }
+        }
+        // clone before dispatch consumes the rows: mirrored comparisons
+        // need the features (canary batches pay this copy only while a
+        // rollout is active; see docs/ROLLOUT.md perf notes)
+        let copies = rows.clone();
+        let t0 = Instant::now();
+        let outs = candidate.svc.infer_many_opts_from(client, rows, route.opts)?;
+        ro.record_canary(t0.elapsed());
+        for (i, row) in copies.into_iter().enumerate() {
+            // the same per-row seed derivation the service applied
+            // (ExecOptions::for_row), so the mirror reproduces the row
+            ro.mirror_canary(row, outs[i].logits.clone(), route.opts.for_row(i));
+        }
+        Ok((candidate.id.clone(), outs))
+    }
+}
+
+/// `"name@version"` pins an exact version; pinned requests bypass the
+/// rollout splitter (an operator probing a version must see exactly it).
+fn spec_pins_version(spec: Option<&str>) -> bool {
+    spec.map_or(false, |s| s.contains('@'))
+}
+
+/// Row-level divergence between the baseline's recomputation and what
+/// the canary actually served for the same features and options.
+fn compare_divergence(baseline: &[f32], canary: &[f32]) -> ShadowObservation {
+    let flip = argmax(baseline) != argmax(canary);
+    let n = baseline.len().min(canary.len());
+    let mae = if n == 0 {
+        0.0
+    } else {
+        (0..n)
+            .map(|i| (f64::from(baseline[i]) - f64::from(canary[i])).abs())
+            .sum::<f64>()
+            / n as f64
+    };
+    ShadowObservation { flip, mae, layer_err: Vec::new() }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best
 }
 
 /// The shadow to offer a served row to: only when the row was served by
@@ -820,6 +1245,30 @@ impl Dispatch for ModelRegistry {
         let _ = std::fs::remove_file(&tmp);
         let (published_name, meta) = result?;
         Ok(format!("{published_name}@{}", meta.version))
+    }
+
+    /// Rollout summaries ride the `metrics` body (and the Prometheus
+    /// exposition renders them as `kan_edge_rollout_*` series).
+    fn metrics_overlay(&self) -> Option<Value> {
+        self.rollouts
+            .prom_overlay()
+            .map(|v| crate::util::json::obj(vec![("rollout", v)]))
+    }
+
+    fn rollout_start(&self, model: &str, baseline: &str) -> Result<Value> {
+        ModelRegistry::rollout_start(self, model, baseline)
+    }
+
+    fn rollout_status(&self, model: Option<&str>) -> Result<Value> {
+        ModelRegistry::rollout_status(self, model)
+    }
+
+    fn rollout_abort(&self, model: &str) -> Result<Value> {
+        ModelRegistry::rollout_abort(self, model)
+    }
+
+    fn rollout_clear(&self, model: &str) -> Result<Value> {
+        ModelRegistry::rollout_clear(self, model)
     }
 }
 

@@ -1,0 +1,733 @@
+//! The rollout controller: per-model staged-deployment state machines
+//! plus the deterministic traffic splitter the dispatch path consults.
+//!
+//! Ownership: the [`crate::registry::ModelRegistry`] owns one
+//! [`RolloutPlane`]; the registry's dispatch path calls
+//! [`RolloutPlane::route`] per default-routed request, and a per-rollout
+//! driver thread calls [`RolloutPlane::tick`] to expire observation
+//! windows. Pin/unpin and baseline retention stay in the registry — the
+//! plane only decides, it never loads or evicts models.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use super::{Decision, GateEval, RolloutPhase};
+use crate::config::RolloutConfig;
+use crate::coordinator::backend::{BackendKind, ExecOptions};
+use crate::coordinator::metrics::{Metrics, ShadowMetrics};
+use crate::coordinator::shadow::{ShadowExec, ShadowState};
+use crate::error::{Error, Result};
+use crate::registry::ServedModel;
+use crate::util::json::{arr, obj, Value};
+use crate::util::sync::{LockExt, RwLockExt};
+
+/// Bounded decision history per rollout (newest kept).
+const MAX_DECISIONS: usize = 64;
+
+// Phase codes mirrored into an atomic so the splitter never takes the
+// state lock; values match [`RolloutPhase::code`].
+const CODE_PROMOTED: usize = 2;
+const CODE_ROLLED_BACK: usize = 3;
+
+/// Which side of the split serves a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Canary,
+    Baseline,
+}
+
+/// What one controller tick did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TickOutcome {
+    /// No rollout for that model (the driver should stop).
+    Gone,
+    /// Window still open, or the rollout is already terminal.
+    Idle,
+    /// Window expired without enough canary samples; extended.
+    Extended,
+    /// All gates passed; ramp advanced to the next step.
+    Advanced,
+    Promoted,
+    RolledBack,
+}
+
+/// Mutable state-machine state, guarded by one mutex (never held across
+/// an inference call or any blocking work).
+struct State {
+    phase: RolloutPhase,
+    window_started: Instant,
+    /// Windows evaluated (decisions made).
+    windows: u64,
+    /// Windows that expired without `min_samples` canary rows.
+    windows_extended: u64,
+    /// Per-window latency stats, one per side; replaced wholesale at
+    /// every window boundary so a window's percentiles never mix with
+    /// the previous window's.
+    canary_win: Arc<Metrics>,
+    baseline_win: Arc<Metrics>,
+    /// Carried-forward baseline p99 (µs): the latency-regression
+    /// reference when the current window starves the baseline (e.g. the
+    /// full-traffic `Observing` window).
+    baseline_p99_ref_us: Option<u64>,
+    decisions: Vec<Decision>,
+}
+
+/// One staged deployment: `baseline_id → candidate_id` for `name`.
+pub struct Rollout {
+    pub name: String,
+    pub baseline_id: String,
+    pub candidate_id: String,
+    cfg: RolloutConfig,
+    /// The previously-live pipeline, retained warm so a rollback is an
+    /// atomic repoint (and so LRU eviction can never race it). Dropped
+    /// on promotion.
+    baseline: Mutex<Option<Arc<ServedModel>>>,
+    /// Off-response-path divergence mirror: every candidate-served row
+    /// is re-executed by the baseline and compared.
+    mirror: Arc<ShadowState>,
+    /// Cumulative divergence for this (baseline, candidate) pair —
+    /// created fresh per rollout, so a new rollout never inherits a
+    /// previous candidate's flip/MAE reservoirs.
+    div_cum: Arc<ShadowMetrics>,
+    /// Current-window divergence; reset at every window boundary.
+    div_win: Arc<ShadowMetrics>,
+    started: Instant,
+    /// Splitter counter (the shadow sampler's floor-fraction idiom).
+    seen: AtomicU64,
+    /// Current canary fraction as f64 bits, for lock-free splits.
+    fraction_bits: AtomicU64,
+    /// Mirror of `State::phase` for lock-free routing.
+    phase_code: AtomicUsize,
+    canary_requests: AtomicU64,
+    baseline_requests: AtomicU64,
+    /// Set by the registry when it pinned the model at start (so it
+    /// only unpins what it pinned), cleared once terminal cleanup ran.
+    pub needs_cleanup: AtomicBool,
+    state: Mutex<State>,
+}
+
+fn fraction_for(cfg: &RolloutConfig, phase: RolloutPhase) -> f64 {
+    match phase {
+        RolloutPhase::Ramping { step } => {
+            cfg.ramp.get(step).copied().unwrap_or(1.0).clamp(0.0, 1.0)
+        }
+        RolloutPhase::Observing | RolloutPhase::Promoted => 1.0,
+        RolloutPhase::RolledBack => 0.0,
+    }
+}
+
+impl Rollout {
+    /// Build a rollout in its initial phase. `exec` runs one mirrored
+    /// row on the baseline and compares it against the candidate's
+    /// served logits (constructed by the registry, which knows how to
+    /// run inference); `mirror_kind` is the baseline's backend kind
+    /// (control-plane visibility only).
+    pub fn new(
+        name: &str,
+        baseline: Arc<ServedModel>,
+        candidate_id: &str,
+        mirror_kind: BackendKind,
+        mut exec: ShadowExec,
+        cfg: &RolloutConfig,
+    ) -> Arc<Rollout> {
+        let baseline_id = baseline.id.clone();
+        let div_cum = Arc::new(ShadowMetrics::new());
+        let div_win = Arc::new(ShadowMetrics::new());
+        // the wrapper double-records each observation into the window
+        // metrics; the mirror worker itself records into the cumulative
+        // pair metrics it owns
+        let win = div_win.clone();
+        let wrapped: ShadowExec = Box::new(move |job| match exec(job) {
+            Ok(obs) => {
+                win.record_mirror(obs.flip, obs.mae, &obs.layer_err);
+                Ok(obs)
+            }
+            Err(e) => {
+                win.record_error();
+                Err(e)
+            }
+        });
+        let mirror = ShadowState::spawn_with_metrics(
+            mirror_kind,
+            1.0,
+            cfg.queue,
+            wrapped,
+            div_cum.clone(),
+        );
+        let phase = if cfg.ramp.is_empty() {
+            RolloutPhase::Observing
+        } else {
+            RolloutPhase::Ramping { step: 0 }
+        };
+        let fraction = fraction_for(cfg, phase);
+        let start = Decision {
+            at_ms: 0,
+            phase: phase.as_str(),
+            fraction,
+            action: "start",
+            reason: format!("rollout {baseline_id} -> {candidate_id}"),
+            gates: Vec::new(),
+        };
+        Arc::new(Rollout {
+            name: name.to_string(),
+            baseline_id,
+            candidate_id: candidate_id.to_string(),
+            cfg: cfg.clone(),
+            baseline: Mutex::new(Some(baseline)),
+            mirror,
+            div_cum,
+            div_win,
+            started: Instant::now(),
+            seen: AtomicU64::new(0),
+            fraction_bits: AtomicU64::new(fraction.to_bits()),
+            phase_code: AtomicUsize::new(phase.code() as usize),
+            canary_requests: AtomicU64::new(0),
+            baseline_requests: AtomicU64::new(0),
+            needs_cleanup: AtomicBool::new(true),
+            state: Mutex::new(State {
+                phase,
+                window_started: Instant::now(),
+                windows: 0,
+                windows_extended: 0,
+                canary_win: Arc::new(Metrics::new()),
+                baseline_win: Arc::new(Metrics::new()),
+                baseline_p99_ref_us: None,
+                decisions: vec![start],
+            }),
+        })
+    }
+
+    pub fn phase(&self) -> RolloutPhase {
+        self.state.lock_recover().phase
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.phase().is_terminal()
+    }
+
+    /// Current canary fraction (lock-free).
+    pub fn fraction(&self) -> f64 {
+        f64::from_bits(self.fraction_bits.load(Ordering::Relaxed))
+    }
+
+    /// Route one default-routed request. Deterministic counter-based
+    /// splitter: request `n` goes to the canary when the cumulative
+    /// target `floor((n+1)·f)` advances — exactly a fraction `f`,
+    /// evenly spread, no RNG on the serving path. Rolled-back rollouts
+    /// send everything to the baseline.
+    pub fn split(&self) -> Split {
+        match self.phase_code.load(Ordering::Relaxed) {
+            CODE_ROLLED_BACK => Split::Baseline,
+            CODE_PROMOTED => Split::Canary,
+            _ => {
+                let n = self.seen.fetch_add(1, Ordering::Relaxed);
+                let f = self.fraction();
+                if ((n + 1) as f64 * f).floor() > (n as f64 * f).floor() {
+                    Split::Canary
+                } else {
+                    Split::Baseline
+                }
+            }
+        }
+    }
+
+    /// The retained baseline pipeline (`None` once promoted).
+    pub fn baseline_model(&self) -> Option<Arc<ServedModel>> {
+        self.baseline.lock_recover().clone()
+    }
+
+    /// Record a candidate-served request's latency into the current
+    /// window.
+    pub fn record_canary(&self, latency: Duration) {
+        self.canary_requests.fetch_add(1, Ordering::Relaxed);
+        let m = self.state.lock_recover().canary_win.clone();
+        m.record_request(latency, Duration::ZERO);
+    }
+
+    /// Record a baseline-served request's latency into the current
+    /// window.
+    pub fn record_baseline(&self, latency: Duration) {
+        self.baseline_requests.fetch_add(1, Ordering::Relaxed);
+        let m = self.state.lock_recover().baseline_win.clone();
+        m.record_request(latency, Duration::ZERO);
+    }
+
+    /// Queue a candidate-served row for off-path divergence mirroring
+    /// on the baseline (non-blocking; overflow drops and counts).
+    pub fn mirror_canary(&self, features: Vec<f32>, canary: Vec<f32>, opts: ExecOptions) {
+        self.mirror.enqueue(features, canary, opts);
+    }
+
+    /// Evaluate the current window if it has expired. Called by the
+    /// driver thread; safe to call concurrently (single state lock).
+    pub fn evaluate(&self) -> TickOutcome {
+        let mut g = self.state.lock_recover();
+        if g.phase.is_terminal() {
+            return TickOutcome::Idle;
+        }
+        if g.window_started.elapsed() < Duration::from_millis(self.cfg.window_ms) {
+            return TickOutcome::Idle;
+        }
+        let canary = g.canary_win.report();
+        let baseline = g.baseline_win.report();
+        // refresh the carried-forward latency reference whenever the
+        // baseline side saw enough traffic this window
+        if baseline.requests >= self.cfg.min_samples as u64 {
+            g.baseline_p99_ref_us = Some(baseline.latency_p99_us);
+        }
+        if canary.requests < self.cfg.min_samples as u64 {
+            // not enough evidence to decide either way — extend (at
+            // fraction 0.0 this is the steady state: the splitter runs
+            // but the canary never accumulates samples)
+            g.windows_extended += 1;
+            g.window_started = Instant::now();
+            return TickOutcome::Extended;
+        }
+        let div = self.div_win.report();
+        let lat_ratio = match g.baseline_p99_ref_us {
+            Some(b) if b > 0 => canary.latency_p99_us as f64 / b as f64,
+            // no baseline reference yet: the latency gate cannot
+            // evaluate, and divergence gates carry the window
+            _ => 0.0,
+        };
+        let gates = vec![
+            GateEval {
+                gate: "max_flip_rate",
+                observed: div.flip_rate,
+                limit: self.cfg.max_flip_rate,
+                pass: div.flip_rate <= self.cfg.max_flip_rate,
+            },
+            GateEval {
+                gate: "max_logit_mae_p99",
+                observed: div.logit_mae_p99,
+                limit: self.cfg.max_logit_mae_p99,
+                pass: div.logit_mae_p99 <= self.cfg.max_logit_mae_p99,
+            },
+            GateEval {
+                gate: "max_latency_regression",
+                observed: lat_ratio,
+                limit: self.cfg.max_latency_regression,
+                pass: lat_ratio <= self.cfg.max_latency_regression,
+            },
+        ];
+        g.windows += 1;
+        if let Some(breach) = gates.iter().find(|x| !x.pass) {
+            let reason = format!(
+                "gate {} breached: observed {:.6} > limit {:.6}",
+                breach.gate, breach.observed, breach.limit
+            );
+            self.transition(&mut g, RolloutPhase::RolledBack, "rollback", reason, gates);
+            return TickOutcome::RolledBack;
+        }
+        let (next, action, outcome) = match g.phase {
+            RolloutPhase::Ramping { step } if step + 1 < self.cfg.ramp.len() => (
+                RolloutPhase::Ramping { step: step + 1 },
+                "advance",
+                TickOutcome::Advanced,
+            ),
+            RolloutPhase::Ramping { .. } => {
+                (RolloutPhase::Observing, "advance", TickOutcome::Advanced)
+            }
+            RolloutPhase::Observing => {
+                (RolloutPhase::Promoted, "promote", TickOutcome::Promoted)
+            }
+            // unreachable: terminal phases returned above
+            other => (other, "advance", TickOutcome::Idle),
+        };
+        let reason = "all gates passed for a full window".to_string();
+        self.transition(&mut g, next, action, reason, gates);
+        if next == RolloutPhase::Promoted {
+            // promotion retires the override entirely: the candidate is
+            // already the manifest default, so the warm baseline can go
+            *self.baseline.lock_recover() = None;
+        }
+        outcome
+    }
+
+    /// Operator-initiated instant rollback (`rollout_abort`).
+    pub fn abort(&self, reason: &str) -> Result<()> {
+        let mut g = self.state.lock_recover();
+        if g.phase.is_terminal() {
+            return Err(Error::Serving(format!(
+                "rollout for '{}' already finished: {}",
+                self.name,
+                g.phase.as_str()
+            )));
+        }
+        self.transition(
+            &mut g,
+            RolloutPhase::RolledBack,
+            "abort",
+            reason.to_string(),
+            Vec::new(),
+        );
+        Ok(())
+    }
+
+    /// Move to `to`, record the decision, and open a fresh window (new
+    /// latency stats, divergence window reset).
+    fn transition(
+        &self,
+        g: &mut State,
+        to: RolloutPhase,
+        action: &'static str,
+        reason: String,
+        gates: Vec<GateEval>,
+    ) {
+        g.phase = to;
+        let fraction = fraction_for(&self.cfg, to);
+        self.fraction_bits.store(fraction.to_bits(), Ordering::Relaxed);
+        self.phase_code.store(to.code() as usize, Ordering::Relaxed);
+        g.window_started = Instant::now();
+        g.canary_win = Arc::new(Metrics::new());
+        g.baseline_win = Arc::new(Metrics::new());
+        self.div_win.reset();
+        g.decisions.push(Decision {
+            at_ms: self.started.elapsed().as_millis() as u64,
+            phase: to.as_str(),
+            fraction,
+            action,
+            reason,
+            gates,
+        });
+        if g.decisions.len() > MAX_DECISIONS {
+            let excess = g.decisions.len() - MAX_DECISIONS;
+            g.decisions.drain(..excess);
+        }
+    }
+
+    /// Full status (state machine, window, cumulative divergence,
+    /// decision history) — the `rollout_status` body for this model.
+    pub fn status_value(&self) -> Value {
+        let (phase, windows, extended, ref_us, decisions, canary_win, baseline_win) = {
+            let g = self.state.lock_recover();
+            (
+                g.phase,
+                g.windows,
+                g.windows_extended,
+                g.baseline_p99_ref_us,
+                g.decisions.clone(),
+                g.canary_win.clone(),
+                g.baseline_win.clone(),
+            )
+        };
+        // reports snapshot internally; never under the state lock
+        let cw = canary_win.report();
+        let bw = baseline_win.report();
+        let step = match phase {
+            RolloutPhase::Ramping { step } => step as i64,
+            _ => self.cfg.ramp.len() as i64,
+        };
+        let mut fields = vec![
+            ("model", Value::Str(self.name.clone())),
+            ("baseline", Value::Str(self.baseline_id.clone())),
+            ("candidate", Value::Str(self.candidate_id.clone())),
+            (
+                "pair",
+                Value::Str(format!("{}->{}", self.baseline_id, self.candidate_id)),
+            ),
+            ("phase", Value::Str(phase.as_str().to_string())),
+            ("phase_code", Value::Int(phase.code())),
+            ("step", Value::Int(step)),
+            ("steps", Value::Int(self.cfg.ramp.len() as i64)),
+            ("fraction", Value::Float(self.fraction())),
+            ("windows", Value::Int(windows as i64)),
+            ("windows_extended", Value::Int(extended as i64)),
+            (
+                "canary_requests",
+                Value::Int(self.canary_requests.load(Ordering::Relaxed) as i64),
+            ),
+            (
+                "baseline_requests",
+                Value::Int(self.baseline_requests.load(Ordering::Relaxed) as i64),
+            ),
+            ("elapsed_ms", Value::Int(self.started.elapsed().as_millis() as i64)),
+            ("divergence", self.div_cum.report().to_value()),
+            (
+                "window",
+                obj(vec![
+                    ("canary_requests", Value::Int(cw.requests as i64)),
+                    ("baseline_requests", Value::Int(bw.requests as i64)),
+                    ("canary_p99_us", Value::Int(cw.latency_p99_us as i64)),
+                    (
+                        "baseline_p99_ref_us",
+                        match ref_us {
+                            Some(us) => Value::Int(us as i64),
+                            None => Value::Null,
+                        },
+                    ),
+                ]),
+            ),
+        ];
+        fields.push((
+            "decisions",
+            arr(decisions.iter().map(|d| d.to_value()).collect()),
+        ));
+        obj(fields)
+    }
+
+    /// Numeric-only summary for the Prometheus-rendered `rollout`
+    /// metrics section (no decision history — histories are served by
+    /// `rollout_status`, not scraped).
+    pub fn prom_value(&self) -> Value {
+        let (phase, windows, extended) = {
+            let g = self.state.lock_recover();
+            (g.phase, g.windows, g.windows_extended)
+        };
+        let div = self.div_cum.report();
+        obj(vec![
+            ("phase_code", Value::Int(phase.code())),
+            ("fraction", Value::Float(self.fraction())),
+            ("windows", Value::Int(windows as i64)),
+            ("windows_extended", Value::Int(extended as i64)),
+            (
+                "canary_requests",
+                Value::Int(self.canary_requests.load(Ordering::Relaxed) as i64),
+            ),
+            (
+                "baseline_requests",
+                Value::Int(self.baseline_requests.load(Ordering::Relaxed) as i64),
+            ),
+            ("flip_rate", Value::Float(div.flip_rate)),
+            ("logit_mae_p99", Value::Float(div.logit_mae_p99)),
+            ("mirror_dropped", Value::Int(div.dropped as i64)),
+            ("mirror_errors", Value::Int(div.errors as i64)),
+        ])
+    }
+}
+
+/// All rollouts on this node, keyed by model name (at most one per
+/// model — a model cannot ramp two candidates at once).
+pub struct RolloutPlane {
+    cfg: RolloutConfig,
+    entries: RwLock<BTreeMap<String, Arc<Rollout>>>,
+    /// Count of entries that still override routing (anything but
+    /// `Promoted`); lets the dispatch fast path skip the map read
+    /// entirely when no rollout is running.
+    routing: AtomicUsize,
+}
+
+impl RolloutPlane {
+    pub fn new(cfg: RolloutConfig) -> Self {
+        Self {
+            cfg,
+            entries: RwLock::new(BTreeMap::new()),
+            routing: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn cfg(&self) -> &RolloutConfig {
+        &self.cfg
+    }
+
+    fn recount(&self, g: &BTreeMap<String, Arc<Rollout>>) {
+        let n = g
+            .values()
+            .filter(|r| r.phase_code.load(Ordering::Relaxed) != CODE_PROMOTED)
+            .count();
+        self.routing.store(n, Ordering::Relaxed);
+    }
+
+    /// Start a rollout for `name`. Fails if one is already in progress;
+    /// a terminal record is replaced (with fresh pair-keyed divergence
+    /// metrics — nothing is inherited).
+    pub fn start(
+        &self,
+        name: &str,
+        baseline: Arc<ServedModel>,
+        candidate_id: &str,
+        mirror_kind: BackendKind,
+        exec: ShadowExec,
+    ) -> Result<Arc<Rollout>> {
+        let mut g = self.entries.write_recover();
+        if let Some(existing) = g.get(name) {
+            if !existing.is_terminal() {
+                return Err(Error::Serving(format!(
+                    "rollout already in progress for '{name}' ({} -> {})",
+                    existing.baseline_id, existing.candidate_id
+                )));
+            }
+        }
+        let ro = Rollout::new(name, baseline, candidate_id, mirror_kind, exec, &self.cfg);
+        g.insert(name.to_string(), ro.clone());
+        self.recount(&g);
+        Ok(ro)
+    }
+
+    /// The rollout for `name`, if any (terminal records included).
+    pub fn get(&self, name: &str) -> Option<Arc<Rollout>> {
+        self.entries.read_recover().get(name).cloned()
+    }
+
+    /// The rollout currently overriding `name`'s routing, if any
+    /// (everything but `Promoted` overrides). The fast path is a single
+    /// relaxed load when nothing is rolling out.
+    pub fn active(&self, name: &str) -> Option<Arc<Rollout>> {
+        if self.routing.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        let ro = self.entries.read_recover().get(name).cloned()?;
+        if ro.phase_code.load(Ordering::Relaxed) == CODE_PROMOTED {
+            return None;
+        }
+        Some(ro)
+    }
+
+    /// Routing decision for one default-routed request on `name`.
+    /// `None` means serve normally (no rollout, or promoted).
+    pub fn route(&self, name: &str) -> Option<(Arc<Rollout>, Split)> {
+        let ro = self.active(name)?;
+        let split = ro.split();
+        Some((ro, split))
+    }
+
+    /// Every rollout record (metrics attachment).
+    pub fn all(&self) -> Vec<Arc<Rollout>> {
+        self.entries.read_recover().values().cloned().collect()
+    }
+
+    /// Remove `name`'s record regardless of phase (supersede path: the
+    /// override must not shadow a newly published version). Returns the
+    /// removed rollout.
+    pub fn remove(&self, name: &str) -> Option<Arc<Rollout>> {
+        let mut g = self.entries.write_recover();
+        let ro = g.remove(name);
+        self.recount(&g);
+        ro
+    }
+
+    /// Drive `name`'s window clock once.
+    pub fn tick(&self, name: &str) -> TickOutcome {
+        let Some(ro) = self.get(name) else {
+            return TickOutcome::Gone;
+        };
+        let out = ro.evaluate();
+        if out == TickOutcome::Promoted {
+            self.recount(&self.entries.read_recover());
+        }
+        out
+    }
+
+    /// Operator-initiated rollback.
+    pub fn abort(&self, name: &str, reason: &str) -> Result<Arc<Rollout>> {
+        let ro = self.get(name).ok_or_else(|| {
+            Error::Serving(format!("no rollout for model '{name}'"))
+        })?;
+        ro.abort(reason)?;
+        Ok(ro)
+    }
+
+    /// Drop a terminal rollout record (returns its final status).
+    pub fn clear(&self, name: &str) -> Result<Value> {
+        let mut g = self.entries.write_recover();
+        let Some(ro) = g.get(name) else {
+            return Err(Error::Serving(format!("no rollout for model '{name}'")));
+        };
+        if !ro.is_terminal() {
+            return Err(Error::Serving(format!(
+                "rollout already in progress for '{name}' — abort it before clearing"
+            )));
+        }
+        let status = ro.status_value();
+        g.remove(name);
+        self.recount(&g);
+        Ok(status)
+    }
+
+    /// `rollout_status` body: per-model status objects keyed by name.
+    /// With `name` given, only that model (error if absent).
+    pub fn status(&self, name: Option<&str>) -> Result<Value> {
+        let handles: Vec<Arc<Rollout>> = {
+            let g = self.entries.read_recover();
+            match name {
+                Some(n) => match g.get(n) {
+                    Some(ro) => vec![ro.clone()],
+                    None => {
+                        return Err(Error::Serving(format!(
+                            "no rollout for model '{n}'"
+                        )))
+                    }
+                },
+                None => g.values().cloned().collect(),
+            }
+        };
+        let mut fields = Vec::new();
+        let values: Vec<(String, Value)> = handles
+            .iter()
+            .map(|ro| (ro.name.clone(), ro.status_value()))
+            .collect();
+        for (n, v) in &values {
+            fields.push((n.as_str(), v.clone()));
+        }
+        Ok(obj(vec![("rollouts", obj(fields))]))
+    }
+
+    /// Numeric summaries for the metrics `rollout` section (empty map
+    /// when nothing ever rolled out → the section is omitted upstream).
+    pub fn prom_overlay(&self) -> Option<Value> {
+        let handles: Vec<Arc<Rollout>> =
+            self.entries.read_recover().values().cloned().collect();
+        if handles.is_empty() {
+            return None;
+        }
+        let values: Vec<(String, Value)> = handles
+            .iter()
+            .map(|ro| (ro.name.clone(), ro.prom_value()))
+            .collect();
+        let fields: Vec<(&str, Value)> =
+            values.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+        Some(obj(fields))
+    }
+
+    /// Names of rollouts that still need terminal cleanup checks (the
+    /// registry's reload path uses this to keep drivers honest).
+    pub fn names(&self) -> Vec<String> {
+        self.entries.read_recover().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_with_ramp(ramp: Vec<f64>) -> RolloutConfig {
+        RolloutConfig { ramp, ..RolloutConfig::default() }
+    }
+
+    #[test]
+    fn fraction_follows_the_phase() {
+        let cfg = cfg_with_ramp(vec![0.05, 0.25, 0.5]);
+        assert_eq!(fraction_for(&cfg, RolloutPhase::Ramping { step: 0 }), 0.05);
+        assert_eq!(fraction_for(&cfg, RolloutPhase::Ramping { step: 2 }), 0.5);
+        // a step past the schedule behaves like the observing window
+        assert_eq!(fraction_for(&cfg, RolloutPhase::Ramping { step: 9 }), 1.0);
+        assert_eq!(fraction_for(&cfg, RolloutPhase::Observing), 1.0);
+        assert_eq!(fraction_for(&cfg, RolloutPhase::Promoted), 1.0);
+        assert_eq!(fraction_for(&cfg, RolloutPhase::RolledBack), 0.0);
+    }
+
+    #[test]
+    fn fraction_clamps_misconfigured_steps() {
+        let cfg = cfg_with_ramp(vec![-0.5, 1.5]);
+        assert_eq!(fraction_for(&cfg, RolloutPhase::Ramping { step: 0 }), 0.0);
+        assert_eq!(fraction_for(&cfg, RolloutPhase::Ramping { step: 1 }), 1.0);
+    }
+
+    /// The splitter's floor identity: of any `n` consecutive requests,
+    /// exactly `⌊n·f⌋` advance the cumulative target — the property the
+    /// dispatch-path split relies on (`Rollout::split` applies it to a
+    /// shared counter; the live-TCP assertion is in tests/rollout.rs).
+    #[test]
+    fn floor_identity_yields_exact_fractions() {
+        for &f in &[0.0, 0.05, 0.25, 0.5, 0.75, 1.0] {
+            for n in [1u64, 7, 64, 200, 1000] {
+                let canary = (0..n)
+                    .filter(|&i| ((i + 1) as f64 * f).floor() > (i as f64 * f).floor())
+                    .count() as u64;
+                assert_eq!(canary, (n as f64 * f).floor() as u64, "f={f} n={n}");
+            }
+        }
+    }
+}

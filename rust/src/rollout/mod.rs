@@ -1,0 +1,182 @@
+//! Rollout plane: staged canary deployments with SLO-gated
+//! auto-promote and instant auto-rollback.
+//!
+//! The quant/NeuroSim co-search emits a stream of model variants, and
+//! the shadow plane already measures the safety signals that matter
+//! (argmax-flip rate, logit MAE, latency quantiles) — this module is
+//! the controller that *acts* on them. A rollout pairs the manifest's
+//! current version (the **candidate**) with the previously-live
+//! pipeline (the **baseline**, retained warm by the registry at
+//! hot-swap time) and drives the state machine
+//!
+//! ```text
+//! Ramping(fraction) → … → Observing → Promoted
+//!        └──────────────── any gate breach ───────→ RolledBack
+//! ```
+//!
+//! * **Ramping** — a deterministic counter-based splitter (same
+//!   floor-fraction idiom as the shadow sampler: exact fractions, no
+//!   RNG on the serving path) sends `ramp[step]` of the model's default
+//!   traffic to the candidate and the remainder to the baseline. Every
+//!   candidate-served row is also mirrored off the response path onto
+//!   the baseline to measure divergence.
+//! * **Observing** — the final full-traffic window (fraction 1.0)
+//!   before promotion.
+//! * Each window, the SLO gates from [`crate::config::RolloutConfig`]
+//!   are evaluated over that window's samples only (the divergence
+//!   metrics are keyed to this (baseline, candidate) pair and reset at
+//!   every window boundary, so no decision ever inherits another
+//!   pair's — or another window's — reservoirs). All gates green for a
+//!   full window advances the ramp; the last window promotes the
+//!   candidate (it is already the manifest default, so promotion simply
+//!   retires the override). Any breach instantly repoints **all**
+//!   default traffic to the pinned baseline and records why.
+//! * **Promoted / RolledBack** are terminal; the registry unpins the
+//!   versions it pinned at start. A rolled-back rollout keeps routing
+//!   to the baseline until the operator clears it or publishes a fix.
+//!
+//! Requests that pin an explicit version (`name@v`) bypass the
+//! splitter: an operator probing a specific version must see exactly
+//! that version.
+//!
+//! Everything surfaces on the control plane (`rollout_*` verbs), in
+//! `kan-edge models`, in per-model metrics reports, and as
+//! `kan_edge_rollout_*` Prometheus series. See `docs/ROLLOUT.md`.
+
+pub mod controller;
+
+pub use controller::{Rollout, RolloutPlane, Split, TickOutcome};
+
+use crate::util::json::{arr, obj, Value};
+
+/// Where a rollout's state machine currently is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RolloutPhase {
+    /// Splitting `ramp[step]` of default traffic onto the candidate.
+    Ramping { step: usize },
+    /// Final full-traffic window before promotion.
+    Observing,
+    /// Terminal: the candidate passed every window; it keeps serving as
+    /// the manifest default with no override.
+    Promoted,
+    /// Terminal: a gate breached (or an operator aborted); all default
+    /// traffic is repointed to the baseline.
+    RolledBack,
+}
+
+impl RolloutPhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RolloutPhase::Ramping { .. } => "ramping",
+            RolloutPhase::Observing => "observing",
+            RolloutPhase::Promoted => "promoted",
+            RolloutPhase::RolledBack => "rolled_back",
+        }
+    }
+
+    /// Stable numeric encoding for Prometheus series
+    /// (`kan_edge_rollout_phase_code`): 0 ramping, 1 observing,
+    /// 2 promoted, 3 rolled back.
+    pub fn code(&self) -> i64 {
+        match self {
+            RolloutPhase::Ramping { .. } => 0,
+            RolloutPhase::Observing => 1,
+            RolloutPhase::Promoted => 2,
+            RolloutPhase::RolledBack => 3,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, RolloutPhase::Promoted | RolloutPhase::RolledBack)
+    }
+}
+
+/// One gate evaluation inside a window decision.
+#[derive(Debug, Clone)]
+pub struct GateEval {
+    /// Config key of the gate (`max_flip_rate`, `max_logit_mae_p99`,
+    /// `max_latency_regression`).
+    pub gate: &'static str,
+    pub observed: f64,
+    pub limit: f64,
+    pub pass: bool,
+}
+
+impl GateEval {
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("gate", Value::Str(self.gate.to_string())),
+            ("observed", Value::Float(self.observed)),
+            ("limit", Value::Float(self.limit)),
+            ("pass", Value::Bool(self.pass)),
+        ])
+    }
+}
+
+/// One recorded state-machine decision (bounded history; newest last).
+#[derive(Debug, Clone)]
+pub struct Decision {
+    /// Milliseconds since the rollout started.
+    pub at_ms: u64,
+    /// Phase the decision moved the rollout *into*.
+    pub phase: &'static str,
+    /// Canary traffic fraction after the decision.
+    pub fraction: f64,
+    /// `start` | `advance` | `promote` | `rollback` | `abort`.
+    pub action: &'static str,
+    pub reason: String,
+    /// The per-gate evaluations that drove the decision (empty for
+    /// `start`/`abort`).
+    pub gates: Vec<GateEval>,
+}
+
+impl Decision {
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("at_ms", Value::Int(self.at_ms as i64)),
+            ("phase", Value::Str(self.phase.to_string())),
+            ("fraction", Value::Float(self.fraction)),
+            ("action", Value::Str(self.action.to_string())),
+            ("reason", Value::Str(self.reason.clone())),
+            ("gates", arr(self.gates.iter().map(|g| g.to_value()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_encoding_is_stable() {
+        assert_eq!(RolloutPhase::Ramping { step: 3 }.as_str(), "ramping");
+        assert_eq!(RolloutPhase::Observing.code(), 1);
+        assert_eq!(RolloutPhase::Promoted.code(), 2);
+        assert_eq!(RolloutPhase::RolledBack.code(), 3);
+        assert!(RolloutPhase::Promoted.is_terminal());
+        assert!(RolloutPhase::RolledBack.is_terminal());
+        assert!(!RolloutPhase::Ramping { step: 0 }.is_terminal());
+        assert!(!RolloutPhase::Observing.is_terminal());
+    }
+
+    #[test]
+    fn decision_serializes() {
+        let d = Decision {
+            at_ms: 1200,
+            phase: "rolled_back",
+            fraction: 0.0,
+            action: "rollback",
+            reason: "gate max_flip_rate breached".into(),
+            gates: vec![GateEval {
+                gate: "max_flip_rate",
+                observed: 0.4,
+                limit: 0.01,
+                pass: false,
+            }],
+        };
+        let v = d.to_value();
+        assert_eq!(v.get("action").and_then(|a| a.as_str()), Some("rollback"));
+        let gates = v.get("gates").and_then(|g| g.as_array()).map(|g| g.len());
+        assert_eq!(gates, Some(1));
+    }
+}

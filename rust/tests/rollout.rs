@@ -1,0 +1,310 @@
+//! Rollout-plane integration tests (`docs/ROLLOUT.md`).
+//!
+//! Each test publishes a v1 "a" variant, loads it live, hot-swaps a v2
+//! in (shelving v1 as the warm baseline), and drives the staged
+//! canary controller over live TCP: deterministic split fractions,
+//! auto-promote under a clean canary, instant auto-rollback on real
+//! divergence with zero dropped requests, and state-machine
+//! persistence across a registry hot-reload poll.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kan_edge::client::KanClient;
+use kan_edge::config::AppConfig;
+use kan_edge::coordinator::{Dispatch, TcpServer};
+use kan_edge::kan::checkpoint::synthetic_checkpoint_json as kan_variant_json;
+use kan_edge::registry::{ModelManifest, ModelRegistry};
+use kan_edge::util::json::Value;
+
+mod common;
+use common::test_config;
+
+fn tmp_dir(test: &str) -> PathBuf {
+    common::tmp_dir("kan_edge_rollout_tests", test)
+}
+
+/// Registry over a fresh dir with model "a" published at v1 (favors
+/// class 0) and the given rollout config knobs applied.
+fn rollout_registry(
+    test: &str,
+    tune: impl FnOnce(&mut AppConfig),
+) -> (PathBuf, AppConfig, Arc<ModelRegistry>) {
+    let dir = tmp_dir(test);
+    ModelManifest::empty().save(&dir).unwrap();
+    let mut cfg = test_config(&dir, "a");
+    tune(&mut cfg);
+    let registry = ModelRegistry::open(&cfg).unwrap();
+    publish_variant(&dir, &registry, &kan_variant_json("a", 0));
+    (dir, cfg, registry)
+}
+
+fn publish_variant(dir: &Path, registry: &ModelRegistry, ckpt_json: &str) {
+    let src = dir.join("incoming.weights.json");
+    std::fs::write(&src, ckpt_json).unwrap();
+    registry.publish_file(&src, None, None).unwrap();
+}
+
+/// A v2 checkpoint that is byte-different from v1 (new digest, so the
+/// publish bumps the version and hot-swaps) but numerically identical —
+/// a canary that cannot diverge.
+fn clean_v2_json() -> String {
+    format!("{}\n \n", kan_variant_json("a", 0))
+}
+
+fn status_of(client: &mut KanClient, name: &str) -> Value {
+    client
+        .rollout_status(Some(name))
+        .unwrap()
+        .field("rollouts")
+        .unwrap()
+        .field(name)
+        .unwrap()
+        .clone()
+}
+
+fn phase_of(status: &Value) -> String {
+    status.get("phase").and_then(|v| v.as_str()).unwrap_or("?").to_string()
+}
+
+#[test]
+fn split_fraction_is_deterministic_over_live_tcp() {
+    // ramp [0.25] parked under an unreachable window: the split runs,
+    // the controller never advances
+    let (_dir, _cfg, registry) = rollout_registry("split_fraction", |cfg| {
+        cfg.rollout.ramp = vec![0.25];
+        cfg.rollout.window_ms = 3_600_000;
+        cfg.rollout.min_samples = usize::MAX;
+    });
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    // load v1 live, then hot-swap v2 in (v1 moves to the standby shelf)
+    let inf = client.infer_model(Some("a"), &[0.5, 0.5]).unwrap();
+    assert_eq!(inf.model, "a@1");
+    publish_variant(&_dir, &registry, &clean_v2_json());
+
+    let body = client.rollout_start("a@2", "a@1").unwrap();
+    let status = body.field("rollouts").unwrap().field("a").unwrap();
+    assert_eq!(phase_of(status), "ramping");
+    assert_eq!(
+        status.get("fraction").and_then(|v| v.as_f64()).unwrap(),
+        0.25
+    );
+
+    // the counter-based splitter sends exactly floor(n*f) of the first
+    // n default-routed requests to the canary — no randomness
+    let (mut canary, mut baseline) = (0u32, 0u32);
+    for _ in 0..200 {
+        match client.infer_model(Some("a"), &[0.5, 0.5]).unwrap().model.as_str() {
+            "a@2" => canary += 1,
+            "a@1" => baseline += 1,
+            other => panic!("unexpected serving id {other}"),
+        }
+    }
+    assert_eq!((canary, baseline), (50, 150));
+
+    // an explicit version pin bypasses the splitter entirely
+    for _ in 0..10 {
+        assert_eq!(
+            client.infer_model(Some("a@2"), &[0.5, 0.5]).unwrap().model,
+            "a@2"
+        );
+    }
+
+    // a second start while one is running is a clean conflict error
+    let err = client.rollout_start("a@2", "a@1").unwrap_err().to_string();
+    assert!(err.contains("already in progress"), "{err}");
+
+    client.rollout_abort("a").unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn clean_canary_ramps_and_auto_promotes() {
+    let (_dir, _cfg, registry) = rollout_registry("auto_promote", |cfg| {
+        cfg.rollout.ramp = vec![0.5];
+        cfg.rollout.window_ms = 150;
+        cfg.rollout.min_samples = 10;
+        cfg.rollout.poll_ms = 10;
+        // generous latency gate: identical pipelines, but tiny windows
+        // under CI load can see scheduler spikes
+        cfg.rollout.max_latency_regression = 1000.0;
+    });
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    client.infer_model(Some("a"), &[0.5, 0.5]).unwrap();
+    publish_variant(&_dir, &registry, &clean_v2_json());
+    client.rollout_start("a@2", "a@1").unwrap();
+
+    // drive traffic until the controller walks ramping -> observing ->
+    // promoted; every request must succeed throughout
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let status = loop {
+        for _ in 0..30 {
+            client.infer_model(Some("a"), &[0.5, 0.5]).unwrap();
+        }
+        let status = status_of(&mut client, "a");
+        if phase_of(&status) == "promoted" {
+            break status;
+        }
+        assert_ne!(phase_of(&status), "rolled_back", "clean canary rolled back: {status}");
+        assert!(Instant::now() < deadline, "no promotion before deadline: {status}");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_eq!(status.get("phase_code").and_then(|v| v.as_i64()), Some(2));
+
+    // the decision history records the whole walk
+    let actions: Vec<String> = status
+        .get("decisions")
+        .and_then(|v| v.as_array())
+        .unwrap()
+        .iter()
+        .map(|d| d.get("action").and_then(|a| a.as_str()).unwrap().to_string())
+        .collect();
+    assert!(actions.contains(&"start".to_string()), "{actions:?}");
+    assert!(actions.contains(&"advance".to_string()), "{actions:?}");
+    assert_eq!(actions.last().map(String::as_str), Some("promote"));
+
+    // promoted: the candidate is the manifest default, no override left
+    for _ in 0..10 {
+        assert_eq!(
+            client.infer_model(Some("a"), &[0.5, 0.5]).unwrap().model,
+            "a@2"
+        );
+    }
+
+    // the rollout surfaces as Prometheus series on the same endpoint
+    let prom = client.metrics_prom().unwrap();
+    assert!(
+        prom.contains("kan_edge_rollout_phase_code{model=\"a\"} 2"),
+        "missing rollout series:\n{prom}"
+    );
+
+    // terminal cleanup released the rollout's pin and the standby shelf
+    let ro = registry.rollout_plane().get("a").unwrap();
+    assert!(ro.is_terminal());
+    client.rollout_clear("a").unwrap();
+    assert!(registry.rollout_plane().get("a").is_none());
+    server.shutdown();
+}
+
+#[test]
+fn divergent_canary_rolls_back_without_dropping_requests() {
+    let (_dir, _cfg, registry) = rollout_registry("auto_rollback", |cfg| {
+        cfg.rollout.ramp = vec![0.5];
+        cfg.rollout.window_ms = 120;
+        cfg.rollout.min_samples = 5;
+        cfg.rollout.poll_ms = 10;
+        cfg.rollout.max_flip_rate = 0.01;
+        cfg.rollout.max_latency_regression = 1000.0;
+    });
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    client.infer_model(Some("a"), &[0.5, 0.5]).unwrap();
+    // the perturbed canary: favors the other class, so every mirrored
+    // row argmax-flips against the baseline
+    publish_variant(&_dir, &registry, &kan_variant_json("a", 1));
+    client.rollout_start("a@2", "a@1").unwrap();
+
+    // drive continuously through the breach and the repoint: every
+    // single request must complete (zero dropped / failed)
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let status = loop {
+        for _ in 0..20 {
+            let inf = client.infer_model(Some("a"), &[0.5, 0.5]).unwrap();
+            assert_eq!(inf.logits.len(), 2);
+        }
+        let status = status_of(&mut client, "a");
+        if phase_of(&status) == "rolled_back" {
+            break status;
+        }
+        assert!(Instant::now() < deadline, "no rollback before deadline: {status}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(status.get("phase_code").and_then(|v| v.as_i64()), Some(3));
+
+    // the breach decision carries the gate and the observed value
+    let decisions = status.get("decisions").and_then(|v| v.as_array()).unwrap();
+    let last = decisions.last().unwrap();
+    assert_eq!(last.get("action").and_then(|a| a.as_str()), Some("rollback"));
+    let reason = last.get("reason").and_then(|r| r.as_str()).unwrap();
+    assert!(
+        reason.contains("max_flip_rate") && reason.contains("breached"),
+        "{reason}"
+    );
+
+    // all default traffic is repointed at the pinned baseline — both
+    // named and default-model routes
+    for _ in 0..10 {
+        assert_eq!(
+            client.infer_model(Some("a"), &[0.5, 0.5]).unwrap().model,
+            "a@1"
+        );
+        assert_eq!(client.infer(&[0.5, 0.5]).unwrap().model, "a@1");
+    }
+
+    // abort after the fact is a clean "already finished" conflict
+    let err = client.rollout_abort("a").unwrap_err().to_string();
+    assert!(err.contains("already finished"), "{err}");
+
+    // clearing the record returns default traffic to the manifest-
+    // current version (the operator's explicit decision)
+    client.rollout_clear("a").unwrap();
+    assert_eq!(
+        client.infer_model(Some("a"), &[0.5, 0.5]).unwrap().model,
+        "a@2"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn rollout_survives_hot_reload_poll() {
+    let (_dir, _cfg, registry) = rollout_registry("hot_reload", |cfg| {
+        cfg.rollout.ramp = vec![0.25];
+        cfg.rollout.window_ms = 3_600_000;
+        cfg.rollout.min_samples = usize::MAX;
+    });
+    let target: Arc<dyn Dispatch> = registry.clone();
+    let server = TcpServer::spawn("127.0.0.1:0", target).unwrap();
+    let mut client = KanClient::connect(server.addr).unwrap();
+
+    client.infer_model(Some("a"), &[0.5, 0.5]).unwrap();
+    publish_variant(&_dir, &registry, &clean_v2_json());
+    client.rollout_start("a@2", "a@1").unwrap();
+    for _ in 0..40 {
+        client.infer_model(Some("a"), &[0.5, 0.5]).unwrap();
+    }
+    let before = status_of(&mut client, "a");
+
+    // an unchanged manifest re-read must not disturb the live rollout
+    let swapped = registry.poll_reload().unwrap();
+    assert!(swapped.is_empty(), "{swapped:?}");
+    let after = status_of(&mut client, "a");
+    assert_eq!(phase_of(&after), "ramping");
+    assert_eq!(
+        before.get("fraction").and_then(|v| v.as_f64()),
+        after.get("fraction").and_then(|v| v.as_f64()),
+    );
+
+    // the splitter still applies after the poll: both versions serve
+    let (mut canary, mut baseline) = (0u32, 0u32);
+    for _ in 0..40 {
+        match client.infer_model(Some("a"), &[0.5, 0.5]).unwrap().model.as_str() {
+            "a@2" => canary += 1,
+            _ => baseline += 1,
+        }
+    }
+    assert!(canary > 0 && baseline > 0, "canary {canary}, baseline {baseline}");
+
+    client.rollout_abort("a").unwrap();
+    server.shutdown();
+}
